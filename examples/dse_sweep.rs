@@ -1,0 +1,74 @@
+//! Design-space exploration (paper §V-A, Figs. 6–8): ReRAM vs SRAM,
+//! mixed-precision sweeps on the ImageNet benchmarks, breakdowns and
+//! voltage scaling — the full DSE in one run.
+//!
+//! ```bash
+//! cargo run --release --example dse_sweep
+//! ```
+
+use bf_imna::arch::HwConfig;
+use bf_imna::model::zoo;
+use bf_imna::precision::PrecisionConfig;
+use bf_imna::sim::{breakdown, dse, simulate, SimParams};
+use bf_imna::util::table::{fmt_eng, fmt_ratio, Table};
+
+fn main() {
+    // ---- Fig. 6: technology ratios on VGG16. ---------------------------
+    let vgg = zoo::vgg16();
+    println!("Fig. 6 — ReRAM/SRAM ratios, end-to-end VGG16 inference (LR):\n");
+    let mut t = Table::new(vec!["precision", "energy ratio", "latency ratio", "area savings"]);
+    for row in dse::fig6_tech_ratios(&vgg) {
+        t.row(vec![
+            row.bits.to_string(),
+            fmt_ratio(row.energy_ratio),
+            fmt_ratio(row.latency_ratio),
+            fmt_ratio(row.area_savings),
+        ]);
+    }
+    print!("{}", t.render());
+    println!("(paper: energy ratio decreasing 80.9x -> 63.1x, latency ~flat, area 4.4x)\n");
+
+    // ---- Fig. 7: mixed-precision sweeps. --------------------------------
+    println!("Fig. 7 — mean metrics vs average precision (SRAM):\n");
+    for net in zoo::imagenet_benchmarks() {
+        for hw in [HwConfig::Lr, HwConfig::Ir] {
+            let series = dse::fig7_series(&net, hw, 7);
+            let mut t = Table::new(vec!["avg bits", "energy (J)", "latency (s)", "GOPS/W/mm2"]);
+            for p in &series {
+                t.row(vec![
+                    format!("{:.0}", p.avg_bits),
+                    fmt_eng(p.energy_j, 3),
+                    fmt_eng(p.latency_s, 3),
+                    fmt_eng(p.gops_per_w_mm2, 3),
+                ]);
+            }
+            println!("{} | {}:", net.name, hw.label());
+            print!("{}", t.render());
+            println!();
+        }
+    }
+
+    // ---- Fig. 8: breakdowns (INT8, LR, SRAM). ---------------------------
+    println!("Fig. 8 — energy & GEMM-latency breakdowns (INT8, LR, SRAM):\n");
+    for net in zoo::imagenet_benchmarks() {
+        let cfg = PrecisionConfig::fixed(8, net.weight_layers());
+        let r = simulate(&net, &cfg, &SimParams::lr_sram());
+        let e: Vec<String> = breakdown::energy_by_kind(&r)
+            .iter()
+            .map(|s| format!("{} {:.1}%", s.label, 100.0 * s.fraction))
+            .collect();
+        let l: Vec<String> = breakdown::gemm_latency_by_phase(&r)
+            .iter()
+            .map(|s| format!("{} {:.1}%", s.label, 100.0 * s.fraction))
+            .collect();
+        println!("{:9} energy: {}", r.net_name, e.join(", "));
+        println!("{:9} gemm latency: {}", "", l.join(", "));
+    }
+
+    // ---- Voltage scaling (§V-A). ----------------------------------------
+    println!("\nVoltage scaling (1.0 V -> 0.5 V write energy, §V-A):\n");
+    for net in zoo::imagenet_benchmarks() {
+        let saving = dse::voltage_scaling_saving(&net, 8);
+        println!("  {:9} energy saving: {:.3}% (paper: <= 0.06%)", net.name, 100.0 * saving);
+    }
+}

@@ -1,0 +1,186 @@
+//! End-to-end driver: the full three-layer stack on a real workload.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example e2e_serving
+//! ```
+//!
+//! The build-time Python side trained the serve CNN on the synthetic
+//! texture dataset and AOT-lowered one quantized forward graph per
+//! precision configuration (L2 model calling the L1 Pallas bit-plane GEMM)
+//! to HLO text. This driver is pure rust on the request path:
+//!
+//! 1. start the bit-fluid coordinator (loads + compiles every artifact on
+//!    the PJRT CPU client),
+//! 2. replay the held-out eval set as serving requests under the three
+//!    latency budgets,
+//! 3. report per-budget accuracy (real labels!), p50/p99 latency,
+//!    throughput, which precision configs served each budget, and the
+//!    BF-IMNA hardware cost the simulator attributes to each config —
+//!    the live version of Table VII's accuracy-vs-EDP trade-off.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::time::Instant;
+
+use bf_imna::coordinator::{Budget, Coordinator, CoordinatorConfig};
+use bf_imna::model::zoo;
+use bf_imna::precision::PrecisionConfig;
+use bf_imna::runtime::Manifest;
+use bf_imna::sim::{simulate, SimParams};
+use bf_imna::util::stats;
+use bf_imna::util::table::{fmt_eng, Table};
+
+fn read_eval_set(dir: &Path, elems: usize) -> (Vec<Vec<f32>>, Vec<u8>) {
+    let raw = std::fs::read(dir.join("eval_inputs.f32")).expect("eval_inputs.f32 (make artifacts)");
+    let labels = std::fs::read(dir.join("eval_labels.u8")).expect("eval_labels.u8");
+    let floats: Vec<f32> = raw
+        .chunks_exact(4)
+        .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+        .collect();
+    let inputs: Vec<Vec<f32>> = floats.chunks_exact(elems).map(|c| c.to_vec()).collect();
+    assert_eq!(inputs.len(), labels.len(), "eval set size mismatch");
+    (inputs, labels)
+}
+
+fn main() {
+    let dir = Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("artifacts missing — run `make artifacts` first");
+        std::process::exit(1);
+    }
+
+    // ---- Simulator-side cost estimates per config (the L3 tie-in). ----
+    let manifest = Manifest::load(dir).expect("manifest");
+    let serve_net = zoo::serve_cnn();
+    let mut sim_cost: BTreeMap<String, (f64, f64)> = BTreeMap::new(); // (energy J, EDP J.s)
+    for (name, info) in &manifest.configs {
+        let bits: Vec<u32> = info.per_layer.iter().map(|&(w, _)| w).collect();
+        let cfg = PrecisionConfig::from_bits(name, &bits);
+        let r = simulate(&serve_net, &cfg, &SimParams::lr_sram());
+        sim_cost.insert(name.clone(), (r.energy_j(), r.edp_js()));
+    }
+
+    // ---- Start the coordinator (compiles the quantized artifacts). ----
+    // Budgets pin configs the way HAWQ-V3 names one configuration per
+    // latency budget (Table VII); on real BF-IMNA hardware the
+    // measured-latency controller would pick the same ladder because fewer
+    // bits are genuinely faster there (on this CPU testbed, interpret-mode
+    // bit-plane kernels invert that ordering, hence the pinning).
+    println!("compiling artifacts on the PJRT CPU client ...");
+    let t0 = Instant::now();
+    let coord = Coordinator::start(
+        dir,
+        CoordinatorConfig {
+            configs: vec![
+                "int8".into(),
+                "mixed_high".into(),
+                "mixed_medium".into(),
+                "mixed_low".into(),
+                "int4".into(),
+            ],
+            pinned: [
+                (Budget::Low, "mixed_low".to_string()),
+                (Budget::Medium, "mixed_medium".to_string()),
+                (Budget::High, "int8".to_string()),
+            ]
+            .into(),
+            ..CoordinatorConfig::default()
+        },
+    )
+    .expect("coordinator");
+    println!(
+        "ready in {:.1}s: configs [{}]\n",
+        t0.elapsed().as_secs_f64(),
+        coord.configs().join(", ")
+    );
+
+    let (inputs, labels) = read_eval_set(dir, coord.sample_elems());
+    let classes = coord.num_classes();
+    println!("replaying {} held-out samples per budget ...\n", inputs.len());
+
+    let mut rows = Vec::new();
+    for budget in [Budget::Low, Budget::Medium, Budget::High] {
+        let t0 = Instant::now();
+        let pendings: Vec<_> = inputs
+            .iter()
+            .map(|x| coord.submit(x.clone(), budget).expect("submit"))
+            .collect();
+        let mut correct = 0usize;
+        let mut lat = Vec::new();
+        let mut served_by: BTreeMap<String, u64> = BTreeMap::new();
+        for (p, &label) in pendings.into_iter().zip(&labels) {
+            let r = p.wait().expect("response");
+            let pred = r
+                .logits
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, _)| i)
+                .unwrap();
+            if pred == label as usize {
+                correct += 1;
+            }
+            lat.push(r.latency_s);
+            *served_by.entry(r.config).or_default() += 1;
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let dominant = served_by
+            .iter()
+            .max_by_key(|(_, &c)| c)
+            .map(|(k, _)| k.clone())
+            .unwrap_or_default();
+        let (sim_e, sim_edp) = sim_cost.get(&dominant).copied().unwrap_or((0.0, 0.0));
+        rows.push((
+            budget,
+            correct as f64 / inputs.len() as f64,
+            stats::percentile(&lat, 0.5),
+            stats::percentile(&lat, 0.99),
+            inputs.len() as f64 / wall,
+            served_by,
+            dominant,
+            sim_e,
+            sim_edp,
+        ));
+    }
+
+    let mut t = Table::new(vec![
+        "budget",
+        "accuracy",
+        "p50 (s)",
+        "p99 (s)",
+        "req/s",
+        "served by",
+        "sim energy (J)",
+        "sim EDP (J.s)",
+    ]);
+    for (budget, acc, p50, p99, rps, served_by, _dom, sim_e, sim_edp) in &rows {
+        let served: Vec<String> =
+            served_by.iter().map(|(k, v)| format!("{k}:{v}")).collect();
+        t.row(vec![
+            budget.label().to_string(),
+            format!("{:.3}", acc),
+            fmt_eng(*p50, 3),
+            fmt_eng(*p99, 3),
+            format!("{:.1}", rps),
+            served.join(" "),
+            fmt_eng(*sim_e, 3),
+            fmt_eng(*sim_edp, 3),
+        ]);
+    }
+    print!("{}", t.render());
+    assert_eq!(classes, 10);
+
+    let m = coord.metrics();
+    println!(
+        "\ntotals: {} requests, {} batches, occupancy {:.0}%, 0 python calls on the request path",
+        m.completed,
+        m.batches,
+        100.0 * m.batch_occupancy()
+    );
+    println!(
+        "\nThe tight budget rides low-precision artifacts (lower simulated BF-IMNA\n\
+         energy/EDP, slightly lower accuracy); the loose budget keeps INT8/float\n\
+         quality — Table VII's trade-off, live, with precision switched per batch\n\
+         at zero reconfiguration cost."
+    );
+}

@@ -1,0 +1,178 @@
+"""AOT export: train the serve CNN once, lower every precision
+configuration to HLO text, and write the artifact manifest.
+
+This is the *only* Python entry point in the deployment story. It runs at
+build time (``make artifacts``) and produces:
+
+* ``artifacts/serve_cnn_<config>_b<batch>.hlo.txt`` — one AOT-lowered
+  quantized forward graph per (precision config, batch size). Weights are
+  baked in as constants; the graph's single parameter is the input image
+  batch ``f32[batch, 32, 32, 3]`` and its output is the logits tuple
+  ``(f32[batch, 10],)``.
+* ``artifacts/weights.npz`` — the trained float parameters (reproducible
+  re-export without retraining).
+* ``artifacts/manifest.json`` — configs, average bitwidths, held-out
+  accuracies, batch sizes, loss curve, and artifact file names. The rust
+  coordinator reads this to discover what it can serve.
+
+Interchange format is HLO **text**, not serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the ``xla`` crate's backend) rejects; the text parser reassigns ids
+and round-trips cleanly. See /opt/xla-example/README.md.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+#: Batch sizes compiled ahead of time. The coordinator's dynamic batcher
+#: packs requests into the largest compiled batch (padding the remainder).
+BATCH_SIZES = (1, 4, 8)
+
+#: Training seed — fixed for reproducible artifacts.
+TRAIN_SEED = 0
+EVAL_SEED = 99
+
+
+def to_hlo_text(lowered) -> str:
+    """Lowered jax computation -> XLA HLO text (the rust-side format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def export_config(params, cfg_name: str, batch: int, out_dir: Path) -> dict:
+    """Lower one (config, batch) serving graph to HLO text; returns its
+    manifest entry."""
+    spec = jax.ShapeDtypeStruct((batch, *model.INPUT_SHAPE), jnp.float32)
+    if cfg_name == "float":
+        fn = lambda x: (model.float_forward(params, x),)  # noqa: E731
+        bits = 32.0
+    else:
+        cfg = model.PRECISION_CONFIGS[cfg_name]
+        fn = lambda x: (model.quant_forward(params, x, cfg, use_kernel=True),)  # noqa: E731
+        bits = model.avg_bits(cfg)
+    lowered = jax.jit(fn).lower(spec)
+    text = to_hlo_text(lowered)
+    name = f"serve_cnn_{cfg_name}_b{batch}.hlo.txt"
+    (out_dir / name).write_text(text)
+    return {
+        "config": cfg_name,
+        "batch": batch,
+        "file": name,
+        "avg_bits": bits,
+        "hlo_bytes": len(text),
+    }
+
+
+def flatten_params(params) -> dict[str, np.ndarray]:
+    """Nested params -> flat dict for npz storage."""
+    return {
+        f"{layer}/{leaf}": np.asarray(v)
+        for layer, sub in params.items()
+        for leaf, v in sub.items()
+    }
+
+
+def unflatten_params(flat: dict[str, np.ndarray]):
+    """Inverse of :func:`flatten_params`."""
+    params: dict[str, dict[str, jnp.ndarray]] = {}
+    for key, v in flat.items():
+        layer, leaf = key.split("/")
+        params.setdefault(layer, {})[leaf] = jnp.asarray(v)
+    return params
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument("--steps", type=int, default=400, help="training steps")
+    ap.add_argument("--batch", type=int, default=32, help="training batch size")
+    ap.add_argument(
+        "--retrain", action="store_true", help="retrain even if weights.npz exists"
+    )
+    args = ap.parse_args()
+    out_dir = Path(args.out)
+    # `--out path/model.hlo.txt` style (Makefile sentinel) -> parent dir.
+    if out_dir.suffix:
+        out_dir = out_dir.parent
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    weights_path = out_dir / "weights.npz"
+    curve: list[tuple[int, float]] = []
+    if weights_path.exists() and not args.retrain:
+        print(f"loading cached weights from {weights_path}")
+        params = unflatten_params(dict(np.load(weights_path)))
+    else:
+        print(f"training serve_cnn for {args.steps} steps (batch {args.batch}) ...")
+        t0 = time.time()
+        params, curve = model.train(
+            jax.random.PRNGKey(TRAIN_SEED), steps=args.steps, batch=args.batch
+        )
+        print(f"trained in {time.time() - t0:.1f}s")
+        np.savez(weights_path, **flatten_params(params))
+
+    # Held-out eval set exported raw for the rust serving driver: inputs as
+    # little-endian f32, labels as u8 (no npz parser needed on the rust side).
+    eval_n = 128
+    ex, ey = model.make_dataset(jax.random.PRNGKey(EVAL_SEED + 1), eval_n)
+    np.asarray(ex, dtype="<f4").tofile(out_dir / "eval_inputs.f32")
+    np.asarray(ey, dtype=np.uint8).tofile(out_dir / "eval_labels.u8")
+    # Cross-language numerics check: expected float logits of the first 8
+    # eval samples; rust/tests/runtime_e2e.rs compares PJRT output to these.
+    exp = model.float_forward(params, ex[:8])
+    np.asarray(exp, dtype="<f4").tofile(out_dir / "eval_logits_float_b8.f32")
+
+    eval_key = jax.random.PRNGKey(EVAL_SEED)
+    accuracies = {"float": model.eval_accuracy(params, None, eval_key)}
+    for cfg_name in model.PRECISION_CONFIGS:
+        accuracies[cfg_name] = model.eval_accuracy(params, cfg_name, eval_key)
+        print(f"  accuracy[{cfg_name}] = {accuracies[cfg_name]:.4f}")
+    print(f"  accuracy[float] = {accuracies['float']:.4f}")
+
+    entries = []
+    for cfg_name in ["float", *model.PRECISION_CONFIGS]:
+        for batch in BATCH_SIZES:
+            t0 = time.time()
+            entry = export_config(params, cfg_name, batch, out_dir)
+            entry["accuracy"] = accuracies[cfg_name]
+            entries.append(entry)
+            print(
+                f"  exported {entry['file']}  ({entry['hlo_bytes'] / 1e3:.0f} kB, "
+                f"{time.time() - t0:.1f}s)"
+            )
+
+    manifest = {
+        "model": "serve_cnn",
+        "input_shape": list(model.INPUT_SHAPE),
+        "num_classes": model.NUM_CLASSES,
+        "param_count": model.param_count(params),
+        "batch_sizes": list(BATCH_SIZES),
+        "train_steps": args.steps,
+        "loss_curve": curve,
+        "configs": {
+            name: {"per_layer": [list(p) for p in cfg], "avg_bits": model.avg_bits(cfg)}
+            for name, cfg in model.PRECISION_CONFIGS.items()
+        },
+        "accuracies": accuracies,
+        "eval_set": {"n": eval_n, "inputs": "eval_inputs.f32", "labels": "eval_labels.u8"},
+        "artifacts": entries,
+    }
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=2))
+    print(f"wrote {out_dir / 'manifest.json'} with {len(entries)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

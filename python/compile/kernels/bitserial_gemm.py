@@ -1,0 +1,159 @@
+"""Layer-1 Pallas kernel: bit-plane (bit-serial) integer GEMM.
+
+BF-IMNA's compute hot-spot is the bit-serial multiply-accumulate of the
+2D Associative Processor: a ``b_w x b_a``-bit multiply is ``b_w * b_a``
+compare/write LUT pass groups applied to *all* CAM rows at once
+(word-parallel). A TPU has no CAM, but the insight — **precision is a loop
+bound over bit planes, with full parallelism across words** — maps onto
+the MXU directly:
+
+====================================  =====================================
+BF-IMNA (paper)                       this kernel (TPU-shaped Pallas)
+====================================  =====================================
+word-parallel CAM rows                the (M, N) tile dims of an MXU matmul
+one bit-column LUT pass group         one bit-plane matmul (0/1 matrices)
+``b_a x b_w`` compare/write groups    ``b_a x b_w`` plane matmuls, shifted
+MSB deactivation at low precision     fewer planes in the static unroll
+MAP -> CAP mesh streaming             HBM -> VMEM streaming via BlockSpec
+CAP capacity (4800 x 16 cells)        VMEM tile budget per grid step
+====================================  =====================================
+
+The kernel computes ``out[m, n] = sum_k a[m, k] * w[k, n]`` for signed
+integers carried in int32, where ``a`` holds ``a_bits``-bit values and
+``w`` holds ``w_bits``-bit values (two's complement). Each operand is
+decomposed into bit planes; plane ``i`` of ``a`` against plane ``j`` of
+``w`` contributes ``s_i * s_j * 2^(i+j) * (A_i @ W_j)`` where the sign
+``s`` is negative for the MSB plane (two's-complement weight). Plane
+matmuls run in float32 — planes are 0/1 so f32 accumulation is exact far
+beyond any precision this kernel accepts (< 2^24).
+
+Performance notes (structure, not interpret-mode wallclock):
+
+* **VMEM footprint** per grid step = ``TILE_M*K + K*TILE_N + TILE_M*TILE_N``
+  int32 words; with the default 128x128 tiles and K <= 2304 that is
+  ~2.4 MB, inside a TPU core's ~16 MB VMEM with double-buffering room.
+* **MXU utilization**: each of the ``a_bits*w_bits`` plane matmuls is a
+  dense ``TILE_M x K x TILE_N`` contraction — MXU-shaped; the bit-serial
+  loop multiplies arithmetic intensity by ``a_bits*w_bits`` while traffic
+  stays one plane-extract per operand load, so the kernel is compute-bound
+  for b >= 2 (the paper's regime: APs win at low precision).
+* ``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+  custom-calls; real-TPU numbers are estimated analytically in DESIGN.md.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default MXU-aligned tile sizes (8x128 lanes; 128x128 keeps the systolic
+# array full while fitting VMEM, see module docstring).
+TILE_M = 128
+TILE_N = 128
+
+# Largest operand precision the kernel accepts (Table V: "Supported
+# Bitwidth: up to 8" for the LR chip; 16 covers the Table VIII peak rows).
+MAX_BITS = 16
+
+
+def _plane_signs(bits: int) -> list[int]:
+    """Two's-complement plane weights: +1 for all planes except the MSB."""
+    return [1] * (bits - 1) + [-1] if bits > 1 else [1]
+
+
+def _bitplane_kernel(a_ref, w_ref, o_ref, *, a_bits: int, w_bits: int):
+    """One (TILE_M, TILE_N) output tile: unrolled bit-plane accumulation.
+
+    The ``a_bits * w_bits`` plane matmuls mirror the AP's compare/write
+    pass groups; the shift-accumulate mirrors the carry columns.
+    """
+    a = a_ref[...]  # (tile_m, K) int32
+    w = w_ref[...]  # (K, tile_n) int32
+    # Bias to unsigned so plane extraction is a plain shift-and-mask, then
+    # fold the bias back: a = ua - 2^(b-1)  with ua = a + 2^(b-1) >= 0.
+    # Simpler and branch-free: extract planes from the two's-complement
+    # pattern directly (mask the value to b bits first).
+    a_u = a & ((1 << a_bits) - 1)
+    w_u = w & ((1 << w_bits) - 1)
+    acc = jnp.zeros(o_ref.shape, jnp.float32)
+    sa = _plane_signs(a_bits)
+    sw = _plane_signs(w_bits)
+    for i in range(a_bits):
+        a_plane = ((a_u >> i) & 1).astype(jnp.float32)
+        for j in range(w_bits):
+            w_plane = ((w_u >> j) & 1).astype(jnp.float32)
+            plane = jax.lax.dot_general(
+                a_plane,
+                w_plane,
+                (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            )
+            acc = acc + float(sa[i] * sw[j] * (1 << (i + j))) * plane
+    o_ref[...] = acc.astype(jnp.int32)
+
+
+def _pad_to(x: jnp.ndarray, m: int, axis: int) -> jnp.ndarray:
+    r = x.shape[axis] % m
+    if r == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, m - r)
+    return jnp.pad(x, pad)
+
+
+@functools.partial(jax.jit, static_argnames=("a_bits", "w_bits", "tile_m", "tile_n"))
+def bitplane_gemm(
+    a: jnp.ndarray,
+    w: jnp.ndarray,
+    *,
+    a_bits: int,
+    w_bits: int,
+    tile_m: int = TILE_M,
+    tile_n: int = TILE_N,
+) -> jnp.ndarray:
+    """Bit-serial integer GEMM ``a @ w`` via the Pallas bit-plane kernel.
+
+    Args:
+      a: ``(M, K)`` int32, values in ``[-2^(a_bits-1), 2^(a_bits-1))``.
+      w: ``(K, N)`` int32, values in ``[-2^(w_bits-1), 2^(w_bits-1))``.
+      a_bits / w_bits: operand precisions (the bit-fluid loop bounds).
+      tile_m / tile_n: output tile shape (BlockSpec grid).
+
+    Returns:
+      ``(M, N)`` int32 exact product.
+    """
+    if not (1 <= a_bits <= MAX_BITS and 1 <= w_bits <= MAX_BITS):
+        raise ValueError(f"bits out of range: a_bits={a_bits} w_bits={w_bits}")
+    if a.ndim != 2 or w.ndim != 2 or a.shape[1] != w.shape[0]:
+        raise ValueError(f"shape mismatch: {a.shape} @ {w.shape}")
+    m, k = a.shape
+    n = w.shape[1]
+    a = _pad_to(a.astype(jnp.int32), tile_m, 0)
+    w = _pad_to(w.astype(jnp.int32), tile_n, 1)
+    mp, np_ = a.shape[0], w.shape[1]
+    grid = (mp // tile_m, np_ // tile_n)
+    out = pl.pallas_call(
+        functools.partial(_bitplane_kernel, a_bits=a_bits, w_bits=w_bits),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_m, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, tile_n), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((tile_m, tile_n), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.int32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls.
+    )(a, w)
+    return out[:m, :n]
+
+
+def vmem_bytes(tile_m: int, k: int, tile_n: int) -> int:
+    """Static VMEM footprint estimate of one grid step (int32 words)."""
+    return 4 * (tile_m * k + k * tile_n + tile_m * tile_n)
+
+
+def plane_matmuls(a_bits: int, w_bits: int) -> int:
+    """Number of MXU plane matmuls per tile — the bit-serial cost knob."""
+    return a_bits * w_bits

@@ -1,0 +1,67 @@
+"""Pure-jnp oracles for the Layer-1 kernel and the quantization helpers.
+
+Everything here is deliberately naive — it is the correctness reference
+the Pallas kernel and the Layer-2 model are tested against, never the
+deployed path.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def gemm_ref(a: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Exact integer GEMM reference: plain int32 matmul."""
+    return (a.astype(jnp.int32) @ w.astype(jnp.int32)).astype(jnp.int32)
+
+
+def qrange(bits: int) -> tuple[int, int]:
+    """Symmetric signed integer range of a ``bits``-bit operand.
+
+    The negative end is clipped to ``-(2^(b-1) - 1)`` (symmetric
+    quantization, HAWQ-V3 convention) so scales invert cleanly.
+    """
+    hi = (1 << (bits - 1)) - 1
+    return -hi, hi
+
+
+def quantize(x: jnp.ndarray, bits: int, scale: jnp.ndarray | float) -> jnp.ndarray:
+    """Uniform symmetric quantization to ``bits``-bit signed ints."""
+    lo, hi = qrange(bits)
+    return jnp.clip(jnp.round(x / scale), lo, hi).astype(jnp.int32)
+
+
+def dequantize(q: jnp.ndarray, scale: jnp.ndarray | float) -> jnp.ndarray:
+    """Inverse of :func:`quantize`."""
+    return q.astype(jnp.float32) * scale
+
+
+def scale_for(x: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Max-abs calibration scale so that ``x`` spans the ``bits`` range."""
+    _, hi = qrange(bits)
+    return jnp.maximum(jnp.max(jnp.abs(x)), 1e-8) / hi
+
+
+def fake_quant(x: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Quantize-dequantize round trip (the quantization *error* injector)."""
+    s = scale_for(x, bits)
+    return dequantize(quantize(x, bits, s), s)
+
+
+def bitplane_gemm_ref(
+    a: jnp.ndarray, w: jnp.ndarray, a_bits: int, w_bits: int
+) -> jnp.ndarray:
+    """Bit-plane accumulation spelled out in pure jnp (mirrors the AP LUT
+    schedule one plane pair at a time) — a second, structurally different
+    oracle for the Pallas kernel."""
+    a = a.astype(jnp.int32) & ((1 << a_bits) - 1)
+    w = w.astype(jnp.int32) & ((1 << w_bits) - 1)
+    out = jnp.zeros((a.shape[0], w.shape[1]), jnp.int32)
+    for i in range(a_bits):
+        sa = -1 if (a_bits > 1 and i == a_bits - 1) else 1
+        ap = ((a >> i) & 1).astype(jnp.int32)
+        for j in range(w_bits):
+            sw = -1 if (w_bits > 1 and j == w_bits - 1) else 1
+            wp = ((w >> j) & 1).astype(jnp.int32)
+            out = out + sa * sw * (1 << (i + j)) * (ap @ wp)
+    return out

@@ -1,0 +1,330 @@
+"""Layer-2 JAX model: the quantized CNN served by the BF-IMNA coordinator.
+
+This is the build-time half of the serving demo. It defines ``SERVE_CNN``
+— the small CNN that `rust/src/model/zoo.rs::serve_cnn` mirrors layer for
+layer — plus:
+
+* a float forward pass (training path),
+* a **bit-fluid quantized forward pass** with per-layer weight/activation
+  bitwidths, where every convolution / fully-connected layer lowers to the
+  Layer-1 Pallas bit-plane GEMM (`kernels.bitserial_gemm`) through im2col —
+  exactly how BF-IMNA maps convolutions onto CAPs (§II-C),
+* a tiny synthetic 10-class image dataset and a training loop, so the
+  exported artifacts carry *real trained weights* and the accuracy-vs-
+  precision trade-off of Table VII is measurable end to end.
+
+Python never runs at serve time: `aot.py` lowers `quant_forward` once per
+precision configuration to HLO text; the rust coordinator loads and
+executes the artifacts via PJRT.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels.bitserial_gemm import bitplane_gemm
+
+# ---------------------------------------------------------------------------
+# Architecture (must mirror rust/src/model/zoo.rs::serve_cnn).
+# ---------------------------------------------------------------------------
+
+INPUT_SHAPE = (32, 32, 3)
+NUM_CLASSES = 10
+
+# (name, kind, c_in, c_out) — conv kernels are 3x3, stride 1, pad 1.
+SERVE_CNN = (
+    ("conv1", "conv", 3, 16),
+    ("conv2", "conv", 16, 16),
+    ("pool1", "maxpool", 2, None),
+    ("conv3", "conv", 16, 32),
+    ("conv4", "conv", 32, 32),
+    ("pool2", "maxpool", 2, None),
+    ("conv5", "conv", 32, 64),
+    ("gap", "avgpool", None, None),
+    ("fc", "fc", 64, NUM_CLASSES),
+)
+
+#: Names of the weight-carrying layers, in order (6 of them). A precision
+#: configuration assigns one (w_bits, a_bits) pair per entry.
+WEIGHT_LAYERS = tuple(n for n, k, *_ in SERVE_CNN if k in ("conv", "fc"))
+
+#: The precision configurations the coordinator can switch between at run
+#: time (serve-CNN analogue of Table VII's rows: fixed INT8 / INT4 plus
+#: three HAWQ-style mixed configs under loosening latency budgets).
+PRECISION_CONFIGS: dict[str, tuple[tuple[int, int], ...]] = {
+    "int8": tuple((8, 8) for _ in WEIGHT_LAYERS),
+    "mixed_high": ((8, 8), (8, 8), (8, 8), (4, 4), (8, 8), (8, 8)),
+    "mixed_medium": ((8, 8), (8, 8), (4, 4), (4, 4), (8, 8), (8, 8)),
+    "mixed_low": ((8, 8), (4, 4), (4, 4), (4, 4), (4, 4), (8, 8)),
+    "int4": tuple((4, 4) for _ in WEIGHT_LAYERS),
+}
+
+
+def avg_bits(cfg: tuple[tuple[int, int], ...]) -> float:
+    """Average bitwidth of a configuration (Table VII convention)."""
+    return sum((w + a) / 2 for w, a in cfg) / len(cfg)
+
+
+# ---------------------------------------------------------------------------
+# Parameters.
+# ---------------------------------------------------------------------------
+
+
+def init_params(key: jax.Array) -> dict[str, Any]:
+    """He-initialized parameters for SERVE_CNN."""
+    params: dict[str, Any] = {}
+    for name, kind, c_in, c_out in SERVE_CNN:
+        if kind == "conv":
+            key, sub = jax.random.split(key)
+            fan_in = 9 * c_in
+            params[name] = {
+                "w": jax.random.normal(sub, (3, 3, c_in, c_out), jnp.float32)
+                * jnp.sqrt(2.0 / fan_in),
+                "b": jnp.zeros((c_out,), jnp.float32),
+            }
+        elif kind == "fc":
+            key, sub = jax.random.split(key)
+            params[name] = {
+                "w": jax.random.normal(sub, (c_in, c_out), jnp.float32)
+                * jnp.sqrt(2.0 / c_in),
+                "b": jnp.zeros((c_out,), jnp.float32),
+            }
+    return params
+
+
+def param_count(params: dict[str, Any]) -> int:
+    """Total trainable parameter count."""
+    return sum(int(v.size) for layer in params.values() for v in layer.values())
+
+
+# ---------------------------------------------------------------------------
+# im2col convolution (§II-C) — shared by the float and quantized paths.
+# ---------------------------------------------------------------------------
+
+
+def im2col(x: jnp.ndarray, k: int = 3, pad: int = 1) -> jnp.ndarray:
+    """Unroll 3x3 stride-1 patches: (B, H, W, C) -> (B*H*W, k*k*C).
+
+    Column order is (di, dj, c) — the same unrolling the rust mapper and
+    Fig. 2 use, so the kernel matrix reshape below matches.
+    """
+    b, h, w, c = x.shape
+    xp = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+    cols = [xp[:, di : di + h, dj : dj + w, :] for di in range(k) for dj in range(k)]
+    patches = jnp.concatenate(cols, axis=-1)  # (B, H, W, k*k*C)
+    return patches.reshape(b * h * w, k * k * c)
+
+
+def _conv_via_gemm(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray, gemm) -> jnp.ndarray:
+    """3x3 same-conv through im2col + a caller-supplied GEMM."""
+    bsz, h, wdt, _ = x.shape
+    c_out = w.shape[-1]
+    # (3,3,C_in,C_out) -> (9*C_in, C_out), matching im2col's (di,dj,c) order.
+    wm = w.reshape(-1, c_out)
+    out = gemm(im2col(x), wm)
+    return out.reshape(bsz, h, wdt, c_out) + b
+
+
+def maxpool2(x: jnp.ndarray) -> jnp.ndarray:
+    """2x2 stride-2 max pooling."""
+    b, h, w, c = x.shape
+    x = x.reshape(b, h // 2, 2, w // 2, 2, c)
+    return x.max(axis=(2, 4))
+
+
+def global_avgpool(x: jnp.ndarray) -> jnp.ndarray:
+    """Global average pooling to (B, C)."""
+    return x.mean(axis=(1, 2))
+
+
+# ---------------------------------------------------------------------------
+# Float forward (training path).
+# ---------------------------------------------------------------------------
+
+
+def float_forward(params: dict[str, Any], x: jnp.ndarray) -> jnp.ndarray:
+    """Float32 forward pass, logits of shape (B, NUM_CLASSES)."""
+    gemm = lambda a, w: a @ w  # noqa: E731
+    for name, kind, *_ in SERVE_CNN:
+        if kind == "conv":
+            p = params[name]
+            x = jax.nn.relu(_conv_via_gemm(x, p["w"], p["b"], gemm))
+        elif kind == "maxpool":
+            x = maxpool2(x)
+        elif kind == "avgpool":
+            x = global_avgpool(x)
+        elif kind == "fc":
+            p = params[name]
+            x = x @ p["w"] + p["b"]
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Quantized forward (the exported serving graph).
+# ---------------------------------------------------------------------------
+
+
+def _quant_gemm(
+    a_f: jnp.ndarray, w_f: jnp.ndarray, a_bits: int, w_bits: int, use_kernel: bool
+) -> jnp.ndarray:
+    """Quantize both operands, multiply in integers (Pallas bit-plane GEMM
+    or the jnp oracle), dequantize."""
+    s_a = ref.scale_for(a_f, a_bits)
+    s_w = ref.scale_for(w_f, w_bits)
+    qa = ref.quantize(a_f, a_bits, s_a)
+    qw = ref.quantize(w_f, w_bits, s_w)
+    if use_kernel:
+        qo = bitplane_gemm(qa, qw, a_bits=a_bits, w_bits=w_bits)
+    else:
+        qo = ref.gemm_ref(qa, qw)
+    return qo.astype(jnp.float32) * (s_a * s_w)
+
+
+def quant_forward(
+    params: dict[str, Any],
+    x: jnp.ndarray,
+    cfg: tuple[tuple[int, int], ...],
+    *,
+    use_kernel: bool = True,
+) -> jnp.ndarray:
+    """Bit-fluid quantized forward pass.
+
+    Args:
+      params: trained float parameters.
+      x: (B, 32, 32, 3) float32 inputs.
+      cfg: one (w_bits, a_bits) pair per weight layer (see
+        ``PRECISION_CONFIGS``). Lower precision simply shortens the Pallas
+        kernel's bit-plane loops — the software analogue of BF-IMNA
+        deactivating MSB columns, with zero reconfiguration.
+      use_kernel: route GEMMs through the Pallas kernel (True, the exported
+        path) or the pure-jnp oracle (False, the test oracle).
+    """
+    if len(cfg) != len(WEIGHT_LAYERS):
+        raise ValueError(f"cfg has {len(cfg)} entries, need {len(WEIGHT_LAYERS)}")
+    slot = 0
+    for name, kind, *_ in SERVE_CNN:
+        if kind == "conv":
+            w_bits, a_bits = cfg[slot]
+            slot += 1
+            p = params[name]
+            gemm = functools.partial(
+                _quant_gemm, a_bits=a_bits, w_bits=w_bits, use_kernel=use_kernel
+            )
+            x = jax.nn.relu(_conv_via_gemm(x, p["w"], p["b"], gemm))
+        elif kind == "maxpool":
+            x = maxpool2(x)
+        elif kind == "avgpool":
+            x = global_avgpool(x)
+        elif kind == "fc":
+            w_bits, a_bits = cfg[slot]
+            slot += 1
+            p = params[name]
+            x = _quant_gemm(x, p["w"], a_bits, w_bits, use_kernel) + p["b"]
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Synthetic 10-class dataset + training loop.
+# ---------------------------------------------------------------------------
+
+
+def _class_gratings() -> jnp.ndarray:
+    """One oriented sinusoidal grating per class — texture classes a CNN
+    with global average pooling learns from local filters."""
+    h, w, c = INPUT_SHAPE
+    ii, jj = jnp.meshgrid(jnp.arange(h), jnp.arange(w), indexing="ij")
+    tpl = []
+    for k in range(NUM_CLASSES):
+        theta = jnp.pi * k / NUM_CLASSES
+        freq = 2.0 + 0.7 * k
+        phase = 2.0 * jnp.pi * freq * (jnp.cos(theta) * ii + jnp.sin(theta) * jj) / h
+        img = jnp.stack([jnp.sin(phase + ch) for ch in range(c)], axis=-1)
+        tpl.append(img)
+    return jnp.stack(tpl).astype(jnp.float32)  # (classes, H, W, C)
+
+
+def make_dataset(key: jax.Array, n: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Synthetic texture classification set: each class is an oriented
+    grating; a sample is its class grating under a random gain, a random
+    spatial shift (gratings are shift-covariant, so class identity
+    survives) plus Gaussian noise. Non-trivial but learnable in a few
+    hundred steps."""
+    k_lbl, k_gain, k_shift, k_noise = jax.random.split(key, 4)
+    templates = _class_gratings()
+    labels = jax.random.randint(k_lbl, (n,), 0, NUM_CLASSES)
+    gains = 0.7 + 0.6 * jax.random.uniform(k_gain, (n, 1, 1, 1))
+    shifts = jax.random.randint(k_shift, (n, 2), 0, INPUT_SHAPE[0])
+    noise = jax.random.normal(k_noise, (n, *INPUT_SHAPE), jnp.float32)
+    base = templates[labels]
+    rolled = jax.vmap(lambda img, s: jnp.roll(img, (s[0], s[1]), axis=(0, 1)))(
+        base, shifts
+    )
+    x = gains * rolled + 0.7 * noise
+    return x, labels
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Mean softmax cross-entropy."""
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+
+
+def accuracy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Top-1 accuracy."""
+    return jnp.mean((jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32))
+
+
+@functools.partial(jax.jit, static_argnames=("lr", "momentum"))
+def _sgd_step(params, velocity, x, y, lr: float = 0.015, momentum: float = 0.9):
+    loss, grads = jax.value_and_grad(
+        lambda p: cross_entropy(float_forward(p, x), y)
+    )(params)
+    velocity = jax.tree.map(lambda v, g: momentum * v - lr * g, velocity, grads)
+    params = jax.tree.map(lambda p, v: p + v, params, velocity)
+    return params, velocity, loss
+
+
+def train(
+    key: jax.Array,
+    steps: int = 300,
+    batch: int = 64,
+    log_every: int = 50,
+    verbose: bool = True,
+) -> tuple[dict[str, Any], list[tuple[int, float]]]:
+    """Train SERVE_CNN on the synthetic set; returns (params, loss curve)."""
+    k_data, k_init = jax.random.split(key)
+    x_all, y_all = make_dataset(k_data, steps * batch // 4 + batch)
+    params = init_params(k_init)
+    velocity = jax.tree.map(jnp.zeros_like, params)
+    n = x_all.shape[0]
+    curve = []
+    for step in range(steps):
+        lo = (step * batch) % (n - batch)
+        xb, yb = x_all[lo : lo + batch], y_all[lo : lo + batch]
+        params, velocity, loss = _sgd_step(params, velocity, xb, yb)
+        if step % log_every == 0 or step == steps - 1:
+            curve.append((step, float(loss)))
+            if verbose:
+                print(f"  step {step:4d}  loss {float(loss):.4f}")
+    return params, curve
+
+
+def eval_accuracy(
+    params: dict[str, Any],
+    cfg_name: str | None,
+    key: jax.Array,
+    n: int = 512,
+) -> float:
+    """Held-out accuracy of the float model (cfg_name=None) or a quantized
+    configuration (routed through the pure-jnp oracle for speed)."""
+    x, y = make_dataset(key, n)
+    if cfg_name is None:
+        logits = float_forward(params, x)
+    else:
+        logits = quant_forward(params, x, PRECISION_CONFIGS[cfg_name], use_kernel=False)
+    return float(accuracy(logits, y))

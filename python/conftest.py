@@ -1,0 +1,7 @@
+"""Make `pytest python/tests/` work from the repo root: the test suite
+imports the `compile` package, which lives in this directory."""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent))

@@ -1,0 +1,60 @@
+"""AOT export path: HLO text generation and the weights round trip."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.init_params(jax.random.PRNGKey(0))
+
+
+def test_hlo_text_is_valid_entry(params):
+    spec = jax.ShapeDtypeStruct((1, *model.INPUT_SHAPE), jnp.float32)
+    fn = lambda x: (  # noqa: E731
+        model.quant_forward(params, x, model.PRECISION_CONFIGS["int4"], use_kernel=True),
+    )
+    text = aot.to_hlo_text(jax.jit(fn).lower(spec))
+    assert "ENTRY" in text
+    assert "f32[1,32,32,3]" in text  # the input parameter
+    assert "f32[1,10]" in text  # the logits
+    assert len(text) > 10_000
+
+
+def test_export_config_writes_file(tmp_path, params):
+    entry = aot.export_config(params, "int4", 1, tmp_path)
+    assert (tmp_path / entry["file"]).exists()
+    assert entry["avg_bits"] == 4.0
+    assert entry["batch"] == 1
+    text = (tmp_path / entry["file"]).read_text()
+    assert "ENTRY" in text
+
+
+def test_export_float_reference(tmp_path, params):
+    entry = aot.export_config(params, "float", 2, tmp_path)
+    assert entry["avg_bits"] == 32.0
+    assert "f32[2,32,32,3]" in (tmp_path / entry["file"]).read_text()
+
+
+def test_weights_roundtrip(tmp_path, params):
+    flat = aot.flatten_params(params)
+    np.savez(tmp_path / "w.npz", **flat)
+    loaded = aot.unflatten_params(dict(np.load(tmp_path / "w.npz")))
+    for layer in params:
+        for leaf in params[layer]:
+            np.testing.assert_array_equal(
+                np.asarray(params[layer][leaf]), np.asarray(loaded[layer][leaf])
+            )
+
+
+def test_quantized_and_float_exports_differ(tmp_path, params):
+    a = aot.export_config(params, "int8", 1, tmp_path)
+    b = aot.export_config(params, "int4", 1, tmp_path)
+    ta = (tmp_path / a["file"]).read_text()
+    tb = (tmp_path / b["file"]).read_text()
+    # int8 unrolls 4x the bit-plane matmuls of int4.
+    assert len(ta) > len(tb)

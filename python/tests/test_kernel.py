@@ -1,0 +1,157 @@
+"""Layer-1 correctness: the Pallas bit-plane GEMM vs the pure-jnp oracles.
+
+`hypothesis` sweeps shapes and precisions; deterministic cases pin the
+edge behaviour (1-bit planes, MSB signs, padding remainders).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.bitserial_gemm import (
+    MAX_BITS,
+    bitplane_gemm,
+    plane_matmuls,
+    vmem_bytes,
+)
+from compile.kernels import ref
+
+
+def rand_operand(rng, rows, cols, bits):
+    """Random signed ints exactly spanning the two's-complement range."""
+    if bits == 1:
+        return rng.integers(0, 2, size=(rows, cols)).astype(np.int32)
+    lo, hi = -(1 << (bits - 1)), (1 << (bits - 1)) - 1
+    return rng.integers(lo, hi + 1, size=(rows, cols)).astype(np.int32)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 40),
+    k=st.integers(1, 48),
+    n=st.integers(1, 40),
+    a_bits=st.integers(1, 8),
+    w_bits=st.integers(1, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kernel_matches_exact_gemm(m, k, n, a_bits, w_bits, seed):
+    rng = np.random.default_rng(seed)
+    a = rand_operand(rng, m, k, a_bits)
+    w = rand_operand(rng, k, n, w_bits)
+    got = np.asarray(bitplane_gemm(jnp.asarray(a), jnp.asarray(w), a_bits=a_bits, w_bits=w_bits))
+    np.testing.assert_array_equal(got, a.astype(np.int64) @ w.astype(np.int64))
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    a_bits=st.integers(2, 8),
+    w_bits=st.integers(2, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kernel_matches_bitplane_oracle(a_bits, w_bits, seed):
+    """Second oracle: the explicit plane-by-plane jnp accumulation."""
+    rng = np.random.default_rng(seed)
+    a = rand_operand(rng, 9, 13, a_bits)
+    w = rand_operand(rng, 13, 7, w_bits)
+    got = np.asarray(bitplane_gemm(jnp.asarray(a), jnp.asarray(w), a_bits=a_bits, w_bits=w_bits))
+    want = np.asarray(ref.bitplane_gemm_ref(jnp.asarray(a), jnp.asarray(w), a_bits, w_bits))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_mixed_widths():
+    """Asymmetric (a_bits, w_bits) pairs — the bit-fluid case."""
+    rng = np.random.default_rng(7)
+    for a_bits, w_bits in [(2, 8), (8, 2), (4, 8), (8, 4), (3, 5)]:
+        a = rand_operand(rng, 17, 23, a_bits)
+        w = rand_operand(rng, 23, 11, w_bits)
+        got = np.asarray(
+            bitplane_gemm(jnp.asarray(a), jnp.asarray(w), a_bits=a_bits, w_bits=w_bits)
+        )
+        np.testing.assert_array_equal(got, a @ w)
+
+
+def test_tile_padding_remainders():
+    """Shapes straddling the tile grid exercise the pad/crop path."""
+    rng = np.random.default_rng(3)
+    for m, n in [(127, 129), (128, 128), (129, 127), (1, 257)]:
+        a = rand_operand(rng, m, 16, 4)
+        w = rand_operand(rng, 16, n, 4)
+        got = np.asarray(bitplane_gemm(jnp.asarray(a), jnp.asarray(w), a_bits=4, w_bits=4))
+        assert got.shape == (m, n)
+        np.testing.assert_array_equal(got, a @ w)
+
+
+def test_custom_tile_sizes():
+    rng = np.random.default_rng(5)
+    a = rand_operand(rng, 64, 32, 4)
+    w = rand_operand(rng, 32, 64, 4)
+    for tm, tn in [(16, 16), (64, 64), (32, 8)]:
+        got = np.asarray(
+            bitplane_gemm(jnp.asarray(a), jnp.asarray(w), a_bits=4, w_bits=4, tile_m=tm, tile_n=tn)
+        )
+        np.testing.assert_array_equal(got, a @ w)
+
+
+def test_extreme_values_hit_range_ends():
+    """MSB sign handling: operands pinned to range endpoints."""
+    for bits in [2, 4, 8]:
+        lo, hi = -(1 << (bits - 1)), (1 << (bits - 1)) - 1
+        a = np.array([[lo, hi], [hi, lo]], np.int32)
+        w = np.array([[lo, hi], [hi, lo]], np.int32)
+        got = np.asarray(bitplane_gemm(jnp.asarray(a), jnp.asarray(w), a_bits=bits, w_bits=bits))
+        np.testing.assert_array_equal(got, a @ w)
+
+
+def test_one_bit_operands_are_unsigned():
+    """bits == 1 has a single, positive plane (no sign plane)."""
+    a = np.array([[0, 1, 1], [1, 0, 1]], np.int32)
+    w = np.array([[1, 0], [1, 1], [0, 1]], np.int32)
+    got = np.asarray(bitplane_gemm(jnp.asarray(a), jnp.asarray(w), a_bits=1, w_bits=1))
+    np.testing.assert_array_equal(got, a @ w)
+
+
+def test_zero_inputs():
+    a = np.zeros((8, 8), np.int32)
+    w = np.zeros((8, 8), np.int32)
+    got = np.asarray(bitplane_gemm(jnp.asarray(a), jnp.asarray(w), a_bits=8, w_bits=8))
+    np.testing.assert_array_equal(got, np.zeros((8, 8)))
+
+
+def test_rejects_bad_bits_and_shapes():
+    a = jnp.zeros((4, 4), jnp.int32)
+    with pytest.raises(ValueError):
+        bitplane_gemm(a, a, a_bits=0, w_bits=4)
+    with pytest.raises(ValueError):
+        bitplane_gemm(a, a, a_bits=4, w_bits=MAX_BITS + 1)
+    with pytest.raises(ValueError):
+        bitplane_gemm(a, jnp.zeros((5, 4), jnp.int32), a_bits=4, w_bits=4)
+
+
+def test_cost_helpers():
+    """Static cost knobs used by the perf notes in DESIGN.md."""
+    assert plane_matmuls(8, 8) == 64
+    assert plane_matmuls(4, 8) == 32
+    # 128x128 tiles, K = 2304: ~2.4 MB (inside a TPU core's VMEM).
+    assert vmem_bytes(128, 2304, 128) < 16 * 2**20 / 2
+
+
+def test_quantize_roundtrip():
+    rng = np.random.default_rng(11)
+    x = jnp.asarray(rng.normal(size=(32, 32)).astype(np.float32))
+    for bits in [2, 4, 8]:
+        s = ref.scale_for(x, bits)
+        q = ref.quantize(x, bits, s)
+        lo, hi = ref.qrange(bits)
+        assert int(q.min()) >= lo and int(q.max()) <= hi
+        err = np.abs(np.asarray(ref.dequantize(q, s)) - np.asarray(x)).max()
+        assert err <= float(s) * 0.5 + 1e-6
+
+
+def test_fake_quant_error_shrinks_with_bits():
+    rng = np.random.default_rng(13)
+    x = jnp.asarray(rng.normal(size=(64, 64)).astype(np.float32))
+    errs = [
+        float(jnp.abs(ref.fake_quant(x, b) - x).mean()) for b in [2, 4, 6, 8]
+    ]
+    assert all(e1 > e2 for e1, e2 in zip(errs, errs[1:])), errs

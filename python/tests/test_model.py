@@ -1,0 +1,148 @@
+"""Layer-2 correctness: im2col convolution, quantized forward, training.
+
+The quantized forward routed through the Pallas kernel must agree exactly
+with the pure-jnp oracle path (same quantization, oracle GEMM); the float
+im2col convolution must match `jax.lax.conv_general_dilated`.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.init_params(jax.random.PRNGKey(42))
+
+
+@pytest.fixture(scope="module")
+def batch():
+    x, y = model.make_dataset(jax.random.PRNGKey(3), 4)
+    return x, y
+
+
+def test_im2col_matches_lax_conv(params, batch):
+    """Float conv-via-GEMM == XLA's native convolution."""
+    x, _ = batch
+    p = params["conv1"]
+    got = model._conv_via_gemm(x, p["w"], p["b"], lambda a, w: a @ w)
+    want = (
+        jax.lax.conv_general_dilated(
+            x,
+            p["w"],
+            window_strides=(1, 1),
+            padding="SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        )
+        + p["b"]
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-5)
+
+
+def test_im2col_shape_and_order():
+    """Patch layout: (di, dj, c) unrolling, B*H*W rows."""
+    x = jnp.arange(2 * 4 * 4 * 3, dtype=jnp.float32).reshape(2, 4, 4, 3)
+    cols = model.im2col(x)
+    assert cols.shape == (2 * 4 * 4, 9 * 3)
+    # Center tap (di=1, dj=1) of the first pixel is the pixel itself.
+    center = cols[0, (3 * 1 + 1) * 3 : (3 * 1 + 1) * 3 + 3]
+    np.testing.assert_array_equal(np.asarray(center), np.asarray(x[0, 0, 0]))
+
+
+def test_pooling_ops():
+    x = jnp.arange(1 * 4 * 4 * 1, dtype=jnp.float32).reshape(1, 4, 4, 1)
+    mp = model.maxpool2(x)
+    assert mp.shape == (1, 2, 2, 1)
+    np.testing.assert_array_equal(np.asarray(mp)[0, :, :, 0], [[5, 7], [13, 15]])
+    gap = model.global_avgpool(x)
+    assert gap.shape == (1, 1)
+    assert float(gap[0, 0]) == pytest.approx(7.5)
+
+
+def test_float_forward_shapes(params, batch):
+    x, _ = batch
+    logits = model.float_forward(params, x)
+    assert logits.shape == (x.shape[0], model.NUM_CLASSES)
+    assert bool(jnp.isfinite(logits).all())
+
+
+@pytest.mark.parametrize("cfg_name", list(model.PRECISION_CONFIGS))
+def test_quant_forward_kernel_matches_oracle(params, batch, cfg_name):
+    """The Pallas-kernel path and the jnp-oracle path share quantization,
+    so their logits must agree to float32 tolerance."""
+    x, _ = batch
+    cfg = model.PRECISION_CONFIGS[cfg_name]
+    a = model.quant_forward(params, x, cfg, use_kernel=True)
+    b = model.quant_forward(params, x, cfg, use_kernel=False)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-5)
+
+
+def test_int8_close_to_float(params, batch):
+    x, _ = batch
+    f = model.float_forward(params, x)
+    q = model.quant_forward(params, x, model.PRECISION_CONFIGS["int8"], use_kernel=False)
+    # 8-bit symmetric quantization stays within a few percent of float.
+    rel = float(jnp.abs(f - q).max() / (jnp.abs(f).max() + 1e-9))
+    assert rel < 0.15, rel
+
+
+def test_int4_error_exceeds_int8(params, batch):
+    x, _ = batch
+    f = model.float_forward(params, x)
+    e8 = float(
+        jnp.abs(f - model.quant_forward(params, x, model.PRECISION_CONFIGS["int8"], use_kernel=False)).mean()
+    )
+    e4 = float(
+        jnp.abs(f - model.quant_forward(params, x, model.PRECISION_CONFIGS["int4"], use_kernel=False)).mean()
+    )
+    assert e4 > e8, (e4, e8)
+
+
+def test_quant_forward_rejects_bad_cfg(params, batch):
+    x, _ = batch
+    with pytest.raises(ValueError):
+        model.quant_forward(params, x, ((8, 8),))
+
+
+def test_config_table():
+    assert len(model.WEIGHT_LAYERS) == 6
+    assert model.avg_bits(model.PRECISION_CONFIGS["int8"]) == 8.0
+    assert model.avg_bits(model.PRECISION_CONFIGS["int4"]) == 4.0
+    mixed = model.avg_bits(model.PRECISION_CONFIGS["mixed_medium"])
+    assert 4.0 < mixed < 8.0
+    # Budgets order by average bits: high > medium > low.
+    assert (
+        model.avg_bits(model.PRECISION_CONFIGS["mixed_high"])
+        > mixed
+        > model.avg_bits(model.PRECISION_CONFIGS["mixed_low"])
+    )
+
+
+def test_dataset_is_class_consistent():
+    """Same labels from different keys share the grating structure."""
+    x1, y1 = model.make_dataset(jax.random.PRNGKey(1), 64)
+    x2, y2 = model.make_dataset(jax.random.PRNGKey(2), 64)
+    assert x1.shape == (64, *model.INPUT_SHAPE)
+    assert int(y1.min()) >= 0 and int(y1.max()) < model.NUM_CLASSES
+    # Different keys -> different samples.
+    assert not np.array_equal(np.asarray(x1), np.asarray(x2))
+
+
+def test_short_training_reduces_loss():
+    """A handful of SGD steps must cut the loss — the training loop works."""
+    params, curve = model.train(
+        jax.random.PRNGKey(0), steps=30, batch=16, log_every=29, verbose=False
+    )
+    assert curve[0][1] > curve[-1][1], curve
+    assert model.param_count(params) > 30_000
+
+
+def test_cross_entropy_and_accuracy():
+    logits = jnp.array([[10.0, 0.0], [0.0, 10.0]])
+    labels = jnp.array([0, 1])
+    assert float(model.cross_entropy(logits, labels)) < 0.01
+    assert float(model.accuracy(logits, labels)) == 1.0
+    assert float(model.accuracy(logits, jnp.array([1, 0]))) == 0.0

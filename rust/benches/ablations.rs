@@ -1,0 +1,184 @@
+//! Bench: ablations over the design choices DESIGN.md §5b calls out —
+//! the mapper's u/i split selection, the IR mesh-bandwidth scaling rule,
+//! and the coordinator's batch window (compiled batch sizes).
+//!
+//! Each section shows what the headline results would look like with the
+//! choice disabled, justifying why it is in the design.
+
+use bf_imna::arch::ChipConfig;
+use bf_imna::mapper;
+use bf_imna::model::zoo;
+use bf_imna::precision::PrecisionConfig;
+use bf_imna::sim::{simulate, simulate_on, SimParams};
+use bf_imna::util::benchkit::banner;
+use bf_imna::util::table::{fmt_eng, fmt_ratio, Table};
+
+fn main() {
+    // ------------------------------------------------------------------
+    banner("Ablation 1 — mapper split selection (u-split vs i-split)");
+    // The mapper picks min(u-split, i-split) for the critical-path mesh
+    // traffic. Show per-layer what each split would cost on AlexNet (whose
+    // FC layers are the i-split's reason to exist).
+    let net = zoo::alexnet();
+    let chip = ChipConfig::lr();
+    let cfg = PrecisionConfig::fixed(8, net.weight_layers());
+    let plan = mapper::map_network(&net, &chip, &cfg);
+    let mut t = Table::new(vec!["layer", "critical mesh bits", "total mesh bits", "ratio"]);
+    for l in plan.layers.iter().filter(|l| l.kind == mapper::WorkKind::Gemm) {
+        t.row(vec![
+            l.name.clone(),
+            l.mesh_bits_critical.to_string(),
+            l.mesh_bits.to_string(),
+            format!("{:.3}", l.mesh_bits_critical as f64 / l.mesh_bits as f64),
+        ]);
+    }
+    print!("{}", t.render());
+    // The fc layers must ride the i-split: their critical traffic has to be
+    // far below one full weight copy (i*j*8 bits).
+    let fc6 = plan.layers.iter().find(|l| l.name == "fc6").unwrap();
+    let full_copy = 4096u64 * 9216 * 8;
+    println!(
+        "\nfc6 critical {} bits vs one full weight copy {} bits ({}): the i-split\n\
+         keeps Table VII's normalized latency at ~1.00 (serialized copies gave 1.55).",
+        fc6.mesh_bits_critical,
+        full_copy,
+        fmt_ratio(full_copy as f64 / fc6.mesh_bits_critical as f64)
+    );
+    assert!(fc6.mesh_bits_critical < full_copy / 4);
+
+    // ------------------------------------------------------------------
+    banner("Ablation 2 — IR mesh bandwidth scaling (1 link per 64 CAPs)");
+    // Rebuild the IR chip with the link scaling disabled (one fixed LR
+    // link) and compare latency flatness across precision.
+    let params = SimParams::lr_sram();
+    let mut t = Table::new(vec![
+        "IR mesh",
+        "latency 2b (s)",
+        "latency 8b (s)",
+        "8b/2b ratio",
+    ]);
+    for (label, scale) in [("scaled (ours)", true), ("fixed link (ablated)", false)] {
+        let mut chip = ChipConfig::ir_for(&net);
+        if !scale {
+            chip.mesh.bits_per_transfer = 1024;
+        }
+        let l2 = simulate_on(&net, &PrecisionConfig::fixed(2, net.weight_layers()), &params, &chip)
+            .latency_s();
+        let l8 = simulate_on(&net, &PrecisionConfig::fixed(8, net.weight_layers()), &params, &chip)
+            .latency_s();
+        t.row(vec![
+            label.to_string(),
+            fmt_eng(l2, 3),
+            fmt_eng(l8, 3),
+            format!("{:.2}", l8 / l2),
+        ]);
+    }
+    print!("{}", t.render());
+    println!("(paper/Fig. 7b: latency must be nearly precision-flat — the fixed link is not)");
+
+    // ------------------------------------------------------------------
+    banner("Ablation 3 — compiled batch sizes (batcher amortization)");
+    // With inter-batch pipelining, batching amortizes per-layer fill; show
+    // the simulator's per-sample cost by batch via the pipeline model.
+    let vgg = zoo::vgg16();
+    let cfg8 = PrecisionConfig::fixed(8, vgg.weight_layers());
+    let r = simulate(&vgg, &cfg8, &params);
+    let mut t = Table::new(vec!["mode", "per-inference (s)", "throughput (GOPS)"]);
+    t.row(vec![
+        "batch-1 (no pipelining)".to_string(),
+        fmt_eng(r.latency_s(), 3),
+        format!("{:.0}", r.gops()),
+    ]);
+    t.row(vec![
+        "pipelined steady state".to_string(),
+        fmt_eng(r.pipeline_interval_s(), 3),
+        format!("{:.0}", r.pipelined_gops()),
+    ]);
+    print!("{}", t.render());
+    println!(
+        "pipeline speedup {} — why the coordinator batches (and why §V-B says\n\
+         'BF-IMNA readily enables inter-batch pipelining').",
+        fmt_ratio(r.pipeline_speedup())
+    );
+
+    // ------------------------------------------------------------------
+    banner("Ablation 4 — 2D AP without segmentation (the paper's choice)");
+    // The paper picks the unsegmented 2D AP "to favor programmability".
+    // Quantify what segmentation would buy on the dominant op (reduction)
+    // at CAP scale.
+    use bf_imna::ap::{runtime_model as rt, ApKind};
+    let mut t = Table::new(vec!["L (words)", "2D (ours)", "2D seg", "seg speedup"]);
+    for l in [64u64, 512, 4800] {
+        let a = rt::reduce(8, l, ApKind::TwoD).events.time_units();
+        let b = rt::reduce(8, l, ApKind::TwoDSeg).events.time_units();
+        t.row(vec![
+            l.to_string(),
+            a.to_string(),
+            b.to_string(),
+            fmt_ratio(a as f64 / b as f64),
+        ]);
+    }
+    print!("{}", t.render());
+    println!(
+        "segmentation would cut the reduce bottleneck ~20-40x at CAP scale, at the\n\
+         cost of L/4 duplicated carry rows + fixed segment boundaries — the paper\n\
+         (and this repo) trades that for programmability; Fig. 8b shows where the\n\
+         time goes as a result."
+    );
+
+    // ------------------------------------------------------------------
+    banner("Extension — fine-grained (per-channel) precision scheduling");
+    // Intro granularity taxonomy: bit-serial hardware gets fine-grained
+    // *energy* savings for free; latency needs width-sorted packing.
+    use bf_imna::precision::granularity as gran;
+    use bf_imna::util::rng::Rng;
+    let mut rng = Rng::new(5);
+    let mut t = Table::new(vec![
+        "channel widths",
+        "lockstep passes",
+        "sorted passes",
+        "ideal",
+        "sorted efficiency",
+    ]);
+    let lanes = 64;
+    for (label, cfg) in [
+        ("uniform 8b x 512", gran::ChannelConfig::uniform(8, 8, 512)),
+        ("half 8b / half 4b", {
+            let mut w = vec![8u32; 256];
+            w.extend(vec![4u32; 256]);
+            gran::ChannelConfig { a_bits: 8, w_bits: w }
+        }),
+        ("random 2..8b x 512", gran::ChannelConfig::random(8, 2, 8, 512, &mut rng)),
+    ] {
+        let lock = gran::lockstep_passes(&cfg, lanes);
+        let sorted = gran::sorted_packed_passes(&cfg, lanes);
+        t.row(vec![
+            label.to_string(),
+            lock.to_string(),
+            sorted.to_string(),
+            format!("{:.0}", gran::ideal_passes(&cfg, lanes)),
+            format!("{:.0}%", 100.0 * gran::schedule_efficiency(&cfg, lanes, sorted)),
+        ]);
+    }
+    print!("{}", t.render());
+    println!("width-sorted packing recovers (nearly) the ideal fine-grained latency;\nnaive lockstep wastes the fine granularity entirely (energy saves either way).");
+
+    // ------------------------------------------------------------------
+    banner("Extension — LLM workload (§V-D 'Supported Workloads')");
+    use bf_imna::sim::breakdown;
+    let llm = zoo::llm_block(128, 768);
+    let cfg8 = PrecisionConfig::fixed(8, llm.weight_layers());
+    let r = simulate(&llm, &cfg8, &params);
+    let shares = breakdown::energy_by_kind(&r);
+    let mut t = Table::new(vec!["category", "energy share"]);
+    for s in &shares {
+        t.row(vec![s.label.clone(), format!("{:.1}%", 100.0 * s.fraction)]);
+    }
+    print!("{}", t.render());
+    println!(
+        "transformer block (seq 128, d 768): {:.1} G MACs, all in GEMMs; energy is\n\
+         matmul-dominated exactly as §V-D warns — the motivation for the paper's\n\
+         future-work matmul engines.",
+        llm.total_macs() as f64 / 1e9
+    );
+}

@@ -1,0 +1,79 @@
+//! Bench: regenerate Fig. 5 — AP runtime of (a) reduction, (b) matrix-
+//! matrix multiplication, (c) average pooling, (d) max pooling,
+//! (e) addition, (f) multiplication, (g) ReLU, as a function of the
+//! precision M for the three AP organizations.
+
+use bf_imna::ap::{runtime_model as rt, ApKind};
+use bf_imna::util::benchkit::{banner, Bencher};
+use bf_imna::util::table::Table;
+
+fn series(title: &str, f: impl Fn(u32, ApKind) -> u64) {
+    println!("\n{title}");
+    let mut t = Table::new(vec!["M", "1D AP", "2D AP", "2D AP (seg)"]);
+    for m in [2u32, 4, 6, 8, 10, 12, 14, 16] {
+        t.row(vec![
+            m.to_string(),
+            f(m, ApKind::OneD).to_string(),
+            f(m, ApKind::TwoD).to_string(),
+            f(m, ApKind::TwoDSeg).to_string(),
+        ]);
+    }
+    print!("{}", t.render());
+}
+
+fn main() {
+    banner("Fig. 5 — AP runtimes vs precision M (time units)");
+    let l = 1024u64; // words for element-wise / reduction series
+    let (s, k) = (4u64, 64u64); // pooling window + op count
+    let (i, j, u) = (16u64, 128u64, 16u64); // matmul shape
+
+    series("(a) reduction (L = 1024)", |m, kd| rt::reduce(m, l, kd).events.time_units());
+    series(&format!("(b) matrix-matrix multiplication ({i}x{j} by {j}x{u})"), |m, kd| {
+        rt::matmat(m, m, i, j, u, kd).events.time_units()
+    });
+    series("(c) average pooling (S = 4, K = 64)", |m, kd| {
+        rt::avgpool(m, s, k, kd).events.time_units()
+    });
+    series("(d) max pooling (S = 4, K = 64)", |m, kd| {
+        rt::maxpool(m, s, k, kd).events.time_units()
+    });
+    series("(e) addition (L = 1024)", |m, kd| rt::add(m, l, kd).events.time_units());
+    series("(f) multiplication (L = 1024)", |m, kd| {
+        rt::multiply(m, m, l, kd).events.time_units()
+    });
+    series("(g) ReLU (L = 1024)", |m, kd| rt::relu(m, l, kd).events.time_units());
+
+    // Shape checks the paper's Fig. 5 narrative depends on.
+    banner("Shape checks");
+    let seg_speedup =
+        rt::reduce(8, l, ApKind::TwoD).events.time_units() as f64
+            / rt::reduce(8, l, ApKind::TwoDSeg).events.time_units() as f64;
+    println!("reduction: 2D-seg speedup over 2D at L=1024: {seg_speedup:.1}x (tree vs linear)");
+    let mul_quad = rt::multiply(16, 16, l, ApKind::TwoD).events.time_units() as f64
+        / rt::multiply(8, 8, l, ApKind::TwoD).events.time_units() as f64;
+    println!("multiplication: 16b/8b runtime ratio: {mul_quad:.2}x (expected ~4x, O(M^2))");
+    let relu_lin = rt::relu(16, l, ApKind::TwoD).events.time_units() as f64
+        / rt::relu(8, l, ApKind::TwoD).events.time_units() as f64;
+    println!("relu: 16b/8b runtime ratio: {relu_lin:.2}x (expected ~2x, O(M))");
+    assert!(mul_quad > 3.5 && mul_quad < 4.5);
+    assert!(relu_lin > 1.8 && relu_lin < 2.2);
+
+    banner("Timing");
+    let bench = Bencher::new().samples(20);
+    let r = bench.run("full Fig. 5 grid (7 fns x 8 widths x 3 kinds)", || {
+        let mut acc = 0u64;
+        for m in [2u32, 4, 6, 8, 10, 12, 14, 16] {
+            for kd in ApKind::ALL {
+                acc = acc.wrapping_add(rt::reduce(m, l, kd).events.time_units());
+                acc = acc.wrapping_add(rt::matmat(m, m, i, j, u, kd).events.time_units());
+                acc = acc.wrapping_add(rt::avgpool(m, s, k, kd).events.time_units());
+                acc = acc.wrapping_add(rt::maxpool(m, s, k, kd).events.time_units());
+                acc = acc.wrapping_add(rt::add(m, l, kd).events.time_units());
+                acc = acc.wrapping_add(rt::multiply(m, m, l, kd).events.time_units());
+                acc = acc.wrapping_add(rt::relu(m, l, kd).events.time_units());
+            }
+        }
+        acc
+    });
+    println!("{}", r.report_line());
+}

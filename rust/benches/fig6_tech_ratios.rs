@@ -1,0 +1,115 @@
+//! Bench: regenerate Fig. 6 — ReRAM/SRAM energy and latency ratios for
+//! fixed precisions 2..8, end-to-end VGG16 inference — plus the §V-A
+//! voltage-scaling experiment and a mesh-energy sensitivity ablation.
+
+use bf_imna::arch::HwConfig;
+use bf_imna::model::zoo;
+use bf_imna::precision::PrecisionConfig;
+use bf_imna::sim::{dse, simulate, simulate_on, SimParams};
+use bf_imna::util::benchkit::{banner, Bencher};
+use bf_imna::util::table::{fmt_ratio, Table};
+
+fn main() {
+    banner("Fig. 6 — ReRAM/SRAM ratios, end-to-end VGG16 (LR chip)");
+    let vgg = zoo::vgg16();
+    let rows = dse::fig6_tech_ratios(&vgg);
+    let mut t = Table::new(vec!["precision", "energy ratio", "latency ratio", "area savings"]);
+    for r in &rows {
+        t.row(vec![
+            r.bits.to_string(),
+            fmt_ratio(r.energy_ratio),
+            fmt_ratio(r.latency_ratio),
+            fmt_ratio(r.area_savings),
+        ]);
+    }
+    print!("{}", t.render());
+    println!(
+        "paper: energy ratios decreasing 80.9x -> 63.1x; latency ~1.85x flat; area 4.4x.\n\
+         measured shape: energy ratio decreasing {} -> {}; latency {}..{}; area {}.",
+        fmt_ratio(rows.first().unwrap().energy_ratio),
+        fmt_ratio(rows.last().unwrap().energy_ratio),
+        fmt_ratio(rows.iter().map(|r| r.latency_ratio).fold(f64::MAX, f64::min)),
+        fmt_ratio(rows.iter().map(|r| r.latency_ratio).fold(f64::MIN, f64::max)),
+        fmt_ratio(rows[0].area_savings),
+    );
+    assert!(rows.windows(2).all(|w| w[1].energy_ratio < w[0].energy_ratio));
+
+    banner("Voltage scaling (SRAM 1.0 V -> 0.5 V write energy, §V-A)");
+    let mut t = Table::new(vec!["network", "energy saving", "paper"]);
+    for net in zoo::imagenet_benchmarks() {
+        let s = dse::voltage_scaling_saving(&net, 8);
+        t.row(vec![net.name.clone(), format!("{:.3}%", 100.0 * s), "<= 0.06%".to_string()]);
+    }
+    print!("{}", t.render());
+
+    banner("Ablation: mesh energy-per-bit sensitivity (undocumented in [6])");
+    // The paper sources mesh pJ/bit/mm from Dally et al. without printing
+    // the value; sweep it to show the headline results barely move.
+    let cfg = PrecisionConfig::fixed(8, vgg.weight_layers());
+    let params = SimParams::lr_sram();
+    let mut t = Table::new(vec!["e_mesh (pJ/bit/mm)", "energy/inference (J)", "delta vs 0.05"]);
+    let mut chip = bf_imna::arch::ChipConfig::for_network(HwConfig::Lr, &vgg);
+    let base = simulate(&vgg, &cfg, &params).energy_j();
+    for e in [0.01, 0.05, 0.1, 0.2] {
+        chip.mesh.e_bit_mm = e * 1e-12;
+        let r = simulate_on(&vgg, &cfg, &params, &chip);
+        t.row(vec![
+            format!("{e}"),
+            format!("{:.4}", r.energy_j()),
+            format!("{:+.1}%", 100.0 * (r.energy_j() - base) / base),
+        ]);
+    }
+    print!("{}", t.render());
+
+    banner("Extension: PCM / FeFET technologies (§V-A 'easy to extend')");
+    let mut t = Table::new(vec![
+        "technology",
+        "energy/inf (J)",
+        "latency/inf (s)",
+        "area (mm2)",
+        "energy vs SRAM",
+    ]);
+    let techs = [
+        bf_imna::ap::tech::Tech::sram(),
+        bf_imna::ap::tech::Tech::reram(),
+        bf_imna::ap::tech::Tech::pcm(),
+        bf_imna::ap::tech::Tech::fefet(),
+    ];
+    let sram_e = simulate(&vgg, &cfg, &SimParams::new(HwConfig::Lr, techs[0])).energy_j();
+    for tech in techs {
+        let r = simulate(&vgg, &cfg, &SimParams::new(HwConfig::Lr, tech));
+        t.row(vec![
+            tech.cell.label().to_string(),
+            format!("{:.4}", r.energy_j()),
+            format!("{:.5}", r.latency_s()),
+            format!("{:.1}", r.area_mm2),
+            fmt_ratio(r.energy_j() / sram_e),
+        ]);
+    }
+    print!("{}", t.render());
+
+    banner("Extension: inter-batch pipelining + chiplet scale-out (§V-B)");
+    let r8 = simulate(&vgg, &cfg, &params);
+    println!(
+        "VGG16 LR INT8: batch-1 {:.0} GOPS -> pipelined {:.0} GOPS ({} speedup)",
+        r8.gops(),
+        r8.pipelined_gops(),
+        fmt_ratio(r8.pipeline_speedup())
+    );
+    for chips in [1u64, 2, 4, 8] {
+        let s = bf_imna::sim::ScaleOut::new(r8.clone(), chips);
+        println!(
+            "  {chips} chip(s): {:.0} GOPS pipelined, {:.0} mm2, {:.0} GOPS/W (scale-invariant)",
+            s.pipelined_gops(),
+            s.area_mm2(),
+            s.gops_per_w()
+        );
+    }
+
+    banner("Timing");
+    let bench = Bencher::new().samples(10);
+    let r = bench.run("fig6 full sweep (7 precisions x 2 techs, VGG16)", || {
+        dse::fig6_tech_ratios(&vgg).len()
+    });
+    println!("{}", r.report_line());
+}

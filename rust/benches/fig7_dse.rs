@@ -1,0 +1,80 @@
+//! Bench: regenerate Fig. 7 — (a) energy/inference, (b) latency/inference
+//! and (c) GOPS/W/mm² vs average precision for AlexNet / VGG16 / ResNet50
+//! on the IR and LR configurations.
+
+use bf_imna::arch::HwConfig;
+use bf_imna::model::zoo;
+use bf_imna::sim::dse;
+use bf_imna::util::benchkit::{banner, Bencher};
+use bf_imna::util::table::{fmt_eng, Table};
+
+fn main() {
+    banner("Fig. 7 — DSE vs average precision (SRAM, mean of sweep combos)");
+    let nets = zoo::imagenet_benchmarks();
+    for hw in [HwConfig::Lr, HwConfig::Ir] {
+        println!("\n=== {} configuration ===", hw.label());
+        for net in &nets {
+            let series = dse::fig7_series(net, hw, 7);
+            println!("\n{}:", net.name);
+            let mut t =
+                Table::new(vec!["avg bits", "energy (J)", "latency (s)", "GOPS/W/mm2"]);
+            for p in &series {
+                t.row(vec![
+                    format!("{:.0}", p.avg_bits),
+                    fmt_eng(p.energy_j, 3),
+                    fmt_eng(p.latency_s, 3),
+                    fmt_eng(p.gops_per_w_mm2, 3),
+                ]);
+            }
+            print!("{}", t.render());
+            // Paper shape assertions per series.
+            assert!(
+                series.windows(2).all(|w| w[1].energy_j > w[0].energy_j),
+                "{} {}: energy must increase with precision",
+                net.name,
+                hw.label()
+            );
+            let lat_ratio = series.last().unwrap().latency_s / series[0].latency_s;
+            assert!(
+                lat_ratio < 1.6,
+                "{} {}: latency should be nearly flat, got {lat_ratio:.2}x",
+                net.name,
+                hw.label()
+            );
+        }
+    }
+
+    banner("Cross-checks (paper §V-A numbers)");
+    // ResNet50 LR energy growth 2 -> 8 bits (paper: 0.009 -> 0.095 J, 10.5x).
+    let resnet = zoo::resnet50();
+    let series = dse::fig7_series(&resnet, HwConfig::Lr, 7);
+    let growth = series.last().unwrap().energy_j / series[0].energy_j;
+    println!(
+        "ResNet50 LR energy 2b -> 8b: {:.4} J -> {:.4} J ({growth:.1}x; paper 0.009 -> 0.095, 10.5x)",
+        series[0].energy_j,
+        series.last().unwrap().energy_j
+    );
+    // Energy ordering VGG16 > ResNet50 > AlexNet at every precision.
+    let vgg = dse::fig7_series(&zoo::vgg16(), HwConfig::Lr, 7);
+    let alex = dse::fig7_series(&zoo::alexnet(), HwConfig::Lr, 7);
+    for ((v, r), a) in vgg.iter().zip(&series).zip(&alex) {
+        assert!(
+            v.energy_j > r.energy_j && r.energy_j > a.energy_j,
+            "energy ordering broke at avg bits {}",
+            v.avg_bits
+        );
+    }
+    println!("energy ordering VGG16 > ResNet50 > AlexNet holds at every avg precision.");
+    // LR vs IR energy-area efficiency gap.
+    let ir = dse::fig7_series(&resnet, HwConfig::Ir, 7);
+    let gap = series[3].gops_per_w_mm2 / ir[3].gops_per_w_mm2;
+    println!("ResNet50 GOPS/W/mm2 LR/IR gap at 5 avg bits: {gap:.0}x (paper: up to 4 orders).");
+
+    banner("Timing");
+    let bench = Bencher::new().samples(3).warmup(1);
+    let alexnet = zoo::alexnet();
+    let r = bench.run("fig7 series (AlexNet LR, 7 targets x 5 combos)", || {
+        dse::fig7_series(&alexnet, HwConfig::Lr, 7).len()
+    });
+    println!("{}", r.report_line());
+}

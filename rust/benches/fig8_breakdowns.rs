@@ -1,0 +1,93 @@
+//! Bench: regenerate Fig. 8 — (a) total-energy breakdown by work category
+//! and (b) GEMM-latency breakdown by phase, for the three ImageNet
+//! benchmarks on the LR chip.
+
+use bf_imna::model::zoo;
+use bf_imna::precision::PrecisionConfig;
+use bf_imna::sim::{breakdown, simulate, SimParams};
+use bf_imna::util::benchkit::{banner, Bencher};
+use bf_imna::util::table::{fmt_eng, Table};
+
+fn main() {
+    banner("Fig. 8a — energy breakdown (INT8, LR, SRAM)");
+    let params = SimParams::lr_sram();
+    let mut t = Table::new(vec!["network", "GEMM", "Pooling", "Residual/ReLU", "Interconnect"]);
+    for net in zoo::imagenet_benchmarks() {
+        let cfg = PrecisionConfig::fixed(8, net.weight_layers());
+        let r = simulate(&net, &cfg, &params);
+        let shares = breakdown::energy_by_kind(&r);
+        let pct = |l: &str| format!("{:.1}%", 100.0 * breakdown::fraction_of(&shares, l));
+        t.row(vec![
+            net.name.clone(),
+            pct("GEMM"),
+            pct("Pooling"),
+            pct("Residual/ReLU"),
+            pct("Interconnect"),
+        ]);
+        // Paper: "GEMM and pooling are the main energy bottlenecks" — GEMM
+        // must dominate the AP-side energy.
+        assert!(
+            breakdown::fraction_of(&shares, "GEMM") > 0.4,
+            "{}: GEMM share too small",
+            net.name
+        );
+    }
+    print!("{}", t.render());
+
+    banner("Fig. 8b — GEMM latency breakdown by phase (INT8, LR, SRAM)");
+    let mut t = Table::new(vec!["network", "Populate", "Multiply", "Reduce", "Readout", "ReLU"]);
+    for net in zoo::imagenet_benchmarks() {
+        let cfg = PrecisionConfig::fixed(8, net.weight_layers());
+        let r = simulate(&net, &cfg, &params);
+        let shares = breakdown::gemm_latency_by_phase(&r);
+        let pct = |l: &str| format!("{:.1}%", 100.0 * breakdown::fraction_of(&shares, l));
+        t.row(vec![
+            net.name.clone(),
+            pct("Populate"),
+            pct("Multiply"),
+            pct("Reduce"),
+            pct("Readout"),
+            pct("ReLU"),
+        ]);
+        // The paper's headline: reduction, not multiplication, bottlenecks
+        // GEMM latency.
+        let red = breakdown::fraction_of(&shares, "Reduce");
+        let mul = breakdown::fraction_of(&shares, "Multiply");
+        assert!(red > mul && red > 0.5, "{}: reduce {red:.2} vs multiply {mul:.2}", net.name);
+    }
+    print!("{}", t.render());
+    println!("(paper: reduction dominates GEMM latency; multiplication is bit-serial\n\
+              column-parallel and nearly precision-flat in total latency)");
+
+    banner("Per-layer detail (VGG16, 5 most expensive layers)");
+    let vgg = zoo::vgg16();
+    let cfg = PrecisionConfig::fixed(8, vgg.weight_layers());
+    let r = simulate(&vgg, &cfg, &params);
+    let mut layers: Vec<_> = r.layers.iter().collect();
+    layers.sort_by(|a, b| b.energy_j().partial_cmp(&a.energy_j()).unwrap());
+    let mut t = Table::new(vec!["layer", "steps", "energy (J)", "latency (s)", "mesh (s)"]);
+    for l in layers.iter().take(5) {
+        t.row(vec![
+            l.name.clone(),
+            l.steps.to_string(),
+            fmt_eng(l.energy_j(), 3),
+            fmt_eng(l.latency_s, 3),
+            fmt_eng(l.mesh_s, 3),
+        ]);
+    }
+    print!("{}", t.render());
+
+    banner("Timing");
+    let bench = Bencher::new().samples(10);
+    let r = bench.run("simulate + both breakdowns (3 nets)", || {
+        let mut acc = 0.0;
+        for net in zoo::imagenet_benchmarks() {
+            let cfg = PrecisionConfig::fixed(8, net.weight_layers());
+            let rep = simulate(&net, &cfg, &params);
+            acc += breakdown::energy_by_kind(&rep)[0].fraction;
+            acc += breakdown::gemm_latency_by_phase(&rep)[0].fraction;
+        }
+        acc
+    });
+    println!("{}", r.report_line());
+}

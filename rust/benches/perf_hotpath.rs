@@ -1,0 +1,81 @@
+//! Bench: the §Perf hot paths — the end-to-end timings the performance
+//! pass optimizes and EXPERIMENTS.md §Perf records.
+//!
+//! Three layers, three hot paths:
+//! * **L3 simulator** — map_network + simulate for every benchmark network
+//!   (this is what every DSE point pays, thousands of times per sweep);
+//! * **L3 emulator** — the bit-exact CAM inner loop (pass application);
+//! * **Runtime** — PJRT execute of the serving artifacts (request-path
+//!   latency floor), when `make artifacts` output is present.
+
+use std::path::Path;
+
+use bf_imna::ap::emulator;
+use bf_imna::model::zoo;
+use bf_imna::precision::PrecisionConfig;
+use bf_imna::sim::{simulate, SimParams};
+use bf_imna::util::benchkit::{banner, Bencher};
+use bf_imna::util::rng::Rng;
+
+fn main() {
+    banner("L3 simulator hot path (map + cost every layer)");
+    let bench = Bencher::new().samples(30);
+    let params = SimParams::lr_sram();
+    for net in [zoo::alexnet(), zoo::resnet18(), zoo::vgg16(), zoo::resnet50()] {
+        let cfg = PrecisionConfig::fixed(8, net.weight_layers());
+        let name = format!("simulate {} (LR, INT8, {} layers)", net.name, net.layers.len());
+        let r = bench.run(&name, || simulate(&net, &cfg, &params).energy_j());
+        println!("{}", r.report_line());
+    }
+    // A full Fig. 7-style sweep point: 5 configs x 3 nets.
+    let nets = zoo::imagenet_benchmarks();
+    let r = bench.run("DSE point (3 nets x 5 random configs)", || {
+        let mut rng = Rng::new(9);
+        let mut acc = 0.0;
+        for net in &nets {
+            for _ in 0..5 {
+                let bits: Vec<u32> =
+                    (0..net.weight_layers()).map(|_| 2 + rng.below(7) as u32).collect();
+                let cfg = PrecisionConfig::from_bits("r", &bits);
+                acc += simulate(net, &cfg, &params).energy_j();
+            }
+        }
+        acc
+    });
+    println!("{}", r.report_line());
+
+    banner("L3 emulator hot path (bit-exact CAM pass application)");
+    let mut rng = Rng::new(3);
+    let a = rng.vec_below(1024, 256);
+    let b = rng.vec_below(1024, 256);
+    let r = bench.run("emulate_add 8b x 1024 words", || emulator::emulate_add(&a, &b, 8).0.len());
+    println!("{}", r.report_line());
+    let r = bench
+        .run("emulate_multiply 8b x 1024 words", || emulator::emulate_multiply(&a, &b, 8, 8).0.len());
+    println!("{}", r.report_line());
+    let r = bench.run("emulate_reduce_2d 8b x 1024 words", || {
+        emulator::emulate_reduce_2d(&a, 8).0
+    });
+    println!("{}", r.report_line());
+
+    banner("Runtime hot path (PJRT execute, request-path floor)");
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        println!("artifacts missing — run `make artifacts` to include PJRT timings");
+        return;
+    }
+    use bf_imna::runtime::Runtime;
+    let rt = Runtime::load_configs(&dir, &["int8", "int4"]).expect("runtime");
+    let elems = rt.manifest().sample_elems();
+    let exec_bench = Bencher::new().samples(10).warmup(2);
+    for (config, batch) in [("int8", 1u64), ("int8", 8), ("int4", 1), ("int4", 8)] {
+        let input = vec![0.25f32; batch as usize * elems];
+        let name = format!("pjrt execute {config} b{batch}");
+        let r = exec_bench.run(&name, || rt.infer(config, batch, &input).unwrap().len());
+        println!(
+            "{}   ({:.1} samples/s)",
+            r.report_line(),
+            batch as f64 * r.throughput()
+        );
+    }
+}

@@ -1,0 +1,99 @@
+//! Bench: regenerate Table I (AP runtime models) and validate the analytic
+//! formulas against the functional bit-exact emulator (§IV's
+//! "microbenchmark, consisting of random vectors/matrices, was used to
+//! validate the proposed mathematical models").
+
+use bf_imna::ap::{complexity::Function, emulator, runtime_model as rt, ApKind};
+use bf_imna::util::benchkit::{banner, Bencher};
+use bf_imna::util::rng::Rng;
+use bf_imna::util::table::Table;
+
+fn main() {
+    banner("Table I — devised runtime of functions on APs (time units)");
+    let (m, l, s, k, i, j, u) = (8u32, 256u64, 4u64, 16u64, 8u64, 64u64, 8u64);
+    println!("M={m}, L={l}, S={s}, K={k}, matmul {i}x{j} by {j}x{u}\n");
+    let mut t = Table::new(vec!["function", "1D AP", "2D AP (no seg)", "2D AP (seg)"]);
+    let rows: Vec<(&str, Box<dyn Fn(ApKind) -> u64>)> = vec![
+        ("Addition", Box::new(move |kd| rt::add(m, l, kd).events.time_units())),
+        ("Multiplication", Box::new(move |kd| rt::multiply(m, m, l, kd).events.time_units())),
+        ("Reduction", Box::new(move |kd| rt::reduce(m, l, kd).events.time_units())),
+        (
+            "Matrix-Matrix Mult.",
+            Box::new(move |kd| rt::matmat(m, m, i, j, u, kd).events.time_units()),
+        ),
+        ("ReLU", Box::new(move |kd| rt::relu(m, l, kd).events.time_units())),
+        ("Max Pooling", Box::new(move |kd| rt::maxpool(m, s, k, kd).events.time_units())),
+        ("Average Pooling", Box::new(move |kd| rt::avgpool(m, s, k, kd).events.time_units())),
+    ];
+    for (name, f) in &rows {
+        t.row(vec![
+            name.to_string(),
+            f(ApKind::OneD).to_string(),
+            f(ApKind::TwoD).to_string(),
+            f(ApKind::TwoDSeg).to_string(),
+        ]);
+    }
+    print!("{}", t.render());
+
+    banner("Emulator validation (bit-exact CAM vs analytic pass counts)");
+    let mut rng = Rng::new(42);
+    let mut t = Table::new(vec!["function", "M", "emulated", "analytic", "match"]);
+    let mut all_ok = true;
+    for m in [2usize, 4, 8] {
+        let a = rng.vec_below(128, 1 << m);
+        let b = rng.vec_below(128, 1 << m);
+        let cases: Vec<(&str, u64, u64)> = vec![
+            (
+                "addition",
+                emulator::emulate_add(&a, &b, m).1.events().compares,
+                rt::add(m as u32, 256, ApKind::TwoD).events.compares,
+            ),
+            (
+                "multiplication",
+                emulator::emulate_multiply(&a, &b, m, m).1.events().compares,
+                // +M: the emulator's explicit carry-flush passes.
+                rt::multiply(m as u32, m as u32, 256, ApKind::TwoD).events.compares + m as u64,
+            ),
+            (
+                "relu",
+                {
+                    let v: Vec<i64> = a.iter().map(|&x| x as i64 - (1 << (m - 1))).collect();
+                    emulator::emulate_relu(&v, m).1.events().compares
+                },
+                rt::relu(m as u32, 128, ApKind::TwoD).events.compares,
+            ),
+        ];
+        for (name, emu, model) in cases {
+            let ok = emu == model;
+            all_ok &= ok;
+            t.row(vec![
+                name.to_string(),
+                m.to_string(),
+                emu.to_string(),
+                model.to_string(),
+                if ok { "yes" } else { "NO" }.to_string(),
+            ]);
+        }
+    }
+    print!("{}", t.render());
+    assert!(all_ok, "emulator diverged from the analytic models");
+
+    banner("Timing (model evaluation + emulator throughput)");
+    let bench = Bencher::new().samples(20);
+    let r = bench.run("analytic: all 7 functions x 3 kinds", || {
+        let mut acc = 0u64;
+        for f in Function::ALL {
+            for kd in ApKind::ALL {
+                acc = acc.wrapping_add(f.dominant_term(kd, 8, 256, 4, 16, 8, 8) as u64);
+            }
+        }
+        acc
+    });
+    println!("{}", r.report_line());
+    let a = rng.vec_below(256, 256);
+    let b = rng.vec_below(256, 256);
+    let r = bench.run("emulator: 8b x 8b multiply over 256 words", || {
+        emulator::emulate_multiply(&a, &b, 8, 8).0.len()
+    });
+    println!("{}", r.report_line());
+}

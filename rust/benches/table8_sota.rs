@@ -1,0 +1,98 @@
+//! Bench: regenerate Table VIII + Fig. 9 — BF-IMNA peak rows (modeled from
+//! the AP cost model) against the published SOTA accelerator records, with
+//! the §V-C headline comparisons.
+
+use bf_imna::ap::tech::Tech;
+use bf_imna::baselines::{peak, record, sota_records, PAPER_BF_ROWS};
+use bf_imna::util::benchkit::{banner, Bencher};
+use bf_imna::util::table::{fmt_eng, fmt_ratio, Table};
+
+fn main() {
+    banner("Table VIII — performance comparison with SOTA frameworks");
+    let mut t = Table::new(vec!["framework", "technology", "bits", "GOPS", "GOPS/W"]);
+    for r in sota_records() {
+        t.row(vec![
+            r.name.to_string(),
+            r.technology.to_string(),
+            r.precision.to_string(),
+            fmt_eng(r.gops, 4),
+            fmt_eng(r.gops_per_w, 4),
+        ]);
+    }
+    for row in peak::bf_imna_rows() {
+        t.row(vec![
+            format!("BF-IMNA_{}b (modeled)", row.precision),
+            "CMOS (16nm)".to_string(),
+            row.precision.to_string(),
+            fmt_eng(row.gops, 4),
+            fmt_eng(row.gops_per_w, 4),
+        ]);
+    }
+    print!("{}", t.render());
+
+    banner("Model vs published BF-IMNA rows");
+    let mut t = Table::new(vec!["bits", "GOPS model", "GOPS paper", "err", "GOPS/W model", "GOPS/W paper", "err"]);
+    for (modeled, paper) in peak::bf_imna_rows().iter().zip(PAPER_BF_ROWS.iter()) {
+        let (eg, ee) = peak::relative_error(modeled, paper);
+        t.row(vec![
+            modeled.precision.to_string(),
+            fmt_eng(modeled.gops, 4),
+            fmt_eng(paper.gops, 4),
+            format!("{:+.0}%", 100.0 * eg),
+            fmt_eng(modeled.gops_per_w, 4),
+            fmt_eng(paper.gops_per_w, 4),
+            format!("{:+.0}%", 100.0 * ee),
+        ]);
+    }
+    print!("{}", t.render());
+
+    banner("§V-C headline comparisons");
+    let bf16 = peak::peak_row(16, &Tech::sram());
+    let bf8 = peak::peak_row(8, &Tech::sram());
+    let isaac = record("ISAAC");
+    let pipe = record("PipeLayer");
+    let puma = record("PUMA");
+    let h100 = record("H100 GPU");
+    println!(
+        "16b vs ISAAC:     {} throughput (paper 1.02x), {} lower efficiency (paper 3.66x)",
+        fmt_ratio(bf16.gops / isaac.gops),
+        fmt_ratio(isaac.gops_per_w / bf16.gops_per_w)
+    );
+    println!(
+        "16b vs PipeLayer: {} lower throughput (paper 2.95x), {} higher efficiency (paper 1.19x)",
+        fmt_ratio(pipe.gops / bf16.gops),
+        fmt_ratio(bf16.gops_per_w / pipe.gops_per_w)
+    );
+    println!(
+        "16b vs PUMA:      {} lower throughput (paper 1.26x), {} lower efficiency (paper 4.95x)",
+        fmt_ratio(puma.gops / bf16.gops),
+        fmt_ratio(puma.gops_per_w / bf16.gops_per_w)
+    );
+    let h100_eamm = h100.gops_per_w / h100.area_mm2.unwrap();
+    println!(
+        "8b vs H100:       {} better GOPS/W/mm2 (paper ~2.7x: 8 vs 3)",
+        fmt_ratio(bf8.gops_per_w_mm2() / h100_eamm)
+    );
+    assert!(bf8.gops > isaac.gops && bf8.gops_per_w > isaac.gops_per_w);
+    assert!(bf8.gops > pipe.gops && bf8.gops_per_w > pipe.gops_per_w);
+
+    banner("Fig. 9 — GOPS vs GOPS/W scatter (all frameworks)");
+    let mut t = Table::new(vec!["framework", "GOPS", "GOPS/W"]);
+    let mut points: Vec<(String, f64, f64)> = sota_records()
+        .iter()
+        .map(|r| (r.name.to_string(), r.gops, r.gops_per_w))
+        .collect();
+    for row in peak::bf_imna_rows() {
+        points.push((format!("BF-IMNA_{}b", row.precision), row.gops, row.gops_per_w));
+    }
+    points.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    for (name, gops, gpw) in points {
+        t.row(vec![name, fmt_eng(gops, 4), fmt_eng(gpw, 4)]);
+    }
+    print!("{}", t.render());
+
+    banner("Timing");
+    let bench = Bencher::new().samples(30);
+    let r = bench.run("peak model (3 rows)", || peak::bf_imna_rows().len());
+    println!("{}", r.report_line());
+}

@@ -1,0 +1,157 @@
+//! Table II — asymptotic complexity classes of the AP functions.
+//!
+//! These are used as *oracles* in tests: the measured growth of the
+//! closed-form runtime models (`runtime_model`) must match the dominant
+//! term of the corresponding Table II entry.
+
+use super::{clog2, ApKind};
+
+/// The seven functions of Tables I & II.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Function {
+    Addition,
+    Multiplication,
+    Reduction,
+    MatMat,
+    Relu,
+    MaxPooling,
+    AveragePooling,
+}
+
+impl Function {
+    /// All functions, Table I row order.
+    pub const ALL: [Function; 7] = [
+        Function::Addition,
+        Function::Multiplication,
+        Function::Reduction,
+        Function::MatMat,
+        Function::Relu,
+        Function::MaxPooling,
+        Function::AveragePooling,
+    ];
+
+    /// Row label used in regenerated tables.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Function::Addition => "Addition",
+            Function::Multiplication => "Multiplication",
+            Function::Reduction => "Reduction",
+            Function::MatMat => "Matrix-Matrix Multiplication",
+            Function::Relu => "ReLU",
+            Function::MaxPooling => "Max Pooling",
+            Function::AveragePooling => "Average Pooling",
+        }
+    }
+
+    /// Table II complexity string for a given AP kind.
+    pub fn complexity(&self, kind: ApKind) -> &'static str {
+        use ApKind::*;
+        use Function::*;
+        match (self, kind) {
+            (Addition, _) => "O(M)",
+            (Multiplication, _) => "O(M) + O(M^2)",
+            (Reduction, OneD) => "O(M) + O(M log2(L)) + O(L)",
+            (Reduction, TwoD) => "O(M) + O(L)",
+            (Reduction, TwoDSeg) => "O(M) + O(log2(L))",
+            (MatMat, OneD) => "O(M) + O(M^2) + O(M log2(j)) + O(i*u*j)",
+            (MatMat, TwoD) => "O(M) + O(M^2) + O(i*u*j)",
+            (MatMat, TwoDSeg) => "O(M) + O(M^2) + O(log2(j))",
+            (Relu, _) => "O(M)",
+            (MaxPooling, OneD) => "O(M) + O(M log2(S)) + O(S*K)",
+            (MaxPooling, TwoD) => "O(M) + O(S*K)",
+            (MaxPooling, TwoDSeg) => "O(M) + O(log2(S)) + O(K log2(S))",
+            (AveragePooling, OneD) => "O(M) + O(S*K) + O(M log2(S))",
+            (AveragePooling, TwoD) => "O(M) + O(S*K)",
+            (AveragePooling, TwoDSeg) => "O(M) + O(log2(S))",
+        }
+    }
+
+    /// Dominant-term estimator for large inputs: the expected leading-order
+    /// runtime as a function of (M, L-or-j, S, K, i, u). Used by growth
+    /// tests to check the runtime models scale like Table II says.
+    pub fn dominant_term(&self, kind: ApKind, m: u64, l: u64, s: u64, k: u64, i: u64, u: u64) -> f64 {
+        use ApKind::*;
+        use Function::*;
+        let lg = |x: u64| clog2(x.max(1)) as f64;
+        match (self, kind) {
+            (Addition, _) | (Relu, _) => m as f64,
+            (Multiplication, _) => (m * m) as f64,
+            (Reduction, OneD) => m as f64 * lg(l) + l as f64,
+            (Reduction, TwoD) => l as f64,
+            (Reduction, TwoDSeg) => m as f64 + lg(l),
+            (MatMat, OneD) => (m * m) as f64 + (i * u * l) as f64,
+            (MatMat, TwoD) => (m * m) as f64 + (i * u * l) as f64,
+            (MatMat, TwoDSeg) => (m * m) as f64 + lg(l),
+            (MaxPooling, OneD) => m as f64 * lg(s) + (s * k) as f64,
+            (MaxPooling, TwoD) => (s * k) as f64,
+            (MaxPooling, TwoDSeg) => m as f64 + k as f64 * lg(s),
+            (AveragePooling, OneD) => m as f64 * lg(s) + (s * k) as f64,
+            (AveragePooling, TwoD) => (s * k) as f64,
+            (AveragePooling, TwoDSeg) => m as f64 + lg(s),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ap::runtime_model as rt;
+
+    /// The measured runtime ratio when doubling the dominant parameter must
+    /// approach the dominant-term prediction (within 30%).
+    fn assert_growth(model: impl Fn(u64) -> u64, oracle: impl Fn(u64) -> f64, base: u64) {
+        let (r1, r2) = (model(base), model(base * 4));
+        let (o1, o2) = (oracle(base), oracle(base * 4));
+        let measured = r2 as f64 / r1 as f64;
+        let expected = o2 / o1;
+        assert!(
+            (measured / expected - 1.0).abs() < 0.3,
+            "growth mismatch: measured {measured:.2} vs expected {expected:.2}"
+        );
+    }
+
+    #[test]
+    fn reduction_2d_grows_linearly_in_l() {
+        assert_growth(
+            |l| rt::reduce(8, l, ApKind::TwoD).events.time_units(),
+            |l| Function::Reduction.dominant_term(ApKind::TwoD, 8, l, 0, 0, 0, 0),
+            4096,
+        );
+    }
+
+    #[test]
+    fn reduction_2dseg_grows_logarithmically_in_l() {
+        let r1 = rt::reduce(8, 1 << 10, ApKind::TwoDSeg).events.time_units();
+        let r2 = rt::reduce(8, 1 << 20, ApKind::TwoDSeg).events.time_units();
+        // Log growth: doubling the exponent adds ~8*10 units, far from 1024x.
+        assert!(r2 < r1 * 3, "r1={r1} r2={r2}");
+    }
+
+    #[test]
+    fn multiplication_grows_quadratically_in_m() {
+        assert_growth(
+            |m| rt::multiply(m as u32, m as u32, 64, ApKind::TwoD).events.time_units(),
+            |m| (m * m) as f64,
+            8,
+        );
+    }
+
+    #[test]
+    fn matmat_2d_grows_linearly_in_iuj() {
+        assert_growth(
+            |j| rt::matmat(8, 8, 8, j, 8, ApKind::TwoD).events.time_units(),
+            |j| Function::MatMat.dominant_term(ApKind::TwoD, 8, j, 0, 0, 8, 8),
+            512,
+        );
+    }
+
+    #[test]
+    fn complexity_strings_cover_all() {
+        for f in Function::ALL {
+            for k in ApKind::ALL {
+                assert!(f.complexity(k).starts_with("O("));
+            }
+            assert!(!f.label().is_empty());
+        }
+    }
+}

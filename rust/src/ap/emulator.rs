@@ -1,0 +1,652 @@
+//! Functional bit-serial CAM emulator.
+//!
+//! This is the reproduction of the paper's §IV microbenchmark: "We used
+//! Python to emulate the AP functionally executing the micro/macro/CNN
+//! functions. A microbenchmark, consisting of random vectors/matrices, was
+//! used to validate the proposed mathematical models."
+//!
+//! The emulator holds an actual bit matrix and executes the LUT pass
+//! sequences of [`super::luts`] compare/write phase by phase — horizontal
+//! operations are **bit-exact** (every compare searches every occupied row,
+//! every write updates exactly the matched rows) while counting each
+//! compare / write / read event. Vertical (row-pair) operations compute the
+//! row arithmetic directly and charge the event counts the paper's model
+//! charges (4 compares + 4 writes per row-pair addition), because the
+//! paper does not specify a pass-level vertical LUT (its cited 2D-AP design
+//! handles inter-column carry movement in the write drivers).
+//!
+//! Exact event-count formulas of this emulator (validated in tests, and
+//! printed next to Table I's models by `benches/table1_runtime_validation`):
+//!
+//! | op           | emulator compares   | Table I model | difference       |
+//! |--------------|---------------------|---------------|------------------|
+//! | add          | `4M`                | `4M`          | exact            |
+//! | multiply     | `Mw(4Ma + 1)`       | `4·Ma·Mw`     | `+Mw` carry flush|
+//! | ReLU         | `M - 1`             | `M - 1`       | exact            |
+//! | max (1 step) | `4M`                | `4M`          | exact            |
+//! | reduce 2D    | `4M + 4(L/2 - 1)`   | same          | exact            |
+
+use super::luts::{self, Pass};
+use super::Events;
+
+/// Event counters accumulated by an emulator run.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct Counters {
+    pub compares: u64,
+    pub writes: u64,
+    pub reads: u64,
+}
+
+impl Counters {
+    /// Convert to the shared [`Events`] type for model comparison.
+    pub fn events(&self) -> Events {
+        Events::new(self.compares, self.writes, self.reads)
+    }
+}
+
+/// A content-addressable memory holding `rows x cols` bits plus per-run
+/// event counters. Row 0..`rows` are the occupied words.
+///
+/// Storage is **column-major bitmaps** (one `u64` packs 64 rows of one bit
+/// column), so a LUT pass — the emulator's hot loop — is a handful of
+/// word-parallel AND/OR operations per column instead of a per-row boolean
+/// scan. This mirrors the hardware (a compare drives every row's sense amp
+/// simultaneously) and made the 8b x 8b multiply over 1024 words ~40x
+/// faster (see EXPERIMENTS.md §Perf).
+#[derive(Debug, Clone)]
+pub struct Cam {
+    rows: usize,
+    cols: usize,
+    /// Words (u64 groups of rows) per column.
+    words: usize,
+    /// Bitmap mask of the occupied rows in the last word.
+    tail_mask: u64,
+    /// `cols x words` column bitmaps.
+    data: Vec<u64>,
+    /// Match tags of the last compare (bitmap over rows).
+    tags: Vec<u64>,
+    pub counters: Counters,
+}
+
+impl Cam {
+    /// Create an all-zero CAM.
+    pub fn new(rows: usize, cols: usize) -> Self {
+        let words = rows.div_ceil(64).max(1);
+        let rem = rows % 64;
+        let tail_mask = if rem == 0 { u64::MAX } else { (1u64 << rem) - 1 };
+        Self {
+            rows,
+            cols,
+            words,
+            tail_mask,
+            data: vec![0; cols * words],
+            tags: vec![0; words],
+            counters: Counters::default(),
+        }
+    }
+
+    /// Number of word rows.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Number of bit columns.
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    fn cw(&self, c: usize, r: usize) -> (usize, u64) {
+        debug_assert!(r < self.rows && c < self.cols, "({r},{c}) out of {}x{}", self.rows, self.cols);
+        (c * self.words + r / 64, 1u64 << (r % 64))
+    }
+
+    /// Read one bit (no event charged — testing/debug accessor).
+    pub fn get(&self, r: usize, c: usize) -> bool {
+        let (i, m) = self.cw(c, r);
+        self.data[i] & m != 0
+    }
+
+    /// Set one bit (no event charged — testing/debug accessor).
+    pub fn set(&mut self, r: usize, c: usize, v: bool) {
+        let (i, m) = self.cw(c, r);
+        if v {
+            self.data[i] |= m;
+        } else {
+            self.data[i] &= !m;
+        }
+    }
+
+    /// Bit-sequential column write: one write event, drives all rows.
+    pub fn write_column(&mut self, col: usize, data: &[bool]) {
+        assert!(data.len() <= self.rows);
+        for (r, &b) in data.iter().enumerate() {
+            self.set(r, col, b);
+        }
+        self.counters.writes += 1;
+    }
+
+    /// Bit-sequential column read: one read event.
+    pub fn read_column(&mut self, col: usize) -> Vec<bool> {
+        self.counters.reads += 1;
+        (0..self.rows).map(|r| self.get(r, col)).collect()
+    }
+
+    /// Word-sequential read of `bits` columns of one row: one read event.
+    pub fn read_word(&mut self, row: usize, offset: usize, bits: usize) -> u64 {
+        self.counters.reads += 1;
+        self.word_at(row, offset, bits)
+    }
+
+    /// Raw (uncharged) word extraction, LSB at `offset`.
+    pub fn word_at(&self, row: usize, offset: usize, bits: usize) -> u64 {
+        let mut v = 0u64;
+        for b in 0..bits {
+            if self.get(row, offset + b) {
+                v |= 1 << b;
+            }
+        }
+        v
+    }
+
+    /// Raw (uncharged) word store, LSB at `offset`.
+    pub fn store_word(&mut self, row: usize, offset: usize, bits: usize, value: u64) {
+        for b in 0..bits {
+            self.set(row, offset + b, value >> b & 1 == 1);
+        }
+    }
+
+    /// Word-sequential write of one row: one write event.
+    pub fn write_word(&mut self, row: usize, offset: usize, bits: usize, value: u64) {
+        self.store_word(row, offset, bits, value);
+        self.counters.writes += 1;
+    }
+
+    /// One horizontal LUT pass: compare the key pattern (bound through
+    /// `slot_cols`) across all rows, then write the pass's updates into the
+    /// matched rows. Charges 1 compare + 1 write (the write phase is part of
+    /// the fixed schedule whether or not any row matched — matching the
+    /// paper's runtime accounting). Word-parallel: each key term is one
+    /// AND (or AND-NOT) over the column bitmap; each write term one OR /
+    /// AND-NOT under the tag mask.
+    pub fn apply_pass(&mut self, pass: &Pass, slot_cols: &[usize]) {
+        let words = self.words;
+        // Compare phase: tags = AND over key columns (complemented for 0s).
+        self.tags[..words].fill(u64::MAX);
+        self.tags[words - 1] = self.tail_mask;
+        for &(slot, bit) in pass.key {
+            let base = slot_cols[slot] * words;
+            if bit {
+                for w in 0..words {
+                    self.tags[w] &= self.data[base + w];
+                }
+            } else {
+                for w in 0..words {
+                    self.tags[w] &= !self.data[base + w];
+                }
+            }
+        }
+        self.counters.compares += 1;
+        // Write phase: masked set/clear on the target columns.
+        for &(slot, bit) in pass.write {
+            let base = slot_cols[slot] * words;
+            if bit {
+                for w in 0..words {
+                    self.data[base + w] |= self.tags[w];
+                }
+            } else {
+                for w in 0..words {
+                    self.data[base + w] &= !self.tags[w];
+                }
+            }
+        }
+        self.counters.writes += 1;
+    }
+
+    /// Apply a whole pass group with the same slot binding.
+    pub fn apply_passes(&mut self, passes: &[Pass], slot_cols: &[usize]) {
+        for p in passes {
+            self.apply_pass(p, slot_cols);
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Population helpers
+    // ------------------------------------------------------------------
+
+    /// Populate a field of `bits` columns at `offset` from unsigned values,
+    /// one per row, bit-sequentially (`bits` write events).
+    pub fn populate_field(&mut self, offset: usize, bits: usize, values: &[u64]) {
+        assert!(values.len() <= self.rows);
+        for b in 0..bits {
+            let col: Vec<bool> = values.iter().map(|v| v >> b & 1 == 1).collect();
+            self.write_column(offset + b, &col);
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Horizontal (bit-exact) operations
+    // ------------------------------------------------------------------
+
+    /// In-place addition `B += A` over all rows. `A` occupies `m` columns at
+    /// `a_off`; `B` occupies `m + 1` columns at `b_off` whose MSB column
+    /// (`b_off + m`) doubles as the carry column and must start zeroed.
+    /// Charges exactly `4m` compares + `4m` writes.
+    pub fn add_inplace(&mut self, a_off: usize, b_off: usize, m: usize) {
+        let carry = b_off + m;
+        for i in 0..m {
+            self.apply_passes(luts::ADD_LUT, &[carry, a_off + i, b_off + i]);
+        }
+    }
+
+    /// Out-of-place multiplication `C = A * B` over all rows. `A`: `ma` bits
+    /// at `a_off`; `B`: `mb` bits at `b_off`; `C`: `ma + mb` zeroed columns
+    /// at `c_off`; `carry_col` is a zeroed scratch column. Charges exactly
+    /// `mb * (4*ma + 1)` compares/writes (`4·Ma·Mw` model + `Mw` carry
+    /// flushes).
+    pub fn multiply(&mut self, a_off: usize, ma: usize, b_off: usize, mb: usize, c_off: usize, carry_col: usize) {
+        for j in 0..mb {
+            let gate = b_off + j;
+            for i in 0..ma {
+                self.apply_passes(luts::MUL_GATED_ADD_LUT, &[gate, carry_col, a_off + i, c_off + i + j]);
+            }
+            // Deposit the remaining carry into C[ma + j] (guaranteed 0).
+            self.apply_passes(luts::MUL_CARRY_FLUSH, &[gate, carry_col, c_off + ma + j]);
+        }
+    }
+
+    /// ReLU over all rows of a signed two's-complement field of `m` bits at
+    /// `offset`, using `flag_col` as the sign-flag column. Implements the
+    /// Eq. (15) schedule: read MSB column (1 read), write it to the flag
+    /// column and reset the MSB (2 writes), then one Table III pass per
+    /// remaining bit (`m - 1` compares + `m - 1` writes).
+    pub fn relu(&mut self, offset: usize, m: usize, flag_col: usize) {
+        let msb = self.read_column(offset + m - 1);
+        self.write_column(flag_col, &msb);
+        let zeros = vec![false; self.rows];
+        self.write_column(offset + m - 1, &zeros);
+        for i in (0..m - 1).rev() {
+            self.apply_passes(luts::RELU_LUT, &[offset + i, flag_col]);
+        }
+    }
+
+    /// One in-place max step `B = max(A, B)` (unsigned) over all rows,
+    /// MSB -> LSB per Table IV. `f1_col`/`f2_col` are zeroed flag columns.
+    /// Charges `4m` compares + `4m` writes, plus 2 writes to reset flags.
+    pub fn max_inplace(&mut self, a_off: usize, b_off: usize, m: usize, f1_col: usize, f2_col: usize) {
+        for i in (0..m).rev() {
+            self.apply_passes(luts::MAX_LUT, &[a_off + i, b_off + i, f1_col, f2_col]);
+        }
+        let zeros = vec![false; self.rows];
+        self.write_column(f1_col, &zeros);
+        self.write_column(f2_col, &zeros);
+    }
+
+    // ------------------------------------------------------------------
+    // Vertical (event-faithful) operations
+    // ------------------------------------------------------------------
+
+    /// Vertical in-place addition between two rows: `row_b[field] +=
+    /// row_a[field]` where the field is `bits` wide at `offset` (result must
+    /// fit — callers allocate the grown width). Charges the model's 4
+    /// compares + 4 writes.
+    pub fn add_rows(&mut self, row_a: usize, row_b: usize, offset: usize, bits: usize) {
+        let a = self.word_at(row_a, offset, bits);
+        let b = self.word_at(row_b, offset, bits);
+        self.store_word(row_b, offset, bits, a.wrapping_add(b));
+        self.counters.compares += 4;
+        self.counters.writes += 4;
+    }
+
+    /// Vertical in-place max between two rows (`row_b = max(row_a, row_b)`),
+    /// charging Table IV's 4 compares + 4 writes + 2 flag-reset writes.
+    pub fn max_rows(&mut self, row_a: usize, row_b: usize, offset: usize, bits: usize) {
+        let a = self.word_at(row_a, offset, bits);
+        let b = self.word_at(row_b, offset, bits);
+        self.store_word(row_b, offset, bits, a.max(b));
+        self.counters.compares += 4;
+        self.counters.writes += 4 + 2;
+    }
+}
+
+// ----------------------------------------------------------------------
+// High-level drivers mirroring the Table I operations end to end.
+// ----------------------------------------------------------------------
+
+/// Emulate Eq. (1): element-wise `b[k] += a[k]` over vectors of `m`-bit
+/// unsigned values. Returns the sums and the exact event counters.
+pub fn emulate_add(a: &[u64], b: &[u64], m: usize) -> (Vec<u64>, Counters) {
+    assert_eq!(a.len(), b.len());
+    // Layout: A [0, m), B [m, 2m + 1) with carry/MSB at column 2m.
+    let mut cam = Cam::new(a.len(), 2 * m + 1);
+    cam.populate_field(0, m, a);
+    cam.populate_field(m, m, b);
+    cam.add_inplace(0, m, m);
+    let mut out = vec![0u64; a.len()];
+    for bit in 0..=m {
+        let col = cam.read_column(m + bit);
+        for (r, &v) in col.iter().enumerate() {
+            if v {
+                out[r] |= 1 << bit;
+            }
+        }
+    }
+    (out, cam.counters)
+}
+
+/// Emulate Eq. (2): element-wise `c[k] = a[k] * b[k]` over `ma`/`mb`-bit
+/// unsigned vectors. Returns products and counters.
+pub fn emulate_multiply(a: &[u64], b: &[u64], ma: usize, mb: usize) -> (Vec<u64>, Counters) {
+    assert_eq!(a.len(), b.len());
+    // Layout: A [0, ma), B [ma, ma+mb), C [ma+mb, 2(ma+mb)), carry at end.
+    let c_off = ma + mb;
+    let mut cam = Cam::new(a.len(), 2 * (ma + mb) + 1);
+    cam.populate_field(0, ma, a);
+    cam.populate_field(ma, mb, b);
+    cam.multiply(0, ma, ma, mb, c_off, 2 * (ma + mb));
+    let mut out = vec![0u64; a.len()];
+    for bit in 0..ma + mb {
+        let col = cam.read_column(c_off + bit);
+        for (r, &v) in col.iter().enumerate() {
+            if v {
+                out[r] |= 1 << bit;
+            }
+        }
+    }
+    (out, cam.counters)
+}
+
+/// Emulate Eq. (15): ReLU over a vector of signed `m`-bit values (two's
+/// complement). Returns max(v, 0) per element and counters.
+pub fn emulate_relu(v: &[i64], m: usize) -> (Vec<i64>, Counters) {
+    let mask = (1u64 << m) - 1;
+    let enc: Vec<u64> = v.iter().map(|&x| (x as u64) & mask).collect();
+    let mut cam = Cam::new(v.len(), m + 1);
+    cam.populate_field(0, m, &enc);
+    cam.relu(0, m, m);
+    let mut out = vec![0i64; v.len()];
+    for bit in 0..m {
+        let col = cam.read_column(bit);
+        for (r, &b) in col.iter().enumerate() {
+            if b {
+                out[r] |= 1 << bit;
+            }
+        }
+    }
+    (out, cam.counters)
+}
+
+/// Emulate the horizontal step of Eq. (13): `b[k] = max(a[k], b[k])` over
+/// unsigned `m`-bit vectors. Returns maxima and counters.
+pub fn emulate_max(a: &[u64], b: &[u64], m: usize) -> (Vec<u64>, Counters) {
+    assert_eq!(a.len(), b.len());
+    // Layout: A [0, m), B [m, 2m), F1 = 2m, F2 = 2m + 1.
+    let mut cam = Cam::new(a.len(), 2 * m + 2);
+    cam.populate_field(0, m, a);
+    cam.populate_field(m, m, b);
+    cam.max_inplace(0, m, m, 2 * m, 2 * m + 1);
+    let mut out = vec![0u64; a.len()];
+    for bit in 0..m {
+        let col = cam.read_column(m + bit);
+        for (r, &v) in col.iter().enumerate() {
+            if v {
+                out[r] |= 1 << bit;
+            }
+        }
+    }
+    (out, cam.counters)
+}
+
+/// Emulate Eq. (4): 2D-AP reduction of `l` unsigned `m`-bit values (`l`
+/// even, two per row). Returns the total and counters.
+pub fn emulate_reduce_2d(values: &[u64], m: usize) -> (u64, Counters) {
+    assert!(values.len() >= 2 && values.len() % 2 == 0);
+    let l = values.len();
+    let pairs = l / 2;
+    let out_bits = m + super::clog2(l as u64) as usize;
+    // Layout: A [0, m), B [m, m + out_bits) — B's top columns take the
+    // horizontal carry and the vertical growth.
+    let mut cam = Cam::new(pairs, m + out_bits);
+    let a: Vec<u64> = values.iter().step_by(2).copied().collect();
+    let b: Vec<u64> = values.iter().skip(1).step_by(2).copied().collect();
+    cam.populate_field(0, m, &a);
+    cam.populate_field(m, m, &b);
+    // Horizontal in-place add: B += A (4m compares + 4m writes).
+    cam.add_inplace(0, m, m);
+    // Vertical: fold rows 1..pairs into row 0 sequentially (pairs-1 adds).
+    for r in 1..pairs {
+        cam.add_rows(r, 0, m, out_bits);
+    }
+    let total = cam.read_word(0, m, out_bits);
+    (total, cam.counters)
+}
+
+/// Emulate Eq. (7): 2D-AP matrix-matrix multiplication `A(i x j) * B(j x u)`
+/// of unsigned `m`-bit elements. Returns the `i x u` output (row-major) and
+/// counters. One CAM row per (ii, jj, uu) product triple, as in §III-B.
+pub fn emulate_matmat_2d(
+    a: &[Vec<u64>],
+    b: &[Vec<u64>],
+    m: usize,
+) -> (Vec<Vec<u64>>, Counters) {
+    let i = a.len();
+    let j = b.len();
+    let u = b[0].len();
+    assert!(a.iter().all(|row| row.len() == j));
+    let words = i * j * u;
+    let prod_bits = 2 * m;
+    let out_bits = prod_bits + super::clog2(j as u64) as usize;
+    // Layout: A [0,m), B [m,2m), C [2m, 2m+out_bits), carry at end.
+    let c_off = 2 * m;
+    let mut cam = Cam::new(words, c_off + out_bits + 1);
+    let mut av = vec![0u64; words];
+    let mut bv = vec![0u64; words];
+    for ii in 0..i {
+        for uu in 0..u {
+            for jj in 0..j {
+                let r = (ii * u + uu) * j + jj;
+                av[r] = a[ii][jj];
+                bv[r] = b[jj][uu];
+            }
+        }
+    }
+    cam.populate_field(0, m, &av);
+    cam.populate_field(m, m, &bv);
+    cam.multiply(0, m, m, m, c_off, c_off + out_bits);
+    // Vertical reduction within each group of j consecutive rows.
+    for g in 0..i * u {
+        let base = g * j;
+        for jj in 1..j {
+            cam.add_rows(base + jj, base, c_off, out_bits);
+        }
+    }
+    // Bit-sequential result read-out: out_bits column reads.
+    for bit in 0..out_bits {
+        let _ = cam.read_column(c_off + bit);
+    }
+    let mut out = vec![vec![0u64; u]; i];
+    for ii in 0..i {
+        for uu in 0..u {
+            out[ii][uu] = cam.word_at((ii * u + uu) * j, c_off, out_bits);
+        }
+    }
+    (out, cam.counters)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ap::runtime_model as rt;
+    use crate::ap::ApKind;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn add_is_bit_exact_and_matches_model() {
+        check("emulated add == scalar add", 64, |rng| {
+            let m = rng.range(2, 10);
+            let n = rng.range(1, 40);
+            let a = rng.vec_below(n, 1 << m);
+            let b = rng.vec_below(n, 1 << m);
+            let (out, counters) = emulate_add(&a, &b, m);
+            for k in 0..n {
+                if out[k] != a[k] + b[k] {
+                    return Err(format!("{} + {} gave {}", a[k], b[k], out[k]));
+                }
+            }
+            let model = rt::add(m as u32, 2 * n as u64, ApKind::TwoD).events;
+            if counters.events() != model {
+                return Err(format!("events {counters:?} != model {model:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn multiply_is_bit_exact() {
+        check("emulated mul == scalar mul", 48, |rng| {
+            let ma = rng.range(2, 8);
+            let mb = rng.range(2, 8);
+            let n = rng.range(1, 24);
+            let a = rng.vec_below(n, 1 << ma);
+            let b = rng.vec_below(n, 1 << mb);
+            let (out, counters) = emulate_multiply(&a, &b, ma, mb);
+            for k in 0..n {
+                if out[k] != a[k] * b[k] {
+                    return Err(format!("{} * {} gave {}", a[k], b[k], out[k]));
+                }
+            }
+            // Emulator = model + Mw carry-flush passes (see module docs).
+            let model = rt::multiply(ma as u32, mb as u32, 2 * n as u64, ApKind::TwoD).events;
+            let (ec, mc) = (counters.compares, model.compares);
+            if ec != mc + mb as u64 {
+                return Err(format!("compares {ec} != model {mc} + {mb}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn relu_is_bit_exact_and_matches_model() {
+        check("emulated relu == max(x,0)", 64, |rng| {
+            let m = rng.range(3, 12);
+            let n = rng.range(1, 40);
+            let half = 1i64 << (m - 1);
+            let v: Vec<i64> = (0..n).map(|_| rng.range_i64(-half, half - 1)).collect();
+            let (out, counters) = emulate_relu(&v, m);
+            for k in 0..n {
+                if out[k] != v[k].max(0) {
+                    return Err(format!("relu({}) gave {}", v[k], out[k]));
+                }
+            }
+            let model = rt::relu(m as u32, n as u64, ApKind::TwoD).events;
+            // Model charges M populate writes; emulator populated M columns.
+            if counters.events() != model {
+                return Err(format!("events {counters:?} != model {model:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn max_step_is_bit_exact() {
+        check("emulated max == scalar max", 64, |rng| {
+            let m = rng.range(2, 12);
+            let n = rng.range(1, 40);
+            let a = rng.vec_below(n, 1 << m);
+            let b = rng.vec_below(n, 1 << m);
+            let (out, counters) = emulate_max(&a, &b, m);
+            for k in 0..n {
+                if out[k] != a[k].max(b[k]) {
+                    return Err(format!("max({}, {}) gave {}", a[k], b[k], out[k]));
+                }
+            }
+            // 2m populate + 4m passes + 2 flag resets; m reads.
+            let expect = Counters {
+                compares: 4 * m as u64,
+                writes: 2 * m as u64 + 4 * m as u64 + 2,
+                reads: m as u64,
+            };
+            if counters != expect {
+                return Err(format!("counters {counters:?} != {expect:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn reduce_2d_is_exact_and_matches_model() {
+        check("emulated reduce == scalar sum", 48, |rng| {
+            let m = rng.range(2, 10);
+            let pairs = rng.range(1, 64);
+            let values = rng.vec_below(2 * pairs, 1 << m);
+            let (total, counters) = emulate_reduce_2d(&values, m);
+            let expect: u64 = values.iter().sum();
+            if total != expect {
+                return Err(format!("sum gave {total}, want {expect}"));
+            }
+            let model = rt::reduce(m as u32, 2 * pairs as u64, ApKind::TwoD).events;
+            if counters.events() != model {
+                return Err(format!("events {counters:?} != model {model:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn matmat_2d_is_exact() {
+        check("emulated matmat == scalar matmul", 24, |rng| {
+            let m = rng.range(2, 6);
+            let (i, j, u) = (rng.range(1, 5), rng.range(2, 7), rng.range(1, 5));
+            let a: Vec<Vec<u64>> = (0..i).map(|_| rng.vec_below(j, 1 << m)).collect();
+            let b: Vec<Vec<u64>> = (0..j).map(|_| rng.vec_below(u, 1 << m)).collect();
+            let (out, counters) = emulate_matmat_2d(&a, &b, m);
+            for ii in 0..i {
+                for uu in 0..u {
+                    let expect: u64 = (0..j).map(|jj| a[ii][jj] * b[jj][uu]).sum();
+                    if out[ii][uu] != expect {
+                        return Err(format!("O[{ii}][{uu}] = {} want {expect}", out[ii][uu]));
+                    }
+                }
+            }
+            // Emulator compares = model + m carry flushes (multiply part).
+            let model = rt::matmat(m as u32, m as u32, i as u64, j as u64, u as u64, ApKind::TwoD).events;
+            if counters.compares != model.compares + m as u64 {
+                return Err(format!("compares {} != model {} + {m}", counters.compares, model.compares));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn column_roundtrip() {
+        let mut cam = Cam::new(4, 3);
+        cam.write_column(1, &[true, false, true, false]);
+        assert_eq!(cam.read_column(1), vec![true, false, true, false]);
+        assert_eq!(cam.counters.writes, 1);
+        assert_eq!(cam.counters.reads, 1);
+    }
+
+    #[test]
+    fn word_roundtrip() {
+        let mut cam = Cam::new(2, 8);
+        cam.write_word(1, 0, 8, 0xA5);
+        assert_eq!(cam.read_word(1, 0, 8), 0xA5);
+    }
+
+    #[test]
+    fn pass_only_touches_matched_rows() {
+        let mut cam = Cam::new(3, 2);
+        // rows: (1,0), (0,0), (1,1)
+        cam.set(0, 0, true);
+        cam.set(2, 0, true);
+        cam.set(2, 1, true);
+        // Match col0 == 1 && col1 == 0 -> set col1 = 1.
+        let pass = Pass { name: "t", key: &[(0, true), (1, false)], write: &[(1, true)] };
+        cam.apply_pass(&pass, &[0, 1]);
+        assert!(cam.get(0, 1));
+        assert!(!cam.get(1, 1));
+        assert!(cam.get(2, 1)); // was already 1, untouched by key mismatch
+        assert_eq!(cam.counters.compares, 1);
+        assert_eq!(cam.counters.writes, 1);
+    }
+}

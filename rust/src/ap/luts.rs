@@ -1,0 +1,314 @@
+//! Compare/write pass tables (LUTs) for the AP operations.
+//!
+//! An AP executes an arithmetic/logical operation as an ordered sequence of
+//! *passes*; each pass is one **compare** (search for a key pattern across
+//! the selected columns/rows of all words) followed by one **write** (update
+//! the selected bits of every matched word). The pass tables below are the
+//! paper's LUTs: in-place addition and out-of-place multiplication follow
+//! Yantir's AP formulation (paper refs. [50], [51]); ReLU is Table III and
+//! max pooling is Table IV verbatim.
+//!
+//! Pass ordering matters: a pass must never produce a state that a *later*
+//! pass in the same group would match again (that would double-apply the
+//! LUT). The orderings below are hazard-free; `ap::emulator` tests verify
+//! this bit-exactly against scalar arithmetic, and the unit tests here check
+//! every LUT against its truth table.
+
+/// One compare/write pass. `key` lists `(slot, bit)` requirements over the
+/// operand slots bound by the caller; `write` lists the `(slot, bit)`
+/// updates applied to every matched word.
+#[derive(Debug, Clone, Copy)]
+pub struct Pass {
+    pub name: &'static str,
+    pub key: &'static [(usize, bool)],
+    pub write: &'static [(usize, bool)],
+}
+
+/// Slots for [`ADD_LUT`]: 0 = carry, 1 = A_i (augend bit, unchanged),
+/// 2 = B_i (in-place sum bit).
+pub const ADD_SLOT_CARRY: usize = 0;
+/// Augend bit slot.
+pub const ADD_SLOT_A: usize = 1;
+/// In-place sum bit slot.
+pub const ADD_SLOT_B: usize = 2;
+
+/// In-place addition `B += A` full-adder LUT (4 passes per bit position).
+///
+/// Truth table of (carry, a, b) -> (carry', sum): only four input states
+/// require a write; they are ordered so no pass re-matches a prior pass's
+/// output (e.g. `(0,1,1)->(1,0)` must precede `(0,1,0)->(0,1)` because the
+/// latter's output `(0,1,1)` is the former's key).
+pub const ADD_LUT: &[Pass] = &[
+    Pass { name: "add.p2", key: &[(0, false), (1, true), (2, true)], write: &[(0, true), (2, false)] },
+    Pass { name: "add.p1", key: &[(0, false), (1, true), (2, false)], write: &[(2, true)] },
+    Pass { name: "add.p3", key: &[(0, true), (1, false), (2, false)], write: &[(0, false), (2, true)] },
+    Pass { name: "add.p4", key: &[(0, true), (1, false), (2, true)], write: &[(2, false)] },
+];
+
+/// Slots for [`MUL_GATED_ADD_LUT`]: 0 = gate (multiplier bit B_j, unchanged),
+/// 1 = carry, 2 = A_i (multiplicand bit, unchanged), 3 = C_{i+j} (product
+/// accumulator bit, in-place).
+pub const MUL_SLOT_GATE: usize = 0;
+/// Carry slot of the gated adder.
+pub const MUL_SLOT_CARRY: usize = 1;
+/// Multiplicand bit slot.
+pub const MUL_SLOT_A: usize = 2;
+/// Product accumulator bit slot.
+pub const MUL_SLOT_C: usize = 3;
+
+/// Gated in-place addition used by bit-serial multiplication: identical to
+/// [`ADD_LUT`] but each key additionally requires the multiplier bit
+/// (gate) to be 1, so only words whose current multiplier bit is set
+/// accumulate the shifted multiplicand.
+pub const MUL_GATED_ADD_LUT: &[Pass] = &[
+    Pass {
+        name: "mul.p2",
+        key: &[(0, true), (1, false), (2, true), (3, true)],
+        write: &[(1, true), (3, false)],
+    },
+    Pass { name: "mul.p1", key: &[(0, true), (1, false), (2, true), (3, false)], write: &[(3, true)] },
+    Pass {
+        name: "mul.p3",
+        key: &[(0, true), (1, true), (2, false), (3, false)],
+        write: &[(1, false), (3, true)],
+    },
+    Pass { name: "mul.p4", key: &[(0, true), (1, true), (2, false), (3, true)], write: &[(3, false)] },
+];
+
+/// Carry flush pass run once after the last multiplicand bit: deposits the
+/// remaining carry into the next product column (which is guaranteed 0) and
+/// clears the carry. Slots: 0 = gate, 1 = carry, 2 = target product bit.
+pub const MUL_CARRY_FLUSH: &[Pass] =
+    &[Pass { name: "mul.flush", key: &[(0, true), (1, true)], write: &[(1, false), (2, true)] }];
+
+/// Slots for [`RELU_LUT`]: 0 = A_i (data bit, in-place), 1 = F (sign flag,
+/// unchanged).
+pub const RELU_SLOT_A: usize = 0;
+/// Sign-flag slot.
+pub const RELU_SLOT_F: usize = 1;
+
+/// ReLU LUT (paper Table III): a single pass per bit position — words whose
+/// sign flag is set (negative pre-activation) get the selected bit cleared.
+/// Rows `10 -> NC(1)`, `01 -> NC(0)`, `00 -> NC(0)` of Table III need no
+/// write; only `11 -> 0` does.
+pub const RELU_LUT: &[Pass] =
+    &[Pass { name: "relu.p1", key: &[(0, true), (1, true)], write: &[(0, false)] }];
+
+/// Slots for [`MAX_LUT`]: 0 = A_i, 1 = B_i (in-place max), 2 = F1, 3 = F2.
+/// Flag encoding (from Table IV): `(F1,F2) = (0,0)` undecided,
+/// `(0,1)` A is larger, `(1,1)` B is larger; `(1,0)` unreachable ("NP").
+pub const MAX_SLOT_A: usize = 0;
+/// In-place max bit slot.
+pub const MAX_SLOT_B: usize = 1;
+/// First flag slot.
+pub const MAX_SLOT_F1: usize = 2;
+/// Second flag slot.
+pub const MAX_SLOT_F2: usize = 3;
+
+/// Max-pooling LUT (paper Table IV), processed MSB -> LSB. Four passes per
+/// bit position; all other Table IV rows are no-change (NC) or unreachable
+/// (NP):
+///
+/// * `1st` `(A,B,F1,F2) = (1,0,0,0)`: first differing bit, A larger — decide
+///   for A (`F <- 01`) and copy A's 1 into B.
+/// * `2nd` `(0,1,0,0)`: first differing bit, B larger — decide for B
+///   (`F <- 11`), B keeps its bit.
+/// * `3rd` `(1,0,0,1)`: already decided for A — copy A's 1 into B.
+/// * `4th` `(0,1,0,1)`: already decided for A — copy A's 0 into B.
+pub const MAX_LUT: &[Pass] = &[
+    Pass {
+        name: "max.1st",
+        key: &[(0, true), (1, false), (2, false), (3, false)],
+        write: &[(1, true), (3, true)],
+    },
+    Pass {
+        name: "max.2nd",
+        key: &[(0, false), (1, true), (2, false), (3, false)],
+        write: &[(2, true), (3, true)],
+    },
+    Pass { name: "max.3rd", key: &[(0, true), (1, false), (2, false), (3, true)], write: &[(1, true)] },
+    Pass { name: "max.4th", key: &[(0, false), (1, true), (2, false), (3, true)], write: &[(1, false)] },
+];
+
+/// Apply a pass sequence to a small state vector of slot bits (one word's
+/// slice). Returns the new state and how many passes matched. This is the
+/// scalar semantics used by the LUT truth-table tests; the emulator applies
+/// the same passes word-parallel.
+pub fn apply_passes(passes: &[Pass], state: &mut [bool]) -> usize {
+    let mut matched = 0;
+    for p in passes {
+        if p.key.iter().all(|&(slot, bit)| state[slot] == bit) {
+            for &(slot, bit) in p.write {
+                state[slot] = bit;
+            }
+            matched += 1;
+        }
+    }
+    matched
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Exhaustive full-adder check of ADD_LUT over the 8 (carry, a, b)
+    /// states: after the pass group, (carry, b) must hold (carry', sum).
+    #[test]
+    fn add_lut_is_a_full_adder() {
+        for c in [false, true] {
+            for a in [false, true] {
+                for b in [false, true] {
+                    let mut st = [c, a, b];
+                    let matched = apply_passes(ADD_LUT, &mut st);
+                    let total = c as u8 + a as u8 + b as u8;
+                    assert_eq!(st[ADD_SLOT_B], total & 1 == 1, "sum for ({c},{a},{b})");
+                    assert_eq!(st[ADD_SLOT_CARRY], total >= 2, "carry for ({c},{a},{b})");
+                    assert_eq!(st[ADD_SLOT_A], a, "A must be unchanged");
+                    assert!(matched <= 1, "at most one pass may fire per word");
+                }
+            }
+        }
+    }
+
+    /// Gated adder: gate=0 must leave everything unchanged; gate=1 must be
+    /// the full adder.
+    #[test]
+    fn mul_gated_add_lut_gates_correctly() {
+        for g in [false, true] {
+            for c in [false, true] {
+                for a in [false, true] {
+                    for b in [false, true] {
+                        let mut st = [g, c, a, b];
+                        apply_passes(MUL_GATED_ADD_LUT, &mut st);
+                        if !g {
+                            assert_eq!(st, [g, c, a, b], "gate=0 must be a no-op");
+                        } else {
+                            let total = c as u8 + a as u8 + b as u8;
+                            assert_eq!(st[MUL_SLOT_C], total & 1 == 1);
+                            assert_eq!(st[MUL_SLOT_CARRY], total >= 2);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mul_carry_flush_deposits_and_clears() {
+        let mut st = [true, true, false];
+        apply_passes(MUL_CARRY_FLUSH, &mut st);
+        assert_eq!(st, [true, false, true]);
+        let mut st = [true, false, false];
+        apply_passes(MUL_CARRY_FLUSH, &mut st);
+        assert_eq!(st, [true, false, false]);
+        let mut st = [false, true, false]; // gate off: no flush
+        apply_passes(MUL_CARRY_FLUSH, &mut st);
+        assert_eq!(st, [false, true, false]);
+    }
+
+    /// Table III verbatim: A_i/F_i in {10, 01, 11, 00} -> resulting A_i in
+    /// {1, 0, 0, 0}.
+    #[test]
+    fn relu_lut_matches_table_iii() {
+        let cases = [
+            ((true, false), true),
+            ((false, true), false),
+            ((true, true), false),
+            ((false, false), false),
+        ];
+        for ((a, f), expect_a) in cases {
+            let mut st = [a, f];
+            apply_passes(RELU_LUT, &mut st);
+            assert_eq!(st[RELU_SLOT_A], expect_a, "A for ({a},{f})");
+            assert_eq!(st[RELU_SLOT_F], f, "flag unchanged");
+        }
+    }
+
+    /// Table IV verbatim over all reachable states (F1F2 != 10).
+    #[test]
+    fn max_lut_matches_table_iv() {
+        // (A, B, F1, F2) -> (B', F1', F2') from Table IV.
+        let cases = [
+            ((true, false, false, false), (true, false, true)),   // 1st
+            ((false, true, false, false), (true, true, true)),    // 2nd
+            ((true, true, false, false), (true, false, false)),   // NC
+            ((false, false, false, false), (false, false, false)),// NC
+            ((true, false, true, true), (false, true, true)),     // NC
+            ((false, true, true, true), (true, true, true)),      // NC
+            ((true, true, true, true), (true, true, true)),       // NC
+            ((false, false, true, true), (false, true, true)),    // NC
+            ((true, false, false, true), (true, false, true)),    // 3rd
+            ((false, true, false, true), (false, false, true)),   // 4th
+            ((true, true, false, true), (true, false, true)),     // NC
+            ((false, false, false, true), (false, false, true)),  // NC
+        ];
+        for ((a, b, f1, f2), (eb, ef1, ef2)) in cases {
+            let mut st = [a, b, f1, f2];
+            apply_passes(MAX_LUT, &mut st);
+            assert_eq!(st[MAX_SLOT_A], a, "A unchanged for ({a},{b},{f1},{f2})");
+            assert_eq!(st[MAX_SLOT_B], eb, "B for ({a},{b},{f1},{f2})");
+            assert_eq!(st[MAX_SLOT_F1], ef1, "F1 for ({a},{b},{f1},{f2})");
+            assert_eq!(st[MAX_SLOT_F2], ef2, "F2 for ({a},{b},{f1},{f2})");
+        }
+    }
+
+    /// MSB-first max over full words: walk the LUT across bit positions of
+    /// random word pairs and check `B == max(A, B)`.
+    #[test]
+    fn max_lut_computes_max_of_words() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(1234);
+        for _ in 0..200 {
+            let m = rng.range(1, 10) as u32;
+            let a = rng.below(1 << m);
+            let b = rng.below(1 << m);
+            let (mut bv, mut f1, mut f2) = (b, false, false);
+            for i in (0..m).rev() {
+                let abit = a >> i & 1 == 1;
+                let bbit = bv >> i & 1 == 1;
+                let mut st = [abit, bbit, f1, f2];
+                apply_passes(MAX_LUT, &mut st);
+                if st[MAX_SLOT_B] {
+                    bv |= 1 << i;
+                } else {
+                    bv &= !(1 << i);
+                }
+                f1 = st[MAX_SLOT_F1];
+                f2 = st[MAX_SLOT_F2];
+            }
+            assert_eq!(bv, a.max(b), "max of {a} and {b} (m={m})");
+        }
+    }
+
+    /// Hazard-freedom: within each LUT, the post-write state of every pass
+    /// must not match the key of any *later* pass.
+    #[test]
+    fn luts_are_hazard_free() {
+        for (name, lut) in
+            [("add", ADD_LUT), ("mul", MUL_GATED_ADD_LUT), ("relu", RELU_LUT), ("max", MAX_LUT)]
+        {
+            for (i, p) in lut.iter().enumerate() {
+                // Build the post state of pass p from its key + writes.
+                let nslots = 4;
+                let mut state = vec![None; nslots];
+                for &(s, b) in p.key {
+                    state[s] = Some(b);
+                }
+                for &(s, b) in p.write {
+                    state[s] = Some(b);
+                }
+                for later in &lut[i + 1..] {
+                    let rematch = later
+                        .key
+                        .iter()
+                        .all(|&(s, b)| state[s].map(|v| v == b).unwrap_or(true));
+                    assert!(
+                        !rematch,
+                        "LUT {name}: output of pass {} re-matches later pass {}",
+                        p.name, later.name
+                    );
+                }
+            }
+        }
+    }
+}

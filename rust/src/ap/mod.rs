@@ -1,0 +1,248 @@
+//! Associative-Processor (AP) substrate.
+//!
+//! This module implements the paper's three AP abstractions plus the shared
+//! cost vocabulary every higher layer consumes:
+//!
+//! * [`tech`] — CAM cell technologies (Table VI 16 nm PTM parameters),
+//!   per-event energies and cycle counts, voltage scaling;
+//! * [`luts`] — the compare/write pass tables (LUTs) for in-place addition,
+//!   out-of-place multiplication, ReLU (Table III) and max pooling
+//!   (Table IV);
+//! * [`emulator`] — a functional, bit-exact emulator of a (2D) CAM that
+//!   executes the LUT pass sequences and counts every compare/write/read
+//!   event — the paper's §IV "microbenchmark" used to validate the models;
+//! * [`runtime_model`] — the closed-form runtime models of Table I /
+//!   Eqs. (1)–(15) for 1D APs, 2D APs and 2D APs with vertical segmentation;
+//! * [`complexity`] — Table II asymptotic classes (used as test oracles for
+//!   the growth of the runtime models).
+//!
+//! ## Cost vocabulary
+//!
+//! Every AP operation decomposes into three primitive event kinds:
+//! **compare** (one LUT search phase over the selected column/row pair),
+//! **write** (one masked write phase, including data-population writes) and
+//! **read** (one bit- or word-sequential read). Table I's runtime formulas
+//! are exactly the *sum of event counts* with unit cost per event; latency
+//! in cycles applies the per-technology cycle weights and energy applies the
+//! per-technology cell energies (see [`tech::Tech`]).
+
+pub mod complexity;
+pub mod emulator;
+pub mod luts;
+pub mod runtime_model;
+pub mod tech;
+
+/// Which AP organization an operation runs on (Table I columns).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ApKind {
+    /// 1D AP: column (horizontal) operations only; vertical combining is
+    /// done by sequential word transfers.
+    OneD,
+    /// 2D AP without vertical segmentation: vertical (row-pair) operations
+    /// exist but run one row pair at a time.
+    TwoD,
+    /// 2D AP with vertical segmentation: all row pairs of a segment operate
+    /// in parallel (reduction-tree behaviour).
+    TwoDSeg,
+}
+
+impl ApKind {
+    /// All kinds, in Table I column order.
+    pub const ALL: [ApKind; 3] = [ApKind::OneD, ApKind::TwoD, ApKind::TwoDSeg];
+
+    /// Human-readable label used in tables.
+    pub fn label(&self) -> &'static str {
+        match self {
+            ApKind::OneD => "1D AP",
+            ApKind::TwoD => "2D AP",
+            ApKind::TwoDSeg => "2D AP (seg)",
+        }
+    }
+}
+
+/// Primitive event counts of one AP operation (unit-cost == Table I runtime).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct Events {
+    /// LUT compare (search) phases.
+    pub compares: u64,
+    /// Write phases: LUT-result writes plus data-population writes.
+    pub writes: u64,
+    /// Bit-sequential / word-sequential read phases.
+    pub reads: u64,
+}
+
+impl Events {
+    /// New event bundle.
+    pub fn new(compares: u64, writes: u64, reads: u64) -> Self {
+        Self { compares, writes, reads }
+    }
+
+    /// Table I "runtime": unit cost per event.
+    pub fn time_units(&self) -> u64 {
+        self.compares + self.writes + self.reads
+    }
+
+    /// Elementwise sum.
+    pub fn add(&self, other: &Events) -> Events {
+        Events {
+            compares: self.compares + other.compares,
+            writes: self.writes + other.writes,
+            reads: self.reads + other.reads,
+        }
+    }
+
+    /// Elementwise scale by an integer repeat count.
+    pub fn scale(&self, k: u64) -> Events {
+        Events { compares: self.compares * k, writes: self.writes * k, reads: self.reads * k }
+    }
+}
+
+impl std::ops::Add for Events {
+    type Output = Events;
+    fn add(self, rhs: Events) -> Events {
+        Events::add(&self, &rhs)
+    }
+}
+
+impl std::iter::Sum for Events {
+    fn sum<I: Iterator<Item = Events>>(iter: I) -> Events {
+        iter.fold(Events::default(), |a, b| a + b)
+    }
+}
+
+/// Cell-granularity activity of one AP operation, used by the energy model.
+///
+/// Units are "cell-events" (for writes/reads) and "row-sense events" (for
+/// compares: one sense-amplifier evaluation of one word's tag). Stored as
+/// `f64` because the paper's average write activity (1.5 effective writes
+/// per 4-pass LUT group) makes these fractional, and end-to-end totals
+/// exceed `u64` range for the large models.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct CellEvents {
+    /// Word-sense events: (compare phases) x (words sensed per phase).
+    pub compare_senses: f64,
+    /// Cells actually written by LUT write phases (average activity).
+    pub lut_write_cells: f64,
+    /// Cells written by data-population / transfer writes (full activity).
+    pub populate_write_cells: f64,
+    /// Word-sense events spent on reads.
+    pub read_senses: f64,
+}
+
+impl CellEvents {
+    /// Elementwise sum.
+    pub fn add(&self, o: &CellEvents) -> CellEvents {
+        CellEvents {
+            compare_senses: self.compare_senses + o.compare_senses,
+            lut_write_cells: self.lut_write_cells + o.lut_write_cells,
+            populate_write_cells: self.populate_write_cells + o.populate_write_cells,
+            read_senses: self.read_senses + o.read_senses,
+        }
+    }
+
+    /// Elementwise scale.
+    pub fn scale(&self, k: f64) -> CellEvents {
+        CellEvents {
+            compare_senses: self.compare_senses * k,
+            lut_write_cells: self.lut_write_cells * k,
+            populate_write_cells: self.populate_write_cells * k,
+            read_senses: self.read_senses * k,
+        }
+    }
+}
+
+impl std::ops::Add for CellEvents {
+    type Output = CellEvents;
+    fn add(self, rhs: CellEvents) -> CellEvents {
+        CellEvents::add(&self, &rhs)
+    }
+}
+
+impl std::iter::Sum for CellEvents {
+    fn sum<I: Iterator<Item = CellEvents>>(iter: I) -> CellEvents {
+        iter.fold(CellEvents::default(), |a, b| a + b)
+    }
+}
+
+/// Full cost of one AP operation: timing events + cell activity + the
+/// bitwidth of the produced result (precision grows through multiply /
+/// reduce, Table I comments).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct OpCost {
+    pub events: Events,
+    pub cells: CellEvents,
+    /// Bitwidth of each result word after the operation.
+    pub result_bits: u32,
+}
+
+impl OpCost {
+    /// Combine two operation costs sequentially (result bits of the latter).
+    pub fn then(&self, next: &OpCost) -> OpCost {
+        OpCost {
+            events: self.events + next.events,
+            cells: self.cells + next.cells,
+            result_bits: next.result_bits,
+        }
+    }
+}
+
+/// `ceil(log2(x))` with `clog2(0) = clog2(1) = 0`, used throughout the
+/// runtime models (the paper's formulas implicitly assume powers of two).
+pub fn clog2(x: u64) -> u32 {
+    if x <= 1 {
+        0
+    } else {
+        64 - (x - 1).leading_zeros()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clog2_basics() {
+        assert_eq!(clog2(0), 0);
+        assert_eq!(clog2(1), 0);
+        assert_eq!(clog2(2), 1);
+        assert_eq!(clog2(3), 2);
+        assert_eq!(clog2(4), 2);
+        assert_eq!(clog2(5), 3);
+        assert_eq!(clog2(1024), 10);
+    }
+
+    #[test]
+    fn events_time_units_sum() {
+        let e = Events::new(4, 5, 1);
+        assert_eq!(e.time_units(), 10);
+    }
+
+    #[test]
+    fn events_add_scale() {
+        let e = Events::new(1, 2, 3).scale(3) + Events::new(1, 1, 1);
+        assert_eq!(e, Events::new(4, 7, 10));
+    }
+
+    #[test]
+    fn cell_events_add_scale() {
+        let c = CellEvents { compare_senses: 1.0, lut_write_cells: 2.0, populate_write_cells: 3.0, read_senses: 4.0 };
+        let s = c.scale(2.0) + c;
+        assert_eq!(s.compare_senses, 3.0);
+        assert_eq!(s.read_senses, 12.0);
+    }
+
+    #[test]
+    fn opcost_then_takes_final_bits() {
+        let a = OpCost { events: Events::new(1, 0, 0), cells: CellEvents::default(), result_bits: 8 };
+        let b = OpCost { events: Events::new(0, 1, 0), cells: CellEvents::default(), result_bits: 16 };
+        let c = a.then(&b);
+        assert_eq!(c.result_bits, 16);
+        assert_eq!(c.events.time_units(), 2);
+    }
+
+    #[test]
+    fn apkind_labels() {
+        assert_eq!(ApKind::OneD.label(), "1D AP");
+        assert_eq!(ApKind::ALL.len(), 3);
+    }
+}

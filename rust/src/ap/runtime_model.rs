@@ -1,0 +1,558 @@
+//! Closed-form AP runtime / activity models — paper Table I, Eqs. (1)–(15).
+//!
+//! Each function returns an [`OpCost`]: the primitive event counts (whose
+//! unit-cost sum reproduces Table I's "runtime" exactly), the cell-level
+//! activity used by the energy model, and the produced result bitwidth.
+//!
+//! Conventions (paper §III-B):
+//! * `m` — operand bitwidth (Table I's `M`). Multiplication and GEMM accept
+//!   separate weight/activation widths `(mw, ma)`; with `mw == ma == M` the
+//!   formulas specialize to Table I verbatim.
+//! * `l` — number of words stored in the AP (two per row except ReLU).
+//! * `s`, `k` — pooling window size and number of pooling operations.
+//! * Matrix-matrix multiplication multiplies an `i x j` by a `j x u` matrix.
+//!
+//! Energy-side activity: a compare senses every occupied word once per
+//! pass (timing-wise, §V-A charges the fixed write *phases* — "4
+//! comparisons and 1.5 writes on average" — but energy-wise a write phase
+//! only flips cells in the words that *matched* the pass's key). A pass
+//! with a k-bit key matches a uniformly-random word with probability
+//! `2^-k`, so the expected written cells per pass are
+//! `words · 2^-k · bits_per_write`. The per-LUT match probabilities are the
+//! [`MATCH_PROB_2BIT`]/[`MATCH_PROB_3BIT`]/[`MATCH_PROB_4BIT`] constants
+//! (ReLU keys are 2-bit; add/vertical-add keys 3-bit; gated-multiply and
+//! max-pool keys 4-bit).
+
+use super::{clog2, ApKind, CellEvents, Events, OpCost};
+
+/// Match probability of a 2-bit LUT key (ReLU, Table III).
+pub const MATCH_PROB_2BIT: f64 = 0.25;
+/// Match probability of a 3-bit LUT key (full-adder passes).
+pub const MATCH_PROB_3BIT: f64 = 0.125;
+/// Match probability of a 4-bit LUT key (gated multiply, max pool
+/// Table IV).
+pub const MATCH_PROB_4BIT: f64 = 0.0625;
+
+/// Cell activity of `n` LUT passes over `words` occupied words. Compares
+/// sense every occupied word once per pass; write phases flip
+/// `bits_per_write` cells in each matched word, with `match_prob` of the
+/// words matching in expectation.
+fn lut_cells_p(n_passes: u64, words: u64, bits_per_write: f64, match_prob: f64) -> CellEvents {
+    CellEvents {
+        compare_senses: n_passes as f64 * words as f64,
+        lut_write_cells: n_passes as f64 * match_prob * words as f64 * bits_per_write,
+        populate_write_cells: 0.0,
+        read_senses: 0.0,
+    }
+}
+
+/// Full-adder pass activity (3-bit keys, ~1.5 written cells per match).
+fn lut_cells(n_passes: u64, words: u64, bits_per_write: f64) -> CellEvents {
+    lut_cells_p(n_passes, words, bits_per_write, MATCH_PROB_3BIT)
+}
+
+/// Cell activity of populating `bits` bit-columns across `words` words.
+fn populate_cells(bits: u64, words: u64) -> CellEvents {
+    CellEvents {
+        compare_senses: 0.0,
+        lut_write_cells: 0.0,
+        populate_write_cells: bits as f64 * words as f64,
+        read_senses: 0.0,
+    }
+}
+
+/// Cell activity of `bits` bit-sequential column reads over `words` words.
+fn read_cells(bits: u64, words: u64) -> CellEvents {
+    CellEvents {
+        compare_senses: 0.0,
+        lut_write_cells: 0.0,
+        populate_write_cells: 0.0,
+        read_senses: bits as f64 * words as f64,
+    }
+}
+
+/// Cell activity of `n` word-sequential transfers of `bits`-bit words
+/// (each transfer = one word-sense read + one word write).
+fn transfer_cells(n: u64, bits: u64) -> CellEvents {
+    CellEvents {
+        compare_senses: 0.0,
+        lut_write_cells: 0.0,
+        populate_write_cells: n as f64 * bits as f64,
+        read_senses: n as f64,
+    }
+}
+
+/// Eq. (1) — in-place vector addition `B += A` over `l/2` word pairs of
+/// width `m`. Identical on 1D and 2D APs (horizontal mode only).
+///
+/// Runtime: `(2M)_w + (4M)_c + (4M)_w + (M+1)_r  =  2M + 8M + M + 1`.
+pub fn add(m: u32, l: u64, _kind: ApKind) -> OpCost {
+    let m64 = m as u64;
+    let pairs = l / 2;
+    let events = Events::new(4 * m64, 2 * m64 + 4 * m64, m64 + 1);
+    let cells = populate_cells(2 * m64, pairs)
+        + lut_cells(4 * m64, pairs, 1.5)
+        + read_cells(m64 + 1, pairs);
+    OpCost { events, cells, result_bits: m + 1 }
+}
+
+/// Eq. (2) generalized to distinct operand widths — out-of-place
+/// multiplication `C = A * B` over `l/2` word pairs, `A` of `ma` bits and
+/// `B` of `mw` bits. With `ma == mw == M`: `2M + 8M² + 2M` (Table I).
+///
+/// Runtime: `(Ma+Mw)_w + (4·Ma·Mw)_c + (4·Ma·Mw)_w + (Ma+Mw)_r`.
+pub fn multiply(ma: u32, mw: u32, l: u64, _kind: ApKind) -> OpCost {
+    let (ma64, mw64) = (ma as u64, mw as u64);
+    let pairs = l / 2;
+    let passes = 4 * ma64 * mw64;
+    let events = Events::new(passes, (ma64 + mw64) + passes, ma64 + mw64);
+    let cells = populate_cells(ma64 + mw64, pairs)
+        + lut_cells_p(passes, pairs, 1.5, MATCH_PROB_4BIT)
+        + read_cells(ma64 + mw64, pairs);
+    OpCost { events, cells, result_bits: ma + mw }
+}
+
+/// Eqs. (3)–(5) — reduction (sum of all `l` elements of width `m`).
+///
+/// * 1D (Eq. 3): `log2(L)` rounds of horizontal in-place addition with
+///   growing width, plus `(L/2 - 1)` sequential word transfers.
+/// * 2D (Eq. 4): one horizontal addition then `(L/2 - 1)` vertical row-pair
+///   additions at 4 compares + 4 writes each.
+/// * 2D seg (Eq. 5): vertical additions across all row pairs in parallel —
+///   `log2(L/2)` rounds.
+pub fn reduce(m: u32, l: u64, kind: ApKind) -> OpCost {
+    let m64 = m as u64;
+    let out_bits = m + clog2(l.max(1));
+    let pairs = (l / 2).max(1);
+    match kind {
+        ApKind::OneD => {
+            let mut events = Events::new(0, 2 * m64, 0);
+            let mut cells = populate_cells(2 * m64, pairs);
+            let rounds = clog2(l.max(1)) as u64;
+            let mut active_pairs = pairs;
+            for q in 1..=rounds {
+                let width = m64 + q - 1;
+                events = events + Events::new(4 * width, 4 * width, 0);
+                cells = cells + lut_cells(4 * width, active_pairs.max(1), 1.5);
+                active_pairs = (active_pairs / 2).max(1);
+            }
+            let transfers = pairs.saturating_sub(1);
+            events = events + Events::new(0, transfers, transfers) + Events::new(0, 0, 1);
+            cells = cells + transfer_cells(transfers, out_bits as u64) + read_cells(1, 1);
+            OpCost { events, cells, result_bits: out_bits }
+        }
+        ApKind::TwoD => {
+            let vertical_groups = pairs.saturating_sub(1);
+            let events = Events::new(4 * m64, 2 * m64 + 4 * m64, 0)
+                + Events::new(4 * vertical_groups, 4 * vertical_groups, 0)
+                + Events::new(0, 0, 1);
+            // A vertical pass senses the occupied bit-columns of the operand
+            // row pair (result width) rather than all words.
+            let cells = populate_cells(2 * m64, pairs)
+                + lut_cells(4 * m64, pairs, 1.5)
+                + lut_cells(4 * vertical_groups, out_bits as u64, 1.5)
+                + read_cells(1, 1);
+            OpCost { events, cells, result_bits: out_bits }
+        }
+        ApKind::TwoDSeg => {
+            let rounds = clog2(pairs) as u64;
+            let mut events = Events::new(4 * m64, 2 * m64 + 4 * m64, 0);
+            let mut cells = populate_cells(2 * m64, pairs) + lut_cells(4 * m64, pairs, 1.5);
+            // Parallel vertical rounds: same pass count per round, but the
+            // cell activity spans all still-active row pairs.
+            let mut active = pairs / 2;
+            for _ in 0..rounds {
+                events = events + Events::new(4, 4, 0);
+                cells = cells + lut_cells(4, (active * out_bits as u64).max(1), 1.5);
+                active = (active / 2).max(1);
+            }
+            events = events + Events::new(0, 0, 1);
+            cells = cells + read_cells(1, 1);
+            OpCost { events, cells, result_bits: out_bits }
+        }
+    }
+}
+
+/// Eqs. (6)–(8) generalized — matrix-matrix multiplication of an `i x j`
+/// matrix (elements `ma` bits) by a `j x u` matrix (elements `mw` bits).
+/// `i*j*u` product words are formed in parallel and then reduced in groups
+/// of `j`. With `ma == mw == M` the totals match Table I verbatim.
+pub fn matmat(ma: u32, mw: u32, i: u64, j: u64, u: u64, kind: ApKind) -> OpCost {
+    let (ma64, mw64) = (ma as u64, mw as u64);
+    let msum = ma64 + mw64;
+    let words = i * j * u;
+    let prod_bits = ma + mw;
+    let out_bits = prod_bits + clog2(j.max(1));
+    let mult_passes = 4 * ma64 * mw64;
+
+    // Populate + multiply (all kinds identical, horizontal mode).
+    let mut events = Events::new(mult_passes, msum + mult_passes, 0);
+    let mut cells =
+        populate_cells(msum, words) + lut_cells_p(mult_passes, words, 1.5, MATCH_PROB_4BIT);
+
+    match kind {
+        ApKind::OneD => {
+            // log2(j) horizontal addition rounds of growing width plus
+            // (i*u)(j-1) sequential word transfers (Eq. 6).
+            let rounds = clog2(j.max(1)) as u64;
+            let mut active = words / 2;
+            for q in 1..=rounds {
+                let width = msum + q - 1;
+                events = events + Events::new(4 * width, 4 * width, 0);
+                cells = cells + lut_cells(4 * width, active.max(1), 1.5);
+                active = (active / 2).max(1);
+            }
+            let transfers = i * u * j.saturating_sub(1);
+            events = events + Events::new(0, transfers, transfers);
+            cells = cells + transfer_cells(transfers, out_bits as u64);
+        }
+        ApKind::TwoD => {
+            // (i*u)(j-1) sequential vertical row-pair additions (Eq. 7).
+            let groups = i * u * j.saturating_sub(1);
+            events = events + Events::new(4 * groups, 4 * groups, 0);
+            cells = cells + lut_cells(4 * groups, out_bits as u64, 1.5);
+        }
+        ApKind::TwoDSeg => {
+            // log2(j) parallel vertical rounds (Eq. 8).
+            let rounds = clog2(j.max(1)) as u64;
+            let mut active = (i * u * j) / 2;
+            for _ in 0..rounds {
+                events = events + Events::new(4, 4, 0);
+                cells = cells + lut_cells(4, (active * out_bits as u64).max(1), 1.5);
+                active = (active / 2).max(1);
+            }
+        }
+    }
+
+    // Read out the i*u results bit-sequentially: (Ma+Mw+log2 j) column reads.
+    let read_bits = out_bits as u64;
+    events = events + Events::new(0, 0, read_bits);
+    cells = cells + read_cells(read_bits, i * u);
+    OpCost { events, cells, result_bits: out_bits }
+}
+
+/// Dot product — the `i == u == 1` special case of [`matmat`].
+pub fn dot(ma: u32, mw: u32, j: u64, kind: ApKind) -> OpCost {
+    matmat(ma, mw, 1, j, 1, kind)
+}
+
+/// Eq. (15) — ReLU over `l` words of width `m` (same on all AP kinds).
+///
+/// Runtime: `M_w + (2_w + 1_r) + (M-1)_c + (M-1)_w + M_r`.
+pub fn relu(m: u32, l: u64, _kind: ApKind) -> OpCost {
+    let m64 = m as u64;
+    let events =
+        Events::new(m64.saturating_sub(1), m64 + 2 + m64.saturating_sub(1), 1 + m64);
+    let cells = populate_cells(m64, l)
+        + read_cells(1, l) // read MSB column into flags
+        + populate_cells(2, l) // write flag column + reset MSB
+        + lut_cells_p(m64.saturating_sub(1), l, 1.0, MATCH_PROB_2BIT)
+        + read_cells(m64, l);
+    OpCost { events, cells, result_bits: m }
+}
+
+/// Eqs. (12)–(14) — max pooling with window size `s` over `k` windows,
+/// elements of width `m` (`l = s*k` words stored as `s*k/2` pairs).
+pub fn maxpool(m: u32, s: u64, k: u64, kind: ApKind) -> OpCost {
+    let m64 = m as u64;
+    let pairs = (s * k / 2).max(1);
+    match kind {
+        ApKind::OneD => {
+            // Eq. 12: 2M_w + log2(S)((4M)_c + (4M)_w + 2_w) + (1r+1w)K(S/2-1) + M_r
+            let rounds = clog2(s.max(1)) as u64;
+            let mut events = Events::new(0, 2 * m64, 0);
+            let mut cells = populate_cells(2 * m64, pairs);
+            let mut active = pairs;
+            for _ in 0..rounds {
+                events = events + Events::new(4 * m64, 4 * m64 + 2, 0);
+                cells = cells
+                    + lut_cells_p(4 * m64, active.max(1), 1.5, MATCH_PROB_4BIT)
+                    + populate_cells(2, active.max(1));
+                active = (active / 2).max(1);
+            }
+            let transfers = k * (s / 2).saturating_sub(1);
+            events = events + Events::new(0, transfers, transfers) + Events::new(0, 0, m64);
+            cells = cells + transfer_cells(transfers, m64) + read_cells(m64, k);
+            OpCost { events, cells, result_bits: m }
+        }
+        ApKind::TwoD => {
+            // Eq. 13: 2M_w + (4M)_c + (4M)_w + K(S/2-1)(4c+4w+2w) + M_r + 2_w
+            let groups = k * (s / 2).saturating_sub(1);
+            let events = Events::new(4 * m64, 2 * m64 + 4 * m64, 0)
+                + Events::new(4 * groups, 4 * groups + 2 * groups, 0)
+                + Events::new(0, 2, m64);
+            let cells = populate_cells(2 * m64, pairs)
+                + lut_cells_p(4 * m64, pairs, 1.5, MATCH_PROB_4BIT)
+                + lut_cells_p(4 * groups, m64, 1.5, MATCH_PROB_4BIT)
+                + populate_cells(2, groups.max(1))
+                + read_cells(m64, k)
+                + populate_cells(2, pairs);
+            OpCost { events, cells, result_bits: m }
+        }
+        ApKind::TwoDSeg => {
+            // Eq. 14: 2M_w + (4M)_c + (4M)_w + log2(S/2)(4c + 4w + 2K_w) + M_r + 2_w
+            let rounds = clog2((s / 2).max(1)) as u64;
+            let mut events = Events::new(4 * m64, 2 * m64 + 4 * m64, 0);
+            let mut cells =
+                populate_cells(2 * m64, pairs) + lut_cells_p(4 * m64, pairs, 1.5, MATCH_PROB_4BIT);
+            let mut active = pairs / 2;
+            for _ in 0..rounds {
+                events = events + Events::new(4, 4 + 2 * k, 0);
+                cells = cells
+                    + lut_cells_p(4, (active * m64 as u64).max(1), 1.5, MATCH_PROB_4BIT)
+                    + populate_cells(2, (k * active.max(1)).max(1));
+                active = (active / 2).max(1);
+            }
+            events = events + Events::new(0, 2, m64);
+            cells = cells + populate_cells(2, pairs) + read_cells(m64, k);
+            OpCost { events, cells, result_bits: m }
+        }
+    }
+}
+
+/// Eqs. (9)–(11) — average pooling with window `s` over `k` windows,
+/// elements of width `m`. Division by the window size is a shifted
+/// bit-sequential read (no extra passes).
+pub fn avgpool(m: u32, s: u64, k: u64, kind: ApKind) -> OpCost {
+    let m64 = m as u64;
+    let pairs = (s * k / 2).max(1);
+    match kind {
+        ApKind::OneD => {
+            // Eq. 9.
+            let rounds = clog2(s.max(1)) as u64;
+            let mut events = Events::new(0, 2 * m64, 0);
+            let mut cells = populate_cells(2 * m64, pairs);
+            let mut active = pairs;
+            for q in 1..=rounds {
+                let width = m64 + q - 1;
+                events = events + Events::new(4 * width, 4 * width, 0);
+                cells = cells + lut_cells(4 * width, active.max(1), 1.5);
+                active = (active / 2).max(1);
+            }
+            let transfers = k * (s / 2).saturating_sub(1);
+            events = events + Events::new(0, transfers, transfers) + Events::new(0, 0, m64);
+            cells = cells + transfer_cells(transfers, m64 + rounds as u32 as u64)
+                + read_cells(m64, k);
+            OpCost { events, cells, result_bits: m }
+        }
+        ApKind::TwoD => {
+            // Eq. 10.
+            let groups = k * (s / 2).saturating_sub(1);
+            let events = Events::new(4 * m64, 2 * m64 + 4 * m64, 0)
+                + Events::new(4 * groups, 4 * groups, 0)
+                + Events::new(0, 0, m64);
+            let sum_bits = (m + clog2(s.max(1))) as u64;
+            let cells = populate_cells(2 * m64, pairs)
+                + lut_cells(4 * m64, pairs, 1.5)
+                + lut_cells(4 * groups, sum_bits, 1.5)
+                + read_cells(m64, k);
+            OpCost { events, cells, result_bits: m }
+        }
+        ApKind::TwoDSeg => {
+            // Eq. 11.
+            let rounds = clog2((s / 2).max(1)) as u64;
+            let mut events = Events::new(4 * m64, 2 * m64 + 4 * m64, 0);
+            let mut cells = populate_cells(2 * m64, pairs) + lut_cells(4 * m64, pairs, 1.5);
+            let sum_bits = (m + clog2(s.max(1))) as u64;
+            let mut active = pairs / 2;
+            for _ in 0..rounds {
+                events = events + Events::new(4, 4, 0);
+                cells = cells + lut_cells(4, (active * sum_bits).max(1), 1.5);
+                active = (active / 2).max(1);
+            }
+            events = events + Events::new(0, 0, m64);
+            cells = cells + read_cells(m64, k);
+            OpCost { events, cells, result_bits: m }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Table I row "Addition": 2M + 8M + M + 1.
+    #[test]
+    fn add_matches_table_i() {
+        for m in [2u32, 4, 8, 16] {
+            for kind in ApKind::ALL {
+                let rt = add(m, 128, kind).events.time_units();
+                assert_eq!(rt, (2 * m + 8 * m + m + 1) as u64, "M={m} {kind:?}");
+            }
+        }
+    }
+
+    /// Table I row "Multiplication": 2M + 8M² + 2M.
+    #[test]
+    fn multiply_matches_table_i() {
+        for m in [2u32, 4, 8, 16] {
+            let rt = multiply(m, m, 128, ApKind::TwoD).events.time_units();
+            assert_eq!(rt, (2 * m + 8 * m * m + 2 * m) as u64, "M={m}");
+        }
+    }
+
+    /// Mixed-width multiply: 4·Ma·Mw passes, result Ma+Mw bits.
+    #[test]
+    fn multiply_mixed_width() {
+        let c = multiply(4, 8, 128, ApKind::TwoD);
+        assert_eq!(c.result_bits, 12);
+        assert_eq!(c.events.compares, 4 * 4 * 8);
+    }
+
+    /// Table I row "Reduction", 1D: 2M + Σ_{q=1..log2 L} 8(M+q-1) + L - 1.
+    /// (The closing `+ L - 1` in Table I is the (L/2-1) transfers at 1 read
+    /// + 1 write each, plus the final word-sequential read.)
+    #[test]
+    fn reduce_1d_matches_table_i() {
+        for (m, l) in [(4u32, 16u64), (8, 64), (8, 1024)] {
+            let rt = reduce(m, l, ApKind::OneD).events.time_units();
+            let sum: u64 = (1..=clog2(l) as u64).map(|q| 8 * (m as u64 + q - 1)).sum();
+            let expect = 2 * m as u64 + sum + 2 * (l / 2 - 1) + 1;
+            assert_eq!(rt, expect, "M={m} L={l}");
+        }
+    }
+
+    /// Table I row "Reduction", 2D: 2M + 8M + 8(L/2-1) + 1.
+    #[test]
+    fn reduce_2d_matches_table_i() {
+        for (m, l) in [(4u32, 16u64), (8, 64), (8, 1024)] {
+            let rt = reduce(m, l, ApKind::TwoD).events.time_units();
+            let expect = 2 * m as u64 + 8 * m as u64 + 8 * (l / 2 - 1) + 1;
+            assert_eq!(rt, expect, "M={m} L={l}");
+        }
+    }
+
+    /// Table I row "Reduction", 2D seg: 2M + 8M + 8·log2(L/2) + 1.
+    #[test]
+    fn reduce_2dseg_matches_table_i() {
+        for (m, l) in [(4u32, 16u64), (8, 64), (8, 1024)] {
+            let rt = reduce(m, l, ApKind::TwoDSeg).events.time_units();
+            let expect = 2 * m as u64 + 8 * m as u64 + 8 * clog2(l / 2) as u64 + 1;
+            assert_eq!(rt, expect, "M={m} L={l}");
+        }
+    }
+
+    /// Result width of reduction grows by log2(L) bits.
+    #[test]
+    fn reduce_result_bits() {
+        assert_eq!(reduce(8, 16, ApKind::TwoD).result_bits, 12);
+    }
+
+    /// Table I row "Matrix-Matrix Multiplication", all three kinds.
+    #[test]
+    fn matmat_matches_table_i() {
+        for (m, i, j, u) in [(4u32, 4u64, 8u64, 4u64), (8, 2, 16, 2), (8, 16, 64, 16)] {
+            let m64 = m as u64;
+            // 1D (Eq. 6).
+            let rt = matmat(m, m, i, j, u, ApKind::OneD).events.time_units();
+            let sum: u64 = (1..=clog2(j) as u64).map(|q| 8 * (2 * m64 + q - 1)).sum();
+            let expect =
+                2 * m64 + 8 * m64 * m64 + sum + 2 * i * u * (j - 1) + 2 * m64 + clog2(j) as u64;
+            assert_eq!(rt, expect, "1D M={m} {i}x{j}x{u}");
+            // 2D (Eq. 7).
+            let rt = matmat(m, m, i, j, u, ApKind::TwoD).events.time_units();
+            let expect = 2 * m64 + 8 * m64 * m64 + 8 * i * u * (j - 1) + 2 * m64 + clog2(j) as u64;
+            assert_eq!(rt, expect, "2D M={m} {i}x{j}x{u}");
+            // 2D seg (Eq. 8).
+            let rt = matmat(m, m, i, j, u, ApKind::TwoDSeg).events.time_units();
+            let expect =
+                2 * m64 + 8 * m64 * m64 + 8 * clog2(j) as u64 + 2 * m64 + clog2(j) as u64;
+            assert_eq!(rt, expect, "2Dseg M={m} {i}x{j}x{u}");
+        }
+    }
+
+    /// Dot product is matmat with i = u = 1.
+    #[test]
+    fn dot_is_special_case() {
+        assert_eq!(
+            dot(8, 8, 64, ApKind::TwoD).events,
+            matmat(8, 8, 1, 64, 1, ApKind::TwoD).events
+        );
+    }
+
+    /// Table I row "ReLU": 4M + 1 (identical across kinds).
+    #[test]
+    fn relu_matches_table_i() {
+        for m in [2u32, 4, 8, 16] {
+            for kind in ApKind::ALL {
+                let rt = relu(m, 256, kind).events.time_units();
+                assert_eq!(rt, (4 * m + 1) as u64, "M={m} {kind:?}");
+            }
+        }
+    }
+
+    /// Table I row "Max Pooling", all three kinds.
+    #[test]
+    fn maxpool_matches_table_i() {
+        for (m, s, k) in [(4u32, 4u64, 4u64), (8, 4, 16), (8, 16, 8)] {
+            let m64 = m as u64;
+            let rt = maxpool(m, s, k, ApKind::OneD).events.time_units();
+            let expect = 2 * m64 + (8 * m64 + 2) * clog2(s) as u64 + 2 * k * (s / 2 - 1) + m64;
+            assert_eq!(rt, expect, "1D M={m} S={s} K={k}");
+            let rt = maxpool(m, s, k, ApKind::TwoD).events.time_units();
+            let expect = 2 * m64 + (8 * m64 + 2) + 10 * k * (s / 2 - 1) + m64;
+            assert_eq!(rt, expect, "2D M={m} S={s} K={k}");
+            let rt = maxpool(m, s, k, ApKind::TwoDSeg).events.time_units();
+            let expect = 2 * m64 + (8 * m64 + 2) + (8 + 2 * k) * clog2(s / 2) as u64 + m64;
+            assert_eq!(rt, expect, "2Dseg M={m} S={s} K={k}");
+        }
+    }
+
+    /// Table I row "Average Pooling", all three kinds.
+    #[test]
+    fn avgpool_matches_table_i() {
+        for (m, s, k) in [(4u32, 4u64, 4u64), (8, 4, 16), (8, 16, 8)] {
+            let m64 = m as u64;
+            let rt = avgpool(m, s, k, ApKind::OneD).events.time_units();
+            let sum: u64 = (1..=clog2(s) as u64).map(|q| 8 * (m64 + q - 1)).sum();
+            let expect = 2 * m64 + 2 * k * (s / 2 - 1) + sum + m64;
+            assert_eq!(rt, expect, "1D M={m} S={s} K={k}");
+            let rt = avgpool(m, s, k, ApKind::TwoD).events.time_units();
+            let expect = 2 * m64 + 8 * m64 + 8 * k * (s / 2 - 1) + m64;
+            assert_eq!(rt, expect, "2D M={m} S={s} K={k}");
+            let rt = avgpool(m, s, k, ApKind::TwoDSeg).events.time_units();
+            let expect = 2 * m64 + 8 * m64 + 8 * clog2(s / 2) as u64 + m64;
+            assert_eq!(rt, expect, "2Dseg M={m} S={s} K={k}");
+        }
+    }
+
+    /// Fig. 5 sanity: segmentation is always fastest; per Table I's own
+    /// formulas the *unsegmented* 2D AP pays 8 units per row pair versus the
+    /// 1D AP's 2-unit word transfers, so at large L the 1D AP's runtime is
+    /// actually lower (the 2D AP's advantage is the segmented mode — and,
+    /// architecturally, not needing inter-row transfer bandwidth).
+    #[test]
+    fn kind_ordering_for_reduction_heavy_ops() {
+        let l = 4096;
+        let r1 = reduce(8, l, ApKind::OneD).events.time_units();
+        let r2 = reduce(8, l, ApKind::TwoD).events.time_units();
+        let r3 = reduce(8, l, ApKind::TwoDSeg).events.time_units();
+        assert!(r3 < r1 && r3 < r2, "seg {r3} must beat 1D {r1} and 2D {r2}");
+        let m1 = matmat(8, 8, 8, 64, 8, ApKind::OneD).events.time_units();
+        let m2 = matmat(8, 8, 8, 64, 8, ApKind::TwoD).events.time_units();
+        let m3 = matmat(8, 8, 8, 64, 8, ApKind::TwoDSeg).events.time_units();
+        assert!(m3 < m1 && m3 < m2, "seg {m3} must beat 1D {m1} and 2D {m2}");
+        // Small-L regime: 2D beats 1D once the log-growth addition rounds
+        // dominate the transfer count.
+        let s1 = reduce(16, 8, ApKind::OneD).events.time_units();
+        let s2 = reduce(16, 8, ApKind::TwoD).events.time_units();
+        assert!(s2 < s1, "2D {s2} must beat 1D {s1} at small L");
+    }
+
+    /// Cell-activity totals are positive and populate scales with words.
+    #[test]
+    fn cell_activity_scales_with_words() {
+        let small = matmat(8, 8, 2, 8, 2, ApKind::TwoD).cells;
+        let large = matmat(8, 8, 4, 8, 4, ApKind::TwoD).cells;
+        assert!(large.populate_write_cells > small.populate_write_cells);
+        assert!(large.compare_senses > small.compare_senses);
+    }
+
+    /// Energy ordering: ReRAM must cost more than SRAM for any op.
+    #[test]
+    fn reram_energy_exceeds_sram() {
+        use crate::ap::tech::Tech;
+        let c = matmat(8, 8, 4, 16, 4, ApKind::TwoD).cells;
+        assert!(Tech::reram().energy(&c) > Tech::sram().energy(&c));
+    }
+}

@@ -1,0 +1,77 @@
+//! Computation-AP (CAP) and Memory-AP (MAP) geometry.
+//!
+//! Table V: each AP is `4800 x (2*8)` — 4800 rows, each holding two 8-bit
+//! word slots. For GEMM each row stores one (activation, weight) operand
+//! pair and accumulates one product (§III-B), so a CAP contributes 4800
+//! concurrent multiply-accumulate lanes; the two word slots per row give
+//! the chip-level peak model `2 x 4800` MAC-pairs per CAP used by Table
+//! VIII (peak convolution assumes both slots active).
+
+use crate::ap::tech::Tech;
+
+/// Geometry of one AP (CAP or MAP).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CapGeometry {
+    /// CAM rows.
+    pub rows: u64,
+    /// Word slots per row.
+    pub words_per_row: u64,
+    /// Bits per word slot (Table V: supported bitwidth up to 8).
+    pub word_bits: u64,
+}
+
+impl CapGeometry {
+    /// Table V geometry: 4800 x (2*8).
+    pub fn table_v() -> Self {
+        Self { rows: 4800, words_per_row: 2, word_bits: 8 }
+    }
+
+    /// Total bit-cells (data columns x rows).
+    pub fn cells(&self) -> u64 {
+        self.rows * self.words_per_row * self.word_bits
+    }
+
+    /// GEMM capacity: product rows (one operand pair + accumulator each).
+    pub fn gemm_rows(&self) -> u64 {
+        self.rows
+    }
+
+    /// Word capacity for element-wise ops (two words per row).
+    pub fn word_capacity(&self) -> u64 {
+        self.rows * self.words_per_row
+    }
+
+    /// Peak MAC lanes for the Table VIII peak model (both word slots busy).
+    pub fn peak_mac_lanes(&self) -> u64 {
+        self.rows * self.words_per_row
+    }
+
+    /// Silicon area of this AP under a technology, m².
+    pub fn area_m2(&self, tech: &Tech) -> f64 {
+        self.cells() as f64 * tech.cell_area_m2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_v_geometry() {
+        let g = CapGeometry::table_v();
+        assert_eq!(g.rows, 4800);
+        assert_eq!(g.cells(), 4800 * 16);
+        assert_eq!(g.gemm_rows(), 4800);
+        assert_eq!(g.word_capacity(), 9600);
+        assert_eq!(g.peak_mac_lanes(), 9600);
+    }
+
+    #[test]
+    fn area_follows_tech() {
+        let g = CapGeometry::table_v();
+        let s = g.area_m2(&Tech::sram());
+        let r = g.area_m2(&Tech::reram());
+        assert!(s > r);
+        assert!(s > 0.0);
+    }
+}

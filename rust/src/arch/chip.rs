@@ -1,0 +1,185 @@
+//! Chip-level hardware configuration: IR vs LR (paper §III-A).
+
+use super::cluster::ClusterGeometry;
+use super::mesh::Mesh;
+use crate::ap::tech::Tech;
+use crate::model::Network;
+
+/// AP clock frequency (Table V).
+pub const AP_FREQ_HZ: f64 = 1e9;
+
+/// Which hardware configuration a simulation targets.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum HwConfig {
+    /// Infinite Resources — full spatial unrolling of the largest layer,
+    /// one big cluster (§III-A "Maximum Parallelism").
+    Ir,
+    /// Limited Resources — Table V's 8x8 clusters of 8x8 CAPs with
+    /// weight-stationary time folding.
+    Lr,
+}
+
+impl HwConfig {
+    /// Both configurations, LR first (the practical design).
+    pub const ALL: [HwConfig; 2] = [HwConfig::Lr, HwConfig::Ir];
+
+    /// Label used in report tables.
+    pub fn label(&self) -> &'static str {
+        match self {
+            HwConfig::Ir => "IR",
+            HwConfig::Lr => "LR",
+        }
+    }
+}
+
+/// A fully-specified chip: cluster grid + geometry + clocks.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ChipConfig {
+    pub hw: HwConfig,
+    pub clusters_x: u64,
+    pub clusters_y: u64,
+    pub cluster: ClusterGeometry,
+    pub mesh: Mesh,
+    /// AP clock, Hz.
+    pub freq_hz: f64,
+}
+
+impl ChipConfig {
+    /// Table V LR chip: 8x8 clusters of 8x8 CAPs at 1 GHz.
+    pub fn lr() -> Self {
+        Self {
+            hw: HwConfig::Lr,
+            clusters_x: 8,
+            clusters_y: 8,
+            cluster: ClusterGeometry::table_v(),
+            mesh: Mesh::table_v(),
+            freq_hz: AP_FREQ_HZ,
+        }
+    }
+
+    /// CAPs a GEMM of the given dimensions needs to run in a single step,
+    /// under the mapper's packing discipline: sub-contractions of `j_sub`
+    /// rows are packed whole into CAPs (no group may straddle a CAP), so a
+    /// CAP holds `floor(cap_rows / j_sub)` groups.
+    pub fn caps_for_gemm(g: &crate::model::gemm::GemmDims, cap_rows: u64) -> u64 {
+        let j_fold = g.j.div_ceil(cap_rows).max(1);
+        let j_sub = g.j.div_ceil(j_fold);
+        let groups_per_cap = (cap_rows / j_sub).max(1);
+        let groups_total = g.i * g.u * j_fold;
+        groups_total.div_ceil(groups_per_cap)
+    }
+
+    /// IR chip sized for a network: one cluster with enough CAPs that the
+    /// largest layer's GEMM fits in a single step (§III-A), rounded up to a
+    /// square-ish grid. Sizing uses the same group-packing discipline as the
+    /// mapper so IR genuinely never time-folds.
+    pub fn ir_for(net: &Network) -> Self {
+        let cap = super::cap::CapGeometry::table_v();
+        let caps_needed = net
+            .layers
+            .iter()
+            .filter_map(|l| l.gemm_dims())
+            .map(|g| Self::caps_for_gemm(&g, cap.gemm_rows()))
+            .max()
+            .unwrap_or(1)
+            .max(1);
+        let side = (caps_needed as f64).sqrt().ceil() as u64;
+        // The IR mesh grows with the chip: one LR-class 1024-bit link per
+        // 64 CAPs (the LR ratio), so aggregate streaming bandwidth scales
+        // with the spatially-unrolled compute (§III-A assumes a
+        // "sufficiently large MAP for streaming inputs to CAPs through an
+        // on-chip mesh" — a fixed link would starve a maximum-parallelism
+        // chip and contradict the paper's layer-count-bound IR latency).
+        let mut mesh = Mesh::table_v();
+        mesh.bits_per_transfer *= (caps_needed / 64).max(1);
+        Self {
+            hw: HwConfig::Ir,
+            clusters_x: 1,
+            clusters_y: 1,
+            cluster: ClusterGeometry { caps_x: side, caps_y: caps_needed.div_ceil(side), ..ClusterGeometry::table_v() },
+            mesh,
+            freq_hz: AP_FREQ_HZ,
+        }
+    }
+
+    /// Build for a configuration + network.
+    pub fn for_network(hw: HwConfig, net: &Network) -> Self {
+        match hw {
+            HwConfig::Lr => Self::lr(),
+            HwConfig::Ir => Self::ir_for(net),
+        }
+    }
+
+    /// Cluster count.
+    pub fn clusters(&self) -> u64 {
+        self.clusters_x * self.clusters_y
+    }
+
+    /// Total CAPs on chip (Table V LR: 4096).
+    pub fn total_caps(&self) -> u64 {
+        self.clusters() * self.cluster.caps()
+    }
+
+    /// Total GEMM product rows the chip holds at once.
+    pub fn total_gemm_rows(&self) -> u64 {
+        self.clusters() * self.cluster.gemm_rows()
+    }
+
+    /// Total word capacity for element-wise ops.
+    pub fn total_word_capacity(&self) -> u64 {
+        self.clusters() * self.cluster.word_capacity()
+    }
+
+    /// Die area under a technology, m² (Table V: 137.45 mm² for SRAM LR).
+    pub fn area_m2(&self, tech: &Tech) -> f64 {
+        self.clusters() as f64 * self.cluster.area_m2(tech)
+    }
+
+    /// Die area in mm².
+    pub fn area_mm2(&self, tech: &Tech) -> f64 {
+        self.area_m2(tech) * 1e6
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+
+    #[test]
+    fn lr_matches_table_v() {
+        let c = ChipConfig::lr();
+        assert_eq!(c.total_caps(), 4096);
+        assert_eq!(c.clusters(), 64);
+        let area = c.area_mm2(&Tech::sram());
+        assert!((area - 137.45).abs() < 0.01, "area {area}");
+    }
+
+    #[test]
+    fn ir_fits_largest_layer() {
+        let net = zoo::vgg16();
+        let c = ChipConfig::ir_for(&net);
+        let largest = net.layers.iter().filter_map(|l| l.gemm_dims()).map(|g| g.ap_words()).max().unwrap();
+        assert!(c.total_gemm_rows() >= largest);
+        assert_eq!(c.clusters(), 1);
+    }
+
+    #[test]
+    fn ir_is_much_larger_than_lr_for_vgg() {
+        // §V-A: IR has "up to 4 orders of magnitude lower energy-area
+        // efficiency due to the huge area" (the efficiency gap combines
+        // area and power; the area alone is ~2 orders for VGG16).
+        let net = zoo::vgg16();
+        let ir = ChipConfig::ir_for(&net);
+        let lr = ChipConfig::lr();
+        let t = Tech::sram();
+        assert!(ir.area_m2(&t) > 50.0 * lr.area_m2(&t));
+    }
+
+    #[test]
+    fn for_network_dispatch() {
+        let net = zoo::alexnet();
+        assert_eq!(ChipConfig::for_network(HwConfig::Lr, &net).hw, HwConfig::Lr);
+        assert_eq!(ChipConfig::for_network(HwConfig::Ir, &net).hw, HwConfig::Ir);
+    }
+}

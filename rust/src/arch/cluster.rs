@@ -1,0 +1,66 @@
+//! Cluster geometry: a grid of CAPs plus one MAP (paper Fig. 3).
+
+use super::cap::CapGeometry;
+use crate::ap::tech::Tech;
+
+/// One cluster: `caps_x x caps_y` CAPs + 1 MAP, private mesh.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ClusterGeometry {
+    pub caps_x: u64,
+    pub caps_y: u64,
+    pub cap: CapGeometry,
+    pub map: CapGeometry,
+}
+
+impl ClusterGeometry {
+    /// Table V cluster: 8x8 CAPs, one MAP, both 4800 x (2*8).
+    pub fn table_v() -> Self {
+        Self {
+            caps_x: 8,
+            caps_y: 8,
+            cap: CapGeometry::table_v(),
+            map: CapGeometry::table_v(),
+        }
+    }
+
+    /// CAPs per cluster.
+    pub fn caps(&self) -> u64 {
+        self.caps_x * self.caps_y
+    }
+
+    /// GEMM product-row capacity of the whole cluster.
+    pub fn gemm_rows(&self) -> u64 {
+        self.caps() * self.cap.gemm_rows()
+    }
+
+    /// Word capacity of the whole cluster (element-wise ops).
+    pub fn word_capacity(&self) -> u64 {
+        self.caps() * self.cap.word_capacity()
+    }
+
+    /// Silicon area (CAPs + MAP), m².
+    pub fn area_m2(&self, tech: &Tech) -> f64 {
+        self.caps() as f64 * self.cap.area_m2(tech) + self.map.area_m2(tech)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_v_cluster() {
+        let c = ClusterGeometry::table_v();
+        assert_eq!(c.caps(), 64);
+        assert_eq!(c.gemm_rows(), 64 * 4800);
+        assert_eq!(c.word_capacity(), 64 * 9600);
+    }
+
+    #[test]
+    fn area_includes_map() {
+        let c = ClusterGeometry::table_v();
+        let t = Tech::sram();
+        let caps_only = c.caps() as f64 * c.cap.area_m2(&t);
+        assert!(c.area_m2(&t) > caps_only);
+    }
+}

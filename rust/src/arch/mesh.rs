@@ -1,0 +1,111 @@
+//! On-chip mesh interconnect model (Table V + Dally et al. [6]).
+//!
+//! Table V: mesh at 500 MHz (half the AP clock), 1024 bits per transfer,
+//! average hop count 3.815. The paper sources "energy per transfer per mm"
+//! from Dally/Turakhia/Han's *Domain-Specific Hardware Accelerators* but
+//! does not print the value; we use the standard on-chip interconnect
+//! figure from that line of work, ≈0.05 pJ/bit/mm at this node class, and
+//! expose it as a tunable so the sensitivity ablation in
+//! `benches/fig6_tech_ratios` can sweep it.
+
+/// One transfer's worth of bits (Table V).
+pub const BITS_PER_TRANSFER: u64 = 1024;
+/// Mesh clock, Hz (Table V: half the 1 GHz AP clock).
+pub const MESH_FREQ_HZ: f64 = 500e6;
+/// Average hops per transfer (Table V).
+pub const AVG_HOPS: f64 = 3.815;
+/// Interconnect energy per bit per millimeter (Dally et al. [6] class
+/// figure for 16 nm on-chip wires).
+pub const ENERGY_PJ_PER_BIT_MM: f64 = 0.05;
+
+/// Mesh interconnect cost model.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Mesh {
+    pub bits_per_transfer: u64,
+    pub freq_hz: f64,
+    pub avg_hops: f64,
+    /// Physical hop length, mm (chip side / cluster-grid side).
+    pub hop_mm: f64,
+    /// Energy per bit per mm, joules.
+    pub e_bit_mm: f64,
+}
+
+impl Mesh {
+    /// Table V mesh for the LR chip: hop length derived from the 137.45 mm²
+    /// die (side ≈ 11.7 mm) split across the 8-cluster grid (≈1.47 mm).
+    pub fn table_v() -> Self {
+        let die_side_mm = (137.45f64).sqrt();
+        Self {
+            bits_per_transfer: BITS_PER_TRANSFER,
+            freq_hz: MESH_FREQ_HZ,
+            avg_hops: AVG_HOPS,
+            hop_mm: die_side_mm / 8.0,
+            e_bit_mm: ENERGY_PJ_PER_BIT_MM * 1e-12,
+        }
+    }
+
+    /// Number of 1024-bit beats to move `bits`.
+    pub fn transfers(&self, bits: u64) -> u64 {
+        bits.div_ceil(self.bits_per_transfer)
+    }
+
+    /// Wall-clock seconds to move `bits` over the average path, assuming
+    /// transfers pipeline one beat per mesh cycle plus the hop latency of
+    /// the first beat (wormhole routing).
+    pub fn latency_s(&self, bits: u64) -> f64 {
+        if bits == 0 {
+            return 0.0;
+        }
+        let beats = self.transfers(bits) as f64;
+        (beats + self.avg_hops) / self.freq_hz
+    }
+
+    /// Energy in joules to move `bits` over the average path.
+    pub fn energy_j(&self, bits: u64) -> f64 {
+        bits as f64 * self.avg_hops * self.hop_mm * self.e_bit_mm
+    }
+
+    /// Peak bandwidth, bits/s.
+    pub fn bandwidth_bps(&self) -> f64 {
+        self.bits_per_transfer as f64 * self.freq_hz
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_v_mesh_constants() {
+        let m = Mesh::table_v();
+        assert_eq!(m.bits_per_transfer, 1024);
+        assert_eq!(m.freq_hz, 500e6);
+        assert!((m.avg_hops - 3.815).abs() < 1e-12);
+        assert!(m.hop_mm > 1.0 && m.hop_mm < 2.0);
+    }
+
+    #[test]
+    fn transfers_round_up() {
+        let m = Mesh::table_v();
+        assert_eq!(m.transfers(0), 0);
+        assert_eq!(m.transfers(1), 1);
+        assert_eq!(m.transfers(1024), 1);
+        assert_eq!(m.transfers(1025), 2);
+    }
+
+    #[test]
+    fn latency_and_energy_scale_with_bits() {
+        let m = Mesh::table_v();
+        assert_eq!(m.latency_s(0), 0.0);
+        assert!(m.latency_s(1 << 20) > m.latency_s(1 << 10));
+        let e1 = m.energy_j(1 << 10);
+        let e2 = m.energy_j(1 << 11);
+        assert!((e2 / e1 - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bandwidth_is_512_gbps() {
+        let m = Mesh::table_v();
+        assert!((m.bandwidth_bps() - 1024.0 * 500e6).abs() < 1.0);
+    }
+}

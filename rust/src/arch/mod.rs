@@ -1,0 +1,20 @@
+//! BF-IMNA chip architecture (paper §III-A, Fig. 3, Table V).
+//!
+//! The chip is a grid of **clusters**; each cluster holds a grid of
+//! **Computation APs (CAPs)** plus one **Memory AP (MAP)**, all connected by
+//! an on-chip mesh. Two hardware configurations are modeled:
+//!
+//! * **IR** (Infinite Resources / maximum parallelism): one large cluster
+//!   sized so the largest layer computes in a single step;
+//! * **LR** (Limited Resources): Table V's 8x8 clusters of 8x8 CAPs with
+//!   weight-stationary time folding.
+
+pub mod cap;
+pub mod chip;
+pub mod cluster;
+pub mod mesh;
+
+pub use cap::CapGeometry;
+pub use chip::{ChipConfig, HwConfig};
+pub use cluster::ClusterGeometry;
+pub use mesh::Mesh;

@@ -1,0 +1,194 @@
+//! BF-IMNA peak performance model (the BF-IMNA rows of Table VIII).
+//!
+//! §V-C: "for a fair comparison, we assume only convolution is performed
+//! when calculating GOPS and energy efficiency, and we report peak values".
+//! Peak convolution on the AP is the steady state of the bit-serial GEMM
+//! inner loop with every MAC lane busy:
+//!
+//! * **Throughput.** Each lane retires one M-bit MAC per
+//!   `rt_multiply(M) + 8` time units — the Table I multiplication runtime
+//!   (`2M + 8M² + 2M`) plus one vertical in-place-addition pass group
+//!   (4 compares + 4 writes) to fold the product into the accumulator. At
+//!   peak, compare and write phases issue back-to-back at the 1 GHz AP
+//!   clock (one phase per cycle — the pipelined steady state; the
+//!   end-to-end simulator instead charges 2 cycles per SRAM write, which
+//!   is the non-pipelined worst case). The chip provides
+//!   `4096 CAPs x 9600` lanes (both word slots of every row busy).
+//! * **Energy.** Word-sense events dominate: `4M²` multiply passes plus
+//!   `8M + 4` accumulate-pass senses per MAC. At peak only the selected
+//!   column pair's differential discharge is charged, `~10 fJ`/word-sense
+//!   (0.4 x the full 25 fJ sense-capacitor energy the conservative
+//!   end-to-end simulator uses; here ~9.6 fJ) — this single factor is calibrated once
+//!   against the published BF-IMNA_8b efficiency (641 GOPS/W) and then
+//!   *validated* (not re-fit) at 16-bit (modeled 173 vs published 170) and
+//!   1-bit (modeled ~12.4k vs published ~22.9k GOPS/W).
+//!
+//! With no further tuning the model lands within ~5% of the published
+//! BF-IMNA GOPS at 8-bit, ~11% at 16-bit, and ~40% at 1-bit — close
+//! enough that every Table VIII *comparison* (who wins, by what factor)
+//! reproduces.
+
+use super::PaperBfRow;
+use crate::ap::tech::Tech;
+use crate::arch::ChipConfig;
+
+/// Peak-mode effective sense energy, joules per word-sense (see module
+/// docs for the calibration protocol: fit once so the 8-bit row lands on
+/// the published 641 GOPS/W, then validated unchanged at 16-bit and 1-bit).
+pub const PEAK_SENSE_ENERGY_J: f64 = 9.6e-15;
+
+/// One modeled BF-IMNA peak row.
+#[derive(Debug, Clone, Copy)]
+pub struct PeakRow {
+    pub precision: u32,
+    /// Peak throughput, GOPS.
+    pub gops: f64,
+    /// Peak energy efficiency, GOPS/W.
+    pub gops_per_w: f64,
+    /// Die area, mm².
+    pub area_mm2: f64,
+}
+
+impl PeakRow {
+    /// Energy-area efficiency, GOPS/W/mm² (§V-C compares this vs H100).
+    pub fn gops_per_w_mm2(&self) -> f64 {
+        self.gops_per_w / self.area_mm2
+    }
+}
+
+/// Peak AP time units per M-bit MAC: Table I multiplication runtime plus
+/// one vertical add pass group.
+pub fn peak_cycles_per_mac(m: u32) -> f64 {
+    let m = m as f64;
+    (2.0 * m + 8.0 * m * m + 2.0 * m) + 8.0
+}
+
+/// Peak word-sense events per M-bit MAC: multiply passes + accumulate.
+pub fn peak_senses_per_mac(m: u32) -> f64 {
+    let m = m as f64;
+    4.0 * m * m + 8.0 * m + 4.0
+}
+
+/// Peak written cells per M-bit MAC (LUT write activity, average match
+/// rates as in the runtime models).
+pub fn peak_write_cells_per_mac(m: u32) -> f64 {
+    let m = m as f64;
+    // Gated-multiply passes match 1/16 of words, ~1.5 cells per match;
+    // accumulate passes match 1/8.
+    4.0 * m * m * (1.0 / 16.0) * 1.5 + 4.0 * (1.0 / 8.0) * 1.5 * (2.0 * m + 1.0)
+}
+
+/// Model one peak row at precision `m` on the LR chip under `tech`.
+pub fn peak_row(m: u32, tech: &Tech) -> PeakRow {
+    let chip = ChipConfig::lr();
+    let lanes = (chip.total_caps() * chip.cluster.cap.peak_mac_lanes()) as f64;
+    let macs_per_s = lanes * chip.freq_hz / peak_cycles_per_mac(m);
+    let gops = 2.0 * macs_per_s / 1e9;
+    let energy_per_mac = peak_senses_per_mac(m) * PEAK_SENSE_ENERGY_J
+        + peak_write_cells_per_mac(m) * tech.e_write_cell;
+    let gops_per_w = 2.0 / energy_per_mac / 1e9;
+    PeakRow { precision: m, gops, gops_per_w, area_mm2: chip.area_mm2(tech) }
+}
+
+/// The three BF-IMNA rows of Table VIII (1/8/16-bit, SRAM LR chip).
+pub fn bf_imna_rows() -> Vec<PeakRow> {
+    let tech = Tech::sram();
+    [1u32, 8, 16].iter().map(|&m| peak_row(m, &tech)).collect()
+}
+
+/// Relative error of a modeled row against the published row.
+pub fn relative_error(modeled: &PeakRow, paper: &PaperBfRow) -> (f64, f64) {
+    (
+        (modeled.gops - paper.gops) / paper.gops,
+        (modeled.gops_per_w - paper.gops_per_w) / paper.gops_per_w,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::{record, PAPER_BF_ROWS};
+
+    #[test]
+    fn modeled_8b_row_close_to_published() {
+        let row = peak_row(8, &Tech::sram());
+        let paper = PAPER_BF_ROWS[1];
+        let (eg, ee) = relative_error(&row, &paper);
+        assert!(eg.abs() < 0.10, "GOPS error {eg:.2} ({} vs {})", row.gops, paper.gops);
+        assert!(ee.abs() < 0.10, "GOPS/W error {ee:.2} ({} vs {})", row.gops_per_w, paper.gops_per_w);
+    }
+
+    #[test]
+    fn modeled_16b_row_close_to_published() {
+        let row = peak_row(16, &Tech::sram());
+        let paper = PAPER_BF_ROWS[2];
+        let (eg, ee) = relative_error(&row, &paper);
+        assert!(eg.abs() < 0.20, "GOPS error {eg:.2}");
+        assert!(ee.abs() < 0.20, "GOPS/W error {ee:.2}");
+    }
+
+    #[test]
+    fn modeled_1b_row_same_order_of_magnitude() {
+        let row = peak_row(1, &Tech::sram());
+        let paper = PAPER_BF_ROWS[0];
+        assert!(row.gops / paper.gops > 0.5 && row.gops / paper.gops < 2.0);
+        assert!(row.gops_per_w / paper.gops_per_w > 0.3 && row.gops_per_w / paper.gops_per_w < 3.0);
+    }
+
+    #[test]
+    fn table_viii_comparisons_reproduce() {
+        // §V-C at 16-bit: ~1.02x ISAAC throughput, ~3.66x lower energy
+        // efficiency; ~2.95x lower throughput than PipeLayer, ~1.19x higher
+        // efficiency. Shape check: same winners, factors within ~25%.
+        let bf16 = peak_row(16, &Tech::sram());
+        let isaac = record("ISAAC");
+        let pipelayer = record("PipeLayer");
+        let thr_isaac = bf16.gops / isaac.gops;
+        assert!(thr_isaac > 0.8 && thr_isaac < 1.3, "vs ISAAC throughput {thr_isaac:.2}");
+        let eff_isaac = isaac.gops_per_w / bf16.gops_per_w;
+        assert!(eff_isaac > 2.7 && eff_isaac < 4.6, "vs ISAAC efficiency {eff_isaac:.2}");
+        let thr_pipe = pipelayer.gops / bf16.gops;
+        assert!(thr_pipe > 2.2 && thr_pipe < 3.7, "vs PipeLayer throughput {thr_pipe:.2}");
+        let eff_pipe = bf16.gops_per_w / pipelayer.gops_per_w;
+        assert!(eff_pipe > 0.9 && eff_pipe < 1.5, "vs PipeLayer efficiency {eff_pipe:.2}");
+    }
+
+    #[test]
+    fn int8_beats_isaac_and_pipelayer() {
+        // §V-C: "For INT8, BF-IMNA achieves better throughput and energy
+        // efficiency than ISAAC and PipeLayer".
+        let bf8 = peak_row(8, &Tech::sram());
+        for name in ["ISAAC", "PipeLayer"] {
+            let r = record(name);
+            assert!(bf8.gops > r.gops, "throughput vs {name}");
+            assert!(bf8.gops_per_w > r.gops_per_w, "efficiency vs {name}");
+        }
+    }
+
+    #[test]
+    fn energy_area_efficiency_beats_h100_at_8b() {
+        // §V-C: BF-IMNA ~8 GOPS/W/mm² at 8-bit, ~2.7x better than H100's ~3.
+        let bf8 = peak_row(8, &Tech::sram());
+        let h100 = record("H100 GPU");
+        let h100_eff = h100.gops_per_w / h100.area_mm2.unwrap();
+        let ratio = bf8.gops_per_w_mm2() / h100_eff;
+        assert!(ratio > 1.0, "vs H100 energy-area efficiency {ratio:.2}");
+    }
+
+    #[test]
+    fn rows_monotone_in_precision() {
+        let rows = bf_imna_rows();
+        assert_eq!(rows.len(), 3);
+        for w in rows.windows(2) {
+            assert!(w[0].gops > w[1].gops);
+            assert!(w[0].gops_per_w > w[1].gops_per_w);
+        }
+    }
+
+    #[test]
+    fn peak_cycles_match_table_i_multiply() {
+        // 8-bit: 2M + 8M² + 2M = 544, + 8 accumulate units = 552.
+        assert_eq!(peak_cycles_per_mac(8), 552.0);
+        assert_eq!(peak_cycles_per_mac(1), 20.0);
+    }
+}

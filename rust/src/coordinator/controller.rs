@@ -1,0 +1,238 @@
+//! The bit-fluid precision controller — the serving-side embodiment of the
+//! paper's central claim.
+//!
+//! Because the AP computes bit-serially, BF-IMNA switches per-layer
+//! precision configurations at run time with **zero reconfiguration
+//! overhead** (§V-B: "BF-IMNA allows switching between the three
+//! mixed-precision configurations dynamically, as imposed by the changing
+//! runtime resource requirements"). This controller performs exactly that
+//! switch: each request carries a latency budget; the controller picks the
+//! *highest-quality* (most bits, best accuracy) configuration whose
+//! predicted latency fits the budget, learning per-(config, batch) latency
+//! online with an exponential moving average seeded by the BF-IMNA
+//! simulator's relative cost estimates.
+
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+/// A request's latency budget class (Table VII's constraint labels).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Budget {
+    /// Tight deadline — favour INT4-heavy configs.
+    Low,
+    /// Intermediate deadline.
+    Medium,
+    /// Loose deadline — favour accuracy (INT8/float).
+    High,
+}
+
+impl Budget {
+    /// All classes, tightest first.
+    pub const ALL: [Budget; 3] = [Budget::Low, Budget::Medium, Budget::High];
+
+    /// Label used in logs and tables.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Budget::Low => "low",
+            Budget::Medium => "medium",
+            Budget::High => "high",
+        }
+    }
+}
+
+/// Per-budget latency targets.
+#[derive(Debug, Clone)]
+pub struct BudgetTargets {
+    pub low: Duration,
+    pub medium: Duration,
+    pub high: Duration,
+}
+
+impl BudgetTargets {
+    /// Target for a class.
+    pub fn target(&self, b: Budget) -> Duration {
+        match b {
+            Budget::Low => self.low,
+            Budget::Medium => self.medium,
+            Budget::High => self.high,
+        }
+    }
+}
+
+impl Default for BudgetTargets {
+    /// Defaults sized for the CPU-PJRT serve CNN (ms scale); the serving
+    /// example overrides them from its calibration pass.
+    fn default() -> Self {
+        Self {
+            low: Duration::from_millis(30),
+            medium: Duration::from_millis(120),
+            high: Duration::from_millis(500),
+        }
+    }
+}
+
+/// EMA smoothing factor for observed latencies.
+const EMA_ALPHA: f64 = 0.3;
+
+/// Safety margin: predicted latency must fit in `target * MARGIN`.
+const MARGIN: f64 = 0.9;
+
+/// Online latency model + quality ladder.
+#[derive(Debug, Clone)]
+pub struct PrecisionController {
+    /// Config names in descending quality (avg bits) order.
+    ladder: Vec<String>,
+    targets: BudgetTargets,
+    /// EMA of observed per-batch latency, seconds, by (config, batch).
+    ema: BTreeMap<(String, u64), f64>,
+    /// Fallback relative cost (~avg_bits²-ish) used before observations.
+    prior_scale: BTreeMap<String, f64>,
+    /// Prior absolute latency for the cheapest config, seconds.
+    prior_base_s: f64,
+}
+
+impl PrecisionController {
+    /// Build from a quality ladder (descending avg bits) and per-config
+    /// average bitwidths. `prior_base_s` seeds the absolute scale of the
+    /// latency prior (e.g. the simulator's estimate or a calibration run).
+    pub fn new(
+        ladder: Vec<String>,
+        avg_bits: &BTreeMap<String, f64>,
+        targets: BudgetTargets,
+        prior_base_s: f64,
+    ) -> Self {
+        // Bit-serial cost grows ~quadratically with precision (8M² multiply
+        // passes dominate) — the same scaling Table I gives the AP.
+        let min_bits = avg_bits.values().cloned().fold(f64::MAX, f64::min).max(1.0);
+        let prior_scale = avg_bits
+            .iter()
+            .map(|(k, &b)| (k.clone(), (b / min_bits).powi(2)))
+            .collect();
+        Self { ladder, targets, ema: BTreeMap::new(), prior_scale, prior_base_s }
+    }
+
+    /// Predicted per-batch latency, seconds.
+    pub fn predict(&self, config: &str, batch: u64) -> f64 {
+        if let Some(&s) = self.ema.get(&(config.to_string(), batch)) {
+            return s;
+        }
+        let scale = self.prior_scale.get(config).copied().unwrap_or(1.0);
+        // Batches amortize: assume linear growth with a fixed overhead.
+        self.prior_base_s * scale * (0.5 + 0.5 * batch as f64)
+    }
+
+    /// Record an observed execution.
+    pub fn observe(&mut self, config: &str, batch: u64, seconds: f64) {
+        let key = (config.to_string(), batch);
+        let e = self.ema.entry(key).or_insert(seconds);
+        *e = (1.0 - EMA_ALPHA) * *e + EMA_ALPHA * seconds;
+    }
+
+    /// Pick the highest-quality config whose predicted latency fits the
+    /// budget at this batch size; falls back to the cheapest config.
+    pub fn pick(&self, budget: Budget, batch: u64) -> String {
+        let target = self.targets.target(budget).as_secs_f64() * MARGIN;
+        for config in &self.ladder {
+            if self.predict(config, batch) <= target {
+                return config.clone();
+            }
+        }
+        self.ladder.last().cloned().unwrap_or_else(|| "int8".to_string())
+    }
+
+    /// The quality ladder (descending bits).
+    pub fn ladder(&self) -> &[String] {
+        &self.ladder
+    }
+
+    /// The configured targets.
+    pub fn targets(&self) -> &BudgetTargets {
+        &self.targets
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn controller() -> PrecisionController {
+        let ladder = vec!["int8".to_string(), "mixed".to_string(), "int4".to_string()];
+        let bits: BTreeMap<String, f64> = [
+            ("int8".to_string(), 8.0),
+            ("mixed".to_string(), 6.0),
+            ("int4".to_string(), 4.0),
+        ]
+        .into();
+        PrecisionController::new(
+            ladder,
+            &bits,
+            BudgetTargets {
+                low: Duration::from_millis(10),
+                medium: Duration::from_millis(40),
+                high: Duration::from_millis(1000),
+            },
+            0.004, // 4 ms base for the cheapest config at batch 1
+        )
+    }
+
+    #[test]
+    fn loose_budget_picks_highest_quality() {
+        let c = controller();
+        assert_eq!(c.pick(Budget::High, 1), "int8");
+    }
+
+    #[test]
+    fn tight_budget_degrades_quality() {
+        let c = controller();
+        // Priors: int4 = 4ms, mixed = 4*(6/4)² = 9ms, int8 = 16ms at b=1.
+        // Low target 10ms*0.9 = 9ms -> mixed just fits; int8 does not.
+        assert_eq!(c.pick(Budget::Low, 1), "mixed");
+        assert_eq!(c.pick(Budget::Medium, 1), "int8");
+        // Tighten below the mixed prior -> int4.
+        let mut c2 = c.clone();
+        c2.observe("mixed", 1, 0.02);
+        c2.observe("int4", 1, 0.004);
+        assert_eq!(c2.pick(Budget::Low, 1), "int4");
+    }
+
+    #[test]
+    fn observations_override_priors() {
+        let mut c = controller();
+        // int8 actually runs in 1 ms -> even the tight budget fits it.
+        for _ in 0..20 {
+            c.observe("int8", 1, 0.001);
+        }
+        assert_eq!(c.pick(Budget::Low, 1), "int8");
+    }
+
+    #[test]
+    fn ema_converges_toward_observations() {
+        let mut c = controller();
+        c.observe("int4", 1, 0.008);
+        for _ in 0..50 {
+            c.observe("int4", 1, 0.002);
+        }
+        assert!((c.predict("int4", 1) - 0.002).abs() < 2e-4);
+    }
+
+    #[test]
+    fn larger_batches_predict_longer() {
+        let c = controller();
+        assert!(c.predict("int8", 8) > c.predict("int8", 1));
+    }
+
+    #[test]
+    fn falls_back_to_cheapest_when_nothing_fits() {
+        let mut c = controller();
+        for cfg in ["int8", "mixed", "int4"] {
+            c.observe(cfg, 1, 10.0); // everything is slow
+        }
+        assert_eq!(c.pick(Budget::Low, 1), "int4");
+    }
+
+    #[test]
+    fn budget_labels() {
+        assert_eq!(Budget::Low.label(), "low");
+        assert_eq!(Budget::ALL.len(), 3);
+    }
+}

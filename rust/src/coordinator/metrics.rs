@@ -1,0 +1,119 @@
+//! Serving metrics: request counts, latency distribution, per-config and
+//! per-batch-size usage.
+
+use std::collections::BTreeMap;
+
+use crate::util::stats;
+
+/// Aggregated serving metrics (guarded by a mutex in the coordinator).
+#[derive(Debug, Default, Clone)]
+pub struct Metrics {
+    /// Completed requests.
+    pub completed: u64,
+    /// Requests that failed (runtime error surfaced to the client).
+    pub failed: u64,
+    /// Executed batches.
+    pub batches: u64,
+    /// Total samples padded (wasted work in partial batches).
+    pub padded_samples: u64,
+    /// End-to-end per-request latency samples, seconds.
+    pub request_latencies: Vec<f64>,
+    /// Executor (PJRT execute only) per-batch latency samples, seconds.
+    pub execute_latencies: Vec<f64>,
+    /// Requests served per precision config.
+    pub per_config: BTreeMap<String, u64>,
+    /// Batches executed per compiled batch size.
+    pub per_batch_size: BTreeMap<u64, u64>,
+}
+
+impl Metrics {
+    /// Record one executed batch.
+    pub fn record_batch(
+        &mut self,
+        config: &str,
+        compiled_batch: u64,
+        real_samples: u64,
+        execute_s: f64,
+    ) {
+        self.batches += 1;
+        self.padded_samples += compiled_batch - real_samples;
+        self.execute_latencies.push(execute_s);
+        *self.per_config.entry(config.to_string()).or_default() += real_samples;
+        *self.per_batch_size.entry(compiled_batch).or_default() += 1;
+    }
+
+    /// Record one completed request with its end-to-end latency.
+    pub fn record_request(&mut self, latency_s: f64) {
+        self.completed += 1;
+        self.request_latencies.push(latency_s);
+    }
+
+    /// Latency percentile over completed requests, seconds.
+    pub fn latency_p(&self, q: f64) -> f64 {
+        stats::percentile(&self.request_latencies, q)
+    }
+
+    /// Mean request latency, seconds.
+    pub fn latency_mean(&self) -> f64 {
+        stats::mean(&self.request_latencies)
+    }
+
+    /// Throughput given a wall-clock window, requests/second.
+    pub fn throughput(&self, wall_s: f64) -> f64 {
+        if wall_s > 0.0 {
+            self.completed as f64 / wall_s
+        } else {
+            0.0
+        }
+    }
+
+    /// Mean executed batch occupancy (real samples / compiled batch).
+    pub fn batch_occupancy(&self) -> f64 {
+        let real: u64 = self.per_config.values().sum();
+        let total = real + self.padded_samples;
+        if total > 0 {
+            real as f64 / total as f64
+        } else {
+            0.0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_accumulate() {
+        let mut m = Metrics::default();
+        m.record_batch("int8", 4, 3, 0.01);
+        m.record_batch("int4", 8, 8, 0.02);
+        m.record_request(0.05);
+        m.record_request(0.15);
+        assert_eq!(m.batches, 2);
+        assert_eq!(m.padded_samples, 1);
+        assert_eq!(m.per_config["int8"], 3);
+        assert_eq!(m.per_config["int4"], 8);
+        assert_eq!(m.per_batch_size[&8], 1);
+        assert_eq!(m.completed, 2);
+        assert!((m.latency_mean() - 0.10).abs() < 1e-12);
+        assert!((m.batch_occupancy() - 11.0 / 12.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_metrics_are_safe() {
+        let m = Metrics::default();
+        assert_eq!(m.latency_p(0.99), 0.0);
+        assert_eq!(m.throughput(1.0), 0.0);
+        assert_eq!(m.batch_occupancy(), 0.0);
+    }
+
+    #[test]
+    fn percentiles_order() {
+        let mut m = Metrics::default();
+        for i in 1..=100 {
+            m.record_request(i as f64 / 100.0);
+        }
+        assert!(m.latency_p(0.5) < m.latency_p(0.99));
+    }
+}

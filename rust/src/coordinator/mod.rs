@@ -1,0 +1,365 @@
+//! The bit-fluid serving coordinator (Layer 3's request path).
+//!
+//! A vLLM-router-shaped runtime around the PJRT executables:
+//!
+//! ```text
+//!  clients ──submit(input, budget)──► queue ──► batcher ─► precision
+//!                                                │         controller
+//!                                                ▼             │
+//!                                     worker thread (owns the PJRT
+//!                                     Runtime; executes the chosen
+//!                                     (config, batch) artifact) ──► replies
+//! ```
+//!
+//! * **Dynamic batcher** — requests are pulled off the queue until the
+//!   batch window closes or the largest compiled batch fills, then padded
+//!   to the nearest compiled batch size.
+//! * **Bit-fluid precision controller** — per batch, the strictest budget
+//!   in the batch picks the precision configuration
+//!   ([`controller::PrecisionController`]); switching configs is just
+//!   executing a different pre-compiled artifact — the serving analogue of
+//!   the AP's zero-overhead precision switch.
+//! * **Worker** — a single thread owns the PJRT runtime (executables are
+//!   not shared across threads) and executes batches back to back.
+//!
+//! Python never runs here: artifacts were lowered at build time.
+
+pub mod controller;
+pub mod metrics;
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+pub use controller::{Budget, BudgetTargets, PrecisionController};
+pub use metrics::Metrics;
+
+use crate::runtime::{pad_batch, Runtime};
+
+/// One inference request.
+struct Request {
+    input: Vec<f32>,
+    budget: Budget,
+    submitted: Instant,
+    reply: mpsc::Sender<Result<Response, String>>,
+}
+
+/// One inference response.
+#[derive(Debug, Clone)]
+pub struct Response {
+    /// Logits for this request's sample.
+    pub logits: Vec<f32>,
+    /// Precision configuration that served it.
+    pub config: String,
+    /// Compiled batch size it rode in.
+    pub batch: u64,
+    /// End-to-end latency (submit -> reply), seconds.
+    pub latency_s: f64,
+}
+
+/// A pending response handle.
+pub struct Pending {
+    rx: mpsc::Receiver<Result<Response, String>>,
+}
+
+impl Pending {
+    /// Block until the response arrives.
+    pub fn wait(self) -> Result<Response> {
+        self.rx
+            .recv()
+            .map_err(|_| anyhow!("coordinator shut down before replying"))?
+            .map_err(|e| anyhow!(e))
+    }
+
+    /// Block with a timeout.
+    pub fn wait_timeout(self, d: Duration) -> Result<Response> {
+        self.rx
+            .recv_timeout(d)
+            .map_err(|_| anyhow!("timed out waiting for response"))?
+            .map_err(|e| anyhow!(e))
+    }
+}
+
+/// Coordinator configuration.
+#[derive(Debug, Clone)]
+pub struct CoordinatorConfig {
+    /// Precision configs to load (must exist in the manifest); quality
+    /// order is derived from their average bits. Empty = all.
+    pub configs: Vec<String>,
+    /// How long the batcher waits to fill a batch.
+    pub batch_window: Duration,
+    /// Per-budget latency targets for the precision controller.
+    pub targets: BudgetTargets,
+    /// Run one warmup execution per (config, batch) at startup so the
+    /// controller starts from measured latencies instead of priors.
+    pub calibrate: bool,
+    /// Pin a precision config per budget class, bypassing the measured-
+    /// latency controller. This is the Table VII mode: HAWQ-V3 names the
+    /// configuration for each latency budget and BF-IMNA just switches.
+    /// (Also the right mode on this CPU testbed, where interpret-mode
+    /// bit-plane kernels invert the hardware's latency ordering — on the
+    /// real AP fewer bits are faster; on CPU they unroll more matmuls.)
+    pub pinned: BTreeMap<Budget, String>,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        Self {
+            configs: Vec::new(),
+            batch_window: Duration::from_millis(2),
+            targets: BudgetTargets::default(),
+            calibrate: true,
+            pinned: BTreeMap::new(),
+        }
+    }
+}
+
+/// The serving coordinator handle (cheap to clone).
+#[derive(Clone)]
+pub struct Coordinator {
+    tx: mpsc::Sender<Request>,
+    metrics: Arc<Mutex<Metrics>>,
+    sample_elems: usize,
+    num_classes: usize,
+    configs: Vec<String>,
+    started: Instant,
+}
+
+impl Coordinator {
+    /// Start the coordinator: loads + compiles artifacts on the worker
+    /// thread, optionally calibrates, then serves until dropped.
+    pub fn start(artifact_dir: &Path, cfg: CoordinatorConfig) -> Result<Coordinator> {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let metrics = Arc::new(Mutex::new(Metrics::default()));
+        let metrics_worker = Arc::clone(&metrics);
+        let dir = artifact_dir.to_path_buf();
+
+        // The worker owns the PJRT runtime; report startup via a channel.
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<(usize, usize, Vec<String>), String>>();
+        std::thread::Builder::new()
+            .name("bf-imna-worker".into())
+            .spawn(move || {
+                let runtime = if cfg.configs.is_empty() {
+                    Runtime::load(&dir)
+                } else {
+                    let names: Vec<&str> = cfg.configs.iter().map(String::as_str).collect();
+                    Runtime::load_configs(&dir, &names)
+                };
+                let runtime = match runtime {
+                    Ok(r) => r,
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(format!("{e:#}")));
+                        return;
+                    }
+                };
+                let m = runtime.manifest();
+                let ladder = m.quality_ladder();
+                let avg_bits: BTreeMap<String, f64> = runtime
+                    .compiled_keys()
+                    .iter()
+                    .filter_map(|(c, b)| runtime.entry(c, *b).map(|e| (c.clone(), e.avg_bits)))
+                    .collect();
+                let _ = ready_tx.send(Ok((
+                    m.sample_elems(),
+                    m.num_classes as usize,
+                    ladder.clone(),
+                )));
+                let mut controller = PrecisionController::new(
+                    ladder,
+                    &avg_bits,
+                    cfg.targets.clone(),
+                    0.005,
+                );
+                if cfg.calibrate {
+                    calibrate(&runtime, &mut controller);
+                }
+                worker_loop(
+                    runtime,
+                    controller,
+                    cfg.pinned.clone(),
+                    rx,
+                    metrics_worker,
+                    cfg.batch_window,
+                );
+            })
+            .map_err(|e| anyhow!("spawning worker: {e}"))?;
+
+        let (sample_elems, num_classes, configs) = ready_rx
+            .recv()
+            .map_err(|_| anyhow!("worker died during startup"))?
+            .map_err(|e| anyhow!(e))?;
+        Ok(Coordinator { tx, metrics, sample_elems, num_classes, configs, started: Instant::now() })
+    }
+
+    /// Submit one sample under a latency budget; returns a handle.
+    pub fn submit(&self, input: Vec<f32>, budget: Budget) -> Result<Pending> {
+        if input.len() != self.sample_elems {
+            return Err(anyhow!(
+                "input has {} elements, model expects {}",
+                input.len(),
+                self.sample_elems
+            ));
+        }
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Request { input, budget, submitted: Instant::now(), reply })
+            .map_err(|_| anyhow!("coordinator is shut down"))?;
+        Ok(Pending { rx })
+    }
+
+    /// Blocking convenience: submit and wait.
+    pub fn infer(&self, input: Vec<f32>, budget: Budget) -> Result<Response> {
+        self.submit(input, budget)?.wait()
+    }
+
+    /// Snapshot of the serving metrics.
+    pub fn metrics(&self) -> Metrics {
+        self.metrics.lock().unwrap().clone()
+    }
+
+    /// Seconds since the coordinator started (for throughput computation).
+    pub fn uptime_s(&self) -> f64 {
+        self.started.elapsed().as_secs_f64()
+    }
+
+    /// Input sample element count (H*W*C).
+    pub fn sample_elems(&self) -> usize {
+        self.sample_elems
+    }
+
+    /// Output class count.
+    pub fn num_classes(&self) -> usize {
+        self.num_classes
+    }
+
+    /// Loaded config names, descending quality.
+    pub fn configs(&self) -> &[String] {
+        &self.configs
+    }
+}
+
+/// Warm up every compiled (config, batch) pair once and seed the
+/// controller's latency model with the measurements.
+fn calibrate(runtime: &Runtime, controller: &mut PrecisionController) {
+    let elems = runtime.manifest().sample_elems();
+    for (config, batch) in runtime.compiled_keys() {
+        let input = vec![0.1f32; batch as usize * elems];
+        let t0 = Instant::now();
+        if runtime.infer(&config, batch, &input).is_ok() {
+            // Feed several observations so the EMA settles on the sample.
+            let dt = t0.elapsed().as_secs_f64();
+            for _ in 0..4 {
+                controller.observe(&config, batch, dt);
+            }
+        }
+    }
+}
+
+/// The batching + execution loop.
+fn worker_loop(
+    runtime: Runtime,
+    mut controller: PrecisionController,
+    pinned: BTreeMap<Budget, String>,
+    rx: mpsc::Receiver<Request>,
+    metrics: Arc<Mutex<Metrics>>,
+    batch_window: Duration,
+) {
+    let manifest = runtime.manifest().clone();
+    let elems = manifest.sample_elems();
+    let classes = manifest.num_classes as usize;
+    let max_batch = manifest.batch_sizes.iter().copied().max().unwrap_or(1) as usize;
+
+    while let Ok(first) = rx.recv() {
+        // ---- Dynamic batching: fill until the window closes. ----
+        let mut batch = vec![first];
+        let deadline = Instant::now() + batch_window;
+        while batch.len() < max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(req) => batch.push(req),
+                Err(mpsc::RecvTimeoutError::Timeout) => break,
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+        }
+
+        // ---- Bit-fluid precision pick: strictest budget wins. ----
+        let strictest = batch.iter().map(|r| r.budget).min().unwrap_or(Budget::High);
+        let n = batch.len();
+        let compiled_batch = manifest.batch_for(n as u64);
+        let config = pinned
+            .get(&strictest)
+            .filter(|c| manifest.artifact(c, compiled_batch).is_some())
+            .cloned()
+            .unwrap_or_else(|| controller.pick(strictest, compiled_batch));
+
+        // ---- Execute. ----
+        let mut input = Vec::with_capacity(n * elems);
+        for r in &batch {
+            input.extend_from_slice(&r.input);
+        }
+        let padded = pad_batch(&input, n, compiled_batch as usize, elems);
+        let t0 = Instant::now();
+        let result = runtime.infer(&config, compiled_batch, &padded);
+        let exec_s = t0.elapsed().as_secs_f64();
+        controller.observe(&config, compiled_batch, exec_s);
+
+        // ---- Reply + metrics. ----
+        match result {
+            Ok(logits) => {
+                {
+                    let mut m = metrics.lock().unwrap();
+                    m.record_batch(&config, compiled_batch, n as u64, exec_s);
+                }
+                for (i, req) in batch.into_iter().enumerate() {
+                    let latency_s = req.submitted.elapsed().as_secs_f64();
+                    let row = logits[i * classes..(i + 1) * classes].to_vec();
+                    metrics.lock().unwrap().record_request(latency_s);
+                    let _ = req.reply.send(Ok(Response {
+                        logits: row,
+                        config: config.clone(),
+                        batch: compiled_batch,
+                        latency_s,
+                    }));
+                }
+            }
+            Err(e) => {
+                let msg = format!("{e:#}");
+                let mut m = metrics.lock().unwrap();
+                m.failed += batch.len() as u64;
+                drop(m);
+                for req in batch {
+                    let _ = req.reply.send(Err(msg.clone()));
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_defaults_are_sane() {
+        let c = CoordinatorConfig::default();
+        assert!(c.configs.is_empty());
+        assert!(c.batch_window < Duration::from_millis(100));
+        assert!(c.calibrate);
+        assert!(c.targets.target(Budget::Low) < c.targets.target(Budget::High));
+    }
+
+    #[test]
+    fn budgets_order_strictest_first() {
+        assert!(Budget::Low < Budget::Medium && Budget::Medium < Budget::High);
+    }
+
+    // Live coordinator tests (real PJRT execution) are in
+    // rust/tests/coordinator_integration.rs.
+}

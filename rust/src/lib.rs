@@ -1,0 +1,27 @@
+//! # BF-IMNA — A Bit Fluid In-Memory Neural Architecture
+//!
+//! Reproduction of *"BF-IMNA: A Bit Fluid In-Memory Neural Architecture for
+//! Neural Network Acceleration"* (Rakka et al., 2024) as a three-layer
+//! Rust + JAX + Pallas system:
+//!
+//! * **Layer 3 (this crate)** — the BF-IMNA architecture simulator
+//!   (associative-processor cost models, chip architecture, CNN mapper,
+//!   design-space exploration) plus a *bit-fluid serving coordinator* that
+//!   picks per-layer precision configurations at run time under latency
+//!   budgets and executes real numerics through AOT-compiled XLA artifacts.
+//! * **Layer 2 (python/compile/model.py)** — quantized CNN forward graph.
+//! * **Layer 1 (python/compile/kernels/)** — Pallas bit-plane GEMM kernel.
+//!
+//! See DESIGN.md for the full system inventory and the per-experiment index
+//! mapping every paper table/figure to a module and bench target.
+
+pub mod ap;
+pub mod arch;
+pub mod baselines;
+pub mod coordinator;
+pub mod mapper;
+pub mod model;
+pub mod precision;
+pub mod runtime;
+pub mod sim;
+pub mod util;

@@ -1,0 +1,332 @@
+//! `bf-imna` — command-line front end for the BF-IMNA simulator and the
+//! bit-fluid serving coordinator.
+//!
+//! ```text
+//! bf-imna simulate --net vgg16 --bits 8 [--hw lr|ir] [--tech sram|reram]
+//! bf-imna sweep    --net alexnet [--hw lr]             # Fig. 7 series
+//! bf-imna hawq                                          # Table VII
+//! bf-imna compare                                       # Table VIII
+//! bf-imna validate                                      # Table I microbenchmark
+//! bf-imna serve    [--artifacts DIR] [--requests N]     # live serving demo
+//! ```
+//!
+//! (Hand-rolled argument parsing — the offline vendor set has no `clap`.)
+
+use std::collections::BTreeMap;
+use std::process::ExitCode;
+
+use bf_imna::ap::tech::Tech;
+use bf_imna::arch::HwConfig;
+use bf_imna::baselines::{self, peak};
+use bf_imna::coordinator::{Budget, Coordinator, CoordinatorConfig};
+use bf_imna::model::{zoo, Network};
+use bf_imna::precision::{hawq, PrecisionConfig};
+use bf_imna::sim::{breakdown, dse, simulate, SimParams};
+use bf_imna::util::table::{fmt_eng, fmt_ratio, Table};
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    let opts = parse_opts(&args[args.len().min(1)..]);
+    let result = match cmd {
+        "simulate" => cmd_simulate(&opts),
+        "sweep" => cmd_sweep(&opts),
+        "hawq" => cmd_hawq(),
+        "compare" => cmd_compare(),
+        "validate" => cmd_validate(),
+        "serve" => cmd_serve(&opts),
+        "help" | "--help" | "-h" => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        other => Err(format!("unknown command '{other}'\n\n{HELP}").into()),
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+const HELP: &str = "\
+bf-imna — bit-fluid in-memory neural architecture (paper reproduction)
+
+USAGE: bf-imna <command> [--key value ...]
+
+COMMANDS:
+  simulate   end-to-end inference metrics for one network/config
+             --net alexnet|vgg16|resnet18|resnet50|serve_cnn  (default vgg16)
+             --bits N (fixed precision, default 8)   --hw lr|ir (default lr)
+             --tech sram|reram (default sram)        --breakdown (Fig. 8 shares)
+  sweep      Fig. 7 mixed-precision DSE series   --net ... --hw lr|ir
+  hawq       Table VII — HAWQ-V3 bit-fluid ResNet18 under latency budgets
+  compare    Table VIII — BF-IMNA peak rows vs published SOTA accelerators
+  validate   Table I microbenchmark — functional emulator vs analytic models
+  serve      live bit-fluid serving demo over the AOT artifacts
+             --artifacts DIR (default artifacts)  --requests N (default 32)
+";
+
+type CliResult = Result<(), Box<dyn std::error::Error>>;
+
+fn parse_opts(args: &[String]) -> BTreeMap<String, String> {
+    let mut map = BTreeMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(key) = args[i].strip_prefix("--") {
+            let val = args.get(i + 1).filter(|v| !v.starts_with("--"));
+            match val {
+                Some(v) => {
+                    map.insert(key.to_string(), v.clone());
+                    i += 2;
+                }
+                None => {
+                    map.insert(key.to_string(), "true".to_string());
+                    i += 1;
+                }
+            }
+        } else {
+            i += 1;
+        }
+    }
+    map
+}
+
+fn net_by_name(name: &str) -> Result<Network, String> {
+    match name {
+        "alexnet" => Ok(zoo::alexnet()),
+        "vgg16" => Ok(zoo::vgg16()),
+        "resnet18" => Ok(zoo::resnet18()),
+        "resnet50" => Ok(zoo::resnet50()),
+        "serve_cnn" => Ok(zoo::serve_cnn()),
+        other => Err(format!("unknown network '{other}'")),
+    }
+}
+
+fn hw_by_name(name: &str) -> Result<HwConfig, String> {
+    match name {
+        "lr" => Ok(HwConfig::Lr),
+        "ir" => Ok(HwConfig::Ir),
+        other => Err(format!("unknown hw config '{other}' (lr|ir)")),
+    }
+}
+
+fn tech_by_name(name: &str) -> Result<Tech, String> {
+    match name {
+        "sram" => Ok(Tech::sram()),
+        "reram" => Ok(Tech::reram()),
+        other => Err(format!("unknown technology '{other}' (sram|reram)")),
+    }
+}
+
+fn cmd_simulate(opts: &BTreeMap<String, String>) -> CliResult {
+    let net = net_by_name(opts.get("net").map(String::as_str).unwrap_or("vgg16"))?;
+    let bits: u32 = opts.get("bits").map(String::as_str).unwrap_or("8").parse()?;
+    let hw = hw_by_name(opts.get("hw").map(String::as_str).unwrap_or("lr"))?;
+    let tech = tech_by_name(opts.get("tech").map(String::as_str).unwrap_or("sram"))?;
+    let cfg = PrecisionConfig::fixed(bits, net.weight_layers());
+    let r = simulate(&net, &cfg, &SimParams::new(hw, tech));
+    println!(
+        "{} | {} | {} | {} | batch 1",
+        r.net_name,
+        r.cfg_name,
+        r.hw.label(),
+        r.tech.cell.label()
+    );
+    let mut t = Table::new(vec!["metric", "value"]);
+    t.row(vec!["MACs".to_string(), format!("{:.2} G", r.macs as f64 / 1e9)]);
+    t.row(vec!["latency / inference".to_string(), format!("{} s", fmt_eng(r.latency_s(), 3))]);
+    t.row(vec!["energy / inference".to_string(), format!("{} J", fmt_eng(r.energy_j(), 3))]);
+    t.row(vec!["EDP".to_string(), format!("{} J.s", fmt_eng(r.edp_js(), 3))]);
+    t.row(vec!["die area".to_string(), format!("{:.2} mm2", r.area_mm2)]);
+    t.row(vec!["throughput".to_string(), format!("{} GOPS", fmt_eng(r.gops(), 3))]);
+    t.row(vec!["energy efficiency".to_string(), format!("{} GOPS/W", fmt_eng(r.gops_per_w(), 3))]);
+    t.row(vec![
+        "energy-area efficiency".to_string(),
+        format!("{} GOPS/W/mm2", fmt_eng(r.gops_per_w_mm2(), 3)),
+    ]);
+    t.row(vec!["max time-folding".to_string(), format!("{}x", r.max_steps())]);
+    print!("{}", t.render());
+
+    if opts.contains_key("breakdown") {
+        println!("\nenergy by kind (Fig. 8a):");
+        let mut t = Table::new(vec!["category", "J", "share"]);
+        for s in breakdown::energy_by_kind(&r) {
+            t.row(vec![s.label, format!("{}", fmt_eng(s.value, 3)), format!("{:.1}%", 100.0 * s.fraction)]);
+        }
+        print!("{}", t.render());
+        println!("\nGEMM latency by phase (Fig. 8b):");
+        let mut t = Table::new(vec!["phase", "s", "share"]);
+        for s in breakdown::gemm_latency_by_phase(&r) {
+            t.row(vec![s.label, format!("{}", fmt_eng(s.value, 3)), format!("{:.1}%", 100.0 * s.fraction)]);
+        }
+        print!("{}", t.render());
+    }
+    Ok(())
+}
+
+fn cmd_sweep(opts: &BTreeMap<String, String>) -> CliResult {
+    let net = net_by_name(opts.get("net").map(String::as_str).unwrap_or("alexnet"))?;
+    let hw = hw_by_name(opts.get("hw").map(String::as_str).unwrap_or("lr"))?;
+    let series = dse::fig7_series(&net, hw, 7);
+    println!("{} | {} | SRAM | Fig. 7 series (mean of {} combos/point)", net.name, hw.label(), dse::COMBOS_PER_TARGET);
+    let mut t = Table::new(vec!["avg bits", "energy (J)", "latency (s)", "GOPS/W/mm2"]);
+    for p in series {
+        t.row(vec![
+            format!("{:.0}", p.avg_bits),
+            fmt_eng(p.energy_j, 3),
+            fmt_eng(p.latency_s, 3),
+            fmt_eng(p.gops_per_w_mm2, 3),
+        ]);
+    }
+    print!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_hawq() -> CliResult {
+    let net = zoo::resnet18();
+    let params = SimParams::lr_sram();
+    let e8 = {
+        let cfg = hawq::config_for_resnet18(&net, &hawq::row(hawq::LatencyBudget::FixedInt8));
+        simulate(&net, &cfg, &params)
+    };
+    println!("Table VII — bit-fluid ResNet18 (HAWQ-V3 configs), LR + SRAM");
+    let mut t = Table::new(vec![
+        "constraint", "avg bits", "norm energy", "norm latency", "EDP (J.s)", "size (MB)", "top-1 % (paper)",
+    ]);
+    for row in hawq::table_vii_rows() {
+        let cfg = hawq::config_for_resnet18(&net, &row);
+        let r = simulate(&net, &cfg, &params);
+        t.row(vec![
+            row.budget.label().to_string(),
+            format!("{:.2}", row.paper_avg_bits),
+            format!("{:.2}", e8.energy_j() / r.energy_j()),
+            format!("{:.3}", e8.latency_s() / r.latency_s()),
+            fmt_eng(r.edp_js(), 3),
+            format!("{:.1}", cfg.model_size_bytes(&net) as f64 / 1e6),
+            format!("{:.2}", row.paper_top1_acc),
+        ]);
+    }
+    print!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_compare() -> CliResult {
+    println!("Table VIII — BF-IMNA peak rows (modeled) vs published SOTA");
+    let mut t = Table::new(vec!["framework", "technology", "bits", "GOPS", "GOPS/W"]);
+    for r in baselines::sota_records() {
+        t.row(vec![
+            r.name.to_string(),
+            r.technology.to_string(),
+            r.precision.to_string(),
+            fmt_eng(r.gops, 4),
+            fmt_eng(r.gops_per_w, 4),
+        ]);
+    }
+    for row in peak::bf_imna_rows() {
+        t.row(vec![
+            format!("BF-IMNA_{}b (modeled)", row.precision),
+            "CMOS (16nm)".to_string(),
+            row.precision.to_string(),
+            fmt_eng(row.gops, 4),
+            fmt_eng(row.gops_per_w, 4),
+        ]);
+    }
+    print!("{}", t.render());
+    let bf16 = peak::peak_row(16, &Tech::sram());
+    let isaac = baselines::record("ISAAC");
+    let pipe = baselines::record("PipeLayer");
+    println!(
+        "\nvs ISAAC (16b):     {} throughput, {} lower energy efficiency",
+        fmt_ratio(bf16.gops / isaac.gops),
+        fmt_ratio(isaac.gops_per_w / bf16.gops_per_w)
+    );
+    println!(
+        "vs PipeLayer (16b): {} lower throughput, {} higher energy efficiency",
+        fmt_ratio(pipe.gops / bf16.gops),
+        fmt_ratio(bf16.gops_per_w / pipe.gops_per_w)
+    );
+    Ok(())
+}
+
+fn cmd_validate() -> CliResult {
+    use bf_imna::ap::{emulator, runtime_model as rt, ApKind};
+    use bf_imna::util::rng::Rng;
+    println!("Table I microbenchmark — emulator pass counts vs analytic models");
+    let mut t = Table::new(vec!["function", "M", "emulated compares", "model compares", "match"]);
+    let mut rng = Rng::new(7);
+    let mut all_ok = true;
+    for m in [2usize, 4, 8] {
+        let a = rng.vec_below(32, 1 << m);
+        let b = rng.vec_below(32, 1 << m);
+        let (_, c_add) = emulator::emulate_add(&a, &b, m);
+        let model_add = rt::add(m as u32, 64, ApKind::TwoD).events.compares;
+        let ok = c_add.events().compares == model_add;
+        all_ok &= ok;
+        t.row(vec![
+            "addition".to_string(),
+            m.to_string(),
+            c_add.events().compares.to_string(),
+            model_add.to_string(),
+            if ok { "yes" } else { "NO" }.to_string(),
+        ]);
+        let (_, c_mul) = emulator::emulate_multiply(&a, &b, m, m);
+        // The emulator adds Mw explicit carry-flush passes to the model's
+        // 4*Ma*Mw (see `Cam::multiply`).
+        let model_mul = rt::multiply(m as u32, m as u32, 64, ApKind::TwoD).events.compares + m as u64;
+        let ok = c_mul.events().compares == model_mul;
+        all_ok &= ok;
+        t.row(vec![
+            "multiplication".to_string(),
+            m.to_string(),
+            c_mul.events().compares.to_string(),
+            model_mul.to_string(),
+            if ok { "yes" } else { "NO" }.to_string(),
+        ]);
+    }
+    print!("{}", t.render());
+    if !all_ok {
+        return Err("emulator diverged from the analytic models".into());
+    }
+    println!("emulator matches the analytic Table I models.");
+    Ok(())
+}
+
+fn cmd_serve(opts: &BTreeMap<String, String>) -> CliResult {
+    let dir = opts.get("artifacts").map(String::as_str).unwrap_or("artifacts");
+    let n: usize = opts.get("requests").map(String::as_str).unwrap_or("32").parse()?;
+    let coord = Coordinator::start(std::path::Path::new(dir), CoordinatorConfig::default())?;
+    println!(
+        "serving {} ({} configs compiled); sending {n} requests across budgets",
+        coord.configs().join(", "),
+        coord.configs().len()
+    );
+    let elems = coord.sample_elems();
+    let budgets = [Budget::Low, Budget::Medium, Budget::High];
+    let mut rng = bf_imna::util::rng::Rng::new(1);
+    let pendings: Vec<_> = (0..n)
+        .map(|i| {
+            let x: Vec<f32> = (0..elems).map(|_| rng.f64() as f32 * 2.0 - 1.0).collect();
+            coord.submit(x, budgets[i % 3]).expect("submit")
+        })
+        .collect();
+    let mut per_config: BTreeMap<String, u64> = BTreeMap::new();
+    for p in pendings {
+        let r = p.wait()?;
+        *per_config.entry(r.config).or_default() += 1;
+    }
+    let m = coord.metrics();
+    let mut t = Table::new(vec!["metric", "value"]);
+    t.row(vec!["requests".to_string(), m.completed.to_string()]);
+    t.row(vec!["batches".to_string(), m.batches.to_string()]);
+    t.row(vec!["batch occupancy".to_string(), format!("{:.0}%", 100.0 * m.batch_occupancy())]);
+    t.row(vec!["p50 latency".to_string(), format!("{} s", fmt_eng(m.latency_p(0.5), 3))]);
+    t.row(vec!["p99 latency".to_string(), format!("{} s", fmt_eng(m.latency_p(0.99), 3))]);
+    t.row(vec!["throughput".to_string(), format!("{:.1} req/s", m.throughput(coord.uptime_s()))]);
+    for (cfg, count) in &per_config {
+        t.row(vec![format!("served by {cfg}"), count.to_string()]);
+    }
+    print!("{}", t.render());
+    Ok(())
+}

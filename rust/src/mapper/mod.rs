@@ -1,0 +1,501 @@
+//! Layer-to-chip mapping (paper §III-A, Fig. 4).
+//!
+//! Every network layer is lowered onto the chip's CAPs:
+//!
+//! * conv / fc -> im2col GEMM, **weight-stationary**: each cluster keeps a
+//!   resident copy of the kernel matrix `K_i` and computes a slice of the
+//!   output columns; when the chip cannot hold all `i·j·u` product rows the
+//!   GEMM folds in time (`steps > 1`), streaming new input-patch columns
+//!   from the MAP each step. Contractions longer than one CAP
+//!   (`j > 4800`) additionally fold across CAPs with a partial-sum combine.
+//! * max/avg pooling -> the Table IV / Eq. (9)–(14) pooling operations over
+//!   `S·K` words, folded in time when capacity is exceeded.
+//! * residual add -> in-place vector addition; fused ReLUs run as an extra
+//!   pass group on the produced words.
+//!
+//! The mapper emits *structural* costs: per-phase event counts on the
+//! per-CAP critical path (for latency) and per-phase total cell activity
+//! (for energy), plus mesh traffic and MAP activity. The simulator
+//! ([`crate::sim`]) converts these to seconds and joules under a
+//! [`crate::ap::tech::Tech`].
+
+use crate::ap::runtime_model as rt;
+use crate::ap::{clog2, ApKind, CellEvents, Events};
+use crate::arch::ChipConfig;
+use crate::model::{Layer, LayerKind, Network};
+use crate::precision::{LayerPrec, PrecisionConfig};
+
+/// Per-phase table of some cost type (Fig. 8's breakdown axes).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct PhaseTable<T> {
+    /// Data population / input streaming writes.
+    pub populate: T,
+    /// Bit-serial multiplication passes.
+    pub multiply: T,
+    /// Vertical reduction passes (+ cross-CAP combines).
+    pub reduce: T,
+    /// Bit-sequential result read-out.
+    pub readout: T,
+    /// Auxiliary passes: ReLU, pooling LUTs, residual adds, flag resets.
+    pub aux: T,
+}
+
+impl<T: Copy + std::ops::Add<Output = T>> PhaseTable<T> {
+    /// Sum of all phases.
+    pub fn total(&self) -> T {
+        self.populate + self.multiply + self.reduce + self.readout + self.aux
+    }
+}
+
+impl PhaseTable<Events> {
+    /// Map each phase through an event->seconds conversion.
+    pub fn map_f64(&self, f: impl Fn(&Events) -> f64) -> PhaseTable<f64> {
+        PhaseTable {
+            populate: f(&self.populate),
+            multiply: f(&self.multiply),
+            reduce: f(&self.reduce),
+            readout: f(&self.readout),
+            aux: f(&self.aux),
+        }
+    }
+}
+
+impl PhaseTable<CellEvents> {
+    /// Map each phase through a cells->joules conversion.
+    pub fn map_f64(&self, f: impl Fn(&CellEvents) -> f64) -> PhaseTable<f64> {
+        PhaseTable {
+            populate: f(&self.populate),
+            multiply: f(&self.multiply),
+            reduce: f(&self.reduce),
+            readout: f(&self.readout),
+            aux: f(&self.aux),
+        }
+    }
+}
+
+impl PhaseTable<f64> {
+    /// Elementwise sum with another table.
+    pub fn add(&self, o: &PhaseTable<f64>) -> PhaseTable<f64> {
+        PhaseTable {
+            populate: self.populate + o.populate,
+            multiply: self.multiply + o.multiply,
+            reduce: self.reduce + o.reduce,
+            readout: self.readout + o.readout,
+            aux: self.aux + o.aux,
+        }
+    }
+}
+
+/// What kind of work a mapped layer performs (Fig. 8a energy categories).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum WorkKind {
+    Gemm,
+    Pooling,
+    Residual,
+    Relu,
+}
+
+impl WorkKind {
+    /// Category label for breakdown tables.
+    pub fn label(&self) -> &'static str {
+        match self {
+            WorkKind::Gemm => "GEMM",
+            WorkKind::Pooling => "Pooling",
+            WorkKind::Residual => "Residual",
+            WorkKind::Relu => "ReLU",
+        }
+    }
+}
+
+/// Structural cost of one mapped layer.
+#[derive(Debug, Clone)]
+pub struct LayerPlan {
+    pub name: String,
+    pub kind: WorkKind,
+    /// Time-folding steps (1 in IR for every paper workload).
+    pub steps: u64,
+    /// CAPs active in a full step.
+    pub caps_used: u64,
+    /// Critical-path events per phase, already multiplied by `steps`.
+    pub latency_events: PhaseTable<Events>,
+    /// Total cell activity per phase across all CAPs and steps.
+    pub energy_cells: PhaseTable<CellEvents>,
+    /// Bits moved over the on-chip mesh (inputs + weights + outputs),
+    /// summed across all clusters — the energy-side traffic.
+    pub mesh_bits: u64,
+    /// Mesh bits on the *critical path*: each cluster streams its own
+    /// slice (and its own weight copy) in parallel from its private MAP,
+    /// so latency sees per-cluster traffic, not the chip total.
+    pub mesh_bits_critical: u64,
+    /// MAP activity: output buffering + input re-reads (reshape traffic).
+    pub map_cells: CellEvents,
+}
+
+/// A whole network mapped onto a chip under a precision configuration.
+#[derive(Debug, Clone)]
+pub struct NetworkPlan {
+    pub net_name: String,
+    pub layers: Vec<LayerPlan>,
+}
+
+impl NetworkPlan {
+    /// Maximum time-folding factor across layers.
+    pub fn max_steps(&self) -> u64 {
+        self.layers.iter().map(|l| l.steps).max().unwrap_or(1)
+    }
+}
+
+/// Map every layer of `net` onto `chip` under `cfg`.
+pub fn map_network(net: &Network, chip: &ChipConfig, cfg: &PrecisionConfig) -> NetworkPlan {
+    let per_layer = cfg.for_network(net);
+    let layers = net
+        .layers
+        .iter()
+        .zip(per_layer)
+        .map(|(layer, prec)| map_layer(layer, prec, chip))
+        .collect();
+    NetworkPlan { net_name: net.name.clone(), layers }
+}
+
+/// Map one layer.
+pub fn map_layer(layer: &Layer, prec: LayerPrec, chip: &ChipConfig) -> LayerPlan {
+    match &layer.kind {
+        LayerKind::Conv { .. } | LayerKind::Fc { .. } => map_gemm(layer, prec, chip),
+        LayerKind::MaxPool { win, .. } => map_pool(layer, prec, chip, win * win, true),
+        LayerKind::AvgPool { win, .. } => map_pool(layer, prec, chip, win * win, false),
+        LayerKind::ResidualAdd { relu, .. } => map_residual(layer, prec, chip, *relu),
+    }
+}
+
+/// GEMM (conv / fc) mapping — the heart of the simulator.
+fn map_gemm(layer: &Layer, prec: LayerPrec, chip: &ChipConfig) -> LayerPlan {
+    let g = layer.gemm_dims().expect("gemm layer");
+    let (i, j, u) = (g.i, g.j, g.u);
+    let (ma, mw) = (prec.a.max(1) as u64, prec.w.max(1) as u64);
+    let cap_rows = chip.cluster.cap.gemm_rows();
+
+    // Cross-CAP contraction folding: j_sub rows per sub-contraction.
+    let j_fold = j.div_ceil(cap_rows).max(1);
+    let j_sub = j.div_ceil(j_fold);
+    // Groups (sub-contractions) per CAP and chip-level capacity.
+    let groups_per_cap = (cap_rows / j_sub).max(1);
+    let rows_per_cap = groups_per_cap * j_sub;
+    let groups_total = i * u * j_fold;
+    let caps_needed = groups_total.div_ceil(groups_per_cap);
+    let total_caps = chip.total_caps();
+    let steps = caps_needed.div_ceil(total_caps).max(1);
+    let caps_used = caps_needed.min(total_caps);
+
+    let words_total = i * j * u;
+    let prod_bits = ma + mw;
+    let out_bits = prod_bits + clog2(j) as u64;
+
+    // ---- Latency: per-CAP critical path per step, x steps. ----
+    let mult_passes = 4 * ma * mw;
+    // Populate: activations streamed every step; weights resident after the
+    // first step (weight-stationary), charged once.
+    let lat_populate = Events::new(0, steps * ma + mw, 0);
+    let lat_multiply = Events::new(steps * mult_passes, steps * mult_passes, 0);
+    // Vertical adds per CAP per step: sequential within the CAP.
+    let adds_per_cap = rows_per_cap.saturating_sub(groups_per_cap) as u64;
+    // Cross-CAP partial-sum combine: log2(j_fold) add rounds over out_bits
+    // column pairs (through the MAP), charged per step.
+    let combine = if j_fold > 1 { 8 * clog2(j_fold) as u64 * out_bits } else { 0 };
+    let lat_reduce =
+        Events::new(steps * (4 * adds_per_cap + combine), steps * (4 * adds_per_cap + combine), 0);
+    let lat_readout = Events::new(0, 0, steps * out_bits);
+
+    // ---- Energy: total cell activity over all CAPs/steps. ----
+    let resident_weight_cells = mw * rows_per_cap * caps_used;
+    let en_populate = CellEvents {
+        populate_write_cells: (ma * words_total + resident_weight_cells) as f64,
+        ..Default::default()
+    };
+    let en_multiply = CellEvents {
+        compare_senses: (mult_passes * words_total) as f64,
+        lut_write_cells: mult_passes as f64 * rt::MATCH_PROB_4BIT * words_total as f64 * 1.5,
+        ..Default::default()
+    };
+    let adds_total = i * u * (j - 1) + i * u * (j_fold - 1);
+    let en_reduce = CellEvents {
+        compare_senses: (4 * adds_total * out_bits) as f64,
+        lut_write_cells: 4.0 * adds_total as f64 * rt::MATCH_PROB_3BIT * out_bits as f64 * 1.5,
+        ..Default::default()
+    };
+    let en_readout = CellEvents { read_senses: (out_bits * i * u) as f64, ..Default::default() };
+
+    // ---- Fused ReLU on the i*u outputs. ----
+    let relu = matches!(
+        layer.kind,
+        LayerKind::Conv { relu: true, .. } | LayerKind::Fc { relu: true, .. }
+    );
+    let (lat_aux, en_aux) = if relu {
+        let c = rt::relu(out_bits as u32, i * u, ApKind::TwoD);
+        (c.events, c.cells)
+    } else {
+        (Events::default(), CellEvents::default())
+    };
+
+    // ---- Mesh traffic + MAP buffering (reshape overheads, §III-A). ----
+    let act_bits = j * u * ma; // unique patch elements streamed in
+    let clusters_used = chip.clusters().min(caps_needed.div_ceil(chip.cluster.caps()).max(1));
+    let weight_bits = clusters_used * i * j * mw; // one resident copy per cluster
+    let out_bits_total = i * u * out_bits; // written back to MAP
+    let mesh_bits = act_bits + weight_bits + out_bits_total;
+    // Latency side: clusters stream their slices concurrently over private
+    // meshes (Fig. 3 — "clusters operate independently and in parallel").
+    // Two work splits exist and the mapper picks the cheaper one per layer:
+    // * u-split (the paper's conv mapping): every cluster keeps a full copy
+    //   of K_i and computes different output columns — activations and
+    //   outputs divide across clusters, weights replicate;
+    // * i-split (the natural fc mapping, u = 1): clusters own disjoint
+    //   kernel rows — weights divide, activations broadcast.
+    let cu = clusters_used.min(u).max(1);
+    let ci = clusters_used.min(i).max(1);
+    let u_split = (act_bits + out_bits_total).div_ceil(cu) + i * j * mw;
+    let i_split = act_bits + out_bits_total.div_ceil(ci) + (i.div_ceil(ci)) * j * mw;
+    let mesh_bits_critical = u_split.min(i_split);
+    let map_cells = CellEvents {
+        // Outputs buffered word-sequentially in the MAP, then re-read for
+        // the next layer's patch streaming.
+        populate_write_cells: out_bits_total as f64,
+        read_senses: (j * u) as f64, // word-sense reads feeding this layer
+        ..Default::default()
+    };
+
+    LayerPlan {
+        name: layer.name.clone(),
+        kind: WorkKind::Gemm,
+        steps,
+        caps_used,
+        latency_events: PhaseTable {
+            populate: lat_populate,
+            multiply: lat_multiply,
+            reduce: lat_reduce,
+            readout: lat_readout,
+            aux: lat_aux,
+        },
+        energy_cells: PhaseTable {
+            populate: en_populate,
+            multiply: en_multiply,
+            reduce: en_reduce,
+            readout: en_readout,
+            aux: en_aux,
+        },
+        mesh_bits,
+        mesh_bits_critical,
+        map_cells,
+    }
+}
+
+/// Pooling mapping (max or average).
+fn map_pool(layer: &Layer, prec: LayerPrec, chip: &ChipConfig, s: u64, is_max: bool) -> LayerPlan {
+    let m = prec.a.max(1);
+    let out = layer.output();
+    let k_total = out.elems();
+    let words_total = s * k_total;
+    let cap_words = chip.cluster.cap.word_capacity();
+    let k_per_cap = (cap_words / s).max(1);
+    let caps_needed = k_total.div_ceil(k_per_cap);
+    let total_caps = chip.total_caps();
+    let steps = caps_needed.div_ceil(total_caps).max(1);
+    let caps_used = caps_needed.min(total_caps);
+
+    let per_cap = if is_max {
+        rt::maxpool(m, s, k_per_cap.min(k_total), ApKind::TwoD)
+    } else {
+        rt::avgpool(m, s, k_per_cap.min(k_total), ApKind::TwoD)
+    };
+    let total = if is_max {
+        rt::maxpool(m, s, k_total, ApKind::TwoD)
+    } else {
+        rt::avgpool(m, s, k_total, ApKind::TwoD)
+    };
+
+    let mesh_bits = words_total * m as u64 + k_total * m as u64;
+    let mesh_bits_critical = mesh_bits.div_ceil(chip.clusters());
+    LayerPlan {
+        name: layer.name.clone(),
+        kind: WorkKind::Pooling,
+        steps,
+        caps_used,
+        latency_events: PhaseTable {
+            aux: per_cap.events.scale(steps),
+            ..Default::default()
+        },
+        energy_cells: PhaseTable { aux: total.cells, ..Default::default() },
+        mesh_bits,
+        mesh_bits_critical,
+        map_cells: CellEvents {
+            populate_write_cells: (k_total * m as u64) as f64,
+            read_senses: words_total as f64,
+            ..Default::default()
+        },
+    }
+}
+
+/// Residual element-wise addition (+ optional ReLU).
+fn map_residual(layer: &Layer, prec: LayerPrec, chip: &ChipConfig, relu: bool) -> LayerPlan {
+    let m = prec.a.max(1);
+    let elems = layer.input.elems();
+    let pairs_capacity = chip.total_word_capacity() / 2;
+    let steps = elems.div_ceil(pairs_capacity).max(1);
+    let caps_used = elems.div_ceil(chip.cluster.cap.word_capacity() / 2).min(chip.total_caps());
+
+    let add = rt::add(m, 2 * elems, ApKind::TwoD);
+    let mut lat_aux = add.events.scale(steps);
+    let mut en_aux = add.cells;
+    if relu {
+        let r = rt::relu(add.result_bits, elems, ApKind::TwoD);
+        lat_aux = lat_aux + r.events;
+        en_aux = en_aux + r.cells;
+    }
+    // Note: add latency is column-serial (independent of rows), so steps
+    // only multiply the populate portion in hardware; we conservatively
+    // multiply the whole op (a documented over-estimate, negligible at
+    // network scale).
+    let mesh_bits = (2 * elems + elems) * m as u64;
+    let mesh_bits_critical = mesh_bits.div_ceil(chip.clusters());
+    LayerPlan {
+        name: layer.name.clone(),
+        kind: WorkKind::Residual,
+        steps,
+        caps_used: caps_used.max(1),
+        latency_events: PhaseTable { aux: lat_aux, ..Default::default() },
+        energy_cells: PhaseTable { aux: en_aux, ..Default::default() },
+        mesh_bits,
+        mesh_bits_critical,
+        map_cells: CellEvents {
+            populate_write_cells: (elems * m as u64) as f64,
+            read_senses: (2 * elems) as f64,
+            ..Default::default()
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::HwConfig;
+    use crate::model::zoo;
+    use crate::precision::PrecisionConfig;
+
+    fn lr_plan(net: &crate::model::Network, bits: u32) -> NetworkPlan {
+        let chip = ChipConfig::lr();
+        let cfg = PrecisionConfig::fixed(bits, net.weight_layers());
+        map_network(net, &chip, &cfg)
+    }
+
+    #[test]
+    fn every_layer_gets_a_plan() {
+        let net = zoo::alexnet();
+        let plan = lr_plan(&net, 8);
+        assert_eq!(plan.layers.len(), net.layers.len());
+    }
+
+    #[test]
+    fn lr_folds_large_layers_in_time() {
+        let net = zoo::vgg16();
+        let plan = lr_plan(&net, 8);
+        // VGG16's big convs cannot fit 4096 CAPs in one step.
+        assert!(plan.max_steps() > 1, "expected time folding, got {}", plan.max_steps());
+    }
+
+    #[test]
+    fn ir_never_folds() {
+        let net = zoo::vgg16();
+        let chip = ChipConfig::for_network(HwConfig::Ir, &net);
+        let cfg = PrecisionConfig::fixed(8, net.weight_layers());
+        let plan = map_network(&net, &chip, &cfg);
+        for l in plan.layers.iter().filter(|l| l.kind == WorkKind::Gemm) {
+            assert_eq!(l.steps, 1, "layer {} folded on IR", l.name);
+        }
+    }
+
+    #[test]
+    fn caps_used_bounded_by_chip() {
+        let net = zoo::resnet50();
+        let chip = ChipConfig::lr();
+        let plan = lr_plan(&net, 8);
+        for l in &plan.layers {
+            assert!(l.caps_used <= chip.total_caps(), "{} uses {}", l.name, l.caps_used);
+            assert!(l.caps_used >= 1);
+        }
+    }
+
+    #[test]
+    fn gemm_latency_dominated_by_reduction() {
+        // Fig. 8b: the GEMM latency bottleneck is reduction, not multiply.
+        let net = zoo::vgg16();
+        let plan = lr_plan(&net, 8);
+        let gemm_layers: Vec<&LayerPlan> =
+            plan.layers.iter().filter(|l| l.kind == WorkKind::Gemm).collect();
+        let mult: u64 = gemm_layers.iter().map(|l| l.latency_events.multiply.time_units()).sum();
+        let red: u64 = gemm_layers.iter().map(|l| l.latency_events.reduce.time_units()).sum();
+        assert!(red > 5 * mult, "reduce {red} vs mult {mult}");
+    }
+
+    #[test]
+    fn lower_precision_reduces_energy_not_latency() {
+        let net = zoo::resnet18();
+        let p8 = lr_plan(&net, 8);
+        let p2 = lr_plan(&net, 2);
+        let e8: f64 = p8.layers.iter().map(|l| l.energy_cells.total().compare_senses).sum();
+        let e2: f64 = p2.layers.iter().map(|l| l.energy_cells.total().compare_senses).sum();
+        assert!(e8 > 4.0 * e2, "compare senses 8b {e8} vs 2b {e2}");
+        // Latency is reduction-bound, so precision barely moves it (Fig 7b).
+        let l8: u64 = p8.layers.iter().map(|l| l.latency_events.total().time_units()).sum();
+        let l2: u64 = p2.layers.iter().map(|l| l.latency_events.total().time_units()).sum();
+        let ratio = l8 as f64 / l2 as f64;
+        assert!(ratio < 2.0, "latency ratio 8b/2b = {ratio}");
+    }
+
+    #[test]
+    fn fc_layer_with_long_contraction_folds_across_caps() {
+        // AlexNet fc6: j = 9216 > 4800 rows -> cross-CAP combine.
+        let net = zoo::alexnet();
+        let plan = lr_plan(&net, 8);
+        let fc6 = plan.layers.iter().find(|l| l.name == "fc6").unwrap();
+        assert_eq!(fc6.kind, WorkKind::Gemm);
+        assert!(fc6.latency_events.reduce.time_units() > 0);
+    }
+
+    #[test]
+    fn mesh_traffic_positive_everywhere() {
+        let net = zoo::resnet18();
+        let plan = lr_plan(&net, 4);
+        for l in &plan.layers {
+            assert!(l.mesh_bits > 0, "{} has no mesh traffic", l.name);
+        }
+    }
+
+    #[test]
+    fn pooling_layers_present_and_costed() {
+        let net = zoo::vgg16();
+        let plan = lr_plan(&net, 8);
+        let pools: Vec<&LayerPlan> =
+            plan.layers.iter().filter(|l| l.kind == WorkKind::Pooling).collect();
+        assert_eq!(pools.len(), 5);
+        for p in pools {
+            assert!(p.latency_events.aux.time_units() > 0);
+            assert!(p.energy_cells.aux.compare_senses > 0.0);
+        }
+    }
+
+    #[test]
+    fn residual_layers_costed_on_resnet() {
+        let net = zoo::resnet18();
+        let plan = lr_plan(&net, 8);
+        let res: Vec<&LayerPlan> =
+            plan.layers.iter().filter(|l| l.kind == WorkKind::Residual).collect();
+        assert_eq!(res.len(), 8);
+    }
+
+    #[test]
+    fn phase_table_total_sums() {
+        let t = PhaseTable::<f64> { populate: 1.0, multiply: 2.0, reduce: 3.0, readout: 4.0, aux: 5.0 };
+        assert_eq!(t.total(), 15.0);
+        let s = t.add(&t);
+        assert_eq!(s.total(), 30.0);
+    }
+}

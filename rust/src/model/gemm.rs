@@ -1,0 +1,244 @@
+//! im2col GEMM lowering (paper §II-C, Fig. 2).
+//!
+//! A convolution over an `{H_I, W_I, C_I}` input with `C_K` kernels of
+//! `{H_K, W_K, C_I}` becomes `K x P = O`:
+//!
+//! * `P` ("input-patch" / Toeplitz matrix): `(H_K·W_K·C_I) x (H_O·W_O)`,
+//! * `K` ("kernel-patch" matrix): `C_K x (H_K·W_K·C_I)`,
+//! * `O`: `C_K x (H_O·W_O)`.
+//!
+//! In the crate's `i x j` by `j x u` GEMM vocabulary: `i = C_K`,
+//! `j = H_K·W_K·C_I`, `u = H_O·W_O`.
+
+/// GEMM problem dimensions: an `i x j` (kernel) by `j x u` (input-patch)
+/// product.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GemmDims {
+    /// Output channels `C_K` (rows of the kernel matrix).
+    pub i: u64,
+    /// Contraction length `H_K·W_K·C_I`.
+    pub j: u64,
+    /// Output pixels `H_O·W_O` (columns of the patch matrix).
+    pub u: u64,
+}
+
+impl GemmDims {
+    /// Total MACs of the product.
+    pub fn macs(&self) -> u64 {
+        self.i * self.j * self.u
+    }
+
+    /// Words (product rows) an AP mapping materializes: one per (i, j, u)
+    /// product triple (§III-B: "the number of rows needed in the AP ... is
+    /// i*j*u").
+    pub fn ap_words(&self) -> u64 {
+        self.i * self.j * self.u
+    }
+
+    /// Elements of the input-patch matrix P (streamed per inference).
+    pub fn patch_elems(&self) -> u64 {
+        self.j * self.u
+    }
+
+    /// Elements of the kernel matrix K (resident weights).
+    pub fn kernel_elems(&self) -> u64 {
+        self.i * self.j
+    }
+
+    /// Elements of the output matrix O.
+    pub fn output_elems(&self) -> u64 {
+        self.i * self.u
+    }
+}
+
+/// im2col expansion of an input feature map: (input shape, kernel, stride,
+/// padding) -> P-matrix dimensions. Mirrors §II-C's formulas.
+pub fn im2col_patch_dims(
+    h_i: u64,
+    w_i: u64,
+    c_i: u64,
+    h_k: u64,
+    w_k: u64,
+    stride: u64,
+    pad: u64,
+) -> (u64, u64) {
+    let h_o = (h_i + 2 * pad - h_k) / stride + 1;
+    let w_o = (w_i + 2 * pad - w_k) / stride + 1;
+    (h_k * w_k * c_i, h_o * w_o)
+}
+
+/// Build the actual im2col patch matrix of a (row-major, HWC) input — used
+/// by tests to prove the lowering is value-exact, and by the runtime to
+/// prepare GEMM-artifact inputs. Out-of-range taps read zero (zero padding).
+/// Returns a `(h_k*w_k*c_i) x (h_o*w_o)` matrix in row-major order.
+pub fn im2col<T: Copy + Default>(
+    input: &[T],
+    h_i: usize,
+    w_i: usize,
+    c_i: usize,
+    h_k: usize,
+    w_k: usize,
+    stride: usize,
+    pad: usize,
+) -> Vec<T> {
+    assert_eq!(input.len(), h_i * w_i * c_i, "input length mismatch");
+    let h_o = (h_i + 2 * pad - h_k) / stride + 1;
+    let w_o = (w_i + 2 * pad - w_k) / stride + 1;
+    let rows = h_k * w_k * c_i;
+    let cols = h_o * w_o;
+    let mut out = vec![T::default(); rows * cols];
+    for oy in 0..h_o {
+        for ox in 0..w_o {
+            let col = oy * w_o + ox;
+            for ky in 0..h_k {
+                for kx in 0..w_k {
+                    for ch in 0..c_i {
+                        let row = (ky * w_k + kx) * c_i + ch;
+                        let iy = (oy * stride + ky) as isize - pad as isize;
+                        let ix = (ox * stride + kx) as isize - pad as isize;
+                        if iy >= 0 && (iy as usize) < h_i && ix >= 0 && (ix as usize) < w_i {
+                            out[row * cols + col] =
+                                input[(iy as usize * w_i + ix as usize) * c_i + ch];
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Reference dense GEMM `C = A(i x j) * B(j x u)` over i64 (row-major), the
+/// oracle for im2col-lowered convolution tests.
+pub fn matmul_i64(a: &[i64], b: &[i64], i: usize, j: usize, u: usize) -> Vec<i64> {
+    assert_eq!(a.len(), i * j);
+    assert_eq!(b.len(), j * u);
+    let mut c = vec![0i64; i * u];
+    for ii in 0..i {
+        for jj in 0..j {
+            let av = a[ii * j + jj];
+            if av == 0 {
+                continue;
+            }
+            for uu in 0..u {
+                c[ii * u + uu] += av * b[jj * u + uu];
+            }
+        }
+    }
+    c
+}
+
+/// Direct (nested-loop) convolution oracle over i64, HWC layout, returning
+/// HWC output. Used to prove im2col + GEMM == convolution.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_i64(
+    input: &[i64],
+    weights: &[i64], // [out_c][k][k][c_i]
+    h_i: usize,
+    w_i: usize,
+    c_i: usize,
+    k: usize,
+    out_c: usize,
+    stride: usize,
+    pad: usize,
+) -> Vec<i64> {
+    let h_o = (h_i + 2 * pad - k) / stride + 1;
+    let w_o = (w_i + 2 * pad - k) / stride + 1;
+    let mut out = vec![0i64; h_o * w_o * out_c];
+    for oc in 0..out_c {
+        for oy in 0..h_o {
+            for ox in 0..w_o {
+                let mut acc = 0i64;
+                for ky in 0..k {
+                    for kx in 0..k {
+                        for ch in 0..c_i {
+                            let iy = (oy * stride + ky) as isize - pad as isize;
+                            let ix = (ox * stride + kx) as isize - pad as isize;
+                            if iy >= 0 && (iy as usize) < h_i && ix >= 0 && (ix as usize) < w_i {
+                                acc += weights[((oc * k + ky) * k + kx) * c_i + ch]
+                                    * input[(iy as usize * w_i + ix as usize) * c_i + ch];
+                            }
+                        }
+                    }
+                }
+                out[(oy * w_o + ox) * out_c + oc] = acc;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn patch_dims_match_paper_formulas() {
+        // Fig. 2's example: 2x2x2 input, 2x2x2x2 filter, stride 1, no pad.
+        let (rows, cols) = im2col_patch_dims(2, 2, 2, 2, 2, 1, 0);
+        assert_eq!(rows, 2 * 2 * 2);
+        assert_eq!(cols, 1);
+    }
+
+    #[test]
+    fn fig2_example_gemm() {
+        // The Fig. 2 shapes: K is 2x8, P is 8x1, O is 2x1.
+        let g = GemmDims { i: 2, j: 8, u: 1 };
+        assert_eq!(g.macs(), 16);
+        assert_eq!(g.kernel_elems(), 16);
+        assert_eq!(g.output_elems(), 2);
+    }
+
+    /// im2col + GEMM must equal direct convolution on random cases
+    /// (including stride > 1 and zero padding).
+    #[test]
+    fn im2col_gemm_equals_direct_conv() {
+        check("im2col+gemm == conv", 32, |rng| {
+            let h = rng.range(3, 8);
+            let w = rng.range(3, 8);
+            let c = rng.range(1, 4);
+            let k = rng.range(1, 3.min(h).min(w));
+            let oc = rng.range(1, 4);
+            let stride = rng.range(1, 2);
+            let pad = rng.range(0, 1);
+            let input: Vec<i64> = (0..h * w * c).map(|_| rng.range_i64(-8, 8)).collect();
+            let weights: Vec<i64> = (0..oc * k * k * c).map(|_| rng.range_i64(-8, 8)).collect();
+
+            let direct = conv2d_i64(&input, &weights, h, w, c, k, oc, stride, pad);
+
+            let p = im2col(&input, h, w, c, k, k, stride, pad);
+            let j = k * k * c;
+            let h_o = (h + 2 * pad - k) / stride + 1;
+            let w_o = (w + 2 * pad - k) / stride + 1;
+            let u = h_o * w_o;
+            // Kernel matrix rows are [k][k][c] unrolled — same order im2col
+            // unrolls patch rows.
+            let gemm_out = matmul_i64(&weights, &p, oc, j, u);
+            for ocx in 0..oc {
+                for px in 0..u {
+                    let got = gemm_out[ocx * u + px];
+                    let want = direct[px * oc + ocx];
+                    if got != want {
+                        return Err(format!("mismatch at oc={ocx} pixel={px}: {got} != {want}"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let mut rng = Rng::new(5);
+        let n = 4;
+        let a: Vec<i64> = (0..n * n).map(|_| rng.range_i64(-5, 5)).collect();
+        let mut eye = vec![0i64; n * n];
+        for d in 0..n {
+            eye[d * n + d] = 1;
+        }
+        assert_eq!(matmul_i64(&a, &eye, n, n, n), a);
+        assert_eq!(matmul_i64(&eye, &a, n, n, n), a);
+    }
+}

@@ -1,0 +1,341 @@
+//! CNN model intermediate representation.
+//!
+//! A [`Network`] is an ordered list of [`Layer`]s with explicit input
+//! shapes. The mapper lowers convolutional and fully-connected layers to
+//! GEMM via im2col ([`gemm`]), exactly as §II-C describes; pooling and ReLU
+//! map to the corresponding AP CNN functions. The [`zoo`] module provides
+//! AlexNet, VGG16, ResNet18 and ResNet50 with ImageNet shapes (the paper's
+//! benchmarks) plus the small serving CNN used by the end-to-end example.
+
+pub mod gemm;
+pub mod zoo;
+
+/// A 3-D feature-map shape (height, width, channels).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Shape {
+    pub h: u64,
+    pub w: u64,
+    pub c: u64,
+}
+
+impl Shape {
+    /// Convenience constructor.
+    pub fn new(h: u64, w: u64, c: u64) -> Self {
+        Self { h, w, c }
+    }
+
+    /// Total element count.
+    pub fn elems(&self) -> u64 {
+        self.h * self.w * self.c
+    }
+}
+
+/// One network layer. Each layer carries its input shape; chain consistency
+/// is validated by [`Network::validate`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum LayerKind {
+    /// 2-D convolution with `out_c` kernels of `k x k x (in.c / groups)`,
+    /// given stride and symmetric zero padding (`groups > 1` models
+    /// AlexNet's two-tower grouped convolutions). A ReLU may be fused
+    /// behind it (`relu`).
+    Conv { k: u64, out_c: u64, stride: u64, pad: u64, groups: u64, relu: bool },
+    /// Fully-connected layer: `out_features x in_features` weights.
+    Fc { out_features: u64, relu: bool },
+    /// Max pooling with window `win x win` and the given stride.
+    MaxPool { win: u64, stride: u64 },
+    /// Average pooling with window `win x win` and the given stride
+    /// (`win == in.h` gives global average pooling).
+    AvgPool { win: u64, stride: u64 },
+    /// Residual element-wise addition with the output of layer `from`
+    /// (index into the network's layer list), followed by optional ReLU.
+    ResidualAdd { from: usize, relu: bool },
+}
+
+/// A named layer with its input shape. `from` names the layer whose output
+/// feeds this one (`None` = the immediately preceding layer), allowing the
+/// branch-and-merge topology of residual networks while keeping a flat
+/// layer list.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Layer {
+    pub name: String,
+    pub input: Shape,
+    pub kind: LayerKind,
+    pub from: Option<usize>,
+}
+
+impl Layer {
+    /// Output shape of this layer.
+    pub fn output(&self) -> Shape {
+        match &self.kind {
+            LayerKind::Conv { k, out_c, stride, pad, .. } => {
+                let h = (self.input.h + 2 * pad - k) / stride + 1;
+                let w = (self.input.w + 2 * pad - k) / stride + 1;
+                Shape::new(h, w, *out_c)
+            }
+            LayerKind::Fc { out_features, .. } => Shape::new(1, 1, *out_features),
+            LayerKind::MaxPool { win, stride } | LayerKind::AvgPool { win, stride } => {
+                let h = (self.input.h - win) / stride + 1;
+                let w = (self.input.w - win) / stride + 1;
+                Shape::new(h, w, self.input.c)
+            }
+            LayerKind::ResidualAdd { .. } => self.input,
+        }
+    }
+
+    /// Multiply-accumulate count (the paper's MACs metric; 0 for layers
+    /// without multiplications).
+    pub fn macs(&self) -> u64 {
+        match &self.kind {
+            LayerKind::Conv { k, groups, .. } => {
+                let out = self.output();
+                out.h * out.w * out.c * k * k * self.input.c / groups
+            }
+            LayerKind::Fc { out_features, .. } => self.input.elems() * out_features,
+            _ => 0,
+        }
+    }
+
+    /// Weight parameter count (0 for weight-less layers).
+    pub fn params(&self) -> u64 {
+        match &self.kind {
+            LayerKind::Conv { k, out_c, groups, .. } => k * k * self.input.c * out_c / groups,
+            LayerKind::Fc { out_features, .. } => self.input.elems() * out_features,
+            _ => 0,
+        }
+    }
+
+    /// True for layers that carry quantizable weights (conv / fc) — the
+    /// layers a per-layer mixed-precision configuration assigns bits to.
+    pub fn has_weights(&self) -> bool {
+        matches!(self.kind, LayerKind::Conv { .. } | LayerKind::Fc { .. })
+    }
+
+    /// im2col GEMM dimensions for conv / fc layers, `None` otherwise.
+    pub fn gemm_dims(&self) -> Option<gemm::GemmDims> {
+        match &self.kind {
+            LayerKind::Conv { k, out_c, groups, .. } => {
+                // A grouped conv is `groups` independent GEMMs; for cost
+                // purposes we model one GEMM with the contraction shortened
+                // by the group count (identical total MACs and words).
+                let out = self.output();
+                Some(gemm::GemmDims {
+                    i: *out_c,
+                    j: k * k * self.input.c / groups,
+                    u: out.h * out.w,
+                })
+            }
+            LayerKind::Fc { out_features, .. } => {
+                Some(gemm::GemmDims { i: *out_features, j: self.input.elems(), u: 1 })
+            }
+            _ => None,
+        }
+    }
+}
+
+/// A whole network: named, with an ImageNet-style input.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Network {
+    pub name: String,
+    pub input: Shape,
+    pub layers: Vec<Layer>,
+}
+
+impl Network {
+    /// Total MACs across all layers (the paper quotes 0.72G / 15.5G / 4.14G
+    /// for AlexNet / VGG16 / ResNet50).
+    pub fn total_macs(&self) -> u64 {
+        self.layers.iter().map(Layer::macs).sum()
+    }
+
+    /// Total weight parameters.
+    pub fn total_params(&self) -> u64 {
+        self.layers.iter().map(Layer::params).sum()
+    }
+
+    /// Number of weight-carrying (quantizable) layers.
+    pub fn weight_layers(&self) -> usize {
+        self.layers.iter().filter(|l| l.has_weights()).count()
+    }
+
+    /// Indices of the weight-carrying layers, in execution order.
+    pub fn weight_layer_indices(&self) -> Vec<usize> {
+        self.layers
+            .iter()
+            .enumerate()
+            .filter(|(_, l)| l.has_weights())
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Largest conv layer by MACs — sizes the IR (maximum-parallelism)
+    /// configuration (§III-A: "Configuring the accelerator size is based on
+    /// the dimensions of the convolutional layer with the highest number of
+    /// MACs").
+    pub fn largest_conv_macs(&self) -> u64 {
+        self.layers
+            .iter()
+            .filter(|l| matches!(l.kind, LayerKind::Conv { .. }))
+            .map(Layer::macs)
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Validate shape chaining: each layer's recorded input must equal the
+    /// previous layer's output (residual adds must reference an earlier
+    /// layer with a matching output shape).
+    pub fn validate(&self) -> Result<(), String> {
+        let mut prev = self.input;
+        for (idx, layer) in self.layers.iter().enumerate() {
+            let feeding = match layer.from {
+                None => prev,
+                Some(src) => {
+                    if src >= idx {
+                        return Err(format!(
+                            "layer {idx} '{}': feeds from {src}, not an earlier layer",
+                            layer.name
+                        ));
+                    }
+                    self.layers[src].output()
+                }
+            };
+            if layer.input != feeding {
+                return Err(format!(
+                    "layer {idx} '{}': recorded input {:?} != feeding output {feeding:?}",
+                    layer.name, layer.input
+                ));
+            }
+            if let LayerKind::ResidualAdd { from, .. } = layer.kind {
+                if from >= idx {
+                    return Err(format!(
+                        "layer {idx} '{}': residual source {from} is not an earlier layer",
+                        layer.name
+                    ));
+                }
+                let src_out = self.layers[from].output();
+                if src_out != layer.input {
+                    return Err(format!(
+                        "layer {idx} '{}': residual source shape {src_out:?} != input {:?}",
+                        layer.name, layer.input
+                    ));
+                }
+            }
+            prev = layer.output();
+        }
+        Ok(())
+    }
+
+    /// Output shape of the final layer.
+    pub fn output(&self) -> Shape {
+        self.layers.last().map(Layer::output).unwrap_or(self.input)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn conv_layer() -> Layer {
+        Layer {
+            name: "c1".into(),
+            input: Shape::new(224, 224, 3),
+            kind: LayerKind::Conv { k: 11, out_c: 96, stride: 4, pad: 2, groups: 1, relu: true },
+            from: None,
+        }
+    }
+
+    #[test]
+    fn conv_output_shape() {
+        // AlexNet conv1: (224 + 4 - 11)/4 + 1 = 55.
+        assert_eq!(conv_layer().output(), Shape::new(55, 55, 96));
+    }
+
+    #[test]
+    fn conv_macs_and_params() {
+        let l = conv_layer();
+        assert_eq!(l.macs(), 55 * 55 * 96 * 11 * 11 * 3);
+        assert_eq!(l.params(), 11 * 11 * 3 * 96);
+    }
+
+    #[test]
+    fn conv_gemm_dims_match_im2col() {
+        let g = conv_layer().gemm_dims().unwrap();
+        assert_eq!(g.i, 96);
+        assert_eq!(g.j, 11 * 11 * 3);
+        assert_eq!(g.u, 55 * 55);
+        // GEMM MACs == conv MACs.
+        assert_eq!(g.i * g.j * g.u, conv_layer().macs());
+    }
+
+    #[test]
+    fn pool_output_shape() {
+        let l = Layer {
+            name: "p".into(),
+            input: Shape::new(55, 55, 96),
+            kind: LayerKind::MaxPool { win: 3, stride: 2 },
+            from: None,
+        };
+        assert_eq!(l.output(), Shape::new(27, 27, 96));
+        assert_eq!(l.macs(), 0);
+    }
+
+    #[test]
+    fn fc_is_gemm_with_u1() {
+        let l = Layer {
+            name: "fc".into(),
+            input: Shape::new(1, 1, 4096),
+            kind: LayerKind::Fc { out_features: 1000, relu: false },
+            from: None,
+        };
+        let g = l.gemm_dims().unwrap();
+        assert_eq!((g.i, g.j, g.u), (1000, 4096, 1));
+        assert_eq!(l.macs(), 4096 * 1000);
+    }
+
+    #[test]
+    fn validate_catches_shape_breaks() {
+        let mut net = Network {
+            name: "bad".into(),
+            input: Shape::new(224, 224, 3),
+            layers: vec![conv_layer()],
+        };
+        assert!(net.validate().is_ok());
+        net.layers.push(Layer {
+            name: "bad_next".into(),
+            input: Shape::new(10, 10, 10), // wrong: conv1 outputs 55x55x96
+            kind: LayerKind::MaxPool { win: 2, stride: 2 },
+            from: None,
+        });
+        assert!(net.validate().is_err());
+    }
+
+    #[test]
+    fn validate_checks_residual_sources() {
+        let shape = Shape::new(8, 8, 4);
+        let id_conv = Layer {
+            name: "c".into(),
+            input: shape,
+            kind: LayerKind::Conv { k: 3, out_c: 4, stride: 1, pad: 1, groups: 1, relu: true },
+            from: None,
+        };
+        let net = Network {
+            name: "res".into(),
+            input: shape,
+            layers: vec![
+                id_conv.clone(),
+                Layer { name: "r".into(), input: shape, kind: LayerKind::ResidualAdd { from: 0, relu: true }, from: None },
+            ],
+        };
+        assert!(net.validate().is_ok());
+        let bad = Network {
+            name: "res_bad".into(),
+            input: shape,
+            layers: vec![Layer {
+                name: "r".into(),
+                input: shape,
+                kind: LayerKind::ResidualAdd { from: 0, relu: true },
+                from: None,
+            }],
+        };
+        assert!(bad.validate().is_err());
+    }
+}

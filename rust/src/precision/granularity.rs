@@ -1,0 +1,156 @@
+//! Fine-grained (per-channel) mixed precision on the AP.
+//!
+//! The paper's intro distinguishes coarse-grained (per-layer, what BF-IMNA
+//! evaluates) from fine-grained (per-channel / per-parameter) granularity.
+//! Bit-serial hardware supports the finer granularities *for energy*
+//! automatically — a channel quantized to fewer bits simply skips its MSB
+//! passes — but **latency** depends on scheduling: all words that share a
+//! CAP step march through the same pass schedule, so a step is as slow as
+//! its widest word.
+//!
+//! This module quantifies that: given per-output-channel weight widths, it
+//! computes the multiply-pass cost under
+//!
+//! * [`lockstep_passes`] — naive packing, every step pays the layer-wide
+//!   maximum width (fine-grained saves energy, zero latency),
+//! * [`sorted_packed_passes`] — channels sorted by width before packing,
+//!   so steps are width-homogeneous and latency tracks the width
+//!   *distribution* (the scheduling optimization a bit-fluid compiler
+//!   would apply),
+//! * [`ideal_passes`] — the energy-side lower bound (schedule-free).
+
+use crate::util::rng::Rng;
+
+/// Per-output-channel precision of one layer: uniform activation bits,
+/// one weight width per channel.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ChannelConfig {
+    pub a_bits: u32,
+    /// Weight bits per output channel (length = out channels).
+    pub w_bits: Vec<u32>,
+}
+
+impl ChannelConfig {
+    /// Uniform configuration (reduces to per-layer precision).
+    pub fn uniform(a_bits: u32, w_bits: u32, channels: usize) -> Self {
+        Self { a_bits, w_bits: vec![w_bits; channels] }
+    }
+
+    /// Random widths in `[lo, hi]` (fine-grained search output stand-in).
+    pub fn random(a_bits: u32, lo: u32, hi: u32, channels: usize, rng: &mut Rng) -> Self {
+        let w_bits = (0..channels).map(|_| lo + rng.below((hi - lo + 1) as u64) as u32).collect();
+        Self { a_bits, w_bits }
+    }
+
+    /// Mean weight width.
+    pub fn avg_w_bits(&self) -> f64 {
+        if self.w_bits.is_empty() {
+            return 0.0;
+        }
+        self.w_bits.iter().map(|&b| b as f64).sum::<f64>() / self.w_bits.len() as f64
+    }
+
+    /// Maximum weight width.
+    pub fn max_w_bits(&self) -> u32 {
+        self.w_bits.iter().copied().max().unwrap_or(0)
+    }
+}
+
+/// Multiply passes per word at widths `(a, w)` (the `4·Ma·Mw` kernel of
+/// Table I's multiplication).
+fn passes(a: u32, w: u32) -> u64 {
+    4 * a as u64 * w as u64
+}
+
+/// Naive packing: every channel rides the layer maximum — the latency a
+/// per-layer (coarse) schedule pays regardless of per-channel widths.
+pub fn lockstep_passes(cfg: &ChannelConfig, lanes: u64) -> u64 {
+    let steps = (cfg.w_bits.len() as u64).div_ceil(lanes.max(1));
+    steps * passes(cfg.a_bits, cfg.max_w_bits())
+}
+
+/// Width-sorted packing: channels sorted descending by width, packed
+/// `lanes` per step; each step pays its own (homogeneous) maximum.
+pub fn sorted_packed_passes(cfg: &ChannelConfig, lanes: u64) -> u64 {
+    let lanes = lanes.max(1) as usize;
+    let mut sorted = cfg.w_bits.clone();
+    sorted.sort_unstable_by(|a, b| b.cmp(a));
+    sorted
+        .chunks(lanes)
+        .map(|chunk| passes(cfg.a_bits, chunk[0])) // chunk max = first (sorted)
+        .sum()
+}
+
+/// Schedule-free lower bound: each channel pays exactly its own passes
+/// (this is also the *energy*-side pass count, which no schedule changes).
+pub fn ideal_passes(cfg: &ChannelConfig, lanes: u64) -> f64 {
+    let lanes = lanes.max(1) as f64;
+    cfg.w_bits.iter().map(|&w| passes(cfg.a_bits, w) as f64).sum::<f64>() / lanes
+}
+
+/// Latency efficiency of a schedule: ideal / scheduled (1.0 = perfect).
+pub fn schedule_efficiency(cfg: &ChannelConfig, lanes: u64, scheduled: u64) -> f64 {
+    if scheduled == 0 {
+        return 1.0;
+    }
+    ideal_passes(cfg, lanes) / scheduled as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mixed_cfg() -> ChannelConfig {
+        // Half the channels at 8 bits, half at 4.
+        let mut w = vec![8u32; 32];
+        w.extend(vec![4u32; 32]);
+        ChannelConfig { a_bits: 8, w_bits: w }
+    }
+
+    #[test]
+    fn uniform_schedules_coincide() {
+        let cfg = ChannelConfig::uniform(8, 8, 64);
+        let lanes = 16;
+        assert_eq!(lockstep_passes(&cfg, lanes), sorted_packed_passes(&cfg, lanes));
+        assert!(
+            (ideal_passes(&cfg, lanes) - lockstep_passes(&cfg, lanes) as f64).abs() < 1e-9
+        );
+    }
+
+    #[test]
+    fn sorted_packing_beats_lockstep_on_mixed_widths() {
+        let cfg = mixed_cfg();
+        let lanes = 16;
+        let lock = lockstep_passes(&cfg, lanes);
+        let sorted = sorted_packed_passes(&cfg, lanes);
+        assert!(sorted < lock, "sorted {sorted} vs lockstep {lock}");
+        // Half 8b + half 4b with perfect packing: mean of 4*8*8 and 4*8*4.
+        let ideal = ideal_passes(&cfg, lanes);
+        assert!((sorted as f64 - ideal).abs() / ideal < 1e-9, "sorted == ideal here");
+        // Lockstep pays the max everywhere: 4 steps x 256 passes.
+        assert_eq!(lock, 4 * 4 * 8 * 8);
+    }
+
+    #[test]
+    fn sorted_packing_is_never_worse_than_lockstep() {
+        let mut rng = Rng::new(11);
+        for _ in 0..50 {
+            let n = 1 + rng.range(1, 200);
+            let cfg = ChannelConfig::random(8, 2, 8, n, &mut rng);
+            let lanes = 1 + rng.below(64);
+            let lock = lockstep_passes(&cfg, lanes);
+            let sorted = sorted_packed_passes(&cfg, lanes);
+            assert!(sorted <= lock, "n={n} lanes={lanes}: {sorted} > {lock}");
+            let eff = schedule_efficiency(&cfg, lanes, sorted);
+            assert!(eff > 0.0 && eff <= 1.0 + 1e-9, "efficiency {eff}");
+        }
+    }
+
+    #[test]
+    fn avg_and_max_helpers() {
+        let cfg = mixed_cfg();
+        assert_eq!(cfg.max_w_bits(), 8);
+        assert!((cfg.avg_w_bits() - 6.0).abs() < 1e-9);
+        assert_eq!(ChannelConfig::uniform(8, 4, 0).avg_w_bits(), 0.0);
+    }
+}

@@ -1,0 +1,268 @@
+//! HAWQ-V3 per-layer precision configurations for ResNet18 (paper
+//! Table VII).
+//!
+//! HAWQ-V3 [Yao et al., ICML'21] chooses INT4 or INT8 per layer under a
+//! latency budget; the paper adopts its published configurations to
+//! demonstrate bit fluidity. Each row below carries the per-layer bit
+//! vector (19 entries, HAWQ-V3's layer accounting) plus the published
+//! metrics we compare against: average bitwidth, normalized energy/latency
+//! (expressed, as in Table VII, as the *improvement factor over INT8* —
+//! `INT8_value / config_value`), absolute EDP in J·s, model size, and the
+//! ImageNet top-1 accuracy HAWQ-V3 reports.
+//!
+//! The bit vectors reproduce Table VII's average bitwidths exactly
+//! (4.00 / 7.16 / 6.53 / 5.05 / 8.00); the positions of the INT4 layers
+//! follow the listed patterns (deeper layers drop to INT4 first as the
+//! constraint tightens).
+
+use super::PrecisionConfig;
+use crate::model::Network;
+
+/// Latency budget labels of Table VII.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum LatencyBudget {
+    /// Fixed INT4 baseline row.
+    FixedInt4,
+    /// "High" latency constraint (loosest): most layers INT8.
+    High,
+    /// "Medium" latency constraint.
+    Medium,
+    /// "Low" latency constraint (tightest): most layers INT4.
+    Low,
+    /// Fixed INT8 baseline row.
+    FixedInt8,
+}
+
+impl LatencyBudget {
+    /// All rows in Table VII order.
+    pub const ALL: [LatencyBudget; 5] = [
+        LatencyBudget::FixedInt4,
+        LatencyBudget::High,
+        LatencyBudget::Medium,
+        LatencyBudget::Low,
+        LatencyBudget::FixedInt8,
+    ];
+
+    /// Row label.
+    pub fn label(&self) -> &'static str {
+        match self {
+            LatencyBudget::FixedInt4 => "INT4 (fixed)",
+            LatencyBudget::High => "High",
+            LatencyBudget::Medium => "Medium",
+            LatencyBudget::Low => "Low",
+            LatencyBudget::FixedInt8 => "INT8 (fixed)",
+        }
+    }
+}
+
+/// One Table VII row: configuration + published reference metrics.
+#[derive(Debug, Clone)]
+pub struct HawqRow {
+    pub budget: LatencyBudget,
+    /// Per-layer bits, HAWQ-V3's 19-layer accounting.
+    pub bits: [u32; 19],
+    /// Published average bitwidth.
+    pub paper_avg_bits: f64,
+    /// Published normalized energy (INT8 / config — higher is better).
+    pub paper_norm_energy: f64,
+    /// Published normalized latency (INT8 / config).
+    pub paper_norm_latency: f64,
+    /// Published EDP, J·s.
+    pub paper_edp_js: f64,
+    /// Published model size, MB.
+    pub paper_size_mb: f64,
+    /// Published ImageNet top-1 accuracy, %.
+    pub paper_top1_acc: f64,
+}
+
+/// Build a 19-entry bit vector with INT4 at the given (0-based) positions.
+const fn bits_with_fours<const N: usize>(fours: [usize; N]) -> [u32; 19] {
+    let mut b = [8u32; 19];
+    let mut k = 0;
+    while k < N {
+        b[fours[k]] = 4;
+        k += 1;
+    }
+    b
+}
+
+/// The five rows of Table VII.
+pub fn table_vii_rows() -> Vec<HawqRow> {
+    vec![
+        HawqRow {
+            budget: LatencyBudget::FixedInt4,
+            bits: [4; 19],
+            paper_avg_bits: 4.0,
+            paper_norm_energy: 3.29,
+            paper_norm_latency: 1.004,
+            paper_edp_js: 0.58,
+            paper_size_mb: 5.6,
+            paper_top1_acc: 68.45,
+        },
+        HawqRow {
+            budget: LatencyBudget::High,
+            // 15 x INT8 + 4 x INT4 = avg 7.16.
+            bits: bits_with_fours([8, 12, 14, 16]),
+            paper_avg_bits: 7.16,
+            paper_norm_energy: 1.13,
+            paper_norm_latency: 1.001,
+            paper_edp_js: 1.69,
+            paper_size_mb: 8.7,
+            paper_top1_acc: 70.4,
+        },
+        HawqRow {
+            budget: LatencyBudget::Medium,
+            // 12 x INT8 + 7 x INT4 = avg 6.53.
+            bits: bits_with_fours([5, 8, 11, 12, 14, 16, 17]),
+            paper_avg_bits: 6.53,
+            paper_norm_energy: 1.22,
+            paper_norm_latency: 1.002,
+            paper_edp_js: 1.56,
+            paper_size_mb: 7.2,
+            paper_top1_acc: 70.34,
+        },
+        HawqRow {
+            budget: LatencyBudget::Low,
+            // 5 x INT8 + 14 x INT4 = avg 5.05 (early layers keep INT8).
+            bits: {
+                let mut b = [4u32; 19];
+                b[0] = 8;
+                b[1] = 8;
+                b[2] = 8;
+                b[4] = 8;
+                b[6] = 8;
+                b
+            },
+            paper_avg_bits: 5.05,
+            paper_norm_energy: 1.90,
+            paper_norm_latency: 1.004,
+            paper_edp_js: 1.00,
+            paper_size_mb: 6.1,
+            paper_top1_acc: 68.56,
+        },
+        HawqRow {
+            budget: LatencyBudget::FixedInt8,
+            bits: [8; 19],
+            paper_avg_bits: 8.0,
+            paper_norm_energy: 1.0,
+            paper_norm_latency: 1.0,
+            paper_edp_js: 1.91,
+            paper_size_mb: 11.2,
+            paper_top1_acc: 71.56,
+        },
+    ]
+}
+
+/// Fetch one row by budget.
+pub fn row(budget: LatencyBudget) -> HawqRow {
+    table_vii_rows().into_iter().find(|r| r.budget == budget).expect("all budgets present")
+}
+
+/// Expand a 19-entry HAWQ bit vector onto a concrete ResNet18 [`Network`]
+/// from the zoo (21 weight layers): non-downsample weight layers consume
+/// config entries in order; each `.ds` projection inherits the entry of its
+/// block's first conv (HAWQ-V3 folds the projection into the block). The
+/// 19th entry covers the final fc layer.
+pub fn config_for_resnet18(net: &Network, r: &HawqRow) -> PrecisionConfig {
+    let indices = net.weight_layer_indices();
+    let mut per_layer_bits = Vec::with_capacity(indices.len());
+    let mut slot = 0usize;
+    for &idx in &indices {
+        let layer = &net.layers[idx];
+        if layer.name.ends_with(".ds") {
+            // Peek: same bits as the block's conv1 (the next config entry).
+            let b = r.bits[slot.min(r.bits.len() - 1)];
+            per_layer_bits.push(b);
+        } else {
+            let b = r.bits[slot.min(r.bits.len() - 1)];
+            per_layer_bits.push(b);
+            slot += 1;
+        }
+    }
+    PrecisionConfig::from_bits(&format!("hawq-{}", r.budget.label()), &per_layer_bits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+
+    #[test]
+    fn avg_bits_match_table_vii() {
+        for r in table_vii_rows() {
+            let avg = r.bits.iter().sum::<u32>() as f64 / 19.0;
+            assert!(
+                (avg - r.paper_avg_bits).abs() < 0.01,
+                "{:?}: avg {avg:.3} != {}",
+                r.budget,
+                r.paper_avg_bits
+            );
+        }
+    }
+
+    #[test]
+    fn edp_consistency_of_published_numbers() {
+        // Table VII's EDP column must equal EDP(INT8) / (normE x normL).
+        let rows = table_vii_rows();
+        let edp8 = row(LatencyBudget::FixedInt8).paper_edp_js;
+        for r in &rows {
+            let derived = edp8 / (r.paper_norm_energy * r.paper_norm_latency);
+            assert!(
+                (derived - r.paper_edp_js).abs() < 0.02,
+                "{:?}: derived {derived:.3} != {}",
+                r.budget,
+                r.paper_edp_js
+            );
+        }
+    }
+
+    #[test]
+    fn accuracy_ordering_matches_paper() {
+        // INT8 > high > medium > low > INT4 (low beats INT4 slightly).
+        let acc: Vec<f64> = LatencyBudget::ALL.iter().map(|&b| row(b).paper_top1_acc).collect();
+        assert!(acc[4] > acc[1] && acc[1] > acc[2] && acc[2] > acc[3] && acc[3] > acc[0]);
+    }
+
+    #[test]
+    fn config_expands_onto_zoo_resnet18() {
+        let net = zoo::resnet18();
+        for r in table_vii_rows() {
+            let cfg = config_for_resnet18(&net, &r);
+            assert_eq!(cfg.per_layer.len(), net.weight_layers());
+            // Hardware average tracks the published average within half a
+            // bit (the 2 extra ds layers shift it slightly).
+            assert!(
+                (cfg.avg_bits() - r.paper_avg_bits).abs() < 0.5,
+                "{:?}: hw avg {:.2} vs paper {:.2}",
+                r.budget,
+                cfg.avg_bits(),
+                r.paper_avg_bits
+            );
+        }
+    }
+
+    #[test]
+    fn fixed_rows_are_fixed() {
+        let net = zoo::resnet18();
+        assert!(config_for_resnet18(&net, &row(LatencyBudget::FixedInt4)).is_fixed());
+        assert!(config_for_resnet18(&net, &row(LatencyBudget::FixedInt8)).is_fixed());
+        assert!(!config_for_resnet18(&net, &row(LatencyBudget::Medium)).is_fixed());
+    }
+
+    #[test]
+    fn model_sizes_track_table_vii() {
+        let net = zoo::resnet18();
+        for r in table_vii_rows() {
+            let cfg = config_for_resnet18(&net, &r);
+            let mb = cfg.model_size_bytes(&net) as f64 / 1e6;
+            // Within 20% of the published size (HAWQ-V3's accounting skips
+            // the classifier in the 4-bit rows).
+            assert!(
+                (mb - r.paper_size_mb).abs() / r.paper_size_mb < 0.2,
+                "{:?}: size {mb:.1} MB vs paper {}",
+                r.budget,
+                r.paper_size_mb
+            );
+        }
+    }
+}

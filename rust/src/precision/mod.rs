@@ -1,0 +1,178 @@
+//! Per-layer mixed-precision configurations ("bit fluidity").
+//!
+//! A [`PrecisionConfig`] assigns weight/activation bitwidths to every
+//! weight-carrying layer of a network. Because the AP computes bit-serially,
+//! *any* such configuration runs on BF-IMNA unchanged — lower precision
+//! simply deactivates MSB columns (§III-A) — which is the paper's central
+//! claim. [`hawq`] carries the HAWQ-V3 ResNet18 configurations of Table VII
+//! and [`sweep`] generates the mixed-precision combinations behind Fig. 7.
+
+pub mod granularity;
+pub mod hawq;
+pub mod sweep;
+
+use crate::model::Network;
+
+/// Weight / activation bitwidths of one layer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LayerPrec {
+    /// Weight bits.
+    pub w: u32,
+    /// Activation bits.
+    pub a: u32,
+}
+
+impl LayerPrec {
+    /// Same width for weights and activations (the paper's per-layer
+    /// "bitwidth (weight and activation)" convention).
+    pub fn uniform(bits: u32) -> Self {
+        Self { w: bits, a: bits }
+    }
+}
+
+/// A named per-weight-layer precision assignment.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PrecisionConfig {
+    pub name: String,
+    /// One entry per weight-carrying layer, in execution order.
+    pub per_layer: Vec<LayerPrec>,
+}
+
+impl PrecisionConfig {
+    /// Fixed precision: all `n_layers` weight layers at `bits`.
+    pub fn fixed(bits: u32, n_layers: usize) -> Self {
+        Self {
+            name: format!("INT{bits}"),
+            per_layer: vec![LayerPrec::uniform(bits); n_layers],
+        }
+    }
+
+    /// Build from a per-layer bit list (uniform weight/activation bits).
+    pub fn from_bits(name: &str, bits: &[u32]) -> Self {
+        Self { name: name.into(), per_layer: bits.iter().map(|&b| LayerPrec::uniform(b)).collect() }
+    }
+
+    /// Average bitwidth across layers (Table VII's "Average Bitwidth"
+    /// column: the plain mean of the per-layer widths).
+    pub fn avg_bits(&self) -> f64 {
+        if self.per_layer.is_empty() {
+            return 0.0;
+        }
+        let sum: f64 = self.per_layer.iter().map(|p| (p.w + p.a) as f64 / 2.0).sum();
+        sum / self.per_layer.len() as f64
+    }
+
+    /// Maximum bitwidth any layer uses (bounds the CAP column budget).
+    pub fn max_bits(&self) -> u32 {
+        self.per_layer.iter().map(|p| p.w.max(p.a)).max().unwrap_or(0)
+    }
+
+    /// Model size in bytes under this configuration: Σ params(layer) x
+    /// w_bits / 8 (Table VII's "Size (MB)" methodology).
+    pub fn model_size_bytes(&self, net: &Network) -> u64 {
+        let mut size_bits = 0u64;
+        for (slot, idx) in net.weight_layer_indices().iter().enumerate() {
+            let prec = self.per_layer.get(slot).copied().unwrap_or_else(|| {
+                *self.per_layer.last().expect("non-empty precision config")
+            });
+            size_bits += net.layers[*idx].params() * prec.w as u64;
+        }
+        size_bits / 8
+    }
+
+    /// Expand to a per-*network*-layer precision vector: weight layers take
+    /// their configured entry (clamped to the last entry if the config is
+    /// short); weight-less layers (pooling, residual add) inherit the
+    /// activation precision flowing out of the previous layer.
+    pub fn for_network(&self, net: &Network) -> Vec<LayerPrec> {
+        assert!(!self.per_layer.is_empty(), "empty precision config");
+        let mut out = Vec::with_capacity(net.layers.len());
+        let mut slot = 0usize;
+        let mut flowing = self.per_layer[0];
+        for layer in &net.layers {
+            if layer.has_weights() {
+                let p = self.per_layer.get(slot).copied().unwrap_or(*self.per_layer.last().unwrap());
+                slot += 1;
+                flowing = p;
+                out.push(p);
+            } else {
+                out.push(LayerPrec { w: 0, a: flowing.a });
+            }
+        }
+        out
+    }
+
+    /// True when every layer runs at the same width.
+    pub fn is_fixed(&self) -> bool {
+        self.per_layer.windows(2).all(|w| w[0] == w[1])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+
+    #[test]
+    fn fixed_config_avg_and_flags() {
+        let c = PrecisionConfig::fixed(8, 19);
+        assert_eq!(c.avg_bits(), 8.0);
+        assert!(c.is_fixed());
+        assert_eq!(c.max_bits(), 8);
+        assert_eq!(c.name, "INT8");
+    }
+
+    #[test]
+    fn mixed_config_avg() {
+        // 15 x 8 + 4 x 4 over 19 layers = 7.157 (Table VII "High").
+        let mut bits = vec![8u32; 19];
+        for i in [8usize, 12, 14, 16] {
+            bits[i] = 4;
+        }
+        let c = PrecisionConfig::from_bits("high", &bits);
+        assert!((c.avg_bits() - 7.16).abs() < 0.01, "avg {}", c.avg_bits());
+        assert!(!c.is_fixed());
+    }
+
+    #[test]
+    fn for_network_covers_every_layer() {
+        let net = zoo::alexnet();
+        let c = PrecisionConfig::fixed(4, net.weight_layers());
+        let per_layer = c.for_network(&net);
+        assert_eq!(per_layer.len(), net.layers.len());
+        // Weight layers carry w bits; pools carry only activation bits.
+        for (layer, p) in net.layers.iter().zip(&per_layer) {
+            if layer.has_weights() {
+                assert_eq!(p.w, 4);
+            } else {
+                assert_eq!(p.w, 0);
+                assert_eq!(p.a, 4);
+            }
+        }
+    }
+
+    #[test]
+    fn short_config_clamps_to_last_entry() {
+        let net = zoo::vgg16();
+        let c = PrecisionConfig::from_bits("short", &[8, 4]);
+        let per_layer = c.for_network(&net);
+        // All weight layers beyond the second get 4 bits.
+        let w_bits: Vec<u32> =
+            net.layers.iter().zip(&per_layer).filter(|(l, _)| l.has_weights()).map(|(_, p)| p.w).collect();
+        assert_eq!(w_bits[0], 8);
+        assert!(w_bits[2..].iter().all(|&b| b == 4));
+    }
+
+    #[test]
+    fn model_size_tracks_bits() {
+        let net = zoo::resnet18();
+        let n = net.weight_layers();
+        let s8 = PrecisionConfig::fixed(8, n).model_size_bytes(&net);
+        let s4 = PrecisionConfig::fixed(4, n).model_size_bytes(&net);
+        assert_eq!(s8, 2 * s4);
+        // ResNet18 has ~11.7 M params -> INT8 ≈ 11.7 MB (Table VII: 11.2 MB
+        // as HAWQ-V3 excludes some layers; within 10%).
+        let mb = s8 as f64 / 1e6;
+        assert!((mb - 11.2).abs() < 1.2, "INT8 size {mb:.1} MB");
+    }
+}

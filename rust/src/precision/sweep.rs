@@ -1,0 +1,127 @@
+//! Mixed-precision configuration generators for the Fig. 7 design-space
+//! exploration.
+//!
+//! §V-A: "we evaluate the performance of several mixed-precision per-layer
+//! combinations, each of which yields a specific average precision value.
+//! The mean performances across the combinations with similar average
+//! precision are reported." This module generates those combinations:
+//! random per-layer assignments from {2..8} whose mean hits a target
+//! average precision.
+
+use super::PrecisionConfig;
+use crate::util::rng::Rng;
+
+/// Minimum per-layer bitwidth explored by the paper's DSE.
+pub const MIN_BITS: u32 = 2;
+/// Maximum per-layer bitwidth (Table V: "Supported Bitwidth: up to 8").
+pub const MAX_BITS: u32 = 8;
+
+/// Generate one random per-layer configuration over `n_layers` whose mean
+/// bitwidth equals `target` to within ±0.5/n_layers. Starts from the
+/// uniform floor assignment and randomly promotes layers until the total
+/// bit budget is met, then jitters pairs (one up, one down) to decorrelate
+/// position from width.
+pub fn random_with_avg(n_layers: usize, target: f64, rng: &mut Rng) -> PrecisionConfig {
+    assert!(n_layers > 0);
+    let target = target.clamp(MIN_BITS as f64, MAX_BITS as f64);
+    let budget = (target * n_layers as f64).round() as u64;
+    let mut bits = vec![MIN_BITS; n_layers];
+    let mut total: u64 = (MIN_BITS as u64) * n_layers as u64;
+    // Promote random layers one bit at a time until the budget is met.
+    let mut guard = 0;
+    while total < budget && guard < 100_000 {
+        let k = rng.range(0, n_layers - 1);
+        if bits[k] < MAX_BITS {
+            bits[k] += 1;
+            total += 1;
+        }
+        guard += 1;
+    }
+    // Jitter: swap a bit between random pairs, preserving the total.
+    for _ in 0..n_layers {
+        let up = rng.range(0, n_layers - 1);
+        let down = rng.range(0, n_layers - 1);
+        if bits[up] < MAX_BITS && bits[down] > MIN_BITS && up != down {
+            bits[up] += 1;
+            bits[down] -= 1;
+        }
+    }
+    PrecisionConfig::from_bits(&format!("mixed-avg{target:.1}"), &bits)
+}
+
+/// Generate `count` random configurations per target average precision in
+/// `targets`, as (target, configs) groups — the Fig. 7 sweep input.
+pub fn sweep_groups(
+    n_layers: usize,
+    targets: &[f64],
+    count: usize,
+    seed: u64,
+) -> Vec<(f64, Vec<PrecisionConfig>)> {
+    let mut rng = Rng::new(seed);
+    targets
+        .iter()
+        .map(|&t| {
+            let cfgs = (0..count).map(|_| random_with_avg(n_layers, t, &mut rng)).collect();
+            (t, cfgs)
+        })
+        .collect()
+}
+
+/// The integer average-precision grid of Fig. 7 (2..=8).
+pub fn fig7_targets() -> Vec<f64> {
+    (2..=8).map(|b| b as f64).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn random_config_hits_target_average() {
+        check("avg within tolerance", 128, |rng| {
+            let n = rng.range(3, 60);
+            let target = 2.0 + rng.f64() * 6.0;
+            let cfg = random_with_avg(n, target, rng);
+            let avg = cfg.avg_bits();
+            let tol = 0.5 / n as f64 + 1e-9;
+            if (avg - target).abs() > tol + 0.5 {
+                return Err(format!("n={n} target={target:.2} avg={avg:.2}"));
+            }
+            for p in &cfg.per_layer {
+                if p.w < MIN_BITS || p.w > MAX_BITS {
+                    return Err(format!("bit {} out of range", p.w));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn extreme_targets_saturate() {
+        let mut rng = Rng::new(3);
+        let lo = random_with_avg(10, 2.0, &mut rng);
+        assert!(lo.per_layer.iter().all(|p| p.w == 2));
+        let hi = random_with_avg(10, 8.0, &mut rng);
+        assert!(hi.per_layer.iter().all(|p| p.w == 8));
+    }
+
+    #[test]
+    fn sweep_groups_shape() {
+        let groups = sweep_groups(19, &fig7_targets(), 5, 42);
+        assert_eq!(groups.len(), 7);
+        for (t, cfgs) in &groups {
+            assert_eq!(cfgs.len(), 5);
+            for c in cfgs {
+                assert!((c.avg_bits() - t).abs() < 0.6, "target {t} avg {}", c.avg_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn sweep_is_deterministic() {
+        let a = sweep_groups(10, &[4.0], 3, 7);
+        let b = sweep_groups(10, &[4.0], 3, 7);
+        assert_eq!(a[0].1, b[0].1);
+    }
+}

@@ -1,0 +1,254 @@
+//! Artifact manifest — what `python/compile/aot.py` exported.
+//!
+//! The manifest is the contract between the build-time Python side and the
+//! serve-time rust side: which precision configurations exist, at which
+//! batch sizes, with which held-out accuracies, and which HLO-text file
+//! implements each (config, batch) pair.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+/// One exported (config, batch) artifact.
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    /// Precision configuration name (`int8`, `mixed_low`, ..., `float`).
+    pub config: String,
+    /// Compiled batch size.
+    pub batch: u64,
+    /// HLO text file, relative to the artifact directory.
+    pub file: String,
+    /// Average configured bitwidth (32 for the float reference).
+    pub avg_bits: f64,
+    /// Held-out accuracy measured at export time.
+    pub accuracy: f64,
+}
+
+/// One precision configuration's description.
+#[derive(Debug, Clone)]
+pub struct ConfigInfo {
+    /// Per-weight-layer (w_bits, a_bits) pairs.
+    pub per_layer: Vec<(u32, u32)>,
+    pub avg_bits: f64,
+}
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub model: String,
+    /// Input feature-map shape (H, W, C).
+    pub input_shape: (u64, u64, u64),
+    pub num_classes: u64,
+    pub param_count: u64,
+    pub batch_sizes: Vec<u64>,
+    /// Precision configurations by name (excludes `float`).
+    pub configs: BTreeMap<String, ConfigInfo>,
+    /// Held-out accuracy by config name (includes `float`).
+    pub accuracies: BTreeMap<String, f64>,
+    pub artifacts: Vec<ArtifactEntry>,
+    /// Directory the manifest was loaded from.
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    /// Load and parse `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest JSON text (exposed for tests).
+    pub fn parse(text: &str, dir: &Path) -> Result<Manifest> {
+        let v = Json::parse(text).map_err(|e| anyhow!("manifest: {e}"))?;
+        let field = |k: &str| v.get(k).ok_or_else(|| anyhow!("manifest missing '{k}'"));
+
+        let shape = field("input_shape")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("input_shape not an array"))?;
+        if shape.len() != 3 {
+            return Err(anyhow!("input_shape must have 3 dims"));
+        }
+        let dim = |i: usize| shape[i].as_i64().unwrap_or(0) as u64;
+
+        let mut configs = BTreeMap::new();
+        if let Some(obj) = field("configs")?.as_obj() {
+            for (name, c) in obj {
+                let per_layer = c
+                    .get("per_layer")
+                    .and_then(Json::as_arr)
+                    .map(|rows| {
+                        rows.iter()
+                            .filter_map(|r| r.as_arr())
+                            .filter(|r| r.len() == 2)
+                            .map(|r| {
+                                (r[0].as_i64().unwrap_or(0) as u32, r[1].as_i64().unwrap_or(0) as u32)
+                            })
+                            .collect()
+                    })
+                    .unwrap_or_default();
+                let avg_bits = c.get("avg_bits").and_then(Json::as_f64).unwrap_or(0.0);
+                configs.insert(name.clone(), ConfigInfo { per_layer, avg_bits });
+            }
+        }
+
+        let mut accuracies = BTreeMap::new();
+        if let Some(obj) = field("accuracies")?.as_obj() {
+            for (name, a) in obj {
+                accuracies.insert(name.clone(), a.as_f64().unwrap_or(0.0));
+            }
+        }
+
+        let mut artifacts = Vec::new();
+        for a in field("artifacts")?.as_arr().unwrap_or(&[]) {
+            artifacts.push(ArtifactEntry {
+                config: a
+                    .get("config")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("artifact missing config"))?
+                    .to_string(),
+                batch: a
+                    .get("batch")
+                    .and_then(Json::as_i64)
+                    .ok_or_else(|| anyhow!("artifact missing batch"))? as u64,
+                file: a
+                    .get("file")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("artifact missing file"))?
+                    .to_string(),
+                avg_bits: a.get("avg_bits").and_then(Json::as_f64).unwrap_or(0.0),
+                accuracy: a.get("accuracy").and_then(Json::as_f64).unwrap_or(0.0),
+            });
+        }
+
+        Ok(Manifest {
+            model: field("model")?.as_str().unwrap_or("").to_string(),
+            input_shape: (dim(0), dim(1), dim(2)),
+            num_classes: field("num_classes")?.as_i64().unwrap_or(0) as u64,
+            param_count: v.get("param_count").and_then(Json::as_i64).unwrap_or(0) as u64,
+            batch_sizes: field("batch_sizes")?
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(Json::as_i64)
+                .map(|b| b as u64)
+                .collect(),
+            configs,
+            accuracies,
+            artifacts,
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    /// Elements per input sample (H*W*C).
+    pub fn sample_elems(&self) -> usize {
+        (self.input_shape.0 * self.input_shape.1 * self.input_shape.2) as usize
+    }
+
+    /// Find the artifact for a (config, batch) pair.
+    pub fn artifact(&self, config: &str, batch: u64) -> Option<&ArtifactEntry> {
+        self.artifacts.iter().find(|a| a.config == config && a.batch == batch)
+    }
+
+    /// Smallest compiled batch size that fits `n` requests (falls back to
+    /// the largest compiled batch when `n` exceeds them all).
+    pub fn batch_for(&self, n: u64) -> u64 {
+        let mut sizes = self.batch_sizes.clone();
+        sizes.sort_unstable();
+        sizes
+            .iter()
+            .copied()
+            .find(|&b| b >= n)
+            .or_else(|| sizes.last().copied())
+            .unwrap_or(1)
+    }
+
+    /// Config names in descending average-bits order (serving quality
+    /// ladder: float first if present, then int8 ... int4).
+    pub fn quality_ladder(&self) -> Vec<String> {
+        let mut names: Vec<(String, f64)> = self
+            .artifacts
+            .iter()
+            .map(|a| (a.config.clone(), a.avg_bits))
+            .collect::<std::collections::BTreeMap<_, _>>()
+            .into_iter()
+            .collect();
+        names.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        names.into_iter().map(|(n, _)| n).collect()
+    }
+}
+
+#[cfg(test)]
+pub(crate) const TEST_MANIFEST: &str = r#"{
+  "model": "serve_cnn",
+  "input_shape": [32, 32, 3],
+  "num_classes": 10,
+  "param_count": 35000,
+  "batch_sizes": [1, 4, 8],
+  "configs": {
+    "int8": {"per_layer": [[8,8],[8,8],[8,8],[8,8],[8,8],[8,8]], "avg_bits": 8.0},
+    "int4": {"per_layer": [[4,4],[4,4],[4,4],[4,4],[4,4],[4,4]], "avg_bits": 4.0}
+  },
+  "accuracies": {"float": 1.0, "int8": 1.0, "int4": 0.99},
+  "artifacts": [
+    {"config": "int8", "batch": 1, "file": "a.hlo.txt", "avg_bits": 8.0, "accuracy": 1.0},
+    {"config": "int8", "batch": 4, "file": "b.hlo.txt", "avg_bits": 8.0, "accuracy": 1.0},
+    {"config": "int4", "batch": 1, "file": "c.hlo.txt", "avg_bits": 4.0, "accuracy": 0.99}
+  ]
+}"#;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest() -> Manifest {
+        Manifest::parse(TEST_MANIFEST, Path::new("/tmp/artifacts")).unwrap()
+    }
+
+    #[test]
+    fn parses_core_fields() {
+        let m = manifest();
+        assert_eq!(m.model, "serve_cnn");
+        assert_eq!(m.input_shape, (32, 32, 3));
+        assert_eq!(m.num_classes, 10);
+        assert_eq!(m.sample_elems(), 32 * 32 * 3);
+        assert_eq!(m.batch_sizes, vec![1, 4, 8]);
+        assert_eq!(m.artifacts.len(), 3);
+        assert_eq!(m.configs["int8"].per_layer.len(), 6);
+        assert_eq!(m.accuracies["int4"], 0.99);
+    }
+
+    #[test]
+    fn artifact_lookup() {
+        let m = manifest();
+        assert!(m.artifact("int8", 4).is_some());
+        assert!(m.artifact("int8", 8).is_none());
+        assert!(m.artifact("nope", 1).is_none());
+    }
+
+    #[test]
+    fn batch_selection_rounds_up() {
+        let m = manifest();
+        assert_eq!(m.batch_for(1), 1);
+        assert_eq!(m.batch_for(2), 4);
+        assert_eq!(m.batch_for(4), 4);
+        assert_eq!(m.batch_for(5), 8);
+        assert_eq!(m.batch_for(100), 8);
+    }
+
+    #[test]
+    fn quality_ladder_descends() {
+        let m = manifest();
+        assert_eq!(m.quality_ladder(), vec!["int8".to_string(), "int4".to_string()]);
+    }
+
+    #[test]
+    fn rejects_missing_fields() {
+        assert!(Manifest::parse("{}", Path::new("/tmp")).is_err());
+        assert!(Manifest::parse("not json", Path::new("/tmp")).is_err());
+    }
+}

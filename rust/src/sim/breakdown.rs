@@ -1,0 +1,130 @@
+//! Energy and latency breakdowns (paper Fig. 8).
+//!
+//! Fig. 8a breaks total inference energy into GEMM / pooling / other
+//! (residual + ReLU) / interconnect (mesh + MAP buffering) shares; Fig. 8b
+//! breaks GEMM latency into populate / multiply / reduce / readout phases
+//! and shows that **reduction**, not multiplication, is the bottleneck.
+
+use super::InferenceReport;
+use crate::mapper::{PhaseTable, WorkKind};
+
+/// One named share of a breakdown.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Share {
+    pub label: String,
+    pub value: f64,
+    /// Fraction of the total (0..=1).
+    pub fraction: f64,
+}
+
+fn to_shares(pairs: Vec<(String, f64)>) -> Vec<Share> {
+    let total: f64 = pairs.iter().map(|(_, v)| v).sum();
+    pairs
+        .into_iter()
+        .map(|(label, value)| Share {
+            label,
+            value,
+            fraction: if total > 0.0 { value / total } else { 0.0 },
+        })
+        .collect()
+}
+
+/// Fig. 8a — total energy by work category (+ interconnect).
+pub fn energy_by_kind(r: &InferenceReport) -> Vec<Share> {
+    let mut gemm = 0.0;
+    let mut pool = 0.0;
+    let mut other = 0.0;
+    let mut interconnect = 0.0;
+    for l in &r.layers {
+        match l.kind {
+            WorkKind::Gemm => gemm += l.ap_energy_j,
+            WorkKind::Pooling => pool += l.ap_energy_j,
+            WorkKind::Residual | WorkKind::Relu => other += l.ap_energy_j,
+        }
+        interconnect += l.mesh_energy_j + l.map_energy_j;
+    }
+    to_shares(vec![
+        ("GEMM".into(), gemm),
+        ("Pooling".into(), pool),
+        ("Residual/ReLU".into(), other),
+        ("Interconnect".into(), interconnect),
+    ])
+}
+
+/// Fig. 8b — GEMM latency by phase, summed over all GEMM layers.
+pub fn gemm_latency_by_phase(r: &InferenceReport) -> Vec<Share> {
+    let mut acc = PhaseTable::<f64>::default();
+    for l in r.layers.iter().filter(|l| l.kind == WorkKind::Gemm) {
+        acc = acc.add(&l.latency_phases);
+    }
+    to_shares(vec![
+        ("Populate".into(), acc.populate),
+        ("Multiply".into(), acc.multiply),
+        ("Reduce".into(), acc.reduce),
+        ("Readout".into(), acc.readout),
+        ("ReLU".into(), acc.aux),
+    ])
+}
+
+/// Convenience: the fraction a label holds in a share list (0 if absent).
+pub fn fraction_of(shares: &[Share], label: &str) -> f64 {
+    shares.iter().find(|s| s.label == label).map(|s| s.fraction).unwrap_or(0.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+    use crate::precision::PrecisionConfig;
+    use crate::sim::{simulate, SimParams};
+
+    fn vgg_report() -> InferenceReport {
+        let net = zoo::vgg16();
+        let cfg = PrecisionConfig::fixed(8, net.weight_layers());
+        simulate(&net, &cfg, &SimParams::lr_sram())
+    }
+
+    #[test]
+    fn fractions_sum_to_one() {
+        let r = vgg_report();
+        for shares in [energy_by_kind(&r), gemm_latency_by_phase(&r)] {
+            let sum: f64 = shares.iter().map(|s| s.fraction).sum();
+            assert!((sum - 1.0).abs() < 1e-9, "fractions sum {sum}");
+        }
+    }
+
+    #[test]
+    fn gemm_dominates_energy() {
+        // Fig. 8a: "GEMM and pooling are the main energy bottlenecks".
+        let r = vgg_report();
+        let shares = energy_by_kind(&r);
+        assert!(fraction_of(&shares, "GEMM") > 0.5, "{shares:?}");
+    }
+
+    #[test]
+    fn reduce_dominates_gemm_latency() {
+        // Fig. 8b: "the latency bottleneck of GEMM is the reduction and not
+        // the multiplication".
+        let r = vgg_report();
+        let shares = gemm_latency_by_phase(&r);
+        let red = fraction_of(&shares, "Reduce");
+        let mul = fraction_of(&shares, "Multiply");
+        assert!(red > mul, "reduce {red:.3} vs multiply {mul:.3}");
+        assert!(red > 0.5, "reduce share {red:.3}");
+    }
+
+    #[test]
+    fn resnet_has_residual_share() {
+        let net = zoo::resnet50();
+        let cfg = PrecisionConfig::fixed(8, net.weight_layers());
+        let r = simulate(&net, &cfg, &SimParams::lr_sram());
+        let shares = energy_by_kind(&r);
+        assert!(fraction_of(&shares, "Residual/ReLU") > 0.0);
+    }
+
+    #[test]
+    fn fraction_of_missing_label_is_zero() {
+        let r = vgg_report();
+        assert_eq!(fraction_of(&energy_by_kind(&r), "Nope"), 0.0);
+    }
+}

@@ -1,0 +1,192 @@
+//! Design-space-exploration drivers (paper §V-A, Figs. 6 & 7 + voltage
+//! scaling).
+//!
+//! These functions generate the data series behind the paper's DSE figures;
+//! the corresponding bench targets (`fig6_tech_ratios`, `fig7_dse`) render
+//! them as tables.
+
+use super::{simulate, InferenceReport, SimParams};
+use crate::ap::tech::Tech;
+use crate::arch::HwConfig;
+use crate::model::Network;
+use crate::precision::{sweep, PrecisionConfig};
+use crate::util::stats;
+
+/// One Fig. 6 point: ReRAM-to-SRAM ratios at a fixed precision on VGG16.
+#[derive(Debug, Clone, Copy)]
+pub struct Fig6Row {
+    pub bits: u32,
+    /// Energy(ReRAM) / Energy(SRAM).
+    pub energy_ratio: f64,
+    /// Latency(ReRAM) / Latency(SRAM).
+    pub latency_ratio: f64,
+    /// Area(SRAM) / Area(ReRAM) (ReRAM is denser).
+    pub area_savings: f64,
+}
+
+/// Fig. 6 — ReRAM/SRAM energy & latency ratios for fixed precisions
+/// 2..=8, end-to-end inference on `net` (the paper uses VGG16, LR).
+pub fn fig6_tech_ratios(net: &Network) -> Vec<Fig6Row> {
+    (2..=8)
+        .map(|bits| {
+            let cfg = PrecisionConfig::fixed(bits, net.weight_layers());
+            let s = simulate(net, &cfg, &SimParams::new(HwConfig::Lr, Tech::sram()));
+            let r = simulate(net, &cfg, &SimParams::new(HwConfig::Lr, Tech::reram()));
+            Fig6Row {
+                bits,
+                energy_ratio: r.energy_j() / s.energy_j(),
+                latency_ratio: r.latency_s() / s.latency_s(),
+                area_savings: s.area_mm2 / r.area_mm2,
+            }
+        })
+        .collect()
+}
+
+/// One Fig. 7 point: mean metrics across mixed-precision combinations that
+/// share an average precision.
+#[derive(Debug, Clone)]
+pub struct Fig7Point {
+    pub net_name: String,
+    pub hw: HwConfig,
+    pub avg_bits: f64,
+    /// Mean energy per inference across the combination group, J.
+    pub energy_j: f64,
+    /// Mean latency per inference, s.
+    pub latency_s: f64,
+    /// Mean energy-area efficiency, GOPS/W/mm².
+    pub gops_per_w_mm2: f64,
+    /// Combinations averaged.
+    pub samples: usize,
+}
+
+/// Number of random mixed-precision combinations averaged per target
+/// average precision (§V-A "the mean performances across the combinations
+/// with similar average precision are reported").
+pub const COMBOS_PER_TARGET: usize = 5;
+
+/// Fig. 7 — energy / latency / GOPS/W/mm² vs average precision for one
+/// network on one hardware configuration (SRAM).
+pub fn fig7_series(net: &Network, hw: HwConfig, seed: u64) -> Vec<Fig7Point> {
+    let params = SimParams::new(hw, Tech::sram());
+    let groups =
+        sweep::sweep_groups(net.weight_layers(), &sweep::fig7_targets(), COMBOS_PER_TARGET, seed);
+    groups
+        .into_iter()
+        .map(|(target, cfgs)| {
+            let reports: Vec<InferenceReport> =
+                cfgs.iter().map(|c| simulate(net, c, &params)).collect();
+            let energies: Vec<f64> = reports.iter().map(|r| r.energy_j()).collect();
+            let latencies: Vec<f64> = reports.iter().map(|r| r.latency_s()).collect();
+            let effs: Vec<f64> = reports.iter().map(|r| r.gops_per_w_mm2()).collect();
+            Fig7Point {
+                net_name: net.name.clone(),
+                hw,
+                avg_bits: target,
+                energy_j: stats::mean(&energies),
+                latency_s: stats::mean(&latencies),
+                gops_per_w_mm2: stats::mean(&effs),
+                samples: reports.len(),
+            }
+        })
+        .collect()
+}
+
+/// §V-A "Voltage Scaling" — relative energy saving from dropping V_DD to
+/// 0.5 V with the published scaled write energy (write-energy effect only,
+/// as in the paper: compare energy is the dominant, unscalable term).
+pub fn voltage_scaling_saving(net: &Network, bits: u32) -> f64 {
+    let cfg = PrecisionConfig::fixed(bits, net.weight_layers());
+    let nominal = simulate(net, &cfg, &SimParams::new(HwConfig::Lr, Tech::sram()));
+    let mut scaled_tech = Tech::sram();
+    scaled_tech.e_write_cell = crate::ap::tech::E_WRITE_SRAM_SCALED;
+    let scaled = simulate(net, &cfg, &SimParams::new(HwConfig::Lr, scaled_tech));
+    1.0 - scaled.energy_j() / nominal.energy_j()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+
+    #[test]
+    fn fig6_sram_wins_everywhere() {
+        let rows = fig6_tech_ratios(&zoo::vgg16());
+        assert_eq!(rows.len(), 7);
+        for r in &rows {
+            assert!(r.energy_ratio > 1.0, "bits {}: energy ratio {}", r.bits, r.energy_ratio);
+            assert!(r.latency_ratio > 1.0, "bits {}: latency ratio {}", r.bits, r.latency_ratio);
+            assert!((r.area_savings - 4.4).abs() < 0.1);
+        }
+    }
+
+    #[test]
+    fn fig6_energy_ratio_decreases_with_precision() {
+        // §V-A: "Energy ratios keep decreasing: 80.9x, ..., 63.1x as
+        // precision increases between 2 and 8".
+        let rows = fig6_tech_ratios(&zoo::vgg16());
+        for w in rows.windows(2) {
+            assert!(
+                w[1].energy_ratio < w[0].energy_ratio,
+                "ratio rose {} -> {} at bits {}",
+                w[0].energy_ratio,
+                w[1].energy_ratio,
+                w[1].bits
+            );
+        }
+    }
+
+    #[test]
+    fn fig6_latency_ratio_is_flat() {
+        // §V-A: "the ratios remain almost constant ~1.85x".
+        let rows = fig6_tech_ratios(&zoo::vgg16());
+        let ratios: Vec<f64> = rows.iter().map(|r| r.latency_ratio).collect();
+        let spread = ratios.iter().cloned().fold(f64::MIN, f64::max)
+            - ratios.iter().cloned().fold(f64::MAX, f64::min);
+        assert!(spread < 0.3, "latency ratio spread {spread:.3}: {ratios:?}");
+        // The paper reports ~1.85x; our reduce phase (equal compare/write
+        // counts, 2x write-cycle gap) bounds it to <=1.67x, diluted further
+        // by mesh-bound layers — still "almost constant" and > 1.
+        for r in &ratios {
+            assert!(*r > 1.15 && *r < 2.2, "latency ratio {r:.2}");
+        }
+    }
+
+    #[test]
+    fn fig7_energy_increases_with_avg_precision() {
+        let series = fig7_series(&zoo::alexnet(), HwConfig::Lr, 7);
+        assert_eq!(series.len(), 7);
+        for w in series.windows(2) {
+            assert!(w[1].energy_j > w[0].energy_j, "energy fell at avg {}", w[1].avg_bits);
+        }
+    }
+
+    #[test]
+    fn fig7_efficiency_decreases_with_avg_precision() {
+        // §V-A: "increasing the average precision increases the area and
+        // energy so GOPS/W/mm² decreases".
+        let series = fig7_series(&zoo::alexnet(), HwConfig::Lr, 7);
+        assert!(series.last().unwrap().gops_per_w_mm2 < series.first().unwrap().gops_per_w_mm2);
+    }
+
+    #[test]
+    fn fig7_lr_beats_ir_on_area_efficiency() {
+        let lr = fig7_series(&zoo::alexnet(), HwConfig::Lr, 7);
+        let ir = fig7_series(&zoo::alexnet(), HwConfig::Ir, 7);
+        for (l, i) in lr.iter().zip(&ir) {
+            assert!(
+                l.gops_per_w_mm2 > i.gops_per_w_mm2,
+                "avg {}: LR {} vs IR {}",
+                l.avg_bits,
+                l.gops_per_w_mm2,
+                i.gops_per_w_mm2
+            );
+        }
+    }
+
+    #[test]
+    fn voltage_scaling_saving_is_negligible() {
+        // §V-A: "up to 0.06% less energy".
+        let s = voltage_scaling_saving(&zoo::alexnet(), 8);
+        assert!(s >= 0.0 && s < 0.01, "saving {s:.5}");
+    }
+}

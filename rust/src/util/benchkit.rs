@@ -1,0 +1,163 @@
+//! Minimal timing harness for `cargo bench` targets.
+//!
+//! `criterion` is not available in the offline vendor set, so bench targets
+//! are `harness = false` binaries that use this module: warmup, fixed-count
+//! timed iterations, and a min/mean/p50/p99 report. Results are printed as
+//! ASCII tables (see [`crate::util::table`]) so each bench regenerates the
+//! corresponding paper table/figure in-place.
+
+use std::time::{Duration, Instant};
+
+use super::stats::Summary;
+
+/// One benchmark measurement: per-iteration wall-clock samples in seconds.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub samples: Vec<f64>,
+}
+
+impl BenchResult {
+    /// Summary over the collected samples (seconds/iteration).
+    pub fn summary(&self) -> Summary {
+        Summary::of(&self.samples)
+    }
+
+    /// Mean iterations per second.
+    pub fn throughput(&self) -> f64 {
+        let s = self.summary();
+        if s.mean > 0.0 {
+            1.0 / s.mean
+        } else {
+            0.0
+        }
+    }
+
+    /// One-line human-readable report.
+    pub fn report_line(&self) -> String {
+        let s = self.summary();
+        format!(
+            "{:<40} n={:<4} mean={:>12} p50={:>12} p99={:>12}",
+            self.name,
+            s.n,
+            fmt_duration(s.mean),
+            fmt_duration(s.p50),
+            fmt_duration(s.p99),
+        )
+    }
+}
+
+/// Format seconds as a human-friendly duration string.
+pub fn fmt_duration(secs: f64) -> String {
+    if secs >= 1.0 {
+        format!("{secs:.3}s")
+    } else if secs >= 1e-3 {
+        format!("{:.3}ms", secs * 1e3)
+    } else if secs >= 1e-6 {
+        format!("{:.3}us", secs * 1e6)
+    } else {
+        format!("{:.1}ns", secs * 1e9)
+    }
+}
+
+/// A tiny bencher: `Bencher::new("name").run(|| work())`.
+#[derive(Debug, Clone)]
+pub struct Bencher {
+    warmup_iters: u32,
+    sample_count: u32,
+    max_total: Duration,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self { warmup_iters: 3, sample_count: 30, max_total: Duration::from_secs(10) }
+    }
+}
+
+impl Bencher {
+    /// Default configuration (3 warmups, 30 samples, 10 s budget).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Override the number of timed samples.
+    pub fn samples(mut self, n: u32) -> Self {
+        self.sample_count = n.max(1);
+        self
+    }
+
+    /// Override the warmup iteration count.
+    pub fn warmup(mut self, n: u32) -> Self {
+        self.warmup_iters = n;
+        self
+    }
+
+    /// Override the total time budget; sampling stops early when exceeded.
+    pub fn budget(mut self, d: Duration) -> Self {
+        self.max_total = d;
+        self
+    }
+
+    /// Run a closure repeatedly and collect per-iteration timings. The
+    /// closure's return value is passed through `std::hint::black_box` to
+    /// prevent the optimizer from deleting the work.
+    pub fn run<T, F: FnMut() -> T>(&self, name: &str, mut f: F) -> BenchResult {
+        for _ in 0..self.warmup_iters {
+            std::hint::black_box(f());
+        }
+        let start_all = Instant::now();
+        let mut samples = Vec::with_capacity(self.sample_count as usize);
+        for _ in 0..self.sample_count {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed().as_secs_f64());
+            if start_all.elapsed() > self.max_total {
+                break;
+            }
+        }
+        BenchResult { name: name.to_string(), samples }
+    }
+}
+
+/// Print a section banner used by bench binaries.
+pub fn banner(title: &str) {
+    let line = "=".repeat(title.len().max(20));
+    println!("\n{line}\n{title}\n{line}");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn collects_requested_samples() {
+        let r = Bencher::new().samples(5).warmup(1).run("noop", || 1 + 1);
+        assert_eq!(r.name, "noop");
+        assert_eq!(r.samples.len(), 5);
+        assert!(r.throughput() > 0.0);
+    }
+
+    #[test]
+    fn respects_budget() {
+        let r = Bencher::new()
+            .samples(1000)
+            .warmup(0)
+            .budget(Duration::from_millis(20))
+            .run("sleepy", || std::thread::sleep(Duration::from_millis(5)));
+        assert!(r.samples.len() < 1000);
+    }
+
+    #[test]
+    fn fmt_duration_units() {
+        assert_eq!(fmt_duration(2.0), "2.000s");
+        assert_eq!(fmt_duration(2e-3), "2.000ms");
+        assert_eq!(fmt_duration(2e-6), "2.000us");
+        assert_eq!(fmt_duration(2e-9), "2.0ns");
+    }
+
+    #[test]
+    fn report_line_contains_name() {
+        let r = Bencher::new().samples(2).run("xyz", || 0);
+        assert!(r.report_line().contains("xyz"));
+    }
+}

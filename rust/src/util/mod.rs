@@ -1,0 +1,19 @@
+//! Small self-contained utilities shared across the crate.
+//!
+//! The offline build environment ships without `criterion`, `proptest`,
+//! `clap` or `rand`, so this module provides minimal, deterministic
+//! replacements:
+//!
+//! * [`rng`] — an xorshift64* PRNG (deterministic, seedable),
+//! * [`stats`] — summary statistics (mean, percentiles, geomean),
+//! * [`table`] — fixed-width ASCII table rendering for bench reports,
+//! * [`benchkit`] — a tiny timing harness used by `cargo bench` targets,
+//! * [`proptest`] — a tiny property-based-testing driver with shrinking-free
+//!   counterexample reporting (seeded, reproducible).
+
+pub mod benchkit;
+pub mod json;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod table;

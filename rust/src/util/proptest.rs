@@ -1,0 +1,83 @@
+//! Minimal property-based testing driver.
+//!
+//! The offline vendor set has no `proptest`, so this module provides the
+//! subset we need: run a property over many random cases from a seeded
+//! generator and, on failure, report the seed + case index so the exact
+//! counterexample is reproducible (`Rng` is fully deterministic).
+//!
+//! Usage (compile-checked; `no_run` because doctest binaries don't carry
+//! the workspace rpath to the PJRT runtime libs):
+//! ```no_run
+//! use bf_imna::util::proptest::check;
+//! check("add commutes", 256, |rng| {
+//!     let a = rng.range(0, 100);
+//!     let b = rng.range(0, 100);
+//!     if a + b != b + a { return Err(format!("{a} {b}")); }
+//!     Ok(())
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Default base seed; each case `i` runs with seed `BASE_SEED + i` so a
+/// failing case can be re-run in isolation.
+pub const BASE_SEED: u64 = 0xBF_1141A;
+
+/// Run `cases` random cases of `property`. Each case receives a fresh,
+/// deterministically-seeded [`Rng`]. Panics on the first failing case with
+/// a reproducible report.
+pub fn check<F>(name: &str, cases: u64, mut property: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    for i in 0..cases {
+        let mut rng = Rng::new(BASE_SEED + i);
+        if let Err(msg) = property(&mut rng) {
+            panic!(
+                "property '{name}' failed at case {i} (seed {seed:#x}): {msg}",
+                seed = BASE_SEED + i
+            );
+        }
+    }
+}
+
+/// Like [`check`] but with an explicit base seed (for targeted replay).
+pub fn check_seeded<F>(name: &str, base_seed: u64, cases: u64, mut property: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    for i in 0..cases {
+        let mut rng = Rng::new(base_seed + i);
+        if let Err(msg) = property(&mut rng) {
+            panic!("property '{name}' failed at case {i} (seed {seed:#x}): {msg}", seed = base_seed + i);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_completes() {
+        check("tautology", 64, |_| Ok(()));
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_panics_with_name() {
+        check("always fails", 4, |_| Err("boom".into()));
+    }
+
+    #[test]
+    fn rng_is_distinct_across_cases() {
+        let mut firsts = Vec::new();
+        check("collect", 8, |rng| {
+            firsts.push(rng.next_u64());
+            Ok(())
+        });
+        firsts.sort_unstable();
+        firsts.dedup();
+        assert_eq!(firsts.len(), 8);
+    }
+}

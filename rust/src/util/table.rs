@@ -1,0 +1,144 @@
+//! Fixed-width ASCII table rendering used by every bench target so the
+//! regenerated tables read like the paper's.
+
+/// A simple left/right-aligned ASCII table builder.
+#[derive(Debug, Default, Clone)]
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    /// Create a table with the given column headers.
+    pub fn new<S: Into<String>>(header: Vec<S>) -> Self {
+        Self { header: header.into_iter().map(Into::into).collect(), rows: Vec::new() }
+    }
+
+    /// Append a row. Rows shorter than the header are right-padded with "".
+    pub fn row<S: Into<String>>(&mut self, cells: Vec<S>) -> &mut Self {
+        let mut r: Vec<String> = cells.into_iter().map(Into::into).collect();
+        while r.len() < self.header.len() {
+            r.push(String::new());
+        }
+        self.rows.push(r);
+        self
+    }
+
+    /// Number of data rows.
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// True when no data rows have been added.
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Render to a string: header, separator, rows. First column is
+    /// left-aligned, the rest right-aligned (numeric convention).
+    pub fn render(&self) -> String {
+        let ncols = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate().take(ncols) {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::new();
+            for (i, (c, w)) in cells.iter().zip(widths).enumerate() {
+                if i > 0 {
+                    line.push_str("  ");
+                }
+                if i == 0 {
+                    line.push_str(&format!("{c:<w$}"));
+                } else {
+                    line.push_str(&format!("{c:>w$}"));
+                }
+            }
+            line
+        };
+        out.push_str(&fmt_row(&self.header, &widths));
+        out.push('\n');
+        let total: usize = widths.iter().sum::<usize>() + 2 * (ncols.saturating_sub(1));
+        out.push_str(&"-".repeat(total));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Format a float in engineering style with the given significant figures,
+/// e.g. `fmt_eng(1.234e-5, 3)` -> "1.23e-5". Values in `[0.01, 10000)` are
+/// printed plainly.
+pub fn fmt_eng(v: f64, sig: usize) -> String {
+    if v == 0.0 {
+        return "0".to_string();
+    }
+    let a = v.abs();
+    if (0.01..10_000.0).contains(&a) {
+        let decimals = if a >= 100.0 {
+            sig.saturating_sub(3)
+        } else if a >= 10.0 {
+            sig.saturating_sub(2)
+        } else if a >= 1.0 {
+            sig.saturating_sub(1)
+        } else {
+            sig + 1
+        };
+        format!("{v:.decimals$}")
+    } else {
+        format!("{v:.prec$e}", prec = sig.saturating_sub(1))
+    }
+}
+
+/// Format a ratio as "12.3x".
+pub fn fmt_ratio(v: f64) -> String {
+    format!("{}x", fmt_eng(v, 3))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_header_and_rows() {
+        let mut t = Table::new(vec!["name", "value"]);
+        t.row(vec!["alpha", "1"]);
+        t.row(vec!["b", "22"]);
+        let s = t.render();
+        assert!(s.contains("name"));
+        assert!(s.contains("alpha"));
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 4);
+        // Right alignment of the numeric column.
+        assert!(lines[2].ends_with('1'));
+        assert!(lines[3].ends_with("22"));
+    }
+
+    #[test]
+    fn pads_short_rows() {
+        let mut t = Table::new(vec!["a", "b", "c"]);
+        t.row(vec!["x"]);
+        assert_eq!(t.len(), 1);
+        assert!(!t.is_empty());
+        let _ = t.render(); // must not panic
+    }
+
+    #[test]
+    fn fmt_eng_plain_and_exponent() {
+        assert_eq!(fmt_eng(0.0, 3), "0");
+        assert_eq!(fmt_eng(1.0, 3), "1.00");
+        assert_eq!(fmt_eng(123.4, 3), "123");
+        assert_eq!(fmt_eng(1.234e-5, 3), "1.23e-5");
+    }
+
+    #[test]
+    fn fmt_ratio_suffix() {
+        assert_eq!(fmt_ratio(2.0), "2.00x");
+    }
+}

@@ -1,0 +1,160 @@
+//! Live coordinator tests: dynamic batching + bit-fluid precision control
+//! over real PJRT execution. Requires `make artifacts`.
+
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use bf_imna::coordinator::{Budget, BudgetTargets, Coordinator, CoordinatorConfig};
+
+fn artifacts_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn have_artifacts() -> bool {
+    artifacts_dir().join("manifest.json").exists()
+}
+
+fn sample(elems: usize, seed: u64) -> Vec<f32> {
+    let mut state = seed.wrapping_mul(0x9E3779B97F4A7C15) | 1;
+    (0..elems)
+        .map(|_| {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            ((state >> 11) as f64 / (1u64 << 53) as f64) as f32 * 2.0 - 1.0
+        })
+        .collect()
+}
+
+fn start(configs: &[&str]) -> Coordinator {
+    Coordinator::start(
+        &artifacts_dir(),
+        CoordinatorConfig {
+            configs: configs.iter().map(|s| s.to_string()).collect(),
+            batch_window: Duration::from_millis(1),
+            targets: BudgetTargets {
+                low: Duration::from_millis(2),
+                medium: Duration::from_millis(50),
+                high: Duration::from_secs(5),
+            },
+            calibrate: true,
+            pinned: Default::default(),
+        },
+    )
+    .expect("coordinator start")
+}
+
+#[test]
+fn serves_single_request() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let c = start(&["int8", "int4"]);
+    let resp = c.infer(sample(c.sample_elems(), 1), Budget::High).expect("infer");
+    assert_eq!(resp.logits.len(), c.num_classes());
+    assert!(resp.logits.iter().all(|x| x.is_finite()));
+    assert!(resp.latency_s > 0.0);
+    let m = c.metrics();
+    assert_eq!(m.completed, 1);
+    assert_eq!(m.failed, 0);
+}
+
+#[test]
+fn loose_budget_prefers_higher_bits_than_tight_budget() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let c = start(&["int8", "int4"]);
+    let hi = c.infer(sample(c.sample_elems(), 2), Budget::High).expect("high");
+    // With a 5 s budget the controller must keep the top-quality config.
+    assert_eq!(hi.config, "int8", "high budget got {}", hi.config);
+    // With a 2 ms budget on this CPU the controller degrades precision.
+    let lo = c.infer(sample(c.sample_elems(), 3), Budget::Low).expect("low");
+    assert_eq!(lo.config, "int4", "low budget got {}", lo.config);
+}
+
+#[test]
+fn concurrent_requests_batch_together() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let c = start(&["int8"]);
+    let elems = c.sample_elems();
+    // Enqueue several requests back to back; the 1 ms window should batch
+    // at least some of them.
+    let pendings: Vec<_> = (0..8)
+        .map(|i| c.submit(sample(elems, 100 + i), Budget::High).expect("submit"))
+        .collect();
+    for p in pendings {
+        let r = p.wait().expect("response");
+        assert_eq!(r.logits.len(), c.num_classes());
+    }
+    let m = c.metrics();
+    assert_eq!(m.completed, 8);
+    assert!(m.batches <= 8, "batches {}", m.batches);
+    // Batch sizes recorded must be compiled sizes.
+    for b in m.per_batch_size.keys() {
+        assert!([1u64, 4, 8].contains(b), "unexpected batch size {b}");
+    }
+}
+
+#[test]
+fn mixed_budgets_all_get_answers() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let c = start(&["int8", "mixed_medium", "int4"]);
+    let elems = c.sample_elems();
+    let budgets = [Budget::Low, Budget::Medium, Budget::High];
+    let pendings: Vec<_> = (0..6)
+        .map(|i| c.submit(sample(elems, 200 + i as u64), budgets[i % 3]).expect("submit"))
+        .collect();
+    let mut configs_seen = std::collections::BTreeSet::new();
+    for p in pendings {
+        let r = p.wait().expect("response");
+        configs_seen.insert(r.config);
+    }
+    assert!(!configs_seen.is_empty());
+    let m = c.metrics();
+    assert_eq!(m.completed, 6);
+    assert!(m.latency_p(0.99) >= m.latency_p(0.5));
+}
+
+#[test]
+fn rejects_wrong_input_size() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let c = start(&["int4"]);
+    assert!(c.submit(vec![0.0; 7], Budget::High).is_err());
+}
+
+#[test]
+fn quantized_configs_agree_with_each_other_on_argmax_mostly() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let c = start(&["int8", "int4"]);
+    let elems = c.sample_elems();
+    let mut agree = 0;
+    let n = 8;
+    for i in 0..n {
+        let x = sample(elems, 300 + i);
+        let hi = c.infer(x.clone(), Budget::High).expect("int8");
+        let lo = c.infer(x, Budget::Low).expect("int4");
+        let am = |v: &[f32]| {
+            v.iter().enumerate().max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).unwrap().0
+        };
+        if am(&hi.logits) == am(&lo.logits) {
+            agree += 1;
+        }
+    }
+    // Random noise inputs — quantization rarely flips the winner entirely.
+    assert!(agree >= n / 2, "int8/int4 agreement {agree}/{n}");
+}

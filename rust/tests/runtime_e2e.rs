@@ -1,0 +1,252 @@
+//! End-to-end PJRT runtime tests: compile the real AOT artifacts and run
+//! real numerics through them. Requires `make artifacts`.
+
+use std::path::{Path, PathBuf};
+
+use bf_imna::runtime::{argmax_rows, pad_batch, Runtime};
+
+fn artifacts_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn have_artifacts() -> bool {
+    artifacts_dir().join("manifest.json").exists()
+}
+
+/// Deterministic pseudo-input: a low-frequency pattern, values in [-1, 1].
+fn synth_input(batch: usize, elems: usize, seed: u64) -> Vec<f32> {
+    let mut v = Vec::with_capacity(batch * elems);
+    let mut state = seed.wrapping_mul(0x9E3779B97F4A7C15) | 1;
+    for _ in 0..batch * elems {
+        state ^= state << 13;
+        state ^= state >> 7;
+        state ^= state << 17;
+        v.push(((state >> 11) as f64 / (1u64 << 53) as f64) as f32 * 2.0 - 1.0);
+    }
+    v
+}
+
+#[test]
+fn loads_manifest_and_compiles_subset() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let rt = Runtime::load_configs(&artifacts_dir(), &["int4"]).expect("load int4");
+    assert!(rt.platform().to_lowercase().contains("cpu") || !rt.platform().is_empty());
+    let keys = rt.compiled_keys();
+    assert!(!keys.is_empty());
+    assert!(keys.iter().all(|(c, _)| c == "int4"));
+}
+
+#[test]
+fn infer_produces_finite_logits() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let rt = Runtime::load_configs(&artifacts_dir(), &["int4"]).expect("load");
+    let m = rt.manifest();
+    let elems = m.sample_elems();
+    let logits = rt.infer("int4", 1, &synth_input(1, elems, 1)).expect("infer");
+    assert_eq!(logits.len(), m.num_classes as usize);
+    assert!(logits.iter().all(|x| x.is_finite()), "{logits:?}");
+}
+
+#[test]
+fn batched_inference_is_consistent_with_single() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let rt = Runtime::load_configs(&artifacts_dir(), &["int4"]).expect("load");
+    let m = rt.manifest();
+    let elems = m.sample_elems();
+    let classes = m.num_classes as usize;
+    let batch = *m.batch_sizes.iter().max().unwrap();
+    let input = synth_input(batch as usize, elems, 7);
+    let batched = rt.infer("int4", batch, &input).expect("batched infer");
+    // Row 0 of the batched result must match the single-sample run.
+    // (Quantization scales are per-GEMM over the whole batch, so rows can
+    // differ slightly from a true single run — compare argmax, the serving
+    // contract, plus a loose numeric check.)
+    let single = rt.infer("int4", 1, &input[..elems]).expect("single infer");
+    let am_b = argmax_rows(&batched[..classes], classes);
+    let am_s = argmax_rows(&single, classes);
+    assert_eq!(am_b, am_s, "batched {batched:?} single {single:?}");
+}
+
+#[test]
+fn padded_partial_batch_round_trips() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let rt = Runtime::load_configs(&artifacts_dir(), &["int8"]).expect("load");
+    let m = rt.manifest();
+    let elems = m.sample_elems();
+    let classes = m.num_classes as usize;
+    let batch = m.batch_for(3);
+    assert!(batch >= 3);
+    let three = synth_input(3, elems, 9);
+    let padded = pad_batch(&three, 3, batch as usize, elems);
+    let logits = rt.infer("int8", batch, &padded).expect("infer");
+    assert_eq!(logits.len(), batch as usize * classes);
+    // Padding repeats sample 3, so rows 3.. equal row 2.
+    let row2 = &logits[2 * classes..3 * classes];
+    for r in 3..batch as usize {
+        let row = &logits[r * classes..(r + 1) * classes];
+        for (a, b) in row.iter().zip(row2) {
+            assert!((a - b).abs() < 1e-4, "pad row {r} diverged");
+        }
+    }
+}
+
+#[test]
+fn all_configs_agree_on_easy_inputs() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    // The float and int8 graphs must agree on argmax for well-separated
+    // inputs; int4 may differ occasionally, so just check it runs.
+    let rt = Runtime::load_configs(&artifacts_dir(), &["float", "int8", "int4"]).expect("load");
+    let m = rt.manifest();
+    let elems = m.sample_elems();
+    let classes = m.num_classes as usize;
+    let input = synth_input(1, elems, 42);
+    let f = rt.infer("float", 1, &input).expect("float");
+    let q8 = rt.infer("int8", 1, &input).expect("int8");
+    let q4 = rt.infer("int4", 1, &input).expect("int4");
+    assert_eq!(argmax_rows(&f, classes), argmax_rows(&q8, classes));
+    assert_eq!(q4.len(), classes);
+}
+
+#[test]
+fn float_logits_match_python_exactly() {
+    // Cross-language numerics: PJRT execution of the exported float graph
+    // must reproduce the Python-side logits (aot.py writes the expected
+    // values for the first 8 eval samples).
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let dir = artifacts_dir();
+    let read_f32 = |name: &str| -> Vec<f32> {
+        std::fs::read(dir.join(name))
+            .expect(name)
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect()
+    };
+    let rt = Runtime::load_configs(&dir, &["float"]).expect("load float");
+    let elems = rt.manifest().sample_elems();
+    let inputs = read_f32("eval_inputs.f32");
+    let want = read_f32("eval_logits_float_b8.f32");
+    let got = rt.infer("float", 8, &inputs[..8 * elems]).expect("infer");
+    assert_eq!(got.len(), want.len());
+    let max_err = got
+        .iter()
+        .zip(&want)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0f32, f32::max);
+    assert!(max_err < 1e-2, "max |rust - python| = {max_err}");
+}
+
+#[test]
+fn quantized_accuracy_on_real_eval_set() {
+    // The serving contract end to end: int8 artifacts classify the held-out
+    // eval set at (near) the accuracy the manifest records.
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let dir = artifacts_dir();
+    let rt = Runtime::load_configs(&dir, &["int8"]).expect("load int8");
+    let m = rt.manifest();
+    let elems = m.sample_elems();
+    let classes = m.num_classes as usize;
+    let inputs: Vec<f32> = std::fs::read(dir.join("eval_inputs.f32"))
+        .unwrap()
+        .chunks_exact(4)
+        .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+        .collect();
+    let labels = std::fs::read(dir.join("eval_labels.u8")).unwrap();
+    let n = labels.len().min(64); // keep the test fast
+    let mut correct = 0;
+    for chunk in 0..n / 8 {
+        let lo = chunk * 8 * elems;
+        let logits = rt.infer("int8", 8, &inputs[lo..lo + 8 * elems]).expect("infer");
+        let preds = argmax_rows(&logits, classes);
+        for (i, p) in preds.iter().enumerate() {
+            if *p == labels[chunk * 8 + i] as usize {
+                correct += 1;
+            }
+        }
+    }
+    let acc = correct as f64 / n as f64;
+    assert!(acc > 0.9, "int8 accuracy on eval set = {acc}");
+}
+
+#[test]
+fn failure_injection_bad_manifest_and_hlo() {
+    // Corrupt inputs must surface as errors, not panics.
+    let tmp = std::env::temp_dir().join("bf_imna_bad_artifacts");
+    let _ = std::fs::remove_dir_all(&tmp);
+    std::fs::create_dir_all(&tmp).unwrap();
+
+    // 1. Missing manifest.
+    assert!(Runtime::load(&tmp).is_err());
+
+    // 2. Malformed manifest JSON.
+    std::fs::write(tmp.join("manifest.json"), "{ not json").unwrap();
+    assert!(Runtime::load(&tmp).is_err());
+
+    // 3. Valid manifest pointing at a garbage HLO file.
+    std::fs::write(
+        tmp.join("manifest.json"),
+        r#"{
+          "model": "m", "input_shape": [2, 2, 1], "num_classes": 2,
+          "param_count": 0, "batch_sizes": [1],
+          "configs": {}, "accuracies": {},
+          "artifacts": [
+            {"config": "x", "batch": 1, "file": "bad.hlo.txt", "avg_bits": 8.0, "accuracy": 0.0}
+          ]
+        }"#,
+    )
+    .unwrap();
+    std::fs::write(tmp.join("bad.hlo.txt"), "this is not HLO").unwrap();
+    assert!(Runtime::load(&tmp).is_err());
+
+    // 4. Manifest referencing a file that does not exist.
+    std::fs::write(
+        tmp.join("manifest.json"),
+        r#"{
+          "model": "m", "input_shape": [2, 2, 1], "num_classes": 2,
+          "param_count": 0, "batch_sizes": [1],
+          "configs": {}, "accuracies": {},
+          "artifacts": [
+            {"config": "x", "batch": 1, "file": "missing.hlo.txt", "avg_bits": 8.0, "accuracy": 0.0}
+          ]
+        }"#,
+    )
+    .unwrap();
+    assert!(Runtime::load(&tmp).is_err());
+    let _ = std::fs::remove_dir_all(&tmp);
+}
+
+#[test]
+fn infer_rejects_unknown_config_and_bad_sizes() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let rt = Runtime::load_configs(&artifacts_dir(), &["int4"]).expect("load");
+    let elems = rt.manifest().sample_elems();
+    // Unknown config.
+    assert!(rt.infer("nope", 1, &vec![0.0; elems]).is_err());
+    // Unknown batch.
+    assert!(rt.infer("int4", 3, &vec![0.0; 3 * elems]).is_err());
+    // Wrong input length.
+    assert!(rt.infer("int4", 1, &vec![0.0; elems - 1]).is_err());
+}

@@ -1,0 +1,249 @@
+//! Cross-module integration: emulator vs analytic models, mapper vs
+//! simulator, HAWQ configs through the full simulation pipeline.
+
+use bf_imna::ap::{emulator, runtime_model as rt, ApKind};
+use bf_imna::arch::HwConfig;
+use bf_imna::model::zoo;
+use bf_imna::precision::{hawq, PrecisionConfig};
+use bf_imna::sim::{breakdown, simulate, SimParams};
+use bf_imna::util::proptest::check;
+use bf_imna::util::rng::Rng;
+
+/// §IV "microbenchmark": the functional emulator's event counts must match
+/// the analytic Table I models for the column-parallel operations.
+#[test]
+fn emulator_event_counts_match_analytic_models() {
+    let mut rng = Rng::new(42);
+    for m in [2usize, 4, 8] {
+        let l = 64u64;
+        let a = rng.vec_below(l as usize / 2, 1 << m);
+        let b = rng.vec_below(l as usize / 2, 1 << m);
+        let (_, counters) = emulator::emulate_add(&a, &b, m);
+        let model = rt::add(m as u32, l, ApKind::TwoD);
+        assert_eq!(
+            counters.events().compares,
+            model.events.compares,
+            "add compares at M={m}"
+        );
+        let (_, counters) = emulator::emulate_multiply(&a, &b, m, m);
+        let model = rt::multiply(m as u32, m as u32, l, ApKind::TwoD);
+        // The emulator charges the model's 4*Ma*Mw passes plus Mw explicit
+        // carry-flush passes (documented in `Cam::multiply`).
+        assert_eq!(
+            counters.events().compares,
+            model.events.compares + m as u64,
+            "multiply compares at M={m}"
+        );
+    }
+}
+
+/// Property: emulated arithmetic is exact for random operands.
+#[test]
+fn emulated_arithmetic_is_exact() {
+    check("emulator add/multiply/relu/max", 40, |rng| {
+        let m = rng.range(2, 8);
+        let words = rng.range(1, 24);
+        let a = rng.vec_below(words, 1 << m);
+        let b = rng.vec_below(words, 1 << m);
+        let (sum, _) = emulator::emulate_add(&a, &b, m);
+        for ((&x, &y), &s) in a.iter().zip(&b).zip(&sum) {
+            let expect = (x + y) & ((1 << (m + 1)) - 1);
+            if s != expect {
+                return Err(format!("add {x}+{y} gave {s}, want {expect}"));
+            }
+        }
+        let (prod, _) = emulator::emulate_multiply(&a, &b, m, m);
+        for ((&x, &y), &p) in a.iter().zip(&b).zip(&prod) {
+            if p != x * y {
+                return Err(format!("mul {x}*{y} gave {p}"));
+            }
+        }
+        let (mx, _) = emulator::emulate_max(&a, &b, m);
+        for ((&x, &y), &v) in a.iter().zip(&b).zip(&mx) {
+            if v != x.max(y) {
+                return Err(format!("max({x},{y}) gave {v}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Property: the simulator's energy is monotone in precision for any
+/// uniform configuration on any workload.
+#[test]
+fn energy_monotone_in_precision() {
+    let nets = [zoo::alexnet(), zoo::resnet18()];
+    let params = SimParams::lr_sram();
+    for net in &nets {
+        let mut last = 0.0;
+        for bits in 2..=8 {
+            let cfg = PrecisionConfig::fixed(bits, net.weight_layers());
+            let e = simulate(net, &cfg, &params).energy_j();
+            assert!(e > last, "{}: energy fell at {bits} bits", net.name);
+            last = e;
+        }
+    }
+}
+
+/// Property: random mixed configs never beat uniform-min or lose to
+/// uniform-max energy (the bit-fluid envelope).
+#[test]
+fn mixed_energy_within_fixed_envelope() {
+    let net = zoo::resnet18();
+    let params = SimParams::lr_sram();
+    let n = net.weight_layers();
+    let e_min = simulate(&net, &PrecisionConfig::fixed(2, n), &params).energy_j();
+    let e_max = simulate(&net, &PrecisionConfig::fixed(8, n), &params).energy_j();
+    check("mixed config energy envelope", 12, |rng| {
+        let bits: Vec<u32> = (0..n).map(|_| 2 + rng.below(7) as u32).collect();
+        let cfg = PrecisionConfig::from_bits("rand", &bits);
+        let e = simulate(&net, &cfg, &params).energy_j();
+        if e < e_min * 0.999 || e > e_max * 1.001 {
+            return Err(format!("energy {e} outside [{e_min}, {e_max}]"));
+        }
+        Ok(())
+    });
+}
+
+/// Table VII pipeline: all five HAWQ rows simulate; EDP ordering matches
+/// the paper's qualitative ranking (INT4 < low < medium < high < INT8).
+#[test]
+fn hawq_rows_simulate_with_paper_edp_ordering() {
+    let net = zoo::resnet18();
+    let params = SimParams::lr_sram();
+    let mut edps = Vec::new();
+    for row in hawq::table_vii_rows() {
+        let cfg = hawq::config_for_resnet18(&net, &row);
+        let r = simulate(&net, &cfg, &params);
+        edps.push((row.budget, r.edp_js()));
+    }
+    // Table VII order: INT4, High, Medium, Low, INT8.
+    let edp = |i: usize| edps[i].1;
+    assert!(edp(0) < edp(3), "INT4 {} < Low {}", edp(0), edp(3));
+    assert!(edp(3) < edp(2), "Low {} < Medium {}", edp(3), edp(2));
+    assert!(edp(2) < edp(1), "Medium {} < High {}", edp(2), edp(1));
+    assert!(edp(1) < edp(4), "High {} < INT8 {}", edp(1), edp(4));
+}
+
+/// The normalized-energy column mechanism: INT8/config energy ratios rank
+/// like the paper's (INT4 highest, high-budget lowest).
+#[test]
+fn hawq_normalized_energy_ranks_like_paper() {
+    let net = zoo::resnet18();
+    let params = SimParams::lr_sram();
+    let sim_e = |b: hawq::LatencyBudget| {
+        let cfg = hawq::config_for_resnet18(&net, &hawq::row(b));
+        simulate(&net, &cfg, &params).energy_j()
+    };
+    let e8 = sim_e(hawq::LatencyBudget::FixedInt8);
+    let norm = |b| e8 / sim_e(b);
+    let n4 = norm(hawq::LatencyBudget::FixedInt4);
+    let nl = norm(hawq::LatencyBudget::Low);
+    let nm = norm(hawq::LatencyBudget::Medium);
+    let nh = norm(hawq::LatencyBudget::High);
+    assert!(n4 > nl && nl > nm && nm > nh && nh > 1.0, "{n4} {nl} {nm} {nh}");
+}
+
+/// IR vs LR on every benchmark: IR is faster, LR is more area-efficient.
+#[test]
+fn ir_lr_tradeoff_holds_across_benchmarks() {
+    for net in zoo::imagenet_benchmarks() {
+        let cfg = PrecisionConfig::fixed(8, net.weight_layers());
+        let lr = simulate(&net, &cfg, &SimParams::new(HwConfig::Lr, bf_imna::ap::tech::Tech::sram()));
+        let ir = simulate(&net, &cfg, &SimParams::new(HwConfig::Ir, bf_imna::ap::tech::Tech::sram()));
+        assert!(ir.latency_s() < lr.latency_s(), "{}: IR not faster", net.name);
+        assert!(
+            lr.gops_per_w_mm2() > ir.gops_per_w_mm2(),
+            "{}: LR not more area-efficient",
+            net.name
+        );
+    }
+}
+
+/// Breakdown invariant on all three benchmarks: reduce dominates GEMM
+/// latency (Fig. 8b's headline).
+#[test]
+fn reduce_dominates_gemm_latency_across_benchmarks() {
+    for net in zoo::imagenet_benchmarks() {
+        let cfg = PrecisionConfig::fixed(8, net.weight_layers());
+        let r = simulate(&net, &cfg, &SimParams::lr_sram());
+        let shares = breakdown::gemm_latency_by_phase(&r);
+        let red = breakdown::fraction_of(&shares, "Reduce");
+        let mul = breakdown::fraction_of(&shares, "Multiply");
+        assert!(red > mul, "{}: reduce {red:.3} <= multiply {mul:.3}", net.name);
+    }
+}
+
+/// Property: the mapper's structural invariants hold for random layers and
+/// precisions on both chips.
+#[test]
+fn mapper_structural_invariants() {
+    use bf_imna::arch::ChipConfig;
+    use bf_imna::mapper;
+    let nets = [zoo::alexnet(), zoo::resnet18()];
+    check("mapper invariants", 20, |rng| {
+        let net = &nets[rng.range(0, 1)];
+        let bits: Vec<u32> = (0..net.weight_layers()).map(|_| 2 + rng.below(7) as u32).collect();
+        let cfg = PrecisionConfig::from_bits("r", &bits);
+        for hw in [HwConfig::Lr, HwConfig::Ir] {
+            let chip = ChipConfig::for_network(hw, net);
+            let plan = mapper::map_network(net, &chip, &cfg);
+            for l in &plan.layers {
+                if l.caps_used > chip.total_caps() {
+                    return Err(format!("{}: caps_used {} > chip {}", l.name, l.caps_used, chip.total_caps()));
+                }
+                if l.mesh_bits_critical > l.mesh_bits {
+                    return Err(format!(
+                        "{}: critical mesh {} > total {}",
+                        l.name, l.mesh_bits_critical, l.mesh_bits
+                    ));
+                }
+                if l.steps == 0 || l.caps_used == 0 {
+                    return Err(format!("{}: zero steps/caps", l.name));
+                }
+                if hw == HwConfig::Ir && l.steps != 1 && l.kind == bf_imna::mapper::WorkKind::Gemm {
+                    return Err(format!("{}: IR folded x{}", l.name, l.steps));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Property: latency and energy are finite, positive, and EDP factors.
+#[test]
+fn simulator_outputs_are_well_formed() {
+    let net = zoo::alexnet();
+    check("simulator well-formedness", 16, |rng| {
+        let bits: Vec<u32> = (0..net.weight_layers()).map(|_| 2 + rng.below(7) as u32).collect();
+        let cfg = PrecisionConfig::from_bits("r", &bits);
+        let r = simulate(&net, &cfg, &SimParams::lr_sram());
+        let (e, l) = (r.energy_j(), r.latency_s());
+        if !(e.is_finite() && e > 0.0 && l.is_finite() && l > 0.0) {
+            return Err(format!("bad metrics e={e} l={l}"));
+        }
+        if (r.edp_js() - e * l).abs() > 1e-15 * e * l.max(1.0) {
+            return Err("EDP != E*L".to_string());
+        }
+        if r.pipeline_interval_s() > l {
+            return Err("pipeline interval exceeds latency".to_string());
+        }
+        Ok(())
+    });
+}
+
+/// The 2D-AP emulator's vertical (row-pair) operations are exact too.
+#[test]
+fn emulator_vertical_ops_are_exact() {
+    check("vertical reduce/matmat", 24, |rng| {
+        let m = rng.range(2, 6);
+        let n = 1 << rng.range(1, 4); // 2..16 values, power of two
+        let vals = rng.vec_below(n, 1 << m);
+        let (got, _) = emulator::emulate_reduce_2d(&vals, m);
+        let want: u64 = vals.iter().sum();
+        if got != want {
+            return Err(format!("reduce {vals:?} gave {got}, want {want}"));
+        }
+        Ok(())
+    });
+}
