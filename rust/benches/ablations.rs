@@ -9,8 +9,8 @@ use bf_imna::arch::ChipConfig;
 use bf_imna::mapper;
 use bf_imna::model::zoo;
 use bf_imna::precision::PrecisionConfig;
-use bf_imna::sim::{simulate, simulate_on, SimParams};
-use bf_imna::util::benchkit::banner;
+use bf_imna::sim::{simulate, SimParams, SweepEngine, SweepPoint};
+use bf_imna::util::benchkit::{banner, Bencher};
 use bf_imna::util::table::{fmt_eng, fmt_ratio, Table};
 
 fn main() {
@@ -26,7 +26,7 @@ fn main() {
     let mut t = Table::new(vec!["layer", "critical mesh bits", "total mesh bits", "ratio"]);
     for l in plan.layers.iter().filter(|l| l.kind == mapper::WorkKind::Gemm) {
         t.row(vec![
-            l.name.clone(),
+            l.name.to_string(),
             l.mesh_bits_critical.to_string(),
             l.mesh_bits.to_string(),
             format!("{:.3}", l.mesh_bits_critical as f64 / l.mesh_bits as f64),
@@ -35,7 +35,7 @@ fn main() {
     print!("{}", t.render());
     // The fc layers must ride the i-split: their critical traffic has to be
     // far below one full weight copy (i*j*8 bits).
-    let fc6 = plan.layers.iter().find(|l| l.name == "fc6").unwrap();
+    let fc6 = plan.layers.iter().find(|l| &*l.name == "fc6").unwrap();
     let full_copy = 4096u64 * 9216 * 8;
     println!(
         "\nfc6 critical {} bits vs one full weight copy {} bits ({}): the i-split\n\
@@ -49,23 +49,32 @@ fn main() {
     // ------------------------------------------------------------------
     banner("Ablation 2 — IR mesh bandwidth scaling (1 link per 64 CAPs)");
     // Rebuild the IR chip with the link scaling disabled (one fixed LR
-    // link) and compare latency flatness across precision.
+    // link) and compare latency flatness across precision. Both chip
+    // variants × both precisions ride one SweepEngine batch via the
+    // explicit-chip override.
     let params = SimParams::lr_sram();
+    let engine = SweepEngine::new();
+    let cfg2 = PrecisionConfig::fixed(2, net.weight_layers());
+    let cfg8 = PrecisionConfig::fixed(8, net.weight_layers());
+    let scaled_chip = ChipConfig::ir_for(&net);
+    let mut fixed_chip = ChipConfig::ir_for(&net);
+    fixed_chip.mesh.bits_per_transfer = 1024;
+    let reports = engine.run(&[
+        SweepPoint::on_chip(&net, &cfg2, &params, &scaled_chip),
+        SweepPoint::on_chip(&net, &cfg8, &params, &scaled_chip),
+        SweepPoint::on_chip(&net, &cfg2, &params, &fixed_chip),
+        SweepPoint::on_chip(&net, &cfg8, &params, &fixed_chip),
+    ]);
     let mut t = Table::new(vec![
         "IR mesh",
         "latency 2b (s)",
         "latency 8b (s)",
         "8b/2b ratio",
     ]);
-    for (label, scale) in [("scaled (ours)", true), ("fixed link (ablated)", false)] {
-        let mut chip = ChipConfig::ir_for(&net);
-        if !scale {
-            chip.mesh.bits_per_transfer = 1024;
-        }
-        let l2 = simulate_on(&net, &PrecisionConfig::fixed(2, net.weight_layers()), &params, &chip)
-            .latency_s();
-        let l8 = simulate_on(&net, &PrecisionConfig::fixed(8, net.weight_layers()), &params, &chip)
-            .latency_s();
+    for (label, pair) in
+        [("scaled (ours)", &reports[0..2]), ("fixed link (ablated)", &reports[2..4])]
+    {
+        let (l2, l8) = (pair[0].latency_s(), pair[1].latency_s());
         t.row(vec![
             label.to_string(),
             fmt_eng(l2, 3),
@@ -180,5 +189,46 @@ fn main() {
          matmul-dominated exactly as §V-D warns — the motivation for the paper's\n\
          future-work matmul engines.",
         llm.total_macs() as f64 / 1e9
+    );
+
+    // ------------------------------------------------------------------
+    banner("Ablation 5 — sweep engine: what the cache and the fan-out each buy");
+    // The same 15-point DSE batch as benches/perf_hotpath (shared via
+    // dse::perf_dse_batch, so the two benches cannot drift apart), run
+    // four ways to attribute the speedup: serial+uncached (seed
+    // behaviour), serial with the plan cache, parallel cold, parallel warm.
+    let (nets, dse_cfgs) = bf_imna::sim::dse::perf_dse_batch();
+    let points: Vec<SweepPoint> =
+        dse_cfgs.iter().map(|(i, c)| SweepPoint::new(&nets[*i], c, &params)).collect();
+    let bench = Bencher::new().samples(10).warmup(2);
+    let baseline = bench.run("serial uncached", || {
+        dse_cfgs.iter().map(|(i, c)| simulate(&nets[*i], c, &params).energy_j()).sum::<f64>()
+    });
+    let serial_engine = SweepEngine::serial();
+    let serial_cached = bench.run("serial + plan cache", || {
+        serial_engine.run(&points).iter().map(|r| r.energy_j()).sum::<f64>()
+    });
+    let cold_parallel = bench.run("parallel, cold cache", || {
+        SweepEngine::new().run(&points).iter().map(|r| r.energy_j()).sum::<f64>()
+    });
+    let warm_engine = SweepEngine::new();
+    let warm_parallel = bench.run("parallel, warm cache", || {
+        warm_engine.run(&points).iter().map(|r| r.energy_j()).sum::<f64>()
+    });
+    let base_mean = baseline.summary().mean;
+    let mut t = Table::new(vec!["variant", "mean / DSE point", "speedup"]);
+    for r in [&baseline, &serial_cached, &cold_parallel, &warm_parallel] {
+        let s = r.summary();
+        t.row(vec![
+            r.name.clone(),
+            bf_imna::util::benchkit::fmt_duration(s.mean),
+            fmt_ratio(base_mean / s.mean),
+        ]);
+    }
+    print!("{}", t.render());
+    println!(
+        "({} worker threads; both ingredients are needed — the cache removes the\n\
+         O(configs x layers) mapping work, the fan-out spreads the cost conversion)",
+        warm_engine.threads()
     );
 }

@@ -4,17 +4,21 @@
 
 use bf_imna::arch::HwConfig;
 use bf_imna::model::zoo;
-use bf_imna::sim::dse;
+use bf_imna::sim::{dse, SweepEngine};
 use bf_imna::util::benchkit::{banner, Bencher};
 use bf_imna::util::table::{fmt_eng, Table};
 
 fn main() {
     banner("Fig. 7 — DSE vs average precision (SRAM, mean of sweep combos)");
+    // One engine for the whole figure: every series fans its combination
+    // points across the worker pool, and the plan cache carries over from
+    // series to series (same nets, same 7 candidate widths per layer).
+    let engine = SweepEngine::new();
     let nets = zoo::imagenet_benchmarks();
     for hw in [HwConfig::Lr, HwConfig::Ir] {
         println!("\n=== {} configuration ===", hw.label());
         for net in &nets {
-            let series = dse::fig7_series(net, hw, 7);
+            let series = dse::fig7_series_with(&engine, net, hw, 7);
             println!("\n{}:", net.name);
             let mut t =
                 Table::new(vec!["avg bits", "energy (J)", "latency (s)", "GOPS/W/mm2"]);
@@ -47,7 +51,7 @@ fn main() {
     banner("Cross-checks (paper §V-A numbers)");
     // ResNet50 LR energy growth 2 -> 8 bits (paper: 0.009 -> 0.095 J, 10.5x).
     let resnet = zoo::resnet50();
-    let series = dse::fig7_series(&resnet, HwConfig::Lr, 7);
+    let series = dse::fig7_series_with(&engine, &resnet, HwConfig::Lr, 7);
     let growth = series.last().unwrap().energy_j / series[0].energy_j;
     println!(
         "ResNet50 LR energy 2b -> 8b: {:.4} J -> {:.4} J ({growth:.1}x; paper 0.009 -> 0.095, 10.5x)",
@@ -55,8 +59,8 @@ fn main() {
         series.last().unwrap().energy_j
     );
     // Energy ordering VGG16 > ResNet50 > AlexNet at every precision.
-    let vgg = dse::fig7_series(&zoo::vgg16(), HwConfig::Lr, 7);
-    let alex = dse::fig7_series(&zoo::alexnet(), HwConfig::Lr, 7);
+    let vgg = dse::fig7_series_with(&engine, &zoo::vgg16(), HwConfig::Lr, 7);
+    let alex = dse::fig7_series_with(&engine, &zoo::alexnet(), HwConfig::Lr, 7);
     for ((v, r), a) in vgg.iter().zip(&series).zip(&alex) {
         assert!(
             v.energy_j > r.energy_j && r.energy_j > a.energy_j,
@@ -66,15 +70,26 @@ fn main() {
     }
     println!("energy ordering VGG16 > ResNet50 > AlexNet holds at every avg precision.");
     // LR vs IR energy-area efficiency gap.
-    let ir = dse::fig7_series(&resnet, HwConfig::Ir, 7);
+    let ir = dse::fig7_series_with(&engine, &resnet, HwConfig::Ir, 7);
     let gap = series[3].gops_per_w_mm2 / ir[3].gops_per_w_mm2;
     println!("ResNet50 GOPS/W/mm2 LR/IR gap at 5 avg bits: {gap:.0}x (paper: up to 4 orders).");
 
     banner("Timing");
     let bench = Bencher::new().samples(3).warmup(1);
     let alexnet = zoo::alexnet();
-    let r = bench.run("fig7 series (AlexNet LR, 7 targets x 5 combos)", || {
+    let r = bench.run("fig7 series, fresh engine (AlexNet LR, 7x5 combos)", || {
         dse::fig7_series(&alexnet, HwConfig::Lr, 7).len()
     });
     println!("{}", r.report_line());
+    let r = bench.run("fig7 series, shared warm engine (AlexNet LR)", || {
+        dse::fig7_series_with(&engine, &alexnet, HwConfig::Lr, 7).len()
+    });
+    println!("{}", r.report_line());
+    let stats = engine.cache_stats();
+    println!(
+        "shared engine after full figure: {} plan entries, {:.1}% hit rate, {} threads",
+        stats.entries,
+        100.0 * stats.hit_rate(),
+        engine.threads()
+    );
 }

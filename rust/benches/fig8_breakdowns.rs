@@ -1,22 +1,29 @@
 //! Bench: regenerate Fig. 8 — (a) total-energy breakdown by work category
 //! and (b) GEMM-latency breakdown by phase, for the three ImageNet
-//! benchmarks on the LR chip.
+//! benchmarks on the LR chip. All three networks fan through one
+//! [`SweepEngine`] batch; both figures come from the same reports.
 
 use bf_imna::model::zoo;
 use bf_imna::precision::PrecisionConfig;
-use bf_imna::sim::{breakdown, simulate, SimParams};
+use bf_imna::sim::{breakdown, SimParams, SweepEngine, SweepPoint};
 use bf_imna::util::benchkit::{banner, Bencher};
 use bf_imna::util::table::{fmt_eng, Table};
 
 fn main() {
-    banner("Fig. 8a — energy breakdown (INT8, LR, SRAM)");
     let params = SimParams::lr_sram();
+    let engine = SweepEngine::new();
+    let nets = zoo::imagenet_benchmarks();
+    let cfgs: Vec<PrecisionConfig> =
+        nets.iter().map(|n| PrecisionConfig::fixed(8, n.weight_layers())).collect();
+    let points: Vec<SweepPoint> =
+        nets.iter().zip(&cfgs).map(|(n, c)| SweepPoint::new(n, c, &params)).collect();
+    let bds = breakdown::breakdowns_many(&engine, &points);
+
+    banner("Fig. 8a — energy breakdown (INT8, LR, SRAM)");
     let mut t = Table::new(vec!["network", "GEMM", "Pooling", "Residual/ReLU", "Interconnect"]);
-    for net in zoo::imagenet_benchmarks() {
-        let cfg = PrecisionConfig::fixed(8, net.weight_layers());
-        let r = simulate(&net, &cfg, &params);
-        let shares = breakdown::energy_by_kind(&r);
-        let pct = |l: &str| format!("{:.1}%", 100.0 * breakdown::fraction_of(&shares, l));
+    for (net, bd) in nets.iter().zip(&bds) {
+        let shares = &bd.energy_by_kind;
+        let pct = |l: &str| format!("{:.1}%", 100.0 * breakdown::fraction_of(shares, l));
         t.row(vec![
             net.name.clone(),
             pct("GEMM"),
@@ -27,7 +34,7 @@ fn main() {
         // Paper: "GEMM and pooling are the main energy bottlenecks" — GEMM
         // must dominate the AP-side energy.
         assert!(
-            breakdown::fraction_of(&shares, "GEMM") > 0.4,
+            breakdown::fraction_of(shares, "GEMM") > 0.4,
             "{}: GEMM share too small",
             net.name
         );
@@ -36,11 +43,9 @@ fn main() {
 
     banner("Fig. 8b — GEMM latency breakdown by phase (INT8, LR, SRAM)");
     let mut t = Table::new(vec!["network", "Populate", "Multiply", "Reduce", "Readout", "ReLU"]);
-    for net in zoo::imagenet_benchmarks() {
-        let cfg = PrecisionConfig::fixed(8, net.weight_layers());
-        let r = simulate(&net, &cfg, &params);
-        let shares = breakdown::gemm_latency_by_phase(&r);
-        let pct = |l: &str| format!("{:.1}%", 100.0 * breakdown::fraction_of(&shares, l));
+    for (net, bd) in nets.iter().zip(&bds) {
+        let shares = &bd.gemm_latency_by_phase;
+        let pct = |l: &str| format!("{:.1}%", 100.0 * breakdown::fraction_of(shares, l));
         t.row(vec![
             net.name.clone(),
             pct("Populate"),
@@ -51,8 +56,8 @@ fn main() {
         ]);
         // The paper's headline: reduction, not multiplication, bottlenecks
         // GEMM latency.
-        let red = breakdown::fraction_of(&shares, "Reduce");
-        let mul = breakdown::fraction_of(&shares, "Multiply");
+        let red = breakdown::fraction_of(shares, "Reduce");
+        let mul = breakdown::fraction_of(shares, "Multiply");
         assert!(red > mul && red > 0.5, "{}: reduce {red:.2} vs multiply {mul:.2}", net.name);
     }
     print!("{}", t.render());
@@ -62,13 +67,13 @@ fn main() {
     banner("Per-layer detail (VGG16, 5 most expensive layers)");
     let vgg = zoo::vgg16();
     let cfg = PrecisionConfig::fixed(8, vgg.weight_layers());
-    let r = simulate(&vgg, &cfg, &params);
+    let r = engine.run(&[SweepPoint::new(&vgg, &cfg, &params)]).remove(0);
     let mut layers: Vec<_> = r.layers.iter().collect();
     layers.sort_by(|a, b| b.energy_j().partial_cmp(&a.energy_j()).unwrap());
     let mut t = Table::new(vec!["layer", "steps", "energy (J)", "latency (s)", "mesh (s)"]);
     for l in layers.iter().take(5) {
         t.row(vec![
-            l.name.clone(),
+            l.name.to_string(),
             l.steps.to_string(),
             fmt_eng(l.energy_j(), 3),
             fmt_eng(l.latency_s, 3),
@@ -79,15 +84,11 @@ fn main() {
 
     banner("Timing");
     let bench = Bencher::new().samples(10);
-    let r = bench.run("simulate + both breakdowns (3 nets)", || {
-        let mut acc = 0.0;
-        for net in zoo::imagenet_benchmarks() {
-            let cfg = PrecisionConfig::fixed(8, net.weight_layers());
-            let rep = simulate(&net, &cfg, &params);
-            acc += breakdown::energy_by_kind(&rep)[0].fraction;
-            acc += breakdown::gemm_latency_by_phase(&rep)[0].fraction;
-        }
-        acc
+    let r = bench.run("engine sweep + both breakdowns (3 nets)", || {
+        let bds = breakdown::breakdowns_many(&engine, &points);
+        bds.iter()
+            .map(|b| b.energy_by_kind[0].fraction + b.gemm_latency_by_phase[0].fraction)
+            .sum::<f64>()
     });
     println!("{}", r.report_line());
 }

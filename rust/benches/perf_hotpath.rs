@@ -2,8 +2,14 @@
 //! pass optimizes and EXPERIMENTS.md §Perf records.
 //!
 //! Three layers, three hot paths:
-//! * **L3 simulator** — map_network + simulate for every benchmark network
-//!   (this is what every DSE point pays, thousands of times per sweep);
+//! * **L3 simulator** — map_network + simulate for every benchmark network,
+//!   then the headline: a Fig. 7-style **DSE point** (3 nets x 5 random
+//!   configs) run three ways — serial uncached (the seed baseline),
+//!   through a cold [`SweepEngine`], and through a warm one (sweep steady
+//!   state). The engine results are asserted **bit-identical** to direct
+//!   `simulate()` output, and the DSE-point timings are exported to
+//!   `BENCH_dse.json` at the repo root so CI tracks the perf trajectory
+//!   PR-over-PR.
 //! * **L3 emulator** — the bit-exact CAM inner loop (pass application);
 //! * **Runtime** — PJRT execute of the serving artifacts (request-path
 //!   latency floor), when `make artifacts` output is present.
@@ -13,7 +19,7 @@ use std::path::Path;
 use bf_imna::ap::emulator;
 use bf_imna::model::zoo;
 use bf_imna::precision::PrecisionConfig;
-use bf_imna::sim::{simulate, SimParams};
+use bf_imna::sim::{dse, simulate, SimParams, SweepEngine, SweepPoint};
 use bf_imna::util::benchkit::{banner, Bencher};
 use bf_imna::util::rng::Rng;
 
@@ -27,22 +33,86 @@ fn main() {
         let r = bench.run(&name, || simulate(&net, &cfg, &params).energy_j());
         println!("{}", r.report_line());
     }
-    // A full Fig. 7-style sweep point: 5 configs x 3 nets.
-    let nets = zoo::imagenet_benchmarks();
-    let r = bench.run("DSE point (3 nets x 5 random configs)", || {
-        let mut rng = Rng::new(9);
+
+    banner("DSE point (3 nets x 5 random configs) — serial uncached vs SweepEngine");
+    // The same 15 (net, config) points for every variant — the shared,
+    // seed-stable workload (also timed by ablations' Ablation 5).
+    let (nets, cfgs) = dse::perf_dse_batch();
+    let points: Vec<SweepPoint> =
+        cfgs.iter().map(|(i, c)| SweepPoint::new(&nets[*i], c, &params)).collect();
+
+    // Baseline: what the seed paid per DSE point — fresh mapping for every
+    // layer of every config, single-threaded.
+    let serial = bench.run("DSE point, serial uncached (seed baseline)", || {
         let mut acc = 0.0;
-        for net in &nets {
-            for _ in 0..5 {
-                let bits: Vec<u32> =
-                    (0..net.weight_layers()).map(|_| 2 + rng.below(7) as u32).collect();
-                let cfg = PrecisionConfig::from_bits("r", &bits);
-                acc += simulate(net, &cfg, &params).energy_j();
-            }
+        for (i, cfg) in &cfgs {
+            acc += simulate(&nets[*i], cfg, &params).energy_j();
         }
         acc
     });
-    println!("{}", r.report_line());
+    println!("{}", serial.report_line());
+
+    // Engine, cold: a fresh plan cache every iteration — isolates the
+    // parallel fan-out win.
+    let cold = bench.run("DSE point, SweepEngine (cold cache)", || {
+        SweepEngine::new().run(&points).iter().map(|r| r.energy_j()).sum::<f64>()
+    });
+    println!("{}", cold.report_line());
+
+    // Engine, warm: one cache across iterations — the steady state every
+    // sweep after its first few configs runs in.
+    let engine = SweepEngine::new();
+    let warm = bench.run("DSE point, SweepEngine (warm cache)", || {
+        engine.run(&points).iter().map(|r| r.energy_j()).sum::<f64>()
+    });
+    println!("{}", warm.report_line());
+    let stats = engine.cache_stats();
+    println!(
+        "engine: {} worker threads; plan cache {} entries, hit rate {:.1}%",
+        engine.threads(),
+        stats.entries,
+        100.0 * stats.hit_rate()
+    );
+    // Timing thresholds would flake across machines, but cache behaviour is
+    // deterministic: after 30+ warm iterations of the same 15 points, the
+    // hit rate must be near 1. This is the CI canary for the speedup claim —
+    // a PlanKey regression that misses on every lookup fails here, loudly.
+    assert!(
+        stats.hit_rate() > 0.9,
+        "plan cache ineffective on the warm DSE sweep: {stats:?}"
+    );
+
+    // Bit-identity: the whole point of the cache is that it cannot change
+    // a single output bit.
+    let engine_reports = engine.run(&points);
+    for ((i, cfg), er) in cfgs.iter().zip(&engine_reports) {
+        let dr = simulate(&nets[*i], cfg, &params);
+        assert_eq!(
+            er.energy_j().to_bits(),
+            dr.energy_j().to_bits(),
+            "energy diverged on {} / {}",
+            dr.net_name,
+            dr.cfg_name
+        );
+        assert_eq!(
+            er.latency_s().to_bits(),
+            dr.latency_s().to_bits(),
+            "latency diverged on {} / {}",
+            dr.net_name,
+            dr.cfg_name
+        );
+    }
+    println!("bit-identity: engine results == direct simulate() on all {} points.", points.len());
+
+    let serial_mean = serial.summary().mean;
+    let cold_mean = cold.summary().mean;
+    let warm_mean = warm.summary().mean;
+    println!(
+        "speedup vs serial uncached: {:.1}x cold, {:.1}x warm (acceptance target: >= 5x warm)",
+        serial_mean / cold_mean,
+        serial_mean / warm_mean
+    );
+    write_bench_json(serial_mean, cold_mean, warm_mean, engine.threads());
 
     banner("L3 emulator hot path (bit-exact CAM pass application)");
     let mut rng = Rng::new(3);
@@ -65,7 +135,13 @@ fn main() {
         return;
     }
     use bf_imna::runtime::Runtime;
-    let rt = Runtime::load_configs(&dir, &["int8", "int4"]).expect("runtime");
+    let rt = match Runtime::load_configs(&dir, &["int8", "int4"]) {
+        Ok(rt) => rt,
+        Err(e) => {
+            println!("runtime unavailable ({e}) — skipping PJRT timings");
+            return;
+        }
+    };
     let elems = rt.manifest().sample_elems();
     let exec_bench = Bencher::new().samples(10).warmup(2);
     for (config, batch) in [("int8", 1u64), ("int8", 8), ("int4", 1), ("int4", 8)] {
@@ -77,5 +153,24 @@ fn main() {
             r.report_line(),
             batch as f64 * r.throughput()
         );
+    }
+}
+
+/// Export the DSE-point timings as JSON at the repo root so CI can archive
+/// the perf trajectory PR-over-PR.
+fn write_bench_json(serial_s: f64, cold_s: f64, warm_s: f64, threads: usize) {
+    let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("BENCH_dse.json");
+    let json = format!(
+        "{{\n  \"bench\": \"perf_hotpath/dse_point\",\n  \"points\": 15,\n  \
+         \"serial_uncached_mean_s\": {serial_s:.9},\n  \
+         \"engine_cold_mean_s\": {cold_s:.9},\n  \
+         \"engine_warm_mean_s\": {warm_s:.9},\n  \
+         \"speedup_cold\": {:.3},\n  \"speedup_warm\": {:.3},\n  \"threads\": {threads}\n}}\n",
+        serial_s / cold_s,
+        serial_s / warm_s,
+    );
+    match std::fs::write(&path, json) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write {}: {e}", path.display()),
     }
 }

@@ -117,19 +117,54 @@ impl Cam {
         }
     }
 
-    /// Bit-sequential column write: one write event, drives all rows.
-    pub fn write_column(&mut self, col: usize, data: &[bool]) {
-        assert!(data.len() <= self.rows);
-        for (r, &b) in data.iter().enumerate() {
-            self.set(r, col, b);
+    /// Bit-sequential column write from packed bitmap words (bit `r % 64`
+    /// of word `r / 64` is row `r`): one write event, drives the first
+    /// `rows` rows and leaves the rest untouched. Operating on `u64` words
+    /// keeps the driver loops allocation-free where the old `&[bool]` API
+    /// materialized one `Vec<bool>` per column.
+    pub fn write_column(&mut self, col: usize, bits: &[u64], rows: usize) {
+        assert!(rows <= self.rows);
+        assert!(bits.len() >= rows.div_ceil(64));
+        let base = col * self.words;
+        let full = rows / 64;
+        self.data[base..base + full].copy_from_slice(&bits[..full]);
+        let rem = rows % 64;
+        if rem > 0 {
+            let mask = (1u64 << rem) - 1;
+            let word = &mut self.data[base + full];
+            *word = (*word & !mask) | (bits[full] & mask);
         }
         self.counters.writes += 1;
     }
 
-    /// Bit-sequential column read: one read event.
-    pub fn read_column(&mut self, col: usize) -> Vec<bool> {
+    /// Bit-sequential column read: one read event. Returns the column as
+    /// packed bitmap words (see [`column_bit`] to test individual rows).
+    pub fn read_column(&mut self, col: usize) -> Vec<u64> {
         self.counters.reads += 1;
-        (0..self.rows).map(|r| self.get(r, col)).collect()
+        let base = col * self.words;
+        let mut out = self.data[base..base + self.words].to_vec();
+        if let Some(last) = out.last_mut() {
+            *last &= self.tail_mask;
+        }
+        out
+    }
+
+    /// Copy one column into another word-by-word: one read + one write
+    /// event (the hardware's column move through the sense amplifiers).
+    pub fn copy_column(&mut self, src: usize, dst: usize) {
+        let words = self.words;
+        for w in 0..words {
+            self.data[dst * words + w] = self.data[src * words + w];
+        }
+        self.counters.reads += 1;
+        self.counters.writes += 1;
+    }
+
+    /// Zero a column: one write event (no row buffer materialized).
+    pub fn clear_column(&mut self, col: usize) {
+        let base = col * self.words;
+        self.data[base..base + self.words].fill(0);
+        self.counters.writes += 1;
     }
 
     /// Word-sequential read of `bits` columns of one row: one read event.
@@ -215,12 +250,18 @@ impl Cam {
     // ------------------------------------------------------------------
 
     /// Populate a field of `bits` columns at `offset` from unsigned values,
-    /// one per row, bit-sequentially (`bits` write events).
+    /// one per row, bit-sequentially (`bits` write events). One reusable
+    /// word buffer serves every column — no per-column allocation.
     pub fn populate_field(&mut self, offset: usize, bits: usize, values: &[u64]) {
         assert!(values.len() <= self.rows);
+        let n = values.len();
+        let mut col = vec![0u64; n.div_ceil(64)];
         for b in 0..bits {
-            let col: Vec<bool> = values.iter().map(|v| v >> b & 1 == 1).collect();
-            self.write_column(offset + b, &col);
+            col.fill(0);
+            for (r, v) in values.iter().enumerate() {
+                col[r / 64] |= (v >> b & 1) << (r % 64);
+            }
+            self.write_column(offset + b, &col, n);
         }
     }
 
@@ -261,10 +302,11 @@ impl Cam {
     /// column and reset the MSB (2 writes), then one Table III pass per
     /// remaining bit (`m - 1` compares + `m - 1` writes).
     pub fn relu(&mut self, offset: usize, m: usize, flag_col: usize) {
-        let msb = self.read_column(offset + m - 1);
-        self.write_column(flag_col, &msb);
-        let zeros = vec![false; self.rows];
-        self.write_column(offset + m - 1, &zeros);
+        // Move the sign column into the flag column (1 read + 1 write),
+        // then reset it (1 write) — the same event counts as the old
+        // read/write/write sequence, without the `vec![false; rows]`.
+        self.copy_column(offset + m - 1, flag_col);
+        self.clear_column(offset + m - 1);
         for i in (0..m - 1).rev() {
             self.apply_passes(luts::RELU_LUT, &[offset + i, flag_col]);
         }
@@ -277,9 +319,8 @@ impl Cam {
         for i in (0..m).rev() {
             self.apply_passes(luts::MAX_LUT, &[a_off + i, b_off + i, f1_col, f2_col]);
         }
-        let zeros = vec![false; self.rows];
-        self.write_column(f1_col, &zeros);
-        self.write_column(f2_col, &zeros);
+        self.clear_column(f1_col);
+        self.clear_column(f2_col);
     }
 
     // ------------------------------------------------------------------
@@ -309,9 +350,26 @@ impl Cam {
     }
 }
 
+/// Test one row's bit in a packed column bitmap (as produced by
+/// [`Cam::read_column`]).
+#[inline]
+pub fn column_bit(bits: &[u64], row: usize) -> bool {
+    bits[row / 64] >> (row % 64) & 1 == 1
+}
+
 // ----------------------------------------------------------------------
 // High-level drivers mirroring the Table I operations end to end.
 // ----------------------------------------------------------------------
+
+/// Scatter a read-out column into per-row output words at bit position
+/// `bit` (the bit-sequential readout loop every driver shares).
+fn scatter_column(col: &[u64], bit: usize, out: &mut [u64]) {
+    for (r, o) in out.iter_mut().enumerate() {
+        if column_bit(col, r) {
+            *o |= 1 << bit;
+        }
+    }
+}
 
 /// Emulate Eq. (1): element-wise `b[k] += a[k]` over vectors of `m`-bit
 /// unsigned values. Returns the sums and the exact event counters.
@@ -325,11 +383,7 @@ pub fn emulate_add(a: &[u64], b: &[u64], m: usize) -> (Vec<u64>, Counters) {
     let mut out = vec![0u64; a.len()];
     for bit in 0..=m {
         let col = cam.read_column(m + bit);
-        for (r, &v) in col.iter().enumerate() {
-            if v {
-                out[r] |= 1 << bit;
-            }
-        }
+        scatter_column(&col, bit, &mut out);
     }
     (out, cam.counters)
 }
@@ -347,11 +401,7 @@ pub fn emulate_multiply(a: &[u64], b: &[u64], ma: usize, mb: usize) -> (Vec<u64>
     let mut out = vec![0u64; a.len()];
     for bit in 0..ma + mb {
         let col = cam.read_column(c_off + bit);
-        for (r, &v) in col.iter().enumerate() {
-            if v {
-                out[r] |= 1 << bit;
-            }
-        }
+        scatter_column(&col, bit, &mut out);
     }
     (out, cam.counters)
 }
@@ -367,9 +417,9 @@ pub fn emulate_relu(v: &[i64], m: usize) -> (Vec<i64>, Counters) {
     let mut out = vec![0i64; v.len()];
     for bit in 0..m {
         let col = cam.read_column(bit);
-        for (r, &b) in col.iter().enumerate() {
-            if b {
-                out[r] |= 1 << bit;
+        for (r, o) in out.iter_mut().enumerate() {
+            if column_bit(&col, r) {
+                *o |= 1 << bit;
             }
         }
     }
@@ -388,11 +438,7 @@ pub fn emulate_max(a: &[u64], b: &[u64], m: usize) -> (Vec<u64>, Counters) {
     let mut out = vec![0u64; a.len()];
     for bit in 0..m {
         let col = cam.read_column(m + bit);
-        for (r, &v) in col.iter().enumerate() {
-            if v {
-                out[r] |= 1 << bit;
-            }
-        }
+        scatter_column(&col, bit, &mut out);
     }
     (out, cam.counters)
 }
@@ -620,10 +666,39 @@ mod tests {
     #[test]
     fn column_roundtrip() {
         let mut cam = Cam::new(4, 3);
-        cam.write_column(1, &[true, false, true, false]);
-        assert_eq!(cam.read_column(1), vec![true, false, true, false]);
+        cam.write_column(1, &[0b0101], 4);
+        let col = cam.read_column(1);
+        assert_eq!(col, vec![0b0101]);
+        assert!(column_bit(&col, 0) && !column_bit(&col, 1));
+        assert!(column_bit(&col, 2) && !column_bit(&col, 3));
         assert_eq!(cam.counters.writes, 1);
         assert_eq!(cam.counters.reads, 1);
+    }
+
+    #[test]
+    fn partial_column_write_preserves_tail_rows() {
+        let mut cam = Cam::new(130, 2); // 3 words per column
+        cam.set(100, 0, true);
+        cam.set(129, 0, true);
+        cam.write_column(0, &[u64::MAX, u64::MAX], 70);
+        for r in 0..70 {
+            assert!(cam.get(r, 0), "row {r} not written");
+        }
+        assert!(!cam.get(70, 0) && !cam.get(99, 0));
+        assert!(cam.get(100, 0) && cam.get(129, 0), "tail rows clobbered");
+    }
+
+    #[test]
+    fn copy_and_clear_columns_charge_events() {
+        let mut cam = Cam::new(70, 2);
+        cam.write_column(0, &[0xDEAD_BEEF, 0x2A], 70);
+        cam.copy_column(0, 1);
+        assert_eq!(cam.read_column(1), vec![0xDEAD_BEEF, 0x2A]);
+        cam.clear_column(1);
+        assert_eq!(cam.read_column(1), vec![0, 0]);
+        // Writes: populate + copy + clear; reads: copy + 2 read_columns.
+        assert_eq!(cam.counters.writes, 3);
+        assert_eq!(cam.counters.reads, 3);
     }
 
     #[test]

@@ -139,6 +139,48 @@ impl ChipConfig {
     pub fn area_mm2(&self, tech: &Tech) -> f64 {
         self.area_m2(tech) * 1e6
     }
+
+    /// Hashable identity of this chip — every field the mapper or cost
+    /// conversion reads, with `f64`s keyed by their exact bit patterns.
+    /// Two configs with equal keys produce bit-identical simulation
+    /// results, which is what lets [`crate::mapper::PlanCache`] share
+    /// layer plans across sweep points.
+    pub fn cache_key(&self) -> ChipKey {
+        ChipKey {
+            hw: self.hw,
+            clusters_x: self.clusters_x,
+            clusters_y: self.clusters_y,
+            caps_x: self.cluster.caps_x,
+            caps_y: self.cluster.caps_y,
+            cap: (self.cluster.cap.rows, self.cluster.cap.words_per_row, self.cluster.cap.word_bits),
+            map: (self.cluster.map.rows, self.cluster.map.words_per_row, self.cluster.map.word_bits),
+            mesh_bits_per_transfer: self.mesh.bits_per_transfer,
+            mesh_freq_bits: self.mesh.freq_hz.to_bits(),
+            mesh_hops_bits: self.mesh.avg_hops.to_bits(),
+            mesh_hop_mm_bits: self.mesh.hop_mm.to_bits(),
+            mesh_e_bit_mm_bits: self.mesh.e_bit_mm.to_bits(),
+            freq_bits: self.freq_hz.to_bits(),
+        }
+    }
+}
+
+/// A [`ChipConfig`]'s full identity as a hashable value (see
+/// [`ChipConfig::cache_key`]). Opaque by design: only `Eq`/`Hash` matter.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ChipKey {
+    hw: HwConfig,
+    clusters_x: u64,
+    clusters_y: u64,
+    caps_x: u64,
+    caps_y: u64,
+    cap: (u64, u64, u64),
+    map: (u64, u64, u64),
+    mesh_bits_per_transfer: u64,
+    mesh_freq_bits: u64,
+    mesh_hops_bits: u64,
+    mesh_hop_mm_bits: u64,
+    mesh_e_bit_mm_bits: u64,
+    freq_bits: u64,
 }
 
 #[cfg(test)]
@@ -174,6 +216,16 @@ mod tests {
         let lr = ChipConfig::lr();
         let t = Tech::sram();
         assert!(ir.area_m2(&t) > 50.0 * lr.area_m2(&t));
+    }
+
+    #[test]
+    fn cache_keys_track_identity() {
+        let net = zoo::alexnet();
+        assert_eq!(ChipConfig::lr().cache_key(), ChipConfig::lr().cache_key());
+        assert_ne!(ChipConfig::lr().cache_key(), ChipConfig::ir_for(&net).cache_key());
+        let mut tweaked = ChipConfig::lr();
+        tweaked.mesh.e_bit_mm *= 2.0;
+        assert_ne!(tweaked.cache_key(), ChipConfig::lr().cache_key());
     }
 
     #[test]

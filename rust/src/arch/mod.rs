@@ -15,6 +15,6 @@ pub mod cluster;
 pub mod mesh;
 
 pub use cap::CapGeometry;
-pub use chip::{ChipConfig, HwConfig};
+pub use chip::{ChipConfig, ChipKey, HwConfig};
 pub use cluster::ClusterGeometry;
 pub use mesh::Mesh;

@@ -108,6 +108,19 @@ impl PrecisionController {
             .iter()
             .map(|(k, &b)| (k.clone(), (b / min_bits).powi(2)))
             .collect();
+        Self::with_scales(ladder, prior_scale, targets, prior_base_s)
+    }
+
+    /// Build with explicit prior scales — e.g. the BF-IMNA simulator's
+    /// relative per-config latencies, computed by the coordinator through
+    /// [`crate::sim::SweepEngine`]. Configs missing from the map fall back
+    /// to scale 1.0 in [`Self::predict`].
+    pub fn with_scales(
+        ladder: Vec<String>,
+        prior_scale: BTreeMap<String, f64>,
+        targets: BudgetTargets,
+        prior_base_s: f64,
+    ) -> Self {
         Self { ladder, targets, ema: BTreeMap::new(), prior_scale, prior_base_s }
     }
 
@@ -228,6 +241,24 @@ mod tests {
             c.observe(cfg, 1, 10.0); // everything is slow
         }
         assert_eq!(c.pick(Budget::Low, 1), "int4");
+    }
+
+    #[test]
+    fn explicit_scales_drive_predictions() {
+        let ladder = vec!["int8".to_string(), "int4".to_string()];
+        let scales: BTreeMap<String, f64> =
+            [("int8".to_string(), 3.0), ("int4".to_string(), 1.0)].into();
+        let c = PrecisionController::with_scales(
+            ladder,
+            scales,
+            BudgetTargets::default(),
+            0.002,
+        );
+        let p8 = c.predict("int8", 1);
+        let p4 = c.predict("int4", 1);
+        assert!((p8 / p4 - 3.0).abs() < 1e-9, "{p8} vs {p4}");
+        // Unknown configs fall back to scale 1.0.
+        assert_eq!(c.predict("mystery", 1), p4);
     }
 
     #[test]

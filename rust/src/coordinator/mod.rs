@@ -33,12 +33,15 @@ use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, Result};
+use crate::util::error::{anyhow, Result};
 
 pub use controller::{Budget, BudgetTargets, PrecisionController};
 pub use metrics::Metrics;
 
-use crate::runtime::{pad_batch, Runtime};
+use crate::model::zoo;
+use crate::precision::{LayerPrec, PrecisionConfig};
+use crate::runtime::{pad_batch, Manifest, Runtime};
+use crate::sim::{SimParams, SweepEngine, SweepPoint};
 
 /// One inference request.
 struct Request {
@@ -168,12 +171,26 @@ impl Coordinator {
                     m.num_classes as usize,
                     ladder.clone(),
                 )));
-                let mut controller = PrecisionController::new(
-                    ladder,
-                    &avg_bits,
-                    cfg.targets.clone(),
-                    0.005,
-                );
+                // Seed the latency priors from the BF-IMNA simulator: every
+                // manifest config fans through the sweep engine on the serve
+                // CNN, and the relative simulated latencies become the
+                // prior scales. Only trust them when every ladder config got
+                // one — a partial map would leave the missing configs at
+                // scale 1.0 (predicted as fast as the fastest), so mixed
+                // manifests fall back to the avg-bits² heuristic entirely.
+                let sim_scales = sim_prior_scales(m);
+                let covers_ladder = !sim_scales.is_empty()
+                    && ladder.iter().all(|c| sim_scales.contains_key(c));
+                let mut controller = if covers_ladder {
+                    PrecisionController::with_scales(
+                        ladder,
+                        sim_scales,
+                        cfg.targets.clone(),
+                        0.005,
+                    )
+                } else {
+                    PrecisionController::new(ladder, &avg_bits, cfg.targets.clone(), 0.005)
+                };
                 if cfg.calibrate {
                     calibrate(&runtime, &mut controller);
                 }
@@ -240,6 +257,51 @@ impl Coordinator {
     pub fn configs(&self) -> &[String] {
         &self.configs
     }
+}
+
+/// Relative simulated latency per manifest config, computed by fanning one
+/// BF-IMNA simulation point per config through a [`SweepEngine`] on the
+/// serve CNN: the plan cache collapses the shared layer/bits pairs and the
+/// points run in parallel, so this adds negligible startup cost. Returns
+/// an empty map when no config carries per-layer precision data.
+fn sim_prior_scales(manifest: &Manifest) -> BTreeMap<String, f64> {
+    let net = zoo::serve_cnn();
+    // The simulated priors are only meaningful for the network the
+    // artifacts were exported from; other models fall back to the
+    // avg-bits² heuristic in the caller.
+    if manifest.model != net.name {
+        return BTreeMap::new();
+    }
+    let cfgs: Vec<PrecisionConfig> = manifest
+        .configs
+        .iter()
+        .filter(|(_, info)| !info.per_layer.is_empty())
+        .map(|(name, info)| PrecisionConfig {
+            name: name.clone(),
+            per_layer: info
+                .per_layer
+                .iter()
+                .map(|&(w, a)| LayerPrec { w: w.max(1), a: a.max(1) })
+                .collect(),
+        })
+        .collect();
+    if cfgs.is_empty() {
+        return BTreeMap::new();
+    }
+    let params = SimParams::lr_sram();
+    let engine = SweepEngine::new();
+    let points: Vec<SweepPoint> =
+        cfgs.iter().map(|c| SweepPoint::new(&net, c, &params)).collect();
+    let reports = engine.run(&points);
+    let floor = reports
+        .iter()
+        .map(|r| r.latency_s())
+        .fold(f64::MAX, f64::min)
+        .max(1e-12);
+    cfgs.iter()
+        .zip(&reports)
+        .map(|(c, r)| (c.name.clone(), r.latency_s() / floor))
+        .collect()
 }
 
 /// Warm up every compiled (config, batch) pair once and seed the

@@ -1,0 +1,244 @@
+//! Memoizing plan cache — the heart of the sweep engine's speedup.
+//!
+//! [`crate::mapper::map_layer`] is a pure function of (layer structure,
+//! [`LayerPrec`], chip geometry): the layer *name* only labels the result
+//! and the network context never enters the math. A Fig. 7-style sweep
+//! that varies per-layer bits therefore recomputes the same small set of
+//! plans over and over — with 7 candidate bitwidths per layer, an entire
+//! sweep needs at most `7 × layers` distinct plans per chip, while the
+//! uncached path pays `configs × layers` mappings.
+//!
+//! [`PlanCache`] memoizes plans under a [`PlanKey`] capturing exactly the
+//! inputs `map_layer` reads. A hit clones the stored plan (cheap: every
+//! field is `Copy` except the `Arc<str>` name) and relabels it with the
+//! requesting layer's name, so cached and uncached paths produce
+//! **bit-identical** results — the invariant `tests/sweep_engine.rs`
+//! asserts property-style.
+//!
+//! The cache is `Sync` (an `RwLock`'d map + atomic hit/miss counters) so
+//! [`crate::sim::SweepEngine`] can share one instance across its worker
+//! threads: concurrent sweeps populate it cooperatively.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::RwLock;
+
+use super::{map_layer, LayerPlan, NetworkPlan};
+use crate::arch::{ChipConfig, ChipKey};
+use crate::model::{Layer, LayerKind, Network, Shape};
+use crate::precision::{LayerPrec, PrecisionConfig};
+
+/// Everything [`map_layer`] reads, as a hashable value.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct PlanKey {
+    input: Shape,
+    kind: LayerKind,
+    prec: LayerPrec,
+    chip: ChipKey,
+}
+
+impl PlanKey {
+    /// Key for mapping `layer` at `prec` onto `chip`.
+    pub fn new(layer: &Layer, prec: LayerPrec, chip: &ChipConfig) -> Self {
+        Self { input: layer.input, kind: layer.kind.clone(), prec, chip: chip.cache_key() }
+    }
+}
+
+/// Hit/miss counters of a [`PlanCache`] (diagnostics + perf reporting).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    /// Distinct plans currently stored.
+    pub entries: usize,
+}
+
+impl CacheStats {
+    /// Hit fraction in `[0, 1]` (0 when nothing was looked up).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// A thread-safe memo table for [`map_layer`] results.
+#[derive(Debug, Default)]
+pub struct PlanCache {
+    plans: RwLock<HashMap<PlanKey, LayerPlan>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl PlanCache {
+    /// An empty cache.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Cached [`map_layer`]: returns the memoized plan when one exists,
+    /// computing and storing it otherwise. The returned plan always
+    /// carries `layer`'s own name.
+    pub fn map_layer(&self, layer: &Layer, prec: LayerPrec, chip: &ChipConfig) -> LayerPlan {
+        let key = PlanKey::new(layer, prec, chip);
+        if let Some(hit) = self.plans.read().unwrap().get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            let mut plan = hit.clone();
+            plan.name = layer.name.clone();
+            return plan;
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let plan = map_layer(layer, prec, chip);
+        // A racing worker may have inserted the same key meanwhile; both
+        // computed identical values, so last-write-wins is harmless.
+        self.plans.write().unwrap().insert(key, plan.clone());
+        plan
+    }
+
+    /// Cached [`crate::mapper::map_network`]: one lookup per layer.
+    pub fn map_network(
+        &self,
+        net: &Network,
+        chip: &ChipConfig,
+        cfg: &PrecisionConfig,
+    ) -> NetworkPlan {
+        let per_layer = cfg.for_network(net);
+        let layers = net
+            .layers
+            .iter()
+            .zip(per_layer)
+            .map(|(layer, prec)| self.map_layer(layer, prec, chip))
+            .collect();
+        NetworkPlan { net_name: net.name.clone(), layers }
+    }
+
+    /// Snapshot of the hit/miss counters and stored-entry count.
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            entries: self.plans.read().unwrap().len(),
+        }
+    }
+
+    /// Number of distinct plans stored.
+    pub fn len(&self) -> usize {
+        self.plans.read().unwrap().len()
+    }
+
+    /// True when nothing has been cached yet.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Drop every stored plan and reset the counters.
+    pub fn clear(&self) {
+        self.plans.write().unwrap().clear();
+        self.hits.store(0, Ordering::Relaxed);
+        self.misses.store(0, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mapper::map_network;
+    use crate::model::zoo;
+
+    fn assert_plans_identical(a: &LayerPlan, b: &LayerPlan) {
+        assert_eq!(a.name, b.name);
+        assert_eq!(a.kind, b.kind);
+        assert_eq!(a.steps, b.steps);
+        assert_eq!(a.caps_used, b.caps_used);
+        assert_eq!(a.latency_events, b.latency_events);
+        assert_eq!(a.energy_cells, b.energy_cells);
+        assert_eq!(a.mesh_bits, b.mesh_bits);
+        assert_eq!(a.mesh_bits_critical, b.mesh_bits_critical);
+        assert_eq!(a.map_cells, b.map_cells);
+    }
+
+    #[test]
+    fn cached_plans_match_direct_mapping_exactly() {
+        let net = zoo::resnet18();
+        let chip = ChipConfig::lr();
+        let cache = PlanCache::new();
+        for bits in [2u32, 5, 8] {
+            let cfg = PrecisionConfig::fixed(bits, net.weight_layers());
+            let direct = map_network(&net, &chip, &cfg);
+            let cached = cache.map_network(&net, &chip, &cfg);
+            assert_eq!(direct.layers.len(), cached.layers.len());
+            for (d, c) in direct.layers.iter().zip(&cached.layers) {
+                assert_plans_identical(d, c);
+            }
+            // Second pass must hit for every layer and stay identical.
+            let again = cache.map_network(&net, &chip, &cfg);
+            for (d, c) in direct.layers.iter().zip(&again.layers) {
+                assert_plans_identical(d, c);
+            }
+        }
+        let stats = cache.stats();
+        assert!(stats.hits > 0, "{stats:?}");
+        assert!(stats.hit_rate() > 0.0 && stats.hit_rate() < 1.0);
+    }
+
+    #[test]
+    fn sweep_stores_at_most_unique_layer_bits_plans() {
+        // The tentpole claim: a whole per-layer bits sweep needs only
+        // O(unique layer × bits) plans, not O(configs × layers).
+        let net = zoo::alexnet();
+        let chip = ChipConfig::lr();
+        let cache = PlanCache::new();
+        let mut rng = crate::util::rng::Rng::new(11);
+        for _ in 0..40 {
+            let bits: Vec<u32> =
+                (0..net.weight_layers()).map(|_| 2 + rng.below(7) as u32).collect();
+            let cfg = PrecisionConfig::from_bits("r", &bits);
+            cache.map_network(&net, &chip, &cfg);
+        }
+        // 7 candidate widths per layer bounds the cache (structurally
+        // identical layers shrink it further).
+        assert!(
+            cache.len() <= 7 * net.layers.len(),
+            "cache holds {} > {}",
+            cache.len(),
+            7 * net.layers.len()
+        );
+        let stats = cache.stats();
+        assert!(stats.hit_rate() > 0.5, "hit rate {:.2}", stats.hit_rate());
+    }
+
+    #[test]
+    fn different_chips_do_not_share_plans() {
+        let net = zoo::alexnet();
+        let cfg = PrecisionConfig::fixed(8, net.weight_layers());
+        let lr = ChipConfig::lr();
+        let ir = ChipConfig::ir_for(&net);
+        let cache = PlanCache::new();
+        let on_lr = cache.map_network(&net, &lr, &cfg);
+        let on_ir = cache.map_network(&net, &ir, &cfg);
+        let direct_ir = map_network(&net, &ir, &cfg);
+        for (c, d) in on_ir.layers.iter().zip(&direct_ir.layers) {
+            assert_plans_identical(c, d);
+        }
+        // IR never time-folds, LR does on at least one AlexNet layer — the
+        // cache must have kept them apart.
+        assert!(on_lr.layers.iter().any(|l| l.steps > 1));
+        assert!(on_ir.layers.iter().filter(|l| l.kind == crate::mapper::WorkKind::Gemm).all(|l| l.steps == 1));
+    }
+
+    #[test]
+    fn clear_resets_everything() {
+        let net = zoo::alexnet();
+        let chip = ChipConfig::lr();
+        let cache = PlanCache::new();
+        let cfg = PrecisionConfig::fixed(4, net.weight_layers());
+        cache.map_network(&net, &chip, &cfg);
+        assert!(!cache.is_empty());
+        cache.clear();
+        assert!(cache.is_empty());
+        assert_eq!(cache.stats(), CacheStats::default());
+    }
+}

@@ -19,6 +19,12 @@
 //! ([`crate::sim`]) converts these to seconds and joules under a
 //! [`crate::ap::tech::Tech`].
 
+pub mod cache;
+
+pub use cache::{CacheStats, PlanCache, PlanKey};
+
+use std::sync::Arc;
+
 use crate::ap::runtime_model as rt;
 use crate::ap::{clog2, ApKind, CellEvents, Events};
 use crate::arch::ChipConfig;
@@ -108,9 +114,12 @@ impl WorkKind {
 }
 
 /// Structural cost of one mapped layer.
+///
+/// Cloning is cheap by design — every field is `Copy` except the interned
+/// `Arc<str>` name — which is what makes [`PlanCache`] hits nearly free.
 #[derive(Debug, Clone)]
 pub struct LayerPlan {
-    pub name: String,
+    pub name: Arc<str>,
     pub kind: WorkKind,
     /// Time-folding steps (1 in IR for every paper workload).
     pub steps: u64,
@@ -455,7 +464,7 @@ mod tests {
         // AlexNet fc6: j = 9216 > 4800 rows -> cross-CAP combine.
         let net = zoo::alexnet();
         let plan = lr_plan(&net, 8);
-        let fc6 = plan.layers.iter().find(|l| l.name == "fc6").unwrap();
+        let fc6 = plan.layers.iter().find(|l| &*l.name == "fc6").unwrap();
         assert_eq!(fc6.kind, WorkKind::Gemm);
         assert!(fc6.latency_events.reduce.time_units() > 0);
     }

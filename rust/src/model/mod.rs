@@ -10,8 +10,10 @@
 pub mod gemm;
 pub mod zoo;
 
+use std::sync::Arc;
+
 /// A 3-D feature-map shape (height, width, channels).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct Shape {
     pub h: u64,
     pub w: u64,
@@ -32,7 +34,7 @@ impl Shape {
 
 /// One network layer. Each layer carries its input shape; chain consistency
 /// is validated by [`Network::validate`].
-#[derive(Debug, Clone, PartialEq)]
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub enum LayerKind {
     /// 2-D convolution with `out_c` kernels of `k x k x (in.c / groups)`,
     /// given stride and symmetric zero padding (`groups > 1` models
@@ -57,7 +59,11 @@ pub enum LayerKind {
 /// layer list.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Layer {
-    pub name: String,
+    /// Interned layer name: an `Arc<str>` so the mapper and simulator can
+    /// label per-layer results without re-allocating a `String` per
+    /// simulation point (the DSE hot path maps every layer thousands of
+    /// times per sweep).
+    pub name: Arc<str>,
     pub input: Shape,
     pub kind: LayerKind,
     pub from: Option<usize>,

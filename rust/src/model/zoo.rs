@@ -24,7 +24,7 @@ impl Builder {
         self.layers.len() - 1
     }
 
-    fn push(&mut self, name: String, kind: LayerKind, from: Option<usize>) -> usize {
+    fn push(&mut self, name: std::sync::Arc<str>, kind: LayerKind, from: Option<usize>) -> usize {
         let input = match from {
             None => self.cur,
             Some(src) => self.layers[src].output(),

@@ -14,7 +14,7 @@ pub mod sweep;
 use crate::model::Network;
 
 /// Weight / activation bitwidths of one layer.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct LayerPrec {
     /// Weight bits.
     pub w: u32,

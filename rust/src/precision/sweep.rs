@@ -72,6 +72,23 @@ pub fn fig7_targets() -> Vec<f64> {
     (2..=8).map(|b| b as f64).collect()
 }
 
+/// Flattened sweep: every (target, config) pair in deterministic order —
+/// exactly [`sweep_groups`]' configs, ungrouped. This is the shape
+/// [`crate::sim::SweepEngine::run`] fans out directly: one independent
+/// simulation point per element, groups recoverable as consecutive
+/// `count`-sized chunks.
+pub fn sweep_flat(
+    n_layers: usize,
+    targets: &[f64],
+    count: usize,
+    seed: u64,
+) -> Vec<(f64, PrecisionConfig)> {
+    sweep_groups(n_layers, targets, count, seed)
+        .into_iter()
+        .flat_map(|(t, cfgs)| cfgs.into_iter().map(move |c| (t, c)))
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -114,6 +131,21 @@ mod tests {
             assert_eq!(cfgs.len(), 5);
             for c in cfgs {
                 assert!((c.avg_bits() - t).abs() < 0.6, "target {t} avg {}", c.avg_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn sweep_flat_matches_groups_order() {
+        let groups = sweep_groups(12, &fig7_targets(), 3, 9);
+        let flat = sweep_flat(12, &fig7_targets(), 3, 9);
+        assert_eq!(flat.len(), groups.len() * 3);
+        let mut i = 0;
+        for (t, cfgs) in &groups {
+            for c in cfgs {
+                assert_eq!(flat[i].0, *t);
+                assert_eq!(&flat[i].1, c);
+                i += 1;
             }
         }
     }

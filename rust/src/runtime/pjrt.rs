@@ -1,0 +1,123 @@
+//! The real PJRT-backed runtime (requires the `pjrt` cargo feature and a
+//! vendored `xla` crate — see the module docs of [`super`]).
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use super::manifest::{ArtifactEntry, Manifest};
+use crate::util::error::{anyhow, Context, Result};
+
+/// A compiled serving executable for one (config, batch) pair.
+struct Compiled {
+    exe: xla::PjRtLoadedExecutable,
+    entry: ArtifactEntry,
+}
+
+/// The serve-time runtime: a PJRT CPU client plus every compiled artifact.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    compiled: HashMap<(String, u64), Compiled>,
+}
+
+impl Runtime {
+    /// Load `<dir>/manifest.json` and compile every artifact it lists.
+    pub fn load(dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(dir)?;
+        Self::from_manifest(manifest)
+    }
+
+    /// Compile every artifact of an already-parsed manifest.
+    pub fn from_manifest(manifest: Manifest) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e}"))?;
+        let mut compiled = HashMap::new();
+        for entry in &manifest.artifacts {
+            let path = manifest.dir.join(&entry.file);
+            let exe = Self::compile_file(&client, &path)
+                .with_context(|| format!("compiling {}", path.display()))?;
+            compiled.insert((entry.config.clone(), entry.batch), Compiled {
+                exe,
+                entry: entry.clone(),
+            });
+        }
+        Ok(Runtime { client, manifest, compiled })
+    }
+
+    /// Load + compile only the artifacts for the given config names (used
+    /// by tests and latency-sensitive startups).
+    pub fn load_configs(dir: &Path, configs: &[&str]) -> Result<Runtime> {
+        let mut manifest = Manifest::load(dir)?;
+        manifest.artifacts.retain(|a| configs.contains(&a.config.as_str()));
+        Self::from_manifest(manifest)
+    }
+
+    fn compile_file(client: &xla::PjRtClient, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parsing HLO text: {e}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        client.compile(&comp).map_err(|e| anyhow!("pjrt compile: {e}"))
+    }
+
+    /// The manifest this runtime serves.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// PJRT platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compiled (config, batch) pairs.
+    pub fn compiled_keys(&self) -> Vec<(String, u64)> {
+        let mut keys: Vec<_> = self.compiled.keys().cloned().collect();
+        keys.sort();
+        keys
+    }
+
+    /// Execute one inference: `input` is a row-major `f32` batch of shape
+    /// `(batch, H, W, C)`; returns the `(batch, num_classes)` logits.
+    ///
+    /// `input.len()` must equal `batch * H * W * C` for the *compiled*
+    /// batch size — use [`Manifest::batch_for`] + [`super::pad_batch`] to
+    /// fit a partial batch.
+    pub fn infer(&self, config: &str, batch: u64, input: &[f32]) -> Result<Vec<f32>> {
+        let compiled = self
+            .compiled
+            .get(&(config.to_string(), batch))
+            .ok_or_else(|| anyhow!("no compiled artifact for ({config}, batch {batch})"))?;
+        let want = batch as usize * self.manifest.sample_elems();
+        if input.len() != want {
+            return Err(anyhow!(
+                "input has {} elements, executable expects {want}",
+                input.len()
+            ));
+        }
+        let (h, w, c) = self.manifest.input_shape;
+        let lit = xla::Literal::vec1(input)
+            .reshape(&[batch as i64, h as i64, w as i64, c as i64])
+            .map_err(|e| anyhow!("reshape input: {e}"))?;
+        let result = compiled
+            .exe
+            .execute::<xla::Literal>(&[lit])
+            .map_err(|e| anyhow!("pjrt execute: {e}"))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch output: {e}"))?
+            .to_tuple1()
+            .map_err(|e| anyhow!("unwrap tuple: {e}"))?;
+        out.to_vec::<f32>().map_err(|e| anyhow!("read logits: {e}"))
+    }
+
+    /// Accuracy recorded at export time for a config.
+    pub fn accuracy(&self, config: &str) -> Option<f64> {
+        self.manifest.accuracies.get(config).copied()
+    }
+
+    /// The artifact entry behind a compiled pair.
+    pub fn entry(&self, config: &str, batch: u64) -> Option<&ArtifactEntry> {
+        self.compiled.get(&(config.to_string(), batch)).map(|c| &c.entry)
+    }
+}

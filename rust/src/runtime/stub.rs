@@ -1,0 +1,83 @@
+//! Stub runtime used when the crate is built without the `pjrt` feature
+//! (the offline vendor set has no `xla` crate). The API matches
+//! [`super::pjrt::Runtime`] exactly so the coordinator, benches, and
+//! examples compile unchanged; loading artifacts fails with a clear error
+//! at run time, which the artifact-gated tests and demos already treat as
+//! "skip".
+
+use std::path::Path;
+
+use super::manifest::{ArtifactEntry, Manifest};
+use crate::util::error::{anyhow, Result};
+
+const UNAVAILABLE: &str = "built without the `pjrt` feature: vendor the `xla` crate and rebuild \
+                           with `--features pjrt` to compile and execute AOT artifacts";
+
+/// Feature-gated stand-in for the PJRT runtime.
+pub struct Runtime {
+    manifest: Manifest,
+}
+
+impl Runtime {
+    /// Load `<dir>/manifest.json` and compile every artifact it lists.
+    pub fn load(dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(dir)?;
+        Self::from_manifest(manifest)
+    }
+
+    /// Compile every artifact of an already-parsed manifest.
+    pub fn from_manifest(manifest: Manifest) -> Result<Runtime> {
+        let _ = manifest;
+        Err(anyhow!("{}", UNAVAILABLE))
+    }
+
+    /// Load + compile only the artifacts for the given config names.
+    pub fn load_configs(dir: &Path, configs: &[&str]) -> Result<Runtime> {
+        let mut manifest = Manifest::load(dir)?;
+        manifest.artifacts.retain(|a| configs.contains(&a.config.as_str()));
+        Self::from_manifest(manifest)
+    }
+
+    /// The manifest this runtime serves.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// PJRT platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        "unavailable (pjrt feature disabled)".to_string()
+    }
+
+    /// Compiled (config, batch) pairs — always empty in the stub.
+    pub fn compiled_keys(&self) -> Vec<(String, u64)> {
+        Vec::new()
+    }
+
+    /// Execute one inference — always an error in the stub.
+    pub fn infer(&self, config: &str, batch: u64, _input: &[f32]) -> Result<Vec<f32>> {
+        Err(anyhow!("cannot execute ({config}, batch {batch}): {}", UNAVAILABLE))
+    }
+
+    /// Accuracy recorded at export time for a config.
+    pub fn accuracy(&self, config: &str) -> Option<f64> {
+        self.manifest.accuracies.get(config).copied()
+    }
+
+    /// The artifact entry behind a compiled pair — always `None` here.
+    pub fn entry(&self, _config: &str, _batch: u64) -> Option<&ArtifactEntry> {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_manifest_reports_missing_backend() {
+        let m = Manifest::parse(super::super::manifest::TEST_MANIFEST, Path::new("/tmp/a"))
+            .expect("test manifest parses");
+        let err = Runtime::from_manifest(m).expect_err("stub must not compile artifacts");
+        assert!(err.to_string().contains("pjrt"), "{err}");
+    }
+}

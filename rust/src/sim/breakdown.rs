@@ -5,7 +5,7 @@
 //! breaks GEMM latency into populate / multiply / reduce / readout phases
 //! and shows that **reduction**, not multiplication, is the bottleneck.
 
-use super::InferenceReport;
+use super::{InferenceReport, SweepEngine, SweepPoint};
 use crate::mapper::{PhaseTable, WorkKind};
 
 /// One named share of a breakdown.
@@ -71,6 +71,30 @@ pub fn fraction_of(shares: &[Share], label: &str) -> f64 {
     shares.iter().find(|s| s.label == label).map(|s| s.fraction).unwrap_or(0.0)
 }
 
+/// Both Fig. 8 breakdowns of one report.
+#[derive(Debug, Clone)]
+pub struct Breakdowns {
+    /// Fig. 8a — total energy by work category (+ interconnect).
+    pub energy_by_kind: Vec<Share>,
+    /// Fig. 8b — GEMM latency by phase.
+    pub gemm_latency_by_phase: Vec<Share>,
+}
+
+/// Compute both breakdowns for one report.
+pub fn breakdowns(r: &InferenceReport) -> Breakdowns {
+    Breakdowns {
+        energy_by_kind: energy_by_kind(r),
+        gemm_latency_by_phase: gemm_latency_by_phase(r),
+    }
+}
+
+/// Fan a batch of simulation points through a [`SweepEngine`] and break
+/// each resulting report down — the engine-powered path behind
+/// `benches/fig8_breakdowns`. Results come back in input order.
+pub fn breakdowns_many(engine: &SweepEngine, points: &[SweepPoint]) -> Vec<Breakdowns> {
+    engine.run(points).iter().map(breakdowns).collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -126,5 +150,18 @@ mod tests {
     fn fraction_of_missing_label_is_zero() {
         let r = vgg_report();
         assert_eq!(fraction_of(&energy_by_kind(&r), "Nope"), 0.0);
+    }
+
+    #[test]
+    fn engine_breakdowns_match_direct() {
+        let net = zoo::resnet18();
+        let cfg = PrecisionConfig::fixed(8, net.weight_layers());
+        let params = SimParams::lr_sram();
+        let direct = breakdowns(&simulate(&net, &cfg, &params));
+        let engine = SweepEngine::new();
+        let many = breakdowns_many(&engine, &[SweepPoint::new(&net, &cfg, &params)]);
+        assert_eq!(many.len(), 1);
+        assert_eq!(many[0].energy_by_kind, direct.energy_by_kind);
+        assert_eq!(many[0].gemm_latency_by_phase, direct.gemm_latency_by_phase);
     }
 }

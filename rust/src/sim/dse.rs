@@ -5,11 +5,12 @@
 //! the corresponding bench targets (`fig6_tech_ratios`, `fig7_dse`) render
 //! them as tables.
 
-use super::{simulate, InferenceReport, SimParams};
+use super::{SimParams, SweepEngine, SweepPoint};
 use crate::ap::tech::Tech;
 use crate::arch::HwConfig;
-use crate::model::Network;
+use crate::model::{zoo, Network};
 use crate::precision::{sweep, PrecisionConfig};
+use crate::util::rng::Rng;
 use crate::util::stats;
 
 /// One Fig. 6 point: ReRAM-to-SRAM ratios at a fixed precision on VGG16.
@@ -27,11 +28,29 @@ pub struct Fig6Row {
 /// Fig. 6 — ReRAM/SRAM energy & latency ratios for fixed precisions
 /// 2..=8, end-to-end inference on `net` (the paper uses VGG16, LR).
 pub fn fig6_tech_ratios(net: &Network) -> Vec<Fig6Row> {
-    (2..=8)
-        .map(|bits| {
-            let cfg = PrecisionConfig::fixed(bits, net.weight_layers());
-            let s = simulate(net, &cfg, &SimParams::new(HwConfig::Lr, Tech::sram()));
-            let r = simulate(net, &cfg, &SimParams::new(HwConfig::Lr, Tech::reram()));
+    fig6_tech_ratios_with(&SweepEngine::new(), net)
+}
+
+/// [`fig6_tech_ratios`] on a caller-provided [`SweepEngine`]. The SRAM and
+/// ReRAM points of each precision share cached layer plans (the cell
+/// technology only enters the cost conversion, not the mapping), so the
+/// engine maps each (layer, bits) pair exactly once.
+pub fn fig6_tech_ratios_with(engine: &SweepEngine, net: &Network) -> Vec<Fig6Row> {
+    let cfgs: Vec<PrecisionConfig> =
+        (2..=8).map(|bits| PrecisionConfig::fixed(bits, net.weight_layers())).collect();
+    let sram = SimParams::new(HwConfig::Lr, Tech::sram());
+    let reram = SimParams::new(HwConfig::Lr, Tech::reram());
+    let mut points = Vec::with_capacity(2 * cfgs.len());
+    for cfg in &cfgs {
+        points.push(SweepPoint::new(net, cfg, &sram));
+        points.push(SweepPoint::new(net, cfg, &reram));
+    }
+    let reports = engine.run(&points);
+    reports
+        .chunks_exact(2)
+        .zip(2u32..=8)
+        .map(|(pair, bits)| {
+            let (s, r) = (&pair[0], &pair[1]);
             Fig6Row {
                 bits,
                 energy_ratio: r.energy_j() / s.energy_j(),
@@ -67,28 +86,62 @@ pub const COMBOS_PER_TARGET: usize = 5;
 /// Fig. 7 — energy / latency / GOPS/W/mm² vs average precision for one
 /// network on one hardware configuration (SRAM).
 pub fn fig7_series(net: &Network, hw: HwConfig, seed: u64) -> Vec<Fig7Point> {
+    fig7_series_with(&SweepEngine::new(), net, hw, seed)
+}
+
+/// [`fig7_series`] on a caller-provided [`SweepEngine`]: all
+/// `targets × COMBOS_PER_TARGET` combination points fan out across the
+/// engine's workers in one batch, and repeated (layer, bits) pairs — only
+/// 7 candidate widths exist per layer — come out of the plan cache.
+pub fn fig7_series_with(
+    engine: &SweepEngine,
+    net: &Network,
+    hw: HwConfig,
+    seed: u64,
+) -> Vec<Fig7Point> {
     let params = SimParams::new(hw, Tech::sram());
-    let groups =
-        sweep::sweep_groups(net.weight_layers(), &sweep::fig7_targets(), COMBOS_PER_TARGET, seed);
-    groups
-        .into_iter()
-        .map(|(target, cfgs)| {
-            let reports: Vec<InferenceReport> =
-                cfgs.iter().map(|c| simulate(net, c, &params)).collect();
-            let energies: Vec<f64> = reports.iter().map(|r| r.energy_j()).collect();
-            let latencies: Vec<f64> = reports.iter().map(|r| r.latency_s()).collect();
-            let effs: Vec<f64> = reports.iter().map(|r| r.gops_per_w_mm2()).collect();
+    let flat =
+        sweep::sweep_flat(net.weight_layers(), &sweep::fig7_targets(), COMBOS_PER_TARGET, seed);
+    let points: Vec<SweepPoint> =
+        flat.iter().map(|(_, cfg)| SweepPoint::new(net, cfg, &params)).collect();
+    let reports = engine.run(&points);
+    flat.chunks_exact(COMBOS_PER_TARGET)
+        .zip(reports.chunks_exact(COMBOS_PER_TARGET))
+        .map(|(group, rs)| {
+            let energies: Vec<f64> = rs.iter().map(|r| r.energy_j()).collect();
+            let latencies: Vec<f64> = rs.iter().map(|r| r.latency_s()).collect();
+            let effs: Vec<f64> = rs.iter().map(|r| r.gops_per_w_mm2()).collect();
             Fig7Point {
                 net_name: net.name.clone(),
                 hw,
-                avg_bits: target,
+                avg_bits: group[0].0,
                 energy_j: stats::mean(&energies),
                 latency_s: stats::mean(&latencies),
                 gops_per_w_mm2: stats::mean(&effs),
-                samples: reports.len(),
+                samples: rs.len(),
             }
         })
         .collect()
+}
+
+/// The fixed perf-tracking DSE workload: the 3 ImageNet benchmarks × 5
+/// random per-layer configurations each (seed 9 — the seed repo's
+/// historical batch, kept byte-stable so timings stay comparable
+/// PR-over-PR). Shared by `benches/perf_hotpath` and `benches/ablations`
+/// so their "same 15 points" cross-attribution can never drift apart.
+/// Returns the networks plus (network index, config) pairs.
+pub fn perf_dse_batch() -> (Vec<Network>, Vec<(usize, PrecisionConfig)>) {
+    let nets = zoo::imagenet_benchmarks();
+    let mut rng = Rng::new(9);
+    let mut cfgs = Vec::new();
+    for (i, net) in nets.iter().enumerate() {
+        for _ in 0..5 {
+            let bits: Vec<u32> =
+                (0..net.weight_layers()).map(|_| 2 + rng.below(7) as u32).collect();
+            cfgs.push((i, PrecisionConfig::from_bits("r", &bits)));
+        }
+    }
+    (nets, cfgs)
 }
 
 /// §V-A "Voltage Scaling" — relative energy saving from dropping V_DD to
@@ -96,11 +149,16 @@ pub fn fig7_series(net: &Network, hw: HwConfig, seed: u64) -> Vec<Fig7Point> {
 /// as in the paper: compare energy is the dominant, unscalable term).
 pub fn voltage_scaling_saving(net: &Network, bits: u32) -> f64 {
     let cfg = PrecisionConfig::fixed(bits, net.weight_layers());
-    let nominal = simulate(net, &cfg, &SimParams::new(HwConfig::Lr, Tech::sram()));
     let mut scaled_tech = Tech::sram();
     scaled_tech.e_write_cell = crate::ap::tech::E_WRITE_SRAM_SCALED;
-    let scaled = simulate(net, &cfg, &SimParams::new(HwConfig::Lr, scaled_tech));
-    1.0 - scaled.energy_j() / nominal.energy_j()
+    let nominal_p = SimParams::new(HwConfig::Lr, Tech::sram());
+    let scaled_p = SimParams::new(HwConfig::Lr, scaled_tech);
+    // Both points share one plan per layer — only the write energy differs.
+    let reports = SweepEngine::new().run(&[
+        SweepPoint::new(net, &cfg, &nominal_p),
+        SweepPoint::new(net, &cfg, &scaled_p),
+    ]);
+    1.0 - reports[1].energy_j() / reports[0].energy_j()
 }
 
 #[cfg(test)]

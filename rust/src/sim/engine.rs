@@ -1,0 +1,286 @@
+//! The sweep engine — batch simulation with plan caching and parallel
+//! fan-out (the DSE hot path's execution substrate).
+//!
+//! Every paper-level result (Figs. 6–8, Table VII, the HAWQ bit-fluid
+//! study) is a sweep: thousands of independent `simulate()` points over
+//! precision/hardware coordinates. [`SweepEngine`] runs such sweeps
+//!
+//! * **memoized** — all points share one [`PlanCache`], so mapping work is
+//!   `O(unique layer × bits × chip)` instead of `O(points × layers)`;
+//! * **parallel** — points fan out across `std::thread::scope` workers
+//!   (an atomic work queue, no work item ever computed twice);
+//! * **deterministic** — results come back in input order, and every
+//!   report is bit-identical to a direct [`simulate`] call: workers run
+//!   the same pure function on the same inputs, so neither thread count
+//!   nor cache state can change a single bit of the output.
+//!
+//! Chip configurations are resolved once per (hardware config, network)
+//! and shared across that network's points, removing the per-point
+//! `ChipConfig::for_network` scan *and* guaranteeing all points of a
+//! network agree on their cache keys.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::thread;
+
+use super::{simulate_with_cache, InferenceReport, SimParams};
+use crate::arch::{ChipConfig, HwConfig};
+use crate::mapper::{CacheStats, PlanCache};
+use crate::model::Network;
+use crate::precision::PrecisionConfig;
+
+/// One independent simulation point of a sweep.
+#[derive(Clone, Copy)]
+pub struct SweepPoint<'a> {
+    pub net: &'a Network,
+    pub cfg: &'a PrecisionConfig,
+    pub params: SimParams,
+    /// Explicit chip override (geometry ablations); `None` derives the
+    /// chip from `params.hw` + `net`, memoized per network.
+    pub chip: Option<&'a ChipConfig>,
+}
+
+impl<'a> SweepPoint<'a> {
+    /// A point on the standard chip for `params.hw`.
+    pub fn new(net: &'a Network, cfg: &'a PrecisionConfig, params: &SimParams) -> Self {
+        Self { net, cfg, params: *params, chip: None }
+    }
+
+    /// A point on an explicit chip (ablations that vary geometry).
+    pub fn on_chip(
+        net: &'a Network,
+        cfg: &'a PrecisionConfig,
+        params: &SimParams,
+        chip: &'a ChipConfig,
+    ) -> Self {
+        Self { net, cfg, params: *params, chip: Some(chip) }
+    }
+}
+
+/// A reusable sweep runner: one plan cache + a worker-thread budget.
+///
+/// Reuse one engine across related sweeps (e.g. all of Fig. 7's series):
+/// the cache carries over, so later sweeps start warm.
+#[derive(Debug)]
+pub struct SweepEngine {
+    cache: PlanCache,
+    threads: usize,
+}
+
+impl Default for SweepEngine {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SweepEngine {
+    /// Engine with one worker per available CPU.
+    pub fn new() -> Self {
+        Self::with_threads(default_threads())
+    }
+
+    /// Engine that runs points on the calling thread only (still cached).
+    pub fn serial() -> Self {
+        Self::with_threads(1)
+    }
+
+    /// Engine with an explicit worker count (clamped to ≥ 1).
+    pub fn with_threads(threads: usize) -> Self {
+        Self { cache: PlanCache::new(), threads: threads.max(1) }
+    }
+
+    /// Worker-thread budget.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// The shared plan cache (for stats or pre-warming).
+    pub fn cache(&self) -> &PlanCache {
+        &self.cache
+    }
+
+    /// Shorthand for `self.cache().stats()`.
+    pub fn cache_stats(&self) -> CacheStats {
+        self.cache.stats()
+    }
+
+    /// Simulate every point, returning reports **in input order**. Points
+    /// are independent; each is computed exactly once, on whichever worker
+    /// pulls it first.
+    pub fn run(&self, points: &[SweepPoint]) -> Vec<InferenceReport> {
+        let chips = self.resolve_chips(points);
+        let n = points.len();
+        let workers = self.threads.min(n);
+        if workers <= 1 {
+            return points
+                .iter()
+                .zip(&chips)
+                .map(|(p, chip)| simulate_with_cache(p.net, p.cfg, &p.params, chip, &self.cache))
+                .collect();
+        }
+
+        let next = AtomicUsize::new(0);
+        let (tx, rx) = mpsc::channel::<(usize, InferenceReport)>();
+        thread::scope(|s| {
+            for _ in 0..workers {
+                let tx = tx.clone();
+                let next = &next;
+                let chips = &chips;
+                let cache = &self.cache;
+                s.spawn(move || loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let p = &points[i];
+                    let report = simulate_with_cache(p.net, p.cfg, &p.params, &chips[i], cache);
+                    if tx.send((i, report)).is_err() {
+                        break;
+                    }
+                });
+            }
+        });
+        drop(tx);
+
+        let mut slots: Vec<Option<InferenceReport>> = (0..n).map(|_| None).collect();
+        for (i, report) in rx {
+            slots[i] = Some(report);
+        }
+        slots
+            .into_iter()
+            .map(|r| r.expect("every sweep point produces exactly one report"))
+            .collect()
+    }
+
+    /// Convenience: one (net, cfg) pair per point at a common `params`.
+    pub fn run_configs(
+        &self,
+        net: &Network,
+        cfgs: &[PrecisionConfig],
+        params: &SimParams,
+    ) -> Vec<InferenceReport> {
+        let points: Vec<SweepPoint> =
+            cfgs.iter().map(|c| SweepPoint::new(net, c, params)).collect();
+        self.run(&points)
+    }
+
+    /// Resolve each point's chip, building `ChipConfig::for_network` at
+    /// most once per (hw, network) so same-network points share one chip.
+    fn resolve_chips(&self, points: &[SweepPoint]) -> Vec<ChipConfig> {
+        let mut memo: HashMap<(HwConfig, usize), ChipConfig> = HashMap::new();
+        points
+            .iter()
+            .map(|p| match p.chip {
+                Some(chip) => *chip,
+                None => *memo
+                    .entry((p.params.hw, p.net as *const Network as usize))
+                    .or_insert_with(|| ChipConfig::for_network(p.params.hw, p.net)),
+            })
+            .collect()
+    }
+}
+
+/// Simulate a batch of points with a fresh default engine.
+pub fn simulate_many(points: &[SweepPoint]) -> Vec<InferenceReport> {
+    SweepEngine::new().run(points)
+}
+
+fn default_threads() -> usize {
+    thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ap::tech::Tech;
+    use crate::model::zoo;
+    use crate::sim::simulate;
+
+    fn points_for<'a>(
+        net: &'a Network,
+        cfgs: &'a [PrecisionConfig],
+        params: &SimParams,
+    ) -> Vec<SweepPoint<'a>> {
+        cfgs.iter().map(|c| SweepPoint::new(net, c, params)).collect()
+    }
+
+    #[test]
+    fn engine_matches_direct_simulate_bit_for_bit() {
+        let net = zoo::alexnet();
+        let params = SimParams::lr_sram();
+        let cfgs: Vec<PrecisionConfig> =
+            (2..=8).map(|b| PrecisionConfig::fixed(b, net.weight_layers())).collect();
+        let points = points_for(&net, &cfgs, &params);
+        let engine = SweepEngine::new();
+        let reports = engine.run(&points);
+        assert_eq!(reports.len(), cfgs.len());
+        for (r, cfg) in reports.iter().zip(&cfgs) {
+            let direct = simulate(&net, cfg, &params);
+            assert_eq!(r.energy_j().to_bits(), direct.energy_j().to_bits());
+            assert_eq!(r.latency_s().to_bits(), direct.latency_s().to_bits());
+            assert_eq!(r.cfg_name, direct.cfg_name);
+        }
+    }
+
+    #[test]
+    fn parallel_and_serial_orders_agree() {
+        let nets = [zoo::alexnet(), zoo::resnet18()];
+        let params = SimParams::new(HwConfig::Lr, Tech::reram());
+        let cfgs: Vec<PrecisionConfig> =
+            (2..=8).map(|b| PrecisionConfig::fixed(b, nets[0].weight_layers())).collect();
+        let mut points = Vec::new();
+        for net in &nets {
+            for cfg in &cfgs {
+                points.push(SweepPoint::new(net, cfg, &params));
+            }
+        }
+        let serial = SweepEngine::serial().run(&points);
+        let parallel = SweepEngine::with_threads(4).run(&points);
+        assert_eq!(serial.len(), parallel.len());
+        for (s, p) in serial.iter().zip(&parallel) {
+            assert_eq!(s.net_name, p.net_name);
+            assert_eq!(s.cfg_name, p.cfg_name);
+            assert_eq!(s.energy_j().to_bits(), p.energy_j().to_bits());
+            assert_eq!(s.latency_s().to_bits(), p.latency_s().to_bits());
+        }
+    }
+
+    #[test]
+    fn repeated_runs_hit_the_cache() {
+        let net = zoo::resnet18();
+        let params = SimParams::lr_sram();
+        let cfgs: Vec<PrecisionConfig> =
+            (2..=8).map(|b| PrecisionConfig::fixed(b, net.weight_layers())).collect();
+        let engine = SweepEngine::new();
+        engine.run(&points_for(&net, &cfgs, &params));
+        let after_first = engine.cache_stats();
+        engine.run(&points_for(&net, &cfgs, &params));
+        let after_second = engine.cache_stats();
+        assert_eq!(after_first.entries, after_second.entries, "no new plans on rerun");
+        assert!(
+            after_second.hits >= after_first.hits + (net.layers.len() * cfgs.len()) as u64,
+            "{after_first:?} -> {after_second:?}"
+        );
+    }
+
+    #[test]
+    fn chip_override_is_respected() {
+        let net = zoo::alexnet();
+        let cfg = PrecisionConfig::fixed(8, net.weight_layers());
+        let params = SimParams::lr_sram();
+        let mut chip = ChipConfig::lr();
+        chip.mesh.e_bit_mm *= 4.0;
+        let points = [
+            SweepPoint::new(&net, &cfg, &params),
+            SweepPoint::on_chip(&net, &cfg, &params, &chip),
+        ];
+        let reports = SweepEngine::new().run(&points);
+        assert!(reports[1].energy_j() > reports[0].energy_j());
+    }
+
+    #[test]
+    fn empty_sweep_is_fine() {
+        assert!(SweepEngine::new().run(&[]).is_empty());
+    }
+}

@@ -21,10 +21,15 @@
 
 pub mod breakdown;
 pub mod dse;
+pub mod engine;
+
+pub use engine::{simulate_many, SweepEngine, SweepPoint};
+
+use std::sync::Arc;
 
 use crate::ap::tech::Tech;
 use crate::arch::{ChipConfig, HwConfig};
-use crate::mapper::{self, PhaseTable, WorkKind};
+use crate::mapper::{self, NetworkPlan, PhaseTable, PlanCache, WorkKind};
 use crate::model::Network;
 use crate::precision::PrecisionConfig;
 
@@ -58,7 +63,8 @@ impl SimParams {
 /// Per-layer simulated metrics.
 #[derive(Debug, Clone)]
 pub struct LayerMetrics {
-    pub name: String,
+    /// Layer name, shared (not re-allocated) with the model / plan.
+    pub name: Arc<str>,
     pub kind: WorkKind,
     /// Time-folding steps the LR mapping needed (1 on IR).
     pub steps: u64,
@@ -239,17 +245,45 @@ pub fn simulate_on(
     chip: &ChipConfig,
 ) -> InferenceReport {
     let plan = mapper::map_network(net, chip, cfg);
+    report_from_plan(net, cfg, params, chip, plan)
+}
+
+/// Simulate on an explicit chip, serving layer plans out of a
+/// [`PlanCache`]. Numerically **bit-identical** to [`simulate_on`] — the
+/// cache memoizes the pure `map_layer` function, and the cost conversion
+/// below is shared — but a warm cache skips all mapping work. This is the
+/// per-point body of [`SweepEngine::run`].
+pub fn simulate_with_cache(
+    net: &Network,
+    cfg: &PrecisionConfig,
+    params: &SimParams,
+    chip: &ChipConfig,
+    cache: &PlanCache,
+) -> InferenceReport {
+    let plan = cache.map_network(net, chip, cfg);
+    report_from_plan(net, cfg, params, chip, plan)
+}
+
+/// Convert a structural [`NetworkPlan`] to seconds/joules under `params` —
+/// the single cost-conversion path every simulate variant funnels through.
+fn report_from_plan(
+    net: &Network,
+    cfg: &PrecisionConfig,
+    params: &SimParams,
+    chip: &ChipConfig,
+    plan: NetworkPlan,
+) -> InferenceReport {
     let tech = params.tech;
     let layers = plan
         .layers
-        .iter()
+        .into_iter()
         .map(|lp| {
             let latency_phases = lp.latency_events.map_f64(|ev| tech.cycles(ev) / chip.freq_hz);
             let energy_phases = lp.energy_cells.map_f64(|c| tech.energy(c));
             let compute_s = latency_phases.total();
             let mesh_s = chip.mesh.latency_s(lp.mesh_bits_critical);
             LayerMetrics {
-                name: lp.name.clone(),
+                name: lp.name,
                 kind: lp.kind,
                 steps: lp.steps,
                 caps_used: lp.caps_used,

@@ -1,0 +1,118 @@
+//! Minimal `anyhow`-style error plumbing.
+//!
+//! The offline vendor set has no `anyhow`, so this module provides the
+//! small subset the crate uses: a message-carrying [`Error`] type, a
+//! [`Result`] alias whose error type defaults to it, an [`anyhow!`] macro
+//! building one from a format string (or any `Display` value), and a
+//! [`Context`] extension trait adding `.context(..)` / `.with_context(..)`
+//! to results.
+
+use std::fmt;
+
+/// A human-readable error: a message with any context prepended.
+#[derive(Debug, Clone)]
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build from a message.
+    pub fn msg(msg: impl Into<String>) -> Self {
+        Self { msg: msg.into() }
+    }
+
+    /// Wrap with an outer context message (`"context: cause"`).
+    pub fn context(self, ctx: impl fmt::Display) -> Self {
+        Self { msg: format!("{ctx}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<String> for Error {
+    fn from(s: String) -> Self {
+        Error::msg(s)
+    }
+}
+
+impl From<&str> for Error {
+    fn from(s: &str) -> Self {
+        Error::msg(s)
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::msg(e.to_string())
+    }
+}
+
+/// `Result` defaulting its error type to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding context to any displayable error.
+pub trait Context<T> {
+    /// Wrap the error with a fixed context message.
+    fn context(self, ctx: impl fmt::Display) -> Result<T>;
+    /// Wrap the error with a lazily-built context message.
+    fn with_context<C: fmt::Display>(self, f: impl FnOnce() -> C) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context(self, ctx: impl fmt::Display) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{ctx}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display>(self, f: impl FnOnce() -> C) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+/// Build an [`Error`] from a format string, or from any `Display` value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(, $arg:expr)* $(,)?) => {
+        $crate::util::error::Error::msg(format!($msg $(, $arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::util::error::Error::msg(format!("{}", $err))
+    };
+}
+
+pub use crate::anyhow;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn macro_formats_and_wraps() {
+        let e = anyhow!("bad value {} at {}", 3, "site");
+        assert_eq!(e.to_string(), "bad value 3 at site");
+        let s = String::from("plain");
+        let e = anyhow!(s);
+        assert_eq!(e.to_string(), "plain");
+    }
+
+    #[test]
+    fn context_chains_messages() {
+        let r: Result<(), String> = Err("inner".to_string());
+        let e = r.context("outer").unwrap_err();
+        assert_eq!(e.to_string(), "outer: inner");
+        let r: Result<(), String> = Err("inner".to_string());
+        let e = r.with_context(|| format!("lazy {}", 1)).unwrap_err();
+        assert_eq!(e.to_string(), "lazy 1: inner");
+    }
+
+    #[test]
+    fn boxes_as_std_error() {
+        let b: Box<dyn std::error::Error> = anyhow!("boom").into();
+        assert_eq!(b.to_string(), "boom");
+    }
+}

@@ -4,6 +4,7 @@
 //! `clap` or `rand`, so this module provides minimal, deterministic
 //! replacements:
 //!
+//! * [`error`] — an `anyhow`-shaped error type + `anyhow!` macro,
 //! * [`rng`] — an xorshift64* PRNG (deterministic, seedable),
 //! * [`stats`] — summary statistics (mean, percentiles, geomean),
 //! * [`table`] — fixed-width ASCII table rendering for bench reports,
@@ -12,6 +13,7 @@
 //!   counterexample reporting (seeded, reproducible).
 
 pub mod benchkit;
+pub mod error;
 pub mod json;
 pub mod proptest;
 pub mod rng;

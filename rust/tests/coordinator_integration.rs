@@ -1,5 +1,8 @@
 //! Live coordinator tests: dynamic batching + bit-fluid precision control
-//! over real PJRT execution. Requires `make artifacts`.
+//! over real PJRT execution. Requires `make artifacts` **and** a build
+//! with `--features pjrt` (the default stub runtime cannot load
+//! artifacts, so these tests only exist on the real backend).
+#![cfg(feature = "pjrt")]
 
 use std::path::{Path, PathBuf};
 use std::time::Duration;

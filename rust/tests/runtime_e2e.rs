@@ -1,5 +1,8 @@
 //! End-to-end PJRT runtime tests: compile the real AOT artifacts and run
-//! real numerics through them. Requires `make artifacts`.
+//! real numerics through them. Requires `make artifacts` **and** a build
+//! with `--features pjrt` — the default (stub) runtime fails every load,
+//! so without the feature gate these would panic whenever artifacts exist.
+#![cfg(feature = "pjrt")]
 
 use std::path::{Path, PathBuf};
 

@@ -1,0 +1,173 @@
+//! Sweep-engine consistency: the plan cache and the parallel fan-out must
+//! be *invisible* in the output. Every test here pins the same invariant
+//! from a different angle: `SweepEngine` results are bit-identical —
+//! `energy_j`, `latency_s`, and every per-phase table — to direct
+//! `simulate()` calls, and parallel-order results match serial order.
+
+use bf_imna::arch::{ChipConfig, HwConfig};
+use bf_imna::model::{zoo, Network};
+use bf_imna::precision::PrecisionConfig;
+use bf_imna::sim::{
+    dse, simulate, simulate_on, InferenceReport, SimParams, SweepEngine, SweepPoint,
+};
+use bf_imna::util::proptest::check;
+
+/// Exact (bit-level) equality of two reports, including every per-layer
+/// per-phase table.
+fn assert_reports_identical(a: &InferenceReport, b: &InferenceReport) -> Result<(), String> {
+    if a.net_name != b.net_name || a.cfg_name != b.cfg_name {
+        return Err(format!("identity mismatch: {}/{} vs {}/{}", a.net_name, a.cfg_name, b.net_name, b.cfg_name));
+    }
+    if a.energy_j().to_bits() != b.energy_j().to_bits() {
+        return Err(format!("energy {} != {}", a.energy_j(), b.energy_j()));
+    }
+    if a.latency_s().to_bits() != b.latency_s().to_bits() {
+        return Err(format!("latency {} != {}", a.latency_s(), b.latency_s()));
+    }
+    if a.area_mm2.to_bits() != b.area_mm2.to_bits() {
+        return Err("area diverged".to_string());
+    }
+    if a.layers.len() != b.layers.len() {
+        return Err("layer count diverged".to_string());
+    }
+    for (la, lb) in a.layers.iter().zip(&b.layers) {
+        if la.name != lb.name || la.kind != lb.kind || la.steps != lb.steps {
+            return Err(format!("layer identity diverged at {}", la.name));
+        }
+        if la.latency_phases != lb.latency_phases {
+            return Err(format!("{}: latency phase table diverged", la.name));
+        }
+        if la.energy_phases != lb.energy_phases {
+            return Err(format!("{}: energy phase table diverged", la.name));
+        }
+        if la.latency_s.to_bits() != lb.latency_s.to_bits()
+            || la.ap_energy_j.to_bits() != lb.ap_energy_j.to_bits()
+            || la.mesh_energy_j.to_bits() != lb.mesh_energy_j.to_bits()
+            || la.map_energy_j.to_bits() != lb.map_energy_j.to_bits()
+        {
+            return Err(format!("{}: per-layer cost diverged", la.name));
+        }
+    }
+    Ok(())
+}
+
+/// Property: for random networks, precisions, and hardware points, a
+/// shared warm engine returns results bit-identical to direct simulate().
+#[test]
+fn engine_is_bit_identical_to_simulate_on_random_points() {
+    let nets = [zoo::alexnet(), zoo::resnet18(), zoo::serve_cnn()];
+    let engine = SweepEngine::new();
+    check("engine == simulate", 24, |rng| {
+        let net = &nets[rng.range(0, nets.len() - 1)];
+        let hw = if rng.bool() { HwConfig::Lr } else { HwConfig::Ir };
+        let tech = if rng.bool() {
+            bf_imna::ap::tech::Tech::sram()
+        } else {
+            bf_imna::ap::tech::Tech::reram()
+        };
+        let params = SimParams::new(hw, tech);
+        let bits: Vec<u32> =
+            (0..net.weight_layers()).map(|_| 2 + rng.below(7) as u32).collect();
+        let cfg = PrecisionConfig::from_bits("rand", &bits);
+        let direct = simulate(net, &cfg, &params);
+        let engined = engine.run(&[SweepPoint::new(net, &cfg, &params)]).remove(0);
+        assert_reports_identical(&direct, &engined)
+    });
+    // The loop above re-visits layer/bits pairs constantly; the cache must
+    // have been doing real work while staying invisible.
+    assert!(engine.cache_stats().hits > 0, "{:?}", engine.cache_stats());
+}
+
+/// Parallel-order results match serial order, element by element.
+#[test]
+fn parallel_results_are_in_input_order() {
+    let nets: Vec<Network> = vec![zoo::alexnet(), zoo::resnet18(), zoo::vgg16()];
+    let params = SimParams::lr_sram();
+    let mut cfgs = Vec::new();
+    for (i, net) in nets.iter().enumerate() {
+        for bits in 2..=8u32 {
+            cfgs.push((i, PrecisionConfig::fixed(bits, net.weight_layers())));
+        }
+    }
+    let points: Vec<SweepPoint> =
+        cfgs.iter().map(|(i, c)| SweepPoint::new(&nets[*i], c, &params)).collect();
+    let serial = SweepEngine::serial().run(&points);
+    for threads in [2usize, 4, 8] {
+        let parallel = SweepEngine::with_threads(threads).run(&points);
+        assert_eq!(serial.len(), parallel.len());
+        for (s, p) in serial.iter().zip(&parallel) {
+            assert_reports_identical(s, p).unwrap_or_else(|e| {
+                panic!("threads={threads}: {e}");
+            });
+        }
+    }
+}
+
+/// Re-running the same sweep on a warm engine changes nothing.
+#[test]
+fn warm_cache_changes_nothing() {
+    let net = zoo::resnet50();
+    let params = SimParams::lr_sram();
+    let cfgs: Vec<PrecisionConfig> =
+        (2..=8).map(|b| PrecisionConfig::fixed(b, net.weight_layers())).collect();
+    let engine = SweepEngine::new();
+    let first = engine.run_configs(&net, &cfgs, &params);
+    let second = engine.run_configs(&net, &cfgs, &params);
+    for (a, b) in first.iter().zip(&second) {
+        assert_reports_identical(a, b).unwrap();
+    }
+    let stats = engine.cache_stats();
+    // A fixed-precision sweep stores at most one plan per (layer, bits).
+    assert!(
+        stats.entries <= 7 * net.layers.len(),
+        "{} entries for {} layers",
+        stats.entries,
+        net.layers.len()
+    );
+}
+
+/// The rewired DSE drivers return the same series on shared and fresh
+/// engines (cache state cannot leak into figures).
+#[test]
+fn dse_series_agree_across_engines() {
+    let net = zoo::alexnet();
+    let shared = SweepEngine::new();
+    // Warm the shared engine with unrelated work first.
+    shared.run_configs(
+        &net,
+        &[PrecisionConfig::fixed(8, net.weight_layers())],
+        &SimParams::lr_sram(),
+    );
+    let fresh = dse::fig7_series(&net, HwConfig::Lr, 7);
+    let warm = dse::fig7_series_with(&shared, &net, HwConfig::Lr, 7);
+    assert_eq!(fresh.len(), warm.len());
+    for (f, w) in fresh.iter().zip(&warm) {
+        assert_eq!(f.avg_bits, w.avg_bits);
+        assert_eq!(f.samples, w.samples);
+        assert_eq!(f.energy_j.to_bits(), w.energy_j.to_bits());
+        assert_eq!(f.latency_s.to_bits(), w.latency_s.to_bits());
+        assert_eq!(f.gops_per_w_mm2.to_bits(), w.gops_per_w_mm2.to_bits());
+    }
+    let fig6_fresh = dse::fig6_tech_ratios(&net);
+    let fig6_warm = dse::fig6_tech_ratios_with(&shared, &net);
+    for (f, w) in fig6_fresh.iter().zip(&fig6_warm) {
+        assert_eq!(f.energy_ratio.to_bits(), w.energy_ratio.to_bits());
+        assert_eq!(f.latency_ratio.to_bits(), w.latency_ratio.to_bits());
+    }
+}
+
+/// Explicit-chip points bypass the (hw, net) chip memo but still cache and
+/// still match the direct `simulate_on` path exactly.
+#[test]
+fn chip_override_matches_simulate_on() {
+    let net = zoo::alexnet();
+    let cfg = PrecisionConfig::fixed(6, net.weight_layers());
+    let params = SimParams::lr_sram();
+    let mut chip = ChipConfig::lr();
+    chip.mesh.bits_per_transfer = 512;
+    let direct = simulate_on(&net, &cfg, &params, &chip);
+    let engine = SweepEngine::new();
+    let engined =
+        engine.run(&[SweepPoint::on_chip(&net, &cfg, &params, &chip)]).remove(0);
+    assert_reports_identical(&direct, &engined).unwrap();
+}
