@@ -9,7 +9,8 @@
 use bf_imna::arch::HwConfig;
 use bf_imna::model::zoo;
 use bf_imna::precision::PrecisionConfig;
-use bf_imna::sim::{breakdown, dse, simulate, SimParams};
+use bf_imna::sim::{breakdown, dse, shard, simulate, SimParams, SweepEngine};
+use bf_imna::util::json::Json;
 use bf_imna::util::table::{fmt_eng, fmt_ratio, Table};
 
 fn main() {
@@ -71,4 +72,25 @@ fn main() {
         let saving = dse::voltage_scaling_saving(&net, 8);
         println!("  {:9} energy saving: {:.3}% (paper: <= 0.06%)", net.name, 100.0 * saving);
     }
+
+    // ---- Sweep service: spec -> shards -> merge (sim::shard). -----------
+    // The same Fig. 7 sweep as a serializable spec: two "workers" each run
+    // a contiguous half of the point index space on their own engine, and
+    // the merger reassembles a byte-identical copy of the single-process
+    // document. On real deployments each worker is a separate
+    // `bf-imna sweep --shards N --shard-id K` process.
+    println!("\nSweep service (sim::shard) — AlexNet LR, 2 shards:\n");
+    let spec = dse::fig7_spec(&zoo::alexnet(), HwConfig::Lr, 7);
+    println!("  spec: {}", spec.to_json());
+    let full = shard::run_full(&spec, &SweepEngine::new()).unwrap();
+    let docs: Vec<Json> = (0..2)
+        .map(|k| shard::run_shard(&spec, 2, k, &SweepEngine::new()).unwrap().to_json())
+        .collect();
+    let merged = shard::merge(&docs).unwrap();
+    assert_eq!(merged.to_string(), full.to_string());
+    println!(
+        "  2-shard merge == single-process sweep, byte for byte ({} points, {} bytes).",
+        merged.get("n_points").and_then(Json::as_i64).unwrap_or(0),
+        full.to_string().len()
+    );
 }

@@ -1,4 +1,4 @@
-//! Bench: ablations over the design choices DESIGN.md §5b calls out —
+//! Bench: ablations over the design choices ARCHITECTURE.md calls out —
 //! the mapper's u/i split selection, the IR mesh-bandwidth scaling rule,
 //! and the coordinator's batch window (compiled batch sizes).
 //!

@@ -4,8 +4,9 @@
 
 use bf_imna::arch::HwConfig;
 use bf_imna::model::zoo;
-use bf_imna::sim::{dse, SweepEngine};
+use bf_imna::sim::{dse, shard, SweepEngine};
 use bf_imna::util::benchkit::{banner, Bencher};
+use bf_imna::util::json::Json;
 use bf_imna::util::table::{fmt_eng, Table};
 
 fn main() {
@@ -92,4 +93,47 @@ fn main() {
         100.0 * stats.hit_rate(),
         engine.threads()
     );
+
+    banner("Sweep service: spec -> shards -> merge (sim::shard)");
+    // The same AlexNet LR figure as a serializable spec, run as 4
+    // independent shard "workers" (fresh engine each, as separate
+    // processes would be) and reassembled — the merge must be
+    // byte-identical to the single-process document.
+    let spec = dse::fig7_spec(&alexnet, HwConfig::Lr, 7);
+    let full = shard::run_full(&spec, &SweepEngine::new()).unwrap().to_string();
+    const SHARDS: usize = 4;
+    let docs: Vec<Json> = (0..SHARDS)
+        .map(|k| shard::run_shard(&spec, SHARDS, k, &SweepEngine::new()).unwrap().to_json())
+        .collect();
+    let merged = shard::merge(&docs).unwrap().to_string();
+    assert_eq!(merged, full, "sharded merge diverged from the single-process sweep");
+    println!(
+        "{SHARDS}-shard merge is byte-identical to the single-process sweep ({} points, {} bytes).",
+        spec.resolve().unwrap().num_points(),
+        full.len()
+    );
+
+    // Prewarm ablation: one coordinator prewarms a cache, snapshots it,
+    // and a "worker" absorbs the snapshot — its run never maps cold.
+    let resolved = spec.resolve().unwrap();
+    let points = resolved.points(0..resolved.num_points());
+    let donor = SweepEngine::new();
+    donor.prewarm(&points);
+    let snapshot = donor.cache().snapshot();
+    let worker = SweepEngine::new();
+    worker.cache().absorb(&snapshot);
+    let r = bench.run("fig7 spec sweep, snapshot-prewarmed engine (AlexNet LR)", || {
+        worker.run(&points).len()
+    });
+    println!("{}", r.report_line());
+    let r = bench.run("fig7 spec sweep, cold engine per run (AlexNet LR)", || {
+        SweepEngine::new().run(&points).len()
+    });
+    println!("{}", r.report_line());
+    println!(
+        "snapshot: {} plans; worker misses after absorb+runs: {}",
+        snapshot.len(),
+        worker.cache_stats().misses
+    );
+    assert_eq!(worker.cache_stats().misses, 0, "snapshot-prewarmed worker mapped cold");
 }

@@ -9,12 +9,19 @@ use super::{clog2, ApKind};
 /// The seven functions of Tables I & II.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Function {
+    /// Element-wise addition.
     Addition,
+    /// Element-wise multiplication.
     Multiplication,
+    /// Vertical reduction (sum tree).
     Reduction,
+    /// Matrix-matrix multiplication.
     MatMat,
+    /// Rectified linear unit.
     Relu,
+    /// Max pooling.
     MaxPooling,
+    /// Average pooling.
     AveragePooling,
 }
 

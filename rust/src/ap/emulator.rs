@@ -32,8 +32,11 @@ use super::Events;
 /// Event counters accumulated by an emulator run.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct Counters {
+    /// Compare (search) phases executed.
     pub compares: u64,
+    /// Write phases executed.
     pub writes: u64,
+    /// Read phases executed.
     pub reads: u64,
 }
 
@@ -65,6 +68,7 @@ pub struct Cam {
     data: Vec<u64>,
     /// Match tags of the last compare (bitmap over rows).
     tags: Vec<u64>,
+    /// Event counters accumulated since creation.
     pub counters: Counters,
 }
 

@@ -19,8 +19,11 @@
 /// updates applied to every matched word.
 #[derive(Debug, Clone, Copy)]
 pub struct Pass {
+    /// Pass label (for traces and tests).
     pub name: &'static str,
+    /// `(slot, bit)` match requirements of the compare phase.
     pub key: &'static [(usize, bool)],
+    /// `(slot, bit)` updates written to every matched word.
     pub write: &'static [(usize, bool)],
 }
 

@@ -169,7 +169,9 @@ impl std::iter::Sum for CellEvents {
 /// reduce, Table I comments).
 #[derive(Debug, Clone, Copy, PartialEq, Default)]
 pub struct OpCost {
+    /// Critical-path timing events.
     pub events: Events,
+    /// Total cell activity (energy side).
     pub cells: CellEvents,
     /// Bitwidth of each result word after the operation.
     pub result_bits: u32,

@@ -23,8 +23,8 @@
 //! absolute energy efficiency at 8-bit (BF-IMNA_8b: 641 GOPS/W published,
 //! ≈625 modeled) and 16-bit (170 published, ≈156 modeled) with no further
 //! tuning. This single derived constant plays the role the authors' SPICE
-//! deck played; see DESIGN.md §3 and EXPERIMENTS.md for where the Fig. 6
-//! ratio magnitudes land under it.
+//! deck played; see ARCHITECTURE.md and EXPERIMENTS.md for where the
+//! Fig. 6 ratio magnitudes land under it.
 
 /// Joules per femtojoule.
 pub const FJ: f64 = 1e-15;
@@ -102,6 +102,7 @@ pub const FEFET_AREA_SAVINGS: f64 = 3.5;
 /// ReRAM cells").
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Tech {
+    /// Which CAM cell technology this models.
     pub cell: CellTech,
     /// Supply voltage, volts.
     pub v_dd: f64,

@@ -35,10 +35,15 @@ impl HwConfig {
 /// A fully-specified chip: cluster grid + geometry + clocks.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct ChipConfig {
+    /// Which configuration family (IR / LR) this chip instantiates.
     pub hw: HwConfig,
+    /// Cluster-grid width.
     pub clusters_x: u64,
+    /// Cluster-grid height.
     pub clusters_y: u64,
+    /// Geometry of every cluster (CAP grid + MAP).
     pub cluster: ClusterGeometry,
+    /// On-chip mesh interconnect model.
     pub mesh: Mesh,
     /// AP clock, Hz.
     pub freq_hz: f64,
@@ -165,7 +170,10 @@ impl ChipConfig {
 }
 
 /// A [`ChipConfig`]'s full identity as a hashable value (see
-/// [`ChipConfig::cache_key`]). Opaque by design: only `Eq`/`Hash` matter.
+/// [`ChipConfig::cache_key`]). Opaque by design: only `Eq`/`Hash` matter —
+/// plus a lossless `u64`-word encoding ([`ChipKey::to_words`] /
+/// [`ChipKey::from_words`]) so plan-cache snapshots can ship keys between
+/// processes.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct ChipKey {
     hw: HwConfig,
@@ -181,6 +189,66 @@ pub struct ChipKey {
     mesh_hop_mm_bits: u64,
     mesh_e_bit_mm_bits: u64,
     freq_bits: u64,
+}
+
+/// Number of `u64` words in a [`ChipKey`] encoding.
+pub const CHIP_KEY_WORDS: usize = 17;
+
+impl ChipKey {
+    /// Lossless encoding as fixed-order `u64` words (`f64` fields are
+    /// already stored as bit patterns). Inverse of [`ChipKey::from_words`].
+    pub fn to_words(&self) -> [u64; CHIP_KEY_WORDS] {
+        [
+            match self.hw {
+                HwConfig::Lr => 0,
+                HwConfig::Ir => 1,
+            },
+            self.clusters_x,
+            self.clusters_y,
+            self.caps_x,
+            self.caps_y,
+            self.cap.0,
+            self.cap.1,
+            self.cap.2,
+            self.map.0,
+            self.map.1,
+            self.map.2,
+            self.mesh_bits_per_transfer,
+            self.mesh_freq_bits,
+            self.mesh_hops_bits,
+            self.mesh_hop_mm_bits,
+            self.mesh_e_bit_mm_bits,
+            self.freq_bits,
+        ]
+    }
+
+    /// Decode a key previously produced by [`ChipKey::to_words`]. Returns
+    /// `None` on a wrong word count or an unknown hardware tag.
+    pub fn from_words(words: &[u64]) -> Option<ChipKey> {
+        if words.len() != CHIP_KEY_WORDS {
+            return None;
+        }
+        let hw = match words[0] {
+            0 => HwConfig::Lr,
+            1 => HwConfig::Ir,
+            _ => return None,
+        };
+        Some(ChipKey {
+            hw,
+            clusters_x: words[1],
+            clusters_y: words[2],
+            caps_x: words[3],
+            caps_y: words[4],
+            cap: (words[5], words[6], words[7]),
+            map: (words[8], words[9], words[10]),
+            mesh_bits_per_transfer: words[11],
+            mesh_freq_bits: words[12],
+            mesh_hops_bits: words[13],
+            mesh_hop_mm_bits: words[14],
+            mesh_e_bit_mm_bits: words[15],
+            freq_bits: words[16],
+        })
+    }
 }
 
 #[cfg(test)]
@@ -226,6 +294,19 @@ mod tests {
         let mut tweaked = ChipConfig::lr();
         tweaked.mesh.e_bit_mm *= 2.0;
         assert_ne!(tweaked.cache_key(), ChipConfig::lr().cache_key());
+    }
+
+    #[test]
+    fn chip_key_words_round_trip() {
+        let net = zoo::vgg16();
+        for key in [ChipConfig::lr().cache_key(), ChipConfig::ir_for(&net).cache_key()] {
+            let words = key.to_words();
+            assert_eq!(ChipKey::from_words(&words), Some(key));
+        }
+        assert_eq!(ChipKey::from_words(&[0; 3]), None);
+        let mut bad = ChipConfig::lr().cache_key().to_words();
+        bad[0] = 9; // unknown hw tag
+        assert_eq!(ChipKey::from_words(&bad), None);
     }
 
     #[test]

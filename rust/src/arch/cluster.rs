@@ -6,9 +6,13 @@ use crate::ap::tech::Tech;
 /// One cluster: `caps_x x caps_y` CAPs + 1 MAP, private mesh.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct ClusterGeometry {
+    /// CAP-grid width.
     pub caps_x: u64,
+    /// CAP-grid height.
     pub caps_y: u64,
+    /// Geometry of each computation AP.
     pub cap: CapGeometry,
+    /// Geometry of the cluster's memory AP.
     pub map: CapGeometry,
 }
 

@@ -21,8 +21,11 @@ pub const ENERGY_PJ_PER_BIT_MM: f64 = 0.05;
 /// Mesh interconnect cost model.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Mesh {
+    /// Bits moved per transfer (link width, Table V).
     pub bits_per_transfer: u64,
+    /// Mesh clock, Hz.
     pub freq_hz: f64,
+    /// Average hops per transfer.
     pub avg_hops: f64,
     /// Physical hop length, mm (chip side / cluster-grid side).
     pub hop_mm: f64,

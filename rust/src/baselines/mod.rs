@@ -11,7 +11,9 @@ pub mod peak;
 /// One published accelerator record (Table VIII row).
 #[derive(Debug, Clone)]
 pub struct SotaRecord {
+    /// Accelerator name as printed in Table VIII.
     pub name: &'static str,
+    /// Fabrication technology string.
     pub technology: &'static str,
     /// Clock, GHz (`None` where the paper prints "-").
     pub freq_ghz: Option<f64>,
@@ -133,8 +135,11 @@ pub fn record(name: &str) -> SotaRecord {
 /// the modeled rows are validated against (not as the model output).
 #[derive(Debug, Clone, Copy)]
 pub struct PaperBfRow {
+    /// Operand precision, bits.
     pub precision: u32,
+    /// Published peak throughput, GOPS.
     pub gops: f64,
+    /// Published peak energy efficiency, GOPS/W.
     pub gops_per_w: f64,
 }
 

@@ -40,6 +40,7 @@ pub const PEAK_SENSE_ENERGY_J: f64 = 9.6e-15;
 /// One modeled BF-IMNA peak row.
 #[derive(Debug, Clone, Copy)]
 pub struct PeakRow {
+    /// Operand precision, bits.
     pub precision: u32,
     /// Peak throughput, GOPS.
     pub gops: f64,

@@ -43,8 +43,11 @@ impl Budget {
 /// Per-budget latency targets.
 #[derive(Debug, Clone)]
 pub struct BudgetTargets {
+    /// Target for [`Budget::Low`] (tightest).
     pub low: Duration,
+    /// Target for [`Budget::Medium`].
     pub medium: Duration,
+    /// Target for [`Budget::High`] (loosest).
     pub high: Duration,
 }
 

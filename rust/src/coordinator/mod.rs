@@ -292,6 +292,11 @@ fn sim_prior_scales(manifest: &Manifest) -> BTreeMap<String, f64> {
     let engine = SweepEngine::new();
     let points: Vec<SweepPoint> =
         cfgs.iter().map(|c| SweepPoint::new(&net, c, &params)).collect();
+    // Batch-level prewarm (the sweep-service discipline, see
+    // `sim::shard`): the manifest configs share most (layer, bits) plans,
+    // so populating the cache up front keeps the parallel fan-out below
+    // from racing on cold keys during serving startup.
+    engine.prewarm(&points);
     let reports = engine.run(&points);
     let floor = reports
         .iter()

@@ -12,8 +12,14 @@
 //! * **Layer 2 (python/compile/model.py)** — quantized CNN forward graph.
 //! * **Layer 1 (python/compile/kernels/)** — Pallas bit-plane GEMM kernel.
 //!
-//! See DESIGN.md for the full system inventory and the per-experiment index
-//! mapping every paper table/figure to a module and bench target.
+//! See ARCHITECTURE.md (repo root) for the full system inventory and the
+//! invariants new code must preserve, and EXPERIMENTS.md for the paper
+//! artifact map linking every table/figure to a bench target or `bf-imna`
+//! command.
+
+// Every public item carries documentation; CI runs `cargo doc --no-deps`
+// with `RUSTDOCFLAGS="-D warnings"`, so doc rot fails the build.
+#![warn(missing_docs)]
 
 pub mod ap;
 pub mod arch;

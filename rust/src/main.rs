@@ -1,14 +1,22 @@
-//! `bf-imna` — command-line front end for the BF-IMNA simulator and the
-//! bit-fluid serving coordinator.
+//! `bf-imna` — command-line front end for the BF-IMNA simulator, the
+//! sharded sweep service, and the bit-fluid serving coordinator.
 //!
 //! ```text
-//! bf-imna simulate --net vgg16 --bits 8 [--hw lr|ir] [--tech sram|reram]
-//! bf-imna sweep    --net alexnet [--hw lr]             # Fig. 7 series
-//! bf-imna hawq                                          # Table VII
-//! bf-imna compare                                       # Table VIII
-//! bf-imna validate                                      # Table I microbenchmark
-//! bf-imna serve    [--artifacts DIR] [--requests N]     # live serving demo
+//! bf-imna simulate --net vgg16 --bits 8 [--hw lr|ir] [--tech sram|reram|pcm|fefet]
+//!                  [--breakdown]                      # one point + Fig. 8 shares
+//! bf-imna sweep    --net alexnet [--hw lr|ir]         # Fig. 7 series (table)
+//! bf-imna sweep    --net alexnet --out full.json      # same sweep as JSON
+//! bf-imna sweep    --shards 4 --shard-id 0 --out s0.json   # one sweep-service shard
+//! bf-imna merge    s0.json s1.json s2.json s3.json --out full.json
+//! bf-imna hawq                                        # Table VII
+//! bf-imna compare                                     # Table VIII
+//! bf-imna validate                                    # Table I microbenchmark
+//! bf-imna serve    [--artifacts DIR] [--requests N]   # live serving demo
 //! ```
+//!
+//! The sharded form is the scale-out path: every shard is an independent
+//! process (no coordination), and `merge` reassembles a byte-identical
+//! copy of the single-process sweep document. See `sim::shard`.
 //!
 //! (Hand-rolled argument parsing — the offline vendor set has no `clap`.)
 
@@ -16,21 +24,24 @@ use std::collections::BTreeMap;
 use std::process::ExitCode;
 
 use bf_imna::ap::tech::Tech;
-use bf_imna::arch::HwConfig;
 use bf_imna::baselines::{self, peak};
 use bf_imna::coordinator::{Budget, Coordinator, CoordinatorConfig};
-use bf_imna::model::{zoo, Network};
+use bf_imna::mapper::CacheSnapshot;
+use bf_imna::model::zoo;
 use bf_imna::precision::{hawq, PrecisionConfig};
-use bf_imna::sim::{breakdown, dse, simulate, SimParams};
+use bf_imna::sim::shard::{self, SweepSpec};
+use bf_imna::sim::{breakdown, dse, simulate, SimParams, SweepEngine};
+use bf_imna::util::json::Json;
 use bf_imna::util::table::{fmt_eng, fmt_ratio, Table};
 
 fn main() -> ExitCode {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let cmd = args.first().map(String::as_str).unwrap_or("help");
-    let opts = parse_opts(&args[args.len().min(1)..]);
+    let (opts, files) = parse_opts(&args[args.len().min(1)..]);
     let result = match cmd {
         "simulate" => cmd_simulate(&opts),
         "sweep" => cmd_sweep(&opts),
+        "merge" => cmd_merge(&opts, &files),
         "hawq" => cmd_hawq(),
         "compare" => cmd_compare(),
         "validate" => cmd_validate(),
@@ -53,14 +64,29 @@ fn main() -> ExitCode {
 const HELP: &str = "\
 bf-imna — bit-fluid in-memory neural architecture (paper reproduction)
 
-USAGE: bf-imna <command> [--key value ...]
+USAGE: bf-imna <command> [--key value ...] [FILE ...]
 
 COMMANDS:
   simulate   end-to-end inference metrics for one network/config
              --net alexnet|vgg16|resnet18|resnet50|serve_cnn  (default vgg16)
              --bits N (fixed precision, default 8)   --hw lr|ir (default lr)
-             --tech sram|reram (default sram)        --breakdown (Fig. 8 shares)
-  sweep      Fig. 7 mixed-precision DSE series   --net ... --hw lr|ir
+             --tech sram|reram|pcm|fefet (default sram)
+             --breakdown (also print the Fig. 8 energy/latency shares)
+  sweep      Fig. 7 mixed-precision DSE sweep
+             --net ... (default alexnet)   --hw lr|ir (default lr)
+             table mode (default): print the per-average-precision series
+             JSON / sweep-service mode (any of the flags below):
+             --out FILE        write the sweep document (default: stdout)
+             --shards N        split the sweep into N contiguous shards
+             --shard-id K      run shard K in 0..N (default 0)
+             --tech sram|reram|pcm|fefet (default sram)
+             --combos N        mixed combos per avg-precision target (default 5)
+             --seed N          combination-generator seed (default 7)
+             --cache-in FILE   absorb a plan-cache snapshot before running
+             --cache-out FILE  write this run's plan-cache snapshot
+  merge      reassemble shard documents into the full sweep document
+             bf-imna merge s0.json .. sN.json [--out FILE]
+             output is byte-identical to the unsharded `sweep --out`
   hawq       Table VII — HAWQ-V3 bit-fluid ResNet18 under latency budgets
   compare    Table VIII — BF-IMNA peak rows vs published SOTA accelerators
   validate   Table I microbenchmark — functional emulator vs analytic models
@@ -70,8 +96,11 @@ COMMANDS:
 
 type CliResult = Result<(), Box<dyn std::error::Error>>;
 
-fn parse_opts(args: &[String]) -> BTreeMap<String, String> {
+/// Split CLI arguments into `--key value` / `--flag` options and
+/// positional arguments (e.g. `merge`'s shard files).
+fn parse_opts(args: &[String]) -> (BTreeMap<String, String>, Vec<String>) {
     let mut map = BTreeMap::new();
+    let mut positional = Vec::new();
     let mut i = 0;
     while i < args.len() {
         if let Some(key) = args[i].strip_prefix("--") {
@@ -87,44 +116,18 @@ fn parse_opts(args: &[String]) -> BTreeMap<String, String> {
                 }
             }
         } else {
+            positional.push(args[i].clone());
             i += 1;
         }
     }
-    map
-}
-
-fn net_by_name(name: &str) -> Result<Network, String> {
-    match name {
-        "alexnet" => Ok(zoo::alexnet()),
-        "vgg16" => Ok(zoo::vgg16()),
-        "resnet18" => Ok(zoo::resnet18()),
-        "resnet50" => Ok(zoo::resnet50()),
-        "serve_cnn" => Ok(zoo::serve_cnn()),
-        other => Err(format!("unknown network '{other}'")),
-    }
-}
-
-fn hw_by_name(name: &str) -> Result<HwConfig, String> {
-    match name {
-        "lr" => Ok(HwConfig::Lr),
-        "ir" => Ok(HwConfig::Ir),
-        other => Err(format!("unknown hw config '{other}' (lr|ir)")),
-    }
-}
-
-fn tech_by_name(name: &str) -> Result<Tech, String> {
-    match name {
-        "sram" => Ok(Tech::sram()),
-        "reram" => Ok(Tech::reram()),
-        other => Err(format!("unknown technology '{other}' (sram|reram)")),
-    }
+    (map, positional)
 }
 
 fn cmd_simulate(opts: &BTreeMap<String, String>) -> CliResult {
-    let net = net_by_name(opts.get("net").map(String::as_str).unwrap_or("vgg16"))?;
+    let net = shard::net_by_name(opts.get("net").map(String::as_str).unwrap_or("vgg16"))?;
     let bits: u32 = opts.get("bits").map(String::as_str).unwrap_or("8").parse()?;
-    let hw = hw_by_name(opts.get("hw").map(String::as_str).unwrap_or("lr"))?;
-    let tech = tech_by_name(opts.get("tech").map(String::as_str).unwrap_or("sram"))?;
+    let hw = shard::hw_by_name(opts.get("hw").map(String::as_str).unwrap_or("lr"))?;
+    let tech = shard::tech_by_name(opts.get("tech").map(String::as_str).unwrap_or("sram"))?;
     let cfg = PrecisionConfig::fixed(bits, net.weight_layers());
     let r = simulate(&net, &cfg, &SimParams::new(hw, tech));
     println!(
@@ -167,20 +170,108 @@ fn cmd_simulate(opts: &BTreeMap<String, String>) -> CliResult {
 }
 
 fn cmd_sweep(opts: &BTreeMap<String, String>) -> CliResult {
-    let net = net_by_name(opts.get("net").map(String::as_str).unwrap_or("alexnet"))?;
-    let hw = hw_by_name(opts.get("hw").map(String::as_str).unwrap_or("lr"))?;
-    let series = dse::fig7_series(&net, hw, 7);
-    println!("{} | {} | SRAM | Fig. 7 series (mean of {} combos/point)", net.name, hw.label(), dse::COMBOS_PER_TARGET);
-    let mut t = Table::new(vec!["avg bits", "energy (J)", "latency (s)", "GOPS/W/mm2"]);
-    for p in series {
-        t.row(vec![
-            format!("{:.0}", p.avg_bits),
-            fmt_eng(p.energy_j, 3),
-            fmt_eng(p.latency_s, 3),
-            fmt_eng(p.gops_per_w_mm2, 3),
-        ]);
+    let net_name = opts.get("net").map(String::as_str).unwrap_or("alexnet");
+    let hw_name = opts.get("hw").map(String::as_str).unwrap_or("lr");
+    // Any sweep-service flag (as listed in HELP) switches to JSON mode;
+    // plain `sweep --net X --hw Y` keeps the original Fig. 7 table.
+    let service_mode = ["out", "shards", "shard-id", "tech", "combos", "seed", "cache-in", "cache-out"]
+        .iter()
+        .any(|k| opts.contains_key(*k));
+    if !service_mode {
+        // Table mode: print the Fig. 7 series, exactly as before.
+        let net = shard::net_by_name(net_name)?;
+        let hw = shard::hw_by_name(hw_name)?;
+        let series = dse::fig7_series(&net, hw, 7);
+        println!(
+            "{} | {} | SRAM | Fig. 7 series (mean of {} combos/point)",
+            net.name,
+            hw.label(),
+            dse::COMBOS_PER_TARGET
+        );
+        let mut t = Table::new(vec!["avg bits", "energy (J)", "latency (s)", "GOPS/W/mm2"]);
+        for p in series {
+            t.row(vec![
+                format!("{:.0}", p.avg_bits),
+                fmt_eng(p.energy_j, 3),
+                fmt_eng(p.latency_s, 3),
+                fmt_eng(p.gops_per_w_mm2, 3),
+            ]);
+        }
+        print!("{}", t.render());
+        return Ok(());
     }
-    print!("{}", t.render());
+
+    // Sweep-service mode: run the (possibly sharded) sweep, emit JSON.
+    let combos: usize = match opts.get("combos") {
+        Some(s) => s.parse()?,
+        None => dse::COMBOS_PER_TARGET,
+    };
+    let seed: u64 = match opts.get("seed") {
+        Some(s) => s.parse()?,
+        None => 7,
+    };
+    let shards: usize = match opts.get("shards") {
+        Some(s) => s.parse()?,
+        None => 1,
+    };
+    let shard_id: usize = match opts.get("shard-id") {
+        Some(s) => s.parse()?,
+        None => 0,
+    };
+    // Shard/spec validation happens inside `run_shard_prewarmed` below.
+    let mut spec = SweepSpec::fig7(net_name, hw_name, combos, seed);
+    spec.tech = vec![opts.get("tech").cloned().unwrap_or_else(|| "sram".to_string())];
+
+    let engine = SweepEngine::new();
+    if let Some(path) = opts.get("cache-in") {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+        let snap = CacheSnapshot::from_json(&Json::parse(&text).map_err(|e| format!("{path}: {e}"))?)?;
+        let loaded = engine.cache().absorb(&snap);
+        eprintln!("cache-in: absorbed {loaded} plans from {path}");
+    }
+    // The prewarmed runner batch-prewarms this shard's slice so the
+    // parallel run never maps cold (see `sim::shard`).
+    let result = shard::run_shard_prewarmed(&spec, shards, shard_id, &engine)?;
+    let n_points = result.points.len();
+    let sharded = opts.contains_key("shards") || opts.contains_key("shard-id");
+    let doc = if sharded { result.to_json() } else { shard::full_doc(&spec, &result.points) };
+    if let Some(path) = opts.get("cache-out") {
+        let snap = engine.cache().snapshot();
+        std::fs::write(path, format!("{}\n", snap.to_json())).map_err(|e| format!("{path}: {e}"))?;
+        eprintln!("cache-out: wrote {} plans to {path}", snap.len());
+    }
+    match opts.get("out") {
+        Some(path) => {
+            std::fs::write(path, format!("{doc}\n")).map_err(|e| format!("{path}: {e}"))?;
+            if sharded {
+                eprintln!("wrote shard {shard_id}/{shards} ({n_points} points) to {path}");
+            } else {
+                eprintln!("wrote {n_points} points to {path}");
+            }
+        }
+        None => println!("{doc}"),
+    }
+    Ok(())
+}
+
+fn cmd_merge(opts: &BTreeMap<String, String>, files: &[String]) -> CliResult {
+    if files.is_empty() {
+        return Err("merge: pass the shard JSON files as positional arguments".into());
+    }
+    let mut docs = Vec::with_capacity(files.len());
+    for f in files {
+        let text = std::fs::read_to_string(f).map_err(|e| format!("{f}: {e}"))?;
+        docs.push(Json::parse(&text).map_err(|e| format!("{f}: {e}"))?);
+    }
+    let merged = shard::merge(&docs)?;
+    let n = merged.get("n_points").and_then(Json::as_i64).unwrap_or(0);
+    match opts.get("out") {
+        Some(path) => {
+            std::fs::write(path, format!("{merged}\n")).map_err(|e| format!("{path}: {e}"))?;
+            eprintln!("merged {} shards ({n} points) into {path}", files.len());
+        }
+        None => println!("{merged}"),
+    }
     Ok(())
 }
 

@@ -23,10 +23,12 @@ use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::RwLock;
 
-use super::{map_layer, LayerPlan, NetworkPlan};
+use super::{map_layer, LayerPlan, NetworkPlan, PhaseTable, WorkKind};
+use crate::ap::{CellEvents, Events};
 use crate::arch::{ChipConfig, ChipKey};
 use crate::model::{Layer, LayerKind, Network, Shape};
 use crate::precision::{LayerPrec, PrecisionConfig};
+use crate::util::json::Json;
 
 /// Everything [`map_layer`] reads, as a hashable value.
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
@@ -47,7 +49,9 @@ impl PlanKey {
 /// Hit/miss counters of a [`PlanCache`] (diagnostics + perf reporting).
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct CacheStats {
+    /// Lookups served from the memo table.
     pub hits: u64,
+    /// Lookups that had to run [`map_layer`].
     pub misses: u64,
     /// Distinct plans currently stored.
     pub entries: usize,
@@ -66,6 +70,25 @@ impl CacheStats {
 }
 
 /// A thread-safe memo table for [`map_layer`] results.
+///
+/// ```
+/// use bf_imna::arch::ChipConfig;
+/// use bf_imna::mapper::{map_network, PlanCache};
+/// use bf_imna::model::zoo;
+/// use bf_imna::precision::PrecisionConfig;
+///
+/// let net = zoo::serve_cnn();
+/// let chip = ChipConfig::lr();
+/// let cfg = PrecisionConfig::fixed(8, net.weight_layers());
+/// let cache = PlanCache::new();
+/// // Cached mapping is bit-identical to the direct one...
+/// let cached = cache.map_network(&net, &chip, &cfg);
+/// let direct = map_network(&net, &chip, &cfg);
+/// assert_eq!(cached.layers.len(), direct.layers.len());
+/// // ...and a second pass hits the memo table for every layer.
+/// cache.map_network(&net, &chip, &cfg);
+/// assert!(cache.stats().hits >= net.layers.len() as u64);
+/// ```
 #[derive(Debug, Default)]
 pub struct PlanCache {
     plans: RwLock<HashMap<PlanKey, LayerPlan>>,
@@ -140,6 +163,498 @@ impl PlanCache {
         self.hits.store(0, Ordering::Relaxed);
         self.misses.store(0, Ordering::Relaxed);
     }
+
+    /// Batch-level prewarm: map every layer of `net` at `cfg` on `chip`,
+    /// populating the memo table, and return the number of *new* plans
+    /// stored. After a prewarm, a parallel sweep over the same coordinates
+    /// never maps cold — without it, workers that race on the same cold key
+    /// each pay the `map_layer` (both results are identical; only the work
+    /// is duplicated). The prewarm lookups count toward [`Self::stats`]
+    /// like any other.
+    pub fn prewarm(&self, net: &Network, chip: &ChipConfig, cfg: &PrecisionConfig) -> usize {
+        let before = self.len();
+        self.map_network(net, chip, cfg);
+        self.len() - before
+    }
+
+    /// Copy every stored plan into a shippable [`CacheSnapshot`].
+    pub fn snapshot(&self) -> CacheSnapshot {
+        let plans = self.plans.read().unwrap();
+        CacheSnapshot {
+            entries: plans.iter().map(|(k, v)| (k.clone(), v.clone())).collect(),
+        }
+    }
+
+    /// Insert every snapshot entry that is not already present, returning
+    /// how many were added. Counters are untouched: snapshot loads are not
+    /// lookups, so a subsequent sweep's hit rate still measures real reuse.
+    pub fn absorb(&self, snap: &CacheSnapshot) -> usize {
+        let mut plans = self.plans.write().unwrap();
+        let mut added = 0;
+        for (k, v) in &snap.entries {
+            if !plans.contains_key(k) {
+                plans.insert(k.clone(), v.clone());
+                added += 1;
+            }
+        }
+        added
+    }
+}
+
+/// A serializable copy of a [`PlanCache`]'s contents — the "shippable"
+/// half of the prewarm story. A sweep coordinator prewarms one cache,
+/// [`PlanCache::snapshot`]s it, writes the JSON to disk (or a wire), and
+/// every shard worker [`PlanCache::absorb`]s it to skip all cold mapping.
+///
+/// The encoding is lossless: `u64`s serialize as decimal strings (JSON
+/// numbers are `f64` and cannot carry all 64 bits) and `f64`s as the
+/// decimal form of their IEEE-754 bit patterns, so an absorbed snapshot
+/// reproduces the donor cache's plans **bit for bit** — the sweep-level
+/// determinism invariant survives the round trip through disk.
+///
+/// Snapshots additionally carry the donor's [`mapper_fingerprint`] — a
+/// hash of the mapper's structural outputs on a fixed probe workload —
+/// and [`CacheSnapshot::from_json`] rejects documents whose fingerprint
+/// does not match the running binary. A snapshot written before a
+/// mapper / chip-geometry change therefore fails loudly instead of
+/// silently injecting stale plans and breaking the "snapshots are never a
+/// correctness dependency" invariant.
+#[derive(Debug, Clone, Default)]
+pub struct CacheSnapshot {
+    entries: Vec<(PlanKey, LayerPlan)>,
+}
+
+impl CacheSnapshot {
+    /// Number of plans in the snapshot.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True when the snapshot carries no plans.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Serialize to a JSON document. Entries are sorted by their canonical
+    /// encoding so the output is deterministic regardless of the donor
+    /// cache's hash-map iteration order, and a content checksum over the
+    /// encoded entries rides along for corruption detection.
+    pub fn to_json(&self) -> Json {
+        let (items, checksum) = entries_digest(&self.entries);
+        Json::obj([
+            ("version", Json::num(1.0)),
+            ("fingerprint", Json::str(mapper_fingerprint())),
+            ("checksum", Json::str(checksum)),
+            ("entries", Json::arr(items.into_iter().map(|(_, v)| v))),
+        ])
+    }
+
+    /// Parse a document produced by [`Self::to_json`]. Rejects snapshots
+    /// from a binary whose mapper behaves differently (see
+    /// [`mapper_fingerprint`]) and snapshots whose entries fail the
+    /// content checksum (bit rot / hand edits) — corruption is detected,
+    /// not authenticated; the snapshot format is not a security boundary.
+    pub fn from_json(v: &Json) -> Result<CacheSnapshot, String> {
+        match v.get("version").and_then(Json::as_i64) {
+            Some(1) => {}
+            other => return Err(format!("unsupported snapshot version {other:?}")),
+        }
+        let expected = mapper_fingerprint();
+        match v.get("fingerprint").and_then(Json::as_str) {
+            Some(fp) if fp == expected => {}
+            Some(fp) => {
+                return Err(format!(
+                    "snapshot fingerprint {fp} does not match this binary's mapper \
+                     ({expected}): it was produced by a different mapper/cost-model \
+                     build — recreate it with --cache-out"
+                ))
+            }
+            None => return Err("snapshot: missing 'fingerprint'".to_string()),
+        }
+        let raw = v
+            .get("entries")
+            .and_then(Json::as_arr)
+            .ok_or("snapshot: missing 'entries' array")?;
+        let mut entries = Vec::with_capacity(raw.len());
+        for e in raw {
+            let key = key_from_json(e.get("key").ok_or("snapshot entry: missing 'key'")?)?;
+            let plan = plan_from_json(e.get("plan").ok_or("snapshot entry: missing 'plan'")?)?;
+            entries.push((key, plan));
+        }
+        let (_, recomputed) = entries_digest(&entries);
+        match v.get("checksum").and_then(Json::as_str) {
+            Some(c) if c == recomputed => {}
+            Some(_) => {
+                return Err(
+                    "snapshot checksum mismatch: the entries are corrupted — recreate the \
+                     snapshot with --cache-out"
+                        .to_string(),
+                )
+            }
+            None => return Err("snapshot: missing 'checksum'".to_string()),
+        }
+        Ok(CacheSnapshot { entries })
+    }
+}
+
+/// Canonically encode every entry, sorted, plus an FNV-1a checksum over
+/// the encoded text. Shared by [`CacheSnapshot::to_json`] (to emit) and
+/// [`CacheSnapshot::from_json`] (to verify after re-parsing): because the
+/// entry encoding is lossless and the writer canonical, any bit-level
+/// change to a stored plan or key changes the checksum.
+fn entries_digest(entries: &[(PlanKey, LayerPlan)]) -> (Vec<(String, Json)>, String) {
+    let mut items: Vec<(String, Json)> = entries
+        .iter()
+        .map(|(k, v)| {
+            let entry = Json::obj([("key", key_to_json(k)), ("plan", plan_to_json(v))]);
+            (entry.to_string(), entry)
+        })
+        .collect();
+    items.sort_by(|a, b| a.0.cmp(&b.0));
+    let mut h = FNV_OFFSET;
+    for (text, _) in &items {
+        h = fnv1a(h, text.as_bytes());
+    }
+    (items, format!("{h:016x}"))
+}
+
+/// Behavioral fingerprint of the mapper: map a fixed synthetic probe
+/// workload (one layer of each kind at two precisions on the Table V LR
+/// chip) and hash every structural output bit plus the chip key. Any
+/// change to `map_layer`'s math, the pass/LUT cost constants it consumes,
+/// or the default chip geometry changes this value — no manual version
+/// bump required. Used to guard [`CacheSnapshot`] exchange between
+/// processes: a snapshot only loads into a binary whose mapper would have
+/// produced the same plans.
+pub fn mapper_fingerprint() -> String {
+    let chip = ChipConfig::lr();
+    let probes = [
+        Layer {
+            name: "probe_conv".into(),
+            input: Shape::new(16, 16, 8),
+            kind: LayerKind::Conv { k: 3, out_c: 16, stride: 1, pad: 1, groups: 1, relu: true },
+            from: None,
+        },
+        Layer {
+            name: "probe_pool".into(),
+            input: Shape::new(16, 16, 16),
+            kind: LayerKind::MaxPool { win: 2, stride: 2 },
+            from: None,
+        },
+        Layer {
+            name: "probe_gap".into(),
+            input: Shape::new(8, 8, 16),
+            kind: LayerKind::AvgPool { win: 8, stride: 8 },
+            from: None,
+        },
+        Layer {
+            name: "probe_fc".into(),
+            input: Shape::new(1, 1, 256),
+            kind: LayerKind::Fc { out_features: 64, relu: false },
+            from: None,
+        },
+        Layer {
+            name: "probe_res".into(),
+            input: Shape::new(8, 8, 16),
+            kind: LayerKind::ResidualAdd { from: 0, relu: true },
+            from: None,
+        },
+    ];
+    let mut words: Vec<u64> = Vec::new();
+    for layer in &probes {
+        for bits in [2u32, 8] {
+            let p = map_layer(layer, LayerPrec::uniform(bits), &chip);
+            words.push(p.steps);
+            words.push(p.caps_used);
+            for ev in [
+                p.latency_events.populate,
+                p.latency_events.multiply,
+                p.latency_events.reduce,
+                p.latency_events.readout,
+                p.latency_events.aux,
+            ] {
+                words.extend([ev.compares, ev.writes, ev.reads]);
+            }
+            for ce in [
+                p.energy_cells.populate,
+                p.energy_cells.multiply,
+                p.energy_cells.reduce,
+                p.energy_cells.readout,
+                p.energy_cells.aux,
+                p.map_cells,
+            ] {
+                words.extend([
+                    ce.compare_senses.to_bits(),
+                    ce.lut_write_cells.to_bits(),
+                    ce.populate_write_cells.to_bits(),
+                    ce.read_senses.to_bits(),
+                ]);
+            }
+            words.push(p.mesh_bits);
+            words.push(p.mesh_bits_critical);
+        }
+    }
+    words.extend(chip.cache_key().to_words());
+    let mut h = FNV_OFFSET;
+    for w in &words {
+        h = fnv1a(h, &w.to_le_bytes());
+    }
+    format!("{h:016x}")
+}
+
+/// FNV-1a offset basis.
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+
+/// Fold `bytes` into a running FNV-1a state.
+fn fnv1a(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+// ---- Lossless JSON encoding of keys and plans. --------------------------
+//
+// `u64` -> decimal string; `f64` -> decimal string of its bit pattern.
+// Everything here is internal: the only public surface is `CacheSnapshot`
+// and the `mapper_fingerprint` guard above.
+
+fn ju64(x: u64) -> Json {
+    Json::str(x.to_string())
+}
+
+fn pu64(v: Option<&Json>, what: &str) -> Result<u64, String> {
+    v.and_then(Json::as_str)
+        .ok_or_else(|| format!("{what}: expected a decimal string"))?
+        .parse::<u64>()
+        .map_err(|e| format!("{what}: {e}"))
+}
+
+fn jf64(x: f64) -> Json {
+    ju64(x.to_bits())
+}
+
+fn pf64(v: Option<&Json>, what: &str) -> Result<f64, String> {
+    Ok(f64::from_bits(pu64(v, what)?))
+}
+
+fn events_to_json(e: &Events) -> Json {
+    Json::obj([("c", ju64(e.compares)), ("w", ju64(e.writes)), ("r", ju64(e.reads))])
+}
+
+fn events_from_json(v: &Json) -> Result<Events, String> {
+    Ok(Events::new(
+        pu64(v.get("c"), "events.c")?,
+        pu64(v.get("w"), "events.w")?,
+        pu64(v.get("r"), "events.r")?,
+    ))
+}
+
+fn cells_to_json(c: &CellEvents) -> Json {
+    Json::obj([
+        ("cs", jf64(c.compare_senses)),
+        ("lw", jf64(c.lut_write_cells)),
+        ("pw", jf64(c.populate_write_cells)),
+        ("rs", jf64(c.read_senses)),
+    ])
+}
+
+fn cells_from_json(v: &Json) -> Result<CellEvents, String> {
+    Ok(CellEvents {
+        compare_senses: pf64(v.get("cs"), "cells.cs")?,
+        lut_write_cells: pf64(v.get("lw"), "cells.lw")?,
+        populate_write_cells: pf64(v.get("pw"), "cells.pw")?,
+        read_senses: pf64(v.get("rs"), "cells.rs")?,
+    })
+}
+
+fn phases_to_json<T>(t: &PhaseTable<T>, f: impl Fn(&T) -> Json) -> Json {
+    Json::obj([
+        ("populate", f(&t.populate)),
+        ("multiply", f(&t.multiply)),
+        ("reduce", f(&t.reduce)),
+        ("readout", f(&t.readout)),
+        ("aux", f(&t.aux)),
+    ])
+}
+
+fn phases_from_json<T: Default + Copy>(
+    v: &Json,
+    f: impl Fn(&Json) -> Result<T, String>,
+) -> Result<PhaseTable<T>, String> {
+    let phase = |name: &str| -> Result<T, String> {
+        f(v.get(name).ok_or_else(|| format!("phases: missing '{name}'"))?)
+    };
+    Ok(PhaseTable {
+        populate: phase("populate")?,
+        multiply: phase("multiply")?,
+        reduce: phase("reduce")?,
+        readout: phase("readout")?,
+        aux: phase("aux")?,
+    })
+}
+
+fn layer_kind_to_json(k: &LayerKind) -> Json {
+    match k {
+        LayerKind::Conv { k, out_c, stride, pad, groups, relu } => Json::obj([
+            ("op", Json::str("conv")),
+            ("k", ju64(*k)),
+            ("out_c", ju64(*out_c)),
+            ("stride", ju64(*stride)),
+            ("pad", ju64(*pad)),
+            ("groups", ju64(*groups)),
+            ("relu", Json::Bool(*relu)),
+        ]),
+        LayerKind::Fc { out_features, relu } => Json::obj([
+            ("op", Json::str("fc")),
+            ("out_features", ju64(*out_features)),
+            ("relu", Json::Bool(*relu)),
+        ]),
+        LayerKind::MaxPool { win, stride } => Json::obj([
+            ("op", Json::str("maxpool")),
+            ("win", ju64(*win)),
+            ("stride", ju64(*stride)),
+        ]),
+        LayerKind::AvgPool { win, stride } => Json::obj([
+            ("op", Json::str("avgpool")),
+            ("win", ju64(*win)),
+            ("stride", ju64(*stride)),
+        ]),
+        LayerKind::ResidualAdd { from, relu } => Json::obj([
+            ("op", Json::str("residual")),
+            ("from", ju64(*from as u64)),
+            ("relu", Json::Bool(*relu)),
+        ]),
+    }
+}
+
+fn layer_kind_from_json(v: &Json) -> Result<LayerKind, String> {
+    let relu = || -> Result<bool, String> {
+        v.get("relu").and_then(Json::as_bool).ok_or("kind: missing 'relu'".to_string())
+    };
+    match v.get("op").and_then(Json::as_str) {
+        Some("conv") => Ok(LayerKind::Conv {
+            k: pu64(v.get("k"), "conv.k")?,
+            out_c: pu64(v.get("out_c"), "conv.out_c")?,
+            stride: pu64(v.get("stride"), "conv.stride")?,
+            pad: pu64(v.get("pad"), "conv.pad")?,
+            groups: pu64(v.get("groups"), "conv.groups")?,
+            relu: relu()?,
+        }),
+        Some("fc") => Ok(LayerKind::Fc {
+            out_features: pu64(v.get("out_features"), "fc.out_features")?,
+            relu: relu()?,
+        }),
+        Some("maxpool") => Ok(LayerKind::MaxPool {
+            win: pu64(v.get("win"), "maxpool.win")?,
+            stride: pu64(v.get("stride"), "maxpool.stride")?,
+        }),
+        Some("avgpool") => Ok(LayerKind::AvgPool {
+            win: pu64(v.get("win"), "avgpool.win")?,
+            stride: pu64(v.get("stride"), "avgpool.stride")?,
+        }),
+        Some("residual") => Ok(LayerKind::ResidualAdd {
+            from: pu64(v.get("from"), "residual.from")? as usize,
+            relu: relu()?,
+        }),
+        other => Err(format!("kind: unknown op {other:?}")),
+    }
+}
+
+fn work_kind_name(k: WorkKind) -> &'static str {
+    match k {
+        WorkKind::Gemm => "gemm",
+        WorkKind::Pooling => "pooling",
+        WorkKind::Residual => "residual",
+        WorkKind::Relu => "relu",
+    }
+}
+
+fn work_kind_from_name(s: &str) -> Result<WorkKind, String> {
+    match s {
+        "gemm" => Ok(WorkKind::Gemm),
+        "pooling" => Ok(WorkKind::Pooling),
+        "residual" => Ok(WorkKind::Residual),
+        "relu" => Ok(WorkKind::Relu),
+        other => Err(format!("unknown work kind '{other}'")),
+    }
+}
+
+fn key_to_json(k: &PlanKey) -> Json {
+    Json::obj([
+        (
+            "input",
+            Json::obj([
+                ("h", ju64(k.input.h)),
+                ("w", ju64(k.input.w)),
+                ("c", ju64(k.input.c)),
+            ]),
+        ),
+        ("kind", layer_kind_to_json(&k.kind)),
+        ("prec", Json::obj([("w", ju64(k.prec.w as u64)), ("a", ju64(k.prec.a as u64))])),
+        ("chip", Json::arr(k.chip.to_words().iter().map(|&w| ju64(w)))),
+    ])
+}
+
+fn key_from_json(v: &Json) -> Result<PlanKey, String> {
+    let input = v.get("input").ok_or("key: missing 'input'")?;
+    let input = Shape::new(
+        pu64(input.get("h"), "input.h")?,
+        pu64(input.get("w"), "input.w")?,
+        pu64(input.get("c"), "input.c")?,
+    );
+    let kind = layer_kind_from_json(v.get("kind").ok_or("key: missing 'kind'")?)?;
+    let prec = v.get("prec").ok_or("key: missing 'prec'")?;
+    let prec = LayerPrec {
+        w: pu64(prec.get("w"), "prec.w")? as u32,
+        a: pu64(prec.get("a"), "prec.a")? as u32,
+    };
+    let words = v
+        .get("chip")
+        .and_then(Json::as_arr)
+        .ok_or("key: missing 'chip' words")?
+        .iter()
+        .map(|w| pu64(Some(w), "chip word"))
+        .collect::<Result<Vec<u64>, String>>()?;
+    let chip = ChipKey::from_words(&words).ok_or("key: malformed chip words")?;
+    Ok(PlanKey { input, kind, prec, chip })
+}
+
+fn plan_to_json(p: &LayerPlan) -> Json {
+    Json::obj([
+        ("name", Json::str(p.name.as_ref())),
+        ("kind", Json::str(work_kind_name(p.kind))),
+        ("steps", ju64(p.steps)),
+        ("caps_used", ju64(p.caps_used)),
+        ("latency", phases_to_json(&p.latency_events, events_to_json)),
+        ("energy", phases_to_json(&p.energy_cells, cells_to_json)),
+        ("mesh_bits", ju64(p.mesh_bits)),
+        ("mesh_bits_critical", ju64(p.mesh_bits_critical)),
+        ("map_cells", cells_to_json(&p.map_cells)),
+    ])
+}
+
+fn plan_from_json(v: &Json) -> Result<LayerPlan, String> {
+    Ok(LayerPlan {
+        name: v.get("name").and_then(Json::as_str).ok_or("plan: missing 'name'")?.into(),
+        kind: work_kind_from_name(
+            v.get("kind").and_then(Json::as_str).ok_or("plan: missing 'kind'")?,
+        )?,
+        steps: pu64(v.get("steps"), "plan.steps")?,
+        caps_used: pu64(v.get("caps_used"), "plan.caps_used")?,
+        latency_events: phases_from_json(
+            v.get("latency").ok_or("plan: missing 'latency'")?,
+            events_from_json,
+        )?,
+        energy_cells: phases_from_json(
+            v.get("energy").ok_or("plan: missing 'energy'")?,
+            cells_from_json,
+        )?,
+        mesh_bits: pu64(v.get("mesh_bits"), "plan.mesh_bits")?,
+        mesh_bits_critical: pu64(v.get("mesh_bits_critical"), "plan.mesh_bits_critical")?,
+        map_cells: cells_from_json(v.get("map_cells").ok_or("plan: missing 'map_cells'")?)?,
+    })
 }
 
 #[cfg(test)]
@@ -227,6 +742,104 @@ mod tests {
         // cache must have kept them apart.
         assert!(on_lr.layers.iter().any(|l| l.steps > 1));
         assert!(on_ir.layers.iter().filter(|l| l.kind == crate::mapper::WorkKind::Gemm).all(|l| l.steps == 1));
+    }
+
+    #[test]
+    fn snapshot_round_trips_bit_for_bit() {
+        let net = zoo::resnet18();
+        let chip = ChipConfig::lr();
+        let donor = PlanCache::new();
+        for bits in [2u32, 4, 8] {
+            donor.prewarm(&net, &chip, &PrecisionConfig::fixed(bits, net.weight_layers()));
+        }
+        let snap = donor.snapshot();
+        assert_eq!(snap.len(), donor.len());
+
+        // JSON round trip: value-identical, and the writer is deterministic.
+        let text = snap.to_json().to_string();
+        let parsed = CacheSnapshot::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(parsed.to_json().to_string(), text);
+
+        // Absorbing into a fresh cache reproduces the donor's plans exactly:
+        // a full re-mapping misses on nothing and matches bit for bit.
+        let fresh = PlanCache::new();
+        assert_eq!(fresh.absorb(&parsed), snap.len());
+        for bits in [2u32, 4, 8] {
+            let cfg = PrecisionConfig::fixed(bits, net.weight_layers());
+            let from_snapshot = fresh.map_network(&net, &chip, &cfg);
+            let direct = map_network(&net, &chip, &cfg);
+            for (s, d) in from_snapshot.layers.iter().zip(&direct.layers) {
+                assert_plans_identical(s, d);
+            }
+        }
+        assert_eq!(fresh.stats().misses, 0, "snapshot should cover every lookup");
+        // Absorbing twice adds nothing.
+        assert_eq!(fresh.absorb(&parsed), 0);
+    }
+
+    #[test]
+    fn prewarm_reports_new_plans() {
+        let net = zoo::alexnet();
+        let chip = ChipConfig::lr();
+        let cache = PlanCache::new();
+        let cfg = PrecisionConfig::fixed(6, net.weight_layers());
+        let added = cache.prewarm(&net, &chip, &cfg);
+        assert!(added > 0);
+        assert_eq!(added, cache.len());
+        // Same coordinates again: nothing new.
+        assert_eq!(cache.prewarm(&net, &chip, &cfg), 0);
+    }
+
+    #[test]
+    fn snapshot_rejects_malformed_documents() {
+        assert!(CacheSnapshot::from_json(&Json::parse("{}").unwrap()).is_err());
+        let bad_version = Json::parse(r#"{"version": 99, "entries": []}"#).unwrap();
+        assert!(CacheSnapshot::from_json(&bad_version).is_err());
+        // Fingerprint is mandatory...
+        let no_fp = Json::parse(r#"{"version": 1, "entries": []}"#).unwrap();
+        assert!(CacheSnapshot::from_json(&no_fp).is_err());
+        // A well-formed empty snapshot round-trips.
+        let empty = CacheSnapshot::default().to_json();
+        assert!(CacheSnapshot::from_json(&empty).unwrap().is_empty());
+        // A snapshot from a different mapper build is rejected.
+        let mut stale = match CacheSnapshot::default().to_json() {
+            Json::Obj(m) => m,
+            _ => unreachable!("snapshots serialize to objects"),
+        };
+        stale.insert("fingerprint".to_string(), Json::str("0000000000000000"));
+        let err = CacheSnapshot::from_json(&Json::Obj(stale)).unwrap_err();
+        assert!(err.contains("different mapper"), "{err}");
+    }
+
+    #[test]
+    fn snapshot_rejects_corrupted_entries() {
+        let net = zoo::alexnet();
+        let chip = ChipConfig::lr();
+        let donor = PlanCache::new();
+        donor.prewarm(&net, &chip, &PrecisionConfig::fixed(8, net.weight_layers()));
+        let mut doc = donor.snapshot().to_json();
+        // Sanity: the untampered document loads.
+        assert!(CacheSnapshot::from_json(&doc).is_ok());
+        // Flip one stored value (a parseable-but-wrong edit): the content
+        // checksum must catch it even though the fingerprint is intact.
+        if let Json::Obj(m) = &mut doc {
+            if let Some(Json::Arr(entries)) = m.get_mut("entries") {
+                if let Json::Obj(entry) = &mut entries[0] {
+                    if let Some(Json::Obj(plan)) = entry.get_mut("plan") {
+                        plan.insert("steps".to_string(), Json::str("999999"));
+                    }
+                }
+            }
+        }
+        let err = CacheSnapshot::from_json(&doc).unwrap_err();
+        assert!(err.contains("checksum"), "{err}");
+    }
+
+    #[test]
+    fn mapper_fingerprint_is_stable_within_a_build() {
+        let fp = mapper_fingerprint();
+        assert_eq!(fp.len(), 16, "{fp}");
+        assert_eq!(fp, mapper_fingerprint(), "fingerprint must be deterministic");
     }
 
     #[test]

@@ -21,7 +21,7 @@
 
 pub mod cache;
 
-pub use cache::{CacheStats, PlanCache, PlanKey};
+pub use cache::{CacheSnapshot, CacheStats, PlanCache, PlanKey};
 
 use std::sync::Arc;
 
@@ -95,9 +95,13 @@ impl PhaseTable<f64> {
 /// What kind of work a mapped layer performs (Fig. 8a energy categories).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum WorkKind {
+    /// im2col GEMM (conv / fc).
     Gemm,
+    /// Max / average pooling.
     Pooling,
+    /// Residual element-wise addition.
     Residual,
+    /// Standalone ReLU pass.
     Relu,
 }
 
@@ -119,7 +123,9 @@ impl WorkKind {
 /// `Arc<str>` name — which is what makes [`PlanCache`] hits nearly free.
 #[derive(Debug, Clone)]
 pub struct LayerPlan {
+    /// Layer name (interned, shared with the model).
     pub name: Arc<str>,
+    /// What kind of work the layer performs.
     pub kind: WorkKind,
     /// Time-folding steps (1 in IR for every paper workload).
     pub steps: u64,
@@ -143,7 +149,9 @@ pub struct LayerPlan {
 /// A whole network mapped onto a chip under a precision configuration.
 #[derive(Debug, Clone)]
 pub struct NetworkPlan {
+    /// Network name.
     pub net_name: String,
+    /// Per-layer plans, in execution order.
     pub layers: Vec<LayerPlan>,
 }
 

@@ -15,8 +15,11 @@ use std::sync::Arc;
 /// A 3-D feature-map shape (height, width, channels).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct Shape {
+    /// Height.
     pub h: u64,
+    /// Width.
     pub w: u64,
+    /// Channels.
     pub c: u64,
 }
 
@@ -64,8 +67,11 @@ pub struct Layer {
     /// simulation point (the DSE hot path maps every layer thousands of
     /// times per sweep).
     pub name: Arc<str>,
+    /// Input feature-map shape.
     pub input: Shape,
+    /// What the layer computes.
     pub kind: LayerKind,
+    /// Index of the layer feeding this one (`None` = the previous layer).
     pub from: Option<usize>,
 }
 
@@ -141,8 +147,11 @@ impl Layer {
 /// A whole network: named, with an ImageNet-style input.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Network {
+    /// Model name (zoo name).
     pub name: String,
+    /// Input shape (e.g. 224x224x3 for the ImageNet models).
     pub input: Shape,
+    /// Layers in execution order.
     pub layers: Vec<Layer>,
 }
 

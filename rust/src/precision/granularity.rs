@@ -25,6 +25,7 @@ use crate::util::rng::Rng;
 /// one weight width per channel.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ChannelConfig {
+    /// Uniform activation bits.
     pub a_bits: u32,
     /// Weight bits per output channel (length = out channels).
     pub w_bits: Vec<u32>,

@@ -58,6 +58,7 @@ impl LatencyBudget {
 /// One Table VII row: configuration + published reference metrics.
 #[derive(Debug, Clone)]
 pub struct HawqRow {
+    /// Which latency-budget row this is.
     pub budget: LatencyBudget,
     /// Per-layer bits, HAWQ-V3's 19-layer accounting.
     pub bits: [u32; 19],

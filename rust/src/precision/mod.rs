@@ -33,6 +33,7 @@ impl LayerPrec {
 /// A named per-weight-layer precision assignment.
 #[derive(Debug, Clone, PartialEq)]
 pub struct PrecisionConfig {
+    /// Configuration name (e.g. `INT8`, `mixed-avg5.0`).
     pub name: String,
     /// One entry per weight-carrying layer, in execution order.
     pub per_layer: Vec<LayerPrec>,

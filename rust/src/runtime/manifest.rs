@@ -32,22 +32,28 @@ pub struct ArtifactEntry {
 pub struct ConfigInfo {
     /// Per-weight-layer (w_bits, a_bits) pairs.
     pub per_layer: Vec<(u32, u32)>,
+    /// Average configured bitwidth.
     pub avg_bits: f64,
 }
 
 /// Parsed `artifacts/manifest.json`.
 #[derive(Debug, Clone)]
 pub struct Manifest {
+    /// Model name the artifacts were exported from.
     pub model: String,
     /// Input feature-map shape (H, W, C).
     pub input_shape: (u64, u64, u64),
+    /// Output class count.
     pub num_classes: u64,
+    /// Total weight parameters.
     pub param_count: u64,
+    /// Batch sizes each configuration was compiled at.
     pub batch_sizes: Vec<u64>,
     /// Precision configurations by name (excludes `float`).
     pub configs: BTreeMap<String, ConfigInfo>,
     /// Held-out accuracy by config name (includes `float`).
     pub accuracies: BTreeMap<String, f64>,
+    /// Every exported (config, batch) artifact.
     pub artifacts: Vec<ArtifactEntry>,
     /// Directory the manifest was loaded from.
     pub dir: PathBuf,

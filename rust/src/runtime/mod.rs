@@ -10,7 +10,7 @@
 //!
 //! The PJRT backend requires the `xla` crate, which the offline vendor set
 //! does not carry, so it is gated behind the `pjrt` cargo feature. The
-//! default build substitutes [`stub::Runtime`] — the identical API, erroring
+//! default build substitutes the stub [`Runtime`] — the identical API, erroring
 //! at artifact-load time — so the coordinator, benches, and examples
 //! compile and cleanly report the missing backend.
 

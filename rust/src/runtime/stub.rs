@@ -1,6 +1,6 @@
 //! Stub runtime used when the crate is built without the `pjrt` feature
-//! (the offline vendor set has no `xla` crate). The API matches
-//! [`super::pjrt::Runtime`] exactly so the coordinator, benches, and
+//! (the offline vendor set has no `xla` crate). The API matches the
+//! feature-gated `pjrt::Runtime` exactly so the coordinator, benches, and
 //! examples compile unchanged; loading artifacts fails with a clear error
 //! at run time, which the artifact-gated tests and demos already treat as
 //! "skip".

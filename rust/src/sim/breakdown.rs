@@ -11,7 +11,9 @@ use crate::mapper::{PhaseTable, WorkKind};
 /// One named share of a breakdown.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Share {
+    /// Category / phase name.
     pub label: String,
+    /// Absolute value (joules or seconds).
     pub value: f64,
     /// Fraction of the total (0..=1).
     pub fraction: f64,

@@ -5,6 +5,7 @@
 //! the corresponding bench targets (`fig6_tech_ratios`, `fig7_dse`) render
 //! them as tables.
 
+use super::shard::{hw_name, SweepSpec};
 use super::{SimParams, SweepEngine, SweepPoint};
 use crate::ap::tech::Tech;
 use crate::arch::HwConfig;
@@ -16,6 +17,7 @@ use crate::util::stats;
 /// One Fig. 6 point: ReRAM-to-SRAM ratios at a fixed precision on VGG16.
 #[derive(Debug, Clone, Copy)]
 pub struct Fig6Row {
+    /// Fixed weight/activation bitwidth of the point.
     pub bits: u32,
     /// Energy(ReRAM) / Energy(SRAM).
     pub energy_ratio: f64,
@@ -65,8 +67,11 @@ pub fn fig6_tech_ratios_with(engine: &SweepEngine, net: &Network) -> Vec<Fig6Row
 /// share an average precision.
 #[derive(Debug, Clone)]
 pub struct Fig7Point {
+    /// Network name.
     pub net_name: String,
+    /// Hardware configuration of the series.
     pub hw: HwConfig,
+    /// Target average bitwidth of the combination group.
     pub avg_bits: f64,
     /// Mean energy per inference across the combination group, J.
     pub energy_j: f64,
@@ -142,6 +147,15 @@ pub fn perf_dse_batch() -> (Vec<Network>, Vec<(usize, PrecisionConfig)>) {
         }
     }
     (nets, cfgs)
+}
+
+/// The Fig. 7 sweep of [`fig7_series`] as a serializable
+/// [`SweepSpec`] — the shape `bf-imna sweep` shards across processes.
+/// Resolving the spec enumerates exactly the `targets × COMBOS_PER_TARGET`
+/// configuration points `fig7_series_with` fans out, in the same order, so
+/// a sharded run reproduces the figure's numbers bit for bit.
+pub fn fig7_spec(net: &Network, hw: HwConfig, seed: u64) -> SweepSpec {
+    SweepSpec::fig7(&net.name, hw_name(hw), COMBOS_PER_TARGET, seed)
 }
 
 /// §V-A "Voltage Scaling" — relative energy saving from dropping V_DD to
@@ -237,6 +251,28 @@ mod tests {
                 l.avg_bits,
                 l.gops_per_w_mm2,
                 i.gops_per_w_mm2
+            );
+        }
+    }
+
+    #[test]
+    fn fig7_spec_reproduces_fig7_series_numbers() {
+        // The serializable spec and the in-process series must agree: the
+        // spec's flattened points, averaged per target group, are the
+        // series' energies bit for bit.
+        let net = zoo::alexnet();
+        let series = fig7_series(&net, HwConfig::Lr, 7);
+        let resolved = fig7_spec(&net, HwConfig::Lr, 7).resolve().unwrap();
+        assert_eq!(resolved.num_points(), series.len() * COMBOS_PER_TARGET);
+        let engine = SweepEngine::new();
+        let reports = engine.run(&resolved.points(0..resolved.num_points()));
+        for (g, point) in series.iter().enumerate() {
+            let group = &reports[g * COMBOS_PER_TARGET..(g + 1) * COMBOS_PER_TARGET];
+            let energies: Vec<f64> = group.iter().map(|r| r.energy_j()).collect();
+            assert_eq!(
+                stats::mean(&energies).to_bits(),
+                point.energy_j.to_bits(),
+                "group {g} diverged"
             );
         }
     }

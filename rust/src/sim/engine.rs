@@ -10,9 +10,9 @@
 //! * **parallel** — points fan out across `std::thread::scope` workers
 //!   (an atomic work queue, no work item ever computed twice);
 //! * **deterministic** — results come back in input order, and every
-//!   report is bit-identical to a direct [`simulate`] call: workers run
-//!   the same pure function on the same inputs, so neither thread count
-//!   nor cache state can change a single bit of the output.
+//!   report is bit-identical to a direct [`crate::sim::simulate`] call:
+//!   workers run the same pure function on the same inputs, so neither
+//!   thread count nor cache state can change a single bit of the output.
 //!
 //! Chip configurations are resolved once per (hardware config, network)
 //! and shared across that network's points, removing the per-point
@@ -33,8 +33,11 @@ use crate::precision::PrecisionConfig;
 /// One independent simulation point of a sweep.
 #[derive(Clone, Copy)]
 pub struct SweepPoint<'a> {
+    /// Network to simulate.
     pub net: &'a Network,
+    /// Per-layer precision configuration.
     pub cfg: &'a PrecisionConfig,
+    /// Hardware point (chip family, cell technology, batch).
     pub params: SimParams,
     /// Explicit chip override (geometry ablations); `None` derives the
     /// chip from `params.hw` + `net`, memoized per network.
@@ -62,6 +65,25 @@ impl<'a> SweepPoint<'a> {
 ///
 /// Reuse one engine across related sweeps (e.g. all of Fig. 7's series):
 /// the cache carries over, so later sweeps start warm.
+///
+/// ```
+/// use bf_imna::model::zoo;
+/// use bf_imna::precision::PrecisionConfig;
+/// use bf_imna::sim::{simulate, SimParams, SweepEngine, SweepPoint};
+///
+/// let net = zoo::serve_cnn();
+/// let params = SimParams::lr_sram();
+/// let cfgs: Vec<_> =
+///     (2..=8).map(|b| PrecisionConfig::fixed(b, net.weight_layers())).collect();
+/// let points: Vec<_> = cfgs.iter().map(|c| SweepPoint::new(&net, c, &params)).collect();
+///
+/// let engine = SweepEngine::new();
+/// let reports = engine.run(&points);
+/// // Input order, one report per point, bit-identical to direct simulate().
+/// assert_eq!(reports.len(), points.len());
+/// let direct = simulate(&net, &cfgs[0], &params);
+/// assert_eq!(reports[0].energy_j().to_bits(), direct.energy_j().to_bits());
+/// ```
 #[derive(Debug)]
 pub struct SweepEngine {
     cache: PlanCache,
@@ -103,6 +125,24 @@ impl SweepEngine {
     /// Shorthand for `self.cache().stats()`.
     pub fn cache_stats(&self) -> CacheStats {
         self.cache.stats()
+    }
+
+    /// Batch-level cache prewarm: map every `points` coordinate into the
+    /// plan cache serially, returning how many new plans were stored. A
+    /// subsequent [`Self::run`] over the same points never maps cold — in
+    /// particular, parallel workers can no longer race on a cold key and
+    /// duplicate its `map_layer` work. Results are unaffected either way
+    /// (cached and uncached mapping are bit-identical); prewarming is
+    /// purely a work-scheduling optimization, and the engine's cache can
+    /// afterwards be [`PlanCache::snapshot`]ted and shipped to other
+    /// processes ([`crate::sim::shard`] does exactly that).
+    pub fn prewarm(&self, points: &[SweepPoint]) -> usize {
+        let chips = self.resolve_chips(points);
+        let before = self.cache.len();
+        for (p, chip) in points.iter().zip(&chips) {
+            self.cache.map_network(p.net, chip, p.cfg);
+        }
+        self.cache.len() - before
     }
 
     /// Simulate every point, returning reports **in input order**. Points
@@ -282,5 +322,27 @@ mod tests {
     #[test]
     fn empty_sweep_is_fine() {
         assert!(SweepEngine::new().run(&[]).is_empty());
+    }
+
+    #[test]
+    fn prewarmed_run_never_misses() {
+        let net = zoo::alexnet();
+        let params = SimParams::lr_sram();
+        let cfgs: Vec<PrecisionConfig> =
+            (2..=8).map(|b| PrecisionConfig::fixed(b, net.weight_layers())).collect();
+        let points = points_for(&net, &cfgs, &params);
+        let engine = SweepEngine::with_threads(4);
+        let added = engine.prewarm(&points);
+        assert!(added > 0);
+        // Prewarming the same batch again adds nothing.
+        assert_eq!(engine.prewarm(&points), 0);
+        let misses_before = engine.cache_stats().misses;
+        let reports = engine.run(&points);
+        assert_eq!(engine.cache_stats().misses, misses_before, "run after prewarm mapped cold");
+        // Still bit-identical to the cold path.
+        let cold = SweepEngine::serial().run(&points);
+        for (w, c) in reports.iter().zip(&cold) {
+            assert_eq!(w.energy_j().to_bits(), c.energy_j().to_bits());
+        }
     }
 }

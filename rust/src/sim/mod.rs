@@ -22,6 +22,7 @@
 pub mod breakdown;
 pub mod dse;
 pub mod engine;
+pub mod shard;
 
 pub use engine::{simulate_many, SweepEngine, SweepPoint};
 
@@ -36,7 +37,9 @@ use crate::precision::PrecisionConfig;
 /// A fully-specified simulation point.
 #[derive(Debug, Clone, Copy)]
 pub struct SimParams {
+    /// Hardware configuration (IR / LR chip family).
     pub hw: HwConfig,
+    /// Cell technology + supply point cost model.
     pub tech: Tech,
     /// Inference batch size (the paper evaluates batch = 1).
     pub batch: u64,
@@ -65,6 +68,7 @@ impl SimParams {
 pub struct LayerMetrics {
     /// Layer name, shared (not re-allocated) with the model / plan.
     pub name: Arc<str>,
+    /// What kind of work the layer performs (Fig. 8a categories).
     pub kind: WorkKind,
     /// Time-folding steps the LR mapping needed (1 on IR).
     pub steps: u64,
@@ -98,11 +102,17 @@ impl LayerMetrics {
 /// Whole-network simulation result.
 #[derive(Debug, Clone)]
 pub struct InferenceReport {
+    /// Network name.
     pub net_name: String,
+    /// Precision-configuration name.
     pub cfg_name: String,
+    /// Hardware configuration simulated.
     pub hw: HwConfig,
+    /// Cell technology + supply point simulated.
     pub tech: Tech,
+    /// Inference batch size.
     pub batch: u64,
+    /// Per-layer metrics, in execution order.
     pub layers: Vec<LayerMetrics>,
     /// Die area, mm².
     pub area_mm2: f64,
@@ -232,6 +242,20 @@ impl ScaleOut {
 
 /// Simulate end-to-end inference of `net` under `cfg` at hardware point
 /// `params`.
+///
+/// ```
+/// use bf_imna::model::zoo;
+/// use bf_imna::precision::PrecisionConfig;
+/// use bf_imna::sim::{simulate, SimParams};
+///
+/// let net = zoo::serve_cnn();
+/// let cfg = PrecisionConfig::fixed(8, net.weight_layers());
+/// let r = simulate(&net, &cfg, &SimParams::lr_sram());
+/// assert_eq!(r.layers.len(), net.layers.len());
+/// assert!(r.latency_s() > 0.0 && r.energy_j() > 0.0);
+/// // Derived metrics are consistent: EDP = energy x latency.
+/// assert!((r.edp_js() - r.energy_j() * r.latency_s()).abs() < 1e-12);
+/// ```
 pub fn simulate(net: &Network, cfg: &PrecisionConfig, params: &SimParams) -> InferenceReport {
     let chip = ChipConfig::for_network(params.hw, net);
     simulate_on(net, cfg, params, &chip)

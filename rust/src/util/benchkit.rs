@@ -13,7 +13,9 @@ use super::stats::Summary;
 /// One benchmark measurement: per-iteration wall-clock samples in seconds.
 #[derive(Debug, Clone)]
 pub struct BenchResult {
+    /// Benchmark name (printed in reports).
     pub name: String,
+    /// Per-iteration wall-clock samples, seconds.
     pub samples: Vec<f64>,
 }
 

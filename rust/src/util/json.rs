@@ -1,9 +1,26 @@
-//! Minimal JSON parser — just enough for `artifacts/manifest.json`.
+//! Minimal JSON parser **and deterministic writer**.
 //!
 //! The offline vendor set has no `serde_json`, so this module provides a
 //! small recursive-descent parser over a [`Json`] value enum. It supports
 //! the full JSON grammar except `\u` escapes beyond the BMP (sufficient
 //! for the ASCII manifest the AOT exporter writes).
+//!
+//! The writer (`Display`, i.e. `to_string()`) is **canonical**: objects
+//! serialize with keys in sorted order (they are stored in a `BTreeMap`),
+//! arrays in element order, no whitespace, and numbers in shortest
+//! round-trip form — so two equal [`Json`] values always produce
+//! byte-identical text. [`crate::sim::shard`] leans on this: a merged
+//! sweep document is byte-identical to the single-process one because both
+//! funnel through this writer.
+//!
+//! ```
+//! use bf_imna::util::json::Json;
+//! let doc = Json::parse(r#"{"b": [1, 2.5], "a": "x"}"#).unwrap();
+//! // Canonical writer: sorted keys, no whitespace, shortest numbers.
+//! assert_eq!(doc.to_string(), r#"{"a":"x","b":[1,2.5]}"#);
+//! // Round trip is the identity on writer output.
+//! assert_eq!(Json::parse(&doc.to_string()).unwrap(), doc);
+//! ```
 
 use std::collections::BTreeMap;
 use std::fmt;
@@ -11,12 +28,87 @@ use std::fmt;
 /// A parsed JSON value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// The `null` literal.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any number (JSON does not distinguish integers from floats).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array of values.
     Arr(Vec<Json>),
+    /// An object; `BTreeMap` keeps keys sorted, making the writer
+    /// deterministic.
     Obj(BTreeMap<String, Json>),
+}
+
+impl fmt::Display for Json {
+    /// Canonical compact serialization (see module docs).
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Json::Null => f.write_str("null"),
+            Json::Bool(b) => write!(f, "{b}"),
+            Json::Num(n) => write_num(f, *n),
+            Json::Str(s) => write_str(f, s),
+            Json::Arr(items) => {
+                f.write_str("[")?;
+                for (i, v) in items.iter().enumerate() {
+                    if i > 0 {
+                        f.write_str(",")?;
+                    }
+                    write!(f, "{v}")?;
+                }
+                f.write_str("]")
+            }
+            Json::Obj(map) => {
+                f.write_str("{")?;
+                for (i, (k, v)) in map.iter().enumerate() {
+                    if i > 0 {
+                        f.write_str(",")?;
+                    }
+                    write_str(f, k)?;
+                    f.write_str(":")?;
+                    write!(f, "{v}")?;
+                }
+                f.write_str("}")
+            }
+        }
+    }
+}
+
+/// Write a number in shortest round-trip form: integer-valued floats in
+/// `i64` range print without a fractional part, everything else uses Rust's
+/// shortest-round-trip `f64` formatting. Non-finite values (which JSON
+/// cannot represent) serialize as `null`.
+fn write_num(f: &mut fmt::Formatter<'_>, n: f64) -> fmt::Result {
+    if !n.is_finite() {
+        return f.write_str("null");
+    }
+    if n.fract() == 0.0 && n.abs() < 9.0e15 {
+        write!(f, "{}", n as i64)
+    } else {
+        write!(f, "{n}")
+    }
+}
+
+/// Write a string with the escapes the parser understands.
+fn write_str(f: &mut fmt::Formatter<'_>, s: &str) -> fmt::Result {
+    f.write_str("\"")?;
+    for c in s.chars() {
+        match c {
+            '"' => f.write_str("\\\"")?,
+            '\\' => f.write_str("\\\\")?,
+            '\n' => f.write_str("\\n")?,
+            '\t' => f.write_str("\\t")?,
+            '\r' => f.write_str("\\r")?,
+            '\u{8}' => f.write_str("\\b")?,
+            '\u{c}' => f.write_str("\\f")?,
+            c if (c as u32) < 0x20 => write!(f, "\\u{:04x}", c as u32)?,
+            c => write!(f, "{c}")?,
+        }
+    }
+    f.write_str("\"")
 }
 
 impl Json {
@@ -36,6 +128,14 @@ impl Json {
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
+            _ => None,
+        }
+    }
+
+    /// Boolean content, if this is a bool.
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
             _ => None,
         }
     }
@@ -76,12 +176,35 @@ impl Json {
             _ => None,
         }
     }
+
+    /// Build a string value.
+    pub fn str(s: impl Into<String>) -> Json {
+        Json::Str(s.into())
+    }
+
+    /// Build a number value.
+    pub fn num(n: f64) -> Json {
+        Json::Num(n)
+    }
+
+    /// Build an array from any iterator of values.
+    pub fn arr(items: impl IntoIterator<Item = Json>) -> Json {
+        Json::Arr(items.into_iter().collect())
+    }
+
+    /// Build an object from key/value pairs (keys sort on write; duplicate
+    /// keys keep the last value, as in the parser).
+    pub fn obj<K: Into<String>>(entries: impl IntoIterator<Item = (K, Json)>) -> Json {
+        Json::Obj(entries.into_iter().map(|(k, v)| (k.into(), v)).collect())
+    }
 }
 
 /// Parse failure with byte offset.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct JsonError {
+    /// Byte offset into the input where parsing failed.
     pub offset: usize,
+    /// Human-readable description of the failure.
     pub message: String,
 }
 
@@ -323,6 +446,51 @@ mod tests {
         assert!(Json::parse("\"unterminated").is_err());
         assert!(Json::parse("12 34").is_err());
         assert!(Json::parse("nul").is_err());
+    }
+
+    #[test]
+    fn writer_is_canonical_and_round_trips() {
+        let doc = Json::parse(r#"{ "b" : [1, 2.5, -3e2], "a": {"x": null, "y": true} }"#).unwrap();
+        let text = doc.to_string();
+        assert_eq!(text, r#"{"a":{"x":null,"y":true},"b":[1,2.5,-300]}"#);
+        // parse(write(v)) == v, and write is idempotent on its own output.
+        let reparsed = Json::parse(&text).unwrap();
+        assert_eq!(reparsed, doc);
+        assert_eq!(reparsed.to_string(), text);
+    }
+
+    #[test]
+    fn writer_escapes_strings() {
+        let v = Json::str("a\"b\\c\nd\te\u{1}");
+        let text = v.to_string();
+        assert_eq!(text, "\"a\\\"b\\\\c\\nd\\te\\u0001\"");
+        assert_eq!(Json::parse(&text).unwrap(), v);
+    }
+
+    #[test]
+    fn writer_float_round_trip_is_exact() {
+        for x in [0.1, 1.0 / 3.0, 6.02e23, 137.45, 1e-15, -0.0, 5.0] {
+            let text = Json::Num(x).to_string();
+            let back = Json::parse(&text).unwrap().as_f64().unwrap();
+            // -0.0 collapses to 0 in text, which compares equal; everything
+            // else must round-trip to the same bits.
+            if x != 0.0 {
+                assert_eq!(back.to_bits(), x.to_bits(), "{x} -> {text} -> {back}");
+            }
+            // The writer is a function of the value: re-writing the parse
+            // reproduces the text.
+            assert_eq!(Json::Num(back).to_string(), text);
+        }
+    }
+
+    #[test]
+    fn builders_compose() {
+        let v = Json::obj([
+            ("n", Json::num(3.0)),
+            ("s", Json::str("hi")),
+            ("a", Json::arr([Json::Null, Json::Bool(false)])),
+        ]);
+        assert_eq!(v.to_string(), r#"{"a":[null,false],"n":3,"s":"hi"}"#);
     }
 
     #[test]

@@ -5,6 +5,7 @@
 //! replacements:
 //!
 //! * [`error`] — an `anyhow`-shaped error type + `anyhow!` macro,
+//! * [`json`] — a JSON parser + canonical (byte-deterministic) writer,
 //! * [`rng`] — an xorshift64* PRNG (deterministic, seedable),
 //! * [`stats`] — summary statistics (mean, percentiles, geomean),
 //! * [`table`] — fixed-width ASCII table rendering for bench reports,

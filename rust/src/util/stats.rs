@@ -52,11 +52,17 @@ pub fn percentile(xs: &[f64], q: f64) -> f64 {
 /// Min/mean/p50/p99/max summary of a set of samples.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Summary {
+    /// Sample count.
     pub n: usize,
+    /// Smallest sample.
     pub min: f64,
+    /// Arithmetic mean.
     pub mean: f64,
+    /// Median.
     pub p50: f64,
+    /// 99th percentile.
     pub p99: f64,
+    /// Largest sample.
     pub max: f64,
 }
 

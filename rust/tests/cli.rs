@@ -1,0 +1,159 @@
+//! CLI smoke tests: the `bf-imna` binary's help must cover every command
+//! and sweep-service flag it actually accepts, and the sharded sweep +
+//! merge path must reproduce the single-process sweep byte for byte.
+
+use std::path::PathBuf;
+use std::process::{Command, Output};
+
+fn bin() -> &'static str {
+    env!("CARGO_BIN_EXE_bf-imna")
+}
+
+fn run(args: &[&str]) -> Output {
+    Command::new(bin()).args(args).output().expect("spawn bf-imna")
+}
+
+fn stdout(o: &Output) -> String {
+    String::from_utf8_lossy(&o.stdout).to_string()
+}
+
+/// A unique scratch directory per test (removed at the end, best effort).
+fn scratch(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("bf_imna_cli_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("create scratch dir");
+    dir
+}
+
+#[test]
+fn help_covers_every_command_and_sweep_service_flag() {
+    let out = run(&["help"]);
+    assert!(out.status.success());
+    let text = stdout(&out);
+    for cmd in ["simulate", "sweep", "merge", "hawq", "compare", "validate", "serve"] {
+        assert!(text.contains(cmd), "help does not mention command '{cmd}'");
+    }
+    // The sweep-service flags the binary accepts must all be documented.
+    for flag in [
+        "--net", "--bits", "--hw", "--tech", "--breakdown", "--out", "--shards", "--shard-id",
+        "--combos", "--seed", "--cache-in", "--cache-out", "--artifacts", "--requests",
+    ] {
+        assert!(text.contains(flag), "help does not mention flag '{flag}'");
+    }
+    // No args behaves like help.
+    assert_eq!(stdout(&run(&[])), text);
+}
+
+#[test]
+fn unknown_command_fails_with_usage() {
+    let out = run(&["frobnicate"]);
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr).to_string();
+    assert!(err.contains("unknown command"), "{err}");
+    assert!(err.contains("USAGE"), "{err}");
+}
+
+#[test]
+fn simulate_prints_the_metric_table() {
+    let out = run(&["simulate", "--net", "serve_cnn", "--bits", "4"]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = stdout(&out);
+    for needle in ["INT4", "latency / inference", "energy / inference", "throughput"] {
+        assert!(text.contains(needle), "missing '{needle}' in:\n{text}");
+    }
+    // Bad flags fail loudly.
+    assert!(!run(&["simulate", "--net", "lenet"]).status.success());
+    assert!(!run(&["simulate", "--tech", "dram"]).status.success());
+    assert!(!run(&["simulate", "--hw", "mr"]).status.success());
+}
+
+#[test]
+fn sweep_table_mode_prints_the_series() {
+    let out = run(&["sweep", "--net", "serve_cnn"]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = stdout(&out);
+    assert!(text.contains("Fig. 7 series"), "{text}");
+    assert!(text.contains("avg bits"), "{text}");
+}
+
+#[test]
+fn sweep_service_flags_are_honored_not_silently_dropped() {
+    // Any sweep-service flag must switch to JSON mode and actually take
+    // effect — `--tech reram` used to fall through to the SRAM table.
+    let out = run(&["sweep", "--net", "serve_cnn", "--tech", "reram", "--combos", "1"]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = stdout(&out);
+    assert!(text.starts_with('{'), "expected a JSON document, got:\n{text}");
+    assert!(text.contains(r#""tech":["reram"]"#), "spec does not carry reram:\n{text}");
+    assert!(text.contains(r#""tech":"reram""#), "points do not carry reram:\n{text}");
+    // Bad values fail instead of being ignored.
+    assert!(!run(&["sweep", "--net", "serve_cnn", "--tech", "dram"]).status.success());
+    assert!(!run(&["sweep", "--net", "serve_cnn", "--combos", "0"]).status.success());
+}
+
+#[test]
+fn sharded_sweep_plus_merge_matches_single_process_byte_for_byte() {
+    let dir = scratch("shard");
+    let path = |name: &str| dir.join(name).to_string_lossy().to_string();
+
+    // Single-process reference document.
+    let full = path("full.json");
+    let out = run(&["sweep", "--net", "serve_cnn", "--combos", "1", "--out", &full]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+
+    // Four shard worker processes + the merger (the acceptance shape:
+    // `bf-imna sweep --shards 4 --shard-id {0..3}` + `bf-imna merge`).
+    let mut shard_files = Vec::new();
+    for k in 0..4 {
+        let f = path(&format!("shard{k}.json"));
+        let out = run(&[
+            "sweep", "--net", "serve_cnn", "--combos", "1", "--shards", "4", "--shard-id",
+            &k.to_string(), "--out", &f,
+        ]);
+        assert!(out.status.success(), "shard {k}: {}", String::from_utf8_lossy(&out.stderr));
+        shard_files.push(f);
+    }
+    let merged = path("merged.json");
+    // Deliberately out of order: merge sorts by the recorded slice starts.
+    let out = run(&[
+        "merge", &shard_files[1], &shard_files[3], &shard_files[0], &shard_files[2], "--out",
+        &merged,
+    ]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+
+    let full_bytes = std::fs::read(&full).unwrap();
+    let merged_bytes = std::fs::read(&merged).unwrap();
+    assert!(!full_bytes.is_empty());
+    assert_eq!(merged_bytes, full_bytes, "merged document differs from the unsharded sweep");
+
+    // Merging an incomplete shard set must fail.
+    assert!(!run(&["merge", &shard_files[0], "--out", &path("bad.json")]).status.success());
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn cache_snapshot_flags_round_trip_without_changing_bytes() {
+    let dir = scratch("cache");
+    let path = |name: &str| dir.join(name).to_string_lossy().to_string();
+
+    let cold_out = path("cold.json");
+    let snap = path("snap.json");
+    let out = run(&[
+        "sweep", "--net", "serve_cnn", "--combos", "1", "--out", &cold_out, "--cache-out", &snap,
+    ]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert!(std::fs::metadata(&snap).unwrap().len() > 2, "snapshot is empty");
+
+    let warm_out = path("warm.json");
+    let out = run(&[
+        "sweep", "--net", "serve_cnn", "--combos", "1", "--out", &warm_out, "--cache-in", &snap,
+    ]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert_eq!(
+        std::fs::read(&warm_out).unwrap(),
+        std::fs::read(&cold_out).unwrap(),
+        "a shipped cache snapshot changed the sweep output"
+    );
+
+    let _ = std::fs::remove_dir_all(&dir);
+}

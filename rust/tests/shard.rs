@@ -1,0 +1,172 @@
+//! Property tests for the sharded sweep service (`sim::shard`): any shard
+//! partition of a [`SweepSpec`], merged, must be **byte-identical** to the
+//! unsharded run — across thread counts and across cold, prewarmed, and
+//! snapshot-loaded plan caches. This is the invariant that lets shards run
+//! as independent processes with no coordination.
+
+use bf_imna::mapper::CacheSnapshot;
+use bf_imna::sim::shard::{self, PrecisionGrid, SweepSpec};
+use bf_imna::sim::SweepEngine;
+use bf_imna::util::json::Json;
+use bf_imna::util::proptest::check;
+
+fn mixed_spec(net: &str, combos: usize, seed: u64) -> SweepSpec {
+    SweepSpec {
+        net: net.to_string(),
+        hw: vec!["lr".to_string()],
+        tech: vec!["sram".to_string()],
+        grid: PrecisionGrid::Mixed { targets: vec![2.0, 5.0, 8.0], combos, seed },
+        batch: 1,
+    }
+}
+
+#[test]
+fn any_shard_partition_merges_bit_identical() {
+    check("sharded merge == unsharded sweep", 10, |rng| {
+        let net = ["serve_cnn", "alexnet"][rng.below(2) as usize];
+        let spec = mixed_spec(net, 1 + rng.below(2) as usize, rng.below(1000));
+        let full = shard::run_full(&spec, &SweepEngine::serial())?.to_string();
+        let shards = 1 + rng.below(6) as usize;
+        let mut docs = Vec::new();
+        for k in 0..shards {
+            // Every worker gets its own engine with a random thread count
+            // and a randomly cold or prewarmed cache — none of which may
+            // change a single output bit.
+            let engine = SweepEngine::with_threads(1 + rng.below(4) as usize);
+            if rng.bool() {
+                let resolved = spec.resolve()?;
+                let range = shard::shard_range(resolved.num_points(), shards, k);
+                engine.prewarm(&resolved.points(range));
+            }
+            docs.push(shard::run_shard(&spec, shards, k, &engine)?.to_json());
+        }
+        let merged = shard::merge(&docs)?.to_string();
+        if merged != full {
+            return Err(format!("net={net} shards={shards}: merged != unsharded"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn snapshot_loaded_worker_never_maps_and_stays_bit_identical() {
+    let spec = SweepSpec {
+        net: "serve_cnn".to_string(),
+        hw: vec!["lr".to_string()],
+        tech: vec!["sram".to_string(), "reram".to_string()],
+        grid: PrecisionGrid::Fixed { bits: vec![2, 5, 8] },
+        batch: 1,
+    };
+    let resolved = spec.resolve().unwrap();
+    let points = resolved.points(0..resolved.num_points());
+
+    // Coordinator side: prewarm, snapshot, serialize to text (the wire).
+    let donor = SweepEngine::serial();
+    donor.prewarm(&points);
+    let wire = donor.cache().snapshot().to_json().to_string();
+
+    // Worker side: absorb the shipped snapshot, then sweep in parallel.
+    let snap = CacheSnapshot::from_json(&Json::parse(&wire).unwrap()).unwrap();
+    let worker = SweepEngine::with_threads(3);
+    assert!(worker.cache().absorb(&snap) > 0);
+    let from_snapshot = worker.run(&points);
+    assert_eq!(worker.cache_stats().misses, 0, "worker mapped cold despite the snapshot");
+
+    // A cold engine computes the same bits.
+    let cold = SweepEngine::serial().run(&points);
+    assert_eq!(from_snapshot.len(), cold.len());
+    for (s, c) in from_snapshot.iter().zip(&cold) {
+        assert_eq!(s.energy_j().to_bits(), c.energy_j().to_bits());
+        assert_eq!(s.latency_s().to_bits(), c.latency_s().to_bits());
+        assert_eq!(s.cfg_name, c.cfg_name);
+    }
+}
+
+#[test]
+fn spec_json_round_trip_random() {
+    check("spec json round trip", 32, |rng| {
+        let nets = ["alexnet", "vgg16", "resnet18", "resnet50", "serve_cnn"];
+        let hw_all = ["lr", "ir"];
+        let tech_all = ["sram", "reram", "pcm", "fefet"];
+        let pick = |rng: &mut bf_imna::util::rng::Rng, all: &[&str]| -> Vec<String> {
+            let n = 1 + rng.below(all.len() as u64) as usize;
+            (0..n).map(|_| all[rng.below(all.len() as u64) as usize].to_string()).collect()
+        };
+        let grid = if rng.bool() {
+            PrecisionGrid::Fixed {
+                bits: (0..1 + rng.below(6)).map(|_| 2 + rng.below(7) as u32).collect(),
+            }
+        } else {
+            PrecisionGrid::Mixed {
+                targets: (0..1 + rng.below(6)).map(|_| 2.0 + rng.f64() * 6.0).collect(),
+                combos: 1 + rng.below(8) as usize,
+                seed: rng.next_u64(),
+            }
+        };
+        let spec = SweepSpec {
+            net: nets[rng.below(nets.len() as u64) as usize].to_string(),
+            hw: pick(rng, &hw_all),
+            tech: pick(rng, &tech_all),
+            grid,
+            batch: 1 + rng.below(8),
+        };
+        let text = spec.to_json().to_string();
+        let back = SweepSpec::from_json(&Json::parse(&text).map_err(|e| e.to_string())?)?;
+        if back != spec {
+            return Err(format!("round trip changed the spec: {text}"));
+        }
+        if back.to_json().to_string() != text {
+            return Err("re-serialization is not stable".to_string());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn merge_validates_partition_shape() {
+    let spec = mixed_spec("serve_cnn", 1, 7);
+    let docs: Vec<Json> = (0..3)
+        .map(|k| shard::run_shard(&spec, 3, k, &SweepEngine::serial()).unwrap().to_json())
+        .collect();
+    // Any strict subset, duplicate, or cross-spec mix must be rejected.
+    assert!(shard::merge(&docs[..2]).is_err());
+    assert!(shard::merge(&[docs[0].clone(), docs[0].clone(), docs[2].clone()]).is_err());
+    let other = mixed_spec("serve_cnn", 1, 8);
+    let alien = shard::run_shard(&other, 3, 1, &SweepEngine::serial()).unwrap().to_json();
+    assert!(shard::merge(&[docs[0].clone(), alien, docs[2].clone()]).is_err());
+    // The correct set, in any order, merges fine.
+    let merged = shard::merge(&[docs[2].clone(), docs[0].clone(), docs[1].clone()]).unwrap();
+    assert_eq!(
+        merged.get("n_points").and_then(Json::as_i64).unwrap(),
+        spec.resolve().unwrap().num_points() as i64
+    );
+
+    // A truncated *final* shard keeps ids, starts, and indices contiguous —
+    // only the spec-coverage check can reject it.
+    let mut truncated = docs.clone();
+    if let Json::Obj(m) = &mut truncated[2] {
+        if let Some(Json::Arr(points)) = m.get_mut("points") {
+            assert!(points.pop().is_some(), "last shard should carry points");
+        }
+    }
+    let err = shard::merge(&truncated).unwrap_err();
+    assert!(err.contains("enumerates"), "{err}");
+}
+
+#[test]
+fn invalid_specs_fail_to_resolve_before_any_work() {
+    // resolve() enforces the same validity rules from_json does, so specs
+    // built in code (e.g. by the CLI) cannot smuggle in degenerate grids.
+    let mut spec = mixed_spec("serve_cnn", 1, 7);
+    spec.grid = PrecisionGrid::Mixed { targets: vec![2.0, 5.0], combos: 0, seed: 7 };
+    assert!(spec.resolve().is_err());
+    let mut spec = mixed_spec("serve_cnn", 1, 7);
+    spec.grid = PrecisionGrid::Fixed { bits: vec![0] };
+    assert!(spec.resolve().is_err());
+    let mut spec = mixed_spec("serve_cnn", 1, 7);
+    spec.grid = PrecisionGrid::Fixed { bits: vec![65] };
+    assert!(spec.resolve().is_err());
+    let mut spec = mixed_spec("serve_cnn", 1, 7);
+    spec.batch = 0;
+    assert!(spec.resolve().is_err());
+}
