@@ -8,6 +8,8 @@
 //! bf-imna sweep    --net alexnet --out full.json      # same sweep as JSON
 //! bf-imna sweep    --shards 4 --shard-id 0 --out s0.json   # one sweep-service shard
 //! bf-imna merge    s0.json s1.json s2.json s3.json --out full.json
+//! bf-imna serve-worker --addr 127.0.0.1:8377          # HTTP sweep worker
+//! bf-imna dispatch --workers a:8377,b:8377 --out full.json  # fan out + merge
 //! bf-imna hawq                                        # Table VII
 //! bf-imna compare                                     # Table VIII
 //! bf-imna validate                                    # Table I microbenchmark
@@ -30,6 +32,7 @@ use bf_imna::mapper::CacheSnapshot;
 use bf_imna::model::zoo;
 use bf_imna::precision::{hawq, PrecisionConfig};
 use bf_imna::sim::shard::{self, SweepSpec};
+use bf_imna::sim::transport;
 use bf_imna::sim::{breakdown, dse, simulate, SimParams, SweepEngine};
 use bf_imna::util::json::Json;
 use bf_imna::util::table::{fmt_eng, fmt_ratio, Table};
@@ -42,6 +45,8 @@ fn main() -> ExitCode {
         "simulate" => cmd_simulate(&opts),
         "sweep" => cmd_sweep(&opts),
         "merge" => cmd_merge(&opts, &files),
+        "serve-worker" => cmd_serve_worker(&opts),
+        "dispatch" => cmd_dispatch(&opts),
         "hawq" => cmd_hawq(),
         "compare" => cmd_compare(),
         "validate" => cmd_validate(),
@@ -86,6 +91,25 @@ COMMANDS:
              --cache-out FILE  write this run's plan-cache snapshot
   merge      reassemble shard documents into the full sweep document
              bf-imna merge s0.json .. sN.json [--out FILE]
+             output is byte-identical to the unsharded `sweep --out`
+  serve-worker  run an HTTP sweep worker (the network side of the sweep
+             service; see `dispatch` for the coordinator)
+             --addr HOST:PORT  listen address (default 127.0.0.1:8377;
+                               port 0 picks an ephemeral port)
+             --cache-in FILE   absorb a plan-cache snapshot at startup
+             endpoints: POST /shard  run one slice, reply with its document
+                        POST /cache  absorb a shipped plan-cache snapshot
+                        GET /healthz, GET /stats  liveness + cache counters
+  dispatch   fan a sweep out over serve-worker processes and merge
+             --workers a:p1,b:p2  comma-separated worker addresses (required)
+             --spec FILE       sweep-spec JSON; when absent the spec is
+                               built from --net/--hw/--tech/--combos/--seed
+                               exactly like `sweep`
+             --shards N        shard count (default: one per worker)
+             --timeout-s N     per-request timeout in seconds (default 120)
+             --cache-in FILE   ship a plan-cache snapshot to every worker
+             --out FILE        write the merged document (default: stdout)
+             failed/slow workers are retried on healthy ones; the merged
              output is byte-identical to the unsharded `sweep --out`
   hawq       Table VII — HAWQ-V3 bit-fluid ResNet18 under latency budgets
   compare    Table VIII — BF-IMNA peak rows vs published SOTA accelerators
@@ -202,14 +226,6 @@ fn cmd_sweep(opts: &BTreeMap<String, String>) -> CliResult {
     }
 
     // Sweep-service mode: run the (possibly sharded) sweep, emit JSON.
-    let combos: usize = match opts.get("combos") {
-        Some(s) => s.parse()?,
-        None => dse::COMBOS_PER_TARGET,
-    };
-    let seed: u64 = match opts.get("seed") {
-        Some(s) => s.parse()?,
-        None => 7,
-    };
     let shards: usize = match opts.get("shards") {
         Some(s) => s.parse()?,
         None => 1,
@@ -219,13 +235,11 @@ fn cmd_sweep(opts: &BTreeMap<String, String>) -> CliResult {
         None => 0,
     };
     // Shard/spec validation happens inside `run_shard_prewarmed` below.
-    let mut spec = SweepSpec::fig7(net_name, hw_name, combos, seed);
-    spec.tech = vec![opts.get("tech").cloned().unwrap_or_else(|| "sram".to_string())];
+    let spec = spec_from_sweep_flags(opts)?;
 
     let engine = SweepEngine::new();
     if let Some(path) = opts.get("cache-in") {
-        let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
-        let snap = CacheSnapshot::from_json(&Json::parse(&text).map_err(|e| format!("{path}: {e}"))?)?;
+        let snap = load_snapshot(path)?;
         let loaded = engine.cache().absorb(&snap);
         eprintln!("cache-in: absorbed {loaded} plans from {path}");
     }
@@ -254,9 +268,106 @@ fn cmd_sweep(opts: &BTreeMap<String, String>) -> CliResult {
     Ok(())
 }
 
+/// Build the sweep spec that `sweep`'s service mode and `dispatch` share
+/// from the common flags (`--net/--hw/--tech/--combos/--seed`). One code
+/// path, so the two commands' documents stay byte-comparable by
+/// construction.
+fn spec_from_sweep_flags(
+    opts: &BTreeMap<String, String>,
+) -> Result<SweepSpec, Box<dyn std::error::Error>> {
+    let net = opts.get("net").map(String::as_str).unwrap_or("alexnet");
+    let hw = opts.get("hw").map(String::as_str).unwrap_or("lr");
+    let combos: usize = match opts.get("combos") {
+        Some(s) => s.parse()?,
+        None => dse::COMBOS_PER_TARGET,
+    };
+    let seed: u64 = match opts.get("seed") {
+        Some(s) => s.parse()?,
+        None => 7,
+    };
+    let mut spec = SweepSpec::fig7(net, hw, combos, seed);
+    spec.tech = vec![opts.get("tech").cloned().unwrap_or_else(|| "sram".to_string())];
+    Ok(spec)
+}
+
+/// Read + parse a `CacheSnapshot` file (shared by `sweep --cache-in`,
+/// `serve-worker --cache-in`, and `dispatch --cache-in`).
+fn load_snapshot(path: &str) -> Result<CacheSnapshot, Box<dyn std::error::Error>> {
+    let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+    Ok(CacheSnapshot::from_json(&Json::parse(&text).map_err(|e| format!("{path}: {e}"))?)?)
+}
+
+fn cmd_serve_worker(opts: &BTreeMap<String, String>) -> CliResult {
+    let addr = opts.get("addr").map(String::as_str).unwrap_or("127.0.0.1:8377");
+    let engine = SweepEngine::new();
+    if let Some(path) = opts.get("cache-in") {
+        let snap = load_snapshot(path)?;
+        let loaded = engine.cache().absorb(&snap);
+        eprintln!("cache-in: absorbed {loaded} plans from {path}");
+    }
+    let server = transport::WorkerServer::spawn(addr, engine).map_err(|e| format!("{addr}: {e}"))?;
+    eprintln!(
+        "serve-worker: listening on http://{} (POST /shard, POST /cache, GET /healthz, GET /stats)",
+        server.addr()
+    );
+    // Serve until killed; `dispatch` is the other end.
+    server.join();
+    Ok(())
+}
+
+fn cmd_dispatch(opts: &BTreeMap<String, String>) -> CliResult {
+    let workers: Vec<String> = opts
+        .get("workers")
+        .ok_or("dispatch: --workers host:port[,host:port...] is required")?
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    if workers.is_empty() {
+        return Err("dispatch: --workers list is empty".into());
+    }
+    let spec = match opts.get("spec") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+            SweepSpec::from_json(&Json::parse(&text).map_err(|e| format!("{path}: {e}"))?)?
+        }
+        None => spec_from_sweep_flags(opts)?,
+    };
+    let mut dopts = transport::DispatchOpts::default();
+    if let Some(s) = opts.get("shards") {
+        dopts.shards = s.parse()?;
+    }
+    if let Some(s) = opts.get("timeout-s") {
+        dopts.timeout = std::time::Duration::from_secs(s.parse()?);
+    }
+    if let Some(path) = opts.get("cache-in") {
+        dopts.prewarm = Some(load_snapshot(path)?);
+    }
+    let report = transport::dispatch(&spec, &workers, &dopts)?;
+    for (w, served) in &report.per_worker {
+        eprintln!("dispatch: {w} served {served} shard(s)");
+    }
+    if report.retries > 0 {
+        eprintln!("dispatch: {} failed shard request(s) were reassigned", report.retries);
+    }
+    let n = report.doc.get("n_points").and_then(Json::as_i64).unwrap_or(0);
+    match opts.get("out") {
+        Some(path) => {
+            std::fs::write(path, format!("{}\n", report.doc)).map_err(|e| format!("{path}: {e}"))?;
+            eprintln!("dispatch: merged {n} points into {path}");
+        }
+        None => println!("{}", report.doc),
+    }
+    Ok(())
+}
+
 fn cmd_merge(opts: &BTreeMap<String, String>, files: &[String]) -> CliResult {
     if files.is_empty() {
-        return Err("merge: pass the shard JSON files as positional arguments".into());
+        return Err(
+            "merge: no shard files given — pass the shard JSON documents as positional \
+             arguments (e.g. `bf-imna merge s0.json s1.json --out full.json`)"
+                .into(),
+        );
     }
     let mut docs = Vec::with_capacity(files.len());
     for f in files {

@@ -23,6 +23,7 @@ pub mod breakdown;
 pub mod dse;
 pub mod engine;
 pub mod shard;
+pub mod transport;
 
 pub use engine::{simulate_many, SweepEngine, SweepPoint};
 

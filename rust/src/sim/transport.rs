@@ -1,0 +1,1034 @@
+//! HTTP worker-pool transport for the sharded sweep service — the network
+//! layer that turns `sim::shard`'s documents into a live fleet.
+//!
+//! `sim::shard` made a sweep a pile of self-describing documents: a
+//! [`SweepSpec`] enumerates points deterministically, a shard is a
+//! contiguous index range, and [`shard::merge`] reassembles the full
+//! document **byte-identically**. This module moves those documents over
+//! TCP instead of by hand:
+//!
+//! * [`WorkerServer`] — a worker process serving a four-endpoint protocol
+//!   over a dependency-free HTTP/1.1 layer (`std::net` only, the crate has
+//!   no deps by design): `POST /shard` runs one slice and replies with the
+//!   [`ShardResult`] document, `POST /cache` absorbs a shipped
+//!   [`CacheSnapshot`] (prewarm over the wire), `GET /healthz` and
+//!   `GET /stats` expose liveness and cache hit/miss counters. The CLI
+//!   front end is `bf-imna serve-worker --addr HOST:PORT`.
+//! * [`dispatch`] — the coordinator: assigns contiguous shard ranges,
+//!   fans requests out on scoped threads (one per worker), **reassigns**
+//!   the range of any failed, garbage-replying, or timed-out worker to a
+//!   healthy one, and feeds the collected documents through
+//!   [`shard::merge`]. The CLI front end is `bf-imna dispatch --workers
+//!   a:p1,b:p2`.
+//!
+//! ## Wire format
+//!
+//! Plain HTTP/1.1 with `Content-Length` framing only (no chunked encoding,
+//! no keep-alive: one request per connection, `connection: close`). Bodies
+//! are canonical JSON from [`crate::util::json`]'s writer. Malformed
+//! requests get clean `4xx`/`5xx` replies — the parser never panics on
+//! hostile input, and header/body sizes are hard-capped
+//! ([`MAX_HEAD_BYTES`] / [`MAX_BODY_BYTES`]).
+//!
+//! ## Determinism invariant
+//!
+//! Workers compute bit-identical records (the engine invariant) and every
+//! reply is validated structurally ([`ShardResult::from_json`]) before it
+//! is merged, so the dispatcher's output is **byte-identical** to the
+//! single-process [`shard::run_full`] document — no matter which workers
+//! served which shards, how many died mid-sweep, or how many requests were
+//! retried. `rust/tests/transport.rs` injects worker failures and asserts
+//! exactly this.
+
+use std::fmt;
+use std::io::{self, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use super::shard::{self, ShardRequest, ShardResult, SweepSpec};
+use super::SweepEngine;
+use crate::mapper::CacheSnapshot;
+use crate::util::json::{read_json_exact, Json};
+
+/// Hard cap on the request line + header section of a message.
+pub const MAX_HEAD_BYTES: usize = 8 * 1024;
+
+/// Hard cap on a request or response body. Shard documents are a few MiB
+/// at paper scale; anything near this cap is a bug or an attack, and the
+/// worker rejects it with `413` before allocating.
+pub const MAX_BODY_BYTES: usize = 64 * 1024 * 1024;
+
+/// The worker's whole-exchange deadline for reading one request and (with
+/// a fresh budget) writing one response. Generous enough to receive a
+/// multi-MiB cache snapshot over a slow link, small enough that a
+/// slowloris connection cannot hold a handler thread for long.
+const WORKER_EXCHANGE_DEADLINE: Duration = Duration::from_secs(300);
+
+/// A protocol-level failure, tagged with the HTTP status the peer should
+/// see (`4xx` for bad input, `5xx` for transport problems).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HttpError {
+    /// HTTP status code for the failure.
+    pub status: u16,
+    /// Human-readable description.
+    pub message: String,
+}
+
+impl HttpError {
+    fn new(status: u16, message: impl Into<String>) -> HttpError {
+        HttpError { status, message: message.into() }
+    }
+}
+
+impl fmt::Display for HttpError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "HTTP {}: {}", self.status, self.message)
+    }
+}
+
+impl std::error::Error for HttpError {}
+
+/// A parsed HTTP request: method, path, and the `Content-Length`-framed
+/// body. Headers beyond `content-length` are tolerated and ignored.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Request {
+    /// Request method (`GET`, `POST`, ...), as sent.
+    pub method: String,
+    /// Request target, always starting with `/`.
+    pub path: String,
+    /// The body, exactly `content-length` bytes.
+    pub body: Vec<u8>,
+}
+
+/// A [`TcpStream`] wrapper that enforces one **overall deadline** across
+/// every read *and write* of an exchange. Bare socket timeouts re-arm on
+/// each syscall, so a peer trickling one byte per timeout window (or
+/// draining our sends one socket buffer at a time) could hold a
+/// connection — and a dispatcher thread — almost forever; this wrapper
+/// re-arms the socket timeout with the *remaining* budget before every
+/// operation and fails with `TimedOut` once the budget is spent — the
+/// failure the dispatcher's reassignment path expects from a hung worker.
+struct DeadlineStream {
+    stream: TcpStream,
+    deadline: Instant,
+}
+
+impl DeadlineStream {
+    fn new(stream: TcpStream, budget: Duration) -> DeadlineStream {
+        DeadlineStream { stream, deadline: Instant::now() + budget }
+    }
+
+    fn remaining(&self) -> io::Result<Duration> {
+        let remaining = self.deadline.saturating_duration_since(Instant::now());
+        if remaining.is_zero() {
+            return Err(io::Error::new(io::ErrorKind::TimedOut, "exchange deadline exceeded"));
+        }
+        Ok(remaining)
+    }
+}
+
+impl Read for DeadlineStream {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        let remaining = self.remaining()?;
+        self.stream.set_read_timeout(Some(remaining))?;
+        self.stream.read(buf)
+    }
+}
+
+impl Write for DeadlineStream {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        let remaining = self.remaining()?;
+        self.stream.set_write_timeout(Some(remaining))?;
+        self.stream.write(buf)
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        self.stream.flush()
+    }
+}
+
+/// Read bytes until the blank line that ends the header section, capped at
+/// [`MAX_HEAD_BYTES`]. Byte-at-a-time over a buffered reader, so nothing
+/// past the head is consumed.
+fn read_head(r: &mut impl Read) -> Result<String, HttpError> {
+    let mut head: Vec<u8> = Vec::with_capacity(256);
+    let mut byte = [0u8; 1];
+    while !head.ends_with(b"\r\n\r\n") {
+        if head.len() >= MAX_HEAD_BYTES {
+            return Err(HttpError::new(431, format!("header section exceeds {MAX_HEAD_BYTES} bytes")));
+        }
+        match r.read(&mut byte) {
+            Ok(0) => return Err(HttpError::new(400, "connection closed mid-header")),
+            Ok(_) => head.push(byte[0]),
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(HttpError::new(408, format!("header read failed: {e}"))),
+        }
+    }
+    String::from_utf8(head).map_err(|_| HttpError::new(400, "non-utf8 header section"))
+}
+
+/// Scan header lines for `content-length`, validating syntax and the
+/// [`MAX_BODY_BYTES`] cap. Returns `None` when the header is absent.
+fn content_length<'a>(lines: impl Iterator<Item = &'a str>) -> Result<Option<usize>, HttpError> {
+    let mut found: Option<usize> = None;
+    for line in lines {
+        if line.is_empty() {
+            continue;
+        }
+        let Some((name, value)) = line.split_once(':') else {
+            return Err(HttpError::new(400, format!("malformed header line {line:?}")));
+        };
+        if name.trim().eq_ignore_ascii_case("content-length") {
+            let len = value
+                .trim()
+                .parse::<u64>()
+                .map_err(|_| HttpError::new(400, format!("bad content-length {:?}", value.trim())))?;
+            if len > MAX_BODY_BYTES as u64 {
+                return Err(HttpError::new(
+                    413,
+                    format!("declared body of {len} bytes exceeds the {MAX_BODY_BYTES}-byte cap"),
+                ));
+            }
+            if found.replace(len as usize).is_some() {
+                return Err(HttpError::new(400, "duplicate content-length header"));
+            }
+        }
+    }
+    Ok(found)
+}
+
+/// Read exactly `buf.len()` bytes, mapping truncation to a clean `400`.
+fn read_full(r: &mut impl Read, buf: &mut [u8]) -> Result<(), HttpError> {
+    let mut filled = 0;
+    while filled < buf.len() {
+        match r.read(&mut buf[filled..]) {
+            Ok(0) => {
+                return Err(HttpError::new(
+                    400,
+                    format!("truncated body: got {filled} of {} bytes", buf.len()),
+                ))
+            }
+            Ok(n) => filled += n,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(HttpError::new(408, format!("body read failed: {e}"))),
+        }
+    }
+    Ok(())
+}
+
+/// Read and parse one HTTP/1.1 request (`Content-Length` framing only).
+///
+/// Hostile input — malformed request lines, bad or duplicate
+/// `content-length`, oversized heads or declared bodies, truncated bodies
+/// — yields an [`HttpError`] carrying the right `4xx` status; this
+/// function never panics on untrusted bytes (property-tested in the module
+/// tests and exercised over real sockets in `rust/tests/transport.rs`).
+pub fn read_request(r: &mut impl Read) -> Result<Request, HttpError> {
+    let head = read_head(r)?;
+    let mut lines = head.split("\r\n");
+    let request_line = lines.next().unwrap_or("");
+    let mut parts = request_line.split(' ');
+    let (method, path, version) = match (parts.next(), parts.next(), parts.next(), parts.next()) {
+        (Some(m), Some(p), Some(v), None)
+            if !m.is_empty() && m.bytes().all(|b| b.is_ascii_uppercase()) && p.starts_with('/') =>
+        {
+            (m, p, v)
+        }
+        _ => return Err(HttpError::new(400, format!("malformed request line {request_line:?}"))),
+    };
+    if version != "HTTP/1.1" && version != "HTTP/1.0" {
+        return Err(HttpError::new(505, format!("unsupported protocol version {version:?}")));
+    }
+    let len = match content_length(lines)? {
+        Some(len) => len,
+        // GETs legitimately carry no body; anything else must declare one.
+        None if method == "GET" => 0,
+        None => return Err(HttpError::new(411, format!("{method} request without content-length"))),
+    };
+    let mut body = vec![0u8; len];
+    read_full(r, &mut body)?;
+    Ok(Request { method: method.to_string(), path: path.to_string(), body })
+}
+
+/// Serialize one request (with `Content-Length` framing and
+/// `connection: close`) — the client half of [`read_request`].
+pub fn write_request(
+    w: &mut impl Write,
+    method: &str,
+    path: &str,
+    host: &str,
+    body: &[u8],
+) -> io::Result<()> {
+    write!(
+        w,
+        "{method} {path} HTTP/1.1\r\nhost: {host}\r\ncontent-type: application/json\r\n\
+         content-length: {}\r\nconnection: close\r\n\r\n",
+        body.len()
+    )?;
+    w.write_all(body)?;
+    w.flush()
+}
+
+/// Serialize one response with a JSON body — the server half of
+/// [`read_response`].
+pub fn write_response(w: &mut impl Write, status: u16, body: &[u8]) -> io::Result<()> {
+    write!(
+        w,
+        "HTTP/1.1 {status} {}\r\ncontent-type: application/json\r\ncontent-length: {}\r\n\
+         connection: close\r\n\r\n",
+        reason_phrase(status),
+        body.len()
+    )?;
+    w.write_all(body)?;
+    w.flush()
+}
+
+fn reason_phrase(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        408 => "Request Timeout",
+        411 => "Length Required",
+        413 => "Payload Too Large",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        502 => "Bad Gateway",
+        505 => "HTTP Version Not Supported",
+        _ => "Error",
+    }
+}
+
+/// Parse a response's status line + headers, returning the status code and
+/// the declared body length. Peer garbage (a non-HTTP status line, a
+/// missing `content-length`) maps to a `502`-tagged [`HttpError`] — the
+/// dispatcher treats any such reply as a worker failure and reassigns the
+/// shard.
+fn read_response_head(r: &mut impl Read) -> Result<(u16, usize), HttpError> {
+    let head = read_head(r)?;
+    let mut lines = head.split("\r\n");
+    let status_line = lines.next().unwrap_or("");
+    let mut parts = status_line.splitn(3, ' ');
+    let version = parts.next().unwrap_or("");
+    let code = parts.next().unwrap_or("");
+    if !version.starts_with("HTTP/1.") {
+        return Err(HttpError::new(502, format!("malformed status line {status_line:?}")));
+    }
+    let status = code
+        .parse::<u16>()
+        .map_err(|_| HttpError::new(502, format!("bad status code {code:?}")))?;
+    let len = content_length(lines)?
+        .ok_or_else(|| HttpError::new(502, "response missing content-length"))?;
+    Ok((status, len))
+}
+
+/// Read and parse one HTTP response, returning `(status, body)`. Peer
+/// garbage maps to a `502`-tagged [`HttpError`] (see `read_response_head`).
+pub fn read_response(r: &mut impl Read) -> Result<(u16, Vec<u8>), HttpError> {
+    let (status, len) = read_response_head(r)?;
+    let mut body = vec![0u8; len];
+    read_full(r, &mut body)?;
+    Ok((status, body))
+}
+
+/// Shared client prologue: connect, then write the request and hand back
+/// the reader, with the **entire** exchange — every send and every
+/// receive — sharing one `timeout` deadline (see [`DeadlineStream`] — a
+/// trickling or slow-draining peer cannot reset the clock syscall by
+/// syscall).
+fn open_exchange(
+    addr: &str,
+    method: &str,
+    path: &str,
+    body: &[u8],
+    timeout: Duration,
+) -> Result<BufReader<DeadlineStream>, String> {
+    let stream = connect(addr, timeout)?;
+    let mut stream = DeadlineStream::new(stream, timeout);
+    write_request(&mut stream, method, path, addr, body)
+        .map_err(|e| format!("{addr}: send failed: {e}"))?;
+    Ok(BufReader::new(stream))
+}
+
+/// One blocking HTTP exchange: connect to `addr`, send `body` to `path`,
+/// return `(status, response body)`. `timeout` bounds the connect phase
+/// and then the whole send + receive as one shared deadline, so a hung,
+/// trickling, or slow-draining worker cannot stall the caller beyond
+/// roughly `2 x timeout` total.
+pub fn http_request(
+    addr: &str,
+    method: &str,
+    path: &str,
+    body: &[u8],
+    timeout: Duration,
+) -> Result<(u16, Vec<u8>), String> {
+    let mut reader = open_exchange(addr, method, path, body, timeout)?;
+    read_response(&mut reader).map_err(|e| format!("{addr}: {e}"))
+}
+
+/// Like [`http_request`] but parse the response body as one JSON document
+/// straight off the socket (via [`read_json_exact`], so exactly the
+/// `Content-Length` frame is consumed). A peer whose reply is not valid
+/// JSON — garbage bytes, a truncated frame, an HTML error page — yields
+/// `Err`, which the dispatcher counts as a worker failure.
+pub fn http_request_json(
+    addr: &str,
+    method: &str,
+    path: &str,
+    body: &[u8],
+    timeout: Duration,
+) -> Result<(u16, Json), String> {
+    let mut reader = open_exchange(addr, method, path, body, timeout)?;
+    let (status, len) = read_response_head(&mut reader).map_err(|e| format!("{addr}: {e}"))?;
+    let doc = read_json_exact(&mut reader, len).map_err(|e| format!("{addr}: bad response body: {e}"))?;
+    Ok((status, doc))
+}
+
+fn connect(addr: &str, timeout: Duration) -> Result<TcpStream, String> {
+    let addrs: Vec<SocketAddr> =
+        addr.to_socket_addrs().map_err(|e| format!("{addr}: {e}"))?.collect();
+    let mut last = format!("{addr}: no addresses resolved");
+    // Split the budget across resolved addresses so a dual-stack name with
+    // a blackholed record still fails within ~`timeout` overall.
+    let per_addr = timeout / addrs.len().max(1) as u32;
+    for a in &addrs {
+        match TcpStream::connect_timeout(a, per_addr) {
+            Ok(s) => return Ok(s),
+            Err(e) => last = format!("{addr}: connect failed: {e}"),
+        }
+    }
+    Err(last)
+}
+
+/// Per-worker counters surfaced on `GET /stats`.
+#[derive(Debug, Default)]
+struct WorkerStats {
+    shards_served: AtomicUsize,
+    points_served: AtomicUsize,
+    cache_loads: AtomicUsize,
+    protocol_errors: AtomicUsize,
+}
+
+/// A running sweep worker: a TCP listener serving the shard protocol on a
+/// background thread, with one handler thread per connection (the engine
+/// itself parallelizes each shard internally, and [`crate::mapper::PlanCache`]
+/// is thread-safe, so concurrent shard requests are fine).
+///
+/// ```no_run
+/// use bf_imna::sim::transport::WorkerServer;
+/// use bf_imna::sim::SweepEngine;
+///
+/// let server = WorkerServer::spawn("127.0.0.1:0", SweepEngine::new()).unwrap();
+/// println!("worker on {}", server.addr());
+/// // ... dispatch against it ...
+/// server.shutdown();
+/// ```
+#[derive(Debug)]
+pub struct WorkerServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<thread::JoinHandle<()>>,
+    engine: Arc<SweepEngine>,
+}
+
+impl WorkerServer {
+    /// Bind `addr` (use port `0` for an ephemeral port) and start serving.
+    /// The returned handle owns the accept loop; dropping it (or calling
+    /// [`Self::shutdown`]) stops the server and releases the listener.
+    pub fn spawn(addr: &str, engine: SweepEngine) -> io::Result<WorkerServer> {
+        let listener = TcpListener::bind(addr)?;
+        let addr = listener.local_addr()?;
+        let engine = Arc::new(engine);
+        let stop = Arc::new(AtomicBool::new(false));
+        let handle = {
+            let engine = Arc::clone(&engine);
+            let stop = Arc::clone(&stop);
+            thread::spawn(move || accept_loop(listener, engine, stop))
+        };
+        Ok(WorkerServer { addr, stop, handle: Some(handle), engine })
+    }
+
+    /// The bound socket address (with the real port for `:0` binds).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// The worker's engine — shared with in-flight handlers, so its cache
+    /// stats reflect served traffic.
+    pub fn engine(&self) -> &SweepEngine {
+        &self.engine
+    }
+
+    /// Stop accepting connections, drop the listener, and join the accept
+    /// loop. Requests on already-accepted connections still complete;
+    /// every later connection attempt is refused — exactly the failure the
+    /// dispatcher's reassignment path is built for.
+    pub fn shutdown(mut self) {
+        self.stop_and_join();
+    }
+
+    /// Block until the accept loop exits — i.e. forever, for a CLI worker
+    /// (another thread calling [`Self::shutdown`] is the only way out).
+    pub fn join(mut self) {
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+
+    fn stop_and_join(&mut self) {
+        if self.handle.is_none() {
+            return;
+        }
+        self.stop.store(true, Ordering::SeqCst);
+        // Poke the listener so a blocking accept() observes the stop flag.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for WorkerServer {
+    fn drop(&mut self) {
+        self.stop_and_join();
+    }
+}
+
+fn accept_loop(listener: TcpListener, engine: Arc<SweepEngine>, stop: Arc<AtomicBool>) {
+    let stats = Arc::new(WorkerStats::default());
+    loop {
+        let stream = match listener.accept() {
+            Ok((stream, _)) => stream,
+            Err(_) => {
+                if stop.load(Ordering::SeqCst) {
+                    break;
+                }
+                // Persistent accept errors (e.g. fd exhaustion under a
+                // connection flood) would otherwise busy-spin this thread.
+                thread::sleep(Duration::from_millis(50));
+                continue;
+            }
+        };
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        let engine = Arc::clone(&engine);
+        let stats = Arc::clone(&stats);
+        thread::spawn(move || handle_connection(stream, &engine, &stats));
+    }
+    // The listener drops here: the port closes and peers see refusals.
+}
+
+/// Per-connection worker: one request, one response, close. All protocol
+/// errors turn into a `4xx`/`5xx` JSON reply; nothing here panics on
+/// hostile bytes.
+fn handle_connection(stream: TcpStream, engine: &SweepEngine, stats: &WorkerStats) {
+    // The whole request read shares one deadline: a slowloris trickling
+    // header or body bytes cannot re-arm the clock per byte.
+    let reader = match stream.try_clone() {
+        Ok(s) => DeadlineStream::new(s, WORKER_EXCHANGE_DEADLINE),
+        Err(_) => return,
+    };
+    let (status, reply) = match read_request(&mut BufReader::new(reader)) {
+        Ok(req) => route(&req, engine, stats),
+        Err(e) => {
+            stats.protocol_errors.fetch_add(1, Ordering::Relaxed);
+            (e.status, err_doc(e.message))
+        }
+    };
+    // The response write gets a fresh budget (shard compute time between
+    // read and write must not eat into it), with the same slow-drain
+    // protection on the way out.
+    let mut writer = DeadlineStream::new(stream, WORKER_EXCHANGE_DEADLINE);
+    let _ = write_response(&mut writer, status, reply.to_string().as_bytes());
+}
+
+fn err_doc(message: impl Into<String>) -> Json {
+    Json::obj([("error", Json::str(message.into()))])
+}
+
+fn route(req: &Request, engine: &SweepEngine, stats: &WorkerStats) -> (u16, Json) {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => (200, Json::obj([("ok", Json::Bool(true))])),
+        ("GET", "/stats") => (200, stats_doc(engine, stats)),
+        ("POST", "/shard") => handle_shard(&req.body, engine, stats),
+        ("POST", "/cache") => handle_cache(&req.body, engine, stats),
+        ("GET", _) | ("POST", _) => (404, err_doc(format!("no such endpoint {:?}", req.path))),
+        _ => (405, err_doc(format!("method {:?} not allowed", req.method))),
+    }
+}
+
+fn stats_doc(engine: &SweepEngine, stats: &WorkerStats) -> Json {
+    let cache = engine.cache_stats();
+    Json::obj([
+        ("shards_served", Json::num(stats.shards_served.load(Ordering::Relaxed) as f64)),
+        ("points_served", Json::num(stats.points_served.load(Ordering::Relaxed) as f64)),
+        ("cache_loads", Json::num(stats.cache_loads.load(Ordering::Relaxed) as f64)),
+        ("protocol_errors", Json::num(stats.protocol_errors.load(Ordering::Relaxed) as f64)),
+        (
+            "cache",
+            Json::obj([
+                ("hits", Json::num(cache.hits as f64)),
+                ("misses", Json::num(cache.misses as f64)),
+                ("entries", Json::num(cache.entries as f64)),
+            ]),
+        ),
+    ])
+}
+
+fn handle_shard(body: &[u8], engine: &SweepEngine, stats: &WorkerStats) -> (u16, Json) {
+    let parsed = Json::parse_bytes(body)
+        .map_err(|e| format!("bad shard request: {e}"))
+        .and_then(|v| ShardRequest::from_json(&v));
+    let req = match parsed {
+        Ok(req) => req,
+        Err(e) => {
+            stats.protocol_errors.fetch_add(1, Ordering::Relaxed);
+            return (400, err_doc(e));
+        }
+    };
+    match shard::run_shard_prewarmed(&req.spec, req.shards, req.shard_id, engine) {
+        Ok(result) => {
+            stats.shards_served.fetch_add(1, Ordering::Relaxed);
+            stats.points_served.fetch_add(result.points.len(), Ordering::Relaxed);
+            (200, result.to_json())
+        }
+        Err(e) => (400, err_doc(e)),
+    }
+}
+
+/// Wire constant: the `code` a worker attaches to a `400` caused by a
+/// mapper-fingerprint mismatch, so the dispatcher can distinguish "mixed
+/// binaries in the fleet" (fatal misconfiguration) from any other bad
+/// request **structurally** — the human-readable message may be reworded
+/// across versions; this code may not.
+pub const CODE_FINGERPRINT_MISMATCH: &str = "fingerprint-mismatch";
+
+fn handle_cache(body: &[u8], engine: &SweepEngine, stats: &WorkerStats) -> (u16, Json) {
+    let snap = Json::parse_bytes(body)
+        .map_err(|e| format!("bad cache snapshot: {e}"))
+        .and_then(|v| CacheSnapshot::from_json(&v));
+    match snap {
+        Ok(snap) => {
+            let absorbed = engine.cache().absorb(&snap);
+            stats.cache_loads.fetch_add(1, Ordering::Relaxed);
+            (200, Json::obj([("absorbed", Json::num(absorbed as f64))]))
+        }
+        Err(e) => {
+            stats.protocol_errors.fetch_add(1, Ordering::Relaxed);
+            // Classified in the same binary that produced the message, so
+            // the substring check cannot skew across versions; only the
+            // `code` constant travels on the wire.
+            if e.contains("fingerprint") {
+                (
+                    400,
+                    Json::obj([
+                        ("code", Json::str(CODE_FINGERPRINT_MISMATCH)),
+                        ("error", Json::str(e)),
+                    ]),
+                )
+            } else {
+                (400, err_doc(e))
+            }
+        }
+    }
+}
+
+/// Knobs for [`dispatch`].
+#[derive(Debug, Clone)]
+pub struct DispatchOpts {
+    /// Shard count. `0` (the default) means one shard per worker. Values
+    /// above the point count are fine — trailing shards are just empty.
+    pub shards: usize,
+    /// Per-request timeout (connect, send, and receive each). Must exceed
+    /// the longest single-shard compute time, or healthy-but-slow workers
+    /// get their ranges reassigned.
+    pub timeout: Duration,
+    /// Consecutive failures after which a worker is retired from the pool.
+    pub max_worker_failures: usize,
+    /// Optional plan-cache snapshot shipped to every worker (`POST
+    /// /cache`) before any shard is assigned. Purely a warm-up: output
+    /// bytes are identical with or without it.
+    pub prewarm: Option<CacheSnapshot>,
+}
+
+impl Default for DispatchOpts {
+    fn default() -> Self {
+        DispatchOpts {
+            shards: 0,
+            timeout: Duration::from_secs(120),
+            max_worker_failures: 2,
+            prewarm: None,
+        }
+    }
+}
+
+/// What [`dispatch`] hands back alongside the merged document.
+#[derive(Debug)]
+pub struct DispatchReport {
+    /// The merged full-sweep document — byte-identical to
+    /// [`shard::run_full`] on the same spec.
+    pub doc: Json,
+    /// Shard requests that failed (dead worker, garbage reply, timeout)
+    /// and were reassigned to another worker.
+    pub retries: usize,
+    /// Shards completed per worker, in `workers` input order.
+    pub per_worker: Vec<(String, usize)>,
+}
+
+/// Fan `spec` out over the `workers` pool and merge the replies.
+///
+/// Shard ids are handed out from a shared queue, ascending. Each worker
+/// runs on its own scoped thread and pulls the next id when free, so fast
+/// workers naturally take more of the sweep. A failed request (connection
+/// refused, timeout, non-200, or a reply that fails
+/// [`ShardResult::from_json`] validation) pushes its shard id back on the
+/// queue for another worker and counts against the failing worker, which
+/// is retired after [`DispatchOpts::max_worker_failures`] consecutive
+/// failures. The sweep errs out only when every worker has been retired
+/// with shards still unassigned.
+///
+/// The merged output is **byte-identical** to the single-process
+/// [`shard::run_full`] document regardless of worker count, shard
+/// assignment, failures, or retries — see the module docs.
+pub fn dispatch(
+    spec: &SweepSpec,
+    workers: &[String],
+    opts: &DispatchOpts,
+) -> Result<DispatchReport, String> {
+    if workers.is_empty() {
+        return Err("dispatch: no workers given".to_string());
+    }
+    // Validate the spec before touching the network; the point count pins
+    // every shard's expected slice for reply validation.
+    let n_points = spec.resolve()?.num_points();
+    let shards = if opts.shards == 0 { workers.len() } else { opts.shards };
+
+    // Ship the prewarm snapshot first, to all workers in parallel (a
+    // blackholed worker must not serially stall startup by a full timeout).
+    // Prewarm is a warm-up, never a correctness dependency, so almost any
+    // failure — unreachable, timed out, oversized, or an unrelated server
+    // answering 400 to a POST it does not understand — just retires that
+    // worker and its share of the sweep goes elsewhere. The one fatal case
+    // is a `400` whose body names a *fingerprint* mismatch: a real worker
+    // rejecting the snapshot means mixed binaries in the fleet, and
+    // silently sweeping on would hide the misconfiguration.
+    let mut retired = vec![false; workers.len()];
+    if let Some(snap) = &opts.prewarm {
+        let body = snap.to_json().to_string();
+        let mut fatal: Option<String> = None;
+        thread::scope(|s| {
+            let handles: Vec<_> = workers
+                .iter()
+                .map(|w| {
+                    let body = &body;
+                    s.spawn(move || -> Result<bool, String> {
+                        match http_request(w, "POST", "/cache", body.as_bytes(), opts.timeout) {
+                            Ok((200, _)) => Ok(true),
+                            Ok((400, reply)) => {
+                                // Structural check: only a reply tagged with
+                                // the fingerprint-mismatch code is a fatal
+                                // mixed-binary fleet; any other 400 (an
+                                // unrelated HTTP server, a mangled body)
+                                // retires the address like any failure.
+                                let mismatch = Json::parse_bytes(&reply)
+                                    .map(|v| {
+                                        v.get("code").and_then(Json::as_str)
+                                            == Some(CODE_FINGERPRINT_MISMATCH)
+                                    })
+                                    .unwrap_or(false);
+                                if mismatch {
+                                    Err(format!(
+                                        "{w}: rejected the cache snapshot (HTTP 400: {}) — mixed binaries in the fleet?",
+                                        String::from_utf8_lossy(&reply)
+                                    ))
+                                } else {
+                                    Ok(false)
+                                }
+                            }
+                            Ok((_, _)) | Err(_) => Ok(false),
+                        }
+                    })
+                })
+                .collect();
+            for (i, h) in handles.into_iter().enumerate() {
+                match h.join() {
+                    Ok(Ok(true)) => {}
+                    Ok(Ok(false)) => retired[i] = true,
+                    Ok(Err(e)) => fatal = Some(e),
+                    Err(_) => retired[i] = true,
+                }
+            }
+        });
+        if let Some(e) = fatal {
+            return Err(e);
+        }
+    }
+    if retired.iter().all(|&r| r) {
+        return Err("dispatch: no worker reachable for the cache prewarm".to_string());
+    }
+
+    let pending: Mutex<Vec<usize>> = Mutex::new((0..shards).rev().collect());
+    let results: Vec<Mutex<Option<Json>>> = (0..shards).map(|_| Mutex::new(None)).collect();
+    let completed = AtomicUsize::new(0);
+    let retries = AtomicUsize::new(0);
+    let served: Vec<AtomicUsize> = workers.iter().map(|_| AtomicUsize::new(0)).collect();
+    // The most recent fetch failure, kept for the all-workers-failed error
+    // so a fleet-wide cause (e.g. a fingerprint mismatch) is named instead
+    // of a generic shrug.
+    let last_error: Mutex<Option<String>> = Mutex::new(None);
+
+    thread::scope(|s| {
+        for (wi, w) in workers.iter().enumerate() {
+            if retired[wi] {
+                continue;
+            }
+            let pending = &pending;
+            let results = &results;
+            let completed = &completed;
+            let retries = &retries;
+            let served = &served;
+            let last_error = &last_error;
+            s.spawn(move || {
+                let mut failures = 0usize;
+                while completed.load(Ordering::SeqCst) < shards {
+                    let id = pending.lock().unwrap().pop();
+                    let Some(id) = id else {
+                        // Everything is assigned; wait in case an in-flight
+                        // shard bounces back onto the queue.
+                        thread::sleep(Duration::from_millis(5));
+                        continue;
+                    };
+                    match fetch_shard(w, spec, n_points, shards, id, opts.timeout) {
+                        Ok(doc) => {
+                            *results[id].lock().unwrap() = Some(doc);
+                            served[wi].fetch_add(1, Ordering::Relaxed);
+                            completed.fetch_add(1, Ordering::SeqCst);
+                            failures = 0;
+                        }
+                        Err(e) => {
+                            *last_error.lock().unwrap() = Some(e);
+                            // Reassign: back on the queue before this
+                            // worker can possibly retire, so no shard is
+                            // ever lost.
+                            pending.lock().unwrap().push(id);
+                            retries.fetch_add(1, Ordering::Relaxed);
+                            failures += 1;
+                            if failures >= opts.max_worker_failures {
+                                break;
+                            }
+                        }
+                    }
+                }
+            });
+        }
+    });
+
+    if completed.load(Ordering::SeqCst) < shards {
+        let missing = results.iter().filter(|r| r.lock().unwrap().is_none()).count();
+        let detail = last_error
+            .into_inner()
+            .unwrap()
+            .unwrap_or_else(|| "no request succeeded".to_string());
+        return Err(format!(
+            "dispatch: {missing} of {shards} shards unassigned — every worker failed or was \
+             retired (last failure: {detail})"
+        ));
+    }
+    let docs: Vec<Json> = results
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("completed == shards implies every slot is filled"))
+        .collect();
+    let doc = shard::merge(&docs)?;
+    Ok(DispatchReport {
+        doc,
+        retries: retries.load(Ordering::Relaxed),
+        per_worker: workers
+            .iter()
+            .cloned()
+            .zip(served.iter().map(|c| c.load(Ordering::Relaxed)))
+            .collect(),
+    })
+}
+
+/// One validated shard fetch: POST the work order, require HTTP 200, parse
+/// the reply as a [`ShardResult`], and require it to describe exactly the
+/// requested slice of exactly the requested sweep — right coordinates
+/// *and* the exact `shard_range` slice (`start`, point count) those
+/// coordinates pin down, so even a self-consistent reply about the wrong
+/// slice is rejected here. Garbage bytes, wrong shards, and alien specs
+/// all come back as `Err` — the dispatcher retries them elsewhere and they
+/// never reach [`shard::merge`].
+fn fetch_shard(
+    addr: &str,
+    spec: &SweepSpec,
+    n_points: usize,
+    shards: usize,
+    shard_id: usize,
+    timeout: Duration,
+) -> Result<Json, String> {
+    let order = ShardRequest { spec: spec.clone(), shards, shard_id };
+    let (status, doc) =
+        http_request_json(addr, "POST", "/shard", order.to_json().to_string().as_bytes(), timeout)?;
+    if status != 200 {
+        let detail = doc.get("error").and_then(Json::as_str).unwrap_or("unknown error");
+        return Err(format!("{addr}: HTTP {status}: {detail}"));
+    }
+    let result = ShardResult::from_json(&doc).map_err(|e| format!("{addr}: invalid shard reply: {e}"))?;
+    if result.shard_id != shard_id || result.shards != shards || result.spec != *spec {
+        return Err(format!(
+            "{addr}: reply describes shard {}/{} of another sweep, not the requested {shard_id}/{shards}",
+            result.shard_id, result.shards
+        ));
+    }
+    let range = shard::shard_range(n_points, shards, shard_id);
+    if result.start != range.start || result.points.len() != range.len() {
+        return Err(format!(
+            "{addr}: reply covers points {}..{} but shard {shard_id}/{shards} owns {}..{}",
+            result.start,
+            result.start + result.points.len(),
+            range.start,
+            range.end
+        ));
+    }
+    // Hand the raw document to merge, not a re-serialization: bytes that
+    // passed validation are bytes the worker actually computed.
+    Ok(doc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+    use std::io::Cursor;
+
+    fn parse(bytes: &[u8]) -> Result<Request, HttpError> {
+        read_request(&mut Cursor::new(bytes.to_vec()))
+    }
+
+    fn status_of(bytes: &[u8]) -> u16 {
+        parse(bytes).expect_err("hostile input must not parse").status
+    }
+
+    #[test]
+    fn parses_a_well_formed_post() {
+        let req =
+            parse(b"POST /shard HTTP/1.1\r\nHost: x\r\nContent-Length: 4\r\n\r\nbody").unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/shard");
+        assert_eq!(req.body, b"body");
+    }
+
+    #[test]
+    fn get_without_content_length_has_empty_body() {
+        let req = parse(b"GET /healthz HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+        assert_eq!(req.method, "GET");
+        assert!(req.body.is_empty());
+    }
+
+    #[test]
+    fn malformed_request_lines_are_400() {
+        for bad in [
+            b"GARBAGE\r\n\r\n".as_slice(),
+            b"GET\r\n\r\n",
+            b"GET /x\r\n\r\n",
+            b" / HTTP/1.1\r\n\r\n",
+            b"GET nopath HTTP/1.1\r\n\r\n",
+            b"GET / HTTP/1.1 extra\r\n\r\n",
+            b"get / HTTP/1.1\r\n\r\n",
+            b"\r\n\r\n",
+        ] {
+            assert_eq!(status_of(bad), 400, "input {:?}", String::from_utf8_lossy(bad));
+        }
+        assert_eq!(status_of(b"GET / HTTP/2\r\n\r\n"), 505);
+        assert_eq!(status_of(b"GET / SMTP\r\n\r\n"), 505);
+    }
+
+    #[test]
+    fn content_length_abuse_is_rejected() {
+        // POST without a length cannot be framed.
+        assert_eq!(status_of(b"POST /shard HTTP/1.1\r\n\r\n"), 411);
+        // Unparseable and negative lengths.
+        assert_eq!(status_of(b"POST /s HTTP/1.1\r\ncontent-length: abc\r\n\r\n"), 400);
+        assert_eq!(status_of(b"POST /s HTTP/1.1\r\ncontent-length: -1\r\n\r\n"), 400);
+        // Duplicate headers are ambiguous framing.
+        assert_eq!(
+            status_of(b"POST /s HTTP/1.1\r\ncontent-length: 1\r\ncontent-length: 1\r\n\r\nx"),
+            400
+        );
+        // A declared body over the cap is rejected before allocation.
+        let huge = format!("POST /s HTTP/1.1\r\ncontent-length: {}\r\n\r\n", MAX_BODY_BYTES + 1);
+        assert_eq!(status_of(huge.as_bytes()), 413);
+        assert_eq!(status_of(b"POST /s HTTP/1.1\r\ncontent-length: 99999999999999999999\r\n\r\n"), 400);
+        // Malformed header line (no colon).
+        assert_eq!(status_of(b"POST /s HTTP/1.1\r\nnocolonhere\r\n\r\n"), 400);
+    }
+
+    #[test]
+    fn truncated_input_fails_cleanly() {
+        // Body shorter than declared.
+        let e = parse(b"POST /s HTTP/1.1\r\ncontent-length: 10\r\n\r\nabc").unwrap_err();
+        assert_eq!(e.status, 400);
+        assert!(e.message.contains("truncated body: got 3 of 10"), "{e}");
+        // Head never terminated.
+        assert_eq!(status_of(b"GET / HTTP/1.1\r\n"), 400);
+        assert_eq!(status_of(b""), 400);
+    }
+
+    #[test]
+    fn oversized_head_is_431() {
+        let mut msg = b"GET / HTTP/1.1\r\n".to_vec();
+        msg.extend(std::iter::repeat(b'a').take(MAX_HEAD_BYTES + 16));
+        assert_eq!(status_of(&msg), 431);
+    }
+
+    #[test]
+    fn responses_round_trip() {
+        for (status, body) in [
+            (200u16, br#"{"ok":true}"#.as_slice()),
+            (400, b"{}".as_slice()),
+            (500, b"".as_slice()),
+        ] {
+            let mut wire = Vec::new();
+            write_response(&mut wire, status, body).unwrap();
+            let (s, b) = read_response(&mut Cursor::new(wire)).unwrap();
+            assert_eq!(s, status);
+            assert_eq!(b, body);
+        }
+    }
+
+    #[test]
+    fn garbage_responses_are_502() {
+        for bad in
+            [b"SPQR nonsense\r\n\r\n".as_slice(), b"HTTP/1.1 twenty OK\r\n\r\n", b"HTTP/1.1 200 OK\r\n\r\n"]
+        {
+            let e = read_response(&mut Cursor::new(bad.to_vec())).unwrap_err();
+            assert_eq!(e.status, 502, "input {:?}", String::from_utf8_lossy(bad));
+        }
+    }
+
+    #[test]
+    fn request_write_read_round_trip_property() {
+        const PATH_CHARS: &[u8] = b"abcdefghijklmnopqrstuvwxyz0123456789/_-.";
+        check("http request round-trips", 128, |rng| {
+            let method = if rng.bool() { "POST" } else { "GET" };
+            let mut path = String::from("/");
+            for _ in 0..rng.range(0, 24) {
+                path.push(PATH_CHARS[rng.below(PATH_CHARS.len() as u64) as usize] as char);
+            }
+            let body: Vec<u8> = (0..rng.range(0, 2048)).map(|_| rng.below(256) as u8).collect();
+            let mut wire = Vec::new();
+            write_request(&mut wire, method, &path, "unit-test", &body)
+                .map_err(|e| e.to_string())?;
+            let back = read_request(&mut Cursor::new(wire)).map_err(|e| e.to_string())?;
+            if back.method != method || back.path != path || back.body != body {
+                return Err(format!("round trip mutated {method} {path} ({} body bytes)", body.len()));
+            }
+            Ok(())
+        });
+    }
+}

@@ -124,6 +124,17 @@ impl Json {
         Ok(v)
     }
 
+    /// Parse a JSON document from raw bytes (which must be valid UTF-8 —
+    /// the encoding JSON mandates). This is the entry point wire code
+    /// uses: HTTP bodies arrive as `Vec<u8>`, not `&str`.
+    pub fn parse_bytes(bytes: &[u8]) -> Result<Json, JsonError> {
+        let text = std::str::from_utf8(bytes).map_err(|e| JsonError {
+            offset: e.valid_up_to(),
+            message: "invalid utf-8".to_string(),
+        })?;
+        Json::parse(text)
+    }
+
     /// Object field access.
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
@@ -197,6 +208,29 @@ impl Json {
     pub fn obj<K: Into<String>>(entries: impl IntoIterator<Item = (K, Json)>) -> Json {
         Json::Obj(entries.into_iter().map(|(k, v)| (k.into(), v)).collect())
     }
+}
+
+/// Streaming read helper for length-framed wire formats: read **exactly**
+/// `len` bytes from `r` and parse them as one JSON document.
+///
+/// The buffer is sized up front from the declared length (callers enforce
+/// their own caps *before* calling, so a hostile length never allocates),
+/// short reads are retried until the frame is complete, and a peer that
+/// closes the stream early yields a clean `truncated body` error instead
+/// of a partial parse. [`crate::sim::transport`] uses this to consume
+/// `Content-Length`-framed HTTP bodies straight off a socket.
+pub fn read_json_exact(r: &mut impl std::io::Read, len: usize) -> Result<Json, String> {
+    let mut buf = vec![0u8; len];
+    let mut filled = 0;
+    while filled < len {
+        match r.read(&mut buf[filled..]) {
+            Ok(0) => return Err(format!("truncated body: got {filled} of {len} bytes")),
+            Ok(n) => filled += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(format!("read failed after {filled} of {len} bytes: {e}")),
+        }
+    }
+    Json::parse_bytes(&buf).map_err(|e| e.to_string())
 }
 
 /// Parse failure with byte offset.
@@ -491,6 +525,39 @@ mod tests {
             ("a", Json::arr([Json::Null, Json::Bool(false)])),
         ]);
         assert_eq!(v.to_string(), r#"{"a":[null,false],"n":3,"s":"hi"}"#);
+    }
+
+    #[test]
+    fn parse_bytes_matches_parse_and_rejects_bad_utf8() {
+        let text = r#"{"a":[1,2.5],"b":"x"}"#;
+        assert_eq!(Json::parse_bytes(text.as_bytes()).unwrap(), Json::parse(text).unwrap());
+        let err = Json::parse_bytes(&[b'"', 0xFF, b'"']).unwrap_err();
+        assert!(err.message.contains("utf-8"), "{err}");
+    }
+
+    #[test]
+    fn read_json_exact_consumes_only_the_frame() {
+        use std::io::{Cursor, Read};
+        let frame = r#"{"n":1}"#;
+        let mut stream = Cursor::new(format!("{frame}TRAILING").into_bytes());
+        let v = read_json_exact(&mut stream, frame.len()).unwrap();
+        assert_eq!(v.get("n").unwrap().as_i64(), Some(1));
+        // The trailing bytes are still on the stream.
+        let mut rest = String::new();
+        stream.read_to_string(&mut rest).unwrap();
+        assert_eq!(rest, "TRAILING");
+    }
+
+    #[test]
+    fn read_json_exact_fails_cleanly_on_truncation_and_garbage() {
+        use std::io::Cursor;
+        // Peer closed before the declared length arrived.
+        let err = read_json_exact(&mut Cursor::new(b"{\"n\"".to_vec()), 32).unwrap_err();
+        assert!(err.contains("truncated body: got 4 of 32 bytes"), "{err}");
+        // Full frame, but not JSON.
+        assert!(read_json_exact(&mut Cursor::new(b"notjson!".to_vec()), 8).is_err());
+        // Zero-length frame is an empty document, which is invalid JSON.
+        assert!(read_json_exact(&mut Cursor::new(Vec::new()), 0).is_err());
     }
 
     #[test]

@@ -29,15 +29,24 @@ fn help_covers_every_command_and_sweep_service_flag() {
     let out = run(&["help"]);
     assert!(out.status.success());
     let text = stdout(&out);
-    for cmd in ["simulate", "sweep", "merge", "hawq", "compare", "validate", "serve"] {
+    for cmd in [
+        "simulate", "sweep", "merge", "serve-worker", "dispatch", "hawq", "compare", "validate",
+        "serve",
+    ] {
         assert!(text.contains(cmd), "help does not mention command '{cmd}'");
     }
-    // The sweep-service flags the binary accepts must all be documented.
+    // The sweep-service + transport flags the binary accepts must all be
+    // documented.
     for flag in [
         "--net", "--bits", "--hw", "--tech", "--breakdown", "--out", "--shards", "--shard-id",
-        "--combos", "--seed", "--cache-in", "--cache-out", "--artifacts", "--requests",
+        "--combos", "--seed", "--cache-in", "--cache-out", "--artifacts", "--requests", "--addr",
+        "--workers", "--spec", "--timeout-s",
     ] {
         assert!(text.contains(flag), "help does not mention flag '{flag}'");
+    }
+    // The worker's endpoints are operator-facing API; keep them in help.
+    for endpoint in ["/shard", "/cache", "/healthz", "/stats"] {
+        assert!(text.contains(endpoint), "help does not mention endpoint '{endpoint}'");
     }
     // No args behaves like help.
     assert_eq!(stdout(&run(&[])), text);
@@ -127,6 +136,77 @@ fn sharded_sweep_plus_merge_matches_single_process_byte_for_byte() {
 
     // Merging an incomplete shard set must fail.
     assert!(!run(&["merge", &shard_files[0], "--out", &path("bad.json")]).status.success());
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn merge_with_zero_input_files_fails_cleanly_and_writes_nothing() {
+    let dir = scratch("merge_empty");
+    let out_path = dir.join("never-written.json");
+
+    // Bare `merge` and `merge --out F` both have zero positional files.
+    let out = run(&["merge"]);
+    assert!(!out.status.success(), "merge with no files must fail");
+    let err = String::from_utf8_lossy(&out.stderr).to_string();
+    assert!(err.contains("no shard files"), "unclear zero-files error: {err}");
+
+    let out = run(&["merge", "--out", &out_path.to_string_lossy()]);
+    assert!(!out.status.success(), "merge --out with no files must fail");
+    assert!(!out_path.exists(), "merge must not write output on the zero-files path");
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn dispatch_through_worker_binaries_matches_sweep_byte_for_byte() {
+    use std::io::BufRead;
+    let dir = scratch("dispatch");
+    let path = |name: &str| dir.join(name).to_string_lossy().to_string();
+
+    // Single-process reference document.
+    let full = path("full.json");
+    let out = run(&["sweep", "--net", "serve_cnn", "--combos", "1", "--out", &full]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+
+    // Two real `serve-worker` processes on ephemeral ports; the bound
+    // address is announced on stderr.
+    let mut children = Vec::new();
+    let mut addrs = Vec::new();
+    for _ in 0..2 {
+        let mut child = Command::new(bin())
+            .args(["serve-worker", "--addr", "127.0.0.1:0"])
+            .stderr(std::process::Stdio::piped())
+            .spawn()
+            .expect("spawn serve-worker");
+        let stderr = child.stderr.take().unwrap();
+        let mut line = String::new();
+        std::io::BufReader::new(stderr).read_line(&mut line).expect("read worker banner");
+        let addr = line
+            .split("http://")
+            .nth(1)
+            .and_then(|rest| rest.split_whitespace().next())
+            .unwrap_or_else(|| panic!("no address in worker banner: {line:?}"))
+            .to_string();
+        children.push(child);
+        addrs.push(addr);
+    }
+
+    let merged = path("merged.json");
+    let out = run(&[
+        "dispatch", "--workers", &addrs.join(","), "--net", "serve_cnn", "--combos", "1",
+        "--shards", "3", "--out", &merged,
+    ]);
+    for mut child in children {
+        let _ = child.kill();
+        let _ = child.wait();
+    }
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert_eq!(
+        std::fs::read(&merged).unwrap(),
+        std::fs::read(&full).unwrap(),
+        "dispatch output differs from the single-process sweep"
+    );
 
     let _ = std::fs::remove_dir_all(&dir);
 }

@@ -154,6 +154,76 @@ fn merge_validates_partition_shape() {
 }
 
 #[test]
+fn shard_range_overpartition_gives_empty_trailing_ranges() {
+    // More shards than points: the first n shards get one point each, the
+    // rest are empty — and the whole family still partitions 0..n. The
+    // transport now hits these ranges programmatically (a dispatcher may
+    // be configured with more shards than the sweep has points), so the
+    // edge cases deserve direct coverage.
+    for n in [0usize, 1, 2, 4] {
+        for shards in [n + 1, n + 3, 16] {
+            let mut covered = Vec::new();
+            for k in 0..shards {
+                let r = shard::shard_range(n, shards, k);
+                assert!(r.len() <= 1, "n={n} shards={shards} k={k}: range {r:?} too wide");
+                if k >= n {
+                    assert!(r.is_empty(), "n={n} shards={shards} k={k}: expected empty, got {r:?}");
+                    assert_eq!(r.start, n, "empty ranges sit at the end of the point space");
+                }
+                covered.extend(r);
+            }
+            assert_eq!(covered, (0..n).collect::<Vec<_>>(), "n={n} shards={shards}");
+        }
+    }
+}
+
+#[test]
+fn shard_range_single_point_spec_lands_in_shard_zero() {
+    assert_eq!(shard::shard_range(1, 1, 0), 0..1);
+    for shards in [2usize, 5, 9] {
+        assert_eq!(shard::shard_range(1, shards, 0), 0..1);
+        for k in 1..shards {
+            assert!(shard::shard_range(1, shards, k).is_empty());
+        }
+    }
+}
+
+#[test]
+fn shard_range_last_shard_carries_no_remainder_bias() {
+    // The remainder spreads over the *first* `rem` shards; the last shard
+    // gets the base size and always ends exactly at n.
+    for (n, shards) in [(7usize, 3usize), (10, 3), (35, 8), (6, 4), (100, 7)] {
+        let last = shard::shard_range(n, shards, shards - 1);
+        assert_eq!(last.end, n, "n={n} shards={shards}: last range {last:?} misses the end");
+        assert_eq!(last.len(), n / shards, "n={n} shards={shards}: last shard must be base-sized");
+        let first = shard::shard_range(n, shards, 0);
+        assert_eq!(first.len(), n / shards + usize::from(n % shards > 0));
+    }
+}
+
+#[test]
+fn empty_shards_run_and_merge_byte_identically() {
+    // End-to-end over-partition: 4 points into 6 shards (two of them
+    // empty) must still merge to the exact single-process bytes.
+    let spec = SweepSpec {
+        net: "serve_cnn".to_string(),
+        hw: vec!["lr".to_string()],
+        tech: vec!["sram".to_string()],
+        grid: PrecisionGrid::Fixed { bits: vec![2, 4, 6, 8] },
+        batch: 1,
+    };
+    let full = shard::run_full(&spec, &SweepEngine::serial()).unwrap().to_string();
+    let docs: Vec<Json> = (0..6)
+        .map(|k| shard::run_shard(&spec, 6, k, &SweepEngine::serial()).unwrap().to_json())
+        .collect();
+    for k in 4..6 {
+        let pts = docs[k].get("points").and_then(Json::as_arr).unwrap();
+        assert!(pts.is_empty(), "shard {k} of an overpartition should be empty");
+    }
+    assert_eq!(shard::merge(&docs).unwrap().to_string(), full);
+}
+
+#[test]
 fn invalid_specs_fail_to_resolve_before_any_work() {
     // resolve() enforces the same validity rules from_json does, so specs
     // built in code (e.g. by the CLI) cannot smuggle in degenerate grids.

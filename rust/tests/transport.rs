@@ -1,0 +1,353 @@
+//! Failure-injection suite for the HTTP worker-pool transport
+//! (`sim::transport`).
+//!
+//! The invariant under attack: a `dispatch` over a worker fleet must
+//! produce a document **byte-identical** to the single-process
+//! `shard::run_full`, no matter what the fleet does — workers dying before
+//! or mid-request, workers replying garbage bytes, non-JSON HTTP, or
+//! valid-but-wrong shard documents. Corruption must be retried elsewhere,
+//! never merged.
+//!
+//! The byte-level protocol tests also hit a live worker socket with
+//! malformed HTTP and assert clean 4xx replies (no panics, no hangs), and
+//! the dead-worker test exports its merged + reference documents to
+//! `CARGO_TARGET_TMPDIR` so CI can upload them as a debugging artifact.
+
+use std::io::{Read, Write};
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::thread;
+use std::time::Duration;
+
+use bf_imna::sim::shard::{self, PrecisionGrid, ShardResult, SweepSpec};
+use bf_imna::sim::transport::{
+    dispatch, http_request, http_request_json, DispatchOpts, WorkerServer,
+};
+use bf_imna::sim::SweepEngine;
+use bf_imna::util::json::Json;
+
+/// A small but non-trivial sweep: 2 grid cells x 4 precision configs.
+fn small_spec() -> SweepSpec {
+    SweepSpec {
+        net: "serve_cnn".to_string(),
+        hw: vec!["lr".to_string()],
+        tech: vec!["sram".to_string(), "reram".to_string()],
+        grid: PrecisionGrid::Fixed { bits: vec![2, 3, 4, 5] },
+        batch: 1,
+    }
+}
+
+/// The single-process reference document (canonical text).
+fn reference(spec: &SweepSpec) -> String {
+    shard::run_full(spec, &SweepEngine::serial()).unwrap().to_string()
+}
+
+fn spawn_workers(n: usize) -> Vec<WorkerServer> {
+    (0..n)
+        .map(|_| WorkerServer::spawn("127.0.0.1:0", SweepEngine::with_threads(2)).expect("bind worker"))
+        .collect()
+}
+
+fn addrs(workers: &[WorkerServer]) -> Vec<String> {
+    workers.iter().map(|w| w.addr().to_string()).collect()
+}
+
+fn opts(shards: usize) -> DispatchOpts {
+    DispatchOpts { shards, timeout: Duration::from_secs(30), ..DispatchOpts::default() }
+}
+
+/// A fake worker that accepts `accepts` connections, reading a bit of each
+/// request and then dropping the connection without a reply (a worker
+/// crashing mid-compute), after which its listener drops too and the port
+/// refuses connections (a worker that is gone). The thread leaks if never
+/// connected to; tests do not join it.
+fn spawn_dying_worker(accepts: usize) -> String {
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind dying worker");
+    let addr = listener.local_addr().unwrap().to_string();
+    thread::spawn(move || {
+        for _ in 0..accepts {
+            let Ok((mut stream, _)) = listener.accept() else { return };
+            let mut buf = [0u8; 256];
+            let _ = stream.read(&mut buf);
+            // Drop the stream mid-request: the dispatcher sees a reset.
+        }
+    });
+    addr
+}
+
+/// A fake worker that answers every connection with a fixed byte string.
+fn spawn_garbage_worker(reply: Vec<u8>) -> String {
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind garbage worker");
+    let addr = listener.local_addr().unwrap().to_string();
+    thread::spawn(move || loop {
+        let Ok((mut stream, _)) = listener.accept() else { return };
+        let mut buf = [0u8; 4096];
+        let _ = stream.read(&mut buf);
+        let _ = stream.write_all(&reply);
+    });
+    addr
+}
+
+fn http_200(body: &str) -> Vec<u8> {
+    format!("HTTP/1.1 200 OK\r\ncontent-length: {}\r\nconnection: close\r\n\r\n{body}", body.len())
+        .into_bytes()
+}
+
+#[test]
+fn dispatch_over_a_healthy_pool_is_byte_identical_to_run_full() {
+    let spec = small_spec();
+    let full = reference(&spec);
+    let workers = spawn_workers(3);
+    let report = dispatch(&spec, &addrs(&workers), &opts(5)).expect("dispatch");
+    assert_eq!(report.doc.to_string(), full, "merged transport doc differs from run_full");
+    assert_eq!(report.retries, 0, "healthy pool should not retry");
+    let served: usize = report.per_worker.iter().map(|(_, n)| n).sum();
+    assert_eq!(served, 5, "{:?}", report.per_worker);
+
+    // The workers' own stats agree with the dispatch report.
+    let mut stats_served = 0;
+    for w in &workers {
+        let (status, stats) =
+            http_request_json(&w.addr().to_string(), "GET", "/stats", b"", Duration::from_secs(10))
+                .expect("GET /stats");
+        assert_eq!(status, 200);
+        stats_served += stats.get("shards_served").and_then(Json::as_i64).unwrap_or(0) as usize;
+        assert!(stats.get("cache").and_then(|c| c.get("entries")).is_some(), "{stats}");
+    }
+    assert_eq!(stats_served, 5);
+    for w in workers {
+        w.shutdown();
+    }
+}
+
+#[test]
+fn dead_worker_range_is_reassigned_and_merge_stays_byte_identical() {
+    let spec = small_spec();
+    let full = reference(&spec);
+    let mut workers = spawn_workers(3);
+    let pool = addrs(&workers);
+
+    // Kill worker 0: drop its listener so every request to it is refused.
+    // Its shard range must be reassigned to the survivors.
+    workers.remove(0).shutdown();
+
+    let report = dispatch(&spec, &pool, &opts(6)).expect("dispatch over a pool with a dead worker");
+
+    // Export the documents *before* asserting on them, so CI's artifact
+    // upload has the merged-vs-reference pair to diff exactly when the
+    // byte-identity assertion below fails.
+    let tmp = std::path::Path::new(env!("CARGO_TARGET_TMPDIR"));
+    std::fs::write(tmp.join("transport_failover_merged.json"), format!("{}\n", report.doc))
+        .expect("write merged artifact");
+    std::fs::write(tmp.join("transport_failover_reference.json"), format!("{full}\n"))
+        .expect("write reference artifact");
+
+    assert_eq!(report.doc.to_string(), full, "reassigned merge differs from run_full");
+    assert!(report.retries >= 1, "dead worker produced no retries: {:?}", report.per_worker);
+    assert_eq!(report.per_worker[0].1, 0, "a dead worker cannot serve shards");
+
+    for w in workers {
+        w.shutdown();
+    }
+}
+
+#[test]
+fn worker_dying_mid_request_is_retried_elsewhere() {
+    let spec = small_spec();
+    let full = reference(&spec);
+    let workers = spawn_workers(2);
+    // The dying worker resets its first two connections mid-request, then
+    // refuses outright — both failure shapes feed the same reassignment.
+    let mut pool = vec![spawn_dying_worker(2)];
+    pool.extend(addrs(&workers));
+
+    let report = dispatch(&spec, &pool, &opts(6)).expect("dispatch with a mid-request death");
+    assert_eq!(report.doc.to_string(), full);
+    assert_eq!(report.per_worker[0].1, 0, "the dying worker never completed a shard");
+    for w in workers {
+        w.shutdown();
+    }
+}
+
+#[test]
+fn garbage_replies_are_never_merged() {
+    let spec = small_spec();
+    let full = reference(&spec);
+
+    // Three corruption shapes: raw non-HTTP bytes, a 200 whose body is not
+    // JSON, and — the subtle one — a well-formed ShardResult for the wrong
+    // shard (it may only ever be accepted for the shard it truthfully
+    // describes).
+    let liar_doc =
+        shard::run_shard(&spec, 6, 0, &SweepEngine::serial()).unwrap().to_json().to_string();
+    let healthy = spawn_workers(1);
+    let pool = vec![
+        spawn_garbage_worker(b"\x16\x03\x01 utter garbage, not http".to_vec()),
+        spawn_garbage_worker(http_200("this is not json {")),
+        spawn_garbage_worker(http_200(&liar_doc)),
+        addrs(&healthy)[0].clone(),
+    ];
+
+    let mut dopts = opts(6);
+    // Garbage workers fail fast; allow a few strikes before retirement so
+    // the validation path is exercised repeatedly.
+    dopts.max_worker_failures = 2;
+    let report = dispatch(&spec, &pool, &dopts).expect("dispatch across garbage workers");
+    assert_eq!(report.doc.to_string(), full, "a corrupt reply leaked into the merge");
+    assert!(report.retries >= 1, "garbage workers never got probed: {:?}", report.per_worker);
+    // The raw-garbage and non-JSON workers can never complete a shard. (The
+    // liar can — but only for the one shard where its reply is the truth.)
+    assert_eq!(report.per_worker[0].1, 0);
+    assert_eq!(report.per_worker[1].1, 0);
+    for w in healthy {
+        w.shutdown();
+    }
+}
+
+#[test]
+fn overpartitioned_dispatch_with_empty_shards_is_byte_identical() {
+    // More shards than points: trailing shards are empty ranges, which the
+    // workers compute (trivially) and merge accepts.
+    let spec = SweepSpec {
+        net: "serve_cnn".to_string(),
+        hw: vec!["lr".to_string()],
+        tech: vec!["sram".to_string()],
+        grid: PrecisionGrid::Fixed { bits: vec![4, 8] },
+        batch: 1,
+    };
+    let full = reference(&spec);
+    let workers = spawn_workers(2);
+    let report = dispatch(&spec, &addrs(&workers), &opts(5)).expect("overpartitioned dispatch");
+    assert_eq!(report.doc.to_string(), full);
+    for w in workers {
+        w.shutdown();
+    }
+}
+
+#[test]
+fn wire_prewarm_is_transparent_to_output_bytes() {
+    let spec = small_spec();
+    let full = reference(&spec);
+
+    // Warm a donor engine locally, snapshot its plan cache, and ship it.
+    let donor = SweepEngine::serial();
+    shard::run_full(&spec, &donor).unwrap();
+    let snap = donor.cache().snapshot();
+    assert!(snap.len() > 0, "donor cache is empty");
+
+    let workers = spawn_workers(2);
+    let pool = addrs(&workers);
+
+    // Shipping the snapshot directly reports absorbed plans...
+    let (status, reply) = http_request_json(
+        &pool[0],
+        "POST",
+        "/cache",
+        snap.to_json().to_string().as_bytes(),
+        Duration::from_secs(10),
+    )
+    .expect("POST /cache");
+    assert_eq!(status, 200, "{reply}");
+    assert!(reply.get("absorbed").and_then(Json::as_i64).unwrap_or(0) > 0, "{reply}");
+
+    // ...and a prewarmed dispatch still produces identical bytes.
+    let mut dopts = opts(4);
+    dopts.prewarm = Some(snap);
+    let report = dispatch(&spec, &pool, &dopts).expect("prewarmed dispatch");
+    assert_eq!(report.doc.to_string(), full, "wire prewarm changed output bytes");
+    for w in workers {
+        w.shutdown();
+    }
+}
+
+#[test]
+fn all_workers_dead_fails_with_a_clear_error_not_a_hang() {
+    let spec = small_spec();
+    let workers = spawn_workers(2);
+    let pool = addrs(&workers);
+    for w in workers {
+        w.shutdown();
+    }
+    let err = dispatch(&spec, &pool, &opts(4)).expect_err("dispatch over a dead pool");
+    assert!(err.contains("shards unassigned"), "{err}");
+}
+
+/// Send raw bytes to a live worker socket and return the full reply text.
+fn raw_roundtrip(addr: &str, bytes: &[u8]) -> String {
+    let mut s = TcpStream::connect(addr).expect("connect");
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    s.set_write_timeout(Some(Duration::from_secs(10))).unwrap();
+    s.write_all(bytes).expect("send");
+    let _ = s.shutdown(Shutdown::Write);
+    let mut out = Vec::new();
+    let _ = s.read_to_end(&mut out);
+    String::from_utf8_lossy(&out).to_string()
+}
+
+#[test]
+fn protocol_abuse_gets_clean_4xx_and_the_worker_survives() {
+    let worker = spawn_workers(1).remove(0);
+    let addr = worker.addr().to_string();
+
+    let cases: Vec<(Vec<u8>, &str)> = vec![
+        (b"GARBAGE\r\n\r\n".to_vec(), "400"),
+        (b"GET / HTTP/9.9\r\n\r\n".to_vec(), "505"),
+        (b"POST /shard HTTP/1.1\r\n\r\n".to_vec(), "411"),
+        (b"POST /shard HTTP/1.1\r\ncontent-length: nope\r\n\r\n".to_vec(), "400"),
+        (
+            format!("POST /shard HTTP/1.1\r\ncontent-length: {}\r\n\r\n", 1usize << 40).into_bytes(),
+            "413",
+        ),
+        // Truncated body: declares 64 bytes, sends 9, closes.
+        (b"POST /shard HTTP/1.1\r\ncontent-length: 64\r\n\r\ntruncated".to_vec(), "400"),
+        // Valid HTTP, invalid shard request JSON.
+        (b"POST /shard HTTP/1.1\r\ncontent-length: 8\r\n\r\nnot json".to_vec(), "400"),
+        (b"GET /no-such-endpoint HTTP/1.1\r\n\r\n".to_vec(), "404"),
+        (b"DELETE /healthz HTTP/1.1\r\ncontent-length: 0\r\n\r\n".to_vec(), "405"),
+    ];
+    for (bytes, expect) in cases {
+        let reply = raw_roundtrip(&addr, &bytes);
+        assert!(
+            reply.starts_with(&format!("HTTP/1.1 {expect}")),
+            "input {:?} expected {expect}, got reply {:?}",
+            String::from_utf8_lossy(&bytes),
+            reply.lines().next().unwrap_or("")
+        );
+    }
+
+    // Garbage cache snapshots are rejected, not absorbed.
+    let (status, _) =
+        http_request(&addr, "POST", "/cache", b"{\"version\":99}", Duration::from_secs(10))
+            .expect("POST /cache");
+    assert_eq!(status, 400);
+
+    // After all that abuse the worker still serves: health, then a real
+    // shard whose document matches an in-process run exactly.
+    let (status, health) =
+        http_request_json(&addr, "GET", "/healthz", b"", Duration::from_secs(10)).unwrap();
+    assert_eq!(status, 200);
+    assert_eq!(health.get("ok").and_then(Json::as_bool), Some(true));
+
+    let spec = small_spec();
+    let order = bf_imna::sim::shard::ShardRequest { spec: spec.clone(), shards: 2, shard_id: 1 };
+    let (status, doc) = http_request_json(
+        &addr,
+        "POST",
+        "/shard",
+        order.to_json().to_string().as_bytes(),
+        Duration::from_secs(30),
+    )
+    .unwrap();
+    assert_eq!(status, 200);
+    let got = ShardResult::from_json(&doc).expect("worker replied a valid shard document");
+    let want = shard::run_shard(&spec, 2, 1, &SweepEngine::serial()).unwrap();
+    assert_eq!(got.to_json().to_string(), want.to_json().to_string());
+
+    // The stats endpoint recorded both the abuse and the served shard.
+    let (status, stats) =
+        http_request_json(&addr, "GET", "/stats", b"", Duration::from_secs(10)).unwrap();
+    assert_eq!(status, 200);
+    assert!(stats.get("protocol_errors").and_then(Json::as_i64).unwrap_or(0) >= 1, "{stats}");
+    assert_eq!(stats.get("shards_served").and_then(Json::as_i64), Some(1), "{stats}");
+
+    worker.shutdown();
+}
