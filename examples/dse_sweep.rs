@@ -8,62 +8,24 @@
 
 use bf_imna::arch::HwConfig;
 use bf_imna::model::zoo;
-use bf_imna::precision::PrecisionConfig;
-use bf_imna::sim::{breakdown, dse, shard, simulate, SimParams, SweepEngine};
+use bf_imna::sim::{artifacts, dse, shard, SweepEngine};
 use bf_imna::util::json::Json;
-use bf_imna::util::table::{fmt_eng, fmt_ratio, Table};
 
 fn main() {
-    // ---- Fig. 6: technology ratios on VGG16. ---------------------------
-    let vgg = zoo::vgg16();
-    println!("Fig. 6 — ReRAM/SRAM ratios, end-to-end VGG16 inference (LR):\n");
-    let mut t = Table::new(vec!["precision", "energy ratio", "latency ratio", "area savings"]);
-    for row in dse::fig6_tech_ratios(&vgg) {
-        t.row(vec![
-            row.bits.to_string(),
-            fmt_ratio(row.energy_ratio),
-            fmt_ratio(row.latency_ratio),
-            fmt_ratio(row.area_savings),
-        ]);
-    }
-    print!("{}", t.render());
-    println!("(paper: energy ratio decreasing 80.9x -> 63.1x, latency ~flat, area 4.4x)\n");
+    // One engine (shared plan cache) for every artifact of the DSE.
+    let engine = SweepEngine::new();
 
-    // ---- Fig. 7: mixed-precision sweeps. --------------------------------
-    println!("Fig. 7 — mean metrics vs average precision (SRAM):\n");
-    for net in zoo::imagenet_benchmarks() {
-        for hw in [HwConfig::Lr, HwConfig::Ir] {
-            let series = dse::fig7_series(&net, hw, 7);
-            let mut t = Table::new(vec!["avg bits", "energy (J)", "latency (s)", "GOPS/W/mm2"]);
-            for p in &series {
-                t.row(vec![
-                    format!("{:.0}", p.avg_bits),
-                    fmt_eng(p.energy_j, 3),
-                    fmt_eng(p.latency_s, 3),
-                    fmt_eng(p.gops_per_w_mm2, 3),
-                ]);
-            }
-            println!("{} | {}:", net.name, hw.label());
-            print!("{}", t.render());
-            println!();
-        }
-    }
-
-    // ---- Fig. 8: breakdowns (INT8, LR, SRAM). ---------------------------
-    println!("Fig. 8 — energy & GEMM-latency breakdowns (INT8, LR, SRAM):\n");
-    for net in zoo::imagenet_benchmarks() {
-        let cfg = PrecisionConfig::fixed(8, net.weight_layers());
-        let r = simulate(&net, &cfg, &SimParams::lr_sram());
-        let e: Vec<String> = breakdown::energy_by_kind(&r)
-            .iter()
-            .map(|s| format!("{} {:.1}%", s.label, 100.0 * s.fraction))
-            .collect();
-        let l: Vec<String> = breakdown::gemm_latency_by_phase(&r)
-            .iter()
-            .map(|s| format!("{} {:.1}%", s.label, 100.0 * s.fraction))
-            .collect();
-        println!("{:9} energy: {}", r.net_name, e.join(", "));
-        println!("{:9} gemm latency: {}", "", l.join(", "));
+    // ---- Figs. 6–8 straight from the artifact catalog: each is a named
+    // SweepSpec run through spec -> run -> render, byte-identical to what
+    // a sharded or dispatched run of the same spec renders. ------------
+    for (name, note) in [
+        ("fig6", "(paper: energy ratio decreasing 80.9x -> 63.1x, latency ~flat, area 4.4x)"),
+        ("fig7", "(paper: energy rises with precision; latency nearly flat)"),
+        ("fig8", "(paper: GEMM dominates energy; reduction dominates GEMM latency)"),
+    ] {
+        let artifact = artifacts::by_name(name).expect("catalog artifact");
+        print!("{}", artifact.run_and_render(&engine, false).expect("artifact renders"));
+        println!("{note}\n");
     }
 
     // ---- Voltage scaling (§V-A). ----------------------------------------

@@ -6,46 +6,16 @@
 //! cargo run --release --example hawq_bitfluid
 //! ```
 
-use bf_imna::model::zoo;
-use bf_imna::precision::hawq;
-use bf_imna::sim::{simulate, SimParams};
-use bf_imna::util::table::{fmt_eng, Table};
+use bf_imna::sim::{artifacts, SweepEngine};
 
 fn main() {
-    let net = zoo::resnet18();
-    let params = SimParams::lr_sram();
-
-    // INT8 is the normalization anchor (Table VII convention).
-    let int8_cfg = hawq::config_for_resnet18(&net, &hawq::row(hawq::LatencyBudget::FixedInt8));
-    let int8 = simulate(&net, &int8_cfg, &params);
-
-    println!("Table VII — bit-fluid mixed-precision ResNet18 (HAWQ-V3 configs)");
+    // Table VII is the `table7` catalog artifact: the five HAWQ-V3
+    // configurations are an explicit precision grid in a serializable
+    // SweepSpec, and this render is byte-identical to rendering the same
+    // spec's sharded (`sweep`/`merge`) or dispatched document.
     println!("chip: Table V LR (8x8 clusters x 8x8 CAPs), SRAM, 1 GHz\n");
-    let mut t = Table::new(vec![
-        "constraint",
-        "avg bits",
-        "norm energy (ours)",
-        "norm energy (paper)",
-        "norm latency (ours)",
-        "EDP J.s (ours)",
-        "size MB",
-        "top-1 % (paper)",
-    ]);
-    for row in hawq::table_vii_rows() {
-        let cfg = hawq::config_for_resnet18(&net, &row);
-        let r = simulate(&net, &cfg, &params);
-        t.row(vec![
-            row.budget.label().to_string(),
-            format!("{:.2}", row.paper_avg_bits),
-            format!("{:.2}", int8.energy_j() / r.energy_j()),
-            format!("{:.2}", row.paper_norm_energy),
-            format!("{:.3}", int8.latency_s() / r.latency_s()),
-            fmt_eng(r.edp_js(), 3),
-            format!("{:.1}", cfg.model_size_bytes(&net) as f64 / 1e6),
-            format!("{:.2}", row.paper_top1_acc),
-        ]);
-    }
-    print!("{}", t.render());
+    let table7 = artifacts::by_name("table7").expect("table7 in catalog");
+    print!("{}", table7.run_and_render(&SweepEngine::new(), false).expect("table7 renders"));
 
     println!(
         "\nTrade-off (as in the paper): the low-latency-budget config lands the\n\

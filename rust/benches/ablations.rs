@@ -48,42 +48,15 @@ fn main() {
 
     // ------------------------------------------------------------------
     banner("Ablation 2 — IR mesh bandwidth scaling (1 link per 64 CAPs)");
-    // Rebuild the IR chip with the link scaling disabled (one fixed LR
-    // link) and compare latency flatness across precision. Both chip
-    // variants × both precisions ride one SweepEngine batch via the
-    // explicit-chip override.
+    // PR 1 could only express this ablation in-process via the
+    // `SweepPoint::on_chip` override; it is now the `ablation-ir-mesh`
+    // catalog artifact — the chip geometries are explicit coordinates of
+    // a serializable SweepSpec, so the same table renders from sharded or
+    // dispatched documents byte-identically.
     let params = SimParams::lr_sram();
     let engine = SweepEngine::new();
-    let cfg2 = PrecisionConfig::fixed(2, net.weight_layers());
-    let cfg8 = PrecisionConfig::fixed(8, net.weight_layers());
-    let scaled_chip = ChipConfig::ir_for(&net);
-    let mut fixed_chip = ChipConfig::ir_for(&net);
-    fixed_chip.mesh.bits_per_transfer = 1024;
-    let reports = engine.run(&[
-        SweepPoint::on_chip(&net, &cfg2, &params, &scaled_chip),
-        SweepPoint::on_chip(&net, &cfg8, &params, &scaled_chip),
-        SweepPoint::on_chip(&net, &cfg2, &params, &fixed_chip),
-        SweepPoint::on_chip(&net, &cfg8, &params, &fixed_chip),
-    ]);
-    let mut t = Table::new(vec![
-        "IR mesh",
-        "latency 2b (s)",
-        "latency 8b (s)",
-        "8b/2b ratio",
-    ]);
-    for (label, pair) in
-        [("scaled (ours)", &reports[0..2]), ("fixed link (ablated)", &reports[2..4])]
-    {
-        let (l2, l8) = (pair[0].latency_s(), pair[1].latency_s());
-        t.row(vec![
-            label.to_string(),
-            fmt_eng(l2, 3),
-            fmt_eng(l8, 3),
-            format!("{:.2}", l8 / l2),
-        ]);
-    }
-    print!("{}", t.render());
-    println!("(paper/Fig. 7b: latency must be nearly precision-flat — the fixed link is not)");
+    let ablation = bf_imna::sim::artifacts::by_name("ablation-ir-mesh").expect("in catalog");
+    print!("{}", ablation.run_and_render(&engine, false).expect("ablation renders"));
 
     // ------------------------------------------------------------------
     banner("Ablation 3 — compiled batch sizes (batcher amortization)");

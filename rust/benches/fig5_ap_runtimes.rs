@@ -4,44 +4,18 @@
 //! precision M for the three AP organizations.
 
 use bf_imna::ap::{runtime_model as rt, ApKind};
+use bf_imna::sim::{artifacts, SweepEngine};
 use bf_imna::util::benchkit::{banner, Bencher};
-use bf_imna::util::table::Table;
-
-fn series(title: &str, f: impl Fn(u32, ApKind) -> u64) {
-    println!("\n{title}");
-    let mut t = Table::new(vec!["M", "1D AP", "2D AP", "2D AP (seg)"]);
-    for m in [2u32, 4, 6, 8, 10, 12, 14, 16] {
-        t.row(vec![
-            m.to_string(),
-            f(m, ApKind::OneD).to_string(),
-            f(m, ApKind::TwoD).to_string(),
-            f(m, ApKind::TwoDSeg).to_string(),
-        ]);
-    }
-    print!("{}", t.render());
-}
 
 fn main() {
-    banner("Fig. 5 — AP runtimes vs precision M (time units)");
-    let l = 1024u64; // words for element-wise / reduction series
-    let (s, k) = (4u64, 64u64); // pooling window + op count
-    let (i, j, u) = (16u64, 128u64, 16u64); // matmul shape
+    // The seven series tables come from the `fig5` catalog artifact — the
+    // same renderer `bf-imna render --artifact fig5` uses.
+    let fig5 = artifacts::by_name("fig5").expect("fig5 in catalog");
+    print!("{}", fig5.run_and_render(&SweepEngine::serial(), false).expect("fig5 renders"));
 
-    series("(a) reduction (L = 1024)", |m, kd| rt::reduce(m, l, kd).events.time_units());
-    series(&format!("(b) matrix-matrix multiplication ({i}x{j} by {j}x{u})"), |m, kd| {
-        rt::matmat(m, m, i, j, u, kd).events.time_units()
-    });
-    series("(c) average pooling (S = 4, K = 64)", |m, kd| {
-        rt::avgpool(m, s, k, kd).events.time_units()
-    });
-    series("(d) max pooling (S = 4, K = 64)", |m, kd| {
-        rt::maxpool(m, s, k, kd).events.time_units()
-    });
-    series("(e) addition (L = 1024)", |m, kd| rt::add(m, l, kd).events.time_units());
-    series("(f) multiplication (L = 1024)", |m, kd| {
-        rt::multiply(m, m, l, kd).events.time_units()
-    });
-    series("(g) ReLU (L = 1024)", |m, kd| rt::relu(m, l, kd).events.time_units());
+    let l = 1024u64; // words for element-wise / reduction series
+    let (i, j, u) = (16u64, 128u64, 16u64); // matmul shape (for the timing loop)
+    let (s, k) = (4u64, 64u64); // pooling window + op count
 
     // Shape checks the paper's Fig. 5 narrative depends on.
     banner("Shape checks");

@@ -5,24 +5,20 @@
 use bf_imna::arch::HwConfig;
 use bf_imna::model::zoo;
 use bf_imna::precision::PrecisionConfig;
-use bf_imna::sim::{dse, simulate, simulate_on, SimParams};
+use bf_imna::sim::{artifacts, dse, simulate, simulate_on, SimParams, SweepEngine};
 use bf_imna::util::benchkit::{banner, Bencher};
 use bf_imna::util::table::{fmt_ratio, Table};
 
 fn main() {
     banner("Fig. 6 — ReRAM/SRAM ratios, end-to-end VGG16 (LR chip)");
+    // The figure itself comes from the artifact catalog: spec -> run ->
+    // render, byte-identical to rendering a sharded or dispatched run of
+    // the same spec.
+    let engine = SweepEngine::new();
+    let fig6 = artifacts::by_name("fig6").expect("fig6 in catalog");
+    print!("{}", fig6.run_and_render(&engine, false).expect("fig6 renders"));
     let vgg = zoo::vgg16();
-    let rows = dse::fig6_tech_ratios(&vgg);
-    let mut t = Table::new(vec!["precision", "energy ratio", "latency ratio", "area savings"]);
-    for r in &rows {
-        t.row(vec![
-            r.bits.to_string(),
-            fmt_ratio(r.energy_ratio),
-            fmt_ratio(r.latency_ratio),
-            fmt_ratio(r.area_savings),
-        ]);
-    }
-    print!("{}", t.render());
+    let rows = dse::fig6_tech_ratios_with(&engine, &vgg);
     println!(
         "paper: energy ratios decreasing 80.9x -> 63.1x; latency ~1.85x flat; area 4.4x.\n\
          measured shape: energy ratio decreasing {} -> {}; latency {}..{}; area {}.",

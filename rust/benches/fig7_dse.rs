@@ -4,35 +4,26 @@
 
 use bf_imna::arch::HwConfig;
 use bf_imna::model::zoo;
-use bf_imna::sim::{dse, shard, SweepEngine};
+use bf_imna::sim::{artifacts, dse, shard, SweepEngine};
 use bf_imna::util::benchkit::{banner, Bencher};
 use bf_imna::util::json::Json;
-use bf_imna::util::table::{fmt_eng, Table};
 
 fn main() {
     banner("Fig. 7 — DSE vs average precision (SRAM, mean of sweep combos)");
     // One engine for the whole figure: every series fans its combination
     // points across the worker pool, and the plan cache carries over from
     // series to series (same nets, same 7 candidate widths per layer).
+    // The figure itself is the `fig7` catalog artifact — one multi-network
+    // SweepSpec (3 nets x {LR, IR}) run and rendered through the same path
+    // a sharded or dispatched run would take.
     let engine = SweepEngine::new();
+    let fig7 = artifacts::by_name("fig7").expect("fig7 in catalog");
+    print!("{}", fig7.run_and_render(&engine, false).expect("fig7 renders"));
+    // Paper shape assertions per series, from the same engine (cache warm).
     let nets = zoo::imagenet_benchmarks();
     for hw in [HwConfig::Lr, HwConfig::Ir] {
-        println!("\n=== {} configuration ===", hw.label());
         for net in &nets {
             let series = dse::fig7_series_with(&engine, net, hw, 7);
-            println!("\n{}:", net.name);
-            let mut t =
-                Table::new(vec!["avg bits", "energy (J)", "latency (s)", "GOPS/W/mm2"]);
-            for p in &series {
-                t.row(vec![
-                    format!("{:.0}", p.avg_bits),
-                    fmt_eng(p.energy_j, 3),
-                    fmt_eng(p.latency_s, 3),
-                    fmt_eng(p.gops_per_w_mm2, 3),
-                ]);
-            }
-            print!("{}", t.render());
-            // Paper shape assertions per series.
             assert!(
                 series.windows(2).all(|w| w[1].energy_j > w[0].energy_j),
                 "{} {}: energy must increase with precision",

@@ -5,64 +5,43 @@
 
 use bf_imna::model::zoo;
 use bf_imna::precision::PrecisionConfig;
-use bf_imna::sim::{breakdown, SimParams, SweepEngine, SweepPoint};
+use bf_imna::sim::{artifacts, breakdown, shard, SimParams, SweepEngine, SweepPoint};
 use bf_imna::util::benchkit::{banner, Bencher};
 use bf_imna::util::table::{fmt_eng, Table};
 
 fn main() {
     let params = SimParams::lr_sram();
     let engine = SweepEngine::new();
-    let nets = zoo::imagenet_benchmarks();
-    let cfgs: Vec<PrecisionConfig> =
-        nets.iter().map(|n| PrecisionConfig::fixed(8, n.weight_layers())).collect();
-    let points: Vec<SweepPoint> =
-        nets.iter().zip(&cfgs).map(|(n, c)| SweepPoint::new(n, c, &params)).collect();
-    let bds = breakdown::breakdowns_many(&engine, &points);
 
-    banner("Fig. 8a — energy breakdown (INT8, LR, SRAM)");
-    let mut t = Table::new(vec!["network", "GEMM", "Pooling", "Residual/ReLU", "Interconnect"]);
-    for (net, bd) in nets.iter().zip(&bds) {
-        let shares = &bd.energy_by_kind;
-        let pct = |l: &str| format!("{:.1}%", 100.0 * breakdown::fraction_of(shares, l));
-        t.row(vec![
-            net.name.clone(),
-            pct("GEMM"),
-            pct("Pooling"),
-            pct("Residual/ReLU"),
-            pct("Interconnect"),
-        ]);
-        // Paper: "GEMM and pooling are the main energy bottlenecks" — GEMM
-        // must dominate the AP-side energy.
-        assert!(
-            breakdown::fraction_of(shares, "GEMM") > 0.4,
-            "{}: GEMM share too small",
-            net.name
-        );
-    }
-    print!("{}", t.render());
-
-    banner("Fig. 8b — GEMM latency breakdown by phase (INT8, LR, SRAM)");
-    let mut t = Table::new(vec!["network", "Populate", "Multiply", "Reduce", "Readout", "ReLU"]);
-    for (net, bd) in nets.iter().zip(&bds) {
-        let shares = &bd.gemm_latency_by_phase;
-        let pct = |l: &str| format!("{:.1}%", 100.0 * breakdown::fraction_of(shares, l));
-        t.row(vec![
-            net.name.clone(),
-            pct("Populate"),
-            pct("Multiply"),
-            pct("Reduce"),
-            pct("Readout"),
-            pct("ReLU"),
-        ]);
-        // The paper's headline: reduction, not multiplication, bottlenecks
-        // GEMM latency.
-        let red = breakdown::fraction_of(shares, "Reduce");
-        let mul = breakdown::fraction_of(shares, "Multiply");
-        assert!(red > mul && red > 0.5, "{}: reduce {red:.2} vs multiply {mul:.2}", net.name);
-    }
-    print!("{}", t.render());
+    banner("Fig. 8 — breakdowns (INT8, LR, SRAM), via the artifact catalog");
+    // Both share tables come from the `fig8` catalog artifact: the spec's
+    // records carry the breakdown values, so the rendered figure is
+    // byte-identical whether the document was computed here, by shards,
+    // or by a worker fleet.
+    let fig8 = artifacts::by_name("fig8").expect("fig8 in catalog");
+    let spec = fig8.spec();
+    let resolved = spec.resolve().expect("fig8 spec resolves");
+    let result = shard::run_shard(&spec, 1, 0, &engine).expect("fig8 sweep runs");
+    print!(
+        "{}",
+        fig8.render_records(&spec, &resolved, &result.points).expect("fig8 renders")
+    );
     println!("(paper: reduction dominates GEMM latency; multiplication is bit-serial\n\
               column-parallel and nearly precision-flat in total latency)");
+
+    // Paper shape assertions straight off the records the renderer used.
+    for rec in &result.points {
+        let energy = breakdown::shares(&breakdown::ENERGY_KIND_LABELS, &rec.energy_kinds);
+        assert!(
+            breakdown::fraction_of(&energy, "GEMM") > 0.4,
+            "{}: GEMM share too small",
+            rec.net
+        );
+        let phases = breakdown::shares(&breakdown::GEMM_PHASE_LABELS, &rec.gemm_phases);
+        let red = breakdown::fraction_of(&phases, "Reduce");
+        let mul = breakdown::fraction_of(&phases, "Multiply");
+        assert!(red > mul && red > 0.5, "{}: reduce {red:.2} vs multiply {mul:.2}", rec.net);
+    }
 
     banner("Per-layer detail (VGG16, 5 most expensive layers)");
     let vgg = zoo::vgg16();
@@ -83,6 +62,11 @@ fn main() {
     print!("{}", t.render());
 
     banner("Timing");
+    let nets = zoo::imagenet_benchmarks();
+    let cfgs: Vec<PrecisionConfig> =
+        nets.iter().map(|n| PrecisionConfig::fixed(8, n.weight_layers())).collect();
+    let points: Vec<SweepPoint> =
+        nets.iter().zip(&cfgs).map(|(n, c)| SweepPoint::new(n, c, &params)).collect();
     let bench = Bencher::new().samples(10);
     let r = bench.run("engine sweep + both breakdowns (3 nets)", || {
         let bds = breakdown::breakdowns_many(&engine, &points);

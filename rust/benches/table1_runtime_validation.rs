@@ -4,38 +4,20 @@
 //! validate the proposed mathematical models").
 
 use bf_imna::ap::{complexity::Function, emulator, runtime_model as rt, ApKind};
+use bf_imna::sim::{artifacts, SweepEngine};
 use bf_imna::util::benchkit::{banner, Bencher};
 use bf_imna::util::rng::Rng;
 use bf_imna::util::table::Table;
 
 fn main() {
-    banner("Table I — devised runtime of functions on APs (time units)");
-    let (m, l, s, k, i, j, u) = (8u32, 256u64, 4u64, 16u64, 8u64, 64u64, 8u64);
-    println!("M={m}, L={l}, S={s}, K={k}, matmul {i}x{j} by {j}x{u}\n");
-    let mut t = Table::new(vec!["function", "1D AP", "2D AP (no seg)", "2D AP (seg)"]);
-    let rows: Vec<(&str, Box<dyn Fn(ApKind) -> u64>)> = vec![
-        ("Addition", Box::new(move |kd| rt::add(m, l, kd).events.time_units())),
-        ("Multiplication", Box::new(move |kd| rt::multiply(m, m, l, kd).events.time_units())),
-        ("Reduction", Box::new(move |kd| rt::reduce(m, l, kd).events.time_units())),
-        (
-            "Matrix-Matrix Mult.",
-            Box::new(move |kd| rt::matmat(m, m, i, j, u, kd).events.time_units()),
-        ),
-        ("ReLU", Box::new(move |kd| rt::relu(m, l, kd).events.time_units())),
-        ("Max Pooling", Box::new(move |kd| rt::maxpool(m, s, k, kd).events.time_units())),
-        ("Average Pooling", Box::new(move |kd| rt::avgpool(m, s, k, kd).events.time_units())),
-    ];
-    for (name, f) in &rows {
-        t.row(vec![
-            name.to_string(),
-            f(ApKind::OneD).to_string(),
-            f(ApKind::TwoD).to_string(),
-            f(ApKind::TwoDSeg).to_string(),
-        ]);
-    }
-    print!("{}", t.render());
+    banner("Table I — via the artifact catalog (devised models + emulator validation)");
+    // The Table I artifact renders the devised runtime models and the
+    // bit-exact emulator validation; it *errors* (failing this bench) if
+    // the emulator diverges from the analytic pass counts.
+    let table1 = artifacts::by_name("table1").expect("table1 in catalog");
+    print!("{}", table1.run_and_render(&SweepEngine::serial(), false).expect("table1 validates"));
 
-    banner("Emulator validation (bit-exact CAM vs analytic pass counts)");
+    banner("Extended emulator validation (seed 42, + ReLU, larger vectors)");
     let mut rng = Rng::new(42);
     let mut t = Table::new(vec!["function", "M", "emulated", "analytic", "match"]);
     let mut all_ok = true;

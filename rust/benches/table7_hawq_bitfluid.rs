@@ -4,56 +4,47 @@
 
 use bf_imna::model::zoo;
 use bf_imna::precision::hawq::{self, LatencyBudget};
-use bf_imna::sim::{simulate, SimParams};
+use bf_imna::sim::{artifacts, shard, simulate, SimParams, SweepEngine};
 use bf_imna::util::benchkit::{banner, Bencher};
-use bf_imna::util::table::{fmt_eng, Table};
 
 fn main() {
     banner("Table VII — bit-fluid BF-IMNA, ResNet18 + HAWQ-V3 configs (LR, SRAM)");
-    let net = zoo::resnet18();
-    let params = SimParams::lr_sram();
-    let int8 = {
-        let cfg = hawq::config_for_resnet18(&net, &hawq::row(LatencyBudget::FixedInt8));
-        simulate(&net, &cfg, &params)
+    // The table comes from the `table7` catalog artifact: the five HAWQ
+    // configurations are an *explicit precision grid* in a serializable
+    // SweepSpec, so the same table renders from sharded or dispatched
+    // documents byte-identically.
+    let engine = SweepEngine::new();
+    let table7 = artifacts::by_name("table7").expect("table7 in catalog");
+    let spec = table7.spec();
+    let resolved = spec.resolve().expect("table7 spec resolves");
+    let result = shard::run_shard(&spec, 1, 0, &engine).expect("table7 sweep runs");
+    print!(
+        "{}",
+        table7.render_records(&spec, &resolved, &result.points).expect("table7 renders")
+    );
+
+    // Shape assertions straight off the records the renderer used.
+    let rec_for = |budget: LatencyBudget| {
+        let name = format!("hawq-{}", hawq::row(budget).budget.label());
+        result
+            .points
+            .iter()
+            .find(|r| r.cfg == name)
+            .unwrap_or_else(|| panic!("no record for {name}"))
     };
-
-    let mut t = Table::new(vec![
-        "constraint",
-        "avg bits",
-        "norm E ours",
-        "norm E paper",
-        "norm L ours",
-        "norm L paper",
-        "EDP ours (J.s)",
-        "size MB",
-        "top-1 % (paper)",
-    ]);
-    let mut edps = Vec::new();
+    let int8 = rec_for(LatencyBudget::FixedInt8);
     for row in hawq::table_vii_rows() {
-        let cfg = hawq::config_for_resnet18(&net, &row);
-        let r = simulate(&net, &cfg, &params);
-        let norm_e = int8.energy_j() / r.energy_j();
-        let norm_l = int8.latency_s() / r.latency_s();
-        edps.push((row.budget, r.edp_js()));
-        t.row(vec![
-            row.budget.label().to_string(),
-            format!("{:.2}", row.paper_avg_bits),
-            format!("{:.2}", norm_e),
-            format!("{:.2}", row.paper_norm_energy),
-            format!("{:.3}", norm_l),
-            format!("{:.3}", row.paper_norm_latency),
-            fmt_eng(r.edp_js(), 3),
-            format!("{:.1}", cfg.model_size_bytes(&net) as f64 / 1e6),
-            format!("{:.2}", row.paper_top1_acc),
-        ]);
-        // Shape: the normalized-energy ranking must match the paper even
-        // where the absolute factor differs.
-        assert!(norm_e >= 0.99, "{}: worse than INT8?", row.budget.label());
+        let rec = rec_for(row.budget);
+        // The normalized-energy ranking must match the paper even where
+        // the absolute factor differs.
+        assert!(
+            int8.energy_j / rec.energy_j >= 0.99,
+            "{}: worse than INT8?",
+            row.budget.label()
+        );
     }
-    print!("{}", t.render());
-
     // Paper EDP ordering: INT4 < Low < Medium < High < INT8.
-    let edp = |b: LatencyBudget| edps.iter().find(|(x, _)| *x == b).unwrap().1;
+    let edp = |b: LatencyBudget| rec_for(b).edp_js;
     assert!(edp(LatencyBudget::FixedInt4) < edp(LatencyBudget::Low));
     assert!(edp(LatencyBudget::Low) < edp(LatencyBudget::Medium));
     assert!(edp(LatencyBudget::Medium) < edp(LatencyBudget::High));
@@ -64,6 +55,8 @@ fn main() {
     println!("accuracy/EDP trade-off runs in examples/e2e_serving.rs).");
 
     banner("Timing");
+    let net = zoo::resnet18();
+    let params = SimParams::lr_sram();
     let bench = Bencher::new().samples(10);
     let r = bench.run("table7 (5 configs x ResNet18 LR sim)", || {
         hawq::table_vii_rows()

@@ -4,31 +4,15 @@
 
 use bf_imna::ap::tech::Tech;
 use bf_imna::baselines::{peak, record, sota_records, PAPER_BF_ROWS};
+use bf_imna::sim::{artifacts, SweepEngine};
 use bf_imna::util::benchkit::{banner, Bencher};
 use bf_imna::util::table::{fmt_eng, fmt_ratio, Table};
 
 fn main() {
     banner("Table VIII — performance comparison with SOTA frameworks");
-    let mut t = Table::new(vec!["framework", "technology", "bits", "GOPS", "GOPS/W"]);
-    for r in sota_records() {
-        t.row(vec![
-            r.name.to_string(),
-            r.technology.to_string(),
-            r.precision.to_string(),
-            fmt_eng(r.gops, 4),
-            fmt_eng(r.gops_per_w, 4),
-        ]);
-    }
-    for row in peak::bf_imna_rows() {
-        t.row(vec![
-            format!("BF-IMNA_{}b (modeled)", row.precision),
-            "CMOS (16nm)".to_string(),
-            row.precision.to_string(),
-            fmt_eng(row.gops, 4),
-            fmt_eng(row.gops_per_w, 4),
-        ]);
-    }
-    print!("{}", t.render());
+    // The table + §V-C headlines come from the `table8` catalog artifact.
+    let table8 = artifacts::by_name("table8").expect("table8 in catalog");
+    print!("{}", table8.run_and_render(&SweepEngine::serial(), false).expect("table8 renders"));
 
     banner("Model vs published BF-IMNA rows");
     let mut t = Table::new(vec!["bits", "GOPS model", "GOPS paper", "err", "GOPS/W model", "GOPS/W paper", "err"]);

@@ -7,35 +7,39 @@
 //! bf-imna sweep    --net alexnet [--hw lr|ir]         # Fig. 7 series (table)
 //! bf-imna sweep    --net alexnet --out full.json      # same sweep as JSON
 //! bf-imna sweep    --shards 4 --shard-id 0 --out s0.json   # one sweep-service shard
+//! bf-imna sweep    --artifact fig6 --shards 2 --shard-id 0 --out s0.json
 //! bf-imna merge    s0.json s1.json s2.json s3.json --out full.json
 //! bf-imna serve-worker --addr 127.0.0.1:8377          # HTTP sweep worker
 //! bf-imna dispatch --workers a:8377,b:8377 --out full.json  # fan out + merge
-//! bf-imna hawq                                        # Table VII
-//! bf-imna compare                                     # Table VIII
-//! bf-imna validate                                    # Table I microbenchmark
+//! bf-imna artifacts                                   # list the paper-artifact catalog
+//! bf-imna render   --artifact fig7 --doc full.json    # document -> figure/table text
+//! bf-imna hawq                                        # Table VII (table7 artifact)
+//! bf-imna compare                                     # Table VIII (table8 artifact)
+//! bf-imna validate                                    # Table I (table1 artifact)
 //! bf-imna serve    [--artifacts DIR] [--requests N]   # live serving demo
 //! ```
 //!
 //! The sharded form is the scale-out path: every shard is an independent
 //! process (no coordination), and `merge` reassembles a byte-identical
-//! copy of the single-process sweep document. See `sim::shard`.
+//! copy of the single-process sweep document. Every paper artifact is a
+//! named `SweepSpec` in the catalog (`sim::artifacts`), so any figure or
+//! table can be produced locally, via `sweep`/`merge` shards, or via
+//! `dispatch` on a worker fleet — and renders byte-identically from all
+//! three. See `sim::shard` and `sim::artifacts`.
 //!
 //! (Hand-rolled argument parsing — the offline vendor set has no `clap`.)
 
 use std::collections::BTreeMap;
 use std::process::ExitCode;
 
-use bf_imna::ap::tech::Tech;
-use bf_imna::baselines::{self, peak};
 use bf_imna::coordinator::{Budget, Coordinator, CoordinatorConfig};
 use bf_imna::mapper::CacheSnapshot;
-use bf_imna::model::zoo;
-use bf_imna::precision::{hawq, PrecisionConfig};
+use bf_imna::precision::PrecisionConfig;
 use bf_imna::sim::shard::{self, SweepSpec};
 use bf_imna::sim::transport;
-use bf_imna::sim::{breakdown, dse, simulate, SimParams, SweepEngine};
+use bf_imna::sim::{artifacts, breakdown, dse, simulate, SimParams, SweepEngine};
 use bf_imna::util::json::Json;
-use bf_imna::util::table::{fmt_eng, fmt_ratio, Table};
+use bf_imna::util::table::{fmt_eng, Table};
 
 fn main() -> ExitCode {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -47,6 +51,8 @@ fn main() -> ExitCode {
         "merge" => cmd_merge(&opts, &files),
         "serve-worker" => cmd_serve_worker(&opts),
         "dispatch" => cmd_dispatch(&opts),
+        "artifacts" => cmd_artifacts(&opts),
+        "render" => cmd_render(&opts),
         "hawq" => cmd_hawq(),
         "compare" => cmd_compare(),
         "validate" => cmd_validate(),
@@ -77,11 +83,15 @@ COMMANDS:
              --bits N (fixed precision, default 8)   --hw lr|ir (default lr)
              --tech sram|reram|pcm|fefet (default sram)
              --breakdown (also print the Fig. 8 energy/latency shares)
-  sweep      Fig. 7 mixed-precision DSE sweep
+  sweep      Fig. 7 mixed-precision DSE sweep / sweep-service shard runner
              --net ... (default alexnet)   --hw lr|ir (default lr)
-             table mode (default): print the per-average-precision series
+             table mode (default): render the per-average-precision series
+             through the catalog's fig7 renderer
              JSON / sweep-service mode (any of the flags below):
              --out FILE        write the sweep document (default: stdout)
+             --spec FILE       run an explicit sweep-spec JSON
+             --artifact NAME   run a catalog artifact's spec (see `artifacts`)
+             --tiny            with --artifact: use the shrunk smoke grid
              --shards N        split the sweep into N contiguous shards
              --shard-id K      run shard K in 0..N (default 0)
              --tech sram|reram|pcm|fefet (default sram)
@@ -102,18 +112,34 @@ COMMANDS:
                         GET /healthz, GET /stats  liveness + cache counters
   dispatch   fan a sweep out over serve-worker processes and merge
              --workers a:p1,b:p2  comma-separated worker addresses (required)
-             --spec FILE       sweep-spec JSON; when absent the spec is
-                               built from --net/--hw/--tech/--combos/--seed
-                               exactly like `sweep`
+             --spec FILE       sweep-spec JSON; --artifact NAME [--tiny]
+                               uses a catalog artifact's spec; when both
+                               are absent the spec is built from
+                               --net/--hw/--tech/--combos/--seed exactly
+                               like `sweep`
              --shards N        shard count (default: one per worker)
              --timeout-s N     per-request timeout in seconds (default 120)
              --cache-in FILE   ship a plan-cache snapshot to every worker
              --out FILE        write the merged document (default: stdout)
              failed/slow workers are retried on healthy ones; the merged
              output is byte-identical to the unsharded `sweep --out`
-  hawq       Table VII — HAWQ-V3 bit-fluid ResNet18 under latency budgets
-  compare    Table VIII — BF-IMNA peak rows vs published SOTA accelerators
-  validate   Table I microbenchmark — functional emulator vs analytic models
+  artifacts  list the paper-artifact catalog (one SweepSpec + renderer per
+             figure/table of the paper)
+             --names           print bare artifact names, one per line
+             --spec NAME       print artifact NAME's sweep-spec JSON
+             --tiny            with --spec: shrink to the CI smoke grid
+             --out FILE        write instead of stdout
+  render     render a paper artifact from a merged sweep document
+             --artifact NAME   which artifact to render (required)
+             --doc FILE        merged document from sweep/merge/dispatch;
+                               when absent the spec runs in-process first
+             --tiny            with no --doc: run the shrunk smoke grid
+             --out FILE        write the rendered text (default: stdout)
+             output is byte-identical across in-process, sharded, and
+             dispatched documents of the same spec
+  hawq       Table VII — HAWQ-V3 bit-fluid ResNet18 (the table7 artifact)
+  compare    Table VIII — BF-IMNA peak rows vs SOTA (the table8 artifact)
+  validate   Table I microbenchmark — emulator vs models (the table1 artifact)
   serve      live bit-fluid serving demo over the AOT artifacts
              --artifacts DIR (default artifacts)  --requests N (default 32)
 ";
@@ -194,34 +220,24 @@ fn cmd_simulate(opts: &BTreeMap<String, String>) -> CliResult {
 }
 
 fn cmd_sweep(opts: &BTreeMap<String, String>) -> CliResult {
-    let net_name = opts.get("net").map(String::as_str).unwrap_or("alexnet");
-    let hw_name = opts.get("hw").map(String::as_str).unwrap_or("lr");
     // Any sweep-service flag (as listed in HELP) switches to JSON mode;
-    // plain `sweep --net X --hw Y` keeps the original Fig. 7 table.
-    let service_mode = ["out", "shards", "shard-id", "tech", "combos", "seed", "cache-in", "cache-out"]
-        .iter()
-        .any(|k| opts.contains_key(*k));
+    // plain `sweep --net X --hw Y` keeps the Fig. 7 table.
+    let service_mode = [
+        "out", "spec", "artifact", "tiny", "shards", "shard-id", "tech", "combos", "seed",
+        "cache-in", "cache-out",
+    ]
+    .iter()
+    .any(|k| opts.contains_key(*k));
     if !service_mode {
-        // Table mode: print the Fig. 7 series, exactly as before.
-        let net = shard::net_by_name(net_name)?;
-        let hw = shard::hw_by_name(hw_name)?;
-        let series = dse::fig7_series(&net, hw, 7);
-        println!(
-            "{} | {} | SRAM | Fig. 7 series (mean of {} combos/point)",
-            net.name,
-            hw.label(),
-            dse::COMBOS_PER_TARGET
-        );
-        let mut t = Table::new(vec!["avg bits", "energy (J)", "latency (s)", "GOPS/W/mm2"]);
-        for p in series {
-            t.row(vec![
-                format!("{:.0}", p.avg_bits),
-                fmt_eng(p.energy_j, 3),
-                fmt_eng(p.latency_s, 3),
-                fmt_eng(p.gops_per_w_mm2, 3),
-            ]);
-        }
-        print!("{}", t.render());
+        // Table mode: the same spec -> run -> render path as everything
+        // else — the series table comes from the catalog's fig7 renderer,
+        // not a second in-process derivation.
+        let net_name = opts.get("net").map(String::as_str).unwrap_or("alexnet");
+        let hw_name = opts.get("hw").map(String::as_str).unwrap_or("lr");
+        let spec = SweepSpec::fig7(net_name, hw_name, dse::COMBOS_PER_TARGET, 7);
+        let resolved = spec.resolve()?;
+        let result = shard::run_shard(&spec, 1, 0, &SweepEngine::new())?;
+        print!("{}", artifacts::render_fig7(&spec, &resolved, &result.points)?);
         return Ok(());
     }
 
@@ -235,7 +251,7 @@ fn cmd_sweep(opts: &BTreeMap<String, String>) -> CliResult {
         None => 0,
     };
     // Shard/spec validation happens inside `run_shard_prewarmed` below.
-    let spec = spec_from_sweep_flags(opts)?;
+    let spec = spec_from_opts(opts)?;
 
     let engine = SweepEngine::new();
     if let Some(path) = opts.get("cache-in") {
@@ -268,13 +284,26 @@ fn cmd_sweep(opts: &BTreeMap<String, String>) -> CliResult {
     Ok(())
 }
 
-/// Build the sweep spec that `sweep`'s service mode and `dispatch` share
-/// from the common flags (`--net/--hw/--tech/--combos/--seed`). One code
-/// path, so the two commands' documents stay byte-comparable by
-/// construction.
-fn spec_from_sweep_flags(
+/// Resolve the sweep spec `sweep`'s service mode and `dispatch` share:
+/// a catalog artifact (`--artifact NAME [--tiny]`), an explicit spec file
+/// (`--spec FILE`), or the Fig. 7 shape built from the common flags
+/// (`--net/--hw/--tech/--combos/--seed`). One code path, so the commands'
+/// documents stay byte-comparable by construction.
+fn spec_from_opts(
     opts: &BTreeMap<String, String>,
 ) -> Result<SweepSpec, Box<dyn std::error::Error>> {
+    if let Some(name) = opts.get("artifact") {
+        let artifact = artifacts::by_name(name)?;
+        return Ok(if opts.contains_key("tiny") {
+            artifact.tiny_spec()
+        } else {
+            artifact.spec()
+        });
+    }
+    if let Some(path) = opts.get("spec") {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+        return Ok(SweepSpec::from_json(&Json::parse(&text).map_err(|e| format!("{path}: {e}"))?)?);
+    }
     let net = opts.get("net").map(String::as_str).unwrap_or("alexnet");
     let hw = opts.get("hw").map(String::as_str).unwrap_or("lr");
     let combos: usize = match opts.get("combos") {
@@ -326,13 +355,7 @@ fn cmd_dispatch(opts: &BTreeMap<String, String>) -> CliResult {
     if workers.is_empty() {
         return Err("dispatch: --workers list is empty".into());
     }
-    let spec = match opts.get("spec") {
-        Some(path) => {
-            let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
-            SweepSpec::from_json(&Json::parse(&text).map_err(|e| format!("{path}: {e}"))?)?
-        }
-        None => spec_from_sweep_flags(opts)?,
-    };
+    let spec = spec_from_opts(opts)?;
     let mut dopts = transport::DispatchOpts::default();
     if let Some(s) = opts.get("shards") {
         dopts.shards = s.parse()?;
@@ -386,112 +409,75 @@ fn cmd_merge(opts: &BTreeMap<String, String>, files: &[String]) -> CliResult {
     Ok(())
 }
 
-fn cmd_hawq() -> CliResult {
-    let net = zoo::resnet18();
-    let params = SimParams::lr_sram();
-    let e8 = {
-        let cfg = hawq::config_for_resnet18(&net, &hawq::row(hawq::LatencyBudget::FixedInt8));
-        simulate(&net, &cfg, &params)
-    };
-    println!("Table VII — bit-fluid ResNet18 (HAWQ-V3 configs), LR + SRAM");
-    let mut t = Table::new(vec![
-        "constraint", "avg bits", "norm energy", "norm latency", "EDP (J.s)", "size (MB)", "top-1 % (paper)",
-    ]);
-    for row in hawq::table_vii_rows() {
-        let cfg = hawq::config_for_resnet18(&net, &row);
-        let r = simulate(&net, &cfg, &params);
-        t.row(vec![
-            row.budget.label().to_string(),
-            format!("{:.2}", row.paper_avg_bits),
-            format!("{:.2}", e8.energy_j() / r.energy_j()),
-            format!("{:.3}", e8.latency_s() / r.latency_s()),
-            fmt_eng(r.edp_js(), 3),
-            format!("{:.1}", cfg.model_size_bytes(&net) as f64 / 1e6),
-            format!("{:.2}", row.paper_top1_acc),
-        ]);
+fn cmd_artifacts(opts: &BTreeMap<String, String>) -> CliResult {
+    if let Some(name) = opts.get("spec") {
+        let artifact = artifacts::by_name(name)?;
+        let spec =
+            if opts.contains_key("tiny") { artifact.tiny_spec() } else { artifact.spec() };
+        let text = format!("{}\n", spec.to_json());
+        match opts.get("out") {
+            Some(path) => {
+                std::fs::write(path, &text).map_err(|e| format!("{path}: {e}"))?;
+                eprintln!("artifacts: wrote {name} spec to {path}");
+            }
+            None => print!("{text}"),
+        }
+        return Ok(());
+    }
+    if opts.contains_key("names") {
+        for artifact in artifacts::catalog() {
+            println!("{}", artifact.name);
+        }
+        return Ok(());
+    }
+    println!("Paper-artifact catalog — each entry is a SweepSpec + renderer; see `render`.");
+    let mut t = Table::new(vec!["artifact", "points", "description"]);
+    for artifact in artifacts::catalog() {
+        let points = artifact
+            .spec()
+            .resolve()
+            .map(|r| r.num_points().to_string())
+            .unwrap_or_else(|_| "?".to_string());
+        t.row(vec![artifact.name.to_string(), points, artifact.title.to_string()]);
     }
     print!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_render(opts: &BTreeMap<String, String>) -> CliResult {
+    let name = opts
+        .get("artifact")
+        .ok_or("render: --artifact NAME is required (list them with `bf-imna artifacts`)")?;
+    let artifact = artifacts::by_name(name)?;
+    let text = match opts.get("doc") {
+        Some(path) => {
+            let raw = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+            artifact.render_doc(&Json::parse(&raw).map_err(|e| format!("{path}: {e}"))?)?
+        }
+        None => artifact.run_and_render(&SweepEngine::new(), opts.contains_key("tiny"))?,
+    };
+    match opts.get("out") {
+        Some(path) => {
+            std::fs::write(path, &text).map_err(|e| format!("{path}: {e}"))?;
+            eprintln!("render: wrote {name} to {path}");
+        }
+        None => print!("{text}"),
+    }
+    Ok(())
+}
+
+fn cmd_hawq() -> CliResult {
+    print!("{}", artifacts::by_name("table7")?.run_and_render(&SweepEngine::new(), false)?);
     Ok(())
 }
 
 fn cmd_compare() -> CliResult {
-    println!("Table VIII — BF-IMNA peak rows (modeled) vs published SOTA");
-    let mut t = Table::new(vec!["framework", "technology", "bits", "GOPS", "GOPS/W"]);
-    for r in baselines::sota_records() {
-        t.row(vec![
-            r.name.to_string(),
-            r.technology.to_string(),
-            r.precision.to_string(),
-            fmt_eng(r.gops, 4),
-            fmt_eng(r.gops_per_w, 4),
-        ]);
-    }
-    for row in peak::bf_imna_rows() {
-        t.row(vec![
-            format!("BF-IMNA_{}b (modeled)", row.precision),
-            "CMOS (16nm)".to_string(),
-            row.precision.to_string(),
-            fmt_eng(row.gops, 4),
-            fmt_eng(row.gops_per_w, 4),
-        ]);
-    }
-    print!("{}", t.render());
-    let bf16 = peak::peak_row(16, &Tech::sram());
-    let isaac = baselines::record("ISAAC");
-    let pipe = baselines::record("PipeLayer");
-    println!(
-        "\nvs ISAAC (16b):     {} throughput, {} lower energy efficiency",
-        fmt_ratio(bf16.gops / isaac.gops),
-        fmt_ratio(isaac.gops_per_w / bf16.gops_per_w)
-    );
-    println!(
-        "vs PipeLayer (16b): {} lower throughput, {} higher energy efficiency",
-        fmt_ratio(pipe.gops / bf16.gops),
-        fmt_ratio(bf16.gops_per_w / pipe.gops_per_w)
-    );
+    print!("{}", artifacts::by_name("table8")?.run_and_render(&SweepEngine::new(), false)?);
     Ok(())
 }
 
 fn cmd_validate() -> CliResult {
-    use bf_imna::ap::{emulator, runtime_model as rt, ApKind};
-    use bf_imna::util::rng::Rng;
-    println!("Table I microbenchmark — emulator pass counts vs analytic models");
-    let mut t = Table::new(vec!["function", "M", "emulated compares", "model compares", "match"]);
-    let mut rng = Rng::new(7);
-    let mut all_ok = true;
-    for m in [2usize, 4, 8] {
-        let a = rng.vec_below(32, 1 << m);
-        let b = rng.vec_below(32, 1 << m);
-        let (_, c_add) = emulator::emulate_add(&a, &b, m);
-        let model_add = rt::add(m as u32, 64, ApKind::TwoD).events.compares;
-        let ok = c_add.events().compares == model_add;
-        all_ok &= ok;
-        t.row(vec![
-            "addition".to_string(),
-            m.to_string(),
-            c_add.events().compares.to_string(),
-            model_add.to_string(),
-            if ok { "yes" } else { "NO" }.to_string(),
-        ]);
-        let (_, c_mul) = emulator::emulate_multiply(&a, &b, m, m);
-        // The emulator adds Mw explicit carry-flush passes to the model's
-        // 4*Ma*Mw (see `Cam::multiply`).
-        let model_mul = rt::multiply(m as u32, m as u32, 64, ApKind::TwoD).events.compares + m as u64;
-        let ok = c_mul.events().compares == model_mul;
-        all_ok &= ok;
-        t.row(vec![
-            "multiplication".to_string(),
-            m.to_string(),
-            c_mul.events().compares.to_string(),
-            model_mul.to_string(),
-            if ok { "yes" } else { "NO" }.to_string(),
-        ]);
-    }
-    print!("{}", t.render());
-    if !all_ok {
-        return Err("emulator diverged from the analytic models".into());
-    }
-    println!("emulator matches the analytic Table I models.");
+    print!("{}", artifacts::by_name("table1")?.run_and_render(&SweepEngine::new(), false)?);
     Ok(())
 }
 

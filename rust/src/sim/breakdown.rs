@@ -8,6 +8,12 @@
 use super::{InferenceReport, SweepEngine, SweepPoint};
 use crate::mapper::{PhaseTable, WorkKind};
 
+/// Fig. 8a category labels, in the order [`energy_kind_values`] returns.
+pub const ENERGY_KIND_LABELS: [&str; 4] = ["GEMM", "Pooling", "Residual/ReLU", "Interconnect"];
+
+/// Fig. 8b phase labels, in the order [`gemm_phase_values`] returns.
+pub const GEMM_PHASE_LABELS: [&str; 5] = ["Populate", "Multiply", "Reduce", "Readout", "ReLU"];
+
 /// One named share of a breakdown.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Share {
@@ -19,20 +25,27 @@ pub struct Share {
     pub fraction: f64,
 }
 
-fn to_shares(pairs: Vec<(String, f64)>) -> Vec<Share> {
-    let total: f64 = pairs.iter().map(|(_, v)| v).sum();
-    pairs
-        .into_iter()
-        .map(|(label, value)| Share {
-            label,
+/// Attach fractions to labeled values: each share's fraction is its value
+/// over the in-order sum. Public because sweep documents carry the raw
+/// values ([`crate::sim::shard::PointRecord`]) and renderers rebuild the
+/// shares — through this same function, so document-driven figures are
+/// bit-identical to in-process ones.
+pub fn shares(labels: &[&str], values: &[f64]) -> Vec<Share> {
+    let total: f64 = values.iter().sum();
+    labels
+        .iter()
+        .zip(values)
+        .map(|(label, &value)| Share {
+            label: (*label).to_string(),
             value,
             fraction: if total > 0.0 { value / total } else { 0.0 },
         })
         .collect()
 }
 
-/// Fig. 8a — total energy by work category (+ interconnect).
-pub fn energy_by_kind(r: &InferenceReport) -> Vec<Share> {
+/// Fig. 8a energy values by work category (+ interconnect), in
+/// [`ENERGY_KIND_LABELS`] order, joules.
+pub fn energy_kind_values(r: &InferenceReport) -> [f64; 4] {
     let mut gemm = 0.0;
     let mut pool = 0.0;
     let mut other = 0.0;
@@ -45,27 +58,27 @@ pub fn energy_by_kind(r: &InferenceReport) -> Vec<Share> {
         }
         interconnect += l.mesh_energy_j + l.map_energy_j;
     }
-    to_shares(vec![
-        ("GEMM".into(), gemm),
-        ("Pooling".into(), pool),
-        ("Residual/ReLU".into(), other),
-        ("Interconnect".into(), interconnect),
-    ])
+    [gemm, pool, other, interconnect]
 }
 
-/// Fig. 8b — GEMM latency by phase, summed over all GEMM layers.
-pub fn gemm_latency_by_phase(r: &InferenceReport) -> Vec<Share> {
+/// Fig. 8b GEMM latency values by phase, summed over all GEMM layers, in
+/// [`GEMM_PHASE_LABELS`] order, seconds.
+pub fn gemm_phase_values(r: &InferenceReport) -> [f64; 5] {
     let mut acc = PhaseTable::<f64>::default();
     for l in r.layers.iter().filter(|l| l.kind == WorkKind::Gemm) {
         acc = acc.add(&l.latency_phases);
     }
-    to_shares(vec![
-        ("Populate".into(), acc.populate),
-        ("Multiply".into(), acc.multiply),
-        ("Reduce".into(), acc.reduce),
-        ("Readout".into(), acc.readout),
-        ("ReLU".into(), acc.aux),
-    ])
+    [acc.populate, acc.multiply, acc.reduce, acc.readout, acc.aux]
+}
+
+/// Fig. 8a — total energy by work category (+ interconnect).
+pub fn energy_by_kind(r: &InferenceReport) -> Vec<Share> {
+    shares(&ENERGY_KIND_LABELS, &energy_kind_values(r))
+}
+
+/// Fig. 8b — GEMM latency by phase, summed over all GEMM layers.
+pub fn gemm_latency_by_phase(r: &InferenceReport) -> Vec<Share> {
+    shares(&GEMM_PHASE_LABELS, &gemm_phase_values(r))
 }
 
 /// Convenience: the fraction a label holds in a share list (0 if absent).

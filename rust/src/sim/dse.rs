@@ -5,12 +5,12 @@
 //! the corresponding bench targets (`fig6_tech_ratios`, `fig7_dse`) render
 //! them as tables.
 
-use super::shard::{hw_name, SweepSpec};
+use super::shard::{self, hw_name, PointRecord, PrecisionGrid, ResolvedSweep, SweepSpec};
 use super::{SimParams, SweepEngine, SweepPoint};
-use crate::ap::tech::Tech;
+use crate::ap::tech::{CellTech, Tech};
 use crate::arch::HwConfig;
 use crate::model::{zoo, Network};
-use crate::precision::{sweep, PrecisionConfig};
+use crate::precision::PrecisionConfig;
 use crate::util::rng::Rng;
 use crate::util::stats;
 
@@ -27,38 +27,95 @@ pub struct Fig6Row {
     pub area_savings: f64,
 }
 
+/// The Fig. 6 sweep as a serializable [`SweepSpec`]: one network on the
+/// LR chip, SRAM × ReRAM, fixed precisions 2..=8. This spec *is* the
+/// experiment — [`fig6_tech_ratios`] runs it and [`fig6_rows`] derives
+/// the figure from its records, whether they were computed in-process,
+/// by `sweep`/`merge` shards, or by a `dispatch` worker fleet.
+pub fn fig6_spec(net: &str) -> SweepSpec {
+    SweepSpec::single(
+        net,
+        vec!["lr".to_string()],
+        vec!["sram".to_string(), "reram".to_string()],
+        PrecisionGrid::Fixed { bits: (2..=8).collect() },
+    )
+}
+
 /// Fig. 6 — ReRAM/SRAM energy & latency ratios for fixed precisions
 /// 2..=8, end-to-end inference on `net` (the paper uses VGG16, LR).
 pub fn fig6_tech_ratios(net: &Network) -> Vec<Fig6Row> {
     fig6_tech_ratios_with(&SweepEngine::new(), net)
 }
 
-/// [`fig6_tech_ratios`] on a caller-provided [`SweepEngine`]. The SRAM and
-/// ReRAM points of each precision share cached layer plans (the cell
+/// [`fig6_tech_ratios`] on a caller-provided [`SweepEngine`], through the
+/// spec→run path: the figure's numbers come from [`fig6_spec`]'s records
+/// exactly as a sharded or dispatched run would produce them. The SRAM
+/// and ReRAM points of each precision share cached layer plans (the cell
 /// technology only enters the cost conversion, not the mapping), so the
 /// engine maps each (layer, bits) pair exactly once.
+///
+/// # Panics
+/// If `net` is not an *unmodified* zoo network ([`shard::net_by_name`]) —
+/// the spec names the network, so a caller-tweaked variant that reuses a
+/// zoo name cannot be swept through the IR and is rejected instead of
+/// silently substituted. Every Fig. 6 call site sweeps VGG16.
 pub fn fig6_tech_ratios_with(engine: &SweepEngine, net: &Network) -> Vec<Fig6Row> {
-    let cfgs: Vec<PrecisionConfig> =
-        (2..=8).map(|bits| PrecisionConfig::fixed(bits, net.weight_layers())).collect();
-    let sram = SimParams::new(HwConfig::Lr, Tech::sram());
-    let reram = SimParams::new(HwConfig::Lr, Tech::reram());
-    let mut points = Vec::with_capacity(2 * cfgs.len());
-    for cfg in &cfgs {
-        points.push(SweepPoint::new(net, cfg, &sram));
-        points.push(SweepPoint::new(net, cfg, &reram));
+    let spec = fig6_spec(&net.name);
+    let resolved = spec.resolve().expect("fig6 spec resolves for zoo networks");
+    assert_same_network(net, &resolved.nets[0]);
+    let result = shard::run_shard(&spec, 1, 0, engine).expect("fig6 sweep runs");
+    fig6_rows(&resolved, &result.points).expect("fig6 rows derive from own records")
+}
+
+/// Guard for the spec-routed DSE helpers: the sweep IR identifies
+/// networks *by name*, so the passed network must be structurally the
+/// zoo network of that name — a modified variant reusing the name would
+/// otherwise be silently swapped for the stock one.
+fn assert_same_network(passed: &Network, resolved: &Network) {
+    assert!(
+        passed.layers.len() == resolved.layers.len()
+            && passed.weight_layers() == resolved.weight_layers()
+            && passed.total_macs() == resolved.total_macs(),
+        "network '{}' does not match the zoo network of that name — spec-routed DSE \
+         helpers cannot sweep modified networks (use SweepEngine::run with explicit \
+         points instead)",
+        passed.name
+    );
+}
+
+/// Derive the Fig. 6 rows from a resolved [`fig6_spec`]-shaped sweep and
+/// its records. Errors if the sweep does not carry a single net/hw/chip
+/// with both SRAM and ReRAM coordinates.
+pub fn fig6_rows(resolved: &ResolvedSweep, records: &[PointRecord]) -> Result<Vec<Fig6Row>, String> {
+    if resolved.nets.len() != 1 || resolved.hws.len() != 1 || resolved.chips.len() != 1 {
+        return Err("fig6: spec must carry exactly one network, hw config, and chip".to_string());
     }
-    let reports = engine.run(&points);
-    reports
-        .chunks_exact(2)
-        .zip(2u32..=8)
-        .map(|(pair, bits)| {
-            let (s, r) = (&pair[0], &pair[1]);
-            Fig6Row {
-                bits,
-                energy_ratio: r.energy_j() / s.energy_j(),
-                latency_ratio: r.latency_s() / s.latency_s(),
+    if records.len() != resolved.num_points() {
+        return Err(format!(
+            "fig6: {} records for {} enumerated points",
+            records.len(),
+            resolved.num_points()
+        ));
+    }
+    let k = resolved.cfgs[0].len();
+    let tech_idx = |cell: CellTech| {
+        resolved
+            .techs
+            .iter()
+            .position(|t| t.cell == cell)
+            .ok_or_else(|| format!("fig6: spec lacks the {} coordinate", super::shard::tech_name(cell)))
+    };
+    let (sram, reram) = (tech_idx(CellTech::Sram)?, tech_idx(CellTech::Reram)?);
+    (0..k)
+        .map(|i| {
+            let s = &records[sram * k + i];
+            let r = &records[reram * k + i];
+            Ok(Fig6Row {
+                bits: resolved.cfgs[0][i].max_bits(),
+                energy_ratio: r.energy_j / s.energy_j,
+                latency_ratio: r.latency_s / s.latency_s,
                 area_savings: s.area_mm2 / r.area_mm2,
-            }
+            })
         })
         .collect()
 }
@@ -94,32 +151,43 @@ pub fn fig7_series(net: &Network, hw: HwConfig, seed: u64) -> Vec<Fig7Point> {
     fig7_series_with(&SweepEngine::new(), net, hw, seed)
 }
 
-/// [`fig7_series`] on a caller-provided [`SweepEngine`]: all
-/// `targets × COMBOS_PER_TARGET` combination points fan out across the
-/// engine's workers in one batch, and repeated (layer, bits) pairs — only
-/// 7 candidate widths exist per layer — come out of the plan cache.
+/// [`fig7_series`] on a caller-provided [`SweepEngine`], through the
+/// spec→run path: the series *is* [`fig7_spec`]'s point enumeration,
+/// grouped per target and averaged — so the in-process figure and a
+/// sharded/dispatched run of the same spec agree bit for bit (tested in
+/// this module). All `targets × COMBOS_PER_TARGET` combination points fan
+/// out across the engine's workers in one batch, and repeated (layer,
+/// bits) pairs — only 7 candidate widths exist per layer — come out of
+/// the plan cache.
+///
+/// # Panics
+/// If `net` is not an *unmodified* zoo network ([`shard::net_by_name`]) —
+/// see [`fig6_tech_ratios_with`] for why variants are rejected.
 pub fn fig7_series_with(
     engine: &SweepEngine,
     net: &Network,
     hw: HwConfig,
     seed: u64,
 ) -> Vec<Fig7Point> {
-    let params = SimParams::new(hw, Tech::sram());
-    let flat =
-        sweep::sweep_flat(net.weight_layers(), &sweep::fig7_targets(), COMBOS_PER_TARGET, seed);
-    let points: Vec<SweepPoint> =
-        flat.iter().map(|(_, cfg)| SweepPoint::new(net, cfg, &params)).collect();
-    let reports = engine.run(&points);
-    flat.chunks_exact(COMBOS_PER_TARGET)
+    let spec = fig7_spec(net, hw, seed);
+    let resolved = spec.resolve().expect("fig7 spec resolves for zoo networks");
+    assert_same_network(net, &resolved.nets[0]);
+    let targets = match &spec.grid {
+        PrecisionGrid::Mixed { targets, .. } => targets.clone(),
+        _ => unreachable!("fig7 spec carries a mixed grid"),
+    };
+    let reports = engine.run(&resolved.points(0..resolved.num_points()));
+    targets
+        .iter()
         .zip(reports.chunks_exact(COMBOS_PER_TARGET))
-        .map(|(group, rs)| {
+        .map(|(&target, rs)| {
             let energies: Vec<f64> = rs.iter().map(|r| r.energy_j()).collect();
             let latencies: Vec<f64> = rs.iter().map(|r| r.latency_s()).collect();
             let effs: Vec<f64> = rs.iter().map(|r| r.gops_per_w_mm2()).collect();
             Fig7Point {
                 net_name: net.name.clone(),
                 hw,
-                avg_bits: group[0].0,
+                avg_bits: target,
                 energy_j: stats::mean(&energies),
                 latency_s: stats::mean(&latencies),
                 gops_per_w_mm2: stats::mean(&effs),

@@ -19,6 +19,7 @@
 //!   MAP buffering energy (all reshape overheads, §III-A "All reshaping
 //!   overheads are factored into our results").
 
+pub mod artifacts;
 pub mod breakdown;
 pub mod dse;
 pub mod engine;

@@ -1,18 +1,24 @@
 //! Cross-process sweep sharding — the horizontal scale-out layer on top of
-//! [`SweepEngine`].
+//! [`SweepEngine`] and the repo's **experiment IR**.
 //!
-//! Every paper-level result (Figs. 6–8, Tables VII/VIII) is a sweep of
-//! thousands of independent `simulate()` points. PR 1 made one process
-//! fast (plan cache + thread fan-out); this module makes the sweep a
-//! **service** that spreads across processes and machines:
+//! Every paper-level result (Figs. 5–8, Tables I/VII/VIII) is a sweep of
+//! independent `simulate()` points. PR 1 made one process fast (plan cache
+//! + thread fan-out); PR 2/3 made the sweep a **service** that spreads
+//! across processes and machines; this module now also carries the
+//! coordinate system every experiment is written in:
 //!
-//! * [`SweepSpec`] — a small, serializable description of a whole sweep
-//!   (network, hardware × technology grid, precision coordinates). Point
-//!   enumeration is a pure function of the spec, so *"shard K of N"* is
-//!   nothing more than a contiguous slice of deterministic point indices —
-//!   no coordination, no shared state, no work queue.
+//! * [`SweepSpec`] — a small, serializable description of a whole sweep:
+//!   a **network grid** (one or many zoo networks), a hardware ×
+//!   **chip-geometry** × technology grid, and a precision axis (fixed
+//!   widths, random mixed combinations, or explicit per-layer vectors).
+//!   Point enumeration is a pure function of the spec, so *"shard K of
+//!   N"* is nothing more than a contiguous slice of deterministic point
+//!   indices — no coordination, no shared state, no work queue.
 //! * [`run_shard`] / [`ShardResult`] — run one slice on a [`SweepEngine`]
-//!   and serialize the per-point reports.
+//!   and serialize the per-point [`PointRecord`]s. Every record **echoes
+//!   its resolved coordinates** (net, hw, tech, chip geometry, config),
+//!   so consumers cross-check records against the spec instead of
+//!   trusting index order.
 //! * [`merge`] — reassemble shard documents into input order. Because
 //!   every worker computes bit-identical reports (the engine invariant)
 //!   and [`crate::util::json`]'s writer is canonical, the merged document
@@ -22,15 +28,17 @@
 //!   snapshot its [`crate::mapper::PlanCache`], and ship the snapshot so
 //!   workers skip all cold mapping (see [`crate::mapper::CacheSnapshot`]).
 //!
-//! The CLI front end is `bf-imna sweep --shards N --shard-id K --out
-//! shard.json` plus `bf-imna merge`.
+//! The paper-artifact catalog ([`crate::sim::artifacts`]) names a
+//! [`SweepSpec`] per figure/table and renders merged documents; the CLI
+//! front end is `bf-imna sweep --shards N --shard-id K --out shard.json`
+//! plus `bf-imna merge` and `bf-imna render`.
 
 use std::collections::BTreeSet;
 use std::ops::Range;
 
-use super::{InferenceReport, SimParams, SweepEngine, SweepPoint};
+use super::{breakdown, InferenceReport, SimParams, SweepEngine, SweepPoint};
 use crate::ap::tech::{CellTech, Tech};
-use crate::arch::HwConfig;
+use crate::arch::{ChipConfig, HwConfig};
 use crate::mapper::cache::mapper_fingerprint;
 use crate::model::{zoo, Network};
 use crate::precision::{sweep, PrecisionConfig};
@@ -88,6 +96,177 @@ pub fn tech_name(cell: CellTech) -> &'static str {
     }
 }
 
+/// One chip-geometry coordinate of a [`SweepSpec`]: a named set of
+/// overrides applied on top of the default chip for a (hardware config,
+/// network) pair. The default geometry (no overrides) reproduces
+/// `ChipConfig::for_network` exactly, so specs that never mention chips
+/// behave as before — and geometry ablations (what PR 1's
+/// `SweepPoint::on_chip` could only express in-process) become ordinary
+/// serializable sweep coordinates.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChipGeom {
+    /// Geometry name, echoed by every [`PointRecord`] at this coordinate.
+    pub name: String,
+    /// Override: cluster-grid width.
+    pub clusters_x: Option<u64>,
+    /// Override: cluster-grid height.
+    pub clusters_y: Option<u64>,
+    /// Override: CAP-grid width within a cluster.
+    pub caps_x: Option<u64>,
+    /// Override: CAP-grid height within a cluster.
+    pub caps_y: Option<u64>,
+    /// Override: mesh link width, bits per transfer.
+    pub mesh_bits_per_transfer: Option<u64>,
+    /// Override: mesh energy per bit per mm, joules.
+    pub mesh_e_bit_mm: Option<f64>,
+}
+
+impl ChipGeom {
+    /// The default geometry: no overrides, named `default`.
+    pub fn default_chip() -> ChipGeom {
+        ChipGeom {
+            name: "default".to_string(),
+            clusters_x: None,
+            clusters_y: None,
+            caps_x: None,
+            caps_y: None,
+            mesh_bits_per_transfer: None,
+            mesh_e_bit_mm: None,
+        }
+    }
+
+    /// A named geometry with no overrides (an alias for the default chip,
+    /// useful as the baseline row of a geometry ablation).
+    pub fn named(name: &str) -> ChipGeom {
+        ChipGeom { name: name.to_string(), ..ChipGeom::default_chip() }
+    }
+
+    /// True when this geometry applies no overrides.
+    pub fn is_default(&self) -> bool {
+        self.clusters_x.is_none()
+            && self.clusters_y.is_none()
+            && self.caps_x.is_none()
+            && self.caps_y.is_none()
+            && self.mesh_bits_per_transfer.is_none()
+            && self.mesh_e_bit_mm.is_none()
+    }
+
+    /// Apply the overrides to a concrete chip.
+    pub fn apply(&self, mut chip: ChipConfig) -> ChipConfig {
+        if let Some(v) = self.clusters_x {
+            chip.clusters_x = v;
+        }
+        if let Some(v) = self.clusters_y {
+            chip.clusters_y = v;
+        }
+        if let Some(v) = self.caps_x {
+            chip.cluster.caps_x = v;
+        }
+        if let Some(v) = self.caps_y {
+            chip.cluster.caps_y = v;
+        }
+        if let Some(v) = self.mesh_bits_per_transfer {
+            chip.mesh.bits_per_transfer = v;
+        }
+        if let Some(v) = self.mesh_e_bit_mm {
+            chip.mesh.e_bit_mm = v;
+        }
+        chip
+    }
+
+    fn validate(&self) -> Result<(), String> {
+        if self.name.is_empty() {
+            return Err("spec: chip geometry needs a non-empty 'name'".to_string());
+        }
+        for (field, v) in [
+            ("clusters_x", self.clusters_x),
+            ("clusters_y", self.clusters_y),
+            ("caps_x", self.caps_x),
+            ("caps_y", self.caps_y),
+            ("mesh_bits_per_transfer", self.mesh_bits_per_transfer),
+        ] {
+            if v == Some(0) {
+                return Err(format!("spec: chip '{}': '{field}' must be >= 1", self.name));
+            }
+        }
+        if let Some(e) = self.mesh_e_bit_mm {
+            if !(e.is_finite() && e > 0.0) {
+                return Err(format!(
+                    "spec: chip '{}': 'mesh_e_bit_mm' must be a positive finite number",
+                    self.name
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Serialize to a JSON value; only set overrides are written.
+    pub fn to_json(&self) -> Json {
+        let mut pairs: Vec<(&str, Json)> = vec![("name", Json::str(self.name.clone()))];
+        for (key, v) in [
+            ("clusters_x", self.clusters_x),
+            ("clusters_y", self.clusters_y),
+            ("caps_x", self.caps_x),
+            ("caps_y", self.caps_y),
+            ("mesh_bits_per_transfer", self.mesh_bits_per_transfer),
+        ] {
+            if let Some(v) = v {
+                pairs.push((key, Json::num(v as f64)));
+            }
+        }
+        if let Some(e) = self.mesh_e_bit_mm {
+            pairs.push(("mesh_e_bit_mm", Json::num(e)));
+        }
+        Json::obj(pairs)
+    }
+
+    /// Parse a value produced by [`Self::to_json`].
+    pub fn from_json(v: &Json) -> Result<ChipGeom, String> {
+        let name = v
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or("spec: chip geometry missing 'name'")?
+            .to_string();
+        let dim = |key: &str| -> Result<Option<u64>, String> {
+            match v.get(key) {
+                None => Ok(None),
+                Some(x) => x
+                    .as_i64()
+                    .filter(|&d| d >= 1)
+                    .map(|d| Some(d as u64))
+                    .ok_or_else(|| format!("spec: chip '{name}': '{key}' must be an integer >= 1")),
+            }
+        };
+        let geom = ChipGeom {
+            clusters_x: dim("clusters_x")?,
+            clusters_y: dim("clusters_y")?,
+            caps_x: dim("caps_x")?,
+            caps_y: dim("caps_y")?,
+            mesh_bits_per_transfer: dim("mesh_bits_per_transfer")?,
+            mesh_e_bit_mm: match v.get("mesh_e_bit_mm") {
+                None => None,
+                Some(x) => Some(
+                    x.as_f64()
+                        .ok_or_else(|| format!("spec: chip '{name}': bad 'mesh_e_bit_mm'"))?,
+                ),
+            },
+            name,
+        };
+        geom.validate()?;
+        Ok(geom)
+    }
+}
+
+/// One named per-layer bit vector of a [`PrecisionGrid::Explicit`] grid
+/// (e.g. a HAWQ-V3 configuration row).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExplicitCfg {
+    /// Configuration name, echoed by the records at this coordinate.
+    pub name: String,
+    /// Per-weight-layer bitwidths (uniform weight/activation).
+    pub bits: Vec<u32>,
+}
+
 /// The precision axis of a [`SweepSpec`].
 #[derive(Debug, Clone, PartialEq)]
 pub enum PrecisionGrid {
@@ -108,25 +287,35 @@ pub enum PrecisionGrid {
         /// PRNG seed for the combination generator.
         seed: u64,
     },
+    /// Explicit named per-layer bit vectors (the Table VII / HAWQ shape):
+    /// each entry becomes one `PrecisionConfig::from_bits` configuration.
+    Explicit {
+        /// The configurations, in sweep order. Names must be unique and
+        /// every bit vector must match the network's weight-layer count.
+        cfgs: Vec<ExplicitCfg>,
+    },
 }
 
-/// A serializable description of a whole sweep: one network, a hardware ×
-/// technology grid, and a precision axis.
+/// A serializable description of a whole sweep — the repo's experiment IR:
+/// a network grid, a hardware × chip-geometry × technology grid, and a
+/// precision axis.
 ///
-/// Point enumeration is deterministic: the cross product iterates hardware
-/// configs (outer), then technologies, then precision configs (inner), so
-/// point `i` of a resolved spec means the same coordinates in every
-/// process. That makes a shard *a contiguous index range* — see
-/// [`shard_range`] — and lets workers run with no coordination at all.
+/// Point enumeration is deterministic: networks iterate outermost, then
+/// hardware configs, then chip geometries, then technologies, then
+/// precision configs (innermost), so point `i` of a resolved spec means
+/// the same coordinates in every process. That makes a shard *a
+/// contiguous index range* — see [`shard_range`] — and lets workers run
+/// with no coordination at all.
 ///
 /// ```
-/// use bf_imna::sim::shard::{PrecisionGrid, SweepSpec};
+/// use bf_imna::sim::shard::{ChipGeom, PrecisionGrid, SweepSpec};
 /// use bf_imna::util::json::Json;
 ///
 /// let spec = SweepSpec {
-///     net: "serve_cnn".into(),
+///     nets: vec!["serve_cnn".into()],
 ///     hw: vec!["lr".into()],
 ///     tech: vec!["sram".into(), "reram".into()],
+///     chips: vec![ChipGeom::default_chip()],
 ///     grid: PrecisionGrid::Fixed { bits: vec![4, 8] },
 ///     batch: 1,
 /// };
@@ -134,17 +323,19 @@ pub enum PrecisionGrid {
 /// let text = spec.to_json().to_string();
 /// let back = SweepSpec::from_json(&Json::parse(&text).unwrap()).unwrap();
 /// assert_eq!(back, spec);
-/// // 1 hw x 2 tech x 2 configs = 4 points.
+/// // 1 net x 1 hw x 1 chip x 2 tech x 2 configs = 4 points.
 /// assert_eq!(spec.resolve().unwrap().num_points(), 4);
 /// ```
 #[derive(Debug, Clone, PartialEq)]
 pub struct SweepSpec {
-    /// Zoo network name (see [`net_by_name`]).
-    pub net: String,
+    /// Zoo network names to cross (see [`net_by_name`]).
+    pub nets: Vec<String>,
     /// Hardware configurations to cross (see [`hw_by_name`]).
     pub hw: Vec<String>,
     /// Cell technologies to cross (see [`tech_by_name`]).
     pub tech: Vec<String>,
+    /// Chip geometries to cross (default: the single default geometry).
+    pub chips: Vec<ChipGeom>,
     /// The precision axis.
     pub grid: PrecisionGrid,
     /// Inference batch size (the paper evaluates batch 1).
@@ -152,16 +343,28 @@ pub struct SweepSpec {
 }
 
 impl SweepSpec {
+    /// A single-network spec over the default chip geometry — the common
+    /// case, and the exact shape PR 2's single-`net` specs had.
+    pub fn single(net: &str, hw: Vec<String>, tech: Vec<String>, grid: PrecisionGrid) -> SweepSpec {
+        SweepSpec {
+            nets: vec![net.to_string()],
+            hw,
+            tech,
+            chips: vec![ChipGeom::default_chip()],
+            grid,
+            batch: 1,
+        }
+    }
+
     /// The canonical Fig. 7 sweep: one network on one hardware config,
     /// SRAM, mixed-precision targets 2..=8.
     pub fn fig7(net: &str, hw: &str, combos: usize, seed: u64) -> SweepSpec {
-        SweepSpec {
-            net: net.to_string(),
-            hw: vec![hw.to_string()],
-            tech: vec!["sram".to_string()],
-            grid: PrecisionGrid::Mixed { targets: sweep::fig7_targets(), combos, seed },
-            batch: 1,
-        }
+        SweepSpec::single(
+            net,
+            vec![hw.to_string()],
+            vec!["sram".to_string()],
+            PrecisionGrid::Mixed { targets: sweep::fig7_targets(), combos, seed },
+        )
     }
 
     /// Serialize to a JSON value (canonical text via the writer).
@@ -178,17 +381,32 @@ impl SweepSpec {
                 // Decimal string: JSON numbers cannot carry all 64 bits.
                 ("seed", Json::str(seed.to_string())),
             ]),
+            PrecisionGrid::Explicit { cfgs } => Json::obj([
+                ("mode", Json::str("explicit")),
+                (
+                    "cfgs",
+                    Json::arr(cfgs.iter().map(|c| {
+                        Json::obj([
+                            ("name", Json::str(c.name.clone())),
+                            ("bits", Json::arr(c.bits.iter().map(|&b| Json::num(b as f64)))),
+                        ])
+                    })),
+                ),
+            ]),
         };
         Json::obj([
-            ("net", Json::str(self.net.clone())),
+            ("nets", Json::arr(self.nets.iter().map(|s| Json::Str(s.clone())))),
             ("hw", Json::arr(self.hw.iter().map(|s| Json::Str(s.clone())))),
             ("tech", Json::arr(self.tech.iter().map(|s| Json::Str(s.clone())))),
+            ("chips", Json::arr(self.chips.iter().map(ChipGeom::to_json))),
             ("precision", precision),
             ("batch", Json::num(self.batch as f64)),
         ])
     }
 
-    /// Parse a value produced by [`Self::to_json`].
+    /// Parse a value produced by [`Self::to_json`]. Legacy PR 2 specs —
+    /// a single `"net"` string, no `"chips"` — still parse, resolving to
+    /// a one-network grid on the default chip geometry.
     pub fn from_json(v: &Json) -> Result<SweepSpec, String> {
         let strings = |key: &str| -> Result<Vec<String>, String> {
             v.get(key)
@@ -202,27 +420,41 @@ impl SweepSpec {
                 })
                 .collect()
         };
-        let net = v
-            .get("net")
-            .and_then(Json::as_str)
-            .ok_or("spec: missing 'net'")?
-            .to_string();
+        let bits_arr = |p: &Json, key: &str, ctx: &str| -> Result<Vec<u32>, String> {
+            p.get(key)
+                .and_then(Json::as_arr)
+                .ok_or_else(|| format!("spec: {ctx} missing '{key}'"))?
+                .iter()
+                .map(|b| {
+                    b.as_i64()
+                        .filter(|&b| (1..=64).contains(&b))
+                        .map(|b| b as u32)
+                        .ok_or(format!("spec: '{key}' entries must be integers in 1..=64"))
+                })
+                .collect()
+        };
+        // Network grid: "nets" array, or the legacy single-"net" string.
+        let nets = match v.get("nets") {
+            Some(_) => strings("nets")?,
+            None => vec![v
+                .get("net")
+                .and_then(Json::as_str)
+                .ok_or("spec: missing 'nets' (or legacy 'net')")?
+                .to_string()],
+        };
+        // Chip-geometry grid: optional; absent means the default chip.
+        let chips = match v.get("chips") {
+            None => vec![ChipGeom::default_chip()],
+            Some(c) => c
+                .as_arr()
+                .ok_or("spec: 'chips' must be an array")?
+                .iter()
+                .map(ChipGeom::from_json)
+                .collect::<Result<Vec<ChipGeom>, String>>()?,
+        };
         let p = v.get("precision").ok_or("spec: missing 'precision'")?;
         let grid = match p.get("mode").and_then(Json::as_str) {
-            Some("fixed") => PrecisionGrid::Fixed {
-                bits: p
-                    .get("bits")
-                    .and_then(Json::as_arr)
-                    .ok_or("spec: fixed grid missing 'bits'")?
-                    .iter()
-                    .map(|b| {
-                        b.as_i64()
-                            .filter(|&b| (1..=64).contains(&b))
-                            .map(|b| b as u32)
-                            .ok_or("spec: 'bits' entries must be integers in 1..=64".to_string())
-                    })
-                    .collect::<Result<Vec<u32>, String>>()?,
-            },
+            Some("fixed") => PrecisionGrid::Fixed { bits: bits_arr(p, "bits", "fixed grid")? },
             Some("mixed") => PrecisionGrid::Mixed {
                 targets: p
                     .get("targets")
@@ -244,6 +476,24 @@ impl SweepSpec {
                     .parse::<u64>()
                     .map_err(|e| format!("spec: bad seed: {e}"))?,
             },
+            Some("explicit") => PrecisionGrid::Explicit {
+                cfgs: p
+                    .get("cfgs")
+                    .and_then(Json::as_arr)
+                    .ok_or("spec: explicit grid missing 'cfgs'")?
+                    .iter()
+                    .map(|c| {
+                        Ok(ExplicitCfg {
+                            name: c
+                                .get("name")
+                                .and_then(Json::as_str)
+                                .ok_or("spec: explicit cfg missing 'name'")?
+                                .to_string(),
+                            bits: bits_arr(c, "bits", "explicit cfg")?,
+                        })
+                    })
+                    .collect::<Result<Vec<ExplicitCfg>, String>>()?,
+            },
             other => return Err(format!("spec: unknown precision mode {other:?}")),
         };
         let batch = v
@@ -251,64 +501,160 @@ impl SweepSpec {
             .and_then(Json::as_i64)
             .filter(|&b| b >= 1)
             .ok_or("spec: missing positive 'batch'")? as u64;
-        Ok(SweepSpec { net, hw: strings("hw")?, tech: strings("tech")?, grid, batch })
+        Ok(SweepSpec { nets, hw: strings("hw")?, tech: strings("tech")?, chips, grid, batch })
     }
 
     /// Resolve names into simulation inputs, validating the spec. The
     /// result owns everything a worker needs to enumerate points.
     pub fn resolve(&self) -> Result<ResolvedSweep, String> {
-        let net = net_by_name(&self.net)?;
+        if self.nets.is_empty() {
+            return Err("spec: 'nets' must be non-empty".to_string());
+        }
         if self.hw.is_empty() || self.tech.is_empty() {
             return Err("spec: 'hw' and 'tech' must be non-empty".to_string());
         }
-        let mut grid = Vec::with_capacity(self.hw.len() * self.tech.len());
-        for hw in &self.hw {
-            let hw = hw_by_name(hw)?;
-            for tech in &self.tech {
-                grid.push((hw, tech_by_name(tech)?));
+        if self.chips.is_empty() {
+            return Err("spec: 'chips' must be non-empty".to_string());
+        }
+        let mut chip_names = BTreeSet::new();
+        for geom in &self.chips {
+            geom.validate()?;
+            if !chip_names.insert(geom.name.as_str()) {
+                return Err(format!("spec: duplicate chip geometry name '{}'", geom.name));
             }
         }
-        let cfgs = match &self.grid {
-            PrecisionGrid::Fixed { bits } => {
-                if bits.is_empty() {
-                    return Err("spec: fixed grid needs at least one bitwidth".to_string());
+        let nets =
+            self.nets.iter().map(|n| net_by_name(n)).collect::<Result<Vec<Network>, String>>()?;
+        let hws =
+            self.hw.iter().map(|h| hw_by_name(h)).collect::<Result<Vec<HwConfig>, String>>()?;
+        let techs =
+            self.tech.iter().map(|t| tech_by_name(t)).collect::<Result<Vec<Tech>, String>>()?;
+        // Precision configs are per network: widths quantify *that*
+        // network's weight layers.
+        let mut cfgs: Vec<Vec<PrecisionConfig>> = Vec::with_capacity(nets.len());
+        for net in &nets {
+            cfgs.push(match &self.grid {
+                PrecisionGrid::Fixed { bits } => {
+                    if bits.is_empty() {
+                        return Err("spec: fixed grid needs at least one bitwidth".to_string());
+                    }
+                    if let Some(b) = bits.iter().find(|&&b| !(1..=64).contains(&b)) {
+                        return Err(format!("spec: fixed bitwidth {b} is outside 1..=64"));
+                    }
+                    bits.iter().map(|&b| PrecisionConfig::fixed(b, net.weight_layers())).collect()
                 }
-                if let Some(b) = bits.iter().find(|&&b| !(1..=64).contains(&b)) {
-                    return Err(format!("spec: fixed bitwidth {b} is outside 1..=64"));
+                PrecisionGrid::Mixed { targets, combos, seed } => {
+                    if targets.is_empty() {
+                        return Err("spec: mixed grid needs at least one target".to_string());
+                    }
+                    if *combos < 1 {
+                        return Err("spec: mixed grid needs combos >= 1".to_string());
+                    }
+                    sweep::sweep_flat(net.weight_layers(), targets, *combos, *seed)
+                        .into_iter()
+                        .map(|(_, cfg)| cfg)
+                        .collect()
                 }
-                bits.iter().map(|&b| PrecisionConfig::fixed(b, net.weight_layers())).collect()
-            }
-            PrecisionGrid::Mixed { targets, combos, seed } => {
-                if targets.is_empty() {
-                    return Err("spec: mixed grid needs at least one target".to_string());
+                PrecisionGrid::Explicit { cfgs } => {
+                    if cfgs.is_empty() {
+                        return Err("spec: explicit grid needs at least one config".to_string());
+                    }
+                    let mut names = BTreeSet::new();
+                    for c in cfgs {
+                        if !names.insert(c.name.as_str()) {
+                            return Err(format!("spec: duplicate explicit config name '{}'", c.name));
+                        }
+                        if c.bits.len() != net.weight_layers() {
+                            return Err(format!(
+                                "spec: explicit config '{}' has {} bit entries but network '{}' \
+                                 has {} weight layers",
+                                c.name,
+                                c.bits.len(),
+                                net.name,
+                                net.weight_layers()
+                            ));
+                        }
+                        if let Some(b) = c.bits.iter().find(|&&b| !(1..=64).contains(&b)) {
+                            return Err(format!(
+                                "spec: explicit config '{}' bitwidth {b} is outside 1..=64",
+                                c.name
+                            ));
+                        }
+                    }
+                    cfgs.iter().map(|c| PrecisionConfig::from_bits(&c.name, &c.bits)).collect()
                 }
-                if *combos < 1 {
-                    return Err("spec: mixed grid needs combos >= 1".to_string());
-                }
-                sweep::sweep_flat(net.weight_layers(), targets, *combos, *seed)
-                    .into_iter()
-                    .map(|(_, cfg)| cfg)
-                    .collect()
-            }
-        };
+            });
+        }
         if self.batch < 1 {
             return Err("spec: batch must be >= 1".to_string());
         }
-        Ok(ResolvedSweep { net, grid, cfgs, batch: self.batch })
+        // Concrete chips, one per (net, hw, chip-geometry).
+        let mut chip_cfgs = Vec::with_capacity(nets.len() * hws.len() * self.chips.len());
+        for net in &nets {
+            for &hw in &hws {
+                for geom in &self.chips {
+                    chip_cfgs.push(geom.apply(ChipConfig::for_network(hw, net)));
+                }
+            }
+        }
+        // Per-network block offsets; block sizes differ when a mixed or
+        // fixed grid quantifies networks with different layer counts.
+        let mut offsets = Vec::with_capacity(nets.len() + 1);
+        offsets.push(0usize);
+        for c in &cfgs {
+            let block = hws.len() * self.chips.len() * techs.len() * c.len();
+            offsets.push(offsets.last().unwrap() + block);
+        }
+        Ok(ResolvedSweep {
+            nets,
+            hws,
+            techs,
+            chips: self.chips.clone(),
+            cfgs,
+            chip_cfgs,
+            offsets,
+            batch: self.batch,
+        })
     }
 }
 
-/// A [`SweepSpec`] with names resolved into simulation inputs. Point `i`
-/// is `(grid[i / cfgs.len()], cfgs[i % cfgs.len()])` — hardware-major,
-/// precision-minor, identical in every process.
+/// The resolved coordinates of one enumerated sweep point — what a
+/// [`PointRecord`] echoes so renderers, [`merge`], and the transport can
+/// cross-check records against the spec instead of trusting index order.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PointCoords {
+    /// Network name.
+    pub net: String,
+    /// Precision-configuration name.
+    pub cfg: String,
+    /// Hardware config spec name (`lr` / `ir`).
+    pub hw: String,
+    /// Cell technology spec name.
+    pub tech: String,
+    /// Chip-geometry name.
+    pub chip: String,
+}
+
+/// A [`SweepSpec`] with names resolved into simulation inputs. Point
+/// enumeration is network-outermost, then hardware, then chip geometry,
+/// then technology, then precision config (innermost) — identical in
+/// every process.
 #[derive(Debug, Clone)]
 pub struct ResolvedSweep {
-    /// The network under sweep.
-    pub net: Network,
-    /// Hardware × technology cross product, hardware-major.
-    pub grid: Vec<(HwConfig, Tech)>,
-    /// Precision configurations, in spec order.
-    pub cfgs: Vec<PrecisionConfig>,
+    /// The networks under sweep, in spec order.
+    pub nets: Vec<Network>,
+    /// Hardware configurations, in spec order.
+    pub hws: Vec<HwConfig>,
+    /// Cell technologies, in spec order.
+    pub techs: Vec<Tech>,
+    /// Chip geometries, in spec order.
+    pub chips: Vec<ChipGeom>,
+    /// Precision configurations, one list per network, in spec order.
+    pub cfgs: Vec<Vec<PrecisionConfig>>,
+    /// Concrete chips, one per (net, hw, geometry), net-major.
+    chip_cfgs: Vec<ChipConfig>,
+    /// Start index of each network's point block (+ the total at the end).
+    offsets: Vec<usize>,
     /// Inference batch size.
     pub batch: u64,
 }
@@ -316,18 +662,51 @@ pub struct ResolvedSweep {
 impl ResolvedSweep {
     /// Total number of sweep points.
     pub fn num_points(&self) -> usize {
-        self.grid.len() * self.cfgs.len()
+        *self.offsets.last().expect("offsets non-empty")
+    }
+
+    /// Decompose a global point index into (net, hw, chip, tech, cfg)
+    /// coordinate indices. Panics if `i >= num_points()`.
+    fn locate(&self, i: usize) -> (usize, usize, usize, usize, usize) {
+        assert!(i < self.num_points(), "point index {i} out of range");
+        let n = self.offsets.partition_point(|&o| o <= i) - 1;
+        let j = i - self.offsets[n];
+        let k_cfg = self.cfgs[n].len();
+        let per_hw = self.chips.len() * self.techs.len() * k_cfg;
+        let h = j / per_hw;
+        let rem = j % per_hw;
+        let c = rem / (self.techs.len() * k_cfg);
+        let rem = rem % (self.techs.len() * k_cfg);
+        (n, h, c, rem / k_cfg, rem % k_cfg)
     }
 
     /// The `i`-th sweep point (panics if `i >= num_points()`).
     pub fn point(&self, i: usize) -> SweepPoint<'_> {
-        let (hw, tech) = self.grid[i / self.cfgs.len()];
+        let (n, h, c, t, k) = self.locate(i);
         SweepPoint {
-            net: &self.net,
-            cfg: &self.cfgs[i % self.cfgs.len()],
-            params: SimParams { hw, tech, batch: self.batch },
-            chip: None,
+            net: &self.nets[n],
+            cfg: &self.cfgs[n][k],
+            params: SimParams { hw: self.hws[h], tech: self.techs[t], batch: self.batch },
+            chip: Some(&self.chip_cfgs[(n * self.hws.len() + h) * self.chips.len() + c]),
         }
+    }
+
+    /// The resolved coordinate names of the `i`-th point.
+    pub fn coords(&self, i: usize) -> PointCoords {
+        let (n, h, c, t, k) = self.locate(i);
+        PointCoords {
+            net: self.nets[n].name.clone(),
+            cfg: self.cfgs[n][k].name.clone(),
+            hw: hw_name(self.hws[h]).to_string(),
+            tech: tech_name(self.techs[t].cell).to_string(),
+            chip: self.chips[c].name.clone(),
+        }
+    }
+
+    /// The concrete chip of the `i`-th point.
+    pub fn chip(&self, i: usize) -> &ChipConfig {
+        let (n, h, c, _, _) = self.locate(i);
+        &self.chip_cfgs[(n * self.hws.len() + h) * self.chips.len() + c]
     }
 
     /// The points of an index range, in order.
@@ -352,8 +731,10 @@ pub fn shard_range(n_points: usize, shards: usize, shard_id: usize) -> Range<usi
     start..start + len
 }
 
-/// One serialized sweep point: identifying coordinates + the headline
-/// metrics of its [`InferenceReport`].
+/// One serialized sweep point: its resolved coordinates + the headline
+/// metrics of its [`InferenceReport`] + the Fig. 8 breakdown values
+/// (energy by work category, GEMM latency by phase), so every figure and
+/// table of the paper renders from records alone.
 #[derive(Debug, Clone, PartialEq)]
 pub struct PointRecord {
     /// Global point index within the spec's enumeration.
@@ -366,6 +747,8 @@ pub struct PointRecord {
     pub hw: String,
     /// Cell technology spec name.
     pub tech: String,
+    /// Chip-geometry name (see [`ChipGeom`]).
+    pub chip: String,
     /// Average configured bitwidth.
     pub avg_bits: f64,
     /// Energy per inference, joules.
@@ -382,17 +765,25 @@ pub struct PointRecord {
     pub gops_per_w_mm2: f64,
     /// Energy-delay product, J·s.
     pub edp_js: f64,
+    /// Fig. 8a energy values by category, in
+    /// [`breakdown::ENERGY_KIND_LABELS`] order, joules.
+    pub energy_kinds: [f64; 4],
+    /// Fig. 8b GEMM latency values by phase, in
+    /// [`breakdown::GEMM_PHASE_LABELS`] order, seconds.
+    pub gemm_phases: [f64; 5],
 }
 
 impl PointRecord {
-    /// Extract the record of point `index` from a report.
-    pub fn from_report(index: usize, r: &InferenceReport) -> PointRecord {
+    /// Extract the record of point `index` from a report, echoing the
+    /// spec-resolved coordinates.
+    pub fn from_report(index: usize, coords: &PointCoords, r: &InferenceReport) -> PointRecord {
         PointRecord {
             index,
-            net: r.net_name.clone(),
-            cfg: r.cfg_name.clone(),
-            hw: hw_name(r.hw).to_string(),
-            tech: tech_name(r.tech.cell).to_string(),
+            net: coords.net.clone(),
+            cfg: coords.cfg.clone(),
+            hw: coords.hw.clone(),
+            tech: coords.tech.clone(),
+            chip: coords.chip.clone(),
             avg_bits: r.avg_bits,
             energy_j: r.energy_j(),
             latency_s: r.latency_s(),
@@ -401,6 +792,8 @@ impl PointRecord {
             gops_per_w: r.gops_per_w(),
             gops_per_w_mm2: r.gops_per_w_mm2(),
             edp_js: r.edp_js(),
+            energy_kinds: breakdown::energy_kind_values(r),
+            gemm_phases: breakdown::gemm_phase_values(r),
         }
     }
 
@@ -413,6 +806,7 @@ impl PointRecord {
             ("cfg", Json::str(self.cfg.clone())),
             ("hw", Json::str(self.hw.clone())),
             ("tech", Json::str(self.tech.clone())),
+            ("chip", Json::str(self.chip.clone())),
             ("avg_bits", Json::num(self.avg_bits)),
             ("energy_j", Json::num(self.energy_j)),
             ("latency_s", Json::num(self.latency_s)),
@@ -421,6 +815,8 @@ impl PointRecord {
             ("gops_per_w", Json::num(self.gops_per_w)),
             ("gops_per_w_mm2", Json::num(self.gops_per_w_mm2)),
             ("edp_js", Json::num(self.edp_js)),
+            ("energy_kinds", Json::arr(self.energy_kinds.iter().map(|&v| Json::num(v)))),
+            ("gemm_phases", Json::arr(self.gemm_phases.iter().map(|&v| Json::num(v)))),
         ])
     }
 
@@ -435,6 +831,20 @@ impl PointRecord {
         let f = |key: &str| -> Result<f64, String> {
             v.get(key).and_then(Json::as_f64).ok_or_else(|| format!("point: missing '{key}'"))
         };
+        fn farr<const N: usize>(v: &Json, key: &str) -> Result<[f64; N], String> {
+            let arr = v
+                .get(key)
+                .and_then(Json::as_arr)
+                .ok_or_else(|| format!("point: missing '{key}' array"))?;
+            if arr.len() != N {
+                return Err(format!("point: '{key}' must have {N} entries, got {}", arr.len()));
+            }
+            let mut out = [0.0; N];
+            for (o, x) in out.iter_mut().zip(arr) {
+                *o = x.as_f64().ok_or_else(|| format!("point: '{key}' entries must be numbers"))?;
+            }
+            Ok(out)
+        }
         Ok(PointRecord {
             index: v
                 .get("index")
@@ -445,6 +855,7 @@ impl PointRecord {
             cfg: s("cfg")?,
             hw: s("hw")?,
             tech: s("tech")?,
+            chip: s("chip")?,
             avg_bits: f("avg_bits")?,
             energy_j: f("energy_j")?,
             latency_s: f("latency_s")?,
@@ -453,7 +864,44 @@ impl PointRecord {
             gops_per_w: f("gops_per_w")?,
             gops_per_w_mm2: f("gops_per_w_mm2")?,
             edp_js: f("edp_js")?,
+            energy_kinds: farr(v, "energy_kinds")?,
+            gemm_phases: farr(v, "gemm_phases")?,
         })
+    }
+
+    /// Check this record's echoed coordinates against the spec's
+    /// enumeration at its index — the drift guard renderers, [`merge`],
+    /// and the transport all share.
+    pub fn check_coords(&self, resolved: &ResolvedSweep, ctx: &str) -> Result<(), String> {
+        if self.index >= resolved.num_points() {
+            return Err(format!(
+                "{ctx}: record index {} is outside the spec's {} points",
+                self.index,
+                resolved.num_points()
+            ));
+        }
+        let c = resolved.coords(self.index);
+        let echoed = [&self.net, &self.cfg, &self.hw, &self.tech, &self.chip];
+        let expected = [&c.net, &c.cfg, &c.hw, &c.tech, &c.chip];
+        if echoed != expected {
+            return Err(format!(
+                "{ctx}: point {} echoes coordinates net={}/cfg={}/hw={}/tech={}/chip={} but the \
+                 spec enumerates net={}/cfg={}/hw={}/tech={}/chip={} — records drifted from the \
+                 spec",
+                self.index,
+                self.net,
+                self.cfg,
+                self.hw,
+                self.tech,
+                self.chip,
+                c.net,
+                c.cfg,
+                c.hw,
+                c.tech,
+                c.chip
+            ));
+        }
+        Ok(())
     }
 }
 
@@ -500,14 +948,15 @@ fn check_fingerprint(v: &Json, ctx: &str) -> Result<(), String> {
 /// request: which slice of which sweep a worker should run.
 ///
 /// ```
-/// use bf_imna::sim::shard::{PrecisionGrid, ShardRequest, SweepSpec};
+/// use bf_imna::sim::shard::{ChipGeom, PrecisionGrid, ShardRequest, SweepSpec};
 /// use bf_imna::util::json::Json;
 ///
 /// let req = ShardRequest {
 ///     spec: SweepSpec {
-///         net: "serve_cnn".into(),
+///         nets: vec!["serve_cnn".into()],
 ///         hw: vec!["lr".into()],
 ///         tech: vec!["sram".into()],
+///         chips: vec![ChipGeom::default_chip()],
 ///         grid: PrecisionGrid::Fixed { bits: vec![4, 8] },
 ///         batch: 1,
 ///     },
@@ -589,10 +1038,11 @@ impl ShardResult {
     /// dispatcher uses this to validate a worker's reply *structurally*
     /// before the document is ever considered for [`merge`]: the computing
     /// binary's mapper fingerprint must match this one's, the shard
-    /// coordinates must be coherent, and every record's global index must
-    /// line up with the declared slice start. A worker that replies with
-    /// well-formed JSON of the wrong shape is indistinguishable from a
-    /// corrupted one, and both are rejected here.
+    /// coordinates must be coherent, every record's global index must
+    /// line up with the declared slice start, and every record's echoed
+    /// coordinates must match the spec's enumeration at its index. A
+    /// worker that replies with well-formed JSON of the wrong shape is
+    /// indistinguishable from a corrupted one, and both are rejected here.
     pub fn from_json(v: &Json) -> Result<ShardResult, String> {
         check_fingerprint(v, "shard result")?;
         let spec = SweepSpec::from_json(v.get("spec").ok_or("shard result: missing 'spec'")?)?;
@@ -616,6 +1066,13 @@ impl ShardResult {
                     p.index
                 ));
             }
+        }
+        // Coordinate drift check: records must agree with the spec's own
+        // enumeration, not merely be internally contiguous.
+        let resolved =
+            spec.resolve().map_err(|e| format!("shard result: spec does not resolve: {e}"))?;
+        for p in &points {
+            p.check_coords(&resolved, "shard result")?;
         }
         Ok(ShardResult { spec, shards, shard_id, start, points })
     }
@@ -675,7 +1132,7 @@ fn run_shard_inner(
         points: reports
             .iter()
             .enumerate()
-            .map(|(k, r)| PointRecord::from_report(start + k, r))
+            .map(|(k, r)| PointRecord::from_report(start + k, &resolved.coords(start + k), r))
             .collect(),
     })
 }
@@ -696,16 +1153,51 @@ pub fn run_full(spec: &SweepSpec, engine: &SweepEngine) -> Result<Json, String> 
     Ok(full_doc(spec, &shard.points))
 }
 
+/// Parse a full-sweep document ([`full_doc`] shape — what `run_full`,
+/// `merge`, and `dispatch` all emit) back into its spec, resolved
+/// enumeration, and records, cross-checking every record's echoed
+/// coordinates against the spec. This is the single entry every renderer
+/// goes through, so a document whose records drifted from its spec can
+/// never silently become a figure.
+pub fn decode_full_doc(doc: &Json) -> Result<(SweepSpec, ResolvedSweep, Vec<PointRecord>), String> {
+    let spec = SweepSpec::from_json(doc.get("spec").ok_or("doc: missing 'spec'")?)?;
+    let resolved = spec.resolve().map_err(|e| format!("doc: spec does not resolve: {e}"))?;
+    let points = doc
+        .get("points")
+        .and_then(Json::as_arr)
+        .ok_or("doc: missing 'points' array")?
+        .iter()
+        .map(PointRecord::from_json)
+        .collect::<Result<Vec<PointRecord>, String>>()?;
+    if points.len() != resolved.num_points() {
+        return Err(format!(
+            "doc: carries {} points but the spec enumerates {}",
+            points.len(),
+            resolved.num_points()
+        ));
+    }
+    for (i, p) in points.iter().enumerate() {
+        if p.index != i {
+            return Err(format!("doc: point {i} carries a mismatched index {}", p.index));
+        }
+        p.check_coords(&resolved, "doc")?;
+    }
+    Ok((spec, resolved, points))
+}
+
 /// Merge shard documents (in any order) into the full-sweep document.
 ///
 /// Validates that all shards describe the same spec and partition, that
 /// every shard id `0..shards` appears exactly once, that the concatenated
-/// records cover point indices `0..n` contiguously, and that every
-/// document carries the **same mapper fingerprint** — shards computed by
-/// divergent binaries (different cost models producing different bits)
-/// are rejected instead of silently mixed. The output is byte-identical
-/// to [`run_full`]'s document for the same spec, because shard workers
-/// compute bit-identical records and the JSON writer is canonical.
+/// records cover point indices `0..n` contiguously, that every record's
+/// **echoed coordinates** match the spec's enumeration at its index
+/// (records drifting from the spec are rejected, not trusted by position),
+/// and that every document carries the **same mapper fingerprint** —
+/// shards computed by divergent binaries (different cost models producing
+/// different bits) are rejected instead of silently mixed. The output is
+/// byte-identical to [`run_full`]'s document for the same spec, because
+/// shard workers compute bit-identical records and the JSON writer is
+/// canonical.
 pub fn merge(docs: &[Json]) -> Result<Json, String> {
     if docs.is_empty() {
         return Err("merge: no shard documents given".to_string());
@@ -776,16 +1268,22 @@ pub fn merge(docs: &[Json]) -> Result<Json, String> {
     }
     // Coverage: contiguity alone cannot catch a truncated final shard, so
     // re-enumerate the spec and require every point to be present.
-    let expected = SweepSpec::from_json(spec)
+    let resolved = SweepSpec::from_json(spec)
         .map_err(|e| format!("merge: bad spec in shard documents: {e}"))?
         .resolve()
-        .map_err(|e| format!("merge: spec does not resolve: {e}"))?
-        .num_points();
-    if merged.len() != expected {
+        .map_err(|e| format!("merge: spec does not resolve: {e}"))?;
+    if merged.len() != resolved.num_points() {
         return Err(format!(
-            "merge: documents cover {} points but the spec enumerates {expected}",
-            merged.len()
+            "merge: documents cover {} points but the spec enumerates {}",
+            merged.len(),
+            resolved.num_points()
         ));
+    }
+    // Coordinate drift: every record must echo the coordinates the spec
+    // enumerates at its index — index order alone is not trusted.
+    for (i, p) in merged.iter().enumerate() {
+        let rec = PointRecord::from_json(p).map_err(|e| format!("merge: point {i}: {e}"))?;
+        rec.check_coords(&resolved, "merge")?;
     }
     Ok(Json::obj([
         ("spec", spec.clone()),
@@ -799,18 +1297,45 @@ mod tests {
     use super::*;
 
     fn small_spec() -> SweepSpec {
+        SweepSpec::single(
+            "serve_cnn",
+            vec!["lr".to_string()],
+            vec!["sram".to_string(), "reram".to_string()],
+            PrecisionGrid::Fixed { bits: vec![2, 4, 8] },
+        )
+    }
+
+    fn multi_spec() -> SweepSpec {
         SweepSpec {
-            net: "serve_cnn".to_string(),
+            nets: vec!["serve_cnn".to_string(), "alexnet".to_string()],
             hw: vec!["lr".to_string()],
-            tech: vec!["sram".to_string(), "reram".to_string()],
-            grid: PrecisionGrid::Fixed { bits: vec![2, 4, 8] },
+            tech: vec!["sram".to_string()],
+            chips: vec![
+                ChipGeom::named("base"),
+                ChipGeom {
+                    mesh_bits_per_transfer: Some(512),
+                    ..ChipGeom::named("half-link")
+                },
+            ],
+            grid: PrecisionGrid::Fixed { bits: vec![4, 8] },
             batch: 1,
         }
     }
 
     #[test]
-    fn spec_round_trips_both_grids() {
-        for spec in [small_spec(), SweepSpec::fig7("alexnet", "lr", 5, 7)] {
+    fn spec_round_trips_all_grids() {
+        let explicit = SweepSpec::single(
+            "serve_cnn",
+            vec!["lr".to_string()],
+            vec!["sram".to_string()],
+            PrecisionGrid::Explicit {
+                cfgs: vec![
+                    ExplicitCfg { name: "a".into(), bits: vec![4, 8, 4] },
+                    ExplicitCfg { name: "b".into(), bits: vec![8, 8, 8] },
+                ],
+            },
+        );
+        for spec in [small_spec(), SweepSpec::fig7("alexnet", "lr", 5, 7), multi_spec(), explicit] {
             let text = spec.to_json().to_string();
             let back = SweepSpec::from_json(&Json::parse(&text).unwrap()).unwrap();
             assert_eq!(back, spec);
@@ -820,9 +1345,20 @@ mod tests {
     }
 
     #[test]
+    fn legacy_single_net_spec_still_parses() {
+        // The PR 2 wire shape: a single "net" string, no "chips".
+        let text = r#"{"batch":1,"hw":["lr"],"net":"serve_cnn",
+                       "precision":{"bits":[4,8],"mode":"fixed"},"tech":["sram"]}"#;
+        let spec = SweepSpec::from_json(&Json::parse(text).unwrap()).unwrap();
+        assert_eq!(spec.nets, vec!["serve_cnn".to_string()]);
+        assert_eq!(spec.chips, vec![ChipGeom::default_chip()]);
+        assert_eq!(spec.resolve().unwrap().num_points(), 2);
+    }
+
+    #[test]
     fn spec_rejects_bad_names_and_shapes() {
         let mut bad = small_spec();
-        bad.net = "lenet".to_string();
+        bad.nets = vec!["lenet".to_string()];
         assert!(bad.resolve().is_err());
         let mut bad = small_spec();
         bad.hw = vec!["quantum".to_string()];
@@ -831,8 +1367,32 @@ mod tests {
         bad.tech.clear();
         assert!(bad.resolve().is_err());
         let mut bad = small_spec();
+        bad.nets.clear();
+        assert!(bad.resolve().is_err());
+        let mut bad = small_spec();
+        bad.chips.clear();
+        assert!(bad.resolve().is_err());
+        let mut bad = small_spec();
+        bad.chips = vec![ChipGeom::named("x"), ChipGeom::named("x")];
+        assert!(bad.resolve().unwrap_err().contains("duplicate chip"));
+        let mut bad = small_spec();
         bad.grid = PrecisionGrid::Fixed { bits: vec![] };
         assert!(bad.resolve().is_err());
+        // Explicit grid: wrong layer count and duplicate names fail.
+        let mut bad = small_spec();
+        bad.grid = PrecisionGrid::Explicit {
+            cfgs: vec![ExplicitCfg { name: "a".into(), bits: vec![8] }],
+        };
+        assert!(bad.resolve().unwrap_err().contains("weight layers"));
+        let mut bad = small_spec();
+        let n_layers = net_by_name("serve_cnn").unwrap().weight_layers();
+        bad.grid = PrecisionGrid::Explicit {
+            cfgs: vec![
+                ExplicitCfg { name: "a".into(), bits: vec![8; n_layers] },
+                ExplicitCfg { name: "a".into(), bits: vec![4; n_layers] },
+            ],
+        };
+        assert!(bad.resolve().unwrap_err().contains("duplicate explicit"));
         assert!(SweepSpec::from_json(&Json::parse("{}").unwrap()).is_err());
     }
 
@@ -849,12 +1409,44 @@ mod tests {
     }
 
     #[test]
+    fn multi_net_chip_enumeration_is_net_outer_chip_mid_cfg_minor() {
+        let resolved = multi_spec().resolve().unwrap();
+        // 2 nets x 1 hw x 2 chips x 1 tech x 2 cfgs = 8 points.
+        assert_eq!(resolved.num_points(), 8);
+        let c0 = resolved.coords(0);
+        assert_eq!((c0.net.as_str(), c0.chip.as_str(), c0.cfg.as_str()), ("serve_cnn", "base", "INT4"));
+        let c2 = resolved.coords(2);
+        assert_eq!((c2.chip.as_str(), c2.cfg.as_str()), ("half-link", "INT4"));
+        let c4 = resolved.coords(4);
+        assert_eq!(c4.net, "alexnet");
+        // The half-link geometry actually narrows the mesh.
+        assert_eq!(resolved.chip(2).mesh.bits_per_transfer, 512);
+        assert_eq!(resolved.chip(0).mesh.bits_per_transfer, 1024);
+    }
+
+    #[test]
+    fn default_chip_geom_is_transparent() {
+        // A spec with the default geometry produces points whose chips are
+        // exactly ChipConfig::for_network — the geometry axis costs nothing.
+        let resolved = small_spec().resolve().unwrap();
+        let net = net_by_name("serve_cnn").unwrap();
+        assert_eq!(*resolved.chip(0), ChipConfig::for_network(HwConfig::Lr, &net));
+        assert!(ChipGeom::default_chip().is_default());
+        assert!(!ChipGeom {
+            mesh_bits_per_transfer: Some(64),
+            ..ChipGeom::named("narrow")
+        }
+        .is_default());
+    }
+
+    #[test]
     fn fig7_spec_matches_sweep_flat() {
         let spec = SweepSpec::fig7("alexnet", "lr", 3, 9);
         let resolved = spec.resolve().unwrap();
-        let flat = sweep::sweep_flat(resolved.net.weight_layers(), &sweep::fig7_targets(), 3, 9);
-        assert_eq!(resolved.cfgs.len(), flat.len());
-        for (cfg, (_, expect)) in resolved.cfgs.iter().zip(&flat) {
+        let flat =
+            sweep::sweep_flat(resolved.nets[0].weight_layers(), &sweep::fig7_targets(), 3, 9);
+        assert_eq!(resolved.cfgs[0].len(), flat.len());
+        for (cfg, (_, expect)) in resolved.cfgs[0].iter().zip(&flat) {
             assert_eq!(cfg, expect);
         }
     }
@@ -878,14 +1470,15 @@ mod tests {
 
     #[test]
     fn sharded_merge_is_byte_identical_to_full_run() {
-        let spec = small_spec();
-        let full = run_full(&spec, &SweepEngine::serial()).unwrap().to_string();
-        for shards in [1usize, 2, 4, 6] {
-            let docs: Vec<Json> = (0..shards)
-                .map(|k| run_shard(&spec, shards, k, &SweepEngine::serial()).unwrap().to_json())
-                .collect();
-            let merged = merge(&docs).unwrap().to_string();
-            assert_eq!(merged, full, "shards={shards}");
+        for spec in [small_spec(), multi_spec()] {
+            let full = run_full(&spec, &SweepEngine::serial()).unwrap().to_string();
+            for shards in [1usize, 2, 4, 6] {
+                let docs: Vec<Json> = (0..shards)
+                    .map(|k| run_shard(&spec, shards, k, &SweepEngine::serial()).unwrap().to_json())
+                    .collect();
+                let merged = merge(&docs).unwrap().to_string();
+                assert_eq!(merged, full, "shards={shards}");
+            }
         }
     }
 
@@ -908,11 +1501,69 @@ mod tests {
     }
 
     #[test]
+    fn merge_rejects_records_that_drifted_from_the_spec() {
+        let spec = small_spec();
+        let mut docs: Vec<Json> =
+            (0..2).map(|k| run_shard(&spec, 2, k, &SweepEngine::serial()).unwrap().to_json()).collect();
+        // Corrupt one record's echoed technology: index order still lines
+        // up, but the coordinates no longer match the spec's enumeration.
+        if let Json::Obj(m) = &mut docs[1] {
+            if let Some(Json::Arr(points)) = m.get_mut("points") {
+                if let Json::Obj(p) = &mut points[0] {
+                    p.insert("tech".to_string(), Json::str("pcm"));
+                }
+            }
+        }
+        let err = merge(&docs).unwrap_err();
+        assert!(err.contains("drifted"), "{err}");
+    }
+
+    #[test]
+    fn decode_full_doc_round_trips_and_rejects_drift() {
+        let spec = multi_spec();
+        let doc = run_full(&spec, &SweepEngine::serial()).unwrap();
+        let (back, resolved, records) = decode_full_doc(&doc).unwrap();
+        assert_eq!(back, spec);
+        assert_eq!(records.len(), resolved.num_points());
+        for (i, r) in records.iter().enumerate() {
+            assert_eq!(r.index, i);
+            assert_eq!(r.chip, resolved.coords(i).chip);
+        }
+        // A record whose echoed chip drifts is rejected with context.
+        let mut bad = doc.clone();
+        if let Json::Obj(m) = &mut bad {
+            if let Some(Json::Arr(points)) = m.get_mut("points") {
+                if let Json::Obj(p) = &mut points[3] {
+                    p.insert("chip".to_string(), Json::str("nope"));
+                }
+            }
+        }
+        let err = decode_full_doc(&bad).unwrap_err();
+        assert!(err.contains("drifted"), "{err}");
+    }
+
+    #[test]
     fn records_round_trip_through_json() {
         let shard = run_shard(&small_spec(), 1, 0, &SweepEngine::serial()).unwrap();
         for rec in &shard.points {
             let back = PointRecord::from_json(&rec.to_json()).unwrap();
             assert_eq!(&back, rec);
+        }
+    }
+
+    #[test]
+    fn records_carry_breakdown_values_that_sum_to_totals() {
+        let shard = run_shard(&small_spec(), 1, 0, &SweepEngine::serial()).unwrap();
+        for rec in &shard.points {
+            let kinds_total: f64 = rec.energy_kinds.iter().sum();
+            // The four energy categories partition the total energy.
+            assert!(
+                (kinds_total - rec.energy_j).abs() <= 1e-12 * rec.energy_j.abs(),
+                "kinds {kinds_total} vs total {}",
+                rec.energy_j
+            );
+            // GEMM phase latencies are positive for a conv network.
+            assert!(rec.gemm_phases.iter().sum::<f64>() > 0.0);
         }
     }
 
@@ -949,6 +1600,22 @@ mod tests {
         };
         obj.insert("start".to_string(), Json::num(0.0));
         assert!(ShardResult::from_json(&Json::Obj(obj)).is_err());
+    }
+
+    #[test]
+    fn shard_result_rejects_coordinate_drift() {
+        let shard = run_shard(&small_spec(), 2, 0, &SweepEngine::serial()).unwrap();
+        let mut obj = match shard.to_json() {
+            Json::Obj(m) => m,
+            _ => unreachable!(),
+        };
+        if let Some(Json::Arr(points)) = obj.get_mut("points") {
+            if let Json::Obj(p) = &mut points[0] {
+                p.insert("net".to_string(), Json::str("alexnet"));
+            }
+        }
+        let err = ShardResult::from_json(&Json::Obj(obj)).unwrap_err();
+        assert!(err.contains("drifted"), "{err}");
     }
 
     #[test]

@@ -1,0 +1,134 @@
+//! Golden tests for the paper-artifact catalog (`sim::artifacts`): every
+//! artifact must render **byte-identically** from (a) an in-process
+//! `run_full`, (b) a 4-shard `sweep` + `merge`, and (c) a two-worker
+//! `dispatch` over the HTTP transport — the acceptance invariant of the
+//! experiment-IR refactor. The documents themselves must also be
+//! byte-identical, and a document whose records drifted from its spec
+//! must be rejected before any renderer runs.
+
+use std::time::Duration;
+
+use bf_imna::sim::artifacts;
+use bf_imna::sim::shard::{self, SweepSpec};
+use bf_imna::sim::transport::{dispatch, DispatchOpts, WorkerServer};
+use bf_imna::sim::SweepEngine;
+use bf_imna::util::json::Json;
+
+#[test]
+fn every_artifact_renders_byte_identically_across_execution_modes() {
+    // One worker pool serves every artifact's dispatch leg.
+    let workers: Vec<WorkerServer> = (0..2)
+        .map(|_| {
+            WorkerServer::spawn("127.0.0.1:0", SweepEngine::with_threads(2)).expect("bind worker")
+        })
+        .collect();
+    let pool: Vec<String> = workers.iter().map(|w| w.addr().to_string()).collect();
+    let engine = SweepEngine::new();
+
+    for artifact in artifacts::catalog() {
+        let spec = artifact.tiny_spec();
+
+        // (a) In-process reference document.
+        let full = shard::run_full(&spec, &engine)
+            .unwrap_or_else(|e| panic!("{}: run_full: {e}", artifact.name));
+        let full_text = full.to_string();
+
+        // (b) 4 independent shard "workers" (fresh engines, as separate
+        // processes would be) + merge.
+        let docs: Vec<Json> = (0..4)
+            .map(|k| {
+                shard::run_shard(&spec, 4, k, &SweepEngine::serial())
+                    .unwrap_or_else(|e| panic!("{}: shard {k}: {e}", artifact.name))
+                    .to_json()
+            })
+            .collect();
+        let merged =
+            shard::merge(&docs).unwrap_or_else(|e| panic!("{}: merge: {e}", artifact.name));
+        assert_eq!(merged.to_string(), full_text, "{}: sharded merge diverged", artifact.name);
+
+        // (c) Two-worker dispatch over the HTTP transport.
+        let dopts = DispatchOpts {
+            shards: 3,
+            timeout: Duration::from_secs(60),
+            ..DispatchOpts::default()
+        };
+        let report = dispatch(&spec, &pool, &dopts)
+            .unwrap_or_else(|e| panic!("{}: dispatch: {e}", artifact.name));
+        assert_eq!(report.doc.to_string(), full_text, "{}: dispatched doc diverged", artifact.name);
+
+        // All three documents render to the same bytes.
+        let r_full = artifact
+            .render_doc(&full)
+            .unwrap_or_else(|e| panic!("{}: render(full): {e}", artifact.name));
+        assert!(!r_full.is_empty(), "{}: rendered empty", artifact.name);
+        let r_merged = artifact.render_doc(&merged).unwrap();
+        let r_dispatched = artifact.render_doc(&report.doc).unwrap();
+        assert_eq!(r_merged, r_full, "{}: merged render diverged", artifact.name);
+        assert_eq!(r_dispatched, r_full, "{}: dispatched render diverged", artifact.name);
+    }
+
+    for w in workers {
+        w.shutdown();
+    }
+}
+
+#[test]
+fn run_and_render_matches_document_render() {
+    // The in-process convenience path and the document path are the same
+    // renderer over the same records — one way numbers become a figure.
+    let engine = SweepEngine::new();
+    for artifact in artifacts::catalog() {
+        let doc = shard::run_full(&artifact.tiny_spec(), &engine).unwrap();
+        assert_eq!(
+            artifact.run_and_render(&engine, true).unwrap(),
+            artifact.render_doc(&doc).unwrap(),
+            "{}: run_and_render diverged from render_doc",
+            artifact.name
+        );
+    }
+}
+
+#[test]
+fn paper_scale_specs_serialize_and_resolve() {
+    // Every catalog spec (paper-scale and tiny) must round-trip through
+    // JSON and enumerate a positive number of points deterministically.
+    for artifact in artifacts::catalog() {
+        for (flavor, spec) in [("spec", artifact.spec()), ("tiny", artifact.tiny_spec())] {
+            let text = spec.to_json().to_string();
+            let back = SweepSpec::from_json(&Json::parse(&text).unwrap())
+                .unwrap_or_else(|e| panic!("{} {flavor}: parse: {e}", artifact.name));
+            assert_eq!(back, spec, "{} {flavor}: round trip changed the spec", artifact.name);
+            let n = back
+                .resolve()
+                .unwrap_or_else(|e| panic!("{} {flavor}: resolve: {e}", artifact.name))
+                .num_points();
+            assert!(n >= 1, "{} {flavor}: no points", artifact.name);
+            // Enumeration is deterministic: resolving twice gives the same
+            // coordinates at every index.
+            let (a, b) = (back.resolve().unwrap(), back.resolve().unwrap());
+            for i in 0..n {
+                assert_eq!(a.coords(i), b.coords(i), "{} {flavor}: point {i}", artifact.name);
+            }
+        }
+    }
+}
+
+#[test]
+fn drifted_documents_never_reach_a_renderer() {
+    let engine = SweepEngine::serial();
+    let artifact = artifacts::by_name("fig6").unwrap();
+    let doc = shard::run_full(&artifact.tiny_spec(), &engine).unwrap();
+    // Swap two records' echoed hw/tech coordinates: indices stay
+    // contiguous, totals stay plausible — only the coordinate cross-check
+    // can catch it.
+    let mut bad = doc.clone();
+    if let Json::Obj(m) = &mut bad {
+        if let Some(Json::Arr(points)) = m.get_mut("points") {
+            if let Json::Obj(p) = &mut points[0] {
+                p.insert("tech".to_string(), Json::str("reram"));
+            }
+        }
+    }
+    let err = artifact.render_doc(&bad).unwrap_err();
+    assert!(err.contains("drifted"), "{err}");
+}

@@ -30,17 +30,17 @@ fn help_covers_every_command_and_sweep_service_flag() {
     assert!(out.status.success());
     let text = stdout(&out);
     for cmd in [
-        "simulate", "sweep", "merge", "serve-worker", "dispatch", "hawq", "compare", "validate",
-        "serve",
+        "simulate", "sweep", "merge", "serve-worker", "dispatch", "artifacts", "render", "hawq",
+        "compare", "validate", "serve",
     ] {
         assert!(text.contains(cmd), "help does not mention command '{cmd}'");
     }
-    // The sweep-service + transport flags the binary accepts must all be
-    // documented.
+    // The sweep-service + transport + catalog flags the binary accepts
+    // must all be documented.
     for flag in [
         "--net", "--bits", "--hw", "--tech", "--breakdown", "--out", "--shards", "--shard-id",
         "--combos", "--seed", "--cache-in", "--cache-out", "--artifacts", "--requests", "--addr",
-        "--workers", "--spec", "--timeout-s",
+        "--workers", "--spec", "--timeout-s", "--artifact", "--doc", "--tiny", "--names",
     ] {
         assert!(text.contains(flag), "help does not mention flag '{flag}'");
     }
@@ -136,6 +136,74 @@ fn sharded_sweep_plus_merge_matches_single_process_byte_for_byte() {
 
     // Merging an incomplete shard set must fail.
     assert!(!run(&["merge", &shard_files[0], "--out", &path("bad.json")]).status.success());
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn artifact_catalog_lists_and_specs_round_trip() {
+    // The table listing and the scripting-friendly name list agree.
+    let out = run(&["artifacts"]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let listing = stdout(&out);
+    let out = run(&["artifacts", "--names"]);
+    assert!(out.status.success());
+    let names: Vec<String> = stdout(&out).lines().map(str::to_string).collect();
+    assert!(names.len() >= 8, "catalog too small: {names:?}");
+    for name in &names {
+        assert!(listing.contains(name.as_str()), "listing misses '{name}'");
+        // Every artifact's tiny spec is printable, parseable JSON.
+        let out = run(&["artifacts", "--spec", name, "--tiny"]);
+        assert!(out.status.success(), "{name}: {}", String::from_utf8_lossy(&out.stderr));
+        assert!(stdout(&out).trim_start().starts_with('{'), "{name}: not JSON");
+    }
+    // Unknown artifacts fail loudly everywhere they can be named.
+    assert!(!run(&["artifacts", "--spec", "fig99"]).status.success());
+    assert!(!run(&["render", "--artifact", "fig99"]).status.success());
+    assert!(!run(&["render"]).status.success(), "render without --artifact must fail");
+}
+
+#[test]
+fn artifact_spec_shard_merge_render_matches_local_render() {
+    // The full acceptance pipeline through the real binary:
+    //   artifacts --spec NAME --tiny -> sweep --spec --shards 2 -> merge
+    //   -> render --doc    must equal    render (local in-process run).
+    let dir = scratch("artifact_pipeline");
+    let path = |name: &str| dir.join(name).to_string_lossy().to_string();
+    let name = "fig6";
+
+    let spec = path("spec.json");
+    let out = run(&["artifacts", "--spec", name, "--tiny", "--out", &spec]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+
+    let mut shard_files = Vec::new();
+    for k in 0..2 {
+        let f = path(&format!("s{k}.json"));
+        let out = run(&[
+            "sweep", "--spec", &spec, "--shards", "2", "--shard-id", &k.to_string(), "--out", &f,
+        ]);
+        assert!(out.status.success(), "shard {k}: {}", String::from_utf8_lossy(&out.stderr));
+        shard_files.push(f);
+    }
+    let merged = path("merged.json");
+    let out = run(&["merge", &shard_files[0], &shard_files[1], "--out", &merged]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+
+    let from_doc = path("from_doc.txt");
+    let out = run(&["render", "--artifact", name, "--doc", &merged, "--out", &from_doc]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+
+    let local = path("local.txt");
+    let out = run(&["render", "--artifact", name, "--tiny", "--out", &local]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+
+    let doc_bytes = std::fs::read(&from_doc).unwrap();
+    assert!(!doc_bytes.is_empty());
+    assert_eq!(
+        doc_bytes,
+        std::fs::read(&local).unwrap(),
+        "document render differs from the local in-process render"
+    );
 
     let _ = std::fs::remove_dir_all(&dir);
 }

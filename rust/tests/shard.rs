@@ -5,19 +5,18 @@
 //! as independent processes with no coordination.
 
 use bf_imna::mapper::CacheSnapshot;
-use bf_imna::sim::shard::{self, PrecisionGrid, SweepSpec};
+use bf_imna::sim::shard::{self, ChipGeom, PrecisionGrid, SweepSpec};
 use bf_imna::sim::SweepEngine;
 use bf_imna::util::json::Json;
 use bf_imna::util::proptest::check;
 
 fn mixed_spec(net: &str, combos: usize, seed: u64) -> SweepSpec {
-    SweepSpec {
-        net: net.to_string(),
-        hw: vec!["lr".to_string()],
-        tech: vec!["sram".to_string()],
-        grid: PrecisionGrid::Mixed { targets: vec![2.0, 5.0, 8.0], combos, seed },
-        batch: 1,
-    }
+    SweepSpec::single(
+        net,
+        vec!["lr".to_string()],
+        vec!["sram".to_string()],
+        PrecisionGrid::Mixed { targets: vec![2.0, 5.0, 8.0], combos, seed },
+    )
 }
 
 #[test]
@@ -50,13 +49,12 @@ fn any_shard_partition_merges_bit_identical() {
 
 #[test]
 fn snapshot_loaded_worker_never_maps_and_stays_bit_identical() {
-    let spec = SweepSpec {
-        net: "serve_cnn".to_string(),
-        hw: vec!["lr".to_string()],
-        tech: vec!["sram".to_string(), "reram".to_string()],
-        grid: PrecisionGrid::Fixed { bits: vec![2, 5, 8] },
-        batch: 1,
-    };
+    let spec = SweepSpec::single(
+        "serve_cnn",
+        vec!["lr".to_string()],
+        vec!["sram".to_string(), "reram".to_string()],
+        PrecisionGrid::Fixed { bits: vec![2, 5, 8] },
+    );
     let resolved = spec.resolve().unwrap();
     let points = resolved.points(0..resolved.num_points());
 
@@ -103,10 +101,24 @@ fn spec_json_round_trip_random() {
                 seed: rng.next_u64(),
             }
         };
+        // 1–2 chip geometries with unique names and random overrides: the
+        // geometry axis must round-trip and merge like any other.
+        let mut chips = vec![ChipGeom::default_chip()];
+        if rng.bool() {
+            chips.push(ChipGeom {
+                mesh_bits_per_transfer: if rng.bool() { Some(256 + rng.below(2048)) } else { None },
+                caps_x: if rng.bool() { Some(1 + rng.below(16)) } else { None },
+                ..ChipGeom::named("variant")
+            });
+        }
         let spec = SweepSpec {
-            net: nets[rng.below(nets.len() as u64) as usize].to_string(),
+            nets: {
+                let n = 1 + rng.below(2) as usize;
+                (0..n).map(|_| nets[rng.below(nets.len() as u64) as usize].to_string()).collect()
+            },
             hw: pick(rng, &hw_all),
             tech: pick(rng, &tech_all),
+            chips,
             grid,
             batch: 1 + rng.below(8),
         };
@@ -205,13 +217,12 @@ fn shard_range_last_shard_carries_no_remainder_bias() {
 fn empty_shards_run_and_merge_byte_identically() {
     // End-to-end over-partition: 4 points into 6 shards (two of them
     // empty) must still merge to the exact single-process bytes.
-    let spec = SweepSpec {
-        net: "serve_cnn".to_string(),
-        hw: vec!["lr".to_string()],
-        tech: vec!["sram".to_string()],
-        grid: PrecisionGrid::Fixed { bits: vec![2, 4, 6, 8] },
-        batch: 1,
-    };
+    let spec = SweepSpec::single(
+        "serve_cnn",
+        vec!["lr".to_string()],
+        vec!["sram".to_string()],
+        PrecisionGrid::Fixed { bits: vec![2, 4, 6, 8] },
+    );
     let full = shard::run_full(&spec, &SweepEngine::serial()).unwrap().to_string();
     let docs: Vec<Json> = (0..6)
         .map(|k| shard::run_shard(&spec, 6, k, &SweepEngine::serial()).unwrap().to_json())

@@ -27,13 +27,12 @@ use bf_imna::util::json::Json;
 
 /// A small but non-trivial sweep: 2 grid cells x 4 precision configs.
 fn small_spec() -> SweepSpec {
-    SweepSpec {
-        net: "serve_cnn".to_string(),
-        hw: vec!["lr".to_string()],
-        tech: vec!["sram".to_string(), "reram".to_string()],
-        grid: PrecisionGrid::Fixed { bits: vec![2, 3, 4, 5] },
-        batch: 1,
-    }
+    SweepSpec::single(
+        "serve_cnn",
+        vec!["lr".to_string()],
+        vec!["sram".to_string(), "reram".to_string()],
+        PrecisionGrid::Fixed { bits: vec![2, 3, 4, 5] },
+    )
 }
 
 /// The single-process reference document (canonical text).
@@ -207,13 +206,12 @@ fn garbage_replies_are_never_merged() {
 fn overpartitioned_dispatch_with_empty_shards_is_byte_identical() {
     // More shards than points: trailing shards are empty ranges, which the
     // workers compute (trivially) and merge accepts.
-    let spec = SweepSpec {
-        net: "serve_cnn".to_string(),
-        hw: vec!["lr".to_string()],
-        tech: vec!["sram".to_string()],
-        grid: PrecisionGrid::Fixed { bits: vec![4, 8] },
-        batch: 1,
-    };
+    let spec = SweepSpec::single(
+        "serve_cnn",
+        vec!["lr".to_string()],
+        vec!["sram".to_string()],
+        PrecisionGrid::Fixed { bits: vec![4, 8] },
+    );
     let full = reference(&spec);
     let workers = spawn_workers(2);
     let report = dispatch(&spec, &addrs(&workers), &opts(5)).expect("overpartitioned dispatch");
