@@ -1,0 +1,117 @@
+//! Bench: the serving request path end to end on the sim backend — the
+//! default-build coordinator under a mixed class/deadline request load.
+//!
+//! Measures what the serving redesign makes measurable without PJRT:
+//! submit→batch→pick→execute→reply wall-clock throughput and latency
+//! percentiles, the config mix the bit-fluid controller produces, and the
+//! deadline met fraction. Results are exported to `BENCH_serving.json` at
+//! the repo root so CI tracks the serving trajectory PR-over-PR (the
+//! serving counterpart of `perf_hotpath`'s `BENCH_dse.json`).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+use bf_imna::coordinator::{Budget, Coordinator, CoordinatorConfig};
+use bf_imna::util::benchkit::banner;
+use bf_imna::util::json::Json;
+use bf_imna::util::rng::Rng;
+use bf_imna::util::table::{fmt_eng, Table};
+
+const REQUESTS: usize = 256;
+
+fn main() {
+    banner("Serving request path (sim backend, mixed budgets + deadlines)");
+    let coord = Coordinator::start_sim(CoordinatorConfig::default(), 0.0)
+        .expect("sim-backed coordinator starts in the default build");
+    println!(
+        "configs (descending quality): [{}]; sending {REQUESTS} requests",
+        coord.configs().join(", ")
+    );
+
+    let elems = coord.sample_elems();
+    let mut rng = Rng::new(42);
+    let budgets = [Budget::Low, Budget::Medium, Budget::High];
+    let t0 = Instant::now();
+    let pendings: Vec<_> = (0..REQUESTS)
+        .map(|i| {
+            let x: Vec<f32> = (0..elems).map(|_| rng.f64() as f32 * 2.0 - 1.0).collect();
+            if i % 4 == 3 {
+                // Every fourth request carries an explicit deadline drawn
+                // from a deterministic ladder of targets.
+                coord
+                    .request(x)
+                    .deadline(Duration::from_micros(50 + 200 * (i % 5) as u64))
+                    .submit()
+                    .expect("submit")
+            } else {
+                coord.submit(x, budgets[i % 3]).expect("submit")
+            }
+        })
+        .collect();
+
+    let mut per_config: BTreeMap<String, u64> = BTreeMap::new();
+    let mut met = 0usize;
+    for p in pendings {
+        let r = p.wait().expect("response");
+        met += usize::from(r.met_deadline);
+        *per_config.entry(r.config).or_default() += 1;
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    let m = coord.metrics();
+    assert_eq!(m.completed as usize, REQUESTS, "every request must complete");
+    assert_eq!(m.failed, 0, "sim backend must not fail executions");
+
+    let rps = REQUESTS as f64 / wall_s;
+    let p50 = m.latency_p(0.5);
+    let p99 = m.latency_p(0.99);
+    let mut t = Table::new(vec!["metric", "value"]);
+    t.row(vec!["requests".to_string(), REQUESTS.to_string()]);
+    t.row(vec!["wall".to_string(), format!("{} s", fmt_eng(wall_s, 3))]);
+    t.row(vec!["throughput".to_string(), format!("{rps:.0} req/s")]);
+    t.row(vec!["batches".to_string(), m.batches.to_string()]);
+    t.row(vec!["batch occupancy".to_string(), format!("{:.0}%", 100.0 * m.batch_occupancy())]);
+    t.row(vec!["p50 latency".to_string(), format!("{} s", fmt_eng(p50, 3))]);
+    t.row(vec!["p99 latency".to_string(), format!("{} s", fmt_eng(p99, 3))]);
+    t.row(vec!["deadlines met".to_string(), format!("{met}/{REQUESTS}")]);
+    for (cfg, count) in &per_config {
+        t.row(vec![format!("served by {cfg}"), count.to_string()]);
+    }
+    print!("{}", t.render());
+
+    write_bench_json(wall_s, rps, p50, p99, met, &m, &per_config);
+}
+
+/// Export the serving timings as canonical JSON at the repo root so CI can
+/// archive the serving-perf trajectory PR-over-PR.
+fn write_bench_json(
+    wall_s: f64,
+    rps: f64,
+    p50: f64,
+    p99: f64,
+    met: usize,
+    m: &bf_imna::coordinator::Metrics,
+    per_config: &BTreeMap<String, u64>,
+) {
+    let doc = Json::obj([
+        ("bench", Json::str("perf_serving/request_path")),
+        ("backend", Json::str("sim")),
+        ("requests", Json::num(REQUESTS as f64)),
+        ("wall_s", Json::num(wall_s)),
+        ("throughput_rps", Json::num(rps)),
+        ("latency_p50_s", Json::num(p50)),
+        ("latency_p99_s", Json::num(p99)),
+        ("batches", Json::num(m.batches as f64)),
+        ("batch_occupancy", Json::num(m.batch_occupancy())),
+        ("deadline_met_frac", Json::num(met as f64 / REQUESTS as f64)),
+        (
+            "per_config",
+            Json::obj(per_config.iter().map(|(k, &v)| (k.clone(), Json::num(v as f64)))),
+        ),
+    ]);
+    let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("BENCH_serving.json");
+    match std::fs::write(&path, format!("{doc}\n")) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write {}: {e}", path.display()),
+    }
+}

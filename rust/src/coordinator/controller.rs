@@ -38,6 +38,40 @@ impl Budget {
             Budget::High => "high",
         }
     }
+
+    /// Parse a class label (the inverse of [`Self::label`]).
+    pub fn parse(s: &str) -> Result<Budget, String> {
+        match s {
+            "low" => Ok(Budget::Low),
+            "medium" => Ok(Budget::Medium),
+            "high" => Ok(Budget::High),
+            other => Err(format!("unknown budget class '{other}' (low|medium|high)")),
+        }
+    }
+}
+
+/// How a request constrains latency at the API boundary: one of the three
+/// Table VII classes, or an **explicit deadline** — the open end of the
+/// budget API. Classes resolve to the coordinator's configured
+/// [`BudgetTargets`]; a deadline is its own target, so the precision
+/// controller picks against the caller's real latency requirement instead
+/// of a fixed class bucket.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BudgetSpec {
+    /// A Table VII latency-budget class.
+    Class(Budget),
+    /// An explicit end-to-end latency target for this request.
+    Deadline(Duration),
+}
+
+impl BudgetSpec {
+    /// Human-readable form (`low`, `deadline(12.5ms)`, ...).
+    pub fn label(&self) -> String {
+        match self {
+            BudgetSpec::Class(b) => b.label().to_string(),
+            BudgetSpec::Deadline(d) => format!("deadline({:.3}ms)", d.as_secs_f64() * 1e3),
+        }
+    }
 }
 
 /// Per-budget latency targets.
@@ -144,16 +178,38 @@ impl PrecisionController {
         *e = (1.0 - EMA_ALPHA) * *e + EMA_ALPHA * seconds;
     }
 
-    /// Pick the highest-quality config whose predicted latency fits the
-    /// budget at this batch size; falls back to the cheapest config.
-    pub fn pick(&self, budget: Budget, batch: u64) -> String {
-        let target = self.targets.target(budget).as_secs_f64() * MARGIN;
+    /// The effective latency target of a budget spec: classes resolve to
+    /// the configured [`BudgetTargets`]; deadlines are their own target.
+    pub fn target_for(&self, spec: &BudgetSpec) -> Duration {
+        match spec {
+            BudgetSpec::Class(b) => self.targets.target(*b),
+            BudgetSpec::Deadline(d) => *d,
+        }
+    }
+
+    /// Pick the highest-quality config whose predicted latency fits an
+    /// explicit latency target at this batch size (with the safety
+    /// margin); falls back to the cheapest config. This is the single
+    /// selection path — classes and deadlines both funnel through it.
+    pub fn pick_target(&self, target: Duration, batch: u64) -> String {
+        let target = target.as_secs_f64() * MARGIN;
         for config in &self.ladder {
             if self.predict(config, batch) <= target {
                 return config.clone();
             }
         }
         self.ladder.last().cloned().unwrap_or_else(|| "int8".to_string())
+    }
+
+    /// Pick for a class budget ([`Self::pick_target`] at the class's
+    /// configured target).
+    pub fn pick(&self, budget: Budget, batch: u64) -> String {
+        self.pick_target(self.targets.target(budget), batch)
+    }
+
+    /// Pick for any budget spec (class or explicit deadline).
+    pub fn pick_spec(&self, spec: &BudgetSpec, batch: u64) -> String {
+        self.pick_target(self.target_for(spec), batch)
     }
 
     /// The quality ladder (descending bits).
@@ -268,5 +324,81 @@ mod tests {
     fn budget_labels() {
         assert_eq!(Budget::Low.label(), "low");
         assert_eq!(Budget::ALL.len(), 3);
+        for b in Budget::ALL {
+            assert_eq!(Budget::parse(b.label()).unwrap(), b);
+        }
+        assert!(Budget::parse("tight").is_err());
+    }
+
+    #[test]
+    fn deadline_targets_are_their_own_budget() {
+        let c = controller();
+        let spec = BudgetSpec::Deadline(Duration::from_millis(7));
+        assert_eq!(c.target_for(&spec), Duration::from_millis(7));
+        assert_eq!(
+            c.target_for(&BudgetSpec::Class(Budget::Low)),
+            Duration::from_millis(10),
+            "class specs resolve to the configured class target"
+        );
+    }
+
+    #[test]
+    fn explicit_deadlines_walk_the_ladder() {
+        let c = controller();
+        // Priors at batch 1: int4 = 4ms, mixed = 9ms, int8 = 16ms.
+        // A generous deadline keeps the top of the ladder...
+        assert_eq!(c.pick_spec(&BudgetSpec::Deadline(Duration::from_millis(100)), 1), "int8");
+        // ...a 12ms deadline (margin 0.9 -> 10.8ms effective) fits mixed
+        // but not int8...
+        assert_eq!(c.pick_spec(&BudgetSpec::Deadline(Duration::from_millis(12)), 1), "mixed");
+        // ...a 5ms deadline (4.5ms effective) only fits int4...
+        assert_eq!(c.pick_spec(&BudgetSpec::Deadline(Duration::from_millis(5)), 1), "int4");
+        // ...and an impossible deadline degrades to the cheapest config
+        // rather than erroring (flagged as missed on the response).
+        assert_eq!(c.pick_spec(&BudgetSpec::Deadline(Duration::from_nanos(1)), 1), "int4");
+    }
+
+    #[test]
+    fn deadline_picks_follow_observations_not_just_priors() {
+        let mut c = controller();
+        let d = BudgetSpec::Deadline(Duration::from_millis(12));
+        assert_eq!(c.pick_spec(&d, 1), "mixed");
+        // Measured int8 latency comes in far under its prior: the same
+        // deadline now affords full quality.
+        for _ in 0..20 {
+            c.observe("int8", 1, 0.002);
+        }
+        assert_eq!(c.pick_spec(&d, 1), "int8");
+        // And a measured regression on mixed pushes a mid deadline down
+        // the ladder.
+        let mut c2 = controller();
+        for _ in 0..20 {
+            c2.observe("mixed", 1, 0.050);
+        }
+        assert_eq!(c2.pick_spec(&d, 1), "int4");
+    }
+
+    #[test]
+    fn class_and_deadline_picks_agree_at_equal_targets() {
+        let c = controller();
+        for (class, batch) in
+            [(Budget::Low, 1u64), (Budget::Medium, 1), (Budget::High, 4), (Budget::Low, 8)]
+        {
+            let target = c.targets().target(class);
+            assert_eq!(
+                c.pick(class, batch),
+                c.pick_spec(&BudgetSpec::Deadline(target), batch),
+                "class {class:?} at batch {batch}"
+            );
+        }
+    }
+
+    #[test]
+    fn budget_spec_labels() {
+        assert_eq!(BudgetSpec::Class(Budget::Medium).label(), "medium");
+        assert_eq!(
+            BudgetSpec::Deadline(Duration::from_millis(12)).label(),
+            "deadline(12.000ms)"
+        );
     }
 }

@@ -1,9 +1,16 @@
-//! Serving metrics: request counts, latency distribution, per-config and
-//! per-batch-size usage.
+//! Serving metrics: request counts, latency distribution, deadline
+//! outcomes, per-config and per-batch-size usage.
 
 use std::collections::BTreeMap;
 
+use crate::util::json::Json;
 use crate::util::stats;
+
+/// Retained latency samples per distribution (a sliding window): the
+/// serving process is long-running, so sample storage must be bounded —
+/// percentiles are over the most recent window, counters stay exact, and
+/// a metrics snapshot stays cheap to clone under the worker's mutex.
+pub const LATENCY_WINDOW: usize = 4096;
 
 /// Aggregated serving metrics (guarded by a mutex in the coordinator).
 #[derive(Debug, Default, Clone)]
@@ -12,18 +19,35 @@ pub struct Metrics {
     pub completed: u64,
     /// Requests that failed (runtime error surfaced to the client).
     pub failed: u64,
+    /// Completed requests whose end-to-end latency met their effective
+    /// target (explicit deadline, or class target).
+    pub deadline_met: u64,
+    /// Completed requests flagged as having missed their target.
+    pub deadline_missed: u64,
     /// Executed batches.
     pub batches: u64,
     /// Total samples padded (wasted work in partial batches).
     pub padded_samples: u64,
-    /// End-to-end per-request latency samples, seconds.
+    /// End-to-end per-request latency samples, seconds — the most recent
+    /// [`LATENCY_WINDOW`] of them (older samples are overwritten).
     pub request_latencies: Vec<f64>,
-    /// Executor (PJRT execute only) per-batch latency samples, seconds.
+    /// Executor (backend execute only) per-batch latency samples, seconds
+    /// — the most recent [`LATENCY_WINDOW`] of them.
     pub execute_latencies: Vec<f64>,
     /// Requests served per precision config.
     pub per_config: BTreeMap<String, u64>,
     /// Batches executed per compiled batch size.
     pub per_batch_size: BTreeMap<u64, u64>,
+}
+
+/// Push into a bounded ring: grow until `LATENCY_WINDOW`, then overwrite
+/// round-robin (`count` is the 1-based total ever recorded).
+fn push_windowed(window: &mut Vec<f64>, count: u64, sample: f64) {
+    if window.len() < LATENCY_WINDOW {
+        window.push(sample);
+    } else {
+        window[(count - 1) as usize % LATENCY_WINDOW] = sample;
+    }
 }
 
 impl Metrics {
@@ -37,15 +61,21 @@ impl Metrics {
     ) {
         self.batches += 1;
         self.padded_samples += compiled_batch - real_samples;
-        self.execute_latencies.push(execute_s);
+        push_windowed(&mut self.execute_latencies, self.batches, execute_s);
         *self.per_config.entry(config.to_string()).or_default() += real_samples;
         *self.per_batch_size.entry(compiled_batch).or_default() += 1;
     }
 
-    /// Record one completed request with its end-to-end latency.
-    pub fn record_request(&mut self, latency_s: f64) {
+    /// Record one completed request with its end-to-end latency and
+    /// whether it met its effective latency target.
+    pub fn record_request(&mut self, latency_s: f64, met_deadline: bool) {
         self.completed += 1;
-        self.request_latencies.push(latency_s);
+        if met_deadline {
+            self.deadline_met += 1;
+        } else {
+            self.deadline_missed += 1;
+        }
+        push_windowed(&mut self.request_latencies, self.completed, latency_s);
     }
 
     /// Latency percentile over completed requests, seconds.
@@ -77,6 +107,39 @@ impl Metrics {
             0.0
         }
     }
+
+    /// Fraction of completed requests that met their target (1.0 when
+    /// nothing completed yet).
+    pub fn deadline_met_frac(&self) -> f64 {
+        if self.completed > 0 {
+            self.deadline_met as f64 / self.completed as f64
+        } else {
+            1.0
+        }
+    }
+
+    /// The `GET /stats` document of the serving front end (`uptime_s`
+    /// feeds the throughput figure).
+    pub fn to_json(&self, uptime_s: f64) -> Json {
+        Json::obj([
+            ("completed", Json::num(self.completed as f64)),
+            ("failed", Json::num(self.failed as f64)),
+            ("deadline_met", Json::num(self.deadline_met as f64)),
+            ("deadline_missed", Json::num(self.deadline_missed as f64)),
+            ("batches", Json::num(self.batches as f64)),
+            ("batch_occupancy", Json::num(self.batch_occupancy())),
+            ("latency_p50_s", Json::num(self.latency_p(0.5))),
+            ("latency_p99_s", Json::num(self.latency_p(0.99))),
+            ("uptime_s", Json::num(uptime_s)),
+            ("throughput_rps", Json::num(self.throughput(uptime_s))),
+            (
+                "per_config",
+                Json::obj(
+                    self.per_config.iter().map(|(k, &v)| (k.clone(), Json::num(v as f64))),
+                ),
+            ),
+        ])
+    }
 }
 
 #[cfg(test)]
@@ -88,14 +151,17 @@ mod tests {
         let mut m = Metrics::default();
         m.record_batch("int8", 4, 3, 0.01);
         m.record_batch("int4", 8, 8, 0.02);
-        m.record_request(0.05);
-        m.record_request(0.15);
+        m.record_request(0.05, true);
+        m.record_request(0.15, false);
         assert_eq!(m.batches, 2);
         assert_eq!(m.padded_samples, 1);
         assert_eq!(m.per_config["int8"], 3);
         assert_eq!(m.per_config["int4"], 8);
         assert_eq!(m.per_batch_size[&8], 1);
         assert_eq!(m.completed, 2);
+        assert_eq!(m.deadline_met, 1);
+        assert_eq!(m.deadline_missed, 1);
+        assert!((m.deadline_met_frac() - 0.5).abs() < 1e-12);
         assert!((m.latency_mean() - 0.10).abs() < 1e-12);
         assert!((m.batch_occupancy() - 11.0 / 12.0).abs() < 1e-12);
     }
@@ -106,14 +172,51 @@ mod tests {
         assert_eq!(m.latency_p(0.99), 0.0);
         assert_eq!(m.throughput(1.0), 0.0);
         assert_eq!(m.batch_occupancy(), 0.0);
+        assert_eq!(m.deadline_met_frac(), 1.0);
     }
 
     #[test]
     fn percentiles_order() {
         let mut m = Metrics::default();
         for i in 1..=100 {
-            m.record_request(i as f64 / 100.0);
+            m.record_request(i as f64 / 100.0, true);
         }
         assert!(m.latency_p(0.5) < m.latency_p(0.99));
+    }
+
+    #[test]
+    fn latency_windows_stay_bounded_while_counters_stay_exact() {
+        let mut m = Metrics::default();
+        for i in 0..(LATENCY_WINDOW as u64 + 500) {
+            m.record_request(i as f64, true);
+            m.record_batch("int8", 1, 1, i as f64);
+        }
+        assert_eq!(m.request_latencies.len(), LATENCY_WINDOW);
+        assert_eq!(m.execute_latencies.len(), LATENCY_WINDOW);
+        assert_eq!(m.completed, LATENCY_WINDOW as u64 + 500);
+        assert_eq!(m.batches, LATENCY_WINDOW as u64 + 500);
+        // The ring holds the most recent samples: the 500 oldest were
+        // overwritten, the 501st survives, and the newest is present.
+        assert!(!m.request_latencies.contains(&0.0));
+        assert!(!m.request_latencies.contains(&499.0));
+        assert!(m.request_latencies.contains(&500.0));
+        assert!(m.request_latencies.contains(&((LATENCY_WINDOW as u64 + 499) as f64)));
+    }
+
+    #[test]
+    fn stats_document_carries_the_serving_story() {
+        let mut m = Metrics::default();
+        m.record_batch("int8", 4, 4, 0.01);
+        for _ in 0..4 {
+            m.record_request(0.02, true);
+        }
+        let doc = m.to_json(2.0);
+        assert_eq!(doc.get("completed").and_then(Json::as_i64), Some(4));
+        assert_eq!(doc.get("deadline_met").and_then(Json::as_i64), Some(4));
+        assert_eq!(doc.get("throughput_rps").and_then(Json::as_f64), Some(2.0));
+        assert_eq!(
+            doc.get("per_config").and_then(|c| c.get("int8")).and_then(Json::as_i64),
+            Some(4)
+        );
     }
 }

@@ -1,31 +1,40 @@
 //! The bit-fluid serving coordinator (Layer 3's request path).
 //!
-//! A vLLM-router-shaped runtime around the PJRT executables:
+//! A vLLM-router-shaped runtime around a pluggable [`InferenceBackend`]:
 //!
 //! ```text
-//!  clients ──submit(input, budget)──► queue ──► batcher ─► precision
-//!                                                │         controller
-//!                                                ▼             │
-//!                                     worker thread (owns the PJRT
-//!                                     Runtime; executes the chosen
-//!                                     (config, batch) artifact) ──► replies
+//!  clients ──request(input).deadline(..).submit()──► queue ──► batcher
+//!                                                     │          │
+//!                                                     ▼          ▼
+//!                                      worker thread (owns the backend:
+//!                                      SimBackend by default, PJRT with
+//!                                      --features pjrt) ◄── precision
+//!                                                           controller
 //! ```
 //!
 //! * **Dynamic batcher** — requests are pulled off the queue until the
 //!   batch window closes or the largest compiled batch fills, then padded
-//!   to the nearest compiled batch size.
-//! * **Bit-fluid precision controller** — per batch, the strictest budget
-//!   in the batch picks the precision configuration
-//!   ([`controller::PrecisionController`]); switching configs is just
-//!   executing a different pre-compiled artifact — the serving analogue of
-//!   the AP's zero-overhead precision switch.
-//! * **Worker** — a single thread owns the PJRT runtime (executables are
+//!   to the nearest compiled batch size. Higher-[`Priority`] requests are
+//!   served first when more requests wait than a batch can carry, and a
+//!   request's `batch_hint` caps how large a compiled batch it rides in.
+//! * **Bit-fluid precision controller** — per batch, the tightest
+//!   effective latency target (a [`Budget`] class's configured target or a
+//!   request's explicit [`BudgetSpec::Deadline`]) picks the precision
+//!   configuration ([`controller::PrecisionController`]); switching
+//!   configs is just executing a different pre-compiled artifact — the
+//!   serving analogue of the AP's zero-overhead precision switch.
+//! * **Worker** — a single thread owns the backend (PJRT executables are
 //!   not shared across threads) and executes batches back to back.
 //!
-//! Python never runs here: artifacts were lowered at build time.
+//! The default build serves through [`SimBackend`] — batches execute
+//! against the BF-IMNA latency models with a deterministic functional
+//! stand-in — so the whole request path runs, and is testable, without
+//! `--features pjrt`. `bf-imna serve` puts this coordinator on the wire
+//! (see [`server`]); Python never runs here.
 
 pub mod controller;
 pub mod metrics;
+pub mod server;
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -35,21 +44,129 @@ use std::time::{Duration, Instant};
 
 use crate::util::error::{anyhow, Result};
 
-pub use controller::{Budget, BudgetTargets, PrecisionController};
+pub use controller::{Budget, BudgetSpec, BudgetTargets, PrecisionController};
 pub use metrics::Metrics;
+pub use server::ServingServer;
 
 use crate::model::zoo;
 use crate::precision::{LayerPrec, PrecisionConfig};
-use crate::runtime::{pad_batch, Manifest, Runtime};
+use crate::runtime::{pad_batch, InferenceBackend, Manifest, Runtime, SimBackend};
 use crate::sim::{SimParams, SweepEngine, SweepPoint};
+
+/// Scheduling priority of a request: when more requests are waiting than a
+/// batch can carry, higher priorities board first.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Priority {
+    /// Board last.
+    Low,
+    /// The default.
+    #[default]
+    Normal,
+    /// Board first.
+    High,
+}
+
+impl Priority {
+    /// Label used in logs and the wire protocol.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Priority::Low => "low",
+            Priority::Normal => "normal",
+            Priority::High => "high",
+        }
+    }
+
+    /// Parse a priority label (inverse of [`Self::label`]).
+    pub fn parse(s: &str) -> Result<Priority, String> {
+        match s {
+            "low" => Ok(Priority::Low),
+            "normal" => Ok(Priority::Normal),
+            "high" => Ok(Priority::High),
+            other => Err(format!("unknown priority '{other}' (low|normal|high)")),
+        }
+    }
+}
+
+/// The declarative request descriptor the serving API accepts — built
+/// fluently via [`Coordinator::request`], or directly for wire fronts.
+#[derive(Debug, Clone)]
+pub struct RequestSpec {
+    /// Latency constraint: a class or an explicit deadline.
+    pub budget: BudgetSpec,
+    /// Scheduling priority.
+    pub priority: Priority,
+    /// Largest compiled batch this request is willing to ride in (a
+    /// latency-sensitive caller hints `1` to avoid large-batch padding
+    /// delays). `None` leaves batching to the coordinator.
+    pub batch_hint: Option<u64>,
+}
+
+impl Default for RequestSpec {
+    /// Loosest class, normal priority, no batch hint.
+    fn default() -> Self {
+        RequestSpec {
+            budget: BudgetSpec::Class(Budget::High),
+            priority: Priority::Normal,
+            batch_hint: None,
+        }
+    }
+}
+
+/// Fluent request builder: `coordinator.request(input).deadline(d)
+/// .priority(Priority::High).submit()`.
+pub struct RequestBuilder<'a> {
+    coordinator: &'a Coordinator,
+    input: Vec<f32>,
+    spec: RequestSpec,
+}
+
+impl RequestBuilder<'_> {
+    /// Constrain by a Table VII budget class.
+    pub fn class(mut self, b: Budget) -> Self {
+        self.spec.budget = BudgetSpec::Class(b);
+        self
+    }
+
+    /// Constrain by an explicit end-to-end deadline.
+    pub fn deadline(mut self, d: Duration) -> Self {
+        self.spec.budget = BudgetSpec::Deadline(d);
+        self
+    }
+
+    /// Set the scheduling priority.
+    pub fn priority(mut self, p: Priority) -> Self {
+        self.spec.priority = p;
+        self
+    }
+
+    /// Cap the compiled batch size this request rides in (clamped ≥ 1).
+    pub fn batch_hint(mut self, n: u64) -> Self {
+        self.spec.batch_hint = Some(n.max(1));
+        self
+    }
+
+    /// Submit the request; returns a [`Pending`] handle.
+    pub fn submit(self) -> Result<Pending> {
+        self.coordinator.submit_spec(self.input, self.spec)
+    }
+}
 
 /// One inference request.
 struct Request {
     input: Vec<f32>,
-    budget: Budget,
+    spec: RequestSpec,
     submitted: Instant,
+    /// How many times the batcher has carved this request out of a formed
+    /// batch; at [`CARVE_PROMOTE_LIMIT`] it boards unconditionally, so a
+    /// low-priority hinter cannot starve under sustained traffic.
+    carved: u32,
     reply: mpsc::Sender<Result<Response, String>>,
 }
+
+/// After this many carves a request is promoted to the head of the
+/// boarding order regardless of priority — the starvation bound for
+/// low-priority batch-hint requests under sustained higher-priority load.
+const CARVE_PROMOTE_LIMIT: u32 = 8;
 
 /// One inference response.
 #[derive(Debug, Clone)]
@@ -62,6 +179,12 @@ pub struct Response {
     pub batch: u64,
     /// End-to-end latency (submit -> reply), seconds.
     pub latency_s: f64,
+    /// The effective latency target the request carried (its explicit
+    /// deadline, or its class's configured target), seconds.
+    pub target_s: f64,
+    /// Whether the end-to-end latency met the target. Missed deadlines are
+    /// flagged, never dropped — the response still carries full logits.
+    pub met_deadline: bool,
 }
 
 /// A pending response handle.
@@ -95,7 +218,8 @@ pub struct CoordinatorConfig {
     pub configs: Vec<String>,
     /// How long the batcher waits to fill a batch.
     pub batch_window: Duration,
-    /// Per-budget latency targets for the precision controller.
+    /// Per-budget-class latency targets for the precision controller
+    /// (explicit [`BudgetSpec::Deadline`] requests bypass these).
     pub targets: BudgetTargets,
     /// Run one warmup execution per (config, batch) at startup so the
     /// controller starts from measured latencies instead of priors.
@@ -103,9 +227,10 @@ pub struct CoordinatorConfig {
     /// Pin a precision config per budget class, bypassing the measured-
     /// latency controller. This is the Table VII mode: HAWQ-V3 names the
     /// configuration for each latency budget and BF-IMNA just switches.
-    /// (Also the right mode on this CPU testbed, where interpret-mode
+    /// (Also the right mode on the CPU-PJRT testbed, where interpret-mode
     /// bit-plane kernels invert the hardware's latency ordering — on the
     /// real AP fewer bits are faster; on CPU they unroll more matmuls.)
+    /// Deadline-carrying requests always go through the controller.
     pub pinned: BTreeMap<Budget, String>,
 }
 
@@ -133,38 +258,68 @@ pub struct Coordinator {
 }
 
 impl Coordinator {
-    /// Start the coordinator: loads + compiles artifacts on the worker
-    /// thread, optionally calibrates, then serves until dropped.
+    /// Start the coordinator over the artifact-loading [`Runtime`] (PJRT
+    /// with `--features pjrt`, the erroring stub otherwise): loads +
+    /// compiles artifacts on the worker thread, optionally calibrates,
+    /// then serves until dropped.
     pub fn start(artifact_dir: &Path, cfg: CoordinatorConfig) -> Result<Coordinator> {
+        let dir = artifact_dir.to_path_buf();
+        let configs = cfg.configs.clone();
+        Self::start_backend(cfg, move || {
+            let runtime = if configs.is_empty() {
+                Runtime::load(&dir)?
+            } else {
+                let names: Vec<&str> = configs.iter().map(String::as_str).collect();
+                Runtime::load_configs(&dir, &names)?
+            };
+            Ok(Box::new(runtime) as Box<dyn InferenceBackend>)
+        })
+    }
+
+    /// Start the coordinator over the default [`SimBackend`] — the
+    /// no-artifacts, no-`pjrt` path. `time_scale` paces each execution at
+    /// `modeled latency x scale` of wall-clock (0.0 = no pacing; right
+    /// for tests and benches).
+    pub fn start_sim(cfg: CoordinatorConfig, time_scale: f64) -> Result<Coordinator> {
+        let configs = cfg.configs.clone();
+        Self::start_backend(cfg, move || {
+            let mut backend = SimBackend::serve_cnn(time_scale);
+            if !configs.is_empty() {
+                backend.retain_configs(&configs)?;
+            }
+            Ok(Box::new(backend) as Box<dyn InferenceBackend>)
+        })
+    }
+
+    /// Start the coordinator over any backend. The factory runs **on the
+    /// worker thread** (PJRT executables must not cross threads), so only
+    /// the factory — not the backend — needs to be `Send`.
+    pub fn start_backend<F>(cfg: CoordinatorConfig, make: F) -> Result<Coordinator>
+    where
+        F: FnOnce() -> Result<Box<dyn InferenceBackend>> + Send + 'static,
+    {
         let (tx, rx) = mpsc::channel::<Request>();
         let metrics = Arc::new(Mutex::new(Metrics::default()));
         let metrics_worker = Arc::clone(&metrics);
-        let dir = artifact_dir.to_path_buf();
 
-        // The worker owns the PJRT runtime; report startup via a channel.
+        // The worker owns the backend; report startup via a channel.
         let (ready_tx, ready_rx) = mpsc::channel::<Result<(usize, usize, Vec<String>), String>>();
         std::thread::Builder::new()
             .name("bf-imna-worker".into())
             .spawn(move || {
-                let runtime = if cfg.configs.is_empty() {
-                    Runtime::load(&dir)
-                } else {
-                    let names: Vec<&str> = cfg.configs.iter().map(String::as_str).collect();
-                    Runtime::load_configs(&dir, &names)
-                };
-                let runtime = match runtime {
-                    Ok(r) => r,
+                let backend = match make() {
+                    Ok(b) => b,
                     Err(e) => {
                         let _ = ready_tx.send(Err(format!("{e:#}")));
                         return;
                     }
                 };
-                let m = runtime.manifest();
+                let m = backend.manifest();
                 let ladder = m.quality_ladder();
-                let avg_bits: BTreeMap<String, f64> = runtime
+                let avg_bits: BTreeMap<String, f64> = backend
                     .compiled_keys()
                     .iter()
-                    .filter_map(|(c, b)| runtime.entry(c, *b).map(|e| (c.clone(), e.avg_bits)))
+                    .filter_map(|(c, b)| backend.entry(c, *b).map(|e| (c.clone(), e.avg_bits)))
                     .collect();
                 let _ = ready_tx.send(Ok((
                     m.sample_elems(),
@@ -174,11 +329,14 @@ impl Coordinator {
                 // Seed the latency priors from the BF-IMNA simulator: every
                 // manifest config fans through the sweep engine on the serve
                 // CNN, and the relative simulated latencies become the
-                // prior scales. Only trust them when every ladder config got
-                // one — a partial map would leave the missing configs at
-                // scale 1.0 (predicted as fast as the fastest), so mixed
-                // manifests fall back to the avg-bits² heuristic entirely.
-                let sim_scales = sim_prior_scales(m);
+                // prior scales (with the fastest config's simulated latency
+                // as the absolute base, so `predict` starts out equal to
+                // the simulator's estimate). Only trust them when every
+                // ladder config got one — a partial map would leave the
+                // missing configs at scale 1.0 (predicted as fast as the
+                // fastest), so mixed manifests fall back to the avg-bits²
+                // heuristic entirely.
+                let (sim_scales, sim_base_s) = sim_prior_scales(m);
                 let covers_ladder = !sim_scales.is_empty()
                     && ladder.iter().all(|c| sim_scales.contains_key(c));
                 let mut controller = if covers_ladder {
@@ -186,16 +344,16 @@ impl Coordinator {
                         ladder,
                         sim_scales,
                         cfg.targets.clone(),
-                        0.005,
+                        sim_base_s,
                     )
                 } else {
                     PrecisionController::new(ladder, &avg_bits, cfg.targets.clone(), 0.005)
                 };
                 if cfg.calibrate {
-                    calibrate(&runtime, &mut controller);
+                    calibrate(backend.as_ref(), &mut controller);
                 }
                 worker_loop(
-                    runtime,
+                    backend,
                     controller,
                     cfg.pinned.clone(),
                     rx,
@@ -212,8 +370,13 @@ impl Coordinator {
         Ok(Coordinator { tx, metrics, sample_elems, num_classes, configs, started: Instant::now() })
     }
 
-    /// Submit one sample under a latency budget; returns a handle.
-    pub fn submit(&self, input: Vec<f32>, budget: Budget) -> Result<Pending> {
+    /// Begin a fluent request: `coord.request(x).deadline(d).submit()`.
+    pub fn request(&self, input: Vec<f32>) -> RequestBuilder<'_> {
+        RequestBuilder { coordinator: self, input, spec: RequestSpec::default() }
+    }
+
+    /// Submit one sample under a full request descriptor.
+    pub fn submit_spec(&self, input: Vec<f32>, spec: RequestSpec) -> Result<Pending> {
         if input.len() != self.sample_elems {
             return Err(anyhow!(
                 "input has {} elements, model expects {}",
@@ -223,12 +386,21 @@ impl Coordinator {
         }
         let (reply, rx) = mpsc::channel();
         self.tx
-            .send(Request { input, budget, submitted: Instant::now(), reply })
+            .send(Request { input, spec, submitted: Instant::now(), carved: 0, reply })
             .map_err(|_| anyhow!("coordinator is shut down"))?;
         Ok(Pending { rx })
     }
 
-    /// Blocking convenience: submit and wait.
+    /// Submit one sample under a class budget (convenience; equivalent to
+    /// `request(input).class(budget).submit()`).
+    pub fn submit(&self, input: Vec<f32>, budget: Budget) -> Result<Pending> {
+        self.submit_spec(
+            input,
+            RequestSpec { budget: BudgetSpec::Class(budget), ..RequestSpec::default() },
+        )
+    }
+
+    /// Blocking convenience: submit under a class budget and wait.
     pub fn infer(&self, input: Vec<f32>, budget: Budget) -> Result<Response> {
         self.submit(input, budget)?.wait()
     }
@@ -259,18 +431,20 @@ impl Coordinator {
     }
 }
 
-/// Relative simulated latency per manifest config, computed by fanning one
-/// BF-IMNA simulation point per config through a [`SweepEngine`] on the
-/// serve CNN: the plan cache collapses the shared layer/bits pairs and the
-/// points run in parallel, so this adds negligible startup cost. Returns
-/// an empty map when no config carries per-layer precision data.
-fn sim_prior_scales(manifest: &Manifest) -> BTreeMap<String, f64> {
+/// Relative simulated latency per manifest config plus the absolute
+/// latency of the fastest one (the controller's prior base), computed by
+/// fanning one BF-IMNA simulation point per config through a
+/// [`SweepEngine`] on the serve CNN: the plan cache collapses the shared
+/// layer/bits pairs and the points run in parallel, so this adds
+/// negligible startup cost. Returns an empty map when no config carries
+/// per-layer precision data.
+fn sim_prior_scales(manifest: &Manifest) -> (BTreeMap<String, f64>, f64) {
     let net = zoo::serve_cnn();
     // The simulated priors are only meaningful for the network the
     // artifacts were exported from; other models fall back to the
     // avg-bits² heuristic in the caller.
     if manifest.model != net.name {
-        return BTreeMap::new();
+        return (BTreeMap::new(), 0.0);
     }
     let cfgs: Vec<PrecisionConfig> = manifest
         .configs
@@ -286,7 +460,7 @@ fn sim_prior_scales(manifest: &Manifest) -> BTreeMap<String, f64> {
         })
         .collect();
     if cfgs.is_empty() {
-        return BTreeMap::new();
+        return (BTreeMap::new(), 0.0);
     }
     let params = SimParams::lr_sram();
     let engine = SweepEngine::new();
@@ -303,22 +477,29 @@ fn sim_prior_scales(manifest: &Manifest) -> BTreeMap<String, f64> {
         .map(|r| r.latency_s())
         .fold(f64::MAX, f64::min)
         .max(1e-12);
-    cfgs.iter()
-        .zip(&reports)
-        .map(|(c, r)| (c.name.clone(), r.latency_s() / floor))
-        .collect()
+    (
+        cfgs.iter()
+            .zip(&reports)
+            .map(|(c, r)| (c.name.clone(), r.latency_s() / floor))
+            .collect(),
+        floor,
+    )
 }
 
 /// Warm up every compiled (config, batch) pair once and seed the
 /// controller's latency model with the measurements.
-fn calibrate(runtime: &Runtime, controller: &mut PrecisionController) {
-    let elems = runtime.manifest().sample_elems();
-    for (config, batch) in runtime.compiled_keys() {
+fn calibrate(backend: &dyn InferenceBackend, controller: &mut PrecisionController) {
+    let elems = backend.manifest().sample_elems();
+    for (config, batch) in backend.compiled_keys() {
         let input = vec![0.1f32; batch as usize * elems];
         let t0 = Instant::now();
-        if runtime.infer(&config, batch, &input).is_ok() {
-            // Feed several observations so the EMA settles on the sample.
-            let dt = t0.elapsed().as_secs_f64();
+        if backend.infer(&config, batch, &input).is_ok() {
+            // Feed several observations so the EMA settles on the sample —
+            // the backend's own latency model when it has one (SimBackend),
+            // the measured wall clock otherwise.
+            let dt = backend
+                .modeled_latency_s(&config, batch)
+                .unwrap_or_else(|| t0.elapsed().as_secs_f64());
             for _ in 0..4 {
                 controller.observe(&config, batch, dt);
             }
@@ -326,23 +507,93 @@ fn calibrate(runtime: &Runtime, controller: &mut PrecisionController) {
     }
 }
 
+/// Order a formed batch for boarding: requests carved
+/// [`CARVE_PROMOTE_LIMIT`] times board first (the starvation bound), then
+/// highest priority; the sort is stable, so ties keep arrival order.
+fn order_by_priority(batch: &mut [Request]) {
+    batch.sort_by_key(|r| (r.carved < CARVE_PROMOTE_LIMIT, std::cmp::Reverse(r.spec.priority)));
+}
+
+/// The largest compiled batch size that does not exceed `hint` — a hint
+/// is a *cap*, so it rounds **down** through the manifest's compiled
+/// sizes (a hint below every compiled size clamps to the smallest one).
+fn batch_cap_for(manifest: &Manifest, hint: u64) -> u64 {
+    let mut sizes = manifest.batch_sizes.clone();
+    sizes.sort_unstable();
+    sizes
+        .iter()
+        .copied()
+        .filter(|&b| b <= hint)
+        .max()
+        .or_else(|| sizes.first().copied())
+        .unwrap_or(1)
+}
+
+/// The compiled batch size a formed batch should execute at: the smallest
+/// compiled size that fits it, further capped by the smallest
+/// `batch_hint` any member carries.
+fn compiled_batch_for(manifest: &Manifest, batch: &[Request]) -> u64 {
+    let mut compiled = manifest.batch_for(batch.len() as u64);
+    if let Some(h) = batch.iter().filter_map(|r| r.spec.batch_hint).min() {
+        let capped = batch_cap_for(manifest, h);
+        if capped < compiled {
+            compiled = capped;
+        }
+    }
+    compiled
+}
+
+/// Carve a formed (boarding-sorted) batch down to its compiled size: pop
+/// the lowest-ranked member to `carry`'s front while the batch overflows
+/// its hint-capped compiled size, **recomputing the cap after every pop**
+/// — a carved member's hint must not keep capping a batch it no longer
+/// rides in. So a lowest-priority hint-1 request yields both its seat
+/// *and its cap* to higher-priority traffic (which then executes at full
+/// batch size) until its carve count promotes it to the head of the
+/// boarding order, while an equal-or-higher-priority hinter keeps its
+/// seat and the batch is carved down around it to the size it asked for.
+/// Returns the compiled size of what remains.
+fn carve_to_cap(manifest: &Manifest, batch: &mut Vec<Request>, carry: &mut Vec<Request>) -> u64 {
+    loop {
+        let compiled = compiled_batch_for(manifest, batch);
+        if batch.len() <= compiled as usize {
+            return compiled;
+        }
+        let mut popped = batch.pop().expect("batch is non-empty");
+        popped.carved = popped.carved.saturating_add(1);
+        carry.insert(0, popped);
+    }
+}
+
 /// The batching + execution loop.
 fn worker_loop(
-    runtime: Runtime,
+    backend: Box<dyn InferenceBackend>,
     mut controller: PrecisionController,
     pinned: BTreeMap<Budget, String>,
     rx: mpsc::Receiver<Request>,
     metrics: Arc<Mutex<Metrics>>,
     batch_window: Duration,
 ) {
-    let manifest = runtime.manifest().clone();
+    let manifest = backend.manifest().clone();
     let elems = manifest.sample_elems();
     let classes = manifest.num_classes as usize;
     let max_batch = manifest.batch_sizes.iter().copied().max().unwrap_or(1) as usize;
 
-    while let Ok(first) = rx.recv() {
+    // Requests a batch-hint cap pushed out of a formed batch; they board
+    // the next one ahead of fresh arrivals.
+    let mut carry: Vec<Request> = Vec::new();
+    loop {
         // ---- Dynamic batching: fill until the window closes. ----
-        let mut batch = vec![first];
+        let mut batch: Vec<Request> = Vec::new();
+        while batch.len() < max_batch && !carry.is_empty() {
+            batch.push(carry.remove(0));
+        }
+        if batch.is_empty() {
+            match rx.recv() {
+                Ok(r) => batch.push(r),
+                Err(_) => break,
+            }
+        }
         let deadline = Instant::now() + batch_window;
         while batch.len() < max_batch {
             let now = Instant::now();
@@ -356,43 +607,72 @@ fn worker_loop(
             }
         }
 
-        // ---- Bit-fluid precision pick: strictest budget wins. ----
-        let strictest = batch.iter().map(|r| r.budget).min().unwrap_or(Budget::High);
-        let n = batch.len();
-        let compiled_batch = manifest.batch_for(n as u64);
-        let config = pinned
-            .get(&strictest)
-            .filter(|c| manifest.artifact(c, compiled_batch).is_some())
+        // ---- Boarding order + batch-hint cap: high priority first;
+        // over-cap requests (the lowest priorities, at the sorted tail)
+        // carry to the next batch, with the cap recomputed per carve so a
+        // carved hinter cannot collapse everyone else's batch. ----
+        order_by_priority(&mut batch);
+        let compiled = carve_to_cap(&manifest, &mut batch, &mut carry);
+
+        // ---- Bit-fluid precision pick: the tightest effective target in
+        // the batch drives selection. A pinned class config still wins,
+        // but only when the tightest constraint *is* that class —
+        // deadline-carrying requests always go through the controller. ----
+        let strictest_target = batch
+            .iter()
+            .map(|r| controller.target_for(&r.spec.budget))
+            .min()
+            .expect("batch is non-empty");
+        let strictest_class = batch
+            .iter()
+            .filter_map(|r| match r.spec.budget {
+                BudgetSpec::Class(b) => Some(b),
+                BudgetSpec::Deadline(_) => None,
+            })
+            .min();
+        let config = strictest_class
+            .filter(|b| controller.target_for(&BudgetSpec::Class(*b)) <= strictest_target)
+            .and_then(|b| pinned.get(&b))
+            .filter(|c| manifest.artifact(c, compiled).is_some())
             .cloned()
-            .unwrap_or_else(|| controller.pick(strictest, compiled_batch));
+            .unwrap_or_else(|| controller.pick_target(strictest_target, compiled));
 
         // ---- Execute. ----
+        let n = batch.len();
         let mut input = Vec::with_capacity(n * elems);
         for r in &batch {
             input.extend_from_slice(&r.input);
         }
-        let padded = pad_batch(&input, n, compiled_batch as usize, elems);
+        let padded = pad_batch(&input, n, compiled as usize, elems);
         let t0 = Instant::now();
-        let result = runtime.infer(&config, compiled_batch, &padded);
+        let result = backend.infer(&config, compiled, &padded);
         let exec_s = t0.elapsed().as_secs_f64();
-        controller.observe(&config, compiled_batch, exec_s);
+        // Model-driven backends report their own deterministic execution
+        // latency (so config choices under a fixed trace are reproducible);
+        // wall clock otherwise.
+        let observed = backend.modeled_latency_s(&config, compiled).unwrap_or(exec_s);
+        controller.observe(&config, compiled, observed);
 
         // ---- Reply + metrics. ----
         match result {
             Ok(logits) => {
                 {
                     let mut m = metrics.lock().unwrap();
-                    m.record_batch(&config, compiled_batch, n as u64, exec_s);
+                    m.record_batch(&config, compiled, n as u64, observed);
                 }
                 for (i, req) in batch.into_iter().enumerate() {
                     let latency_s = req.submitted.elapsed().as_secs_f64();
+                    let target_s = controller.target_for(&req.spec.budget).as_secs_f64();
+                    let met_deadline = latency_s <= target_s;
                     let row = logits[i * classes..(i + 1) * classes].to_vec();
-                    metrics.lock().unwrap().record_request(latency_s);
+                    metrics.lock().unwrap().record_request(latency_s, met_deadline);
                     let _ = req.reply.send(Ok(Response {
                         logits: row,
                         config: config.clone(),
-                        batch: compiled_batch,
+                        batch: compiled,
                         latency_s,
+                        target_s,
+                        met_deadline,
                     }));
                 }
             }
@@ -427,6 +707,133 @@ mod tests {
         assert!(Budget::Low < Budget::Medium && Budget::Medium < Budget::High);
     }
 
-    // Live coordinator tests (real PJRT execution) are in
+    #[test]
+    fn priorities_order_and_parse() {
+        assert!(Priority::Low < Priority::Normal && Priority::Normal < Priority::High);
+        assert_eq!(Priority::default(), Priority::Normal);
+        for p in [Priority::Low, Priority::Normal, Priority::High] {
+            assert_eq!(Priority::parse(p.label()).unwrap(), p);
+        }
+        assert!(Priority::parse("urgent").is_err());
+    }
+
+    fn dummy_request(priority: Priority, batch_hint: Option<u64>, tag: f32) -> Request {
+        let (reply, _rx) = mpsc::channel();
+        Request {
+            input: vec![tag],
+            spec: RequestSpec { priority, batch_hint, ..RequestSpec::default() },
+            submitted: Instant::now(),
+            carved: 0,
+            reply,
+        }
+    }
+
+    #[test]
+    fn priority_boarding_is_stable_highest_first() {
+        let mut batch = vec![
+            dummy_request(Priority::Normal, None, 0.0),
+            dummy_request(Priority::High, None, 1.0),
+            dummy_request(Priority::Low, None, 2.0),
+            dummy_request(Priority::High, None, 3.0),
+            dummy_request(Priority::Normal, None, 4.0),
+        ];
+        order_by_priority(&mut batch);
+        let tags: Vec<f32> = batch.iter().map(|r| r.input[0]).collect();
+        // High (arrival order 1, 3), then Normal (0, 4), then Low (2).
+        assert_eq!(tags, vec![1.0, 3.0, 0.0, 4.0, 2.0]);
+    }
+
+    #[test]
+    fn batch_hints_cap_the_compiled_batch() {
+        let manifest = crate::runtime::SimBackend::serve_manifest(); // sizes 1, 4, 8
+        let no_hints: Vec<Request> =
+            (0..6).map(|i| dummy_request(Priority::Normal, None, i as f32)).collect();
+        assert_eq!(compiled_batch_for(&manifest, &no_hints), 8);
+        let hinted: Vec<Request> = (0..6)
+            .map(|i| dummy_request(Priority::Normal, if i == 2 { Some(1) } else { None }, 0.0))
+            .collect();
+        // One member insists on batch 1: the whole batch is carved down.
+        assert_eq!(compiled_batch_for(&manifest, &hinted), 1);
+        let roomy: Vec<Request> =
+            (0..3).map(|_| dummy_request(Priority::Normal, Some(100), 0.0)).collect();
+        // Hints above every compiled size round down to the largest one —
+        // but never *up* past what the member count needs.
+        assert_eq!(compiled_batch_for(&manifest, &roomy), 4);
+        // A hint *between* compiled sizes is a cap, so it rounds DOWN:
+        // hint 2 with sizes [1,4,8] means batch 1, never batch 4.
+        assert_eq!(batch_cap_for(&manifest, 2), 1);
+        assert_eq!(batch_cap_for(&manifest, 4), 4);
+        assert_eq!(batch_cap_for(&manifest, 0), 1, "sub-minimum hints clamp to the smallest size");
+        let between: Vec<Request> =
+            (0..6).map(|_| dummy_request(Priority::Normal, Some(2), 0.0)).collect();
+        assert_eq!(compiled_batch_for(&manifest, &between), 1);
+    }
+
+    #[test]
+    fn a_repeatedly_carved_request_is_promoted_and_served() {
+        let manifest = crate::runtime::SimBackend::serve_manifest();
+        // A low-priority hint-1 request that has hit the carve limit
+        // boards ahead of everyone — the batch is carved down around it
+        // and it finally executes at the size it asked for.
+        let mut aged = dummy_request(Priority::Low, Some(1), 99.0);
+        aged.carved = CARVE_PROMOTE_LIMIT;
+        let mut batch: Vec<Request> =
+            (0..5).map(|i| dummy_request(Priority::Normal, None, i as f32)).collect();
+        batch.push(aged);
+        order_by_priority(&mut batch);
+        assert_eq!(batch[0].input[0], 99.0, "an aged request boards first");
+        let mut carry = Vec::new();
+        let compiled = carve_to_cap(&manifest, &mut batch, &mut carry);
+        assert_eq!(compiled, 1);
+        assert_eq!(batch.len(), 1);
+        assert_eq!(batch[0].input[0], 99.0, "the aged hinter is the one served");
+        assert_eq!(carry.len(), 5);
+        // And carving counts toward promotion: a fresh low-priority hinter
+        // accumulates carves on the way to the limit.
+        let mut batch: Vec<Request> =
+            (0..3).map(|i| dummy_request(Priority::Normal, None, i as f32)).collect();
+        batch.push(dummy_request(Priority::Low, Some(1), 50.0));
+        order_by_priority(&mut batch);
+        let mut carry = Vec::new();
+        carve_to_cap(&manifest, &mut batch, &mut carry);
+        assert_eq!(carry[0].input[0], 50.0);
+        assert_eq!(carry[0].carved, 1, "each carve is counted toward promotion");
+    }
+
+    #[test]
+    fn a_carved_low_priority_hinter_releases_its_cap() {
+        let manifest = crate::runtime::SimBackend::serve_manifest(); // sizes 1, 4, 8
+        // Five normal requests plus one low-priority hint-1 request: the
+        // hinter sorts last, is carved first, and — crucially — its cap
+        // goes with it, so the surviving batch executes at full size
+        // instead of collapsing to 1.
+        let mut batch: Vec<Request> =
+            (0..5).map(|i| dummy_request(Priority::Normal, None, i as f32)).collect();
+        batch.push(dummy_request(Priority::Low, Some(1), 99.0));
+        order_by_priority(&mut batch);
+        let mut carry = Vec::new();
+        let compiled = carve_to_cap(&manifest, &mut batch, &mut carry);
+        assert_eq!(compiled, 8, "the carved hinter's cap must not survive it");
+        assert_eq!(batch.len(), 5);
+        assert!(batch.iter().all(|r| r.spec.batch_hint.is_none()));
+        assert_eq!(carry.len(), 1);
+        assert_eq!(carry[0].input[0], 99.0);
+
+        // An equal-priority hinter keeps its seat instead: the batch is
+        // carved down around it to the size it asked for.
+        let mut batch: Vec<Request> =
+            vec![dummy_request(Priority::Normal, Some(1), 0.0)];
+        batch.extend((1..6).map(|i| dummy_request(Priority::Normal, None, i as f32)));
+        order_by_priority(&mut batch);
+        let mut carry = Vec::new();
+        let compiled = carve_to_cap(&manifest, &mut batch, &mut carry);
+        assert_eq!(compiled, 1);
+        assert_eq!(batch.len(), 1);
+        assert_eq!(batch[0].input[0], 0.0, "the hinter itself boards");
+        assert_eq!(carry.len(), 5);
+    }
+
+    // Live coordinator tests on the sim backend (default build) are in
+    // rust/tests/serving.rs; real-PJRT execution tests are in
     // rust/tests/coordinator_integration.rs.
 }

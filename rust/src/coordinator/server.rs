@@ -1,0 +1,545 @@
+//! The networked serving front end — the coordinator on the wire.
+//!
+//! Serving joins `sweep`/`dispatch` as a networked mode: [`ServingServer`]
+//! wraps a [`Coordinator`] in the same dependency-free HTTP/1.1 layer the
+//! sweep transport uses (`Content-Length` framing, hard head/body caps,
+//! whole-exchange deadline streams — see [`crate::sim::transport`]), with
+//! three endpoints:
+//!
+//! * `POST /infer` — one inference request ([`InferRequest`] JSON: the
+//!   input sample plus the full request descriptor — budget class or
+//!   explicit `deadline_ms`, priority, batch hint). The reply carries the
+//!   logits, the precision config that served it, and the
+//!   met-or-flagged-deadline verdict.
+//! * `GET /healthz` — liveness plus the model contract (sample element
+//!   count, class count, loaded config ladder), so clients can size their
+//!   inputs without out-of-band knowledge.
+//! * `GET /stats` — the serving [`Metrics`](super::Metrics) document
+//!   (completed/failed, deadline met/missed, latency percentiles,
+//!   throughput, per-config mix).
+//!
+//! CLI front ends: `bf-imna serve --addr HOST:PORT` (server) and
+//! `bf-imna infer --addr HOST:PORT` (client; also `--stats`). The client
+//! half of this module ([`infer_remote`], [`fetch_stats`],
+//! [`fetch_health`]) is what `bf-imna infer` calls.
+
+use std::io::{self, BufReader};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+
+use super::controller::{Budget, BudgetSpec};
+use super::{Coordinator, Priority, RequestSpec, Response};
+use crate::sim::transport::{
+    err_doc, http_request_json, read_request, write_response, AdmissionGate, DeadlineStream,
+    Request,
+};
+use crate::util::json::Json;
+
+/// Whole-exchange deadline for reading one `/infer` request and (with a
+/// fresh budget) writing one response — generous next to any sane request
+/// deadline, tight enough that a slowloris cannot hold a handler thread.
+const SERVE_EXCHANGE_DEADLINE: Duration = Duration::from_secs(120);
+
+/// How long a handler waits for the coordinator's reply before giving up
+/// with a 500 (the worker thread died or is wedged).
+const REPLY_DEADLINE: Duration = Duration::from_secs(300);
+
+/// Largest accepted `deadline_ms` (24 h). Anything above is a client
+/// error — and must be rejected *before* `Duration::from_secs_f64`, which
+/// panics on durations that overflow.
+pub const MAX_DEADLINE_MS: f64 = 86_400_000.0;
+
+/// Wire constant: the `code` the front end attaches to a `503` when its
+/// connection budget is exhausted — machine-readable backpressure, like
+/// the sweep worker's `worker-busy`.
+pub const CODE_SERVER_BUSY: &str = "server-busy";
+
+/// Admission control for the serving front end: a hard cap on concurrent
+/// connections (each holds one handler thread and, for `/infer`, one
+/// pending coordinator reply). Connections beyond the cap are answered
+/// `503` + [`CODE_SERVER_BUSY`] by a short-deadline rejection handler
+/// that does no coordinator work — the same backpressure discipline the
+/// sweep worker applies to `POST /shard`.
+#[derive(Debug, Clone)]
+pub struct ServeOpts {
+    /// Concurrent connections allowed (clamped to ≥ 1).
+    pub max_concurrent_requests: usize,
+}
+
+impl Default for ServeOpts {
+    /// 256 concurrent connections — far above the worker thread's
+    /// throughput needs, low enough that a connection flood cannot grow
+    /// threads and queued requests without bound.
+    fn default() -> Self {
+        ServeOpts { max_concurrent_requests: 256 }
+    }
+}
+
+/// One wire-level inference request: the input sample plus the request
+/// descriptor. The JSON shape is
+/// `{"input": [...], "budget": "low"|"medium"|"high" | "deadline_ms": N,
+///   "priority": "low"|"normal"|"high", "batch_hint": N}` —
+/// exactly one of `budget` / `deadline_ms`; `priority` and `batch_hint`
+/// are optional.
+#[derive(Debug, Clone)]
+pub struct InferRequest {
+    /// The input sample, row-major `(H, W, C)`.
+    pub input: Vec<f32>,
+    /// The request descriptor (budget, priority, batch hint).
+    pub spec: RequestSpec,
+}
+
+impl InferRequest {
+    /// Serialize to the canonical wire body.
+    pub fn to_json(&self) -> Json {
+        let mut pairs: Vec<(&str, Json)> =
+            vec![("input", Json::arr(self.input.iter().map(|&x| Json::num(x as f64))))];
+        match self.spec.budget {
+            BudgetSpec::Class(b) => pairs.push(("budget", Json::str(b.label()))),
+            BudgetSpec::Deadline(d) => {
+                pairs.push(("deadline_ms", Json::num(d.as_secs_f64() * 1e3)))
+            }
+        }
+        if self.spec.priority != Priority::Normal {
+            pairs.push(("priority", Json::str(self.spec.priority.label())));
+        }
+        if let Some(h) = self.spec.batch_hint {
+            pairs.push(("batch_hint", Json::num(h as f64)));
+        }
+        Json::obj(pairs)
+    }
+
+    /// Parse a value produced by [`Self::to_json`] (or hand-written by any
+    /// HTTP client). Rejects requests carrying both a class and a
+    /// deadline, non-finite deadlines, and non-numeric inputs.
+    pub fn from_json(v: &Json) -> Result<InferRequest, String> {
+        let input = v
+            .get("input")
+            .and_then(Json::as_arr)
+            .ok_or("infer request: missing 'input' array")?
+            .iter()
+            .map(|x| {
+                x.as_f64()
+                    .map(|f| f as f32)
+                    .ok_or_else(|| "infer request: 'input' entries must be numbers".to_string())
+            })
+            .collect::<Result<Vec<f32>, String>>()?;
+        let budget = match (v.get("budget"), v.get("deadline_ms")) {
+            (Some(_), Some(_)) => {
+                return Err(
+                    "infer request: give either 'budget' or 'deadline_ms', not both".to_string()
+                )
+            }
+            (Some(b), None) => BudgetSpec::Class(Budget::parse(
+                b.as_str().ok_or("infer request: 'budget' must be a string")?,
+            )?),
+            (None, Some(d)) => {
+                let ms = d.as_f64().ok_or("infer request: 'deadline_ms' must be a number")?;
+                if !(ms.is_finite() && ms > 0.0 && ms <= MAX_DEADLINE_MS) {
+                    return Err(format!(
+                        "infer request: 'deadline_ms' must be in (0, {MAX_DEADLINE_MS}]"
+                    ));
+                }
+                BudgetSpec::Deadline(Duration::from_secs_f64(ms / 1e3))
+            }
+            (None, None) => BudgetSpec::Class(Budget::High),
+        };
+        let priority = match v.get("priority") {
+            None => Priority::Normal,
+            Some(p) => Priority::parse(
+                p.as_str().ok_or("infer request: 'priority' must be a string")?,
+            )?,
+        };
+        let batch_hint = match v.get("batch_hint") {
+            None => None,
+            Some(h) => Some(
+                h.as_i64()
+                    .filter(|&n| n >= 1)
+                    .ok_or("infer request: 'batch_hint' must be an integer >= 1")?
+                    as u64,
+            ),
+        };
+        Ok(InferRequest { input, spec: RequestSpec { budget, priority, batch_hint } })
+    }
+}
+
+/// Serialize a coordinator [`Response`] to the `/infer` reply body.
+pub fn response_to_json(r: &Response) -> Json {
+    Json::obj([
+        ("logits", Json::arr(r.logits.iter().map(|&x| Json::num(x as f64)))),
+        ("config", Json::str(r.config.clone())),
+        ("batch", Json::num(r.batch as f64)),
+        ("latency_s", Json::num(r.latency_s)),
+        ("target_s", Json::num(r.target_s)),
+        ("met_deadline", Json::Bool(r.met_deadline)),
+    ])
+}
+
+/// Parse an `/infer` reply body back into a [`Response`] (client side).
+pub fn response_from_json(v: &Json) -> Result<Response, String> {
+    Ok(Response {
+        logits: v
+            .get("logits")
+            .and_then(Json::as_arr)
+            .ok_or("infer reply: missing 'logits' array")?
+            .iter()
+            .map(|x| {
+                x.as_f64()
+                    .map(|f| f as f32)
+                    .ok_or_else(|| "infer reply: 'logits' entries must be numbers".to_string())
+            })
+            .collect::<Result<Vec<f32>, String>>()?,
+        config: v
+            .get("config")
+            .and_then(Json::as_str)
+            .ok_or("infer reply: missing 'config'")?
+            .to_string(),
+        batch: v
+            .get("batch")
+            .and_then(Json::as_i64)
+            .filter(|&b| b >= 1)
+            .ok_or("infer reply: missing 'batch'")? as u64,
+        latency_s: v
+            .get("latency_s")
+            .and_then(Json::as_f64)
+            .ok_or("infer reply: missing 'latency_s'")?,
+        target_s: v
+            .get("target_s")
+            .and_then(Json::as_f64)
+            .ok_or("infer reply: missing 'target_s'")?,
+        met_deadline: v
+            .get("met_deadline")
+            .and_then(Json::as_bool)
+            .ok_or("infer reply: missing 'met_deadline'")?,
+    })
+}
+
+/// A running serving front end: a TCP listener routing `/infer`,
+/// `/healthz`, and `/stats` onto a [`Coordinator`], one handler thread per
+/// connection (the coordinator handle is cheap to clone; its worker thread
+/// serializes execution).
+///
+/// ```no_run
+/// use bf_imna::coordinator::{Coordinator, CoordinatorConfig, ServingServer};
+///
+/// let coord = Coordinator::start_sim(CoordinatorConfig::default(), 0.0).unwrap();
+/// let server = ServingServer::spawn("127.0.0.1:0", coord).unwrap();
+/// println!("serving on {}", server.addr());
+/// server.shutdown();
+/// ```
+#[derive(Debug)]
+pub struct ServingServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<thread::JoinHandle<()>>,
+}
+
+impl ServingServer {
+    /// Bind `addr` (port `0` picks an ephemeral port) and serve until
+    /// dropped or [`Self::shutdown`], with the default connection budget
+    /// ([`ServeOpts::default`]).
+    pub fn spawn(addr: &str, coordinator: Coordinator) -> io::Result<ServingServer> {
+        Self::spawn_with(addr, coordinator, ServeOpts::default())
+    }
+
+    /// [`Self::spawn`] with an explicit connection budget.
+    pub fn spawn_with(
+        addr: &str,
+        coordinator: Coordinator,
+        opts: ServeOpts,
+    ) -> io::Result<ServingServer> {
+        let listener = TcpListener::bind(addr)?;
+        let addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let gate = Arc::new(AdmissionGate::new(opts.max_concurrent_requests, 0));
+        let reject_gate = Arc::new(AdmissionGate::new(REJECT_POOL, 0));
+        let handle = {
+            let stop = Arc::clone(&stop);
+            thread::spawn(move || accept_loop(listener, coordinator, stop, gate, reject_gate))
+        };
+        Ok(ServingServer { addr, stop, handle: Some(handle) })
+    }
+
+    /// The bound socket address (with the real port for `:0` binds).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting connections, drop the listener, and join the accept
+    /// loop; in-flight requests still complete.
+    pub fn shutdown(mut self) {
+        self.stop_and_join();
+    }
+
+    /// Block until the accept loop exits — i.e. forever, for a CLI server.
+    pub fn join(mut self) {
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+
+    fn stop_and_join(&mut self) {
+        if self.handle.is_none() {
+            return;
+        }
+        self.stop.store(true, Ordering::SeqCst);
+        // Poke the listener so a blocking accept() observes the stop flag.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ServingServer {
+    fn drop(&mut self) {
+        self.stop_and_join();
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    coordinator: Coordinator,
+    stop: Arc<AtomicBool>,
+    gate: Arc<AdmissionGate>,
+    reject_gate: Arc<AdmissionGate>,
+) {
+    loop {
+        let stream = match listener.accept() {
+            Ok((stream, _)) => stream,
+            Err(_) => {
+                if stop.load(Ordering::SeqCst) {
+                    break;
+                }
+                thread::sleep(Duration::from_millis(50));
+                continue;
+            }
+        };
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        // Connection budget: over the cap, hand the connection to a
+        // short-deadline rejection handler instead of a full one — no
+        // coordinator work, no long-lived exchange deadline. The
+        // rejection handlers are themselves pooled: past REJECT_POOL of
+        // them, the connection is simply dropped — under a genuine flood,
+        // a TCP-level refusal is the only honest (and bounded) signal
+        // left, and total thread count stays capped either way.
+        let Some(permit) = AdmissionGate::admit(&gate) else {
+            if let Some(reject_permit) = AdmissionGate::admit(&reject_gate) {
+                thread::spawn(move || {
+                    let _permit = reject_permit;
+                    reject_busy(stream);
+                });
+            }
+            continue;
+        };
+        let coordinator = coordinator.clone();
+        thread::spawn(move || {
+            // The permit rides the handler thread; dropping it (normal
+            // return or panic) frees the slot.
+            let _permit = permit;
+            handle_connection(stream, &coordinator);
+        });
+    }
+}
+
+/// Tight deadline for over-budget connections: long enough for a
+/// well-behaved client's request/response exchange, short enough that a
+/// flood's rejection handlers cannot accumulate.
+const REJECT_DEADLINE: Duration = Duration::from_secs(5);
+
+/// Concurrent rejection handlers allowed; connections arriving past both
+/// the main budget and this pool are dropped without a reply.
+const REJECT_POOL: usize = 32;
+
+/// Answer one over-budget connection: read the (size-capped) request
+/// under the short deadline — closing with unread bytes in flight could
+/// RST the reply off the wire — then answer `503` + [`CODE_SERVER_BUSY`].
+fn reject_busy(stream: TcpStream) {
+    let reader = match stream.try_clone() {
+        Ok(s) => DeadlineStream::new(s, REJECT_DEADLINE),
+        Err(_) => return,
+    };
+    let _ = read_request(&mut BufReader::new(reader));
+    let mut writer = DeadlineStream::new(stream, REJECT_DEADLINE);
+    let reply = Json::obj([
+        ("code", Json::str(CODE_SERVER_BUSY)),
+        ("error", Json::str("serving front end at connection capacity")),
+    ]);
+    let _ = write_response(&mut writer, 503, reply.to_string().as_bytes());
+}
+
+/// One request, one response, close — the same exchange discipline (and
+/// slowloris protection) as the sweep worker.
+fn handle_connection(stream: TcpStream, coordinator: &Coordinator) {
+    let reader = match stream.try_clone() {
+        Ok(s) => DeadlineStream::new(s, SERVE_EXCHANGE_DEADLINE),
+        Err(_) => return,
+    };
+    let (status, reply) = match read_request(&mut BufReader::new(reader)) {
+        Ok(req) => route(&req, coordinator),
+        Err(e) => (e.status, err_doc(e.message)),
+    };
+    let mut writer = DeadlineStream::new(stream, SERVE_EXCHANGE_DEADLINE);
+    let _ = write_response(&mut writer, status, reply.to_string().as_bytes());
+}
+
+fn route(req: &Request, coordinator: &Coordinator) -> (u16, Json) {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => (200, health_doc(coordinator)),
+        ("GET", "/stats") => {
+            (200, coordinator.metrics().to_json(coordinator.uptime_s()))
+        }
+        ("POST", "/infer") => handle_infer(&req.body, coordinator),
+        ("GET", _) | ("POST", _) => (404, err_doc(format!("no such endpoint {:?}", req.path))),
+        _ => (405, err_doc(format!("method {:?} not allowed", req.method))),
+    }
+}
+
+fn health_doc(coordinator: &Coordinator) -> Json {
+    Json::obj([
+        ("ok", Json::Bool(true)),
+        ("sample_elems", Json::num(coordinator.sample_elems() as f64)),
+        ("num_classes", Json::num(coordinator.num_classes() as f64)),
+        (
+            "configs",
+            Json::arr(coordinator.configs().iter().map(|c| Json::str(c.clone()))),
+        ),
+    ])
+}
+
+fn handle_infer(body: &[u8], coordinator: &Coordinator) -> (u16, Json) {
+    let req = match Json::parse_bytes(body)
+        .map_err(|e| format!("bad infer request: {e}"))
+        .and_then(|v| InferRequest::from_json(&v))
+    {
+        Ok(req) => req,
+        Err(e) => return (400, err_doc(e)),
+    };
+    let pending = match coordinator.submit_spec(req.input, req.spec) {
+        Ok(p) => p,
+        // Submission rejections (wrong input size, shut-down coordinator)
+        // are the client's fault or a dead server, respectively — but the
+        // input-size case dominates, so reply 400 with the exact message.
+        Err(e) => return (400, err_doc(e.to_string())),
+    };
+    match pending.wait_timeout(REPLY_DEADLINE) {
+        Ok(r) => (200, response_to_json(&r)),
+        Err(e) => (500, err_doc(e.to_string())),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Client half — what `bf-imna infer` drives.
+// ---------------------------------------------------------------------
+
+/// Send one inference request to a serving front end and parse the reply.
+pub fn infer_remote(
+    addr: &str,
+    req: &InferRequest,
+    timeout: Duration,
+) -> Result<Response, String> {
+    let (status, doc) =
+        http_request_json(addr, "POST", "/infer", req.to_json().to_string().as_bytes(), timeout)?;
+    if status != 200 {
+        let detail = doc.get("error").and_then(Json::as_str).unwrap_or("unknown error");
+        return Err(format!("{addr}: HTTP {status}: {detail}"));
+    }
+    response_from_json(&doc).map_err(|e| format!("{addr}: invalid infer reply: {e}"))
+}
+
+/// Fetch a serving front end's `/stats` document.
+pub fn fetch_stats(addr: &str, timeout: Duration) -> Result<Json, String> {
+    let (status, doc) = http_request_json(addr, "GET", "/stats", b"", timeout)?;
+    if status != 200 {
+        return Err(format!("{addr}: GET /stats returned HTTP {status}"));
+    }
+    Ok(doc)
+}
+
+/// Fetch a serving front end's `/healthz` document (the model contract:
+/// `sample_elems`, `num_classes`, `configs`).
+pub fn fetch_health(addr: &str, timeout: Duration) -> Result<Json, String> {
+    let (status, doc) = http_request_json(addr, "GET", "/healthz", b"", timeout)?;
+    if status != 200 {
+        return Err(format!("{addr}: GET /healthz returned HTTP {status}"));
+    }
+    Ok(doc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn infer_request_round_trips_every_budget_shape() {
+        let shapes = [
+            RequestSpec::default(),
+            RequestSpec { budget: BudgetSpec::Class(Budget::Low), ..RequestSpec::default() },
+            RequestSpec {
+                budget: BudgetSpec::Deadline(Duration::from_millis(12)),
+                priority: Priority::High,
+                batch_hint: Some(4),
+            },
+        ];
+        for spec in shapes {
+            let req = InferRequest { input: vec![0.25, -1.0, 0.5], spec: spec.clone() };
+            let text = req.to_json().to_string();
+            let back = InferRequest::from_json(&Json::parse(&text).unwrap()).unwrap();
+            assert_eq!(back.input, req.input);
+            assert_eq!(back.spec.budget, spec.budget);
+            assert_eq!(back.spec.priority, spec.priority);
+            assert_eq!(back.spec.batch_hint, spec.batch_hint);
+        }
+    }
+
+    #[test]
+    fn infer_request_rejects_contradictions_and_garbage() {
+        let both = r#"{"input":[1.0],"budget":"low","deadline_ms":5}"#;
+        assert!(InferRequest::from_json(&Json::parse(both).unwrap())
+            .unwrap_err()
+            .contains("not both"));
+        for bad in [
+            r#"{"budget":"low"}"#,
+            r#"{"input":[1.0],"budget":"urgent"}"#,
+            r#"{"input":[1.0],"deadline_ms":-3}"#,
+            // A deadline past the 24h cap would overflow Duration (panic)
+            // if it were not rejected here.
+            r#"{"input":[1.0],"deadline_ms":1e300}"#,
+            r#"{"input":[1.0],"priority":"asap"}"#,
+            r#"{"input":[1.0],"batch_hint":0}"#,
+            r#"{"input":["x"]}"#,
+        ] {
+            assert!(InferRequest::from_json(&Json::parse(bad).unwrap()).is_err(), "{bad}");
+        }
+        // No budget at all defaults to the loosest class.
+        let plain = InferRequest::from_json(&Json::parse(r#"{"input":[1.0]}"#).unwrap()).unwrap();
+        assert_eq!(plain.spec.budget, BudgetSpec::Class(Budget::High));
+    }
+
+    #[test]
+    fn response_round_trips() {
+        let r = Response {
+            logits: vec![0.1, -2.5, 3.0],
+            config: "mixed".to_string(),
+            batch: 4,
+            latency_s: 0.012,
+            target_s: 0.03,
+            met_deadline: true,
+        };
+        let back = response_from_json(&response_to_json(&r)).unwrap();
+        assert_eq!(back.logits, r.logits);
+        assert_eq!(back.config, r.config);
+        assert_eq!(back.batch, r.batch);
+        assert!(back.met_deadline);
+        assert!((back.latency_s - r.latency_s).abs() < 1e-12);
+        assert!((back.target_s - r.target_s).abs() < 1e-12);
+    }
+
+    // Live server round trips (spawn + POST /infer over real sockets) are
+    // in rust/tests/serving.rs — they need the sim-backed coordinator.
+}

@@ -16,7 +16,9 @@
 //! bf-imna hawq                                        # Table VII (table7 artifact)
 //! bf-imna compare                                     # Table VIII (table8 artifact)
 //! bf-imna validate                                    # Table I (table1 artifact)
-//! bf-imna serve    [--artifacts DIR] [--requests N]   # live serving demo
+//! bf-imna serve    --addr 127.0.0.1:8378              # HTTP serving front end
+//! bf-imna serve    --requests 32                      # local serving demo
+//! bf-imna infer    --addr 127.0.0.1:8378 --deadline-ms 5   # serving client
 //! ```
 //!
 //! The sharded form is the scale-out path: every shard is an independent
@@ -31,8 +33,12 @@
 
 use std::collections::BTreeMap;
 use std::process::ExitCode;
+use std::time::Duration;
 
-use bf_imna::coordinator::{Budget, Coordinator, CoordinatorConfig};
+use bf_imna::coordinator::server::{self as serving, InferRequest};
+use bf_imna::coordinator::{
+    Budget, BudgetSpec, Coordinator, CoordinatorConfig, Priority, RequestSpec, ServingServer,
+};
 use bf_imna::mapper::CacheSnapshot;
 use bf_imna::precision::PrecisionConfig;
 use bf_imna::sim::shard::{self, SweepSpec};
@@ -57,6 +63,7 @@ fn main() -> ExitCode {
         "compare" => cmd_compare(),
         "validate" => cmd_validate(),
         "serve" => cmd_serve(&opts),
+        "infer" => cmd_infer(&opts),
         "help" | "--help" | "-h" => {
             print!("{}", HELP);
             Ok(())
@@ -107,6 +114,10 @@ COMMANDS:
              --addr HOST:PORT  listen address (default 127.0.0.1:8377;
                                port 0 picks an ephemeral port)
              --cache-in FILE   absorb a plan-cache snapshot at startup
+             --max-shards N    shard requests computing at once (default 2)
+             --queue-depth N   admission queue before 503 worker-busy
+                               replies (default 4; dispatch retries busy
+                               workers elsewhere without retiring them)
              endpoints: POST /shard  run one slice, reply with its document
                         POST /cache  absorb a shipped plan-cache snapshot
                         GET /healthz, GET /stats  liveness + cache counters
@@ -140,8 +151,35 @@ COMMANDS:
   hawq       Table VII — HAWQ-V3 bit-fluid ResNet18 (the table7 artifact)
   compare    Table VIII — BF-IMNA peak rows vs SOTA (the table8 artifact)
   validate   Table I microbenchmark — emulator vs models (the table1 artifact)
-  serve      live bit-fluid serving demo over the AOT artifacts
-             --artifacts DIR (default artifacts)  --requests N (default 32)
+  serve      bit-fluid serving coordinator: HTTP front end or local demo
+             server mode (default): listen and serve inference requests
+             --addr HOST:PORT  listen address (default 127.0.0.1:8378;
+                               port 0 picks an ephemeral port)
+             demo mode: --requests N  submit N mixed-budget requests
+                               locally and print the serving table
+             backend: the sim backend by default (ap/mapper/sim latency
+             models + deterministic stand-in numerics — no artifacts
+             needed); --artifacts DIR loads AOT artifacts instead
+             (requires a --features pjrt build)
+             --time-scale F    pace sim-backend executions at F x the
+                               modeled latency (default 0 = no pacing)
+             --max-requests N  concurrent-connection budget (default 256;
+                               over-budget connections get 503 server-busy)
+             endpoints: POST /infer   one request (input + budget/deadline)
+                        GET /healthz  model contract (elems, classes, ladder)
+                        GET /stats    serving metrics document
+  infer      serving client for `serve`'s HTTP front end
+             --addr HOST:PORT  server address (default 127.0.0.1:8378)
+             --requests N      how many requests to send (default 1)
+             --budget low|medium|high  class budget (default high)
+             --deadline-ms F   explicit per-request deadline instead of a
+                               class (mutually exclusive with --budget)
+             --priority low|normal|high  scheduling priority
+             --batch-hint N    largest compiled batch to ride in
+             --seed N          deterministic input generator seed (default 1)
+             --timeout-s N     per-request HTTP timeout (default 60)
+             --stats           fetch and print GET /stats instead of
+                               sending requests
 ";
 
 type CliResult = Result<(), Box<dyn std::error::Error>>;
@@ -334,7 +372,15 @@ fn cmd_serve_worker(opts: &BTreeMap<String, String>) -> CliResult {
         let loaded = engine.cache().absorb(&snap);
         eprintln!("cache-in: absorbed {loaded} plans from {path}");
     }
-    let server = transport::WorkerServer::spawn(addr, engine).map_err(|e| format!("{addr}: {e}"))?;
+    let mut wopts = transport::WorkerOpts::default();
+    if let Some(s) = opts.get("max-shards") {
+        wopts.max_concurrent_shards = s.parse::<usize>()?.max(1);
+    }
+    if let Some(s) = opts.get("queue-depth") {
+        wopts.admission_queue = s.parse()?;
+    }
+    let server = transport::WorkerServer::spawn_with(addr, engine, wopts)
+        .map_err(|e| format!("{addr}: {e}"))?;
     eprintln!(
         "serve-worker: listening on http://{} (POST /shard, POST /cache, GET /healthz, GET /stats)",
         server.addr()
@@ -372,6 +418,12 @@ fn cmd_dispatch(opts: &BTreeMap<String, String>) -> CliResult {
     }
     if report.retries > 0 {
         eprintln!("dispatch: {} failed shard request(s) were reassigned", report.retries);
+    }
+    if report.busy_retries > 0 {
+        eprintln!(
+            "dispatch: {} worker-busy bounce(s) were re-queued (backpressure, not failures)",
+            report.busy_retries
+        );
     }
     let n = report.doc.get("n_points").and_then(Json::as_i64).unwrap_or(0);
     match opts.get("out") {
@@ -481,12 +533,54 @@ fn cmd_validate() -> CliResult {
     Ok(())
 }
 
+/// Start a coordinator from the shared `serve` backend flags: the sim
+/// backend by default, the artifact-loading runtime when `--artifacts` is
+/// given (which needs a `--features pjrt` build to actually execute).
+fn start_coordinator(opts: &BTreeMap<String, String>) -> Result<Coordinator, Box<dyn std::error::Error>> {
+    let cfg = CoordinatorConfig::default();
+    match opts.get("artifacts") {
+        Some(dir) => Ok(Coordinator::start(std::path::Path::new(dir), cfg)?),
+        None => {
+            let time_scale: f64 = match opts.get("time-scale") {
+                Some(s) => s.parse()?,
+                None => 0.0,
+            };
+            Ok(Coordinator::start_sim(cfg, time_scale)?)
+        }
+    }
+}
+
 fn cmd_serve(opts: &BTreeMap<String, String>) -> CliResult {
-    let dir = opts.get("artifacts").map(String::as_str).unwrap_or("artifacts");
-    let n: usize = opts.get("requests").map(String::as_str).unwrap_or("32").parse()?;
-    let coord = Coordinator::start(std::path::Path::new(dir), CoordinatorConfig::default())?;
+    // Demo mode: submit N mixed-budget requests locally, print the table.
+    if let Some(n) = opts.get("requests") {
+        return serve_demo(opts, n.parse()?);
+    }
+    // Server mode: the coordinator on the wire.
+    let addr = opts.get("addr").map(String::as_str).unwrap_or("127.0.0.1:8378");
+    let coord = start_coordinator(opts)?;
+    eprintln!(
+        "serve: backend ready, configs [{}] (descending quality)",
+        coord.configs().join(", ")
+    );
+    let mut sopts = serving::ServeOpts::default();
+    if let Some(s) = opts.get("max-requests") {
+        sopts.max_concurrent_requests = s.parse::<usize>()?.max(1);
+    }
+    let server =
+        ServingServer::spawn_with(addr, coord, sopts).map_err(|e| format!("{addr}: {e}"))?;
+    eprintln!(
+        "serve: listening on http://{} (POST /infer, GET /healthz, GET /stats)",
+        server.addr()
+    );
+    // Serve until killed; `bf-imna infer` is the other end.
+    server.join();
+    Ok(())
+}
+
+fn serve_demo(opts: &BTreeMap<String, String>, n: usize) -> CliResult {
+    let coord = start_coordinator(opts)?;
     println!(
-        "serving {} ({} configs compiled); sending {n} requests across budgets",
+        "serving {} ({} configs); sending {n} requests across class budgets and deadlines",
         coord.configs().join(", "),
         coord.configs().len()
     );
@@ -496,7 +590,17 @@ fn cmd_serve(opts: &BTreeMap<String, String>) -> CliResult {
     let pendings: Vec<_> = (0..n)
         .map(|i| {
             let x: Vec<f32> = (0..elems).map(|_| rng.f64() as f32 * 2.0 - 1.0).collect();
-            coord.submit(x, budgets[i % 3]).expect("submit")
+            if i % 4 == 3 {
+                // Every fourth request carries an explicit deadline — the
+                // open end of the budget API.
+                coord
+                    .request(x)
+                    .deadline(Duration::from_millis(5 + 10 * (i % 3) as u64))
+                    .submit()
+                    .expect("submit")
+            } else {
+                coord.submit(x, budgets[i % 3]).expect("submit")
+            }
         })
         .collect();
     let mut per_config: BTreeMap<String, u64> = BTreeMap::new();
@@ -509,6 +613,7 @@ fn cmd_serve(opts: &BTreeMap<String, String>) -> CliResult {
     t.row(vec!["requests".to_string(), m.completed.to_string()]);
     t.row(vec!["batches".to_string(), m.batches.to_string()]);
     t.row(vec!["batch occupancy".to_string(), format!("{:.0}%", 100.0 * m.batch_occupancy())]);
+    t.row(vec!["deadlines met".to_string(), format!("{}/{}", m.deadline_met, m.completed)]);
     t.row(vec!["p50 latency".to_string(), format!("{} s", fmt_eng(m.latency_p(0.5), 3))]);
     t.row(vec!["p99 latency".to_string(), format!("{} s", fmt_eng(m.latency_p(0.99), 3))]);
     t.row(vec!["throughput".to_string(), format!("{:.1} req/s", m.throughput(coord.uptime_s()))]);
@@ -516,5 +621,98 @@ fn cmd_serve(opts: &BTreeMap<String, String>) -> CliResult {
         t.row(vec![format!("served by {cfg}"), count.to_string()]);
     }
     print!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_infer(opts: &BTreeMap<String, String>) -> CliResult {
+    let addr = opts.get("addr").map(String::as_str).unwrap_or("127.0.0.1:8378");
+    let timeout = Duration::from_secs(match opts.get("timeout-s") {
+        Some(s) => s.parse()?,
+        None => 60,
+    });
+    if opts.contains_key("stats") {
+        let stats = serving::fetch_stats(addr, timeout)?;
+        println!("{stats}");
+        return Ok(());
+    }
+    // The health document carries the model contract — no out-of-band
+    // knowledge of the input shape needed.
+    let health = serving::fetch_health(addr, timeout)?;
+    let elems = health
+        .get("sample_elems")
+        .and_then(Json::as_i64)
+        .ok_or("serve: /healthz carried no sample_elems")? as usize;
+
+    let budget = match (opts.get("budget"), opts.get("deadline-ms")) {
+        (Some(_), Some(_)) => {
+            return Err("infer: give either --budget or --deadline-ms, not both".into())
+        }
+        (Some(b), None) => BudgetSpec::Class(Budget::parse(b)?),
+        (None, Some(ms)) => {
+            let ms: f64 = ms.parse()?;
+            if !(ms.is_finite() && ms > 0.0 && ms <= serving::MAX_DEADLINE_MS) {
+                return Err(format!(
+                    "infer: --deadline-ms must be in (0, {}]",
+                    serving::MAX_DEADLINE_MS
+                )
+                .into());
+            }
+            BudgetSpec::Deadline(Duration::from_secs_f64(ms / 1e3))
+        }
+        (None, None) => BudgetSpec::Class(Budget::High),
+    };
+    let priority = match opts.get("priority") {
+        Some(p) => Priority::parse(p)?,
+        None => Priority::Normal,
+    };
+    let batch_hint = match opts.get("batch-hint") {
+        Some(h) => Some(h.parse::<u64>()?.max(1)),
+        None => None,
+    };
+    let n: usize = match opts.get("requests") {
+        Some(s) => s.parse()?,
+        None => 1,
+    };
+    let seed: u64 = match opts.get("seed") {
+        Some(s) => s.parse()?,
+        None => 1,
+    };
+
+    let mut rng = bf_imna::util::rng::Rng::new(seed);
+    let mut latencies = Vec::with_capacity(n);
+    let mut met = 0usize;
+    let mut per_config: BTreeMap<String, u64> = BTreeMap::new();
+    for i in 0..n {
+        let input: Vec<f32> = (0..elems).map(|_| rng.f64() as f32 * 2.0 - 1.0).collect();
+        let req = InferRequest {
+            input,
+            spec: RequestSpec { budget, priority, batch_hint },
+        };
+        let r = serving::infer_remote(addr, &req, timeout)?;
+        println!(
+            "request {i}: config {} | batch {} | latency {} s | target {} s | {}",
+            r.config,
+            r.batch,
+            fmt_eng(r.latency_s, 3),
+            fmt_eng(r.target_s, 3),
+            if r.met_deadline { "met" } else { "MISSED" }
+        );
+        latencies.push(r.latency_s);
+        met += usize::from(r.met_deadline);
+        *per_config.entry(r.config).or_default() += 1;
+    }
+    if n > 1 {
+        latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let p50 = latencies[latencies.len() / 2];
+        println!(
+            "summary: {met}/{n} met | p50 {} s | served by {}",
+            fmt_eng(p50, 3),
+            per_config
+                .iter()
+                .map(|(k, v)| format!("{k}:{v}"))
+                .collect::<Vec<_>>()
+                .join(" ")
+        );
+    }
     Ok(())
 }

@@ -1,20 +1,29 @@
-//! Serving runtime — loads and executes the AOT artifacts from the request
-//! path (Python never runs at serve time).
+//! Serving runtime — the pluggable execution layer behind the bit-fluid
+//! coordinator (Python never runs at serve time).
 //!
-//! `python/compile/aot.py` lowers every (precision config, batch) serving
-//! graph to HLO **text** once at build time; [`Runtime::load`] compiles all
-//! of them onto the PJRT CPU client, and [`Runtime::infer`] executes one.
-//! Text (not serialized `HloModuleProto`) is the interchange format — the
-//! `xla` crate's backend (xla_extension 0.5.1) rejects jax ≥ 0.5's
-//! 64-bit-id protos, while the text parser reassigns ids.
+//! The coordinator talks to an [`InferenceBackend`]: anything that owns a
+//! [`Manifest`] and can execute one (precision config, batch) pair. Three
+//! implementations exist:
 //!
-//! The PJRT backend requires the `xla` crate, which the offline vendor set
-//! does not carry, so it is gated behind the `pjrt` cargo feature. The
-//! default build substitutes the stub [`Runtime`] — the identical API, erroring
-//! at artifact-load time — so the coordinator, benches, and examples
-//! compile and cleanly report the missing backend.
+//! * [`SimBackend`] (the default) — executes batches through the BF-IMNA
+//!   `ap`/`mapper`/`sim` latency models plus a deterministic functional
+//!   stand-in (a quantized random projection), so the whole serving stack
+//!   runs, and is testable, without any compiled artifacts or the `pjrt`
+//!   feature.
+//! * The PJRT [`Runtime`] (`--features pjrt`) — `python/compile/aot.py`
+//!   lowers every (precision config, batch) serving graph to HLO **text**
+//!   once at build time; [`Runtime::load`] compiles all of them onto the
+//!   PJRT CPU client, and [`Runtime::infer`] executes one. Text (not
+//!   serialized `HloModuleProto`) is the interchange format — the `xla`
+//!   crate's backend (xla_extension 0.5.1) rejects jax ≥ 0.5's 64-bit-id
+//!   protos, while the text parser reassigns ids.
+//! * The stub [`Runtime`] (default build) — the identical API, erroring at
+//!   artifact-load time, so PJRT-path code compiles and cleanly reports
+//!   the missing backend. (The `xla` crate is not in the offline vendor
+//!   set, hence the feature gate.)
 
 pub mod manifest;
+pub mod sim_backend;
 
 #[cfg(feature = "pjrt")]
 mod pjrt;
@@ -27,6 +36,68 @@ mod stub;
 pub use stub::Runtime;
 
 pub use manifest::{ArtifactEntry, ConfigInfo, Manifest};
+pub use sim_backend::SimBackend;
+
+use crate::util::error::Result;
+
+/// What the serving coordinator needs from an execution backend: a
+/// manifest describing the compiled (config, batch) artifacts, and the
+/// ability to execute one. Extracted from the PJRT `Runtime` so the
+/// coordinator is backend-agnostic — the default build serves through
+/// [`SimBackend`]; `--features pjrt` serves real XLA artifacts.
+pub trait InferenceBackend {
+    /// The manifest this backend serves.
+    fn manifest(&self) -> &Manifest;
+
+    /// Backend platform name (diagnostics).
+    fn platform(&self) -> String;
+
+    /// Executable (config, batch) pairs, sorted.
+    fn compiled_keys(&self) -> Vec<(String, u64)>;
+
+    /// Execute one inference: `input` is a row-major `f32` batch of shape
+    /// `(batch, H, W, C)`; returns the `(batch, num_classes)` logits.
+    fn infer(&self, config: &str, batch: u64, input: &[f32]) -> Result<Vec<f32>>;
+
+    /// The artifact entry behind a compiled pair, if any.
+    fn entry(&self, config: &str, batch: u64) -> Option<&ArtifactEntry>;
+
+    /// The backend's own model of how long executing (config, batch)
+    /// takes, seconds — `Some` only for model-driven backends like
+    /// [`SimBackend`], where it feeds the precision controller a
+    /// deterministic latency signal instead of the measured wall clock.
+    fn modeled_latency_s(&self, config: &str, batch: u64) -> Option<f64> {
+        let _ = (config, batch);
+        None
+    }
+
+    /// Accuracy recorded at export time for a config.
+    fn accuracy(&self, config: &str) -> Option<f64> {
+        self.manifest().accuracies.get(config).copied()
+    }
+}
+
+impl InferenceBackend for Runtime {
+    fn manifest(&self) -> &Manifest {
+        Runtime::manifest(self)
+    }
+
+    fn platform(&self) -> String {
+        Runtime::platform(self)
+    }
+
+    fn compiled_keys(&self) -> Vec<(String, u64)> {
+        Runtime::compiled_keys(self)
+    }
+
+    fn infer(&self, config: &str, batch: u64, input: &[f32]) -> Result<Vec<f32>> {
+        Runtime::infer(self, config, batch, input)
+    }
+
+    fn entry(&self, config: &str, batch: u64) -> Option<&ArtifactEntry> {
+        Runtime::entry(self, config, batch)
+    }
+}
 
 /// Pad `n` samples up to `batch` by repeating the final sample (the padded
 /// logits are discarded by the caller). Returns the padded buffer.

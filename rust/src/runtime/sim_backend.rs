@@ -1,0 +1,339 @@
+//! The sim-backed inference backend — serving without PJRT.
+//!
+//! [`SimBackend`] implements [`InferenceBackend`](super::InferenceBackend)
+//! on top of the BF-IMNA simulator instead of compiled XLA artifacts:
+//!
+//! * **Latency** comes from the `ap`/`mapper`/`sim` cost models — one
+//!   [`simulate`] per manifest config at startup, with batches costed by
+//!   the paper's inter-batch pipelining model (the first inference pays
+//!   the full latency, each subsequent one the pipeline initiation
+//!   interval).
+//! * **Numerics** come from a deterministic functional stand-in: one fixed
+//!   random projection (seeded, platform-independent generation) shared by
+//!   every config, quantized to each config's average bitwidth — so
+//!   different precision configs produce slightly different logits that
+//!   mostly agree on the argmax, exactly the shape of a quantized model
+//!   ladder.
+//!
+//! This is what lets the serving coordinator run end to end — and be
+//! tested, benched, and driven over the network — in the default build,
+//! where the PJRT runtime is only a stub. `modeled_latency_s` additionally
+//! gives the precision controller a deterministic latency signal, so
+//! config choices under a fixed request trace are reproducible.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::time::Duration;
+
+use super::manifest::{ArtifactEntry, ConfigInfo, Manifest};
+use crate::precision::{LayerPrec, PrecisionConfig};
+use crate::sim::{simulate, SimParams};
+use crate::util::error::{anyhow, Result};
+use crate::util::rng::Rng;
+
+/// Serving backend that executes batches through the BF-IMNA latency
+/// models and a deterministic quantized projection (see module docs).
+pub struct SimBackend {
+    manifest: Manifest,
+    /// Per-config projection weights, `(num_classes, sample_elems)`
+    /// row-major — the underlying float model quantized to that config's
+    /// average bitwidth.
+    weights: BTreeMap<String, Vec<f32>>,
+    /// Simulated per-batch execution latency by (config, batch), seconds.
+    latencies: BTreeMap<(String, u64), f64>,
+    /// Wall-clock pacing: each `infer` sleeps `modeled latency x scale`
+    /// (0.0 disables pacing — the right setting for tests and benches).
+    time_scale: f64,
+}
+
+impl SimBackend {
+    /// Build a backend over an arbitrary manifest. The manifest's model
+    /// must be a zoo network and every artifact's config must carry
+    /// per-layer precision data (the simulator needs both).
+    pub fn new(manifest: Manifest, time_scale: f64) -> Result<SimBackend> {
+        let net = crate::sim::shard::net_by_name(&manifest.model).map_err(|e| anyhow!(e))?;
+        let params = SimParams::lr_sram();
+        let mut latencies = BTreeMap::new();
+        let mut reports: BTreeMap<String, (f64, f64)> = BTreeMap::new();
+        for entry in &manifest.artifacts {
+            let (lat, interval) = match reports.get(&entry.config) {
+                Some(&r) => r,
+                None => {
+                    let info = manifest.configs.get(&entry.config).ok_or_else(|| {
+                        anyhow!("sim backend: config '{}' has no per-layer info", entry.config)
+                    })?;
+                    if info.per_layer.len() != net.weight_layers() {
+                        return Err(anyhow!(
+                            "sim backend: config '{}' quantizes {} layers but {} has {}",
+                            entry.config,
+                            info.per_layer.len(),
+                            net.name,
+                            net.weight_layers()
+                        ));
+                    }
+                    let cfg = PrecisionConfig {
+                        name: entry.config.clone(),
+                        per_layer: info
+                            .per_layer
+                            .iter()
+                            .map(|&(w, a)| LayerPrec { w: w.max(1), a: a.max(1) })
+                            .collect(),
+                    };
+                    let r = simulate(&net, &cfg, &params);
+                    let pair = (r.latency_s(), r.pipeline_interval_s());
+                    reports.insert(entry.config.clone(), pair);
+                    pair
+                }
+            };
+            // Inter-batch pipelining (§V-B): the first inference pays the
+            // full latency, each further one the initiation interval.
+            let batch_lat = lat + interval * (entry.batch.saturating_sub(1)) as f64;
+            latencies.insert((entry.config.clone(), entry.batch), batch_lat);
+        }
+
+        // One underlying float model for every config: a fixed random
+        // projection, quantized per config. Seeded generation keeps the
+        // stand-in deterministic across runs and processes.
+        let elems = manifest.sample_elems();
+        let classes = manifest.num_classes as usize;
+        let mut rng = Rng::new(0xBF1A);
+        let base: Vec<f32> =
+            (0..classes * elems).map(|_| (rng.f64() * 2.0 - 1.0) as f32).collect();
+        let mut weights = BTreeMap::new();
+        for (name, info) in &manifest.configs {
+            weights.insert(name.clone(), quantize(&base, info.avg_bits));
+        }
+
+        Ok(SimBackend { manifest, weights, latencies, time_scale })
+    }
+
+    /// The default backend: the built-in serve-CNN manifest (int8 / mixed
+    /// / int4 ladder at batch sizes 1, 4, 8) — no files needed.
+    pub fn serve_cnn(time_scale: f64) -> SimBackend {
+        SimBackend::new(SimBackend::serve_manifest(), time_scale)
+            .expect("built-in serve-CNN manifest is valid")
+    }
+
+    /// The built-in manifest [`SimBackend::serve_cnn`] serves: the zoo
+    /// serve CNN with a three-config precision ladder, mirroring the shape
+    /// `python/compile/aot.py` exports for the PJRT path.
+    pub fn serve_manifest() -> Manifest {
+        let layers = 6; // serve_cnn weight layers: conv1..conv5 + fc
+        let ladder: [(&str, Vec<u32>, f64); 3] = [
+            ("int8", vec![8; layers], 0.993),
+            ("mixed", vec![8, 8, 6, 6, 4, 4], 0.981),
+            ("int4", vec![4; layers], 0.952),
+        ];
+        let batch_sizes = vec![1u64, 4, 8];
+        let mut configs = BTreeMap::new();
+        let mut accuracies = BTreeMap::new();
+        let mut artifacts = Vec::new();
+        for (name, bits, acc) in &ladder {
+            let per_layer: Vec<(u32, u32)> = bits.iter().map(|&b| (b, b)).collect();
+            let avg_bits = bits.iter().sum::<u32>() as f64 / bits.len() as f64;
+            configs.insert(name.to_string(), ConfigInfo { per_layer, avg_bits });
+            accuracies.insert(name.to_string(), *acc);
+            for &batch in &batch_sizes {
+                artifacts.push(ArtifactEntry {
+                    config: name.to_string(),
+                    batch,
+                    file: format!("sim://{name}/{batch}"),
+                    avg_bits,
+                    accuracy: *acc,
+                });
+            }
+        }
+        Manifest {
+            model: "serve_cnn".to_string(),
+            input_shape: (32, 32, 3),
+            num_classes: 10,
+            param_count: 0,
+            batch_sizes,
+            configs,
+            accuracies,
+            artifacts,
+            dir: PathBuf::from("sim://"),
+        }
+    }
+
+    /// Keep only the named configs (the `Runtime::load_configs` analogue).
+    /// Unknown names are ignored; an empty survivor set is an error.
+    pub fn retain_configs(&mut self, configs: &[String]) -> Result<()> {
+        self.manifest.artifacts.retain(|a| configs.contains(&a.config));
+        if self.manifest.artifacts.is_empty() {
+            return Err(anyhow!(
+                "sim backend: none of the requested configs [{}] exist in the manifest",
+                configs.join(", ")
+            ));
+        }
+        self.manifest.configs.retain(|name, _| configs.contains(name));
+        self.latencies.retain(|(name, _), _| configs.contains(name));
+        self.weights.retain(|name, _| configs.contains(name));
+        Ok(())
+    }
+
+    /// The backend's manifest.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Simulated per-batch execution latency for a compiled pair, seconds.
+    pub fn modeled_latency_s(&self, config: &str, batch: u64) -> Option<f64> {
+        self.latencies.get(&(config.to_string(), batch)).copied()
+    }
+}
+
+/// Symmetric quantization of `[-1, 1]` weights to `avg_bits` levels;
+/// 16-bit-plus configs (including the float reference) pass through.
+fn quantize(base: &[f32], avg_bits: f64) -> Vec<f32> {
+    let bits = avg_bits.round().clamp(1.0, 32.0) as u32;
+    if bits >= 16 {
+        return base.to_vec();
+    }
+    let step = 1.0f32 / (1u32 << (bits - 1)) as f32;
+    base.iter().map(|&w| (w / step).round() * step).collect()
+}
+
+impl super::InferenceBackend for SimBackend {
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn platform(&self) -> String {
+        "bf-imna simulator (sim backend)".to_string()
+    }
+
+    fn compiled_keys(&self) -> Vec<(String, u64)> {
+        let mut keys: Vec<(String, u64)> =
+            self.manifest.artifacts.iter().map(|a| (a.config.clone(), a.batch)).collect();
+        keys.sort();
+        keys
+    }
+
+    fn infer(&self, config: &str, batch: u64, input: &[f32]) -> Result<Vec<f32>> {
+        let entry = self
+            .manifest
+            .artifact(config, batch)
+            .ok_or_else(|| anyhow!("no compiled artifact for ({config}, batch {batch})"))?;
+        let elems = self.manifest.sample_elems();
+        let classes = self.manifest.num_classes as usize;
+        let want = batch as usize * elems;
+        if input.len() != want {
+            return Err(anyhow!("input has {} elements, executable expects {want}", input.len()));
+        }
+        let weights = self
+            .weights
+            .get(&entry.config)
+            .ok_or_else(|| anyhow!("sim backend: no weights for '{config}'"))?;
+        let mut logits = Vec::with_capacity(batch as usize * classes);
+        for b in 0..batch as usize {
+            let sample = &input[b * elems..(b + 1) * elems];
+            for c in 0..classes {
+                let row = &weights[c * elems..(c + 1) * elems];
+                let mut acc = 0.0f32;
+                for (w, x) in row.iter().zip(sample) {
+                    acc += w * x;
+                }
+                // Normalize so logits stay O(1) regardless of input size.
+                logits.push(acc / (elems as f32).sqrt());
+            }
+        }
+        if self.time_scale > 0.0 {
+            if let Some(lat) = self.modeled_latency_s(config, batch) {
+                if lat.is_finite() && lat > 0.0 {
+                    std::thread::sleep(Duration::from_secs_f64(lat * self.time_scale));
+                }
+            }
+        }
+        Ok(logits)
+    }
+
+    fn entry(&self, config: &str, batch: u64) -> Option<&ArtifactEntry> {
+        self.manifest.artifact(config, batch)
+    }
+
+    fn modeled_latency_s(&self, config: &str, batch: u64) -> Option<f64> {
+        SimBackend::modeled_latency_s(self, config, batch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::InferenceBackend;
+
+    #[test]
+    fn built_in_manifest_serves_the_ladder() {
+        let b = SimBackend::serve_cnn(0.0);
+        let m = InferenceBackend::manifest(&b);
+        assert_eq!(m.model, "serve_cnn");
+        assert_eq!(m.sample_elems(), 32 * 32 * 3);
+        assert_eq!(m.quality_ladder(), vec!["int8".to_string(), "mixed".into(), "int4".into()]);
+        assert_eq!(b.compiled_keys().len(), 9);
+    }
+
+    #[test]
+    fn infer_is_deterministic_and_config_sensitive() {
+        let b = SimBackend::serve_cnn(0.0);
+        let elems = b.manifest().sample_elems();
+        let mut rng = Rng::new(7);
+        let x: Vec<f32> = (0..elems).map(|_| (rng.f64() * 2.0 - 1.0) as f32).collect();
+        let a1 = b.infer("int8", 1, &x).unwrap();
+        let a2 = b.infer("int8", 1, &x).unwrap();
+        assert_eq!(a1, a2, "same config must be bit-stable");
+        assert_eq!(a1.len(), 10);
+        assert!(a1.iter().all(|v| v.is_finite()));
+        let lo = b.infer("int4", 1, &x).unwrap();
+        assert_ne!(a1, lo, "different precision must perturb the logits");
+    }
+
+    #[test]
+    fn batches_share_the_per_sample_result() {
+        let b = SimBackend::serve_cnn(0.0);
+        let elems = b.manifest().sample_elems();
+        let x: Vec<f32> = (0..elems).map(|i| (i % 7) as f32 / 7.0 - 0.5).collect();
+        let single = b.infer("mixed", 1, &x).unwrap();
+        let mut batched = Vec::new();
+        for _ in 0..4 {
+            batched.extend_from_slice(&x);
+        }
+        let out = b.infer("mixed", 4, &batched).unwrap();
+        for row in out.chunks_exact(10) {
+            assert_eq!(row, &single[..], "batch rows must match the single-sample result");
+        }
+    }
+
+    #[test]
+    fn modeled_latencies_follow_the_precision_ladder() {
+        let b = SimBackend::serve_cnn(0.0);
+        let l8 = b.modeled_latency_s("int8", 1).unwrap();
+        let l4 = b.modeled_latency_s("int4", 1).unwrap();
+        assert!(l8 > 0.0 && l4 > 0.0);
+        // Per-layer latency is max(compute, mesh), both nondecreasing in
+        // precision — so the ladder can be flat (Fig. 7b) but never
+        // inverted: fewer bits are never slower on the AP.
+        assert!(l4 <= l8, "int4 {l4} must not exceed int8 {l8}");
+        // Batches cost more than singles but less than linear (pipelining).
+        let l8b8 = b.modeled_latency_s("int8", 8).unwrap();
+        assert!(l8b8 > l8 && l8b8 < 8.0 * l8);
+        assert!(b.modeled_latency_s("int8", 3).is_none(), "uncompiled batch");
+    }
+
+    #[test]
+    fn rejects_bad_inputs_and_unknown_configs() {
+        let b = SimBackend::serve_cnn(0.0);
+        assert!(b.infer("int8", 1, &[0.0; 7]).is_err());
+        assert!(b.infer("fp64", 1, &vec![0.0; 3072]).is_err());
+        assert!(b.infer("int8", 3, &vec![0.0; 3 * 3072]).is_err());
+    }
+
+    #[test]
+    fn retain_configs_narrows_the_ladder() {
+        let mut b = SimBackend::serve_cnn(0.0);
+        b.retain_configs(&["int8".to_string(), "int4".to_string()]).unwrap();
+        assert_eq!(b.manifest().quality_ladder(), vec!["int8".to_string(), "int4".into()]);
+        assert!(b.modeled_latency_s("mixed", 1).is_none());
+        let mut b = SimBackend::serve_cnn(0.0);
+        assert!(b.retain_configs(&["nope".to_string()]).is_err());
+    }
+}

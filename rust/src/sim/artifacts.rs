@@ -30,15 +30,19 @@
 //! CLI front ends: `bf-imna artifacts` (list / `--spec NAME`) and
 //! `bf-imna render --artifact NAME [--doc merged.json]`.
 
+use std::collections::BTreeMap;
+use std::time::Duration;
+
 use super::breakdown;
 use super::dse;
 use super::shard::{
-    self, ChipGeom, ExplicitCfg, PointRecord, PrecisionGrid, ResolvedSweep, SweepSpec,
+    self, ChipGeom, ExplicitCfg, MetricSet, PointRecord, PrecisionGrid, ResolvedSweep, SweepSpec,
 };
 use super::SweepEngine;
 use crate::ap::tech::Tech;
 use crate::ap::{emulator, runtime_model as rt, ApKind};
 use crate::baselines::{self, peak};
+use crate::coordinator::controller::{Budget, BudgetTargets, PrecisionController};
 use crate::precision::{hawq, sweep};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
@@ -119,7 +123,7 @@ impl Artifact {
 
 /// The full catalog, in paper order.
 pub fn catalog() -> &'static [Artifact] {
-    static CATALOG: [Artifact; 8] = [
+    static CATALOG: [Artifact; 9] = [
         Artifact {
             name: "fig5",
             title: "Fig. 5 — AP runtimes vs precision M for the three AP organizations (analytic)",
@@ -176,6 +180,13 @@ pub fn catalog() -> &'static [Artifact] {
             tiny_fn: ablation_tiny_spec,
             render_fn: render_ablation_ir_mesh,
         },
+        Artifact {
+            name: "serving-latency",
+            title: "Serving — deadline-budget latency/config-mix curves on the simulated ladder",
+            spec_fn: serving_spec,
+            tiny_fn: serving_spec,
+            render_fn: render_serving_latency,
+        },
     ];
     &CATALOG
 }
@@ -229,6 +240,7 @@ fn fig7_full_spec() -> SweepSpec {
             seed: 7,
         },
         batch: 1,
+        metrics: MetricSet::Full,
     }
 }
 
@@ -249,6 +261,7 @@ fn fig8_full_spec() -> SweepSpec {
         chips: vec![ChipGeom::default_chip()],
         grid: PrecisionGrid::Fixed { bits: vec![8] },
         batch: 1,
+        metrics: MetricSet::Full,
     }
 }
 
@@ -291,11 +304,32 @@ fn ablation_full_spec() -> SweepSpec {
         chips: ablation_chips(),
         grid: PrecisionGrid::Fixed { bits: vec![2, 8] },
         batch: 1,
+        metrics: MetricSet::Full,
     }
 }
 
 fn ablation_tiny_spec() -> SweepSpec {
     SweepSpec { nets: vec!["serve_cnn".to_string()], ..ablation_full_spec() }
+}
+
+/// The serving ladder as a sweep: the serve CNN under the same explicit
+/// int8 / mixed / int4 configs the sim-backed coordinator serves
+/// (`runtime::SimBackend::serve_manifest`), on the paper's default
+/// evaluation point. Three points — already CI-sized, so the tiny spec is
+/// the spec.
+fn serving_spec() -> SweepSpec {
+    SweepSpec::single(
+        "serve_cnn",
+        vec!["lr".to_string()],
+        vec!["sram".to_string()],
+        PrecisionGrid::Explicit {
+            cfgs: vec![
+                ExplicitCfg { name: "int8".to_string(), bits: vec![8; 6] },
+                ExplicitCfg { name: "mixed".to_string(), bits: vec![8, 8, 6, 6, 4, 4] },
+                ExplicitCfg { name: "int4".to_string(), bits: vec![4; 6] },
+            ],
+        },
+    )
 }
 
 // ---------------------------------------------------------------------
@@ -306,10 +340,11 @@ fn ablation_tiny_spec() -> SweepSpec {
 
 /// Render Fig. 6: ReRAM/SRAM ratios per fixed precision.
 pub fn render_fig6(
-    _spec: &SweepSpec,
+    spec: &SweepSpec,
     resolved: &ResolvedSweep,
     records: &[PointRecord],
 ) -> Result<String, String> {
+    spec.metrics.require(&["energy_j", "latency_s", "area_mm2"], "fig6")?;
     let rows = dse::fig6_rows(resolved, records)?;
     let mut out = format!(
         "Fig. 6 — ReRAM/SRAM ratios, end-to-end {} inference ({} chip)\n",
@@ -338,6 +373,7 @@ pub fn render_fig7(
     resolved: &ResolvedSweep,
     records: &[PointRecord],
 ) -> Result<String, String> {
+    spec.metrics.require(&["energy_j", "latency_s", "gops_per_w_mm2"], "fig7")?;
     let (targets, combos) = match &spec.grid {
         PrecisionGrid::Mixed { targets, combos, .. } => (targets.clone(), *combos),
         _ => return Err("fig7: spec must carry a mixed precision grid".to_string()),
@@ -419,10 +455,11 @@ fn fig8_label(resolved: &ResolvedSweep, rec: &PointRecord) -> String {
 /// Render Fig. 8: the energy-by-category (8a) and GEMM-latency-by-phase
 /// (8b) share tables, one row per sweep point.
 pub fn render_fig8(
-    _spec: &SweepSpec,
+    spec: &SweepSpec,
     resolved: &ResolvedSweep,
     records: &[PointRecord],
 ) -> Result<String, String> {
+    spec.metrics.require(&["energy_kinds", "gemm_phases"], "fig8")?;
     let pct = |shares: &[breakdown::Share], label: &str| {
         format!("{:.1}%", 100.0 * breakdown::fraction_of(shares, label))
     };
@@ -464,6 +501,7 @@ pub fn render_table7(
     resolved: &ResolvedSweep,
     records: &[PointRecord],
 ) -> Result<String, String> {
+    spec.metrics.require(&["avg_bits", "energy_j", "latency_s", "edp_js"], "table7")?;
     if !matches!(spec.grid, PrecisionGrid::Explicit { .. }) {
         return Err("table7: spec must carry an explicit precision grid".to_string());
     }
@@ -687,6 +725,7 @@ pub fn render_ablation_ir_mesh(
     resolved: &ResolvedSweep,
     records: &[PointRecord],
 ) -> Result<String, String> {
+    spec.metrics.require(&["latency_s"], "ablation-ir-mesh")?;
     let bits = match &spec.grid {
         PrecisionGrid::Fixed { bits } if bits.len() >= 2 => bits.clone(),
         _ => return Err("ablation-ir-mesh: spec must carry a fixed grid with >= 2 bitwidths".into()),
@@ -720,6 +759,160 @@ pub fn render_ablation_ir_mesh(
     }
     out.push_str(&t.render());
     out.push_str("(paper/Fig. 7b: latency must be nearly precision-flat — a fixed link is not)\n");
+    Ok(out)
+}
+
+/// Render the serving-latency artifact: rebuild the deadline-aware
+/// [`PrecisionController`] from the ladder's *recorded* simulated
+/// latencies and replay a deterministic request trace against it — a
+/// geometric deadline sweep plus a seeded log-uniform mixed trace — then
+/// tabulate config choice, predicted latency, deadline verdicts, energy,
+/// and the resulting config mix. Every number derives from the document's
+/// records and fixed constants, so the render is byte-identical across
+/// in-process, sharded, and dispatched execution (the catalog invariant),
+/// and it is exactly the §V-B story: a latency budget arrives, the
+/// controller walks the ladder, and precision switches per request at
+/// zero reconfiguration cost.
+pub fn render_serving_latency(
+    spec: &SweepSpec,
+    resolved: &ResolvedSweep,
+    records: &[PointRecord],
+) -> Result<String, String> {
+    spec.metrics.require(&["avg_bits", "energy_j", "latency_s"], "serving-latency")?;
+    if resolved.nets.len() != 1
+        || resolved.hws.len() != 1
+        || resolved.techs.len() != 1
+        || resolved.chips.len() != 1
+    {
+        return Err("serving-latency: spec must carry exactly one net/hw/tech/chip".to_string());
+    }
+    if records.len() < 2 {
+        return Err("serving-latency: spec must carry at least two precision configs".to_string());
+    }
+
+    // The quality ladder, descending average bits (the coordinator's
+    // ordering), plus the controller seeded exactly the way the serving
+    // coordinator seeds it: relative simulated latencies as prior scales,
+    // the fastest config's latency as the absolute base.
+    let mut ladder_recs: Vec<&PointRecord> = records.iter().collect();
+    ladder_recs.sort_by(|a, b| {
+        b.avg_bits.partial_cmp(&a.avg_bits).unwrap().then_with(|| a.cfg.cmp(&b.cfg))
+    });
+    let min_lat = records.iter().map(|r| r.latency_s).fold(f64::MAX, f64::min).max(1e-12);
+    let max_lat = records.iter().map(|r| r.latency_s).fold(0.0, f64::max).max(min_lat);
+    let ladder: Vec<String> = ladder_recs.iter().map(|r| r.cfg.clone()).collect();
+    let scales: BTreeMap<String, f64> =
+        records.iter().map(|r| (r.cfg.clone(), r.latency_s / min_lat)).collect();
+    let by_cfg: BTreeMap<&str, &PointRecord> =
+        records.iter().map(|r| (r.cfg.as_str(), r)).collect();
+    // Class targets derived from the ladder itself, so the same artifact
+    // works on any technology/network point: low hugs the fastest config,
+    // high clears the slowest with slack.
+    let targets = BudgetTargets {
+        low: Duration::from_secs_f64(min_lat * 1.2),
+        medium: Duration::from_secs_f64((min_lat * max_lat).sqrt() * 1.2),
+        high: Duration::from_secs_f64(max_lat * 2.0),
+    };
+    let controller = PrecisionController::with_scales(ladder, scales, targets, min_lat);
+
+    let mut out = format!(
+        "Serving latency — deadline-driven precision selection ({}, {} chip, {})\n",
+        resolved.nets[0].name,
+        resolved.hws[0].label(),
+        resolved.techs[0].cell.label()
+    );
+
+    // -- The ladder the controller selects from. --
+    out.push_str("\nprecision ladder (descending quality):\n");
+    let mut t = Table::new(vec!["config", "avg bits", "sim latency (s)", "sim energy (J)", "rel cost"]);
+    for r in &ladder_recs {
+        t.row(vec![
+            r.cfg.clone(),
+            format!("{:.2}", r.avg_bits),
+            fmt_eng(r.latency_s, 3),
+            fmt_eng(r.energy_j, 3),
+            format!("{:.2}", r.latency_s / min_lat),
+        ]);
+    }
+    out.push_str(&t.render());
+
+    // -- Class budgets (the Table VII shape, targets derived above). --
+    out.push_str("\nclass budgets:\n");
+    let mut t = Table::new(vec!["class", "target (s)", "picked config", "predicted (s)", "energy (J)"]);
+    for class in Budget::ALL {
+        let target = controller.targets().target(class);
+        let pick = controller.pick(class, 1);
+        let rec = by_cfg[pick.as_str()];
+        t.row(vec![
+            class.label().to_string(),
+            fmt_eng(target.as_secs_f64(), 3),
+            pick.clone(),
+            fmt_eng(rec.latency_s, 3),
+            fmt_eng(rec.energy_j, 3),
+        ]);
+    }
+    out.push_str(&t.render());
+
+    // -- Deadline sweep: a geometric grid across (and a little past) the
+    // ladder's latency range. --
+    let lo = min_lat * 0.8;
+    let hi = max_lat * 2.5;
+    const SWEEP_POINTS: usize = 8;
+    out.push_str("\ndeadline sweep (batch 1):\n");
+    let mut t = Table::new(vec![
+        "deadline (s)",
+        "picked config",
+        "predicted (s)",
+        "met",
+        "energy (J)",
+        "req/s",
+    ]);
+    for i in 0..SWEEP_POINTS {
+        let d = lo * (hi / lo).powf(i as f64 / (SWEEP_POINTS - 1) as f64);
+        let pick = controller.pick_target(Duration::from_secs_f64(d), 1);
+        let rec = by_cfg[pick.as_str()];
+        t.row(vec![
+            fmt_eng(d, 3),
+            pick.clone(),
+            fmt_eng(rec.latency_s, 3),
+            if rec.latency_s <= d { "yes" } else { "NO" }.to_string(),
+            fmt_eng(rec.energy_j, 3),
+            fmt_eng(1.0 / rec.latency_s, 3),
+        ]);
+    }
+    out.push_str(&t.render());
+
+    // -- Mixed trace: seeded log-uniform deadlines, the config mix the
+    // bit-fluid switch produces under a scattered budget population. --
+    const TRACE_LEN: usize = 48;
+    let mut rng = Rng::new(7);
+    let mut mix: BTreeMap<String, usize> = BTreeMap::new();
+    let mut met = 0usize;
+    for _ in 0..TRACE_LEN {
+        let d = lo * (hi / lo).powf(rng.f64());
+        let pick = controller.pick_target(Duration::from_secs_f64(d), 1);
+        if by_cfg[pick.as_str()].latency_s <= d {
+            met += 1;
+        }
+        *mix.entry(pick).or_default() += 1;
+    }
+    out.push_str(&format!(
+        "\nmixed trace ({TRACE_LEN} requests, log-uniform deadlines in [{}, {}] s):\n",
+        fmt_eng(lo, 3),
+        fmt_eng(hi, 3)
+    ));
+    let mut t = Table::new(vec!["config", "served", "share"]);
+    for (cfg, n) in &mix {
+        t.row(vec![
+            cfg.clone(),
+            n.to_string(),
+            format!("{:.0}%", 100.0 * *n as f64 / TRACE_LEN as f64),
+        ]);
+    }
+    out.push_str(&t.render());
+    out.push_str(&format!(
+        "deadlines met: {met}/{TRACE_LEN} (misses ride the cheapest config and are flagged)\n"
+    ));
     Ok(out)
 }
 
@@ -769,6 +962,48 @@ mod tests {
             }
         }
         assert!(by_name("fig6").unwrap().render_doc(&bad).unwrap_err().contains("drifted"));
+    }
+
+    #[test]
+    fn renderers_reject_specs_whose_metric_set_omits_a_needed_metric() {
+        use super::super::shard::MetricSet;
+        let engine = SweepEngine::serial();
+        // fig6 needs area_mm2; a subset spec without it runs fine as a
+        // sweep but must be refused at render time.
+        let mut spec = by_name("fig6").unwrap().tiny_spec();
+        spec.metrics = MetricSet::subset(&["energy_j", "latency_s"]).unwrap();
+        let doc = shard::run_full(&spec, &engine).unwrap();
+        let err = by_name("fig6").unwrap().render_doc(&doc).unwrap_err();
+        assert!(err.contains("area_mm2"), "{err}");
+        // With the needed metrics selected, the subset renders and its
+        // table matches the full-set render (fig6 reads nothing else).
+        let mut spec = by_name("fig6").unwrap().tiny_spec();
+        spec.metrics = MetricSet::subset(&["energy_j", "latency_s", "area_mm2"]).unwrap();
+        let subset_doc = shard::run_full(&spec, &engine).unwrap();
+        let full_doc = shard::run_full(&by_name("fig6").unwrap().tiny_spec(), &engine).unwrap();
+        assert_eq!(
+            by_name("fig6").unwrap().render_doc(&subset_doc).unwrap(),
+            by_name("fig6").unwrap().render_doc(&full_doc).unwrap(),
+            "metric selection changed the rendered figure"
+        );
+    }
+
+    #[test]
+    fn serving_latency_tells_a_coherent_ladder_story() {
+        let engine = SweepEngine::serial();
+        let a = by_name("serving-latency").unwrap();
+        let text = a.run_and_render(&engine, false).unwrap();
+        for needle in ["precision ladder", "class budgets", "deadline sweep", "mixed trace"] {
+            assert!(text.contains(needle), "missing '{needle}' in:\n{text}");
+        }
+        for cfg in ["int8", "mixed", "int4"] {
+            assert!(text.contains(cfg), "ladder config '{cfg}' missing:\n{text}");
+        }
+        // The loosest deadline row must keep full quality: the last sweep
+        // deadline clears every config, so the pick is the ladder top.
+        assert!(text.contains("yes"), "no deadline was met:\n{text}");
+        // Deterministic: rendering twice is the identity.
+        assert_eq!(a.run_and_render(&engine, false).unwrap(), text);
     }
 
     #[test]

@@ -257,6 +257,106 @@ impl ChipGeom {
     }
 }
 
+/// The selectable per-point metric keys of a [`PointRecord`], in the
+/// canonical serialization order. A spec's optional `metrics` field names
+/// a subset of these; records then carry only the selected keys.
+pub const METRIC_NAMES: [&str; 10] = [
+    "avg_bits",
+    "energy_j",
+    "latency_s",
+    "area_mm2",
+    "gops",
+    "gops_per_w",
+    "gops_per_w_mm2",
+    "edp_js",
+    "energy_kinds",
+    "gemm_phases",
+];
+
+/// Which metric subset a spec's [`PointRecord`]s carry.
+///
+/// Legacy specs (no `metrics` key) default to [`MetricSet::Full`] — the
+/// exact PR 2–4 wire shape, byte for byte. A subset spec makes every
+/// record smaller on the wire, and turns the metric list into part of the
+/// document contract: [`merge`], [`ShardResult::from_json`], and
+/// [`decode_full_doc`] reject records whose carried metrics drift from the
+/// spec's set (extra *or* missing keys), and renderers refuse specs whose
+/// set omits a metric they need.
+#[derive(Debug, Clone, PartialEq)]
+pub enum MetricSet {
+    /// Every metric in [`METRIC_NAMES`] (the legacy / default shape).
+    Full,
+    /// An explicit subset, stored in canonical [`METRIC_NAMES`] order.
+    Subset(Vec<String>),
+}
+
+impl MetricSet {
+    /// Build a subset from metric names, canonicalizing order. Errors on
+    /// empty input, unknown names, or duplicates.
+    pub fn subset(names: &[&str]) -> Result<MetricSet, String> {
+        if names.is_empty() {
+            return Err("spec: 'metrics' must be non-empty".to_string());
+        }
+        let mut seen = BTreeSet::new();
+        for n in names {
+            if !METRIC_NAMES.contains(n) {
+                return Err(format!(
+                    "spec: unknown metric '{n}' ({})",
+                    METRIC_NAMES.join("|")
+                ));
+            }
+            if !seen.insert(*n) {
+                return Err(format!("spec: duplicate metric '{n}'"));
+            }
+        }
+        Ok(MetricSet::Subset(
+            METRIC_NAMES.iter().filter(|m| seen.contains(*m)).map(|m| m.to_string()).collect(),
+        ))
+    }
+
+    /// True when `name` is part of the selected set.
+    pub fn contains(&self, name: &str) -> bool {
+        match self {
+            MetricSet::Full => true,
+            MetricSet::Subset(names) => names.iter().any(|n| n == name),
+        }
+    }
+
+    /// The selected metric names, in canonical order.
+    pub fn names(&self) -> Vec<&str> {
+        match self {
+            MetricSet::Full => METRIC_NAMES.to_vec(),
+            MetricSet::Subset(names) => names.iter().map(String::as_str).collect(),
+        }
+    }
+
+    /// Error unless every `needed` metric is selected — the guard each
+    /// sweep-driven renderer runs before touching records.
+    pub fn require(&self, needed: &[&str], ctx: &str) -> Result<(), String> {
+        for n in needed {
+            if !self.contains(n) {
+                return Err(format!(
+                    "{ctx}: requires metric '{n}' but the spec's metric set omits it"
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    fn validate(&self) -> Result<(), String> {
+        if let MetricSet::Subset(names) = self {
+            let strs: Vec<&str> = names.iter().map(String::as_str).collect();
+            let canon = MetricSet::subset(&strs)?;
+            if &canon != self {
+                return Err(
+                    "spec: 'metrics' must be listed in canonical METRIC_NAMES order".to_string()
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
 /// One named per-layer bit vector of a [`PrecisionGrid::Explicit`] grid
 /// (e.g. a HAWQ-V3 configuration row).
 #[derive(Debug, Clone, PartialEq)]
@@ -311,6 +411,8 @@ pub enum PrecisionGrid {
 /// use bf_imna::sim::shard::{ChipGeom, PrecisionGrid, SweepSpec};
 /// use bf_imna::util::json::Json;
 ///
+/// use bf_imna::sim::shard::MetricSet;
+///
 /// let spec = SweepSpec {
 ///     nets: vec!["serve_cnn".into()],
 ///     hw: vec!["lr".into()],
@@ -318,6 +420,7 @@ pub enum PrecisionGrid {
 ///     chips: vec![ChipGeom::default_chip()],
 ///     grid: PrecisionGrid::Fixed { bits: vec![4, 8] },
 ///     batch: 1,
+///     metrics: MetricSet::Full,
 /// };
 /// // JSON round trip is the identity.
 /// let text = spec.to_json().to_string();
@@ -340,6 +443,8 @@ pub struct SweepSpec {
     pub grid: PrecisionGrid,
     /// Inference batch size (the paper evaluates batch 1).
     pub batch: u64,
+    /// Which metric subset the records carry (default: the full set).
+    pub metrics: MetricSet,
 }
 
 impl SweepSpec {
@@ -353,6 +458,7 @@ impl SweepSpec {
             chips: vec![ChipGeom::default_chip()],
             grid,
             batch: 1,
+            metrics: MetricSet::Full,
         }
     }
 
@@ -394,14 +500,20 @@ impl SweepSpec {
                 ),
             ]),
         };
-        Json::obj([
+        let mut pairs: Vec<(&str, Json)> = vec![
             ("nets", Json::arr(self.nets.iter().map(|s| Json::Str(s.clone())))),
             ("hw", Json::arr(self.hw.iter().map(|s| Json::Str(s.clone())))),
             ("tech", Json::arr(self.tech.iter().map(|s| Json::Str(s.clone())))),
             ("chips", Json::arr(self.chips.iter().map(ChipGeom::to_json))),
             ("precision", precision),
             ("batch", Json::num(self.batch as f64)),
-        ])
+        ];
+        // Only subset specs carry a 'metrics' key, so legacy full-set
+        // documents keep their exact PR 2–4 bytes.
+        if let MetricSet::Subset(names) = &self.metrics {
+            pairs.push(("metrics", Json::arr(names.iter().map(|n| Json::str(n.clone())))));
+        }
+        Json::obj(pairs)
     }
 
     /// Parse a value produced by [`Self::to_json`]. Legacy PR 2 specs —
@@ -501,7 +613,30 @@ impl SweepSpec {
             .and_then(Json::as_i64)
             .filter(|&b| b >= 1)
             .ok_or("spec: missing positive 'batch'")? as u64;
-        Ok(SweepSpec { nets, hw: strings("hw")?, tech: strings("tech")?, chips, grid, batch })
+        // Metric selection: optional; absent means the full legacy set.
+        // Canonical order is part of the wire format, so a reordered list
+        // is rejected rather than silently normalized.
+        let metrics = match v.get("metrics") {
+            None => MetricSet::Full,
+            Some(m) => {
+                let listed = m
+                    .as_arr()
+                    .ok_or("spec: 'metrics' must be an array")?
+                    .iter()
+                    .map(|s| {
+                        s.as_str().ok_or_else(|| "spec: 'metrics' entries must be strings".to_string())
+                    })
+                    .collect::<Result<Vec<&str>, String>>()?;
+                let set = MetricSet::subset(&listed)?;
+                if set.names() != listed {
+                    return Err(
+                        "spec: 'metrics' must be listed in canonical METRIC_NAMES order".to_string()
+                    );
+                }
+                set
+            }
+        };
+        Ok(SweepSpec { nets, hw: strings("hw")?, tech: strings("tech")?, chips, grid, batch, metrics })
     }
 
     /// Resolve names into simulation inputs, validating the spec. The
@@ -588,6 +723,9 @@ impl SweepSpec {
         if self.batch < 1 {
             return Err("spec: batch must be >= 1".to_string());
         }
+        // Specs built as struct literals can bypass MetricSet::subset, so
+        // re-validate the set here (resolve is every consumer's gate).
+        self.metrics.validate()?;
         // Concrete chips, one per (net, hw, chip-geometry).
         let mut chip_cfgs = Vec::with_capacity(nets.len() * hws.len() * self.chips.len());
         for net in &nets {
@@ -797,31 +935,61 @@ impl PointRecord {
         }
     }
 
-    /// Serialize to a JSON value. Metric floats use shortest round-trip
-    /// formatting, so equal records always serialize to equal bytes.
-    pub fn to_json(&self) -> Json {
-        Json::obj([
+    /// Serialize to a JSON value, carrying only the metrics `metrics`
+    /// selects (coordinates and the index are always present). Metric
+    /// floats use shortest round-trip formatting, so equal records always
+    /// serialize to equal bytes.
+    pub fn to_json(&self, metrics: &MetricSet) -> Json {
+        let mut pairs: Vec<(&str, Json)> = vec![
             ("index", Json::num(self.index as f64)),
             ("net", Json::str(self.net.clone())),
             ("cfg", Json::str(self.cfg.clone())),
             ("hw", Json::str(self.hw.clone())),
             ("tech", Json::str(self.tech.clone())),
             ("chip", Json::str(self.chip.clone())),
-            ("avg_bits", Json::num(self.avg_bits)),
-            ("energy_j", Json::num(self.energy_j)),
-            ("latency_s", Json::num(self.latency_s)),
-            ("area_mm2", Json::num(self.area_mm2)),
-            ("gops", Json::num(self.gops)),
-            ("gops_per_w", Json::num(self.gops_per_w)),
-            ("gops_per_w_mm2", Json::num(self.gops_per_w_mm2)),
-            ("edp_js", Json::num(self.edp_js)),
-            ("energy_kinds", Json::arr(self.energy_kinds.iter().map(|&v| Json::num(v)))),
-            ("gemm_phases", Json::arr(self.gemm_phases.iter().map(|&v| Json::num(v)))),
-        ])
+        ];
+        for (key, value) in self.scalar_metrics() {
+            if metrics.contains(key) {
+                pairs.push((key, Json::num(value)));
+            }
+        }
+        if metrics.contains("energy_kinds") {
+            pairs.push(("energy_kinds", Json::arr(self.energy_kinds.iter().map(|&v| Json::num(v)))));
+        }
+        if metrics.contains("gemm_phases") {
+            pairs.push(("gemm_phases", Json::arr(self.gemm_phases.iter().map(|&v| Json::num(v)))));
+        }
+        Json::obj(pairs)
     }
 
-    /// Parse a value produced by [`Self::to_json`].
-    pub fn from_json(v: &Json) -> Result<PointRecord, String> {
+    /// The scalar metric (key, value) pairs, in [`METRIC_NAMES`] order.
+    fn scalar_metrics(&self) -> [(&'static str, f64); 8] {
+        [
+            ("avg_bits", self.avg_bits),
+            ("energy_j", self.energy_j),
+            ("latency_s", self.latency_s),
+            ("area_mm2", self.area_mm2),
+            ("gops", self.gops),
+            ("gops_per_w", self.gops_per_w),
+            ("gops_per_w_mm2", self.gops_per_w_mm2),
+            ("edp_js", self.edp_js),
+        ]
+    }
+
+    /// Parse a value produced by [`Self::to_json`] under the same metric
+    /// set. Selected metrics must be present; metrics the set omits must
+    /// be **absent** (a record carrying extra metric keys drifted from its
+    /// spec and is rejected, not silently accepted); unselected metrics
+    /// parse as `0.0`.
+    pub fn from_json(v: &Json, metrics: &MetricSet) -> Result<PointRecord, String> {
+        for key in METRIC_NAMES {
+            if !metrics.contains(key) && v.get(key).is_some() {
+                return Err(format!(
+                    "point: carries metric '{key}' the spec's metric set omits — records \
+                     drifted from the spec"
+                ));
+            }
+        }
         let s = |key: &str| -> Result<String, String> {
             v.get(key)
                 .and_then(Json::as_str)
@@ -829,9 +997,15 @@ impl PointRecord {
                 .ok_or_else(|| format!("point: missing '{key}'"))
         };
         let f = |key: &str| -> Result<f64, String> {
+            if !metrics.contains(key) {
+                return Ok(0.0);
+            }
             v.get(key).and_then(Json::as_f64).ok_or_else(|| format!("point: missing '{key}'"))
         };
-        fn farr<const N: usize>(v: &Json, key: &str) -> Result<[f64; N], String> {
+        fn farr<const N: usize>(v: &Json, key: &str, metrics: &MetricSet) -> Result<[f64; N], String> {
+            if !metrics.contains(key) {
+                return Ok([0.0; N]);
+            }
             let arr = v
                 .get(key)
                 .and_then(Json::as_arr)
@@ -864,8 +1038,8 @@ impl PointRecord {
             gops_per_w: f("gops_per_w")?,
             gops_per_w_mm2: f("gops_per_w_mm2")?,
             edp_js: f("edp_js")?,
-            energy_kinds: farr(v, "energy_kinds")?,
-            gemm_phases: farr(v, "gemm_phases")?,
+            energy_kinds: farr(v, "energy_kinds", metrics)?,
+            gemm_phases: farr(v, "gemm_phases", metrics)?,
         })
     }
 
@@ -948,18 +1122,16 @@ fn check_fingerprint(v: &Json, ctx: &str) -> Result<(), String> {
 /// request: which slice of which sweep a worker should run.
 ///
 /// ```
-/// use bf_imna::sim::shard::{ChipGeom, PrecisionGrid, ShardRequest, SweepSpec};
+/// use bf_imna::sim::shard::{PrecisionGrid, ShardRequest, SweepSpec};
 /// use bf_imna::util::json::Json;
 ///
 /// let req = ShardRequest {
-///     spec: SweepSpec {
-///         nets: vec!["serve_cnn".into()],
-///         hw: vec!["lr".into()],
-///         tech: vec!["sram".into()],
-///         chips: vec![ChipGeom::default_chip()],
-///         grid: PrecisionGrid::Fixed { bits: vec![4, 8] },
-///         batch: 1,
-///     },
+///     spec: SweepSpec::single(
+///         "serve_cnn",
+///         vec!["lr".into()],
+///         vec!["sram".into()],
+///         PrecisionGrid::Fixed { bits: vec![4, 8] },
+///     ),
 ///     shards: 2,
 ///     shard_id: 1,
 /// };
@@ -1030,7 +1202,7 @@ impl ShardResult {
             ("shards", Json::num(self.shards as f64)),
             ("shard_id", Json::num(self.shard_id as f64)),
             ("start", Json::num(self.start as f64)),
-            ("points", Json::arr(self.points.iter().map(PointRecord::to_json))),
+            ("points", Json::arr(self.points.iter().map(|p| p.to_json(&self.spec.metrics)))),
         ])
     }
 
@@ -1057,7 +1229,7 @@ impl ShardResult {
             .and_then(Json::as_arr)
             .ok_or("shard result: missing 'points' array")?
             .iter()
-            .map(PointRecord::from_json)
+            .map(|p| PointRecord::from_json(p, &spec.metrics))
             .collect::<Result<Vec<PointRecord>, String>>()?;
         for (k, p) in points.iter().enumerate() {
             if p.index != start + k {
@@ -1143,7 +1315,7 @@ pub fn full_doc(spec: &SweepSpec, points: &[PointRecord]) -> Json {
     Json::obj([
         ("spec", spec.to_json()),
         ("n_points", Json::num(points.len() as f64)),
-        ("points", Json::arr(points.iter().map(PointRecord::to_json))),
+        ("points", Json::arr(points.iter().map(|p| p.to_json(&spec.metrics)))),
     ])
 }
 
@@ -1167,7 +1339,7 @@ pub fn decode_full_doc(doc: &Json) -> Result<(SweepSpec, ResolvedSweep, Vec<Poin
         .and_then(Json::as_arr)
         .ok_or("doc: missing 'points' array")?
         .iter()
-        .map(PointRecord::from_json)
+        .map(|p| PointRecord::from_json(p, &spec.metrics))
         .collect::<Result<Vec<PointRecord>, String>>()?;
     if points.len() != resolved.num_points() {
         return Err(format!(
@@ -1268,10 +1440,10 @@ pub fn merge(docs: &[Json]) -> Result<Json, String> {
     }
     // Coverage: contiguity alone cannot catch a truncated final shard, so
     // re-enumerate the spec and require every point to be present.
-    let resolved = SweepSpec::from_json(spec)
-        .map_err(|e| format!("merge: bad spec in shard documents: {e}"))?
-        .resolve()
-        .map_err(|e| format!("merge: spec does not resolve: {e}"))?;
+    let parsed_spec = SweepSpec::from_json(spec)
+        .map_err(|e| format!("merge: bad spec in shard documents: {e}"))?;
+    let resolved =
+        parsed_spec.resolve().map_err(|e| format!("merge: spec does not resolve: {e}"))?;
     if merged.len() != resolved.num_points() {
         return Err(format!(
             "merge: documents cover {} points but the spec enumerates {}",
@@ -1279,10 +1451,12 @@ pub fn merge(docs: &[Json]) -> Result<Json, String> {
             resolved.num_points()
         ));
     }
-    // Coordinate drift: every record must echo the coordinates the spec
-    // enumerates at its index — index order alone is not trusted.
+    // Coordinate + metric drift: every record must echo the coordinates
+    // the spec enumerates at its index and carry exactly the spec's metric
+    // set — index order alone is not trusted.
     for (i, p) in merged.iter().enumerate() {
-        let rec = PointRecord::from_json(p).map_err(|e| format!("merge: point {i}: {e}"))?;
+        let rec = PointRecord::from_json(p, &parsed_spec.metrics)
+            .map_err(|e| format!("merge: point {i}: {e}"))?;
         rec.check_coords(&resolved, "merge")?;
     }
     Ok(Json::obj([
@@ -1319,6 +1493,7 @@ mod tests {
             ],
             grid: PrecisionGrid::Fixed { bits: vec![4, 8] },
             batch: 1,
+            metrics: MetricSet::Full,
         }
     }
 
@@ -1546,9 +1721,96 @@ mod tests {
     fn records_round_trip_through_json() {
         let shard = run_shard(&small_spec(), 1, 0, &SweepEngine::serial()).unwrap();
         for rec in &shard.points {
-            let back = PointRecord::from_json(&rec.to_json()).unwrap();
+            let back = PointRecord::from_json(&rec.to_json(&MetricSet::Full), &MetricSet::Full)
+                .unwrap();
             assert_eq!(&back, rec);
         }
+    }
+
+    #[test]
+    fn metric_set_validates_and_canonicalizes() {
+        let set = MetricSet::subset(&["latency_s", "energy_j"]).unwrap();
+        // Canonical METRIC_NAMES order: energy_j before latency_s.
+        assert_eq!(set.names(), vec!["energy_j", "latency_s"]);
+        assert!(set.contains("energy_j") && !set.contains("gops"));
+        assert!(set.require(&["energy_j"], "t").is_ok());
+        assert!(set.require(&["gops"], "t").unwrap_err().contains("gops"));
+        assert!(MetricSet::subset(&[]).is_err());
+        assert!(MetricSet::subset(&["joules"]).is_err());
+        assert!(MetricSet::subset(&["energy_j", "energy_j"]).is_err());
+        // Full selects everything.
+        assert_eq!(MetricSet::Full.names().len(), METRIC_NAMES.len());
+    }
+
+    #[test]
+    fn metric_subset_spec_round_trips_and_rejects_reordered_lists() {
+        let mut spec = small_spec();
+        spec.metrics = MetricSet::subset(&["energy_j", "latency_s", "edp_js"]).unwrap();
+        let text = spec.to_json().to_string();
+        assert!(text.contains("\"metrics\""), "{text}");
+        let back = SweepSpec::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, spec);
+        assert_eq!(back.to_json().to_string(), text);
+        // A reordered metric list is not canonical wire format.
+        let bad = text.replace(
+            r#""metrics":["energy_j","latency_s","edp_js"]"#,
+            r#""metrics":["latency_s","energy_j","edp_js"]"#,
+        );
+        assert_ne!(bad, text, "replacement must hit");
+        assert!(SweepSpec::from_json(&Json::parse(&bad).unwrap()).is_err());
+        // Literal-built specs with a bogus set fail at resolve().
+        let mut bogus = small_spec();
+        bogus.metrics = MetricSet::Subset(vec!["latency_s".into(), "energy_j".into()]);
+        assert!(bogus.resolve().unwrap_err().contains("canonical"));
+    }
+
+    #[test]
+    fn subset_records_carry_only_selected_metrics() {
+        let mut spec = small_spec();
+        spec.metrics = MetricSet::subset(&["energy_j", "latency_s"]).unwrap();
+        let shard = run_shard(&spec, 1, 0, &SweepEngine::serial()).unwrap();
+        let doc = shard.to_json();
+        let first = &doc.get("points").and_then(Json::as_arr).unwrap()[0];
+        assert!(first.get("energy_j").is_some() && first.get("latency_s").is_some());
+        for absent in ["gops", "edp_js", "energy_kinds", "gemm_phases", "avg_bits"] {
+            assert!(first.get(absent).is_none(), "subset record leaked '{absent}'");
+        }
+        // The wire round-trips byte-identically under the subset.
+        let back = ShardResult::from_json(&doc).unwrap();
+        assert_eq!(back.to_json().to_string(), doc.to_string());
+    }
+
+    #[test]
+    fn subset_merge_is_byte_identical_and_rejects_metric_drift() {
+        let mut spec = small_spec();
+        spec.metrics = MetricSet::subset(&["energy_j", "latency_s", "area_mm2"]).unwrap();
+        let full = run_full(&spec, &SweepEngine::serial()).unwrap().to_string();
+        let mut docs: Vec<Json> = (0..2)
+            .map(|k| run_shard(&spec, 2, k, &SweepEngine::serial()).unwrap().to_json())
+            .collect();
+        assert_eq!(merge(&docs).unwrap().to_string(), full);
+        // A record smuggling in a metric the spec omits is rejected.
+        if let Json::Obj(m) = &mut docs[0] {
+            if let Some(Json::Arr(points)) = m.get_mut("points") {
+                if let Json::Obj(p) = &mut points[0] {
+                    p.insert("gops".to_string(), Json::num(1.0));
+                }
+            }
+        }
+        let err = merge(&docs).unwrap_err();
+        assert!(err.contains("drifted"), "{err}");
+        // ...and one missing a selected metric is equally rejected.
+        let mut docs: Vec<Json> = (0..2)
+            .map(|k| run_shard(&spec, 2, k, &SweepEngine::serial()).unwrap().to_json())
+            .collect();
+        if let Json::Obj(m) = &mut docs[1] {
+            if let Some(Json::Arr(points)) = m.get_mut("points") {
+                if let Json::Obj(p) = &mut points[0] {
+                    p.remove("area_mm2");
+                }
+            }
+        }
+        assert!(merge(&docs).unwrap_err().contains("area_mm2"));
     }
 
     #[test]

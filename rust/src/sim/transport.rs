@@ -12,8 +12,13 @@
 //!   no deps by design): `POST /shard` runs one slice and replies with the
 //!   [`ShardResult`] document, `POST /cache` absorbs a shipped
 //!   [`CacheSnapshot`] (prewarm over the wire), `GET /healthz` and
-//!   `GET /stats` expose liveness and cache hit/miss counters. The CLI
-//!   front end is `bf-imna serve-worker --addr HOST:PORT`.
+//!   `GET /stats` expose liveness, cache hit/miss counters, and the shard
+//!   admission state. `POST /shard` sits behind **admission control**
+//!   ([`WorkerOpts`]): a bounded number of shards compute concurrently, a
+//!   small queue waits, and overflow gets a machine-readable
+//!   `503`/[`CODE_WORKER_BUSY`] the dispatcher treats as "retry elsewhere,
+//!   worker is alive". The CLI front end is `bf-imna serve-worker --addr
+//!   HOST:PORT [--max-shards N] [--queue-depth N]`.
 //! * [`dispatch`] — the coordinator: assigns contiguous shard ranges,
 //!   fans requests out on scoped threads (one per worker), **reassigns**
 //!   the range of any failed, garbage-replying, or timed-out worker to a
@@ -44,7 +49,7 @@ use std::fmt;
 use std::io::{self, BufReader, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread;
 use std::time::{Duration, Instant};
 
@@ -111,13 +116,13 @@ pub struct Request {
 /// re-arms the socket timeout with the *remaining* budget before every
 /// operation and fails with `TimedOut` once the budget is spent — the
 /// failure the dispatcher's reassignment path expects from a hung worker.
-struct DeadlineStream {
+pub(crate) struct DeadlineStream {
     stream: TcpStream,
     deadline: Instant,
 }
 
 impl DeadlineStream {
-    fn new(stream: TcpStream, budget: Duration) -> DeadlineStream {
+    pub(crate) fn new(stream: TcpStream, budget: Duration) -> DeadlineStream {
         DeadlineStream { stream, deadline: Instant::now() + budget }
     }
 
@@ -298,6 +303,7 @@ fn reason_phrase(status: u16) -> &'static str {
         431 => "Request Header Fields Too Large",
         500 => "Internal Server Error",
         502 => "Bad Gateway",
+        503 => "Service Unavailable",
         505 => "HTTP Version Not Supported",
         _ => "Error",
     }
@@ -411,6 +417,94 @@ struct WorkerStats {
     points_served: AtomicUsize,
     cache_loads: AtomicUsize,
     protocol_errors: AtomicUsize,
+    busy_rejections: AtomicUsize,
+}
+
+/// Worker-side admission control for `POST /shard`: at most
+/// `max_concurrent_shards` shard requests compute at once; up to
+/// `admission_queue` more wait for a slot; anything beyond that is
+/// rejected immediately with `503` + [`CODE_WORKER_BUSY`] — backpressure
+/// the dispatcher treats as "retry elsewhere, worker is alive", never as
+/// worker death.
+#[derive(Debug, Clone)]
+pub struct WorkerOpts {
+    /// Shard requests allowed to compute concurrently (clamped to ≥ 1).
+    /// Each shard already fans out across the engine's worker threads, so
+    /// the default is a small multiple of one, not of the core count.
+    pub max_concurrent_shards: usize,
+    /// Shard requests allowed to wait for a compute slot before new
+    /// arrivals are rejected.
+    pub admission_queue: usize,
+}
+
+impl Default for WorkerOpts {
+    /// Two concurrent shard computations (each is internally parallel),
+    /// four waiters.
+    fn default() -> Self {
+        WorkerOpts { max_concurrent_shards: 2, admission_queue: 4 }
+    }
+}
+
+/// The admission gate behind [`WorkerOpts`] (and the serving front end's
+/// connection budget): a counting slot pool with a bounded wait queue.
+#[derive(Debug)]
+pub(crate) struct AdmissionGate {
+    /// (running, waiting) under one lock.
+    state: Mutex<(usize, usize)>,
+    freed: Condvar,
+    max_running: usize,
+    max_waiting: usize,
+}
+
+/// An admitted slot; releases on drop, so a panicking handler cannot leak
+/// its slot. Owns its gate (`Arc`), so it can move into handler threads.
+pub(crate) struct AdmissionPermit(Arc<AdmissionGate>);
+
+impl Drop for AdmissionPermit {
+    fn drop(&mut self) {
+        let mut st = self.0.state.lock().unwrap();
+        st.0 -= 1;
+        drop(st);
+        self.0.freed.notify_one();
+    }
+}
+
+impl AdmissionGate {
+    pub(crate) fn new(max_running: usize, max_waiting: usize) -> AdmissionGate {
+        AdmissionGate {
+            state: Mutex::new((0, 0)),
+            freed: Condvar::new(),
+            max_running: max_running.max(1),
+            max_waiting,
+        }
+    }
+
+    /// Take a slot from `gate`, waiting in the admission queue when none
+    /// is free. Returns `None` — without blocking — when the queue is
+    /// full. (Associated fn, not a method: the permit owns an `Arc` of
+    /// the gate so it can move into handler threads.)
+    pub(crate) fn admit(gate: &Arc<AdmissionGate>) -> Option<AdmissionPermit> {
+        let mut st = gate.state.lock().unwrap();
+        if st.0 < gate.max_running {
+            st.0 += 1;
+            return Some(AdmissionPermit(Arc::clone(gate)));
+        }
+        if st.1 >= gate.max_waiting {
+            return None;
+        }
+        st.1 += 1;
+        while st.0 >= gate.max_running {
+            st = gate.freed.wait(st).unwrap();
+        }
+        st.1 -= 1;
+        st.0 += 1;
+        Some(AdmissionPermit(Arc::clone(gate)))
+    }
+
+    /// Slots currently held (surfaced on `GET /stats`).
+    pub(crate) fn running(&self) -> usize {
+        self.state.lock().unwrap().0
+    }
 }
 
 /// A running sweep worker: a TCP listener serving the shard protocol on a
@@ -436,18 +530,25 @@ pub struct WorkerServer {
 }
 
 impl WorkerServer {
-    /// Bind `addr` (use port `0` for an ephemeral port) and start serving.
-    /// The returned handle owns the accept loop; dropping it (or calling
+    /// Bind `addr` (use port `0` for an ephemeral port) and start serving
+    /// with default admission control ([`WorkerOpts::default`]). The
+    /// returned handle owns the accept loop; dropping it (or calling
     /// [`Self::shutdown`]) stops the server and releases the listener.
     pub fn spawn(addr: &str, engine: SweepEngine) -> io::Result<WorkerServer> {
+        Self::spawn_with(addr, engine, WorkerOpts::default())
+    }
+
+    /// [`Self::spawn`] with explicit shard admission control.
+    pub fn spawn_with(addr: &str, engine: SweepEngine, opts: WorkerOpts) -> io::Result<WorkerServer> {
         let listener = TcpListener::bind(addr)?;
         let addr = listener.local_addr()?;
         let engine = Arc::new(engine);
         let stop = Arc::new(AtomicBool::new(false));
+        let gate = Arc::new(AdmissionGate::new(opts.max_concurrent_shards, opts.admission_queue));
         let handle = {
             let engine = Arc::clone(&engine);
             let stop = Arc::clone(&stop);
-            thread::spawn(move || accept_loop(listener, engine, stop))
+            thread::spawn(move || accept_loop(listener, engine, stop, gate))
         };
         Ok(WorkerServer { addr, stop, handle: Some(handle), engine })
     }
@@ -498,7 +599,12 @@ impl Drop for WorkerServer {
     }
 }
 
-fn accept_loop(listener: TcpListener, engine: Arc<SweepEngine>, stop: Arc<AtomicBool>) {
+fn accept_loop(
+    listener: TcpListener,
+    engine: Arc<SweepEngine>,
+    stop: Arc<AtomicBool>,
+    gate: Arc<AdmissionGate>,
+) {
     let stats = Arc::new(WorkerStats::default());
     loop {
         let stream = match listener.accept() {
@@ -518,7 +624,8 @@ fn accept_loop(listener: TcpListener, engine: Arc<SweepEngine>, stop: Arc<Atomic
         }
         let engine = Arc::clone(&engine);
         let stats = Arc::clone(&stats);
-        thread::spawn(move || handle_connection(stream, &engine, &stats));
+        let gate = Arc::clone(&gate);
+        thread::spawn(move || handle_connection(stream, &engine, &stats, &gate));
     }
     // The listener drops here: the port closes and peers see refusals.
 }
@@ -526,7 +633,12 @@ fn accept_loop(listener: TcpListener, engine: Arc<SweepEngine>, stop: Arc<Atomic
 /// Per-connection worker: one request, one response, close. All protocol
 /// errors turn into a `4xx`/`5xx` JSON reply; nothing here panics on
 /// hostile bytes.
-fn handle_connection(stream: TcpStream, engine: &SweepEngine, stats: &WorkerStats) {
+fn handle_connection(
+    stream: TcpStream,
+    engine: &SweepEngine,
+    stats: &WorkerStats,
+    gate: &Arc<AdmissionGate>,
+) {
     // The whole request read shares one deadline: a slowloris trickling
     // header or body bytes cannot re-arm the clock per byte.
     let reader = match stream.try_clone() {
@@ -534,7 +646,7 @@ fn handle_connection(stream: TcpStream, engine: &SweepEngine, stats: &WorkerStat
         Err(_) => return,
     };
     let (status, reply) = match read_request(&mut BufReader::new(reader)) {
-        Ok(req) => route(&req, engine, stats),
+        Ok(req) => route(&req, engine, stats, gate),
         Err(e) => {
             stats.protocol_errors.fetch_add(1, Ordering::Relaxed);
             (e.status, err_doc(e.message))
@@ -547,28 +659,35 @@ fn handle_connection(stream: TcpStream, engine: &SweepEngine, stats: &WorkerStat
     let _ = write_response(&mut writer, status, reply.to_string().as_bytes());
 }
 
-fn err_doc(message: impl Into<String>) -> Json {
+pub(crate) fn err_doc(message: impl Into<String>) -> Json {
     Json::obj([("error", Json::str(message.into()))])
 }
 
-fn route(req: &Request, engine: &SweepEngine, stats: &WorkerStats) -> (u16, Json) {
+fn route(
+    req: &Request,
+    engine: &SweepEngine,
+    stats: &WorkerStats,
+    gate: &Arc<AdmissionGate>,
+) -> (u16, Json) {
     match (req.method.as_str(), req.path.as_str()) {
         ("GET", "/healthz") => (200, Json::obj([("ok", Json::Bool(true))])),
-        ("GET", "/stats") => (200, stats_doc(engine, stats)),
-        ("POST", "/shard") => handle_shard(&req.body, engine, stats),
+        ("GET", "/stats") => (200, stats_doc(engine, stats, gate)),
+        ("POST", "/shard") => handle_shard(&req.body, engine, stats, gate),
         ("POST", "/cache") => handle_cache(&req.body, engine, stats),
         ("GET", _) | ("POST", _) => (404, err_doc(format!("no such endpoint {:?}", req.path))),
         _ => (405, err_doc(format!("method {:?} not allowed", req.method))),
     }
 }
 
-fn stats_doc(engine: &SweepEngine, stats: &WorkerStats) -> Json {
+fn stats_doc(engine: &SweepEngine, stats: &WorkerStats, gate: &AdmissionGate) -> Json {
     let cache = engine.cache_stats();
     Json::obj([
         ("shards_served", Json::num(stats.shards_served.load(Ordering::Relaxed) as f64)),
         ("points_served", Json::num(stats.points_served.load(Ordering::Relaxed) as f64)),
         ("cache_loads", Json::num(stats.cache_loads.load(Ordering::Relaxed) as f64)),
         ("protocol_errors", Json::num(stats.protocol_errors.load(Ordering::Relaxed) as f64)),
+        ("busy_rejections", Json::num(stats.busy_rejections.load(Ordering::Relaxed) as f64)),
+        ("shards_in_flight", Json::num(gate.running() as f64)),
         (
             "cache",
             Json::obj([
@@ -580,7 +699,19 @@ fn stats_doc(engine: &SweepEngine, stats: &WorkerStats) -> Json {
     ])
 }
 
-fn handle_shard(body: &[u8], engine: &SweepEngine, stats: &WorkerStats) -> (u16, Json) {
+/// Wire constant: the `code` a worker attaches to a `503` when its shard
+/// admission queue is full. Machine-readable like
+/// [`CODE_FINGERPRINT_MISMATCH`]: the dispatcher keys off the code, not
+/// the human-readable message, and treats it as "the worker is alive but
+/// loaded — retry elsewhere", which never counts toward retirement.
+pub const CODE_WORKER_BUSY: &str = "worker-busy";
+
+fn handle_shard(
+    body: &[u8],
+    engine: &SweepEngine,
+    stats: &WorkerStats,
+    gate: &Arc<AdmissionGate>,
+) -> (u16, Json) {
     let parsed = Json::parse_bytes(body)
         .map_err(|e| format!("bad shard request: {e}"))
         .and_then(|v| ShardRequest::from_json(&v));
@@ -591,7 +722,28 @@ fn handle_shard(body: &[u8], engine: &SweepEngine, stats: &WorkerStats) -> (u16,
             return (400, err_doc(e));
         }
     };
-    match shard::run_shard_prewarmed(&req.spec, req.shards, req.shard_id, engine) {
+    // Admission control: take a compute slot (possibly queueing briefly);
+    // a full queue is an immediate, machine-readable 503 — the request was
+    // valid, the worker is just at capacity.
+    let Some(permit) = AdmissionGate::admit(gate) else {
+        stats.busy_rejections.fetch_add(1, Ordering::Relaxed);
+        return (
+            503,
+            Json::obj([
+                ("code", Json::str(CODE_WORKER_BUSY)),
+                (
+                    "error",
+                    Json::str(format!(
+                        "worker at capacity: {} shard(s) computing and the admission queue is full",
+                        gate.running()
+                    )),
+                ),
+            ]),
+        );
+    };
+    let result = shard::run_shard_prewarmed(&req.spec, req.shards, req.shard_id, engine);
+    drop(permit);
+    match result {
         Ok(result) => {
             stats.shards_served.fetch_add(1, Ordering::Relaxed);
             stats.points_served.fetch_add(result.points.len(), Ordering::Relaxed);
@@ -676,6 +828,10 @@ pub struct DispatchReport {
     /// Shard requests that failed (dead worker, garbage reply, timeout)
     /// and were reassigned to another worker.
     pub retries: usize,
+    /// Shard requests bounced by a worker's admission control (`503` /
+    /// [`CODE_WORKER_BUSY`]) and re-queued — backpressure, not failures:
+    /// they never count toward a worker's retirement.
+    pub busy_retries: usize,
     /// Shards completed per worker, in `workers` input order.
     pub per_worker: Vec<(String, usize)>,
 }
@@ -776,6 +932,7 @@ pub fn dispatch(
     let results: Vec<Mutex<Option<Json>>> = (0..shards).map(|_| Mutex::new(None)).collect();
     let completed = AtomicUsize::new(0);
     let retries = AtomicUsize::new(0);
+    let busy_retries = AtomicUsize::new(0);
     let served: Vec<AtomicUsize> = workers.iter().map(|_| AtomicUsize::new(0)).collect();
     // The most recent fetch failure, kept for the all-workers-failed error
     // so a fleet-wide cause (e.g. a fingerprint mismatch) is named instead
@@ -791,10 +948,12 @@ pub fn dispatch(
             let results = &results;
             let completed = &completed;
             let retries = &retries;
+            let busy_retries = &busy_retries;
             let served = &served;
             let last_error = &last_error;
             s.spawn(move || {
                 let mut failures = 0usize;
+                let mut busy_streak = 0usize;
                 while completed.load(Ordering::SeqCst) < shards {
                     let id = pending.lock().unwrap().pop();
                     let Some(id) = id else {
@@ -809,9 +968,22 @@ pub fn dispatch(
                             served[wi].fetch_add(1, Ordering::Relaxed);
                             completed.fetch_add(1, Ordering::SeqCst);
                             failures = 0;
+                            busy_streak = 0;
                         }
-                        Err(e) => {
-                            *last_error.lock().unwrap() = Some(e);
+                        Err(f) if f.busy && busy_streak < BUSY_RETIRE_STREAK => {
+                            // Backpressure, not failure: the worker is
+                            // alive but at capacity. Re-queue the shard
+                            // (another worker may be free), back off
+                            // briefly, and do not count toward retirement.
+                            // A pathological never-freeing worker still
+                            // retires eventually via the streak cap.
+                            pending.lock().unwrap().push(id);
+                            busy_retries.fetch_add(1, Ordering::Relaxed);
+                            busy_streak += 1;
+                            thread::sleep(Duration::from_millis(20));
+                        }
+                        Err(f) => {
+                            *last_error.lock().unwrap() = Some(f.message);
                             // Reassign: back on the queue before this
                             // worker can possibly retire, so no shard is
                             // ever lost.
@@ -847,12 +1019,33 @@ pub fn dispatch(
     Ok(DispatchReport {
         doc,
         retries: retries.load(Ordering::Relaxed),
+        busy_retries: busy_retries.load(Ordering::Relaxed),
         per_worker: workers
             .iter()
             .cloned()
             .zip(served.iter().map(|c| c.load(Ordering::Relaxed)))
             .collect(),
     })
+}
+
+/// After this many consecutive `worker-busy` bounces from one worker
+/// (each followed by a 20 ms back-off, so ~30 s of sustained saturation)
+/// the dispatcher treats further bounces as ordinary failures — keeping
+/// the sweep live even against a worker that never frees a slot.
+const BUSY_RETIRE_STREAK: usize = 1500;
+
+/// How one shard fetch failed: `busy` marks a `503` carrying
+/// [`CODE_WORKER_BUSY`] — worker-side backpressure, handled by re-queueing
+/// without counting toward the worker's retirement.
+struct FetchFailure {
+    busy: bool,
+    message: String,
+}
+
+impl FetchFailure {
+    fn hard(message: String) -> FetchFailure {
+        FetchFailure { busy: false, message }
+    }
 }
 
 /// One validated shard fetch: POST the work order, require HTTP 200, parse
@@ -862,7 +1055,8 @@ pub fn dispatch(
 /// coordinates pin down, so even a self-consistent reply about the wrong
 /// slice is rejected here. Garbage bytes, wrong shards, and alien specs
 /// all come back as `Err` — the dispatcher retries them elsewhere and they
-/// never reach [`shard::merge`].
+/// never reach [`shard::merge`]. A `503` tagged [`CODE_WORKER_BUSY`] comes
+/// back as a `busy` failure instead (retry elsewhere, worker stays).
 fn fetch_shard(
     addr: &str,
     spec: &SweepSpec,
@@ -870,30 +1064,34 @@ fn fetch_shard(
     shards: usize,
     shard_id: usize,
     timeout: Duration,
-) -> Result<Json, String> {
+) -> Result<Json, FetchFailure> {
     let order = ShardRequest { spec: spec.clone(), shards, shard_id };
     let (status, doc) =
-        http_request_json(addr, "POST", "/shard", order.to_json().to_string().as_bytes(), timeout)?;
+        http_request_json(addr, "POST", "/shard", order.to_json().to_string().as_bytes(), timeout)
+            .map_err(FetchFailure::hard)?;
     if status != 200 {
         let detail = doc.get("error").and_then(Json::as_str).unwrap_or("unknown error");
-        return Err(format!("{addr}: HTTP {status}: {detail}"));
+        let busy = status == 503
+            && doc.get("code").and_then(Json::as_str) == Some(CODE_WORKER_BUSY);
+        return Err(FetchFailure { busy, message: format!("{addr}: HTTP {status}: {detail}") });
     }
-    let result = ShardResult::from_json(&doc).map_err(|e| format!("{addr}: invalid shard reply: {e}"))?;
+    let result = ShardResult::from_json(&doc)
+        .map_err(|e| FetchFailure::hard(format!("{addr}: invalid shard reply: {e}")))?;
     if result.shard_id != shard_id || result.shards != shards || result.spec != *spec {
-        return Err(format!(
+        return Err(FetchFailure::hard(format!(
             "{addr}: reply describes shard {}/{} of another sweep, not the requested {shard_id}/{shards}",
             result.shard_id, result.shards
-        ));
+        )));
     }
     let range = shard::shard_range(n_points, shards, shard_id);
     if result.start != range.start || result.points.len() != range.len() {
-        return Err(format!(
+        return Err(FetchFailure::hard(format!(
             "{addr}: reply covers points {}..{} but shard {shard_id}/{shards} owns {}..{}",
             result.start,
             result.start + result.points.len(),
             range.start,
             range.end
-        ));
+        )));
     }
     // Hand the raw document to merge, not a re-serialization: bytes that
     // passed validation are bytes the worker actually computed.

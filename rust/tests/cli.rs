@@ -31,21 +31,24 @@ fn help_covers_every_command_and_sweep_service_flag() {
     let text = stdout(&out);
     for cmd in [
         "simulate", "sweep", "merge", "serve-worker", "dispatch", "artifacts", "render", "hawq",
-        "compare", "validate", "serve",
+        "compare", "validate", "serve", "infer",
     ] {
         assert!(text.contains(cmd), "help does not mention command '{cmd}'");
     }
-    // The sweep-service + transport + catalog flags the binary accepts
-    // must all be documented.
+    // The sweep-service + transport + catalog + serving flags the binary
+    // accepts must all be documented.
     for flag in [
         "--net", "--bits", "--hw", "--tech", "--breakdown", "--out", "--shards", "--shard-id",
         "--combos", "--seed", "--cache-in", "--cache-out", "--artifacts", "--requests", "--addr",
         "--workers", "--spec", "--timeout-s", "--artifact", "--doc", "--tiny", "--names",
+        "--max-shards", "--queue-depth", "--budget", "--deadline-ms", "--priority",
+        "--batch-hint", "--time-scale", "--stats", "--max-requests",
     ] {
         assert!(text.contains(flag), "help does not mention flag '{flag}'");
     }
-    // The worker's endpoints are operator-facing API; keep them in help.
-    for endpoint in ["/shard", "/cache", "/healthz", "/stats"] {
+    // The worker's and serving front end's endpoints are operator-facing
+    // API; keep them in help.
+    for endpoint in ["/shard", "/cache", "/healthz", "/stats", "/infer"] {
         assert!(text.contains(endpoint), "help does not mention endpoint '{endpoint}'");
     }
     // No args behaves like help.
@@ -277,6 +280,56 @@ fn dispatch_through_worker_binaries_matches_sweep_byte_for_byte() {
     );
 
     let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn serve_and_infer_round_trip_through_the_real_binary() {
+    use std::io::BufRead;
+
+    // `bf-imna serve` on an ephemeral port, sim backend (no artifacts, no
+    // pjrt feature) — the acceptance shape for the serving redesign. The
+    // bound address is announced on stderr.
+    let mut child = Command::new(bin())
+        .args(["serve", "--addr", "127.0.0.1:0"])
+        .stderr(std::process::Stdio::piped())
+        .spawn()
+        .expect("spawn serve");
+    let stderr = child.stderr.take().unwrap();
+    let mut reader = std::io::BufReader::new(stderr);
+    let addr = loop {
+        let mut line = String::new();
+        let n = reader.read_line(&mut line).expect("read serve banner");
+        assert!(n > 0, "serve exited before announcing its address");
+        if let Some(rest) = line.split("http://").nth(1) {
+            break rest.split_whitespace().next().expect("address in banner").to_string();
+        }
+    };
+
+    // Mixed-budget `bf-imna infer` calls against the live server.
+    let out = run(&["infer", "--addr", &addr, "--requests", "3", "--budget", "low"]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = stdout(&out);
+    assert!(text.contains("config"), "{text}");
+    assert!(text.contains("summary:"), "{text}");
+
+    let out = run(&["infer", "--addr", &addr, "--deadline-ms", "5000", "--priority", "high"]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert!(stdout(&out).contains("met"), "{}", stdout(&out));
+
+    // Contradictory budget flags fail loudly on the client.
+    let out = run(&["infer", "--addr", &addr, "--budget", "low", "--deadline-ms", "5"]);
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("not both"));
+
+    // The stats document reflects the served requests.
+    let out = run(&["infer", "--addr", &addr, "--stats"]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let stats = stdout(&out);
+    assert!(stats.contains("\"completed\":4"), "{stats}");
+    assert!(stats.contains("deadline_met"), "{stats}");
+
+    let _ = child.kill();
+    let _ = child.wait();
 }
 
 #[test]

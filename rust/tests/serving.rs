@@ -1,0 +1,339 @@
+//! Default-build serving tests: the coordinator end to end on the sim
+//! backend — no artifacts, no `--features pjrt` — plus the HTTP serving
+//! front end over real sockets.
+//!
+//! What the serving API redesign must guarantee:
+//! * the coordinator runs (and replies) in the default build;
+//! * every response carries a met-or-flagged deadline verdict consistent
+//!   with its own latency and target;
+//! * config choices are deterministic given a fixed request trace (the
+//!   sim backend feeds the controller modeled, not wall-clock, latencies);
+//! * `POST /infer` / `GET /healthz` / `GET /stats` round-trip over TCP.
+
+use std::thread;
+use std::time::Duration;
+
+use bf_imna::coordinator::server::{self as serving, InferRequest};
+use bf_imna::coordinator::{
+    Budget, BudgetSpec, Coordinator, CoordinatorConfig, Priority, RequestSpec, ServingServer,
+};
+use bf_imna::runtime::SimBackend;
+use bf_imna::sim::transport::http_request;
+use bf_imna::util::json::Json;
+use bf_imna::util::rng::Rng;
+
+fn start(calibrate: bool) -> Coordinator {
+    Coordinator::start_sim(
+        CoordinatorConfig {
+            calibrate,
+            batch_window: Duration::from_millis(1),
+            ..CoordinatorConfig::default()
+        },
+        0.0,
+    )
+    .expect("sim-backed coordinator starts in the default build")
+}
+
+fn sample(elems: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..elems).map(|_| rng.f64() as f32 * 2.0 - 1.0).collect()
+}
+
+#[test]
+fn coordinator_serves_in_the_default_build() {
+    let c = start(true);
+    assert_eq!(c.configs(), ["int8", "mixed", "int4"], "descending-quality ladder");
+    let r = c.infer(sample(c.sample_elems(), 1), Budget::High).expect("infer");
+    assert_eq!(r.logits.len(), c.num_classes());
+    assert!(r.logits.iter().all(|x| x.is_finite()));
+    assert!(r.latency_s > 0.0);
+    assert!(r.target_s > 0.0);
+    let m = c.metrics();
+    assert_eq!(m.completed, 1);
+    assert_eq!(m.failed, 0);
+    assert_eq!(m.deadline_met + m.deadline_missed, 1);
+}
+
+#[test]
+fn deadlines_walk_the_ladder_and_are_flagged() {
+    let c = start(false);
+    let elems = c.sample_elems();
+
+    // A generous deadline keeps full quality and is met.
+    let r = c
+        .request(sample(elems, 2))
+        .deadline(Duration::from_secs(10))
+        .submit()
+        .expect("submit")
+        .wait()
+        .expect("response");
+    assert_eq!(r.config, "int8", "a 10s deadline affords the ladder top");
+    assert!(r.met_deadline, "a 10s deadline must be met (latency {})", r.latency_s);
+    assert!((r.target_s - 10.0).abs() < 1e-9);
+
+    // An impossible deadline degrades to the cheapest config and is
+    // flagged as missed — never dropped.
+    let r = c
+        .request(sample(elems, 3))
+        .deadline(Duration::from_nanos(1))
+        .submit()
+        .expect("submit")
+        .wait()
+        .expect("response");
+    assert_eq!(r.config, "int4", "nothing fits 1ns; the controller falls back to cheapest");
+    assert!(!r.met_deadline, "a 1ns deadline cannot be met");
+    assert_eq!(r.logits.len(), c.num_classes(), "flagged responses still carry logits");
+}
+
+#[test]
+fn config_choices_are_deterministic_given_a_fixed_trace() {
+    // The sim backend feeds the controller its modeled latencies, so with
+    // calibration off (wall-clock free) the pick sequence is a pure
+    // function of the request trace.
+    let backend = SimBackend::serve_cnn(0.0);
+    let l4 = backend.modeled_latency_s("int4", 1).expect("int4 modeled");
+    let l8 = backend.modeled_latency_s("int8", 1).expect("int8 modeled");
+    let trace: Vec<BudgetSpec> = vec![
+        BudgetSpec::Class(Budget::High),
+        BudgetSpec::Deadline(Duration::from_secs_f64(l8 * 3.0)),
+        BudgetSpec::Class(Budget::Low),
+        BudgetSpec::Deadline(Duration::from_secs_f64(l4 * 1.05)),
+        BudgetSpec::Deadline(Duration::from_secs_f64((l4 + l8) * 0.6)),
+        BudgetSpec::Class(Budget::Medium),
+        BudgetSpec::Deadline(Duration::from_secs_f64(l4 * 0.5)),
+        BudgetSpec::Deadline(Duration::from_secs_f64(l8 * 10.0)),
+    ];
+    let run = |trace: &[BudgetSpec]| -> Vec<String> {
+        let c = start(false);
+        let elems = c.sample_elems();
+        trace
+            .iter()
+            .enumerate()
+            .map(|(i, &budget)| {
+                // Sequential submits: each request rides its own batch, so
+                // the trace fixes the controller's entire input.
+                c.submit_spec(
+                    sample(elems, 100 + i as u64),
+                    RequestSpec { budget, ..RequestSpec::default() },
+                )
+                .expect("submit")
+                .wait()
+                .expect("response")
+                .config
+            })
+            .collect()
+    };
+    let first = run(&trace);
+    let second = run(&trace);
+    assert_eq!(first, second, "same trace, same coordinator build, different configs");
+    // And the extremes are pinned regardless of the ladder's exact shape.
+    assert_eq!(first[1], "int8", "3x the int8 latency affords full quality");
+    assert_eq!(first[6], "int4", "half the int4 latency fits nothing; cheapest fallback");
+}
+
+#[test]
+fn concurrent_submitters_all_get_consistent_verdicts() {
+    let c = start(true);
+    let elems = c.sample_elems();
+    let mut handles = Vec::new();
+    for t in 0..4u64 {
+        let c = c.clone();
+        handles.push(thread::spawn(move || {
+            let budgets = [Budget::Low, Budget::Medium, Budget::High];
+            (0..8u64)
+                .map(|i| {
+                    let x = sample(elems, 1000 + 100 * t + i);
+                    let pending = if i % 2 == 0 {
+                        c.submit(x, budgets[(i % 3) as usize]).expect("submit")
+                    } else {
+                        c.request(x)
+                            .deadline(Duration::from_millis(1 + 20 * i))
+                            .priority(if i % 4 == 1 { Priority::High } else { Priority::Normal })
+                            .submit()
+                            .expect("submit")
+                    };
+                    pending.wait().expect("response")
+                })
+                .collect::<Vec<_>>()
+        }));
+    }
+    let mut total = 0;
+    for h in handles {
+        for r in h.join().expect("submitter thread") {
+            total += 1;
+            assert!(c.configs().contains(&r.config), "unknown config {}", r.config);
+            assert!(r.target_s > 0.0);
+            // The verdict is exactly the latency-vs-target comparison.
+            assert_eq!(r.met_deadline, r.latency_s <= r.target_s);
+            assert_eq!(r.logits.len(), c.num_classes());
+        }
+    }
+    assert_eq!(total, 32);
+    let m = c.metrics();
+    assert_eq!(m.completed, 32);
+    assert_eq!(m.deadline_met + m.deadline_missed, 32);
+    assert_eq!(m.failed, 0);
+}
+
+#[test]
+fn batch_hints_keep_requests_in_small_batches() {
+    let c = start(true);
+    let elems = c.sample_elems();
+    // A burst of hint-1 requests: whatever batches form, every response
+    // must have ridden a batch of exactly 1.
+    let pendings: Vec<_> = (0..8)
+        .map(|i| {
+            c.request(sample(elems, 2000 + i))
+                .class(Budget::High)
+                .batch_hint(1)
+                .submit()
+                .expect("submit")
+        })
+        .collect();
+    for p in pendings {
+        let r = p.wait().expect("response");
+        assert_eq!(r.batch, 1, "a hint-1 request rode a batch of {}", r.batch);
+    }
+    assert_eq!(c.metrics().completed, 8);
+}
+
+#[test]
+fn rejects_wrong_input_size() {
+    let c = start(false);
+    assert!(c.submit(vec![0.0; 7], Budget::High).is_err());
+    assert!(c.request(vec![0.0; 7]).deadline(Duration::from_millis(5)).submit().is_err());
+}
+
+#[test]
+fn http_front_end_round_trips_over_real_sockets() {
+    let c = start(true);
+    let server = ServingServer::spawn("127.0.0.1:0", c.clone()).expect("bind serving server");
+    let addr = server.addr().to_string();
+    let timeout = Duration::from_secs(30);
+
+    // The health document carries the model contract.
+    let health = serving::fetch_health(&addr, timeout).expect("GET /healthz");
+    assert_eq!(health.get("ok").and_then(Json::as_bool), Some(true));
+    let elems = health.get("sample_elems").and_then(Json::as_i64).expect("sample_elems") as usize;
+    assert_eq!(elems, c.sample_elems());
+    assert!(health.get("configs").and_then(Json::as_arr).is_some_and(|a| !a.is_empty()));
+
+    // A class request and a deadline request both round-trip.
+    let r = serving::infer_remote(
+        &addr,
+        &InferRequest {
+            input: sample(elems, 1),
+            spec: RequestSpec { budget: BudgetSpec::Class(Budget::Low), ..RequestSpec::default() },
+        },
+        timeout,
+    )
+    .expect("class infer");
+    assert_eq!(r.logits.len(), c.num_classes());
+    assert!(c.configs().contains(&r.config));
+    let r = serving::infer_remote(
+        &addr,
+        &InferRequest {
+            input: sample(elems, 2),
+            spec: RequestSpec {
+                budget: BudgetSpec::Deadline(Duration::from_secs(5)),
+                priority: Priority::High,
+                batch_hint: Some(1),
+            },
+        },
+        timeout,
+    )
+    .expect("deadline infer");
+    assert!(r.met_deadline, "a 5s deadline over loopback must be met");
+    assert_eq!(r.batch, 1, "the batch hint survives the wire");
+
+    // The wire responses and the local metrics agree.
+    let stats = serving::fetch_stats(&addr, timeout).expect("GET /stats");
+    assert_eq!(stats.get("completed").and_then(Json::as_i64), Some(2), "{stats}");
+    assert_eq!(stats.get("failed").and_then(Json::as_i64), Some(0));
+
+    // Hostile and invalid requests get clean 4xx, and the server survives.
+    let (status, _) =
+        http_request(&addr, "POST", "/infer", b"this is not json", timeout).expect("bad body");
+    assert_eq!(status, 400);
+    let wrong_size = InferRequest {
+        input: vec![0.5; 3],
+        spec: RequestSpec::default(),
+    };
+    let (status, body) = http_request(
+        &addr,
+        "POST",
+        "/infer",
+        wrong_size.to_json().to_string().as_bytes(),
+        timeout,
+    )
+    .expect("wrong-size request");
+    assert_eq!(status, 400, "{}", String::from_utf8_lossy(&body));
+    let (status, _) = http_request(&addr, "GET", "/no-such", b"", timeout).expect("404 path");
+    assert_eq!(status, 404);
+
+    // Still alive after the abuse.
+    let health = serving::fetch_health(&addr, timeout).expect("final healthz");
+    assert_eq!(health.get("ok").and_then(Json::as_bool), Some(true));
+    server.shutdown();
+}
+
+#[test]
+fn connection_budget_bounces_overflow_with_machine_readable_503() {
+    use std::net::TcpStream;
+
+    let c = start(false);
+    let server = ServingServer::spawn_with(
+        "127.0.0.1:0",
+        c.clone(),
+        bf_imna::coordinator::server::ServeOpts { max_concurrent_requests: 1 },
+    )
+    .expect("bind serving server");
+    let addr = server.addr().to_string();
+    let timeout = Duration::from_secs(10);
+
+    // Occupy the single connection slot with an idle connection (its
+    // handler blocks reading it under the exchange deadline).
+    let hog = TcpStream::connect(&addr).expect("hog connection");
+    thread::sleep(Duration::from_millis(200)); // let the accept loop admit it
+
+    // Every further connection is bounced with the server-busy code.
+    let (status, body) = http_request(&addr, "GET", "/healthz", b"", timeout)
+        .expect("over-budget request still gets an HTTP reply");
+    assert_eq!(status, 503, "{}", String::from_utf8_lossy(&body));
+    let reply = Json::parse_bytes(&body).expect("503 body is JSON");
+    assert_eq!(reply.get("code").and_then(Json::as_str), Some("server-busy"), "{reply}");
+
+    // Releasing the slot restores service.
+    drop(hog);
+    let mut ok = false;
+    for _ in 0..100 {
+        if let Ok((200, _)) = http_request(&addr, "GET", "/healthz", b"", timeout) {
+            ok = true;
+            break;
+        }
+        thread::sleep(Duration::from_millis(20));
+    }
+    assert!(ok, "server did not recover after the hog connection closed");
+    server.shutdown();
+}
+
+#[test]
+fn sim_backend_numerics_agree_between_local_and_wire_paths() {
+    // The same input through the library path and the HTTP path must
+    // produce the same logits (the sim backend is deterministic, and the
+    // wire round-trips f32 losslessly through shortest-round-trip JSON).
+    let c = start(false);
+    let server = ServingServer::spawn("127.0.0.1:0", c.clone()).expect("bind serving server");
+    let addr = server.addr().to_string();
+    let x = sample(c.sample_elems(), 9);
+    let local = c.infer(x.clone(), Budget::High).expect("local infer");
+    let wire = serving::infer_remote(
+        &addr,
+        &InferRequest { input: x, spec: RequestSpec::default() },
+        Duration::from_secs(30),
+    )
+    .expect("wire infer");
+    assert_eq!(local.config, wire.config, "same trace position, same pick");
+    assert_eq!(local.logits, wire.logits, "wire transport perturbed the logits");
+    server.shutdown();
+}

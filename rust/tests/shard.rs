@@ -5,7 +5,7 @@
 //! as independent processes with no coordination.
 
 use bf_imna::mapper::CacheSnapshot;
-use bf_imna::sim::shard::{self, ChipGeom, PrecisionGrid, SweepSpec};
+use bf_imna::sim::shard::{self, ChipGeom, MetricSet, PrecisionGrid, SweepSpec};
 use bf_imna::sim::SweepEngine;
 use bf_imna::util::json::Json;
 use bf_imna::util::proptest::check;
@@ -111,6 +111,18 @@ fn spec_json_round_trip_random() {
                 ..ChipGeom::named("variant")
             });
         }
+        // Half the specs select a random metric subset — metric selection
+        // must round-trip like every other spec axis.
+        let metrics = if rng.bool() {
+            MetricSet::Full
+        } else {
+            let picked: Vec<&str> = shard::METRIC_NAMES
+                .iter()
+                .filter(|_| rng.bool())
+                .copied()
+                .collect();
+            if picked.is_empty() { MetricSet::Full } else { MetricSet::subset(&picked)? }
+        };
         let spec = SweepSpec {
             nets: {
                 let n = 1 + rng.below(2) as usize;
@@ -121,6 +133,7 @@ fn spec_json_round_trip_random() {
             chips,
             grid,
             batch: 1 + rng.below(8),
+            metrics,
         };
         let text = spec.to_json().to_string();
         let back = SweepSpec::from_json(&Json::parse(&text).map_err(|e| e.to_string())?)?;

@@ -18,9 +18,10 @@ use std::net::{Shutdown, TcpListener, TcpStream};
 use std::thread;
 use std::time::Duration;
 
-use bf_imna::sim::shard::{self, PrecisionGrid, ShardResult, SweepSpec};
+use bf_imna::sim::shard::{self, PrecisionGrid, ShardRequest, ShardResult, SweepSpec};
 use bf_imna::sim::transport::{
-    dispatch, http_request, http_request_json, DispatchOpts, WorkerServer,
+    dispatch, http_request, http_request_json, DispatchOpts, WorkerOpts, WorkerServer,
+    CODE_WORKER_BUSY,
 };
 use bf_imna::sim::SweepEngine;
 use bf_imna::util::json::Json;
@@ -347,5 +348,158 @@ fn protocol_abuse_gets_clean_4xx_and_the_worker_survives() {
     assert!(stats.get("protocol_errors").and_then(Json::as_i64).unwrap_or(0) >= 1, "{stats}");
     assert_eq!(stats.get("shards_served").and_then(Json::as_i64), Some(1), "{stats}");
 
+    worker.shutdown();
+}
+
+/// A sweep heavy enough to keep a worker's single compute slot busy for a
+/// while (two big ImageNet nets x two chips x 28 mixed configs).
+fn heavy_spec() -> SweepSpec {
+    let mut spec = SweepSpec::fig7("vgg16", "lr", 4, 7);
+    spec.nets = vec!["vgg16".to_string(), "resnet50".to_string()];
+    spec.hw = vec!["lr".to_string(), "ir".to_string()];
+    spec
+}
+
+#[test]
+fn over_limit_shard_requests_get_machine_readable_503_and_the_worker_survives() {
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::Arc;
+
+    // One compute slot, no admission queue: any overlap must be bounced.
+    let worker = WorkerServer::spawn_with(
+        "127.0.0.1:0",
+        SweepEngine::with_threads(2),
+        WorkerOpts { max_concurrent_shards: 1, admission_queue: 0 },
+    )
+    .expect("bind worker");
+    let addr = worker.addr().to_string();
+
+    // Occupy the slot with a heavy shard from a background thread.
+    let done = Arc::new(AtomicBool::new(false));
+    let first = {
+        let addr = addr.clone();
+        let done = Arc::clone(&done);
+        thread::spawn(move || {
+            let order = ShardRequest { spec: heavy_spec(), shards: 1, shard_id: 0 };
+            let out = http_request_json(
+                &addr,
+                "POST",
+                "/shard",
+                order.to_json().to_string().as_bytes(),
+                Duration::from_secs(300),
+            );
+            done.store(true, Ordering::SeqCst);
+            out
+        })
+    };
+
+    // Wait until the worker reports the shard in flight (or the heavy
+    // shard somehow finishes first — then the 503 leg is skipped rather
+    // than made flaky).
+    let mut saw_in_flight = false;
+    while !done.load(Ordering::SeqCst) {
+        let (status, stats) =
+            http_request_json(&addr, "GET", "/stats", b"", Duration::from_secs(10))
+                .expect("GET /stats");
+        assert_eq!(status, 200);
+        if stats.get("shards_in_flight").and_then(Json::as_i64).unwrap_or(0) >= 1 {
+            saw_in_flight = true;
+            break;
+        }
+        thread::sleep(Duration::from_millis(1));
+    }
+
+    if saw_in_flight {
+        // The overlap request must bounce with the machine-readable code,
+        // fast — the worker replies without waiting for the heavy shard.
+        let order = ShardRequest { spec: small_spec(), shards: 1, shard_id: 0 };
+        let (status, reply) = http_request_json(
+            &addr,
+            "POST",
+            "/shard",
+            order.to_json().to_string().as_bytes(),
+            Duration::from_secs(30),
+        )
+        .expect("overlap request");
+        if status == 503 {
+            assert_eq!(
+                reply.get("code").and_then(Json::as_str),
+                Some(CODE_WORKER_BUSY),
+                "{reply}"
+            );
+        } else {
+            // Lost the race: the heavy shard finished between the stats
+            // poll and this request — it must then have been served fully.
+            assert_eq!(status, 200, "{reply}");
+            ShardResult::from_json(&reply).expect("valid shard reply");
+        }
+    }
+
+    // The occupied slot's own request completes with a valid document.
+    let (status, doc) = first.join().expect("heavy-shard thread").expect("heavy shard reply");
+    assert_eq!(status, 200);
+    ShardResult::from_json(&doc).expect("heavy shard document is valid");
+
+    // And after the backpressure episode the worker still serves.
+    let (status, health) =
+        http_request_json(&addr, "GET", "/healthz", b"", Duration::from_secs(10)).unwrap();
+    assert_eq!(status, 200);
+    assert_eq!(health.get("ok").and_then(Json::as_bool), Some(true));
+    let (_, stats) =
+        http_request_json(&addr, "GET", "/stats", b"", Duration::from_secs(10)).unwrap();
+    if saw_in_flight {
+        // Either the bounce was recorded, or the race resolved to a serve.
+        let bounced = stats.get("busy_rejections").and_then(Json::as_i64).unwrap_or(0);
+        let served = stats.get("shards_served").and_then(Json::as_i64).unwrap_or(0);
+        assert!(bounced + served >= 2, "{stats}");
+    }
+    worker.shutdown();
+}
+
+#[test]
+fn busy_bounces_are_retried_not_counted_toward_retirement() {
+    // One single-slot, zero-queue worker addressed twice: the dispatcher
+    // runs two threads against the same socket, so overlapping requests
+    // bounce with 503 worker-busy. With max_worker_failures = 1, a single
+    // *counted* failure would retire a thread — so the dispatch can only
+    // succeed if busy bounces are handled as backpressure, not failures.
+    let spec = small_spec();
+    let full = reference(&spec);
+    let worker = WorkerServer::spawn_with(
+        "127.0.0.1:0",
+        SweepEngine::with_threads(2),
+        WorkerOpts { max_concurrent_shards: 1, admission_queue: 0 },
+    )
+    .expect("bind worker");
+    let pool = vec![worker.addr().to_string(), worker.addr().to_string()];
+
+    let mut dopts = opts(6);
+    dopts.max_worker_failures = 1;
+    let report = dispatch(&spec, &pool, &dopts).expect("dispatch under backpressure");
+    assert_eq!(report.doc.to_string(), full, "backpressure changed the merged bytes");
+    assert_eq!(report.retries, 0, "busy bounces must not count as failures");
+    let served: usize = report.per_worker.iter().map(|(_, n)| n).sum();
+    assert_eq!(served, 6);
+    worker.shutdown();
+}
+
+#[test]
+fn admission_queue_serializes_instead_of_rejecting() {
+    // With a queue, overlapping requests wait for the slot instead of
+    // bouncing: a multi-shard dispatch against one single-slot worker
+    // completes with zero retries of any kind.
+    let spec = small_spec();
+    let full = reference(&spec);
+    let worker = WorkerServer::spawn_with(
+        "127.0.0.1:0",
+        SweepEngine::with_threads(2),
+        WorkerOpts { max_concurrent_shards: 1, admission_queue: 8 },
+    )
+    .expect("bind worker");
+    let pool = vec![worker.addr().to_string(), worker.addr().to_string()];
+    let report = dispatch(&spec, &pool, &opts(5)).expect("queued dispatch");
+    assert_eq!(report.doc.to_string(), full);
+    assert_eq!(report.retries, 0);
+    assert_eq!(report.busy_retries, 0, "the queue should absorb the overlap");
     worker.shutdown();
 }
