@@ -1,24 +1,44 @@
 //! Bench: the serving request path end to end on the sim backend — the
-//! default-build coordinator under a mixed class/deadline request load.
+//! default-build coordinator under a mixed class/deadline request load —
+//! plus the wire: per-connect vs pooled vs multi-sample exchange rates
+//! against a live `ServingServer` (the `perf_transport` section).
 //!
 //! Measures what the serving redesign makes measurable without PJRT:
 //! submit→batch→pick→execute→reply wall-clock throughput and latency
-//! percentiles, the config mix the bit-fluid controller produces, and the
-//! deadline met fraction. Results are exported to `BENCH_serving.json` at
-//! the repo root so CI tracks the serving trajectory PR-over-PR (the
-//! serving counterpart of `perf_hotpath`'s `BENCH_dse.json`).
+//! percentiles, the config mix the bit-fluid controller produces, the
+//! deadline met fraction, and how much the connection-oriented transport
+//! (keep-alive + `ConnPool`) buys over one-connect-per-request. Results
+//! are exported to `BENCH_serving.json` at the repo root so CI tracks the
+//! serving trajectory PR-over-PR (the serving counterpart of
+//! `perf_hotpath`'s `BENCH_dse.json`); CI's smoke step asserts the pooled
+//! rates beat the per-connect rates on the same run.
 
 use std::collections::BTreeMap;
 use std::path::Path;
 use std::time::{Duration, Instant};
 
-use bf_imna::coordinator::{Budget, Coordinator, CoordinatorConfig};
+use bf_imna::coordinator::server::{self as serving, BatchInferRequest, InferRequest};
+use bf_imna::coordinator::{
+    Budget, BudgetSpec, Coordinator, CoordinatorConfig, Priority, RequestSpec, ServingServer,
+};
+use bf_imna::sim::transport::ConnPool;
 use bf_imna::util::benchkit::banner;
 use bf_imna::util::json::Json;
 use bf_imna::util::rng::Rng;
 use bf_imna::util::table::{fmt_eng, Table};
 
 const REQUESTS: usize = 256;
+/// `GET /stats` exchanges per transport mode — pure wire overhead, no
+/// coordinator latency in the loop, so the connect cost dominates.
+const STATS_EXCHANGES: usize = 200;
+/// `POST /infer` exchanges per transport mode (end-to-end over the wire).
+const INFER_EXCHANGES: usize = 64;
+/// Multi-sample mode: framed requests sent × samples packed into each.
+const MS_EXCHANGES: usize = 4;
+/// Samples per multi-sample framed request.
+const MS_BATCH: usize = 16;
+/// Client-side exchange deadline for the transport section.
+const WIRE_TIMEOUT: Duration = Duration::from_secs(30);
 
 fn main() {
     banner("Serving request path (sim backend, mixed budgets + deadlines)");
@@ -79,11 +99,129 @@ fn main() {
     }
     print!("{}", t.render());
 
-    write_bench_json(wall_s, rps, p50, p99, met, &m, &per_config);
+    let transport = bench_transport();
+    write_bench_json(wall_s, rps, p50, p99, met, &m, &per_config, transport);
+}
+
+/// The `perf_transport` section: the same serving coordinator behind a
+/// live HTTP front end, measuring exchanges/second in three wire modes —
+/// one fresh connection per request, a pooled keep-alive connection, and
+/// multi-sample framed requests over the pooled connection.
+fn bench_transport() -> Json {
+    banner("Transport (per-connect vs pooled vs multi-sample)");
+    let coord = Coordinator::start_sim(CoordinatorConfig::default(), 0.0)
+        .expect("sim-backed coordinator starts in the default build");
+    let elems = coord.sample_elems();
+    let server = ServingServer::spawn("127.0.0.1:0", coord).expect("bind ephemeral port");
+    let addr = server.addr().to_string();
+    let pool = ConnPool::new(2);
+    let spec = RequestSpec {
+        budget: BudgetSpec::Class(Budget::High),
+        priority: Priority::Normal,
+        batch_hint: None,
+    };
+    let mut rng = Rng::new(7);
+    let mut sample = || -> Vec<f32> { (0..elems).map(|_| rng.f64() as f32 * 2.0 - 1.0).collect() };
+
+    // GET /stats — the wire-overhead probe: no batching latency in the
+    // loop, so this isolates connect + frame cost.
+    let t0 = Instant::now();
+    for _ in 0..STATS_EXCHANGES {
+        serving::fetch_stats(&addr, WIRE_TIMEOUT).expect("per-connect /stats");
+    }
+    let stats_per_connect_rps = STATS_EXCHANGES as f64 / t0.elapsed().as_secs_f64();
+    let t0 = Instant::now();
+    for _ in 0..STATS_EXCHANGES {
+        serving::fetch_stats_pooled(&pool, &addr, WIRE_TIMEOUT).expect("pooled /stats");
+    }
+    let stats_pooled_rps = STATS_EXCHANGES as f64 / t0.elapsed().as_secs_f64();
+
+    // POST /infer — end to end over the wire, one sample per exchange.
+    let t0 = Instant::now();
+    for _ in 0..INFER_EXCHANGES {
+        let req = InferRequest { input: sample(), spec: spec.clone() };
+        serving::infer_remote(&addr, &req, WIRE_TIMEOUT).expect("per-connect /infer");
+    }
+    let infer_per_connect_rps = INFER_EXCHANGES as f64 / t0.elapsed().as_secs_f64();
+    let t0 = Instant::now();
+    for _ in 0..INFER_EXCHANGES {
+        let req = InferRequest { input: sample(), spec: spec.clone() };
+        serving::infer_remote_pooled(&pool, &addr, &req, WIRE_TIMEOUT).expect("pooled /infer");
+    }
+    let infer_pooled_rps = INFER_EXCHANGES as f64 / t0.elapsed().as_secs_f64();
+
+    // Multi-sample POST /infer — many samples per framed request over the
+    // pooled connection; the rate is samples/second, comparable to the
+    // single-sample rates above.
+    let t0 = Instant::now();
+    for _ in 0..MS_EXCHANGES {
+        let req = BatchInferRequest {
+            inputs: (0..MS_BATCH).map(|_| sample()).collect(),
+            spec: spec.clone(),
+        };
+        let rs = serving::infer_remote_many(&pool, &addr, &req, WIRE_TIMEOUT)
+            .expect("multi-sample /infer");
+        assert_eq!(rs.len(), MS_BATCH, "one verdict per sample");
+    }
+    let ms_rps = (MS_EXCHANGES * MS_BATCH) as f64 / t0.elapsed().as_secs_f64();
+
+    let ps = pool.stats();
+    server.shutdown();
+
+    let mut t = Table::new(vec!["mode", "exchanges", "rate"]);
+    t.row(vec![
+        "/stats per-connect".to_string(),
+        STATS_EXCHANGES.to_string(),
+        format!("{stats_per_connect_rps:.0} req/s"),
+    ]);
+    t.row(vec![
+        "/stats pooled".to_string(),
+        STATS_EXCHANGES.to_string(),
+        format!("{stats_pooled_rps:.0} req/s"),
+    ]);
+    t.row(vec![
+        "/infer per-connect".to_string(),
+        INFER_EXCHANGES.to_string(),
+        format!("{infer_per_connect_rps:.0} req/s"),
+    ]);
+    t.row(vec![
+        "/infer pooled".to_string(),
+        INFER_EXCHANGES.to_string(),
+        format!("{infer_pooled_rps:.0} req/s"),
+    ]);
+    t.row(vec![
+        format!("/infer multi-sample {MS_EXCHANGES}x{MS_BATCH}"),
+        (MS_EXCHANGES * MS_BATCH).to_string(),
+        format!("{ms_rps:.0} samples/s"),
+    ]);
+    t.row(vec![
+        "pool".to_string(),
+        String::new(),
+        format!("{} fresh, {} reused, {} stale retries", ps.fresh_connects, ps.reuses, ps.stale_retries),
+    ]);
+    print!("{}", t.render());
+
+    Json::obj([
+        ("stats_exchanges", Json::num(STATS_EXCHANGES as f64)),
+        ("stats_per_connect_rps", Json::num(stats_per_connect_rps)),
+        ("stats_pooled_rps", Json::num(stats_pooled_rps)),
+        ("infer_exchanges", Json::num(INFER_EXCHANGES as f64)),
+        ("infer_per_connect_rps", Json::num(infer_per_connect_rps)),
+        ("infer_pooled_rps", Json::num(infer_pooled_rps)),
+        ("multi_sample_exchanges", Json::num(MS_EXCHANGES as f64)),
+        ("multi_sample_batch", Json::num(MS_BATCH as f64)),
+        ("multi_sample_rps", Json::num(ms_rps)),
+        ("pool_fresh_connects", Json::num(ps.fresh_connects as f64)),
+        ("pool_reuses", Json::num(ps.reuses as f64)),
+        ("pool_stale_retries", Json::num(ps.stale_retries as f64)),
+    ])
 }
 
 /// Export the serving timings as canonical JSON at the repo root so CI can
-/// archive the serving-perf trajectory PR-over-PR.
+/// archive the serving-perf trajectory PR-over-PR. The `transport` object
+/// carries the per-connect/pooled/multi-sample wire rates; CI's smoke step
+/// asserts the pooled rates beat the per-connect rates.
+#[allow(clippy::too_many_arguments)]
 fn write_bench_json(
     wall_s: f64,
     rps: f64,
@@ -92,6 +230,7 @@ fn write_bench_json(
     met: usize,
     m: &bf_imna::coordinator::Metrics,
     per_config: &BTreeMap<String, u64>,
+    transport: Json,
 ) {
     let doc = Json::obj([
         ("bench", Json::str("perf_serving/request_path")),
@@ -108,6 +247,7 @@ fn write_bench_json(
             "per_config",
             Json::obj(per_config.iter().map(|(k, &v)| (k.clone(), Json::num(v as f64)))),
         ),
+        ("transport", transport),
     ]);
     let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("BENCH_serving.json");
     match std::fs::write(&path, format!("{doc}\n")) {

@@ -78,9 +78,13 @@ impl Metrics {
         push_windowed(&mut self.request_latencies, self.completed, latency_s);
     }
 
-    /// Latency percentile over completed requests, seconds.
+    /// Latency percentile over the retained request window, seconds. `q`
+    /// is a fraction in `[0, 1]` (`0.5` = median, `0.999` = p999) —
+    /// converted here to the percent scale [`stats::percentile`] expects,
+    /// so callers quoting "p50" actually get the median rather than the
+    /// 0.5th percentile.
     pub fn latency_p(&self, q: f64) -> f64 {
-        stats::percentile(&self.request_latencies, q)
+        stats::percentile(&self.request_latencies, q * 100.0)
     }
 
     /// Mean request latency, seconds.
@@ -130,6 +134,8 @@ impl Metrics {
             ("batch_occupancy", Json::num(self.batch_occupancy())),
             ("latency_p50_s", Json::num(self.latency_p(0.5))),
             ("latency_p99_s", Json::num(self.latency_p(0.99))),
+            ("latency_p999_s", Json::num(self.latency_p(0.999))),
+            ("deadline_met_frac", Json::num(self.deadline_met_frac())),
             ("uptime_s", Json::num(uptime_s)),
             ("throughput_rps", Json::num(self.throughput(uptime_s))),
             (
@@ -182,6 +188,39 @@ mod tests {
             m.record_request(i as f64 / 100.0, true);
         }
         assert!(m.latency_p(0.5) < m.latency_p(0.99));
+        assert!(m.latency_p(0.99) <= m.latency_p(0.999));
+    }
+
+    #[test]
+    fn latency_p_takes_a_fraction_not_a_percent() {
+        // 100 uniform samples in (0, 1]: the median must land near 0.5,
+        // not near the bottom of the distribution (which is what passing
+        // the fraction straight through to the percent-scaled percentile
+        // helper used to produce).
+        let mut m = Metrics::default();
+        for i in 1..=100 {
+            m.record_request(i as f64 / 100.0, true);
+        }
+        let p50 = m.latency_p(0.5);
+        assert!((0.4..=0.6).contains(&p50), "median {p50} is not near 0.5");
+        let p999 = m.latency_p(0.999);
+        assert!(p999 >= 0.99, "p999 {p999} should sit at the top of the window");
+    }
+
+    #[test]
+    fn stats_document_reports_tail_latency_and_met_rate() {
+        let mut m = Metrics::default();
+        for i in 0..10 {
+            m.record_request(0.01 * (i + 1) as f64, i < 9);
+        }
+        let doc = m.to_json(1.0);
+        let p50 = doc.get("latency_p50_s").and_then(Json::as_f64).unwrap();
+        let p99 = doc.get("latency_p99_s").and_then(Json::as_f64).unwrap();
+        let p999 = doc.get("latency_p999_s").and_then(Json::as_f64).unwrap();
+        assert!(p50 <= p99 && p99 <= p999, "percentiles must be ordered: {p50} {p99} {p999}");
+        assert!((0.04..=0.07).contains(&p50), "median of 0.01..=0.10 near 0.055, got {p50}");
+        let met = doc.get("deadline_met_frac").and_then(Json::as_f64).unwrap();
+        assert!((met - 0.9).abs() < 1e-12, "9 of 10 met: {met}");
     }
 
     #[test]

@@ -6,22 +6,34 @@
 //! whole-exchange deadline streams — see [`crate::sim::transport`]), with
 //! three endpoints:
 //!
-//! * `POST /infer` — one inference request ([`InferRequest`] JSON: the
-//!   input sample plus the full request descriptor — budget class or
-//!   explicit `deadline_ms`, priority, batch hint). The reply carries the
-//!   logits, the precision config that served it, and the
-//!   met-or-flagged-deadline verdict.
+//! * `POST /infer` — one inference exchange. Either a single sample
+//!   ([`InferRequest`] JSON: the input plus the full request descriptor —
+//!   budget class or explicit `deadline_ms`, priority, batch hint) or a
+//!   **multi-sample** body ([`BatchInferRequest`]: an `inputs` array of
+//!   samples sharing one descriptor), whose reply carries one verdict per
+//!   sample under `results`. Every verdict carries the logits, the
+//!   precision config that served it, and the met-or-flagged-deadline
+//!   flag.
 //! * `GET /healthz` — liveness plus the model contract (sample element
 //!   count, class count, loaded config ladder), so clients can size their
 //!   inputs without out-of-band knowledge.
 //! * `GET /stats` — the serving [`Metrics`](super::Metrics) document
-//!   (completed/failed, deadline met/missed, latency percentiles,
-//!   throughput, per-config mix).
+//!   (completed/failed, deadline met/missed, p50/p99/p999 latency,
+//!   met-deadline rate, throughput, per-config mix).
+//!
+//! Connections are keep-alive: the server loops framed exchanges on one
+//! socket (idle timeout, per-connection request cap, `connection: close`
+//! honored — the lifecycle in [`crate::sim::transport`]'s module docs),
+//! and the pooled clients ([`infer_remote_pooled`], [`infer_remote_many`],
+//! [`fetch_stats_pooled`]) reuse sockets through a
+//! [`ConnPool`](crate::sim::transport::ConnPool). An admitted connection
+//! holds its admission slot for its whole life, which both knobs bound.
 //!
 //! CLI front ends: `bf-imna serve --addr HOST:PORT` (server) and
-//! `bf-imna infer --addr HOST:PORT` (client; also `--stats`). The client
-//! half of this module ([`infer_remote`], [`fetch_stats`],
-//! [`fetch_health`]) is what `bf-imna infer` calls.
+//! `bf-imna infer --addr HOST:PORT` (client; also `--stats`, `--count`,
+//! `--batch`). The client half of this module ([`infer_remote`],
+//! [`fetch_stats`], [`fetch_health`], and the pooled variants) is what
+//! `bf-imna infer` calls.
 
 use std::io::{self, BufReader};
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -33,8 +45,8 @@ use std::time::Duration;
 use super::controller::{Budget, BudgetSpec};
 use super::{Coordinator, Priority, RequestSpec, Response};
 use crate::sim::transport::{
-    err_doc, http_request_json, read_request, write_response, AdmissionGate, DeadlineStream,
-    Request,
+    err_doc, http_request_json, read_request, serve_exchanges, write_response, AdmissionGate,
+    ConnPolicy, ConnPool, DeadlineStream, Request,
 };
 use crate::util::json::Json;
 
@@ -57,24 +69,39 @@ pub const MAX_DEADLINE_MS: f64 = 86_400_000.0;
 /// the sweep worker's `worker-busy`.
 pub const CODE_SERVER_BUSY: &str = "server-busy";
 
-/// Admission control for the serving front end: a hard cap on concurrent
-/// connections (each holds one handler thread and, for `/infer`, one
-/// pending coordinator reply). Connections beyond the cap are answered
-/// `503` + [`CODE_SERVER_BUSY`] by a short-deadline rejection handler
-/// that does no coordinator work — the same backpressure discipline the
-/// sweep worker applies to `POST /shard`.
+/// Admission control and connection policy for the serving front end: a
+/// hard cap on concurrent connections (each holds one handler thread
+/// and, for `/infer`, one pending coordinator reply). Connections beyond
+/// the cap are answered `503` + [`CODE_SERVER_BUSY`] by a short-deadline
+/// rejection handler that does no coordinator work — the same
+/// backpressure discipline the sweep worker applies to `POST /shard`.
+///
+/// A keep-alive connection holds its admission slot for its whole life,
+/// so `idle_timeout` and `max_requests_per_conn` are what bound a quiet
+/// or hogging client's hold on the budget.
 #[derive(Debug, Clone)]
 pub struct ServeOpts {
     /// Concurrent connections allowed (clamped to ≥ 1).
     pub max_concurrent_requests: usize,
+    /// How long a keep-alive connection may sit idle between requests
+    /// before the server closes it (and frees its admission slot).
+    pub idle_timeout: Duration,
+    /// Requests served on one connection before the server answers the
+    /// last with `connection: close` and hangs up (clamped to ≥ 1).
+    pub max_requests_per_conn: usize,
 }
 
 impl Default for ServeOpts {
     /// 256 concurrent connections — far above the worker thread's
     /// throughput needs, low enough that a connection flood cannot grow
-    /// threads and queued requests without bound.
+    /// threads and queued requests without bound. Keep-alive connections
+    /// idle out after 60 s and are recycled after 1024 requests.
     fn default() -> Self {
-        ServeOpts { max_concurrent_requests: 256 }
+        ServeOpts {
+            max_concurrent_requests: 256,
+            idle_timeout: Duration::from_secs(60),
+            max_requests_per_conn: 1024,
+        }
     }
 }
 
@@ -92,23 +119,82 @@ pub struct InferRequest {
     pub spec: RequestSpec,
 }
 
+/// Append the descriptor fields (`budget` / `deadline_ms`, `priority`,
+/// `batch_hint`) a request body shares regardless of sample count.
+fn push_spec_fields(pairs: &mut Vec<(&str, Json)>, spec: &RequestSpec) {
+    match spec.budget {
+        BudgetSpec::Class(b) => pairs.push(("budget", Json::str(b.label()))),
+        BudgetSpec::Deadline(d) => pairs.push(("deadline_ms", Json::num(d.as_secs_f64() * 1e3))),
+    }
+    if spec.priority != Priority::Normal {
+        pairs.push(("priority", Json::str(spec.priority.label())));
+    }
+    if let Some(h) = spec.batch_hint {
+        pairs.push(("batch_hint", Json::num(h as f64)));
+    }
+}
+
+/// Parse the descriptor fields shared by [`InferRequest`] and
+/// [`BatchInferRequest`] bodies. Rejects requests carrying both a class
+/// and a deadline, and non-finite or out-of-range deadlines.
+fn spec_from_json(v: &Json) -> Result<RequestSpec, String> {
+    let budget = match (v.get("budget"), v.get("deadline_ms")) {
+        (Some(_), Some(_)) => {
+            return Err(
+                "infer request: give either 'budget' or 'deadline_ms', not both".to_string()
+            )
+        }
+        (Some(b), None) => BudgetSpec::Class(Budget::parse(
+            b.as_str().ok_or("infer request: 'budget' must be a string")?,
+        )?),
+        (None, Some(d)) => {
+            let ms = d.as_f64().ok_or("infer request: 'deadline_ms' must be a number")?;
+            if !(ms.is_finite() && ms > 0.0 && ms <= MAX_DEADLINE_MS) {
+                return Err(format!(
+                    "infer request: 'deadline_ms' must be in (0, {MAX_DEADLINE_MS}]"
+                ));
+            }
+            BudgetSpec::Deadline(Duration::from_secs_f64(ms / 1e3))
+        }
+        (None, None) => BudgetSpec::Class(Budget::High),
+    };
+    let priority = match v.get("priority") {
+        None => Priority::Normal,
+        Some(p) => {
+            Priority::parse(p.as_str().ok_or("infer request: 'priority' must be a string")?)?
+        }
+    };
+    let batch_hint = match v.get("batch_hint") {
+        None => None,
+        Some(h) => Some(
+            h.as_i64()
+                .filter(|&n| n >= 1)
+                .ok_or("infer request: 'batch_hint' must be an integer >= 1")?
+                as u64,
+        ),
+    };
+    Ok(RequestSpec { budget, priority, batch_hint })
+}
+
+/// Parse one sample array (a JSON array of numbers) into `f32`s.
+fn sample_from_json(v: &Json, what: &str) -> Result<Vec<f32>, String> {
+    v.as_arr()
+        .ok_or_else(|| format!("infer request: {what} must be an array"))?
+        .iter()
+        .map(|x| {
+            x.as_f64()
+                .map(|f| f as f32)
+                .ok_or_else(|| format!("infer request: {what} entries must be numbers"))
+        })
+        .collect()
+}
+
 impl InferRequest {
     /// Serialize to the canonical wire body.
     pub fn to_json(&self) -> Json {
         let mut pairs: Vec<(&str, Json)> =
             vec![("input", Json::arr(self.input.iter().map(|&x| Json::num(x as f64))))];
-        match self.spec.budget {
-            BudgetSpec::Class(b) => pairs.push(("budget", Json::str(b.label()))),
-            BudgetSpec::Deadline(d) => {
-                pairs.push(("deadline_ms", Json::num(d.as_secs_f64() * 1e3)))
-            }
-        }
-        if self.spec.priority != Priority::Normal {
-            pairs.push(("priority", Json::str(self.spec.priority.label())));
-        }
-        if let Some(h) = self.spec.batch_hint {
-            pairs.push(("batch_hint", Json::num(h as f64)));
-        }
+        push_spec_fields(&mut pairs, &self.spec);
         Json::obj(pairs)
     }
 
@@ -116,53 +202,60 @@ impl InferRequest {
     /// HTTP client). Rejects requests carrying both a class and a
     /// deadline, non-finite deadlines, and non-numeric inputs.
     pub fn from_json(v: &Json) -> Result<InferRequest, String> {
-        let input = v
-            .get("input")
-            .and_then(Json::as_arr)
-            .ok_or("infer request: missing 'input' array")?
-            .iter()
-            .map(|x| {
-                x.as_f64()
-                    .map(|f| f as f32)
-                    .ok_or_else(|| "infer request: 'input' entries must be numbers".to_string())
-            })
-            .collect::<Result<Vec<f32>, String>>()?;
-        let budget = match (v.get("budget"), v.get("deadline_ms")) {
-            (Some(_), Some(_)) => {
-                return Err(
-                    "infer request: give either 'budget' or 'deadline_ms', not both".to_string()
-                )
-            }
-            (Some(b), None) => BudgetSpec::Class(Budget::parse(
-                b.as_str().ok_or("infer request: 'budget' must be a string")?,
-            )?),
-            (None, Some(d)) => {
-                let ms = d.as_f64().ok_or("infer request: 'deadline_ms' must be a number")?;
-                if !(ms.is_finite() && ms > 0.0 && ms <= MAX_DEADLINE_MS) {
-                    return Err(format!(
-                        "infer request: 'deadline_ms' must be in (0, {MAX_DEADLINE_MS}]"
-                    ));
-                }
-                BudgetSpec::Deadline(Duration::from_secs_f64(ms / 1e3))
-            }
-            (None, None) => BudgetSpec::Class(Budget::High),
-        };
-        let priority = match v.get("priority") {
-            None => Priority::Normal,
-            Some(p) => Priority::parse(
-                p.as_str().ok_or("infer request: 'priority' must be a string")?,
-            )?,
-        };
-        let batch_hint = match v.get("batch_hint") {
-            None => None,
-            Some(h) => Some(
-                h.as_i64()
-                    .filter(|&n| n >= 1)
-                    .ok_or("infer request: 'batch_hint' must be an integer >= 1")?
-                    as u64,
+        let input = sample_from_json(
+            v.get("input").ok_or("infer request: missing 'input' array")?,
+            "'input'",
+        )?;
+        Ok(InferRequest { input, spec: spec_from_json(v)? })
+    }
+}
+
+/// A multi-sample wire request: many input samples riding one framed
+/// `POST /infer` exchange under one shared descriptor. The JSON shape is
+/// `{"inputs": [[...], ...], ...}` with the same descriptor fields as
+/// [`InferRequest`]; the reply is `{"results": [...]}` with one
+/// [`Response`] document per sample, in input order. Amortizes framing
+/// as well as connects, and lands all samples in the coordinator's batch
+/// window together.
+#[derive(Debug, Clone)]
+pub struct BatchInferRequest {
+    /// The input samples, each row-major `(H, W, C)`.
+    pub inputs: Vec<Vec<f32>>,
+    /// The request descriptor every sample shares.
+    pub spec: RequestSpec,
+}
+
+impl BatchInferRequest {
+    /// Serialize to the canonical wire body.
+    pub fn to_json(&self) -> Json {
+        let mut pairs: Vec<(&str, Json)> = vec![(
+            "inputs",
+            Json::arr(
+                self.inputs
+                    .iter()
+                    .map(|s| Json::arr(s.iter().map(|&x| Json::num(x as f64)))),
             ),
-        };
-        Ok(InferRequest { input, spec: RequestSpec { budget, priority, batch_hint } })
+        )];
+        push_spec_fields(&mut pairs, &self.spec);
+        Json::obj(pairs)
+    }
+
+    /// Parse a value produced by [`Self::to_json`]. Rejects empty sample
+    /// lists (an exchange must carry work) and everything
+    /// [`InferRequest::from_json`] rejects.
+    pub fn from_json(v: &Json) -> Result<BatchInferRequest, String> {
+        let inputs = v
+            .get("inputs")
+            .and_then(Json::as_arr)
+            .ok_or("infer request: missing 'inputs' array")?
+            .iter()
+            .enumerate()
+            .map(|(i, s)| sample_from_json(s, &format!("'inputs[{i}]'")))
+            .collect::<Result<Vec<Vec<f32>>, String>>()?;
+        if inputs.is_empty() {
+            return Err("infer request: 'inputs' must carry at least one sample".to_string());
+        }
+        Ok(BatchInferRequest { inputs, spec: spec_from_json(v)? })
     }
 }
 
@@ -245,7 +338,7 @@ impl ServingServer {
         Self::spawn_with(addr, coordinator, ServeOpts::default())
     }
 
-    /// [`Self::spawn`] with an explicit connection budget.
+    /// [`Self::spawn`] with an explicit connection budget and policy.
     pub fn spawn_with(
         addr: &str,
         coordinator: Coordinator,
@@ -256,9 +349,16 @@ impl ServingServer {
         let stop = Arc::new(AtomicBool::new(false));
         let gate = Arc::new(AdmissionGate::new(opts.max_concurrent_requests, 0));
         let reject_gate = Arc::new(AdmissionGate::new(REJECT_POOL, 0));
+        let policy = ConnPolicy {
+            exchange_deadline: SERVE_EXCHANGE_DEADLINE,
+            idle_timeout: opts.idle_timeout,
+            max_requests: opts.max_requests_per_conn,
+        };
         let handle = {
             let stop = Arc::clone(&stop);
-            thread::spawn(move || accept_loop(listener, coordinator, stop, gate, reject_gate))
+            thread::spawn(move || {
+                accept_loop(listener, coordinator, stop, gate, reject_gate, policy)
+            })
         };
         Ok(ServingServer { addr, stop, handle: Some(handle) })
     }
@@ -306,6 +406,7 @@ fn accept_loop(
     stop: Arc<AtomicBool>,
     gate: Arc<AdmissionGate>,
     reject_gate: Arc<AdmissionGate>,
+    policy: ConnPolicy,
 ) {
     loop {
         let stream = match listener.accept() {
@@ -339,10 +440,11 @@ fn accept_loop(
         };
         let coordinator = coordinator.clone();
         thread::spawn(move || {
-            // The permit rides the handler thread; dropping it (normal
-            // return or panic) frees the slot.
+            // The permit rides the handler thread for the connection's
+            // whole keep-alive life; dropping it (normal return or
+            // panic) frees the slot.
             let _permit = permit;
-            handle_connection(stream, &coordinator);
+            handle_connection(stream, policy, &coordinator);
         });
     }
 }
@@ -373,19 +475,14 @@ fn reject_busy(stream: TcpStream) {
     let _ = write_response(&mut writer, 503, reply.to_string().as_bytes());
 }
 
-/// One request, one response, close — the same exchange discipline (and
-/// slowloris protection) as the sweep worker.
-fn handle_connection(stream: TcpStream, coordinator: &Coordinator) {
-    let reader = match stream.try_clone() {
-        Ok(s) => DeadlineStream::new(s, SERVE_EXCHANGE_DEADLINE),
-        Err(_) => return,
-    };
-    let (status, reply) = match read_request(&mut BufReader::new(reader)) {
-        Ok(req) => route(&req, coordinator),
-        Err(e) => (e.status, err_doc(e.message)),
-    };
-    let mut writer = DeadlineStream::new(stream, SERVE_EXCHANGE_DEADLINE);
-    let _ = write_response(&mut writer, status, reply.to_string().as_bytes());
+/// The shared keep-alive loop with the serving protocol routed in — the
+/// same per-exchange discipline (and slowloris protection) as the sweep
+/// worker.
+fn handle_connection(stream: TcpStream, policy: ConnPolicy, coordinator: &Coordinator) {
+    serve_exchanges(stream, &policy, |parsed| match parsed {
+        Ok(req) => route(req, coordinator),
+        Err(e) => (e.status, err_doc(e.message.clone())),
+    });
 }
 
 fn route(req: &Request, coordinator: &Coordinator) -> (u16, Json) {
@@ -413,10 +510,17 @@ fn health_doc(coordinator: &Coordinator) -> Json {
 }
 
 fn handle_infer(body: &[u8], coordinator: &Coordinator) -> (u16, Json) {
-    let req = match Json::parse_bytes(body)
-        .map_err(|e| format!("bad infer request: {e}"))
-        .and_then(|v| InferRequest::from_json(&v))
-    {
+    let v = match Json::parse_bytes(body) {
+        Ok(v) => v,
+        Err(e) => return (400, err_doc(format!("bad infer request: {e}"))),
+    };
+    // The multi-sample shape is keyed by `inputs`; its presence selects
+    // the branch so a body carrying neither gets the single-sample
+    // parser's "missing 'input'" message.
+    if v.get("inputs").is_some() {
+        return handle_infer_batch(&v, coordinator);
+    }
+    let req = match InferRequest::from_json(&v) {
         Ok(req) => req,
         Err(e) => return (400, err_doc(e)),
     };
@@ -433,11 +537,63 @@ fn handle_infer(body: &[u8], coordinator: &Coordinator) -> (u16, Json) {
     }
 }
 
+/// The multi-sample `/infer` branch: submit every sample before awaiting
+/// any, so they all land inside one coordinator batch window, then reply
+/// with per-sample verdicts in input order.
+fn handle_infer_batch(v: &Json, coordinator: &Coordinator) -> (u16, Json) {
+    let req = match BatchInferRequest::from_json(v) {
+        Ok(req) => req,
+        Err(e) => return (400, err_doc(e)),
+    };
+    // Validate every sample up front: rejecting mid-batch would leave the
+    // already-submitted samples running with their replies dropped.
+    for (i, input) in req.inputs.iter().enumerate() {
+        if input.len() != coordinator.sample_elems() {
+            return (
+                400,
+                err_doc(format!(
+                    "infer request: 'inputs[{i}]' has {} elements, the model expects {}",
+                    input.len(),
+                    coordinator.sample_elems()
+                )),
+            );
+        }
+    }
+    let mut pendings = Vec::with_capacity(req.inputs.len());
+    for input in req.inputs {
+        match coordinator.submit_spec(input, req.spec.clone()) {
+            Ok(p) => pendings.push(p),
+            // Sizes were validated above, so only a shut-down coordinator
+            // lands here — a server-side failure.
+            Err(e) => return (500, err_doc(e.to_string())),
+        }
+    }
+    let mut results = Vec::with_capacity(pendings.len());
+    for pending in pendings {
+        match pending.wait_timeout(REPLY_DEADLINE) {
+            Ok(r) => results.push(response_to_json(&r)),
+            Err(e) => return (500, err_doc(e.to_string())),
+        }
+    }
+    (200, Json::obj([("results", Json::arr(results))]))
+}
+
 // ---------------------------------------------------------------------
 // Client half — what `bf-imna infer` drives.
 // ---------------------------------------------------------------------
 
+/// Turn one `/infer` reply `(status, doc)` into a [`Response`].
+fn parse_infer_reply(addr: &str, status: u16, doc: &Json) -> Result<Response, String> {
+    if status != 200 {
+        let detail = doc.get("error").and_then(Json::as_str).unwrap_or("unknown error");
+        return Err(format!("{addr}: HTTP {status}: {detail}"));
+    }
+    response_from_json(doc).map_err(|e| format!("{addr}: invalid infer reply: {e}"))
+}
+
 /// Send one inference request to a serving front end and parse the reply.
+/// Opens (and closes) a fresh connection per call; latency-sensitive
+/// callers should prefer [`infer_remote_pooled`].
 pub fn infer_remote(
     addr: &str,
     req: &InferRequest,
@@ -445,16 +601,71 @@ pub fn infer_remote(
 ) -> Result<Response, String> {
     let (status, doc) =
         http_request_json(addr, "POST", "/infer", req.to_json().to_string().as_bytes(), timeout)?;
+    parse_infer_reply(addr, status, &doc)
+}
+
+/// [`infer_remote`] over a pooled keep-alive connection: every call after
+/// the first rides an already-open socket (with the pool's health check
+/// and stale-retry semantics).
+pub fn infer_remote_pooled(
+    pool: &ConnPool,
+    addr: &str,
+    req: &InferRequest,
+    timeout: Duration,
+) -> Result<Response, String> {
+    let (status, doc) = pool
+        .request_json(addr, "POST", "/infer", req.to_json().to_string().as_bytes(), timeout)
+        .map_err(|e| e.message)?;
+    parse_infer_reply(addr, status, &doc)
+}
+
+/// Send a multi-sample request ([`BatchInferRequest`]) over a pooled
+/// connection and parse the per-sample verdicts, returned in input
+/// order. The server guarantees `results` matches the sample count on
+/// success; a reply that does not is reported as invalid.
+pub fn infer_remote_many(
+    pool: &ConnPool,
+    addr: &str,
+    req: &BatchInferRequest,
+    timeout: Duration,
+) -> Result<Vec<Response>, String> {
+    let (status, doc) = pool
+        .request_json(addr, "POST", "/infer", req.to_json().to_string().as_bytes(), timeout)
+        .map_err(|e| e.message)?;
     if status != 200 {
         let detail = doc.get("error").and_then(Json::as_str).unwrap_or("unknown error");
         return Err(format!("{addr}: HTTP {status}: {detail}"));
     }
-    response_from_json(&doc).map_err(|e| format!("{addr}: invalid infer reply: {e}"))
+    let results = doc
+        .get("results")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| format!("{addr}: invalid infer reply: missing 'results' array"))?;
+    if results.len() != req.inputs.len() {
+        return Err(format!(
+            "{addr}: invalid infer reply: {} results for {} samples",
+            results.len(),
+            req.inputs.len()
+        ));
+    }
+    results
+        .iter()
+        .map(|r| response_from_json(r).map_err(|e| format!("{addr}: invalid infer reply: {e}")))
+        .collect()
 }
 
 /// Fetch a serving front end's `/stats` document.
 pub fn fetch_stats(addr: &str, timeout: Duration) -> Result<Json, String> {
     let (status, doc) = http_request_json(addr, "GET", "/stats", b"", timeout)?;
+    if status != 200 {
+        return Err(format!("{addr}: GET /stats returned HTTP {status}"));
+    }
+    Ok(doc)
+}
+
+/// [`fetch_stats`] over a pooled keep-alive connection.
+pub fn fetch_stats_pooled(pool: &ConnPool, addr: &str, timeout: Duration) -> Result<Json, String> {
+    let (status, doc) =
+        pool.request_json(addr, "GET", "/stats", b"", timeout).map_err(|e| e.message)?;
     if status != 200 {
         return Err(format!("{addr}: GET /stats returned HTTP {status}"));
     }
@@ -519,6 +730,34 @@ mod tests {
         // No budget at all defaults to the loosest class.
         let plain = InferRequest::from_json(&Json::parse(r#"{"input":[1.0]}"#).unwrap()).unwrap();
         assert_eq!(plain.spec.budget, BudgetSpec::Class(Budget::High));
+    }
+
+    #[test]
+    fn batch_infer_request_round_trips_and_rejects_empty() {
+        let req = BatchInferRequest {
+            inputs: vec![vec![0.5, -1.0], vec![2.0, 3.5]],
+            spec: RequestSpec {
+                budget: BudgetSpec::Class(Budget::Medium),
+                priority: Priority::High,
+                batch_hint: Some(2),
+            },
+        };
+        let back =
+            BatchInferRequest::from_json(&Json::parse(&req.to_json().to_string()).unwrap())
+                .unwrap();
+        assert_eq!(back.inputs, req.inputs);
+        assert_eq!(back.spec.budget, req.spec.budget);
+        assert_eq!(back.spec.priority, req.spec.priority);
+        assert_eq!(back.spec.batch_hint, req.spec.batch_hint);
+
+        for bad in [
+            r#"{"inputs":[]}"#,
+            r#"{"inputs":"x"}"#,
+            r#"{"inputs":[["x"]]}"#,
+            r#"{"inputs":[[1.0]],"budget":"low","deadline_ms":5}"#,
+        ] {
+            assert!(BatchInferRequest::from_json(&Json::parse(bad).unwrap()).is_err(), "{bad}");
+        }
     }
 
     #[test]

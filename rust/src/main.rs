@@ -118,9 +118,14 @@ COMMANDS:
              --queue-depth N   admission queue before 503 worker-busy
                                replies (default 4; dispatch retries busy
                                workers elsewhere without retiring them)
+             --idle-timeout-s N  close keep-alive connections idle for N
+                               seconds (default 60)
+             --conn-requests N  requests served per connection before a
+                               clean connection: close (default 1024)
              endpoints: POST /shard  run one slice, reply with its document
                         POST /cache  absorb a shipped plan-cache snapshot
                         GET /healthz, GET /stats  liveness + cache counters
+             connections are keep-alive: many framed requests per socket
   dispatch   fan a sweep out over serve-worker processes and merge
              --workers a:p1,b:p2  comma-separated worker addresses (required)
              --spec FILE       sweep-spec JSON; --artifact NAME [--tiny]
@@ -131,8 +136,12 @@ COMMANDS:
              --shards N        shard count (default: one per worker)
              --timeout-s N     per-request timeout in seconds (default 120)
              --cache-in FILE   ship a plan-cache snapshot to every worker
+             --pool N          idle pooled connections kept per worker
+                               (default 2; shard requests reuse sockets)
              --out FILE        write the merged document (default: stdout)
-             failed/slow workers are retried on healthy ones; the merged
+             failed/slow workers are retried on healthy ones; refused
+             prewarm connects are retried with short backoff (workers
+             still binding at fleet start stay in the pool); the merged
              output is byte-identical to the unsharded `sweep --out`
   artifacts  list the paper-artifact catalog (one SweepSpec + renderer per
              figure/table of the paper)
@@ -165,12 +174,27 @@ COMMANDS:
                                modeled latency (default 0 = no pacing)
              --max-requests N  concurrent-connection budget (default 256;
                                over-budget connections get 503 server-busy)
-             endpoints: POST /infer   one request (input + budget/deadline)
+             --idle-timeout-s N  close keep-alive connections idle for N
+                               seconds (default 60)
+             --conn-requests N  requests served per connection before a
+                               clean connection: close (default 1024)
+             endpoints: POST /infer   one request (single-sample 'input'
+                               or multi-sample 'inputs' with per-sample
+                               verdicts under 'results')
                         GET /healthz  model contract (elems, classes, ladder)
-                        GET /stats    serving metrics document
+                        GET /stats    serving metrics document (p50/p99/
+                               p999 latency, met-deadline rate, ...)
+             connections are keep-alive: many framed requests per socket
   infer      serving client for `serve`'s HTTP front end
              --addr HOST:PORT  server address (default 127.0.0.1:8378)
-             --requests N      how many requests to send (default 1)
+             --requests N      how many requests to send (default 1; one
+                               fresh connection per request)
+             --count N         send N requests over one pooled keep-alive
+                               connection, printing per-request verdicts
+                               and aggregate req/s
+             --batch N         pack N samples into each framed request
+                               (multi-sample POST /infer, per-sample
+                               verdicts; combines with --count)
              --budget low|medium|high  class budget (default high)
              --deadline-ms F   explicit per-request deadline instead of a
                                class (mutually exclusive with --budget)
@@ -379,6 +403,12 @@ fn cmd_serve_worker(opts: &BTreeMap<String, String>) -> CliResult {
     if let Some(s) = opts.get("queue-depth") {
         wopts.admission_queue = s.parse()?;
     }
+    if let Some(s) = opts.get("idle-timeout-s") {
+        wopts.idle_timeout = Duration::from_secs(s.parse()?);
+    }
+    if let Some(s) = opts.get("conn-requests") {
+        wopts.max_requests_per_conn = s.parse::<usize>()?.max(1);
+    }
     let server = transport::WorkerServer::spawn_with(addr, engine, wopts)
         .map_err(|e| format!("{addr}: {e}"))?;
     eprintln!(
@@ -411,6 +441,9 @@ fn cmd_dispatch(opts: &BTreeMap<String, String>) -> CliResult {
     }
     if let Some(path) = opts.get("cache-in") {
         dopts.prewarm = Some(load_snapshot(path)?);
+    }
+    if let Some(s) = opts.get("pool") {
+        dopts.pool_conns = s.parse::<usize>()?.max(1);
     }
     let report = transport::dispatch(&spec, &workers, &dopts)?;
     for (w, served) in &report.per_worker {
@@ -566,6 +599,12 @@ fn cmd_serve(opts: &BTreeMap<String, String>) -> CliResult {
     if let Some(s) = opts.get("max-requests") {
         sopts.max_concurrent_requests = s.parse::<usize>()?.max(1);
     }
+    if let Some(s) = opts.get("idle-timeout-s") {
+        sopts.idle_timeout = Duration::from_secs(s.parse()?);
+    }
+    if let Some(s) = opts.get("conn-requests") {
+        sopts.max_requests_per_conn = s.parse::<usize>()?.max(1);
+    }
     let server =
         ServingServer::spawn_with(addr, coord, sopts).map_err(|e| format!("{addr}: {e}"))?;
     eprintln!(
@@ -677,6 +716,18 @@ fn cmd_infer(opts: &BTreeMap<String, String>) -> CliResult {
         Some(s) => s.parse()?,
         None => 1,
     };
+    let count: usize = match opts.get("count") {
+        Some(s) => s.parse()?,
+        None => 0,
+    };
+    let batch: usize = match opts.get("batch") {
+        Some(s) => s.parse()?,
+        None => 0,
+    };
+    if count > 0 || batch > 0 {
+        let spec = RequestSpec { budget, priority, batch_hint };
+        return infer_pooled(addr, timeout, elems, spec, count.max(1), batch.max(1), seed);
+    }
 
     let mut rng = bf_imna::util::rng::Rng::new(seed);
     let mut latencies = Vec::with_capacity(n);
@@ -714,5 +765,63 @@ fn cmd_infer(opts: &BTreeMap<String, String>) -> CliResult {
                 .join(" ")
         );
     }
+    Ok(())
+}
+
+/// The pooled `infer --count/--batch` path: every exchange reuses one
+/// keep-alive connection through a [`transport::ConnPool`], packing
+/// `samples` inputs into each framed request when `samples > 1`.
+fn infer_pooled(
+    addr: &str,
+    timeout: Duration,
+    elems: usize,
+    spec: RequestSpec,
+    exchanges: usize,
+    samples: usize,
+    seed: u64,
+) -> CliResult {
+    let pool = transport::ConnPool::new(2);
+    let mut rng = bf_imna::util::rng::Rng::new(seed);
+    let mut met = 0usize;
+    let mut total = 0usize;
+    let mut per_config: BTreeMap<String, u64> = BTreeMap::new();
+    let started = std::time::Instant::now();
+    for i in 0..exchanges {
+        let inputs: Vec<Vec<f32>> = (0..samples)
+            .map(|_| (0..elems).map(|_| rng.f64() as f32 * 2.0 - 1.0).collect())
+            .collect();
+        let responses = if samples > 1 {
+            let req = serving::BatchInferRequest { inputs, spec: spec.clone() };
+            serving::infer_remote_many(&pool, addr, &req, timeout)?
+        } else {
+            let input = inputs.into_iter().next().expect("one sample");
+            let req = InferRequest { input, spec: spec.clone() };
+            vec![serving::infer_remote_pooled(&pool, addr, &req, timeout)?]
+        };
+        for (j, r) in responses.iter().enumerate() {
+            println!(
+                "request {i}.{j}: config {} | batch {} | latency {} s | target {} s | {}",
+                r.config,
+                r.batch,
+                fmt_eng(r.latency_s, 3),
+                fmt_eng(r.target_s, 3),
+                if r.met_deadline { "met" } else { "MISSED" }
+            );
+            met += usize::from(r.met_deadline);
+            *per_config.entry(r.config.clone()).or_default() += 1;
+            total += 1;
+        }
+    }
+    let wall = started.elapsed().as_secs_f64();
+    let ps = pool.stats();
+    println!(
+        "pooled: {total} requests in {} s | {:.1} req/s | {met}/{total} met | \
+         connects {} reused {} | served by {}",
+        fmt_eng(wall, 3),
+        total as f64 / wall.max(1e-9),
+        ps.fresh_connects,
+        ps.reuses,
+        per_config.iter().map(|(k, v)| format!("{k}:{v}")).collect::<Vec<_>>().join(" ")
+    );
     Ok(())
 }

@@ -26,14 +26,25 @@
 //!   [`shard::merge`]. The CLI front end is `bf-imna dispatch --workers
 //!   a:p1,b:p2`.
 //!
-//! ## Wire format
+//! ## Wire format and connection lifecycle
 //!
-//! Plain HTTP/1.1 with `Content-Length` framing only (no chunked encoding,
-//! no keep-alive: one request per connection, `connection: close`). Bodies
-//! are canonical JSON from [`crate::util::json`]'s writer. Malformed
-//! requests get clean `4xx`/`5xx` replies — the parser never panics on
-//! hostile input, and header/body sizes are hard-capped
-//! ([`MAX_HEAD_BYTES`] / [`MAX_BODY_BYTES`]).
+//! Plain HTTP/1.1 with `Content-Length` framing only (no chunked
+//! encoding). Connections are **keep-alive** by default: both servers
+//! (this module's [`WorkerServer`] and the serving front end's
+//! `ServingServer`) loop reading framed requests off one socket — each
+//! exchange under a fresh whole-exchange deadline, with an idle timeout
+//! between requests and a per-connection request cap
+//! ([`WorkerOpts::max_requests_per_conn`]) so a pipelining hog cannot pin
+//! a handler thread forever — and honor `connection: close` from either
+//! side (a protocol error also closes: framing is lost). Clients reuse
+//! sockets through a shared [`ConnPool`]: health-checked reuse (leftover
+//! unread bytes or a readable EOF disqualify a pooled socket), one
+//! fresh-connection retry when a reused socket turns out stale, and a
+//! bounded idle set per address. Bodies are canonical JSON from
+//! [`crate::util::json`]'s writer. Malformed requests get clean
+//! `4xx`/`5xx` replies — the parser never panics on hostile input, and
+//! header/body sizes are hard-capped ([`MAX_HEAD_BYTES`] /
+//! [`MAX_BODY_BYTES`]).
 //!
 //! ## Determinism invariant
 //!
@@ -45,8 +56,9 @@
 //! retried. `rust/tests/transport.rs` injects worker failures and asserts
 //! exactly this.
 
+use std::collections::HashMap;
 use std::fmt;
-use std::io::{self, BufReader, Read, Write};
+use std::io::{self, BufRead, BufReader, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
@@ -96,8 +108,9 @@ impl fmt::Display for HttpError {
 
 impl std::error::Error for HttpError {}
 
-/// A parsed HTTP request: method, path, and the `Content-Length`-framed
-/// body. Headers beyond `content-length` are tolerated and ignored.
+/// A parsed HTTP request: method, path, the `Content-Length`-framed body,
+/// and the peer's connection intent. Headers beyond `content-length` and
+/// `connection` are tolerated and ignored.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Request {
     /// Request method (`GET`, `POST`, ...), as sent.
@@ -106,6 +119,10 @@ pub struct Request {
     pub path: String,
     /// The body, exactly `content-length` bytes.
     pub body: Vec<u8>,
+    /// Whether the peer asked to end the connection after this exchange:
+    /// an explicit `connection: close`, or HTTP/1.0 without
+    /// `connection: keep-alive` (where close is the protocol default).
+    pub close: bool,
 }
 
 /// A [`TcpStream`] wrapper that enforces one **overall deadline** across
@@ -116,6 +133,7 @@ pub struct Request {
 /// re-arms the socket timeout with the *remaining* budget before every
 /// operation and fails with `TimedOut` once the budget is spent — the
 /// failure the dispatcher's reassignment path expects from a hung worker.
+#[derive(Debug)]
 pub(crate) struct DeadlineStream {
     stream: TcpStream,
     deadline: Instant,
@@ -124,6 +142,17 @@ pub(crate) struct DeadlineStream {
 impl DeadlineStream {
     pub(crate) fn new(stream: TcpStream, budget: Duration) -> DeadlineStream {
         DeadlineStream { stream, deadline: Instant::now() + budget }
+    }
+
+    /// Reset the deadline to `budget` from now — a keep-alive connection
+    /// gives every exchange (and every idle wait) a fresh budget.
+    pub(crate) fn rearm(&mut self, budget: Duration) {
+        self.deadline = Instant::now() + budget;
+    }
+
+    /// The wrapped socket — for health probes that need `peek`.
+    pub(crate) fn stream(&self) -> &TcpStream {
+        &self.stream
     }
 
     fn remaining(&self) -> io::Result<Duration> {
@@ -175,10 +204,22 @@ fn read_head(r: &mut impl Read) -> Result<String, HttpError> {
     String::from_utf8(head).map_err(|_| HttpError::new(400, "non-utf8 header section"))
 }
 
-/// Scan header lines for `content-length`, validating syntax and the
-/// [`MAX_BODY_BYTES`] cap. Returns `None` when the header is absent.
-fn content_length<'a>(lines: impl Iterator<Item = &'a str>) -> Result<Option<usize>, HttpError> {
-    let mut found: Option<usize> = None;
+/// The headers this transport acts on, scanned from one head section.
+struct HeadFields {
+    /// `content-length`, validated against [`MAX_BODY_BYTES`]; `None`
+    /// when absent.
+    content_length: Option<usize>,
+    /// `connection`: `Some(true)` for `close`, `Some(false)` for
+    /// `keep-alive`, `None` when absent or carrying another token (the
+    /// protocol-version default applies then).
+    close: Option<bool>,
+}
+
+/// Scan header lines for the fields the transport acts on
+/// (`content-length`, `connection`), validating syntax and the
+/// [`MAX_BODY_BYTES`] cap.
+fn parse_fields<'a>(lines: impl Iterator<Item = &'a str>) -> Result<HeadFields, HttpError> {
+    let mut fields = HeadFields { content_length: None, close: None };
     for line in lines {
         if line.is_empty() {
             continue;
@@ -186,7 +227,8 @@ fn content_length<'a>(lines: impl Iterator<Item = &'a str>) -> Result<Option<usi
         let Some((name, value)) = line.split_once(':') else {
             return Err(HttpError::new(400, format!("malformed header line {line:?}")));
         };
-        if name.trim().eq_ignore_ascii_case("content-length") {
+        let name = name.trim();
+        if name.eq_ignore_ascii_case("content-length") {
             let len = value
                 .trim()
                 .parse::<u64>()
@@ -197,12 +239,19 @@ fn content_length<'a>(lines: impl Iterator<Item = &'a str>) -> Result<Option<usi
                     format!("declared body of {len} bytes exceeds the {MAX_BODY_BYTES}-byte cap"),
                 ));
             }
-            if found.replace(len as usize).is_some() {
+            if fields.content_length.replace(len as usize).is_some() {
                 return Err(HttpError::new(400, "duplicate content-length header"));
+            }
+        } else if name.eq_ignore_ascii_case("connection") {
+            let value = value.trim();
+            if value.eq_ignore_ascii_case("close") {
+                fields.close = Some(true);
+            } else if value.eq_ignore_ascii_case("keep-alive") {
+                fields.close = Some(false);
             }
         }
     }
-    Ok(found)
+    Ok(fields)
 }
 
 /// Read exactly `buf.len()` bytes, mapping truncation to a clean `400`.
@@ -247,19 +296,45 @@ pub fn read_request(r: &mut impl Read) -> Result<Request, HttpError> {
     if version != "HTTP/1.1" && version != "HTTP/1.0" {
         return Err(HttpError::new(505, format!("unsupported protocol version {version:?}")));
     }
-    let len = match content_length(lines)? {
+    let fields = parse_fields(lines)?;
+    let len = match fields.content_length {
         Some(len) => len,
         // GETs legitimately carry no body; anything else must declare one.
         None if method == "GET" => 0,
         None => return Err(HttpError::new(411, format!("{method} request without content-length"))),
     };
+    // HTTP/1.1 defaults to keep-alive, HTTP/1.0 to close.
+    let close = fields.close.unwrap_or(version == "HTTP/1.0");
     let mut body = vec![0u8; len];
     read_full(r, &mut body)?;
-    Ok(Request { method: method.to_string(), path: path.to_string(), body })
+    Ok(Request { method: method.to_string(), path: path.to_string(), body, close })
+}
+
+/// Serialize one request with `Content-Length` framing and an explicit
+/// connection intent — the client half of [`read_request`].
+/// `close: false` announces `connection: keep-alive`, asking the server
+/// to hold the socket for the next exchange (what [`ConnPool`] sends).
+pub fn write_request_conn(
+    w: &mut impl Write,
+    method: &str,
+    path: &str,
+    host: &str,
+    body: &[u8],
+    close: bool,
+) -> io::Result<()> {
+    write!(
+        w,
+        "{method} {path} HTTP/1.1\r\nhost: {host}\r\ncontent-type: application/json\r\n\
+         content-length: {}\r\nconnection: {}\r\n\r\n",
+        body.len(),
+        if close { "close" } else { "keep-alive" }
+    )?;
+    w.write_all(body)?;
+    w.flush()
 }
 
 /// Serialize one request (with `Content-Length` framing and
-/// `connection: close`) — the client half of [`read_request`].
+/// `connection: close`) — [`write_request_conn`] for a one-shot exchange.
 pub fn write_request(
     w: &mut impl Write,
     method: &str,
@@ -267,28 +342,35 @@ pub fn write_request(
     host: &str,
     body: &[u8],
 ) -> io::Result<()> {
+    write_request_conn(w, method, path, host, body, true)
+}
+
+/// Serialize one response with a JSON body and an explicit connection
+/// intent — the server half of [`read_response`]. `close: false`
+/// announces `connection: keep-alive`, telling the client the socket
+/// survives for another exchange.
+pub fn write_response_conn(
+    w: &mut impl Write,
+    status: u16,
+    body: &[u8],
+    close: bool,
+) -> io::Result<()> {
     write!(
         w,
-        "{method} {path} HTTP/1.1\r\nhost: {host}\r\ncontent-type: application/json\r\n\
-         content-length: {}\r\nconnection: close\r\n\r\n",
-        body.len()
+        "HTTP/1.1 {status} {}\r\ncontent-type: application/json\r\ncontent-length: {}\r\n\
+         connection: {}\r\n\r\n",
+        reason_phrase(status),
+        body.len(),
+        if close { "close" } else { "keep-alive" }
     )?;
     w.write_all(body)?;
     w.flush()
 }
 
-/// Serialize one response with a JSON body — the server half of
-/// [`read_response`].
+/// Serialize one response with a JSON body and `connection: close` —
+/// [`write_response_conn`] for a one-shot exchange.
 pub fn write_response(w: &mut impl Write, status: u16, body: &[u8]) -> io::Result<()> {
-    write!(
-        w,
-        "HTTP/1.1 {status} {}\r\ncontent-type: application/json\r\ncontent-length: {}\r\n\
-         connection: close\r\n\r\n",
-        reason_phrase(status),
-        body.len()
-    )?;
-    w.write_all(body)?;
-    w.flush()
+    write_response_conn(w, status, body, true)
 }
 
 fn reason_phrase(status: u16) -> &'static str {
@@ -309,12 +391,13 @@ fn reason_phrase(status: u16) -> &'static str {
     }
 }
 
-/// Parse a response's status line + headers, returning the status code and
-/// the declared body length. Peer garbage (a non-HTTP status line, a
+/// Parse a response's status line + headers, returning the status code,
+/// the declared body length, and whether the server will close the
+/// connection after this body. Peer garbage (a non-HTTP status line, a
 /// missing `content-length`) maps to a `502`-tagged [`HttpError`] — the
 /// dispatcher treats any such reply as a worker failure and reassigns the
 /// shard.
-fn read_response_head(r: &mut impl Read) -> Result<(u16, usize), HttpError> {
+fn read_response_head(r: &mut impl Read) -> Result<(u16, usize, bool), HttpError> {
     let head = read_head(r)?;
     let mut lines = head.split("\r\n");
     let status_line = lines.next().unwrap_or("");
@@ -327,15 +410,18 @@ fn read_response_head(r: &mut impl Read) -> Result<(u16, usize), HttpError> {
     let status = code
         .parse::<u16>()
         .map_err(|_| HttpError::new(502, format!("bad status code {code:?}")))?;
-    let len = content_length(lines)?
+    let fields = parse_fields(lines)?;
+    let len = fields
+        .content_length
         .ok_or_else(|| HttpError::new(502, "response missing content-length"))?;
-    Ok((status, len))
+    let close = fields.close.unwrap_or(version == "HTTP/1.0");
+    Ok((status, len, close))
 }
 
 /// Read and parse one HTTP response, returning `(status, body)`. Peer
 /// garbage maps to a `502`-tagged [`HttpError`] (see `read_response_head`).
 pub fn read_response(r: &mut impl Read) -> Result<(u16, Vec<u8>), HttpError> {
-    let (status, len) = read_response_head(r)?;
+    let (status, len, _close) = read_response_head(r)?;
     let mut body = vec![0u8; len];
     read_full(r, &mut body)?;
     Ok((status, body))
@@ -353,7 +439,7 @@ fn open_exchange(
     body: &[u8],
     timeout: Duration,
 ) -> Result<BufReader<DeadlineStream>, String> {
-    let stream = connect(addr, timeout)?;
+    let stream = connect(addr, timeout).map_err(|e| e.message)?;
     let mut stream = DeadlineStream::new(stream, timeout);
     write_request(&mut stream, method, path, addr, body)
         .map_err(|e| format!("{addr}: send failed: {e}"))?;
@@ -389,25 +475,265 @@ pub fn http_request_json(
     timeout: Duration,
 ) -> Result<(u16, Json), String> {
     let mut reader = open_exchange(addr, method, path, body, timeout)?;
-    let (status, len) = read_response_head(&mut reader).map_err(|e| format!("{addr}: {e}"))?;
+    let (status, len, _close) =
+        read_response_head(&mut reader).map_err(|e| format!("{addr}: {e}"))?;
     let doc = read_json_exact(&mut reader, len).map_err(|e| format!("{addr}: bad response body: {e}"))?;
     Ok((status, doc))
 }
 
-fn connect(addr: &str, timeout: Duration) -> Result<TcpStream, String> {
-    let addrs: Vec<SocketAddr> =
-        addr.to_socket_addrs().map_err(|e| format!("{addr}: {e}"))?.collect();
-    let mut last = format!("{addr}: no addresses resolved");
+/// Why a client exchange failed. `refused` marks a TCP connect the peer
+/// actively refused (`ECONNREFUSED`) — the one transient failure worth
+/// retrying with backoff at fleet start, when a worker launched in
+/// parallel with the dispatcher may not have bound its listener yet.
+#[derive(Debug, Clone)]
+pub struct PoolError {
+    /// The peer actively refused the TCP connect.
+    pub refused: bool,
+    /// Human-readable description, prefixed with the address.
+    pub message: String,
+}
+
+impl fmt::Display for PoolError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.message)
+    }
+}
+
+impl std::error::Error for PoolError {}
+
+fn connect(addr: &str, timeout: Duration) -> Result<TcpStream, PoolError> {
+    let addrs: Vec<SocketAddr> = addr
+        .to_socket_addrs()
+        .map_err(|e| PoolError { refused: false, message: format!("{addr}: {e}") })?
+        .collect();
+    let mut last = PoolError { refused: false, message: format!("{addr}: no addresses resolved") };
     // Split the budget across resolved addresses so a dual-stack name with
     // a blackholed record still fails within ~`timeout` overall.
     let per_addr = timeout / addrs.len().max(1) as u32;
     for a in &addrs {
         match TcpStream::connect_timeout(a, per_addr) {
             Ok(s) => return Ok(s),
-            Err(e) => last = format!("{addr}: connect failed: {e}"),
+            Err(e) => {
+                last = PoolError {
+                    refused: e.kind() == io::ErrorKind::ConnectionRefused,
+                    message: format!("{addr}: connect failed: {e}"),
+                }
+            }
         }
     }
     Err(last)
+}
+
+/// Counters from [`ConnPool::stats`] — how the pool's exchanges were
+/// carried.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PoolStats {
+    /// Exchanges that opened a new TCP connection.
+    pub fresh_connects: usize,
+    /// Exchanges served over a reused pooled connection.
+    pub reuses: usize,
+    /// Reused-connection exchanges that failed mid-flight (the server
+    /// closed or restarted while the socket sat idle) and fell back to a
+    /// fresh connection.
+    pub stale_retries: usize,
+}
+
+/// A pooled keep-alive connection: the buffered reader persists between
+/// exchanges because response bytes may sit read-ahead in its buffer.
+#[derive(Debug)]
+struct PooledConn {
+    reader: BufReader<DeadlineStream>,
+}
+
+impl PooledConn {
+    /// `true` when the socket is still usable: no leftover unread bytes
+    /// from a previous exchange (desync — the peer sent more than one
+    /// frame) and nothing readable on the wire right now. An idle
+    /// keep-alive server has nothing to say between our requests, so a
+    /// readable socket means EOF (it closed the connection) or
+    /// unsolicited bytes — either way the connection is discarded.
+    fn is_healthy(&self) -> bool {
+        if !self.reader.buffer().is_empty() {
+            return false;
+        }
+        let stream = self.reader.get_ref().stream();
+        if stream.set_nonblocking(true).is_err() {
+            return false;
+        }
+        let mut probe = [0u8; 1];
+        let healthy = match stream.peek(&mut probe) {
+            Ok(_) => false, // EOF (0 bytes) or unsolicited data
+            Err(e) => e.kind() == io::ErrorKind::WouldBlock,
+        };
+        healthy && stream.set_nonblocking(false).is_ok()
+    }
+}
+
+/// A client-side pool of keep-alive connections, keyed by address —
+/// shared by the serving clients (`infer_remote`, `fetch_stats`),
+/// dispatch's shard loop, and the wire prewarm.
+///
+/// [`Self::request`] reuses an idle pooled socket when one is available
+/// and healthy, falling back to a fresh connect otherwise. Health is
+/// checked *before* reuse ([`PooledConn::is_healthy`]), and a reuse that
+/// still fails mid-exchange — the server restarted or idle-timed the
+/// socket out between our check and the write — is retried **once** on a
+/// fresh connection before the error propagates, so callers never see a
+/// spurious failure from a stale socket. At most `max_idle_per_addr`
+/// idle sockets are kept per address; extras are simply closed on
+/// return. The pool is `Sync`: dispatch's per-worker threads share one.
+///
+/// ```no_run
+/// use std::time::Duration;
+/// use bf_imna::sim::transport::ConnPool;
+///
+/// let pool = ConnPool::new(2);
+/// let (status, body) =
+///     pool.request("127.0.0.1:9000", "GET", "/healthz", b"", Duration::from_secs(5)).unwrap();
+/// assert_eq!(status, 200);
+/// let again = pool.request("127.0.0.1:9000", "GET", "/healthz", b"", Duration::from_secs(5));
+/// assert!(again.is_ok()); // second exchange rides the pooled socket
+/// ```
+#[derive(Debug)]
+pub struct ConnPool {
+    idle: Mutex<HashMap<String, Vec<PooledConn>>>,
+    max_idle_per_addr: usize,
+    fresh_connects: AtomicUsize,
+    reuses: AtomicUsize,
+    stale_retries: AtomicUsize,
+}
+
+impl ConnPool {
+    /// A pool keeping at most `max_idle_per_addr` idle sockets per
+    /// address (clamped to ≥ 1).
+    pub fn new(max_idle_per_addr: usize) -> ConnPool {
+        ConnPool {
+            idle: Mutex::new(HashMap::new()),
+            max_idle_per_addr: max_idle_per_addr.max(1),
+            fresh_connects: AtomicUsize::new(0),
+            reuses: AtomicUsize::new(0),
+            stale_retries: AtomicUsize::new(0),
+        }
+    }
+
+    /// Lifetime counters: fresh connects, pooled reuses, and stale-socket
+    /// retries (see [`PoolStats`]).
+    pub fn stats(&self) -> PoolStats {
+        PoolStats {
+            fresh_connects: self.fresh_connects.load(Ordering::Relaxed),
+            reuses: self.reuses.load(Ordering::Relaxed),
+            stale_retries: self.stale_retries.load(Ordering::Relaxed),
+        }
+    }
+
+    /// One pooled exchange: send `body` to `path` at `addr` (reusing a
+    /// pooled socket when possible) and return `(status, response body)`.
+    /// `timeout` bounds the whole exchange as one shared deadline, like
+    /// [`http_request`].
+    pub fn request(
+        &self,
+        addr: &str,
+        method: &str,
+        path: &str,
+        body: &[u8],
+        timeout: Duration,
+    ) -> Result<(u16, Vec<u8>), PoolError> {
+        self.exchange(addr, method, path, body, timeout, |r, len| {
+            let mut buf = vec![0u8; len];
+            read_full(r, &mut buf).map_err(|e| e.to_string())?;
+            Ok(buf)
+        })
+    }
+
+    /// Like [`Self::request`] but parse the response body as one JSON
+    /// document straight off the socket (exactly the `Content-Length`
+    /// frame is consumed, keeping the connection reusable).
+    pub fn request_json(
+        &self,
+        addr: &str,
+        method: &str,
+        path: &str,
+        body: &[u8],
+        timeout: Duration,
+    ) -> Result<(u16, Json), PoolError> {
+        self.exchange(addr, method, path, body, timeout, |r, len| {
+            read_json_exact(r, len).map_err(|e| format!("bad response body: {e}"))
+        })
+    }
+
+    fn exchange<T>(
+        &self,
+        addr: &str,
+        method: &str,
+        path: &str,
+        body: &[u8],
+        timeout: Duration,
+        parse: impl Fn(&mut BufReader<DeadlineStream>, usize) -> Result<T, String>,
+    ) -> Result<(u16, T), PoolError> {
+        // Try a pooled socket first. Any failure on a reused socket is
+        // indistinguishable from the server having closed it while idle
+        // (our health check raced its idle timer), so it falls through to
+        // exactly one fresh-connection retry instead of propagating.
+        if let Some(conn) = self.take_healthy(addr) {
+            match self.try_exchange(conn, addr, method, path, body, timeout, &parse) {
+                Ok(ok) => {
+                    self.reuses.fetch_add(1, Ordering::Relaxed);
+                    return Ok(ok);
+                }
+                Err(_) => {
+                    self.stale_retries.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+        let stream = connect(addr, timeout)?;
+        self.fresh_connects.fetch_add(1, Ordering::Relaxed);
+        let conn = PooledConn { reader: BufReader::new(DeadlineStream::new(stream, timeout)) };
+        self.try_exchange(conn, addr, method, path, body, timeout, &parse)
+            .map_err(|message| PoolError { refused: false, message })
+    }
+
+    fn try_exchange<T>(
+        &self,
+        mut conn: PooledConn,
+        addr: &str,
+        method: &str,
+        path: &str,
+        body: &[u8],
+        timeout: Duration,
+        parse: &impl Fn(&mut BufReader<DeadlineStream>, usize) -> Result<T, String>,
+    ) -> Result<(u16, T), String> {
+        conn.reader.get_mut().rearm(timeout);
+        write_request_conn(conn.reader.get_mut(), method, path, addr, body, false)
+            .map_err(|e| format!("{addr}: send failed: {e}"))?;
+        let (status, len, close) =
+            read_response_head(&mut conn.reader).map_err(|e| format!("{addr}: {e}"))?;
+        let parsed = parse(&mut conn.reader, len).map_err(|e| format!("{addr}: {e}"))?;
+        if !close {
+            self.put_back(addr, conn);
+        }
+        Ok((status, parsed))
+    }
+
+    fn take_healthy(&self, addr: &str) -> Option<PooledConn> {
+        let mut idle = self.idle.lock().unwrap();
+        let list = idle.get_mut(addr)?;
+        while let Some(conn) = list.pop() {
+            if conn.is_healthy() {
+                return Some(conn);
+            }
+            // Unhealthy sockets just drop (and close) here.
+        }
+        None
+    }
+
+    fn put_back(&self, addr: &str, conn: PooledConn) {
+        let mut idle = self.idle.lock().unwrap();
+        let list = idle.entry(addr.to_string()).or_default();
+        if list.len() < self.max_idle_per_addr {
+            list.push(conn);
+        }
+        // Over the cap the connection drops, which closes the socket.
+    }
 }
 
 /// Per-worker counters surfaced on `GET /stats`.
@@ -418,6 +744,7 @@ struct WorkerStats {
     cache_loads: AtomicUsize,
     protocol_errors: AtomicUsize,
     busy_rejections: AtomicUsize,
+    connections: AtomicUsize,
 }
 
 /// Worker-side admission control for `POST /shard`: at most
@@ -435,13 +762,100 @@ pub struct WorkerOpts {
     /// Shard requests allowed to wait for a compute slot before new
     /// arrivals are rejected.
     pub admission_queue: usize,
+    /// How long a keep-alive connection may sit idle between requests
+    /// before the worker closes it.
+    pub idle_timeout: Duration,
+    /// Requests served on one connection before the worker answers the
+    /// last with `connection: close` and hangs up (clamped to ≥ 1) — a
+    /// cap so one pipelining hog cannot pin a handler thread forever.
+    pub max_requests_per_conn: usize,
 }
 
 impl Default for WorkerOpts {
     /// Two concurrent shard computations (each is internally parallel),
-    /// four waiters.
+    /// four waiters; keep-alive connections idle out after 60 s and are
+    /// recycled after 1024 requests.
     fn default() -> Self {
-        WorkerOpts { max_concurrent_shards: 2, admission_queue: 4 }
+        WorkerOpts {
+            max_concurrent_shards: 2,
+            admission_queue: 4,
+            idle_timeout: Duration::from_secs(60),
+            max_requests_per_conn: 1024,
+        }
+    }
+}
+
+/// Per-connection policy for [`serve_exchanges`]: the deadlines and the
+/// request cap both servers apply to every accepted socket.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct ConnPolicy {
+    /// Whole-exchange budget: reading one framed request and writing its
+    /// response each get this much, re-armed per exchange.
+    pub(crate) exchange_deadline: Duration,
+    /// How long the connection may sit idle between requests before the
+    /// server closes it.
+    pub(crate) idle_timeout: Duration,
+    /// Requests served before the server answers the last one with
+    /// `connection: close` and hangs up.
+    pub(crate) max_requests: usize,
+}
+
+/// The shared server-side keep-alive loop: read framed requests off one
+/// socket until the peer closes, asks to close, errors, idles out, or
+/// hits the per-connection request cap; `route` maps each parsed request
+/// (or protocol error) to a reply. Used by both the sweep worker and the
+/// serving front end — their accept loops differ (admission placement),
+/// the per-connection protocol does not.
+///
+/// One `BufReader` lives for the whole connection: pipelined requests the
+/// peer sent ahead sit in its buffer, and recreating it per exchange
+/// would silently drop them.
+pub(crate) fn serve_exchanges<F>(stream: TcpStream, policy: &ConnPolicy, mut route: F)
+where
+    F: FnMut(Result<&Request, &HttpError>) -> (u16, Json),
+{
+    let reader = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    let mut reader = BufReader::new(DeadlineStream::new(reader, policy.idle_timeout));
+    let mut writer = DeadlineStream::new(stream, policy.exchange_deadline);
+    let max = policy.max_requests.max(1);
+    for served in 1..=max {
+        // Idle phase: wait (under the idle budget) for the first byte of
+        // the next request. A clean EOF here is the normal end of a
+        // keep-alive connection; a timeout or reset just closes it.
+        // Pipelined bytes already buffered return immediately.
+        reader.get_mut().rearm(policy.idle_timeout);
+        let waiting = loop {
+            match reader.fill_buf() {
+                Ok(buf) => break !buf.is_empty(),
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(_) => break false,
+            }
+        };
+        if !waiting {
+            return;
+        }
+        // Exchange phase: the whole request read shares one fresh
+        // deadline (a slowloris trickling bytes cannot re-arm it per
+        // byte); the response write gets its own (compute time between
+        // read and write must not eat into it).
+        reader.get_mut().rearm(policy.exchange_deadline);
+        let parsed = read_request(&mut reader);
+        let close = match &parsed {
+            Ok(req) => req.close || served == max,
+            // After a protocol error the frame boundary is lost: reply,
+            // then hang up.
+            Err(_) => true,
+        };
+        let (status, reply) = route(parsed.as_ref());
+        writer.rearm(policy.exchange_deadline);
+        if write_response_conn(&mut writer, status, reply.to_string().as_bytes(), close).is_err()
+            || close
+        {
+            return;
+        }
     }
 }
 
@@ -538,17 +952,23 @@ impl WorkerServer {
         Self::spawn_with(addr, engine, WorkerOpts::default())
     }
 
-    /// [`Self::spawn`] with explicit shard admission control.
+    /// [`Self::spawn`] with explicit admission control and connection
+    /// policy.
     pub fn spawn_with(addr: &str, engine: SweepEngine, opts: WorkerOpts) -> io::Result<WorkerServer> {
         let listener = TcpListener::bind(addr)?;
         let addr = listener.local_addr()?;
         let engine = Arc::new(engine);
         let stop = Arc::new(AtomicBool::new(false));
         let gate = Arc::new(AdmissionGate::new(opts.max_concurrent_shards, opts.admission_queue));
+        let policy = ConnPolicy {
+            exchange_deadline: WORKER_EXCHANGE_DEADLINE,
+            idle_timeout: opts.idle_timeout,
+            max_requests: opts.max_requests_per_conn,
+        };
         let handle = {
             let engine = Arc::clone(&engine);
             let stop = Arc::clone(&stop);
-            thread::spawn(move || accept_loop(listener, engine, stop, gate))
+            thread::spawn(move || accept_loop(listener, engine, stop, gate, policy))
         };
         Ok(WorkerServer { addr, stop, handle: Some(handle), engine })
     }
@@ -604,6 +1024,7 @@ fn accept_loop(
     engine: Arc<SweepEngine>,
     stop: Arc<AtomicBool>,
     gate: Arc<AdmissionGate>,
+    policy: ConnPolicy,
 ) {
     let stats = Arc::new(WorkerStats::default());
     loop {
@@ -625,38 +1046,32 @@ fn accept_loop(
         let engine = Arc::clone(&engine);
         let stats = Arc::clone(&stats);
         let gate = Arc::clone(&gate);
-        thread::spawn(move || handle_connection(stream, &engine, &stats, &gate));
+        stats.connections.fetch_add(1, Ordering::Relaxed);
+        thread::spawn(move || handle_connection(stream, policy, &engine, &stats, &gate));
     }
     // The listener drops here: the port closes and peers see refusals.
 }
 
-/// Per-connection worker: one request, one response, close. All protocol
-/// errors turn into a `4xx`/`5xx` JSON reply; nothing here panics on
-/// hostile bytes.
+/// Per-connection worker: the shared keep-alive loop with the shard
+/// protocol routed in. Admission control applies per `POST /shard`
+/// exchange (inside [`route`]), not per connection, so a keep-alive
+/// client holds no compute slot between requests. All protocol errors
+/// turn into a `4xx`/`5xx` JSON reply; nothing here panics on hostile
+/// bytes.
 fn handle_connection(
     stream: TcpStream,
+    policy: ConnPolicy,
     engine: &SweepEngine,
     stats: &WorkerStats,
     gate: &Arc<AdmissionGate>,
 ) {
-    // The whole request read shares one deadline: a slowloris trickling
-    // header or body bytes cannot re-arm the clock per byte.
-    let reader = match stream.try_clone() {
-        Ok(s) => DeadlineStream::new(s, WORKER_EXCHANGE_DEADLINE),
-        Err(_) => return,
-    };
-    let (status, reply) = match read_request(&mut BufReader::new(reader)) {
-        Ok(req) => route(&req, engine, stats, gate),
+    serve_exchanges(stream, &policy, |parsed| match parsed {
+        Ok(req) => route(req, engine, stats, gate),
         Err(e) => {
             stats.protocol_errors.fetch_add(1, Ordering::Relaxed);
-            (e.status, err_doc(e.message))
+            (e.status, err_doc(e.message.clone()))
         }
-    };
-    // The response write gets a fresh budget (shard compute time between
-    // read and write must not eat into it), with the same slow-drain
-    // protection on the way out.
-    let mut writer = DeadlineStream::new(stream, WORKER_EXCHANGE_DEADLINE);
-    let _ = write_response(&mut writer, status, reply.to_string().as_bytes());
+    });
 }
 
 pub(crate) fn err_doc(message: impl Into<String>) -> Json {
@@ -687,6 +1102,7 @@ fn stats_doc(engine: &SweepEngine, stats: &WorkerStats, gate: &AdmissionGate) ->
         ("cache_loads", Json::num(stats.cache_loads.load(Ordering::Relaxed) as f64)),
         ("protocol_errors", Json::num(stats.protocol_errors.load(Ordering::Relaxed) as f64)),
         ("busy_rejections", Json::num(stats.busy_rejections.load(Ordering::Relaxed) as f64)),
+        ("connections", Json::num(stats.connections.load(Ordering::Relaxed) as f64)),
         ("shards_in_flight", Json::num(gate.running() as f64)),
         (
             "cache",
@@ -806,6 +1222,11 @@ pub struct DispatchOpts {
     /// /cache`) before any shard is assigned. Purely a warm-up: output
     /// bytes are identical with or without it.
     pub prewarm: Option<CacheSnapshot>,
+    /// Idle keep-alive connections the dispatcher's [`ConnPool`] keeps
+    /// per worker. One dispatcher thread talks to each worker, so the
+    /// default is small; it exists as a knob for overlapping prewarm and
+    /// shard traffic.
+    pub pool_conns: usize,
 }
 
 impl Default for DispatchOpts {
@@ -815,6 +1236,7 @@ impl Default for DispatchOpts {
             timeout: Duration::from_secs(120),
             max_worker_failures: 2,
             prewarm: None,
+            pool_conns: 2,
         }
     }
 }
@@ -863,6 +1285,10 @@ pub fn dispatch(
     // every shard's expected slice for reply validation.
     let n_points = spec.resolve()?.num_points();
     let shards = if opts.shards == 0 { workers.len() } else { opts.shards };
+    // One shared connection pool for the whole sweep: prewarm opens each
+    // worker's connection, the shard loop rides it — every shard after
+    // the first costs zero connects on a healthy fleet.
+    let pool = ConnPool::new(opts.pool_conns);
 
     // Ship the prewarm snapshot first, to all workers in parallel (a
     // blackholed worker must not serially stall startup by a full timeout).
@@ -882,8 +1308,9 @@ pub fn dispatch(
                 .iter()
                 .map(|w| {
                     let body = &body;
+                    let pool = &pool;
                     s.spawn(move || -> Result<bool, String> {
-                        match http_request(w, "POST", "/cache", body.as_bytes(), opts.timeout) {
+                        match prewarm_worker(pool, w, body.as_bytes(), opts.timeout) {
                             Ok((200, _)) => Ok(true),
                             Ok((400, reply)) => {
                                 // Structural check: only a reply tagged with
@@ -951,6 +1378,7 @@ pub fn dispatch(
             let busy_retries = &busy_retries;
             let served = &served;
             let last_error = &last_error;
+            let pool = &pool;
             s.spawn(move || {
                 let mut failures = 0usize;
                 let mut busy_streak = 0usize;
@@ -962,7 +1390,7 @@ pub fn dispatch(
                         thread::sleep(Duration::from_millis(5));
                         continue;
                     };
-                    match fetch_shard(w, spec, n_points, shards, id, opts.timeout) {
+                    match fetch_shard(pool, w, spec, n_points, shards, id, opts.timeout) {
                         Ok(doc) => {
                             *results[id].lock().unwrap() = Some(doc);
                             served[wi].fetch_add(1, Ordering::Relaxed);
@@ -1034,6 +1462,43 @@ pub fn dispatch(
 /// the sweep live even against a worker that never frees a slot.
 const BUSY_RETIRE_STREAK: usize = 1500;
 
+/// Backoff schedule for prewarm connects refused at fleet start. A worker
+/// launched in parallel with the dispatcher may not have bound its
+/// listener yet, and `ECONNREFUSED` within the first few hundred
+/// milliseconds of a fleet's life is almost always that race, not a dead
+/// host — retrying briefly keeps still-binding workers in the pool
+/// instead of retiring them immediately.
+const PREWARM_REFUSED_BACKOFF: [Duration; 5] = [
+    Duration::from_millis(10),
+    Duration::from_millis(20),
+    Duration::from_millis(40),
+    Duration::from_millis(80),
+    Duration::from_millis(160),
+];
+
+/// One prewarm `POST /cache`, with refused connects retried on the
+/// [`PREWARM_REFUSED_BACKOFF`] schedule. Only `refused` failures retry:
+/// a timeout already consumed its full budget, and any HTTP reply means
+/// the listener is up.
+fn prewarm_worker(
+    pool: &ConnPool,
+    addr: &str,
+    body: &[u8],
+    timeout: Duration,
+) -> Result<(u16, Vec<u8>), PoolError> {
+    let mut reply = pool.request(addr, "POST", "/cache", body, timeout);
+    for delay in PREWARM_REFUSED_BACKOFF {
+        match &reply {
+            Err(e) if e.refused => {
+                thread::sleep(delay);
+                reply = pool.request(addr, "POST", "/cache", body, timeout);
+            }
+            _ => break,
+        }
+    }
+    reply
+}
+
 /// How one shard fetch failed: `busy` marks a `503` carrying
 /// [`CODE_WORKER_BUSY`] — worker-side backpressure, handled by re-queueing
 /// without counting toward the worker's retirement.
@@ -1048,16 +1513,18 @@ impl FetchFailure {
     }
 }
 
-/// One validated shard fetch: POST the work order, require HTTP 200, parse
-/// the reply as a [`ShardResult`], and require it to describe exactly the
-/// requested slice of exactly the requested sweep — right coordinates
-/// *and* the exact `shard_range` slice (`start`, point count) those
-/// coordinates pin down, so even a self-consistent reply about the wrong
-/// slice is rejected here. Garbage bytes, wrong shards, and alien specs
-/// all come back as `Err` — the dispatcher retries them elsewhere and they
-/// never reach [`shard::merge`]. A `503` tagged [`CODE_WORKER_BUSY`] comes
-/// back as a `busy` failure instead (retry elsewhere, worker stays).
+/// One validated shard fetch over the shared [`ConnPool`]: POST the work
+/// order, require HTTP 200, parse the reply as a [`ShardResult`], and
+/// require it to describe exactly the requested slice of exactly the
+/// requested sweep — right coordinates *and* the exact `shard_range`
+/// slice (`start`, point count) those coordinates pin down, so even a
+/// self-consistent reply about the wrong slice is rejected here. Garbage
+/// bytes, wrong shards, and alien specs all come back as `Err` — the
+/// dispatcher retries them elsewhere and they never reach
+/// [`shard::merge`]. A `503` tagged [`CODE_WORKER_BUSY`] comes back as a
+/// `busy` failure instead (retry elsewhere, worker stays).
 fn fetch_shard(
+    pool: &ConnPool,
     addr: &str,
     spec: &SweepSpec,
     n_points: usize,
@@ -1066,9 +1533,9 @@ fn fetch_shard(
     timeout: Duration,
 ) -> Result<Json, FetchFailure> {
     let order = ShardRequest { spec: spec.clone(), shards, shard_id };
-    let (status, doc) =
-        http_request_json(addr, "POST", "/shard", order.to_json().to_string().as_bytes(), timeout)
-            .map_err(FetchFailure::hard)?;
+    let (status, doc) = pool
+        .request_json(addr, "POST", "/shard", order.to_json().to_string().as_bytes(), timeout)
+        .map_err(|e| FetchFailure::hard(e.message))?;
     if status != 200 {
         let detail = doc.get("error").and_then(Json::as_str).unwrap_or("unknown error");
         let busy = status == 503
@@ -1182,6 +1649,56 @@ mod tests {
         let mut msg = b"GET / HTTP/1.1\r\n".to_vec();
         msg.extend(std::iter::repeat(b'a').take(MAX_HEAD_BYTES + 16));
         assert_eq!(status_of(&msg), 431);
+    }
+
+    #[test]
+    fn connection_intent_follows_header_and_version() {
+        // HTTP/1.1 defaults to keep-alive; HTTP/1.0 defaults to close.
+        assert!(!parse(b"GET / HTTP/1.1\r\n\r\n").unwrap().close);
+        assert!(parse(b"GET / HTTP/1.0\r\n\r\n").unwrap().close);
+        // Explicit headers override the version default either way.
+        assert!(parse(b"GET / HTTP/1.1\r\nConnection: close\r\n\r\n").unwrap().close);
+        assert!(parse(b"GET / HTTP/1.1\r\nconnection: CLOSE\r\n\r\n").unwrap().close);
+        assert!(!parse(b"GET / HTTP/1.0\r\nConnection: keep-alive\r\n\r\n").unwrap().close);
+        // Unknown tokens keep the version default.
+        assert!(!parse(b"GET / HTTP/1.1\r\nConnection: upgrade\r\n\r\n").unwrap().close);
+    }
+
+    #[test]
+    fn request_writers_announce_connection_intent() {
+        let mut one_shot = Vec::new();
+        write_request(&mut one_shot, "GET", "/x", "h", b"").unwrap();
+        assert!(parse(&one_shot).unwrap().close);
+
+        let mut pooled = Vec::new();
+        write_request_conn(&mut pooled, "GET", "/x", "h", b"", false).unwrap();
+        assert!(!parse(&pooled).unwrap().close);
+    }
+
+    #[test]
+    fn response_close_flag_round_trips() {
+        for close in [true, false] {
+            let mut wire = Vec::new();
+            write_response_conn(&mut wire, 200, b"{}", close).unwrap();
+            let (status, len, got) = read_response_head(&mut Cursor::new(wire)).unwrap();
+            assert_eq!((status, len, got), (200, 2, close));
+        }
+    }
+
+    #[test]
+    fn pipelined_requests_stay_framed() {
+        // Two framed requests back to back on one byte stream parse
+        // cleanly in sequence — nothing from the second leaks into the
+        // first (the property the server's persistent BufReader relies
+        // on).
+        let mut wire = Vec::new();
+        write_request_conn(&mut wire, "POST", "/a", "h", b"one", false).unwrap();
+        write_request_conn(&mut wire, "POST", "/b", "h", b"two!", false).unwrap();
+        let mut cursor = Cursor::new(wire);
+        let first = read_request(&mut cursor).unwrap();
+        let second = read_request(&mut cursor).unwrap();
+        assert_eq!((first.path.as_str(), first.body.as_slice()), ("/a", b"one".as_slice()));
+        assert_eq!((second.path.as_str(), second.body.as_slice()), ("/b", b"two!".as_slice()));
     }
 
     #[test]

@@ -42,7 +42,8 @@ fn help_covers_every_command_and_sweep_service_flag() {
         "--combos", "--seed", "--cache-in", "--cache-out", "--artifacts", "--requests", "--addr",
         "--workers", "--spec", "--timeout-s", "--artifact", "--doc", "--tiny", "--names",
         "--max-shards", "--queue-depth", "--budget", "--deadline-ms", "--priority",
-        "--batch-hint", "--time-scale", "--stats", "--max-requests",
+        "--batch-hint", "--time-scale", "--stats", "--max-requests", "--idle-timeout-s",
+        "--conn-requests", "--pool", "--count", "--batch",
     ] {
         assert!(text.contains(flag), "help does not mention flag '{flag}'");
     }
@@ -327,6 +328,16 @@ fn serve_and_infer_round_trip_through_the_real_binary() {
     let stats = stdout(&out);
     assert!(stats.contains("\"completed\":4"), "{stats}");
     assert!(stats.contains("deadline_met"), "{stats}");
+
+    // The pooled keep-alive client: 3 framed requests of 2 samples each
+    // over one connection, with per-request verdicts and an aggregate
+    // throughput line naming the connection reuse.
+    let out = run(&["infer", "--addr", &addr, "--count", "3", "--batch", "2", "--budget", "high"]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = stdout(&out);
+    assert!(text.contains("request 2.1"), "3x2 pooled requests missing verdicts:\n{text}");
+    assert!(text.contains("pooled:"), "{text}");
+    assert!(text.contains("req/s"), "{text}");
 
     let _ = child.kill();
     let _ = child.wait();

@@ -9,16 +9,22 @@
 //! * config choices are deterministic given a fixed request trace (the
 //!   sim backend feeds the controller modeled, not wall-clock, latencies);
 //! * `POST /infer` / `GET /healthz` / `GET /stats` round-trip over TCP.
+//!
+//! The keep-alive additions: pooled clients ride one connection across
+//! exchanges (and transparently reconnect when the server idle-times the
+//! socket out or the per-connection request cap closes it), and the
+//! multi-sample `POST /infer` returns logits byte-identical to the same
+//! inputs sent one at a time.
 
 use std::thread;
 use std::time::Duration;
 
-use bf_imna::coordinator::server::{self as serving, InferRequest};
+use bf_imna::coordinator::server::{self as serving, BatchInferRequest, InferRequest, ServeOpts};
 use bf_imna::coordinator::{
     Budget, BudgetSpec, Coordinator, CoordinatorConfig, Priority, RequestSpec, ServingServer,
 };
 use bf_imna::runtime::SimBackend;
-use bf_imna::sim::transport::http_request;
+use bf_imna::sim::transport::{http_request, ConnPool};
 use bf_imna::util::json::Json;
 use bf_imna::util::rng::Rng;
 
@@ -285,7 +291,7 @@ fn connection_budget_bounces_overflow_with_machine_readable_503() {
     let server = ServingServer::spawn_with(
         "127.0.0.1:0",
         c.clone(),
-        bf_imna::coordinator::server::ServeOpts { max_concurrent_requests: 1 },
+        ServeOpts { max_concurrent_requests: 1, ..ServeOpts::default() },
     )
     .expect("bind serving server");
     let addr = server.addr().to_string();
@@ -335,5 +341,222 @@ fn sim_backend_numerics_agree_between_local_and_wire_paths() {
     .expect("wire infer");
     assert_eq!(local.config, wire.config, "same trace position, same pick");
     assert_eq!(local.logits, wire.logits, "wire transport perturbed the logits");
+    server.shutdown();
+}
+
+/// A coordinator pinned to one loaded config: every request is served by
+/// `int8`, so per-sample logits are a pure function of the input — the
+/// precondition for byte-identity across batch compositions and wire
+/// modes.
+fn start_pinned() -> Coordinator {
+    Coordinator::start_sim(
+        CoordinatorConfig {
+            configs: vec!["int8".to_string()],
+            calibrate: false,
+            batch_window: Duration::from_millis(1),
+            ..CoordinatorConfig::default()
+        },
+        0.0,
+    )
+    .expect("single-config coordinator starts in the default build")
+}
+
+#[test]
+fn pooled_client_reuses_the_serving_connection() {
+    let c = start(true);
+    let server = ServingServer::spawn("127.0.0.1:0", c.clone()).expect("bind serving server");
+    let addr = server.addr().to_string();
+    let timeout = Duration::from_secs(30);
+    let pool = ConnPool::new(2);
+
+    let elems = c.sample_elems();
+    for i in 0..3 {
+        let r = serving::infer_remote_pooled(
+            &pool,
+            &addr,
+            &InferRequest { input: sample(elems, 40 + i), spec: RequestSpec::default() },
+            timeout,
+        )
+        .expect("pooled infer");
+        assert_eq!(r.logits.len(), c.num_classes());
+    }
+    let stats = serving::fetch_stats_pooled(&pool, &addr, timeout).expect("pooled /stats");
+    assert_eq!(stats.get("completed").and_then(Json::as_i64), Some(3), "{stats}");
+
+    let ps = pool.stats();
+    assert_eq!(ps.fresh_connects, 1, "all four exchanges ride one socket: {ps:?}");
+    assert_eq!(ps.reuses, 3, "{ps:?}");
+    server.shutdown();
+}
+
+#[test]
+fn stats_reports_tail_latency_and_met_rate_over_the_wire() {
+    let c = start(true);
+    let server = ServingServer::spawn("127.0.0.1:0", c.clone()).expect("bind serving server");
+    let addr = server.addr().to_string();
+    let timeout = Duration::from_secs(30);
+    let elems = c.sample_elems();
+    for i in 0..4 {
+        serving::infer_remote(
+            &addr,
+            &InferRequest { input: sample(elems, 50 + i), spec: RequestSpec::default() },
+            timeout,
+        )
+        .expect("infer");
+    }
+    let stats = serving::fetch_stats(&addr, timeout).expect("GET /stats");
+    let p50 = stats.get("latency_p50_s").and_then(Json::as_f64).expect("latency_p50_s");
+    let p99 = stats.get("latency_p99_s").and_then(Json::as_f64).expect("latency_p99_s");
+    let p999 = stats.get("latency_p999_s").and_then(Json::as_f64).expect("latency_p999_s");
+    assert!(p50 > 0.0 && p50 <= p99 && p99 <= p999, "tail order: {p50} {p99} {p999}");
+    let met = stats.get("deadline_met_frac").and_then(Json::as_f64).expect("deadline_met_frac");
+    assert!((0.0..=1.0).contains(&met), "{met}");
+    server.shutdown();
+}
+
+#[test]
+fn multi_sample_infer_is_byte_identical_to_single_sample_requests() {
+    // The same 5 inputs through (a) one-at-a-time wire requests against a
+    // pinned coordinator and (b) one multi-sample framed request against
+    // a second pinned coordinator must produce identical logits, sample
+    // for sample — framing and batching are transparent to the numerics.
+    let inputs: Vec<Vec<f32>> = {
+        let c = start_pinned();
+        (0..5).map(|i| sample(c.sample_elems(), 60 + i)).collect()
+    };
+
+    let singles: Vec<Vec<f32>> = {
+        let c = start_pinned();
+        let server = ServingServer::spawn("127.0.0.1:0", c).expect("bind serving server");
+        let addr = server.addr().to_string();
+        let out = inputs
+            .iter()
+            .map(|x| {
+                serving::infer_remote(
+                    &addr,
+                    &InferRequest { input: x.clone(), spec: RequestSpec::default() },
+                    Duration::from_secs(30),
+                )
+                .expect("single infer")
+                .logits
+            })
+            .collect();
+        server.shutdown();
+        out
+    };
+
+    let c = start_pinned();
+    let server = ServingServer::spawn("127.0.0.1:0", c).expect("bind serving server");
+    let addr = server.addr().to_string();
+    let pool = ConnPool::new(2);
+    let many = serving::infer_remote_many(
+        &pool,
+        &addr,
+        &BatchInferRequest { inputs: inputs.clone(), spec: RequestSpec::default() },
+        Duration::from_secs(30),
+    )
+    .expect("multi-sample infer");
+    assert_eq!(many.len(), inputs.len(), "one verdict per sample");
+    for (i, (single, batched)) in singles.iter().zip(&many).enumerate() {
+        assert_eq!(batched.config, "int8", "pinned coordinator must serve int8");
+        assert_eq!(
+            single, &batched.logits,
+            "sample {i}: multi-sample framing perturbed the logits"
+        );
+    }
+    server.shutdown();
+}
+
+#[test]
+fn multi_sample_requests_reject_bad_shapes_cleanly() {
+    let c = start(false);
+    let server = ServingServer::spawn("127.0.0.1:0", c.clone()).expect("bind serving server");
+    let addr = server.addr().to_string();
+    let timeout = Duration::from_secs(10);
+
+    // An empty inputs array and a mis-sized sample both get a 400 — and a
+    // mixed batch is rejected before any sample is submitted (no partial
+    // work, so completed stays 0).
+    let (status, body) =
+        http_request(&addr, "POST", "/infer", b"{\"inputs\": [], \"budget\": \"high\"}", timeout)
+            .expect("empty batch");
+    assert_eq!(status, 400, "{}", String::from_utf8_lossy(&body));
+    let good = sample(c.sample_elems(), 70);
+    let bad_batch = BatchInferRequest {
+        inputs: vec![good, vec![0.5; 3]],
+        spec: RequestSpec::default(),
+    };
+    let (status, body) = http_request(
+        &addr,
+        "POST",
+        "/infer",
+        bad_batch.to_json().to_string().as_bytes(),
+        timeout,
+    )
+    .expect("mis-sized batch");
+    assert_eq!(status, 400, "{}", String::from_utf8_lossy(&body));
+    let stats = serving::fetch_stats(&addr, timeout).expect("GET /stats");
+    assert_eq!(
+        stats.get("completed").and_then(Json::as_i64),
+        Some(0),
+        "a rejected batch must not submit partial work: {stats}"
+    );
+    server.shutdown();
+}
+
+#[test]
+fn idle_timeout_recycles_pooled_serving_connections() {
+    // A server that idle-times sockets out quickly: the pool's second
+    // exchange finds its cached connection closed and transparently opens
+    // a fresh one — the caller never sees a failure.
+    let c = start(false);
+    let server = ServingServer::spawn_with(
+        "127.0.0.1:0",
+        c,
+        ServeOpts { idle_timeout: Duration::from_millis(50), ..ServeOpts::default() },
+    )
+    .expect("bind serving server");
+    let addr = server.addr().to_string();
+    let timeout = Duration::from_secs(10);
+    let pool = ConnPool::new(2);
+
+    let s1 = serving::fetch_stats_pooled(&pool, &addr, timeout).expect("first exchange");
+    assert!(s1.get("completed").and_then(Json::as_i64).is_some(), "{s1}");
+    thread::sleep(Duration::from_millis(300)); // let the server idle the socket out
+    let s2 = serving::fetch_stats_pooled(&pool, &addr, timeout).expect("exchange after idle close");
+    assert!(s2.get("completed").and_then(Json::as_i64).is_some(), "{s2}");
+    let ps = pool.stats();
+    assert_eq!(ps.fresh_connects, 2, "the idled socket must not be reused: {ps:?}");
+    server.shutdown();
+}
+
+#[test]
+fn serving_request_cap_closes_cleanly_under_a_pooled_client() {
+    // Cap at 2 requests per connection: the pool sees the `connection:
+    // close` on every second reply and reconnects — all exchanges succeed.
+    let c = start(true);
+    let server = ServingServer::spawn_with(
+        "127.0.0.1:0",
+        c.clone(),
+        ServeOpts { max_requests_per_conn: 2, ..ServeOpts::default() },
+    )
+    .expect("bind serving server");
+    let addr = server.addr().to_string();
+    let timeout = Duration::from_secs(30);
+    let pool = ConnPool::new(2);
+    let elems = c.sample_elems();
+    for i in 0..6 {
+        serving::infer_remote_pooled(
+            &pool,
+            &addr,
+            &InferRequest { input: sample(elems, 80 + i), spec: RequestSpec::default() },
+            timeout,
+        )
+        .expect("pooled infer under a request cap");
+    }
+    let ps = pool.stats();
+    assert_eq!(ps.fresh_connects, 3, "6 exchanges at 2 per connection: {ps:?}");
+    assert_eq!(ps.reuses, 3, "{ps:?}");
+    assert_eq!(c.metrics().completed, 6);
     server.shutdown();
 }

@@ -12,6 +12,12 @@
 //! malformed HTTP and assert clean 4xx replies (no panics, no hangs), and
 //! the dead-worker test exports its merged + reference documents to
 //! `CARGO_TARGET_TMPDIR` so CI can upload them as a debugging artifact.
+//!
+//! The keep-alive suite attacks the connection-oriented layer the same
+//! way: pipelined exchanges on one socket, half-closed peers, hogs that
+//! exceed the per-connection request cap, servers that restart under a
+//! pooled client, and workers that die mid-pipeline — the merged bytes
+//! must never change.
 
 use std::io::{Read, Write};
 use std::net::{Shutdown, TcpListener, TcpStream};
@@ -20,8 +26,8 @@ use std::time::Duration;
 
 use bf_imna::sim::shard::{self, PrecisionGrid, ShardRequest, ShardResult, SweepSpec};
 use bf_imna::sim::transport::{
-    dispatch, http_request, http_request_json, DispatchOpts, WorkerOpts, WorkerServer,
-    CODE_WORKER_BUSY,
+    dispatch, http_request, http_request_json, read_response, write_request_conn, ConnPool,
+    DispatchOpts, WorkerOpts, WorkerServer, CODE_WORKER_BUSY,
 };
 use bf_imna::sim::SweepEngine;
 use bf_imna::util::json::Json;
@@ -369,7 +375,7 @@ fn over_limit_shard_requests_get_machine_readable_503_and_the_worker_survives() 
     let worker = WorkerServer::spawn_with(
         "127.0.0.1:0",
         SweepEngine::with_threads(2),
-        WorkerOpts { max_concurrent_shards: 1, admission_queue: 0 },
+        WorkerOpts { max_concurrent_shards: 1, admission_queue: 0, ..WorkerOpts::default() },
     )
     .expect("bind worker");
     let addr = worker.addr().to_string();
@@ -468,7 +474,7 @@ fn busy_bounces_are_retried_not_counted_toward_retirement() {
     let worker = WorkerServer::spawn_with(
         "127.0.0.1:0",
         SweepEngine::with_threads(2),
-        WorkerOpts { max_concurrent_shards: 1, admission_queue: 0 },
+        WorkerOpts { max_concurrent_shards: 1, admission_queue: 0, ..WorkerOpts::default() },
     )
     .expect("bind worker");
     let pool = vec![worker.addr().to_string(), worker.addr().to_string()];
@@ -493,7 +499,7 @@ fn admission_queue_serializes_instead_of_rejecting() {
     let worker = WorkerServer::spawn_with(
         "127.0.0.1:0",
         SweepEngine::with_threads(2),
-        WorkerOpts { max_concurrent_shards: 1, admission_queue: 8 },
+        WorkerOpts { max_concurrent_shards: 1, admission_queue: 8, ..WorkerOpts::default() },
     )
     .expect("bind worker");
     let pool = vec![worker.addr().to_string(), worker.addr().to_string()];
@@ -502,4 +508,272 @@ fn admission_queue_serializes_instead_of_rejecting() {
     assert_eq!(report.retries, 0);
     assert_eq!(report.busy_retries, 0, "the queue should absorb the overlap");
     worker.shutdown();
+}
+
+// ---- keep-alive and connection-pool failure injection ------------------
+
+/// One keep-alive GET, as raw bytes (HTTP/1.1 defaults to keep-alive).
+fn raw_get(path: &str) -> Vec<u8> {
+    format!("GET {path} HTTP/1.1\r\nhost: test\r\ncontent-length: 0\r\n\r\n").into_bytes()
+}
+
+#[test]
+fn pipelined_exchanges_ride_one_connection_until_close() {
+    let worker = spawn_workers(1).remove(0);
+    let addr = worker.addr().to_string();
+
+    // Three requests pipelined onto one socket: two keep-alive, then an
+    // explicit close. The server must answer all three in order on the
+    // same connection and hang up only after the third.
+    let mut bytes = raw_get("/healthz");
+    bytes.extend(raw_get("/healthz"));
+    bytes.extend(
+        b"GET /healthz HTTP/1.1\r\nhost: test\r\ncontent-length: 0\r\nconnection: close\r\n\r\n"
+            .to_vec(),
+    );
+    let reply = raw_roundtrip(&addr, &bytes);
+    assert_eq!(reply.matches("HTTP/1.1 200").count(), 3, "{reply}");
+    assert_eq!(reply.matches("connection: keep-alive").count(), 2, "{reply}");
+    assert_eq!(reply.matches("connection: close").count(), 1, "{reply}");
+
+    // The worker counted one connection for all three exchanges (the
+    // stats probe below is the second).
+    let (status, stats) =
+        http_request_json(&addr, "GET", "/stats", b"", Duration::from_secs(10)).unwrap();
+    assert_eq!(status, 200);
+    assert_eq!(stats.get("connections").and_then(Json::as_i64), Some(2), "{stats}");
+    worker.shutdown();
+}
+
+#[test]
+fn half_closed_peer_still_gets_its_reply() {
+    // A client that sends its request and immediately shuts down its write
+    // half (FIN) has not aborted — the server must still parse, serve, and
+    // reply, then close cleanly on the EOF.
+    let worker = spawn_workers(1).remove(0);
+    let reply = raw_roundtrip(&worker.addr().to_string(), &raw_get("/healthz"));
+    assert!(reply.starts_with("HTTP/1.1 200"), "{reply}");
+    assert!(reply.contains("\"ok\":true"), "{reply}");
+    worker.shutdown();
+}
+
+#[test]
+fn hog_connection_exceeding_the_request_cap_gets_a_clean_close() {
+    // Cap at 2 requests per connection: a hog asking for more gets its 2
+    // replies and then a clean close — the third exchange yields EOF (or
+    // a reset), never a third reply.
+    let worker = WorkerServer::spawn_with(
+        "127.0.0.1:0",
+        SweepEngine::with_threads(2),
+        WorkerOpts { max_requests_per_conn: 2, ..WorkerOpts::default() },
+    )
+    .expect("bind worker");
+    let addr = worker.addr().to_string();
+
+    let mut s = TcpStream::connect(&addr).expect("connect");
+    s.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    s.set_write_timeout(Some(Duration::from_secs(30))).unwrap();
+    for i in 0..2 {
+        write_request_conn(&mut s, "GET", "/healthz", &addr, b"", false).expect("send");
+        let (status, _) = read_response(&mut s).unwrap_or_else(|e| panic!("reply {i}: {e:?}"));
+        assert_eq!(status, 200);
+    }
+    let _ = write_request_conn(&mut s, "GET", "/healthz", &addr, b"", false);
+    let mut rest = Vec::new();
+    let _ = s.read_to_end(&mut rest);
+    assert!(
+        rest.is_empty(),
+        "bytes followed the capped close: {:?}",
+        String::from_utf8_lossy(&rest)
+    );
+
+    // The cap recycles the connection; it does not wound the worker.
+    let (status, health) =
+        http_request_json(&addr, "GET", "/healthz", b"", Duration::from_secs(10)).unwrap();
+    assert_eq!(status, 200);
+    assert_eq!(health.get("ok").and_then(Json::as_bool), Some(true));
+    worker.shutdown();
+}
+
+#[test]
+fn idle_connections_are_closed_after_the_idle_timeout() {
+    let worker = WorkerServer::spawn_with(
+        "127.0.0.1:0",
+        SweepEngine::with_threads(2),
+        WorkerOpts { idle_timeout: Duration::from_millis(100), ..WorkerOpts::default() },
+    )
+    .expect("bind worker");
+    let addr = worker.addr().to_string();
+
+    // One keep-alive exchange, then silence: the server must reply (with
+    // keep-alive intent), wait out the idle budget, and close — so the
+    // read below terminates with EOF instead of hanging.
+    let mut s = TcpStream::connect(&addr).expect("connect");
+    s.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    s.write_all(&raw_get("/healthz")).expect("send");
+    let mut out = Vec::new();
+    s.read_to_end(&mut out).expect("server closes the idle connection");
+    let reply = String::from_utf8_lossy(&out);
+    assert!(reply.starts_with("HTTP/1.1 200"), "{reply}");
+    assert!(reply.contains("connection: keep-alive"), "{reply}");
+    worker.shutdown();
+}
+
+#[test]
+fn pooled_exchanges_reuse_the_worker_connection() {
+    let worker = spawn_workers(1).remove(0);
+    let addr = worker.addr().to_string();
+    let pool = ConnPool::new(2);
+    for _ in 0..3 {
+        let (status, _) = pool
+            .request(&addr, "GET", "/healthz", b"", Duration::from_secs(10))
+            .expect("pooled /healthz");
+        assert_eq!(status, 200);
+    }
+    let ps = pool.stats();
+    assert_eq!(ps.fresh_connects, 1, "{ps:?}");
+    assert_eq!(ps.reuses, 2, "{ps:?}");
+
+    // The worker agrees: one connection from the pool, one from the
+    // fresh stats probe itself.
+    let (_, stats) =
+        http_request_json(&addr, "GET", "/stats", b"", Duration::from_secs(10)).unwrap();
+    assert_eq!(stats.get("connections").and_then(Json::as_i64), Some(2), "{stats}");
+    worker.shutdown();
+}
+
+/// Minimal framed-HTTP peer for restart tests: read one request head off
+/// `s` (requests in these tests carry no body), or `false` on EOF.
+fn read_request_head(s: &mut TcpStream) -> bool {
+    let mut tail = Vec::new();
+    let mut b = [0u8; 1];
+    loop {
+        match s.read(&mut b) {
+            Ok(1) => {
+                tail.push(b[0]);
+                if tail.ends_with(b"\r\n\r\n") {
+                    return true;
+                }
+            }
+            _ => return false,
+        }
+    }
+}
+
+const KEEPALIVE_200: &[u8] =
+    b"HTTP/1.1 200 OK\r\ncontent-length: 2\r\nconnection: keep-alive\r\n\r\n{}";
+
+#[test]
+fn pooled_client_survives_a_server_restart_between_exchanges() {
+    // A server that serves one exchange, closes the connection (restart),
+    // then serves a second connection indefinitely. The pool's second
+    // request must transparently land on a fresh connection — via the
+    // health check or the one-shot stale retry, depending on whether the
+    // FIN has arrived — and succeed either way.
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind fake server");
+    let addr = listener.local_addr().unwrap().to_string();
+    thread::spawn(move || {
+        if let Ok((mut s, _)) = listener.accept() {
+            if read_request_head(&mut s) {
+                let _ = s.write_all(KEEPALIVE_200);
+            }
+            // Dropping `s` here is the restart: the pooled socket dies.
+        }
+        if let Ok((mut s, _)) = listener.accept() {
+            while read_request_head(&mut s) {
+                if s.write_all(KEEPALIVE_200).is_err() {
+                    return;
+                }
+            }
+        }
+    });
+
+    let pool = ConnPool::new(2);
+    let (status, _) =
+        pool.request(&addr, "GET", "/ping", b"", Duration::from_secs(10)).expect("first exchange");
+    assert_eq!(status, 200);
+    // Let the server's FIN land (or not — both paths must work).
+    thread::sleep(Duration::from_millis(50));
+    let (status, _) = pool
+        .request(&addr, "GET", "/ping", b"", Duration::from_secs(10))
+        .expect("exchange after the restart");
+    assert_eq!(status, 200);
+    let ps = pool.stats();
+    assert_eq!(ps.fresh_connects, 2, "both exchanges needed a connect: {ps:?}");
+    assert_eq!(ps.reuses, 0, "{ps:?}");
+}
+
+#[test]
+fn worker_dying_mid_pipeline_has_its_remaining_shards_reassigned() {
+    // A worker that completes one keep-alive exchange (a valid busy
+    // bounce), then dies mid-pipeline: it reads the next request off the
+    // pooled connection and closes without replying, and its listener is
+    // gone afterwards. The dispatcher must absorb the bounce, retry the
+    // stale socket once, see the refusal, retire the worker, and reassign
+    // everything — with merged bytes identical to the reference.
+    let spec = small_spec();
+    let full = reference(&spec);
+    let busy_body = format!("{{\"code\":\"{CODE_WORKER_BUSY}\",\"error\":\"slot busy\"}}");
+    let busy_reply = format!(
+        "HTTP/1.1 503 Service Unavailable\r\ncontent-length: {}\r\nconnection: keep-alive\r\n\r\n{busy_body}",
+        busy_body.len()
+    );
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind dying worker");
+    let addr = listener.local_addr().unwrap().to_string();
+    thread::spawn(move || {
+        let Ok((mut s, _)) = listener.accept() else { return };
+        // Exchange 1 completes (so the connection is pooled)...
+        let mut buf = [0u8; 4096];
+        let _ = s.read(&mut buf);
+        let _ = s.write_all(busy_reply.as_bytes());
+        // ...exchange 2 dies mid-request, and the listener drops with the
+        // thread: every later connect is refused.
+        let _ = s.read(&mut buf);
+    });
+
+    let healthy = spawn_workers(2);
+    let mut pool = vec![addr];
+    pool.extend(addrs(&healthy));
+    let report = dispatch(&spec, &pool, &opts(6)).expect("dispatch with a mid-pipeline death");
+    assert_eq!(report.doc.to_string(), full, "mid-pipeline death changed the merged bytes");
+    assert_eq!(report.per_worker[0].1, 0, "the dying worker never completed a shard");
+    assert!(report.busy_retries >= 1, "the keep-alive bounce was not seen: {report:?}");
+    assert!(report.retries >= 1, "the death was not retried elsewhere: {report:?}");
+    for w in healthy {
+        w.shutdown();
+    }
+}
+
+#[test]
+fn prewarm_retries_refused_connects_while_a_worker_binds() {
+    // A worker launched in parallel with the dispatcher: its port is known
+    // but its listener binds only after the dispatcher's first prewarm
+    // connect has been refused. The backoff schedule must keep it in the
+    // pool instead of retiring it (which, with no other worker, would fail
+    // the whole dispatch).
+    let spec = small_spec();
+    let full = reference(&spec);
+    let donor = SweepEngine::serial();
+    shard::run_full(&spec, &donor).unwrap();
+    let snap = donor.cache().snapshot();
+
+    let placeholder = TcpListener::bind("127.0.0.1:0").expect("reserve a port");
+    let addr = placeholder.local_addr().unwrap().to_string();
+    drop(placeholder);
+    let late = {
+        let addr = addr.clone();
+        thread::spawn(move || {
+            thread::sleep(Duration::from_millis(60));
+            WorkerServer::spawn(&addr, SweepEngine::with_threads(2)).expect("late bind")
+        })
+    };
+
+    let mut dopts = opts(3);
+    dopts.prewarm = Some(snap);
+    let report =
+        dispatch(&spec, &[addr], &dopts).expect("dispatch with a late-binding worker");
+    assert_eq!(report.doc.to_string(), full, "late-binding prewarm changed output bytes");
+    let served: usize = report.per_worker.iter().map(|(_, n)| n).sum();
+    assert_eq!(served, 3, "the late worker serves the whole sweep: {:?}", report.per_worker);
+    late.join().expect("late-bind thread").shutdown();
 }
