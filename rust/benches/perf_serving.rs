@@ -100,7 +100,54 @@ fn main() {
     print!("{}", t.render());
 
     let transport = bench_transport();
-    write_bench_json(wall_s, rps, p50, p99, met, &m, &per_config, transport);
+    let loadgen = bench_loadgen();
+    write_bench_json(wall_s, rps, p50, p99, met, &m, &per_config, transport, loadgen);
+}
+
+/// The `perf_loadgen` section: a short seeded open-loop run through the
+/// real loadgen driver against a live front end, reporting offered vs
+/// achieved rate and the client-measured tail.
+fn bench_loadgen() -> Json {
+    banner("Loadgen (open-loop constant profile, mixed classes)");
+    let coord = Coordinator::start_sim(CoordinatorConfig::default(), 0.0)
+        .expect("sim-backed coordinator starts in the default build");
+    let server = ServingServer::spawn("127.0.0.1:0", coord).expect("bind ephemeral port");
+    let addr = server.addr().to_string();
+    let spec = bf_imna::coordinator::loadgen::WorkloadSpec::builtin("constant", 150.0, 1.0, 42)
+        .expect("builtin workload");
+    let opts = bf_imna::coordinator::loadgen::LoadgenOpts {
+        workers: 4,
+        timeout: WIRE_TIMEOUT,
+    };
+    let report =
+        bf_imna::coordinator::loadgen::run_loadgen(&addr, &spec, &opts).expect("loadgen run");
+    server.shutdown();
+
+    let p99 = report.total.latency.percentile(0.99);
+    let mut t = Table::new(vec!["metric", "value"]);
+    t.row(vec!["offered".to_string(), format!("{:.0} req/s", report.offered_rps())]);
+    t.row(vec!["achieved".to_string(), format!("{:.0} req/s", report.achieved_rps())]);
+    t.row(vec![
+        "sent / ok / busy / errors".to_string(),
+        format!(
+            "{} / {} / {} / {}",
+            report.total.sent, report.total.ok, report.total.rejected_busy, report.total.errors
+        ),
+    ]);
+    t.row(vec!["met deadline".to_string(), format!("{:.0}%", 100.0 * report.total.met_frac())]);
+    t.row(vec!["client p99".to_string(), format!("{} s", fmt_eng(p99, 3))]);
+    print!("{}", t.render());
+
+    Json::obj([
+        ("offered_rps", Json::num(report.offered_rps())),
+        ("achieved_rps", Json::num(report.achieved_rps())),
+        ("sent", Json::num(report.total.sent as f64)),
+        ("ok", Json::num(report.total.ok as f64)),
+        ("rejected_busy", Json::num(report.total.rejected_busy as f64)),
+        ("errors", Json::num(report.total.errors as f64)),
+        ("met_frac", Json::num(report.total.met_frac())),
+        ("latency_p99_s", Json::num(p99)),
+    ])
 }
 
 /// The `perf_transport` section: the same serving coordinator behind a
@@ -231,6 +278,7 @@ fn write_bench_json(
     m: &bf_imna::coordinator::Metrics,
     per_config: &BTreeMap<String, u64>,
     transport: Json,
+    loadgen: Json,
 ) {
     let doc = Json::obj([
         ("bench", Json::str("perf_serving/request_path")),
@@ -248,6 +296,7 @@ fn write_bench_json(
             Json::obj(per_config.iter().map(|(k, &v)| (k.clone(), Json::num(v as f64)))),
         ),
         ("transport", transport),
+        ("loadgen", loadgen),
     ]);
     let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("BENCH_serving.json");
     match std::fs::write(&path, format!("{doc}\n")) {

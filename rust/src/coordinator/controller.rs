@@ -72,6 +72,17 @@ impl BudgetSpec {
             BudgetSpec::Deadline(d) => format!("deadline({:.3}ms)", d.as_secs_f64() * 1e3),
         }
     }
+
+    /// The metrics class label: the budget class's label, or `"deadline"`
+    /// for every explicit-deadline request (they share one metrics class
+    /// regardless of the specific deadline value — per-class metrics need
+    /// a bounded label space).
+    pub fn class_label(&self) -> &'static str {
+        match self {
+            BudgetSpec::Class(b) => b.label(),
+            BudgetSpec::Deadline(_) => "deadline",
+        }
+    }
 }
 
 /// Per-budget latency targets.

@@ -1,0 +1,1058 @@
+//! `bf-imna loadgen` — an open-loop traffic generator for the serving
+//! front end, plus the SLO-report join.
+//!
+//! **Open loop** means arrivals are scheduled by the workload, never by
+//! the server's responses: a [`WorkloadSpec`] plus its seed fully
+//! determines the request sequence (arrival times, class draws, input
+//! seeds) before the first byte goes on the wire. Replaying the same spec
+//! therefore produces a **byte-identical plan** — the client-side record
+//! of what was offered — no matter how the server behaved, which is what
+//! makes a loadgen run an artifact instead of an anecdote.
+//!
+//! The pieces:
+//!
+//! * [`WorkloadSpec`] — serializable workload description (same canonical
+//!   JSON discipline as `SweepSpec`): a seeded arrival [`Profile`]
+//!   (constant rate, diurnal curve, on/off bursts) over a weighted mix of
+//!   [`WorkloadClass`]es, each carrying a full [`RequestSpec`]
+//!   (budget class or explicit deadline, priority, batch hint).
+//! * [`WorkloadSpec::schedule`] — the deterministic expansion into
+//!   [`Arrival`]s: exponential inter-arrival gaps at the profile's
+//!   instantaneous rate, weighted class draws, per-request input seeds.
+//! * [`run_loadgen`] — the driver: a pacer thread dispatches each arrival
+//!   at its scheduled wall-clock time onto a pool of sender threads
+//!   sharing one [`ConnPool`]; latency is measured **from the scheduled
+//!   arrival time**, so client-side queueing under overload counts
+//!   against the server (no coordinated omission).
+//! * [`LoadReport`] — the client-side record: the deterministic plan
+//!   (with a digest) plus the observed outcomes (per-class counts,
+//!   a [`LatencyHistogram`] per class, pool counters).
+//! * [`slo_report`] — joins the client record with the server's
+//!   `GET /metrics` documents scraped before and after the run: offered
+//!   vs achieved rps, client vs server percentiles, met-deadline
+//!   fractions, admission rejections.
+
+use std::collections::BTreeMap;
+use std::sync::mpsc;
+use std::sync::Mutex;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use super::metrics::LatencyHistogram;
+use super::server::{
+    infer_remote_pooled, push_spec_fields, spec_from_json, InferRequest,
+};
+use super::RequestSpec;
+use crate::sim::transport::{ConnPool, PoolStats};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// Hard cap on expanded arrivals per run — a guard against specs whose
+/// `rps * duration_s` product would materialize an absurd plan, enforced
+/// by [`WorkloadSpec::validate`].
+pub const MAX_ARRIVALS: u64 = 2_000_000;
+
+/// One weighted member of a workload's request population.
+#[derive(Debug, Clone)]
+pub struct WorkloadClass {
+    /// Class name (the report key; must be unique within a spec).
+    pub name: String,
+    /// Relative draw weight (> 0; weights need not sum to 1).
+    pub weight: f64,
+    /// The request descriptor every request of this class carries.
+    pub spec: RequestSpec,
+}
+
+impl WorkloadClass {
+    /// Canonical JSON: `name`, `weight`, plus the wire descriptor fields
+    /// (`budget` / `deadline_ms`, `priority`, `batch_hint`) in exactly
+    /// the `POST /infer` shape.
+    pub fn to_json(&self) -> Json {
+        let mut pairs: Vec<(&str, Json)> = vec![
+            ("name", Json::str(self.name.clone())),
+            ("weight", Json::num(self.weight)),
+        ];
+        push_spec_fields(&mut pairs, &self.spec);
+        Json::obj(pairs)
+    }
+
+    /// Parse a value produced by [`Self::to_json`].
+    pub fn from_json(v: &Json) -> Result<WorkloadClass, String> {
+        let name = v
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or("workload class: missing 'name'")?
+            .to_string();
+        let weight = v
+            .get("weight")
+            .and_then(Json::as_f64)
+            .ok_or("workload class: missing 'weight'")?;
+        Ok(WorkloadClass { name, weight, spec: spec_from_json(v)? })
+    }
+}
+
+/// The arrival-rate shape of a workload over its duration.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Profile {
+    /// A flat rate: `rps` for the whole run.
+    Constant,
+    /// A cosine day-curve: the rate starts at `trough × rps`, peaks at
+    /// `rps` half a period in, and returns to the trough each
+    /// `period_s` — `rate(t) = rps · (trough + (1−trough) ·
+    /// (1 − cos 2πt/period)/2)`.
+    Diurnal {
+        /// Seconds per full trough→peak→trough cycle.
+        period_s: f64,
+        /// Rate floor as a fraction of `rps`, in `(0, 1]`.
+        trough: f64,
+    },
+    /// On/off square wave: full `rps` for `on_s` seconds, silence for
+    /// `off_s`, repeating.
+    Burst {
+        /// Seconds at full rate per cycle.
+        on_s: f64,
+        /// Seconds of silence per cycle.
+        off_s: f64,
+    },
+}
+
+impl Profile {
+    /// The profile's mode label (`constant` | `diurnal` | `burst`).
+    pub fn mode(&self) -> &'static str {
+        match self {
+            Profile::Constant => "constant",
+            Profile::Diurnal { .. } => "diurnal",
+            Profile::Burst { .. } => "burst",
+        }
+    }
+
+    /// Canonical JSON (`{"mode": ..., ...params}`).
+    pub fn to_json(&self) -> Json {
+        match self {
+            Profile::Constant => Json::obj([("mode", Json::str("constant"))]),
+            Profile::Diurnal { period_s, trough } => Json::obj([
+                ("mode", Json::str("diurnal")),
+                ("period_s", Json::num(*period_s)),
+                ("trough", Json::num(*trough)),
+            ]),
+            Profile::Burst { on_s, off_s } => Json::obj([
+                ("mode", Json::str("burst")),
+                ("off_s", Json::num(*off_s)),
+                ("on_s", Json::num(*on_s)),
+            ]),
+        }
+    }
+
+    /// Parse a value produced by [`Self::to_json`].
+    pub fn from_json(v: &Json) -> Result<Profile, String> {
+        let mode = v
+            .get("mode")
+            .and_then(Json::as_str)
+            .ok_or("workload profile: missing 'mode'")?;
+        let num = |key: &str| {
+            v.get(key)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| format!("workload profile: {mode} needs numeric '{key}'"))
+        };
+        match mode {
+            "constant" => Ok(Profile::Constant),
+            "diurnal" => Ok(Profile::Diurnal { period_s: num("period_s")?, trough: num("trough")? }),
+            "burst" => Ok(Profile::Burst { on_s: num("on_s")?, off_s: num("off_s")? }),
+            other => Err(format!(
+                "workload profile: unknown mode '{other}' (constant|diurnal|burst)"
+            )),
+        }
+    }
+}
+
+/// A serializable open-loop workload: an arrival profile over a weighted
+/// class mix, fully determined by its seed.
+#[derive(Debug, Clone)]
+pub struct WorkloadSpec {
+    /// Workload name (labels reports and artifacts).
+    pub name: String,
+    /// Seed driving arrivals, class draws, and per-request inputs.
+    pub seed: u64,
+    /// Peak/mean offered rate, requests per second (the profile modulates
+    /// it; for `Constant` it is the rate).
+    pub rps: f64,
+    /// Run length, seconds.
+    pub duration_s: f64,
+    /// Arrival-rate shape.
+    pub profile: Profile,
+    /// The request population (weighted; at least one class).
+    pub classes: Vec<WorkloadClass>,
+}
+
+/// One planned request: where it sits in time, which class it drew, and
+/// the seed its input sample is generated from. Pure data — the whole
+/// plan exists before any request is sent.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Arrival {
+    /// Scheduled offset from the run's start, seconds.
+    pub at_s: f64,
+    /// Index into [`WorkloadSpec::classes`].
+    pub class: usize,
+    /// Seed for this request's input sample.
+    pub input_seed: u64,
+}
+
+impl WorkloadSpec {
+    /// The standard mixed population used by the builtin profiles: a
+    /// deadline-carrying interactive class (high priority, batch hint 1),
+    /// a medium-budget bulk class, a throughput-oriented low-priority
+    /// class, and a strict short-deadline class.
+    pub fn default_classes() -> Vec<WorkloadClass> {
+        use super::controller::{Budget, BudgetSpec};
+        use super::Priority;
+        vec![
+            WorkloadClass {
+                name: "interactive".to_string(),
+                weight: 4.0,
+                spec: RequestSpec {
+                    budget: BudgetSpec::Deadline(Duration::from_millis(50)),
+                    priority: Priority::High,
+                    batch_hint: Some(1),
+                },
+            },
+            WorkloadClass {
+                name: "standard".to_string(),
+                weight: 8.0,
+                spec: RequestSpec {
+                    budget: BudgetSpec::Class(Budget::Medium),
+                    ..RequestSpec::default()
+                },
+            },
+            WorkloadClass {
+                name: "batch".to_string(),
+                weight: 2.0,
+                spec: RequestSpec {
+                    budget: BudgetSpec::Class(Budget::High),
+                    priority: Priority::Low,
+                    batch_hint: Some(8),
+                },
+            },
+            WorkloadClass {
+                name: "strict".to_string(),
+                weight: 1.0,
+                spec: RequestSpec {
+                    budget: BudgetSpec::Deadline(Duration::from_millis(5)),
+                    priority: Priority::High,
+                    batch_hint: None,
+                },
+            },
+        ]
+    }
+
+    /// A ready-made spec for a builtin profile name (`constant` |
+    /// `diurnal` | `burst`) over [`Self::default_classes`]. The diurnal
+    /// period is the run length (one full cycle per run); bursts are
+    /// 0.5 s on / 0.5 s off.
+    pub fn builtin(
+        profile: &str,
+        rps: f64,
+        duration_s: f64,
+        seed: u64,
+    ) -> Result<WorkloadSpec, String> {
+        let profile = match profile {
+            "constant" => Profile::Constant,
+            "diurnal" => Profile::Diurnal { period_s: duration_s, trough: 0.2 },
+            "burst" => Profile::Burst { on_s: 0.5, off_s: 0.5 },
+            other => {
+                return Err(format!(
+                    "unknown builtin profile '{other}' (constant|diurnal|burst)"
+                ))
+            }
+        };
+        let spec = WorkloadSpec {
+            name: format!("builtin-{}", profile.mode()),
+            seed,
+            rps,
+            duration_s,
+            profile,
+            classes: Self::default_classes(),
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Reject non-viable specs: non-positive or non-finite rates and
+    /// durations, plans past [`MAX_ARRIVALS`], empty or ill-weighted
+    /// class mixes, duplicate class names, and out-of-range profile
+    /// parameters.
+    pub fn validate(&self) -> Result<(), String> {
+        if !(self.rps.is_finite() && self.rps > 0.0) {
+            return Err("workload spec: 'rps' must be a positive finite number".to_string());
+        }
+        if !(self.duration_s.is_finite() && self.duration_s > 0.0) {
+            return Err("workload spec: 'duration_s' must be a positive finite number".to_string());
+        }
+        if self.rps * self.duration_s > MAX_ARRIVALS as f64 {
+            return Err(format!(
+                "workload spec: rps x duration_s = {} exceeds the {MAX_ARRIVALS}-arrival cap",
+                self.rps * self.duration_s
+            ));
+        }
+        match self.profile {
+            Profile::Constant => {}
+            Profile::Diurnal { period_s, trough } => {
+                if !(period_s.is_finite() && period_s > 0.0) {
+                    return Err("workload spec: diurnal 'period_s' must be > 0".to_string());
+                }
+                if !(trough.is_finite() && trough > 0.0 && trough <= 1.0) {
+                    return Err("workload spec: diurnal 'trough' must be in (0, 1]".to_string());
+                }
+            }
+            Profile::Burst { on_s, off_s } => {
+                if !(on_s.is_finite() && on_s > 0.0) {
+                    return Err("workload spec: burst 'on_s' must be > 0".to_string());
+                }
+                if !(off_s.is_finite() && off_s >= 0.0) {
+                    return Err("workload spec: burst 'off_s' must be >= 0".to_string());
+                }
+            }
+        }
+        if self.classes.is_empty() {
+            return Err("workload spec: 'classes' must carry at least one class".to_string());
+        }
+        let mut seen = std::collections::BTreeSet::new();
+        for c in &self.classes {
+            if !(c.weight.is_finite() && c.weight > 0.0) {
+                return Err(format!(
+                    "workload spec: class '{}' weight must be a positive finite number",
+                    c.name
+                ));
+            }
+            if !seen.insert(c.name.as_str()) {
+                return Err(format!("workload spec: duplicate class name '{}'", c.name));
+            }
+        }
+        Ok(())
+    }
+
+    /// Canonical JSON (sorted keys, shortest round-trip floats — the
+    /// `SweepSpec` discipline), so a spec is a byte-stable artifact.
+    pub fn to_json(&self) -> Json {
+        Json::obj([
+            ("classes", Json::arr(self.classes.iter().map(WorkloadClass::to_json))),
+            ("duration_s", Json::num(self.duration_s)),
+            ("name", Json::str(self.name.clone())),
+            ("profile", self.profile.to_json()),
+            ("rps", Json::num(self.rps)),
+            ("seed", Json::num(self.seed as f64)),
+        ])
+    }
+
+    /// Parse and validate a value produced by [`Self::to_json`].
+    pub fn from_json(v: &Json) -> Result<WorkloadSpec, String> {
+        let spec = WorkloadSpec {
+            name: v
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or("workload spec: missing 'name'")?
+                .to_string(),
+            seed: v
+                .get("seed")
+                .and_then(Json::as_i64)
+                .filter(|&s| s >= 0)
+                .ok_or("workload spec: missing or negative 'seed'")? as u64,
+            rps: v.get("rps").and_then(Json::as_f64).ok_or("workload spec: missing 'rps'")?,
+            duration_s: v
+                .get("duration_s")
+                .and_then(Json::as_f64)
+                .ok_or("workload spec: missing 'duration_s'")?,
+            profile: Profile::from_json(
+                v.get("profile").ok_or("workload spec: missing 'profile'")?,
+            )?,
+            classes: v
+                .get("classes")
+                .and_then(Json::as_arr)
+                .ok_or("workload spec: missing 'classes' array")?
+                .iter()
+                .map(WorkloadClass::from_json)
+                .collect::<Result<Vec<_>, String>>()?,
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// The profile's instantaneous rate at offset `t` seconds, rps.
+    pub fn rate_at(&self, t: f64) -> f64 {
+        match self.profile {
+            Profile::Constant => self.rps,
+            Profile::Diurnal { period_s, trough } => {
+                let phase = (1.0 - (2.0 * std::f64::consts::PI * t / period_s).cos()) * 0.5;
+                self.rps * (trough + (1.0 - trough) * phase)
+            }
+            Profile::Burst { on_s, off_s } => {
+                if t % (on_s + off_s) < on_s {
+                    self.rps
+                } else {
+                    0.0
+                }
+            }
+        }
+    }
+
+    /// Expand the spec into its deterministic arrival plan: a
+    /// non-homogeneous Poisson process approximated by exponential gaps
+    /// at the rate sampled at each arrival (exact for `Constant`; for
+    /// `Burst`, off-windows are skipped to the next on-edge). A pure
+    /// function of the spec — two calls return identical plans.
+    pub fn schedule(&self) -> Vec<Arrival> {
+        let mut rng = Rng::new(self.seed);
+        let total_weight: f64 = self.classes.iter().map(|c| c.weight).sum();
+        let mut arrivals = Vec::new();
+        let mut t = 0.0f64;
+        while t < self.duration_s && (arrivals.len() as u64) < MAX_ARRIVALS {
+            let rate = self.rate_at(t);
+            if rate <= 0.0 {
+                // Inside a burst's off-window: jump to the next on-edge
+                // (the only profile that can rest at zero — validation
+                // keeps the diurnal trough strictly positive).
+                let (on_s, off_s) = match &self.profile {
+                    Profile::Burst { on_s, off_s } => (*on_s, *off_s),
+                    _ => break,
+                };
+                let cycle = on_s + off_s;
+                t = (t / cycle).floor() * cycle + cycle;
+                continue;
+            }
+            // Exponential inter-arrival gap at the current rate; 1 - u is
+            // in (0, 1], so the log is finite.
+            let gap = -(1.0 - rng.f64()).ln() / rate;
+            t += gap;
+            if t >= self.duration_s {
+                break;
+            }
+            if self.rate_at(t) <= 0.0 {
+                // The gap overshot into a burst off-window; the arrival is
+                // thinned and the loop jumps to the next on-edge.
+                continue;
+            }
+            // Weighted class draw.
+            let mut pick = rng.f64() * total_weight;
+            let mut class = self.classes.len() - 1;
+            for (i, c) in self.classes.iter().enumerate() {
+                if pick < c.weight {
+                    class = i;
+                    break;
+                }
+                pick -= c.weight;
+            }
+            let input_seed = rng.next_u64();
+            arrivals.push(Arrival { at_s: t, class, input_seed });
+        }
+        arrivals
+    }
+
+    /// The deterministic client-side plan document: the spec itself, the
+    /// expanded request sequence (time, class, budget/deadline), and a
+    /// digest over the sequence. Identical spec ⇒ byte-identical plan,
+    /// regardless of what any server does.
+    pub fn plan_json(&self) -> Json {
+        let arrivals = self.schedule();
+        let requests: Vec<Json> = arrivals
+            .iter()
+            .map(|a| {
+                let class = &self.classes[a.class];
+                Json::obj([
+                    ("at_s", Json::num(a.at_s)),
+                    ("budget", Json::str(class.spec.budget.label())),
+                    ("class", Json::str(class.name.clone())),
+                ])
+            })
+            .collect();
+        let mut per_class: BTreeMap<String, u64> = BTreeMap::new();
+        for a in &arrivals {
+            *per_class.entry(self.classes[a.class].name.clone()).or_default() += 1;
+        }
+        let mut doc = Json::obj([
+            ("arrivals", Json::num(arrivals.len() as f64)),
+            (
+                "per_class",
+                Json::obj(per_class.into_iter().map(|(k, v)| (k, Json::num(v as f64)))),
+            ),
+            ("requests", Json::arr(requests)),
+            ("spec", self.to_json()),
+        ]);
+        let digest = fnv1a(doc.to_string().as_bytes());
+        if let Json::Obj(map) = &mut doc {
+            map.insert("digest".to_string(), Json::str(format!("{digest:016x}")));
+        }
+        doc
+    }
+}
+
+/// FNV-1a over bytes — the plan digest (stable, dependency-free).
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Driver knobs for [`run_loadgen`].
+#[derive(Debug, Clone)]
+pub struct LoadgenOpts {
+    /// Sender threads (each rides the shared pool; this bounds in-flight
+    /// requests, clamped to ≥ 1). The arrival schedule never slows down —
+    /// when all senders are busy, dispatched arrivals queue and their
+    /// queueing delay counts against measured latency.
+    pub workers: usize,
+    /// Per-exchange timeout.
+    pub timeout: Duration,
+}
+
+impl Default for LoadgenOpts {
+    /// 8 senders, 30 s per exchange.
+    fn default() -> Self {
+        LoadgenOpts { workers: 8, timeout: Duration::from_secs(30) }
+    }
+}
+
+/// Observed outcomes for one class (or the whole run).
+#[derive(Debug, Default, Clone)]
+pub struct ClassOutcome {
+    /// Requests dispatched.
+    pub sent: u64,
+    /// Requests answered 200 with a verdict.
+    pub ok: u64,
+    /// Requests bounced by admission control (`503` server-busy).
+    pub rejected_busy: u64,
+    /// Other failures (timeouts, transport errors, non-503 statuses).
+    pub errors: u64,
+    /// Of `ok`, how many met their deadline/target (server verdict).
+    pub met: u64,
+    /// Client-measured latency (scheduled arrival → verdict) of `ok`
+    /// requests.
+    pub latency: LatencyHistogram,
+}
+
+impl ClassOutcome {
+    fn absorb(&mut self, other: &ClassOutcome) {
+        self.sent += other.sent;
+        self.ok += other.ok;
+        self.rejected_busy += other.rejected_busy;
+        self.errors += other.errors;
+        self.met += other.met;
+        self.latency.merge(&other.latency);
+    }
+
+    /// Met-deadline fraction over answered requests (1.0 when none).
+    pub fn met_frac(&self) -> f64 {
+        if self.ok > 0 {
+            self.met as f64 / self.ok as f64
+        } else {
+            1.0
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj([
+            ("errors", Json::num(self.errors as f64)),
+            ("latency_p50_s", Json::num(self.latency.percentile(0.5))),
+            ("latency_p99_s", Json::num(self.latency.percentile(0.99))),
+            ("latency_p999_s", Json::num(self.latency.percentile(0.999))),
+            ("met", Json::num(self.met as f64)),
+            ("met_frac", Json::num(self.met_frac())),
+            ("ok", Json::num(self.ok as f64)),
+            ("rejected_busy", Json::num(self.rejected_busy as f64)),
+            ("sent", Json::num(self.sent as f64)),
+        ])
+    }
+}
+
+/// The client-side record of one loadgen run: the deterministic plan plus
+/// everything observed on the wire.
+#[derive(Debug, Clone)]
+pub struct LoadReport {
+    /// The deterministic plan ([`WorkloadSpec::plan_json`]) — the
+    /// byte-identical-under-replay half.
+    pub plan: Json,
+    /// Wall-clock from first scheduled arrival to last verdict, seconds.
+    pub wall_s: f64,
+    /// Aggregate outcomes across all classes.
+    pub total: ClassOutcome,
+    /// Outcomes per class name.
+    pub per_class: BTreeMap<String, ClassOutcome>,
+    /// The shared connection pool's counters.
+    pub pool: PoolStats,
+}
+
+impl LoadReport {
+    /// Offered rate: planned arrivals over the spec duration, rps.
+    pub fn offered_rps(&self) -> f64 {
+        let arrivals =
+            self.plan.get("arrivals").and_then(Json::as_f64).unwrap_or(0.0);
+        let duration = self
+            .plan
+            .get("spec")
+            .and_then(|s| s.get("duration_s"))
+            .and_then(Json::as_f64)
+            .unwrap_or(0.0);
+        if duration > 0.0 {
+            arrivals / duration
+        } else {
+            0.0
+        }
+    }
+
+    /// Achieved rate: answered requests over the run's wall clock, rps.
+    pub fn achieved_rps(&self) -> f64 {
+        if self.wall_s > 0.0 {
+            self.total.ok as f64 / self.wall_s
+        } else {
+            0.0
+        }
+    }
+
+    /// The full report document (plan + observed).
+    pub fn to_json(&self) -> Json {
+        Json::obj([
+            (
+                "observed",
+                Json::obj([
+                    ("achieved_rps", Json::num(self.achieved_rps())),
+                    (
+                        "per_class",
+                        Json::obj(
+                            self.per_class.iter().map(|(k, v)| (k.clone(), v.to_json())),
+                        ),
+                    ),
+                    (
+                        "pool",
+                        Json::obj([
+                            ("discards", Json::num(self.pool.discards as f64)),
+                            ("fresh_connects", Json::num(self.pool.fresh_connects as f64)),
+                            ("reuses", Json::num(self.pool.reuses as f64)),
+                            ("stale_retries", Json::num(self.pool.stale_retries as f64)),
+                        ]),
+                    ),
+                    ("total", self.total.to_json()),
+                    ("wall_s", Json::num(self.wall_s)),
+                ]),
+            ),
+            ("plan", self.plan.clone()),
+        ])
+    }
+}
+
+/// Play a workload against a live serving front end at `addr`
+/// (host:port). Scrapes `/healthz` first for the model contract, expands
+/// the plan, then paces it out open-loop. Fails only on setup errors
+/// (unreachable server, invalid spec) — per-request failures are
+/// outcomes, recorded in the report.
+pub fn run_loadgen(
+    addr: &str,
+    spec: &WorkloadSpec,
+    opts: &LoadgenOpts,
+) -> Result<LoadReport, String> {
+    spec.validate()?;
+    let health = super::server::fetch_health(addr, opts.timeout)?;
+    let sample_elems = health
+        .get("sample_elems")
+        .and_then(Json::as_i64)
+        .filter(|&n| n > 0)
+        .ok_or_else(|| format!("{addr}: /healthz did not report sample_elems"))?
+        as usize;
+
+    let arrivals = spec.schedule();
+    let plan = spec.plan_json();
+    let workers = opts.workers.max(1);
+    let pool = ConnPool::new(workers);
+
+    // Pacer → senders over a channel: the pacer owns the clock and never
+    // waits on responses (open loop); senders pull dispatched arrivals
+    // and carry them over the shared pool. Each in-flight item carries
+    // its scheduled Instant so latency includes any dispatch backlog.
+    let (work_tx, work_rx) = mpsc::channel::<(Arrival, Instant)>();
+    let work_rx = Mutex::new(work_rx);
+    let started = Instant::now();
+    let mut outcomes: Vec<(Vec<ClassOutcome>, LatencyHistogram)> = Vec::new();
+    thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(workers);
+        for _ in 0..workers {
+            let work_rx = &work_rx;
+            let pool = &pool;
+            let spec = &spec;
+            handles.push(scope.spawn(move || {
+                let mut per_class: Vec<ClassOutcome> =
+                    vec![ClassOutcome::default(); spec.classes.len()];
+                let mut all = LatencyHistogram::new();
+                loop {
+                    let item = {
+                        let rx = work_rx.lock().unwrap();
+                        rx.recv()
+                    };
+                    let Ok((arrival, scheduled)) = item else { break };
+                    let class = &spec.classes[arrival.class];
+                    let mut input_rng = Rng::new(arrival.input_seed);
+                    let input: Vec<f32> =
+                        (0..sample_elems).map(|_| input_rng.f64() as f32).collect();
+                    let req = InferRequest { input, spec: class.spec.clone() };
+                    let out = &mut per_class[arrival.class];
+                    out.sent += 1;
+                    match infer_remote_pooled(pool, addr, &req, opts.timeout) {
+                        Ok(resp) => {
+                            out.ok += 1;
+                            out.met += u64::from(resp.met_deadline);
+                            let latency = scheduled.elapsed().as_secs_f64();
+                            out.latency.record(latency);
+                            all.record(latency);
+                        }
+                        Err(e) if e.contains("HTTP 503") => out.rejected_busy += 1,
+                        Err(_) => out.errors += 1,
+                    }
+                }
+                (per_class, all)
+            }));
+        }
+
+        // The pacer: dispatch each arrival at its scheduled offset.
+        for arrival in &arrivals {
+            let scheduled = started + Duration::from_secs_f64(arrival.at_s);
+            let now = Instant::now();
+            if scheduled > now {
+                thread::sleep(scheduled - now);
+            }
+            if work_tx.send((arrival.clone(), scheduled)).is_err() {
+                break;
+            }
+        }
+        drop(work_tx); // senders drain the backlog, then exit
+        for h in handles {
+            if let Ok(tally) = h.join() {
+                outcomes.push(tally);
+            }
+        }
+    });
+    let wall_s = started.elapsed().as_secs_f64();
+
+    let mut per_class_merged: Vec<ClassOutcome> =
+        vec![ClassOutcome::default(); spec.classes.len()];
+    let mut total = ClassOutcome::default();
+    for (per_class, all) in &outcomes {
+        for (merged, part) in per_class_merged.iter_mut().zip(per_class) {
+            merged.absorb(part);
+        }
+        total.latency.merge(all);
+    }
+    for c in &per_class_merged {
+        total.sent += c.sent;
+        total.ok += c.ok;
+        total.rejected_busy += c.rejected_busy;
+        total.errors += c.errors;
+        total.met += c.met;
+    }
+    let per_class = spec
+        .classes
+        .iter()
+        .zip(per_class_merged)
+        .map(|(c, o)| (c.name.clone(), o))
+        .collect();
+    Ok(LoadReport { plan, wall_s, total, per_class, pool: pool.stats() })
+}
+
+/// Read a numeric field (possibly nested one level, `"a.b"`) out of a
+/// `/metrics` document; 0.0 when absent.
+fn metric_num(doc: &Json, path: &str) -> f64 {
+    let mut cur = doc;
+    for part in path.split('.') {
+        match cur.get(part) {
+            Some(next) => cur = next,
+            None => return 0.0,
+        }
+    }
+    cur.as_f64().unwrap_or(0.0)
+}
+
+/// Join the client-side [`LoadReport`] with the server's `GET /metrics`
+/// documents scraped before and after the run into the SLO-report
+/// artifact: offered vs achieved rps, client-side per-class percentiles
+/// and met fractions, and the server-side deltas (completions, deadline
+/// verdicts, admission rejections, connection churn) plus the server's
+/// cumulative latency percentiles.
+pub fn slo_report(report: &LoadReport, before: &Json, after: &Json) -> Json {
+    let delta = |path: &str| metric_num(after, path) - metric_num(before, path);
+    let spec = report.plan.get("spec").cloned().unwrap_or(Json::Null);
+    let server_completed = delta("completed");
+    let server_met = delta("deadline_met");
+    let server_met_frac =
+        if server_completed > 0.0 { server_met / server_completed } else { 1.0 };
+    Json::obj([
+        (
+            "client",
+            Json::obj([
+                ("achieved_rps", Json::num(report.achieved_rps())),
+                ("errors", Json::num(report.total.errors as f64)),
+                ("latency_p50_s", Json::num(report.total.latency.percentile(0.5))),
+                ("latency_p99_s", Json::num(report.total.latency.percentile(0.99))),
+                ("latency_p999_s", Json::num(report.total.latency.percentile(0.999))),
+                ("met_frac", Json::num(report.total.met_frac())),
+                ("ok", Json::num(report.total.ok as f64)),
+                (
+                    "per_class",
+                    Json::obj(
+                        report.per_class.iter().map(|(k, v)| (k.clone(), v.to_json())),
+                    ),
+                ),
+                ("rejected_busy", Json::num(report.total.rejected_busy as f64)),
+                ("sent", Json::num(report.total.sent as f64)),
+                ("wall_s", Json::num(report.wall_s)),
+            ]),
+        ),
+        ("kind", Json::str("slo-report")),
+        (
+            "offered",
+            Json::obj([
+                (
+                    "arrivals",
+                    Json::num(report.plan.get("arrivals").and_then(Json::as_f64).unwrap_or(0.0)),
+                ),
+                (
+                    "digest",
+                    report.plan.get("digest").cloned().unwrap_or(Json::Null),
+                ),
+                ("rps", Json::num(report.offered_rps())),
+            ]),
+        ),
+        (
+            "server",
+            Json::obj([
+                ("admission_rejections_delta", Json::num(delta("connections.rejected_busy"))),
+                ("completed_delta", Json::num(server_completed)),
+                ("connections_accepted_delta", Json::num(delta("connections.accepted"))),
+                ("connections_dropped_delta", Json::num(delta("connections.dropped"))),
+                ("deadline_met_delta", Json::num(server_met)),
+                ("deadline_missed_delta", Json::num(delta("deadline_missed"))),
+                ("failed_delta", Json::num(delta("failed"))),
+                ("latency_p50_s", Json::num(metric_num(after, "latency.p50_s"))),
+                ("latency_p99_s", Json::num(metric_num(after, "latency.p99_s"))),
+                ("latency_p999_s", Json::num(metric_num(after, "latency.p999_s"))),
+                ("met_frac_delta_window", Json::num(server_met_frac)),
+                ("queue_depth_after", Json::num(metric_num(after, "queue_depth"))),
+            ]),
+        ),
+        ("workload", spec),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_spec(profile: Profile) -> WorkloadSpec {
+        WorkloadSpec {
+            name: "t".to_string(),
+            seed: 11,
+            rps: 200.0,
+            duration_s: 2.0,
+            profile,
+            classes: WorkloadSpec::default_classes(),
+        }
+    }
+
+    #[test]
+    fn spec_json_round_trips_byte_identically() {
+        for profile in [
+            Profile::Constant,
+            Profile::Diurnal { period_s: 2.0, trough: 0.25 },
+            Profile::Burst { on_s: 0.5, off_s: 0.25 },
+        ] {
+            let spec = small_spec(profile);
+            let text = spec.to_json().to_string();
+            let back = WorkloadSpec::from_json(&Json::parse(&text).unwrap()).unwrap();
+            assert_eq!(back.to_json().to_string(), text, "canonical round trip");
+        }
+    }
+
+    #[test]
+    fn from_json_rejects_bad_specs() {
+        let good = small_spec(Profile::Constant).to_json().to_string();
+        for (field, bad) in [
+            ("rps", r#""rps":0"#),
+            ("rps", r#""rps":-5"#),
+            ("duration_s", r#""duration_s":0"#),
+            ("seed", r#""seed":-1"#),
+        ] {
+            let text = {
+                // Patch one field in the canonical text.
+                let needle_start = good.find(&format!("\"{field}\":")).unwrap();
+                let needle_end = good[needle_start..]
+                    .find(|c| c == ',' || c == '}')
+                    .unwrap()
+                    + needle_start;
+                format!("{}{}{}", &good[..needle_start], bad, &good[needle_end..])
+            };
+            assert!(
+                WorkloadSpec::from_json(&Json::parse(&text).unwrap()).is_err(),
+                "{field} => {bad}"
+            );
+        }
+        // Structural rejections.
+        let mut spec = small_spec(Profile::Constant);
+        spec.classes.clear();
+        assert!(spec.validate().is_err(), "empty classes");
+        let mut spec = small_spec(Profile::Constant);
+        spec.classes[1].name = spec.classes[0].name.clone();
+        assert!(spec.validate().is_err(), "duplicate class names");
+        let mut spec = small_spec(Profile::Constant);
+        spec.classes[0].weight = 0.0;
+        assert!(spec.validate().is_err(), "zero weight");
+        let spec = small_spec(Profile::Diurnal { period_s: 1.0, trough: 0.0 });
+        assert!(spec.validate().is_err(), "zero trough would stall the schedule");
+        let spec = small_spec(Profile::Burst { on_s: 0.0, off_s: 1.0 });
+        assert!(spec.validate().is_err(), "zero on-window");
+        let mut spec = small_spec(Profile::Constant);
+        spec.rps = 1e9;
+        spec.duration_s = 1e5;
+        assert!(spec.validate().is_err(), "arrival cap");
+        // Unknown profile mode.
+        assert!(Profile::from_json(
+            &Json::parse(r#"{"mode":"sawtooth"}"#).unwrap()
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn schedule_is_deterministic_and_seed_sensitive() {
+        let spec = small_spec(Profile::Constant);
+        let a = spec.schedule();
+        let b = spec.schedule();
+        assert!(!a.is_empty());
+        assert_eq!(a, b, "same spec, same plan");
+        let mut reseeded = small_spec(Profile::Constant);
+        reseeded.seed = 12;
+        assert_ne!(a, reseeded.schedule(), "a different seed must change the plan");
+        // And the plan document (the client-side report's deterministic
+        // half) is byte-identical across expansions.
+        assert_eq!(spec.plan_json().to_string(), spec.plan_json().to_string());
+    }
+
+    #[test]
+    fn constant_profile_offers_the_requested_rate() {
+        let spec = small_spec(Profile::Constant);
+        let n = spec.schedule().len() as f64;
+        let expected = spec.rps * spec.duration_s;
+        assert!(
+            (n - expected).abs() < expected * 0.3,
+            "{n} arrivals for an expectation of {expected}"
+        );
+    }
+
+    #[test]
+    fn burst_profile_is_silent_in_off_windows() {
+        let spec = small_spec(Profile::Burst { on_s: 0.5, off_s: 0.5 });
+        let arrivals = spec.schedule();
+        assert!(!arrivals.is_empty());
+        for a in &arrivals {
+            let phase = a.at_s % 1.0;
+            assert!(phase < 0.5 + 1e-9, "arrival at {} is inside an off-window", a.at_s);
+        }
+    }
+
+    #[test]
+    fn diurnal_profile_peaks_mid_period() {
+        // One full cycle across the run: the rate troughs at the edges and
+        // peaks in the middle, so the middle third must out-arrive the
+        // first third by roughly the rate ratio.
+        let mut spec = small_spec(Profile::Diurnal { period_s: 2.0, trough: 0.1 });
+        spec.rps = 500.0;
+        let arrivals = spec.schedule();
+        let third = spec.duration_s / 3.0;
+        let first = arrivals.iter().filter(|a| a.at_s < third).count();
+        let middle =
+            arrivals.iter().filter(|a| a.at_s >= third && a.at_s < 2.0 * third).count();
+        assert!(
+            middle as f64 > first as f64 * 1.5,
+            "middle third ({middle}) should out-arrive the first ({first})"
+        );
+    }
+
+    #[test]
+    fn builtin_profiles_build_and_validate() {
+        for name in ["constant", "diurnal", "burst"] {
+            let spec = WorkloadSpec::builtin(name, 100.0, 1.0, 5).unwrap();
+            assert_eq!(spec.profile.mode(), name);
+            assert!(!spec.classes.is_empty());
+            assert!(spec.validate().is_ok());
+        }
+        assert!(WorkloadSpec::builtin("sawtooth", 100.0, 1.0, 5).is_err());
+    }
+
+    #[test]
+    fn class_mix_respects_weights() {
+        let spec = small_spec(Profile::Constant);
+        let arrivals = spec.schedule();
+        let mut counts = vec![0usize; spec.classes.len()];
+        for a in &arrivals {
+            counts[a.class] += 1;
+        }
+        // "standard" (weight 8) must dominate "strict" (weight 1).
+        let standard = counts[1];
+        let strict = counts[3];
+        assert!(
+            standard > strict * 3,
+            "weight-8 class ({standard}) should dominate weight-1 ({strict})"
+        );
+        assert!(counts.iter().all(|&c| c > 0), "every class should appear: {counts:?}");
+    }
+
+    #[test]
+    fn slo_report_joins_client_and_server_deltas() {
+        let spec = small_spec(Profile::Constant);
+        let mut total = ClassOutcome::default();
+        total.sent = 10;
+        total.ok = 8;
+        total.met = 6;
+        total.rejected_busy = 2;
+        for i in 0..8 {
+            total.latency.record(0.01 * (i + 1) as f64);
+        }
+        let report = LoadReport {
+            plan: spec.plan_json(),
+            wall_s: 2.0,
+            total,
+            per_class: BTreeMap::new(),
+            pool: PoolStats { fresh_connects: 2, reuses: 8, stale_retries: 0, discards: 0 },
+        };
+        let before = Json::parse(
+            r#"{"completed":100,"deadline_met":90,"deadline_missed":10,"failed":0,
+                "connections":{"accepted":5,"rejected_busy":1,"dropped":0},"queue_depth":0,
+                "latency":{"p50_s":0.01,"p99_s":0.05,"p999_s":0.09}}"#,
+        )
+        .unwrap();
+        let after = Json::parse(
+            r#"{"completed":108,"deadline_met":96,"deadline_missed":12,"failed":0,
+                "connections":{"accepted":9,"rejected_busy":3,"dropped":0},"queue_depth":0,
+                "latency":{"p50_s":0.012,"p99_s":0.06,"p999_s":0.10}}"#,
+        )
+        .unwrap();
+        let slo = slo_report(&report, &before, &after);
+        assert_eq!(slo.get("kind").and_then(Json::as_str), Some("slo-report"));
+        let server = slo.get("server").unwrap();
+        assert_eq!(server.get("completed_delta").and_then(Json::as_f64), Some(8.0));
+        assert_eq!(server.get("deadline_met_delta").and_then(Json::as_f64), Some(6.0));
+        assert_eq!(
+            server.get("admission_rejections_delta").and_then(Json::as_f64),
+            Some(2.0)
+        );
+        assert_eq!(
+            server.get("connections_accepted_delta").and_then(Json::as_f64),
+            Some(4.0)
+        );
+        let client = slo.get("client").unwrap();
+        assert_eq!(client.get("met_frac").and_then(Json::as_f64), Some(0.75));
+        assert_eq!(client.get("rejected_busy").and_then(Json::as_f64), Some(2.0));
+        assert!(slo.get("offered").and_then(|o| o.get("rps")).is_some());
+        assert!(slo.get("workload").and_then(|w| w.get("seed")).is_some());
+        // The artifact is canonical: serializing twice is byte-identical.
+        assert_eq!(slo.to_string(), slo_report(&report, &before, &after).to_string());
+    }
+
+    // Live loadgen runs against a spawned server are in
+    // rust/tests/serving.rs (replay byte-identity, overload rejections).
+}

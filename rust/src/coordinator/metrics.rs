@@ -1,5 +1,21 @@
-//! Serving metrics: request counts, latency distribution, deadline
-//! outcomes, per-config and per-batch-size usage.
+//! Serving metrics: request counts, latency distributions, deadline
+//! outcomes, per-class and per-config usage.
+//!
+//! Two latency representations coexist, with different jobs:
+//!
+//! * **[`LatencyHistogram`]** — fixed log-bucketed histograms (constant
+//!   memory, every sample ever recorded). Percentiles read from a
+//!   histogram are exact to within one bucket (~15.5% relative width) no
+//!   matter how long the server has been running; this is what
+//!   `GET /metrics` and (since the loadgen PR) the `GET /stats`
+//!   percentile fields report.
+//! * **bounded sample rings** (`request_latencies` / `execute_latencies`)
+//!   — the most recent [`LATENCY_WINDOW`] raw samples, kept for the
+//!   legacy snapshot path ([`Metrics::latency_p_window`]) and for code
+//!   that wants actual recent samples (mean-over-window, debugging). The
+//!   ring silently forgets everything older than the window, which skews
+//!   p999 on long runs — that is exactly why the percentile fields no
+//!   longer read from it.
 
 use std::collections::BTreeMap;
 
@@ -8,9 +24,229 @@ use crate::util::stats;
 
 /// Retained latency samples per distribution (a sliding window): the
 /// serving process is long-running, so sample storage must be bounded —
-/// percentiles are over the most recent window, counters stay exact, and
-/// a metrics snapshot stays cheap to clone under the worker's mutex.
+/// window percentiles are over the most recent samples, counters stay
+/// exact, and a metrics snapshot stays cheap to clone under the worker's
+/// mutex.
 pub const LATENCY_WINDOW: usize = 4096;
+
+/// Smallest latency the histogram resolves, seconds (1 µs). Samples below
+/// land in the underflow bucket and report as `HIST_MIN_S`.
+pub const HIST_MIN_S: f64 = 1e-6;
+
+/// Log-spaced buckets per decade. 16 per decade gives a bucket width
+/// ratio of `10^(1/16) ≈ 1.155` — percentiles are exact to within ~15.5%.
+pub const HIST_BUCKETS_PER_DECADE: usize = 16;
+
+/// Decades covered: `[HIST_MIN_S, HIST_MIN_S * 10^HIST_DECADES)` =
+/// 1 µs .. 100 s. Samples at or above the top land in the overflow
+/// bucket and report as the largest sample seen.
+pub const HIST_DECADES: usize = 8;
+
+/// Total log-spaced buckets (underflow and overflow are carried
+/// separately).
+pub const HIST_BUCKETS: usize = HIST_BUCKETS_PER_DECADE * HIST_DECADES;
+
+/// A fixed-geometry log-bucketed latency histogram.
+///
+/// The geometry is a compile-time constant (same buckets in every
+/// process), so histograms from different snapshots — or different
+/// machines — [`merge`](Self::merge) by plain element-wise addition, and
+/// client/server documents are directly comparable. Memory is constant
+/// (`HIST_BUCKETS + 2` counters) regardless of how many samples are
+/// recorded; the exact sum and max ride along so means and maxima stay
+/// exact.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LatencyHistogram {
+    /// Bucket counts: `counts[0]` is underflow (`< HIST_MIN_S`),
+    /// `counts[1..=HIST_BUCKETS]` are the log-spaced buckets,
+    /// `counts[HIST_BUCKETS + 1]` is overflow.
+    counts: Vec<u64>,
+    /// Samples recorded.
+    count: u64,
+    /// Exact sum of all samples, seconds (for exact means).
+    sum_s: f64,
+    /// Largest sample seen, seconds (reported for overflow percentiles).
+    max_s: f64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        LatencyHistogram {
+            counts: vec![0; HIST_BUCKETS + 2],
+            count: 0,
+            sum_s: 0.0,
+            max_s: 0.0,
+        }
+    }
+}
+
+impl LatencyHistogram {
+    /// An empty histogram.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The bucket a sample falls in: `0` = underflow, `1..=HIST_BUCKETS`
+    /// = log-spaced, `HIST_BUCKETS + 1` = overflow. Bucket `i` (log
+    /// range) covers `[upper_edge(i-1), upper_edge(i))`.
+    pub fn bucket_index(sample_s: f64) -> usize {
+        if !(sample_s >= HIST_MIN_S) {
+            // NaN and sub-minimum both land in underflow.
+            return 0;
+        }
+        let pos = (sample_s / HIST_MIN_S).log10() * HIST_BUCKETS_PER_DECADE as f64;
+        let idx = pos.floor() as usize + 1;
+        idx.min(HIST_BUCKETS + 1)
+    }
+
+    /// The upper edge of a bucket, seconds: `upper_edge(0) = HIST_MIN_S`,
+    /// `upper_edge(HIST_BUCKETS)` = the histogram's top (100 s). The
+    /// overflow bucket has no finite edge; callers report the max sample.
+    pub fn upper_edge(bucket: usize) -> f64 {
+        let b = bucket.min(HIST_BUCKETS);
+        HIST_MIN_S * 10f64.powf(b as f64 / HIST_BUCKETS_PER_DECADE as f64)
+    }
+
+    /// Record one sample (seconds).
+    pub fn record(&mut self, sample_s: f64) {
+        let idx = Self::bucket_index(sample_s);
+        self.counts[idx] += 1;
+        self.count += 1;
+        if sample_s.is_finite() {
+            self.sum_s += sample_s;
+            if sample_s > self.max_s {
+                self.max_s = sample_s;
+            }
+        }
+    }
+
+    /// Samples recorded.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Exact sum of recorded samples, seconds.
+    pub fn sum_s(&self) -> f64 {
+        self.sum_s
+    }
+
+    /// Largest recorded sample, seconds (0.0 when empty).
+    pub fn max_s(&self) -> f64 {
+        self.max_s
+    }
+
+    /// Exact mean over *all* recorded samples (not a window), seconds.
+    pub fn mean_s(&self) -> f64 {
+        if self.count > 0 {
+            self.sum_s / self.count as f64
+        } else {
+            0.0
+        }
+    }
+
+    /// Absorb another histogram (element-wise; both share the fixed
+    /// compile-time geometry).
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum_s += other.sum_s;
+        if other.max_s > self.max_s {
+            self.max_s = other.max_s;
+        }
+    }
+
+    /// Latency percentile, seconds. `q` is a fraction in `[0, 1]`
+    /// (`0.5` = median). Returns the **upper edge** of the bucket holding
+    /// the rank-`ceil(q·count)` sample — the true sample lies within that
+    /// bucket, so the error is bounded by one bucket width. Underflow
+    /// ranks report `HIST_MIN_S`; overflow ranks report the exact largest
+    /// sample. Empty histograms report 0.0.
+    pub fn percentile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut seen = 0u64;
+        for (idx, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                if idx == HIST_BUCKETS + 1 {
+                    return self.max_s;
+                }
+                return Self::upper_edge(idx);
+            }
+        }
+        self.max_s
+    }
+
+    /// The histogram document: exact count/sum/max, bucketed percentiles,
+    /// and the non-empty buckets as `[upper_edge_s, count]` pairs
+    /// (underflow reported under edge `HIST_MIN_S`; overflow under the
+    /// max sample's value).
+    pub fn to_json(&self) -> Json {
+        let buckets = self
+            .counts
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(idx, &c)| {
+                let edge = if idx == HIST_BUCKETS + 1 {
+                    self.max_s
+                } else {
+                    Self::upper_edge(idx)
+                };
+                Json::arr([Json::num(edge), Json::num(c as f64)])
+            });
+        Json::obj([
+            ("count", Json::num(self.count as f64)),
+            ("sum_s", Json::num(self.sum_s)),
+            ("max_s", Json::num(self.max_s)),
+            ("p50_s", Json::num(self.percentile(0.5))),
+            ("p99_s", Json::num(self.percentile(0.99))),
+            ("p999_s", Json::num(self.percentile(0.999))),
+            ("buckets", Json::arr(buckets)),
+        ])
+    }
+}
+
+/// Per-request-class serving outcomes (one per budget-class label, plus
+/// `"deadline"` for requests carrying an explicit deadline).
+#[derive(Debug, Default, Clone)]
+pub struct ClassMetrics {
+    /// Completed requests of this class.
+    pub completed: u64,
+    /// Completed requests of this class that met their target.
+    pub deadline_met: u64,
+    /// End-to-end latency histogram of this class.
+    pub latency: LatencyHistogram,
+}
+
+impl ClassMetrics {
+    /// Fraction of this class's completed requests that met their target
+    /// (1.0 when nothing completed yet).
+    pub fn met_frac(&self) -> f64 {
+        if self.completed > 0 {
+            self.deadline_met as f64 / self.completed as f64
+        } else {
+            1.0
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj([
+            ("completed", Json::num(self.completed as f64)),
+            ("deadline_met", Json::num(self.deadline_met as f64)),
+            (
+                "deadline_missed",
+                Json::num((self.completed - self.deadline_met) as f64),
+            ),
+            ("met_frac", Json::num(self.met_frac())),
+            ("latency", self.latency.to_json()),
+        ])
+    }
+}
 
 /// Aggregated serving metrics (guarded by a mutex in the coordinator).
 #[derive(Debug, Default, Clone)]
@@ -29,11 +265,20 @@ pub struct Metrics {
     /// Total samples padded (wasted work in partial batches).
     pub padded_samples: u64,
     /// End-to-end per-request latency samples, seconds — the most recent
-    /// [`LATENCY_WINDOW`] of them (older samples are overwritten).
+    /// [`LATENCY_WINDOW`] of them (older samples are overwritten). Kept
+    /// for the legacy snapshot path; percentiles route through
+    /// [`Self::request_hist`].
     pub request_latencies: Vec<f64>,
     /// Executor (backend execute only) per-batch latency samples, seconds
     /// — the most recent [`LATENCY_WINDOW`] of them.
     pub execute_latencies: Vec<f64>,
+    /// End-to-end request latency over the **whole** process lifetime
+    /// (log-bucketed; what `/stats` and `/metrics` percentiles read).
+    pub request_hist: LatencyHistogram,
+    /// Executor per-batch latency over the whole process lifetime.
+    pub execute_hist: LatencyHistogram,
+    /// Outcomes per request class (`low`/`medium`/`high`/`deadline`).
+    pub per_class: BTreeMap<String, ClassMetrics>,
     /// Requests served per precision config.
     pub per_config: BTreeMap<String, u64>,
     /// Batches executed per compiled batch size.
@@ -62,13 +307,16 @@ impl Metrics {
         self.batches += 1;
         self.padded_samples += compiled_batch - real_samples;
         push_windowed(&mut self.execute_latencies, self.batches, execute_s);
+        self.execute_hist.record(execute_s);
         *self.per_config.entry(config.to_string()).or_default() += real_samples;
         *self.per_batch_size.entry(compiled_batch).or_default() += 1;
     }
 
-    /// Record one completed request with its end-to-end latency and
-    /// whether it met its effective latency target.
-    pub fn record_request(&mut self, latency_s: f64, met_deadline: bool) {
+    /// Record one completed request: its class label (a budget-class
+    /// label or `"deadline"` — see
+    /// [`BudgetSpec::class_label`](super::BudgetSpec::class_label)), its
+    /// end-to-end latency, and whether it met its effective target.
+    pub fn record_request(&mut self, class: &str, latency_s: f64, met_deadline: bool) {
         self.completed += 1;
         if met_deadline {
             self.deadline_met += 1;
@@ -76,20 +324,35 @@ impl Metrics {
             self.deadline_missed += 1;
         }
         push_windowed(&mut self.request_latencies, self.completed, latency_s);
+        self.request_hist.record(latency_s);
+        let c = self.per_class.entry(class.to_string()).or_default();
+        c.completed += 1;
+        c.deadline_met += u64::from(met_deadline);
+        c.latency.record(latency_s);
     }
 
-    /// Latency percentile over the retained request window, seconds. `q`
-    /// is a fraction in `[0, 1]` (`0.5` = median, `0.999` = p999) —
-    /// converted here to the percent scale [`stats::percentile`] expects,
-    /// so callers quoting "p50" actually get the median rather than the
-    /// 0.5th percentile.
+    /// Latency percentile over the **whole process lifetime**, seconds,
+    /// read from the log-bucketed histogram (exact to within one bucket;
+    /// immune to the window-forgetting skew). `q` is a fraction in
+    /// `[0, 1]` (`0.5` = median, `0.999` = p999).
     pub fn latency_p(&self, q: f64) -> f64 {
+        self.request_hist.percentile(q)
+    }
+
+    /// Latency percentile over the retained sample window (the most
+    /// recent [`LATENCY_WINDOW`] raw samples) — the legacy snapshot path.
+    /// `q` is a fraction in `[0, 1]`, converted here to the percent scale
+    /// [`stats::percentile`] expects. On long runs this **forgets**
+    /// everything older than the window, which skews tail percentiles;
+    /// prefer [`Self::latency_p`].
+    pub fn latency_p_window(&self, q: f64) -> f64 {
         stats::percentile(&self.request_latencies, q * 100.0)
     }
 
-    /// Mean request latency, seconds.
+    /// Mean request latency over the whole process lifetime, seconds
+    /// (exact: the histogram carries the exact sum).
     pub fn latency_mean(&self) -> f64 {
-        stats::mean(&self.request_latencies)
+        self.request_hist.mean_s()
     }
 
     /// Throughput given a wall-clock window, requests/second.
@@ -123,7 +386,9 @@ impl Metrics {
     }
 
     /// The `GET /stats` document of the serving front end (`uptime_s`
-    /// feeds the throughput figure).
+    /// feeds the throughput figure). The `latency_p*` fields read from
+    /// the lifetime histogram ([`Self::latency_p`]), not the bounded
+    /// sample ring.
     pub fn to_json(&self, uptime_s: f64) -> Json {
         Json::obj([
             ("completed", Json::num(self.completed as f64)),
@@ -146,19 +411,198 @@ impl Metrics {
             ),
         ])
     }
+
+    /// The coordinator half of the `GET /metrics` document: exact
+    /// counters, full latency histograms (request + execute), per-class
+    /// met-deadline rates and latency, the per-config mix, and the
+    /// current queue depth (requests submitted but not yet resolved —
+    /// supplied by the coordinator handle, which tracks submissions). The
+    /// serving front end adds its connection counters before putting this
+    /// on the wire.
+    pub fn to_metrics_json(&self, uptime_s: f64, queue_depth: u64) -> Json {
+        Json::obj([
+            ("completed", Json::num(self.completed as f64)),
+            ("failed", Json::num(self.failed as f64)),
+            ("deadline_met", Json::num(self.deadline_met as f64)),
+            ("deadline_missed", Json::num(self.deadline_missed as f64)),
+            ("deadline_met_frac", Json::num(self.deadline_met_frac())),
+            ("batches", Json::num(self.batches as f64)),
+            ("padded_samples", Json::num(self.padded_samples as f64)),
+            ("batch_occupancy", Json::num(self.batch_occupancy())),
+            ("queue_depth", Json::num(queue_depth as f64)),
+            ("latency", self.request_hist.to_json()),
+            ("execute", self.execute_hist.to_json()),
+            (
+                "per_class",
+                Json::obj(self.per_class.iter().map(|(k, v)| (k.clone(), v.to_json()))),
+            ),
+            (
+                "per_config",
+                Json::obj(
+                    self.per_config.iter().map(|(k, &v)| (k.clone(), Json::num(v as f64))),
+                ),
+            ),
+            ("uptime_s", Json::num(uptime_s)),
+            ("throughput_rps", Json::num(self.throughput(uptime_s))),
+        ])
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
+    /// The rank-based exact percentile the histogram approximates:
+    /// `sorted[ceil(q·n) - 1]`.
+    fn exact_percentile(samples: &[f64], q: f64) -> f64 {
+        let mut sorted = samples.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let rank = ((q * sorted.len() as f64).ceil() as usize).clamp(1, sorted.len());
+        sorted[rank - 1]
+    }
+
+    /// Bucket width ratio: consecutive upper edges differ by this factor.
+    fn width_ratio() -> f64 {
+        10f64.powf(1.0 / HIST_BUCKETS_PER_DECADE as f64)
+    }
+
+    /// The within-one-bucket guarantee, for in-range positive samples:
+    /// `exact <= hist_p <= exact * ratio`.
+    fn assert_within_one_bucket(samples: &[f64], q: f64) {
+        let mut h = LatencyHistogram::new();
+        for &s in samples {
+            h.record(s);
+        }
+        let exact = exact_percentile(samples, q);
+        let approx = h.percentile(q);
+        assert!(
+            approx >= exact * (1.0 - 1e-12),
+            "q={q}: histogram {approx} below exact {exact}"
+        );
+        assert!(
+            approx <= exact * width_ratio() * (1.0 + 1e-12),
+            "q={q}: histogram {approx} more than one bucket above exact {exact}"
+        );
+    }
+
+    #[test]
+    fn bucket_boundaries_are_log_spaced_and_monotone() {
+        // The upper edges grow by exactly one width ratio per bucket.
+        for b in 1..=HIST_BUCKETS {
+            let lo = LatencyHistogram::upper_edge(b - 1);
+            let hi = LatencyHistogram::upper_edge(b);
+            assert!(
+                (hi / lo - width_ratio()).abs() < 1e-9,
+                "bucket {b}: ratio {}",
+                hi / lo
+            );
+        }
+        // Decade alignment: 16 buckets per decade means edge 16 is 10x
+        // the minimum, edge 32 is 100x, ...
+        assert!((LatencyHistogram::upper_edge(HIST_BUCKETS_PER_DECADE) / (HIST_MIN_S * 10.0) - 1.0).abs() < 1e-9);
+        assert!((LatencyHistogram::upper_edge(HIST_BUCKETS) / 1e2 - 1.0).abs() < 1e-9);
+        // Index assignment: a sample strictly inside bucket b's range maps
+        // to b, and the index function is monotone in the sample.
+        for b in 1..=HIST_BUCKETS {
+            let mid = (LatencyHistogram::upper_edge(b - 1) * LatencyHistogram::upper_edge(b)).sqrt();
+            assert_eq!(LatencyHistogram::bucket_index(mid), b, "midpoint of bucket {b}");
+        }
+        let mut last = 0;
+        for i in 0..400 {
+            let x = 1e-7 * 1.1f64.powi(i);
+            let idx = LatencyHistogram::bucket_index(x);
+            assert!(idx >= last, "bucket index not monotone at {x}");
+            last = idx;
+        }
+        // Out-of-range samples land in underflow/overflow, never panic.
+        assert_eq!(LatencyHistogram::bucket_index(0.0), 0);
+        assert_eq!(LatencyHistogram::bucket_index(-1.0), 0);
+        assert_eq!(LatencyHistogram::bucket_index(f64::NAN), 0);
+        assert_eq!(LatencyHistogram::bucket_index(1e9), HIST_BUCKETS + 1);
+    }
+
+    #[test]
+    fn percentiles_match_exact_on_adversarial_distributions() {
+        // All samples in one bucket (a constant distribution).
+        let constant: Vec<f64> = vec![0.0123; 500];
+        for q in [0.0, 0.5, 0.99, 0.999, 1.0] {
+            assert_within_one_bucket(&constant, q);
+        }
+        // Bimodal: half very fast, half very slow — percentiles must jump
+        // between the modes, never interpolate across the gap.
+        let bimodal: Vec<f64> =
+            (0..500).map(|_| 1e-4).chain((0..500).map(|_| 2.0)).collect();
+        for q in [0.25, 0.5, 0.501, 0.9, 0.999] {
+            assert_within_one_bucket(&bimodal, q);
+        }
+        let mut h = LatencyHistogram::new();
+        for &s in &bimodal {
+            h.record(s);
+        }
+        assert!(h.percentile(0.25) < 1e-3, "fast mode");
+        assert!(h.percentile(0.9) > 1.0, "slow mode — no cross-gap interpolation");
+        // A single sample: every percentile is that sample's bucket.
+        let single = vec![0.037];
+        for q in [0.0, 0.5, 1.0] {
+            assert_within_one_bucket(&single, q);
+        }
+        // A geometric spread across many decades.
+        let spread: Vec<f64> = (0..200).map(|i| 1e-5 * 1.08f64.powi(i)).collect();
+        for q in [0.1, 0.5, 0.9, 0.99] {
+            assert_within_one_bucket(&spread, q);
+        }
+    }
+
+    #[test]
+    fn histogram_handles_out_of_range_and_empty() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.percentile(0.5), 0.0);
+        assert_eq!(h.mean_s(), 0.0);
+        let mut h = LatencyHistogram::new();
+        h.record(1e-9); // underflow
+        assert_eq!(h.percentile(0.5), HIST_MIN_S, "underflow reports the floor");
+        let mut h = LatencyHistogram::new();
+        h.record(7e3); // overflow (above the 100 s top)
+        assert_eq!(h.percentile(0.999), 7e3, "overflow reports the exact max sample");
+        assert_eq!(h.max_s(), 7e3);
+    }
+
+    #[test]
+    fn merge_equals_recording_the_union() {
+        let xs: Vec<f64> = (0..300).map(|i| 1e-4 * (i + 1) as f64).collect();
+        let ys: Vec<f64> = (0..200).map(|i| 0.5 + 0.01 * i as f64).collect();
+        let mut a = LatencyHistogram::new();
+        let mut b = LatencyHistogram::new();
+        let mut both = LatencyHistogram::new();
+        for &x in &xs {
+            a.record(x);
+            both.record(x);
+        }
+        for &y in &ys {
+            b.record(y);
+            both.record(y);
+        }
+        a.merge(&b);
+        // Bucket counts, totals, and the max are exact; the running sum is
+        // compared with a tolerance (merge adds partial sums, so the f64
+        // rounding can differ from sequential recording in the last ulp).
+        assert_eq!(a.counts, both.counts, "merge must equal recording the union");
+        assert_eq!(a.count(), 500);
+        assert_eq!(a.count(), both.count());
+        assert_eq!(a.max_s(), both.max_s());
+        assert!((a.sum_s() - both.sum_s()).abs() < 1e-9);
+        for q in [0.0, 0.25, 0.5, 0.9, 0.99, 0.999, 1.0] {
+            assert_eq!(a.percentile(q), both.percentile(q), "q={q}");
+        }
+    }
+
     #[test]
     fn records_accumulate() {
         let mut m = Metrics::default();
         m.record_batch("int8", 4, 3, 0.01);
         m.record_batch("int4", 8, 8, 0.02);
-        m.record_request(0.05, true);
-        m.record_request(0.15, false);
+        m.record_request("low", 0.05, true);
+        m.record_request("deadline", 0.15, false);
         assert_eq!(m.batches, 2);
         assert_eq!(m.padded_samples, 1);
         assert_eq!(m.per_config["int8"], 3);
@@ -170,12 +614,19 @@ mod tests {
         assert!((m.deadline_met_frac() - 0.5).abs() < 1e-12);
         assert!((m.latency_mean() - 0.10).abs() < 1e-12);
         assert!((m.batch_occupancy() - 11.0 / 12.0).abs() < 1e-12);
+        // Per-class outcomes split by label.
+        assert_eq!(m.per_class["low"].completed, 1);
+        assert_eq!(m.per_class["low"].deadline_met, 1);
+        assert_eq!(m.per_class["deadline"].completed, 1);
+        assert_eq!(m.per_class["deadline"].deadline_met, 0);
+        assert_eq!(m.per_class["deadline"].met_frac(), 0.0);
     }
 
     #[test]
     fn empty_metrics_are_safe() {
         let m = Metrics::default();
         assert_eq!(m.latency_p(0.99), 0.0);
+        assert_eq!(m.latency_p_window(0.99), 0.0);
         assert_eq!(m.throughput(1.0), 0.0);
         assert_eq!(m.batch_occupancy(), 0.0);
         assert_eq!(m.deadline_met_frac(), 1.0);
@@ -185,7 +636,7 @@ mod tests {
     fn percentiles_order() {
         let mut m = Metrics::default();
         for i in 1..=100 {
-            m.record_request(i as f64 / 100.0, true);
+            m.record_request("high", i as f64 / 100.0, true);
         }
         assert!(m.latency_p(0.5) < m.latency_p(0.99));
         assert!(m.latency_p(0.99) <= m.latency_p(0.999));
@@ -199,19 +650,22 @@ mod tests {
         // helper used to produce).
         let mut m = Metrics::default();
         for i in 1..=100 {
-            m.record_request(i as f64 / 100.0, true);
+            m.record_request("high", i as f64 / 100.0, true);
         }
         let p50 = m.latency_p(0.5);
         assert!((0.4..=0.6).contains(&p50), "median {p50} is not near 0.5");
         let p999 = m.latency_p(0.999);
-        assert!(p999 >= 0.99, "p999 {p999} should sit at the top of the window");
+        assert!(p999 >= 0.99, "p999 {p999} should sit at the top of the distribution");
+        // The window path takes the same fraction scale.
+        let w50 = m.latency_p_window(0.5);
+        assert!((0.4..=0.6).contains(&w50), "window median {w50} is not near 0.5");
     }
 
     #[test]
     fn stats_document_reports_tail_latency_and_met_rate() {
         let mut m = Metrics::default();
         for i in 0..10 {
-            m.record_request(0.01 * (i + 1) as f64, i < 9);
+            m.record_request("medium", 0.01 * (i + 1) as f64, i < 9);
         }
         let doc = m.to_json(1.0);
         let p50 = doc.get("latency_p50_s").and_then(Json::as_f64).unwrap();
@@ -227,7 +681,7 @@ mod tests {
     fn latency_windows_stay_bounded_while_counters_stay_exact() {
         let mut m = Metrics::default();
         for i in 0..(LATENCY_WINDOW as u64 + 500) {
-            m.record_request(i as f64, true);
+            m.record_request("high", i as f64, true);
             m.record_batch("int8", 1, 1, i as f64);
         }
         assert_eq!(m.request_latencies.len(), LATENCY_WINDOW);
@@ -240,6 +694,81 @@ mod tests {
         assert!(!m.request_latencies.contains(&499.0));
         assert!(m.request_latencies.contains(&500.0));
         assert!(m.request_latencies.contains(&((LATENCY_WINDOW as u64 + 499) as f64)));
+        // The histogram never forgets: every sample ever recorded counts.
+        assert_eq!(m.request_hist.count(), LATENCY_WINDOW as u64 + 500);
+    }
+
+    #[test]
+    fn histogram_percentiles_survive_a_long_run_where_the_window_forgets() {
+        // The regression this layer fixes: a slow early phase (500 × 10 s)
+        // followed by a long fast phase (4600 × 1 ms). The ring holds only
+        // the most recent LATENCY_WINDOW samples — all fast — so the
+        // window p999 reports ~1 ms and silently forgets the slow tail.
+        // The histogram keeps every sample: 500 of 5100 are slow, so the
+        // true p999 (rank 5095) is a slow sample, and /stats (which now
+        // reads the histogram) must report it.
+        let mut m = Metrics::default();
+        for _ in 0..500 {
+            m.record_request("high", 10.0, false);
+        }
+        for _ in 0..4600 {
+            m.record_request("high", 0.001, true);
+        }
+        let window_p999 = m.latency_p_window(0.999);
+        let hist_p999 = m.latency_p(0.999);
+        assert!(window_p999 < 0.01, "the bounded ring forgot the slow phase: {window_p999}");
+        assert!(hist_p999 > 1.0, "the histogram must remember it: {hist_p999}");
+        let doc = m.to_json(1.0);
+        let stats_p999 = doc.get("latency_p999_s").and_then(Json::as_f64).unwrap();
+        assert_eq!(stats_p999, hist_p999, "/stats percentiles must route through the histogram");
+    }
+
+    #[test]
+    fn stats_and_metrics_documents_agree_and_reconcile() {
+        // The agreement pin: /stats and /metrics are rendered from the
+        // same counters and the same histograms, so their shared fields
+        // must be equal — and the deadline counters must reconcile
+        // (met + missed == completed) in both documents.
+        let mut m = Metrics::default();
+        let latencies = [0.002, 0.005, 0.011, 0.03, 0.3, 1.7];
+        for (i, &l) in latencies.iter().enumerate() {
+            let class = ["low", "medium", "deadline"][i % 3];
+            m.record_request(class, l, i % 4 != 0);
+        }
+        m.record_batch("int8", 4, 3, 0.01);
+        let stats = m.to_json(2.0);
+        let metrics = m.to_metrics_json(2.0, 1);
+        for key in ["completed", "failed", "deadline_met", "deadline_missed", "deadline_met_frac"]
+        {
+            assert_eq!(stats.get(key).and_then(Json::as_f64), metrics.get(key).and_then(Json::as_f64), "{key}");
+        }
+        for (stats_key, hist_key) in
+            [("latency_p50_s", "p50_s"), ("latency_p99_s", "p99_s"), ("latency_p999_s", "p999_s")]
+        {
+            assert_eq!(
+                stats.get(stats_key).and_then(Json::as_f64),
+                metrics.get("latency").and_then(|l| l.get(hist_key)).and_then(Json::as_f64),
+                "{stats_key} must equal the histogram's {hist_key}"
+            );
+        }
+        let met = metrics.get("deadline_met").and_then(Json::as_i64).unwrap();
+        let missed = metrics.get("deadline_missed").and_then(Json::as_i64).unwrap();
+        let completed = metrics.get("completed").and_then(Json::as_i64).unwrap();
+        assert_eq!(met + missed, completed, "deadline counters must reconcile");
+        assert_eq!(metrics.get("queue_depth").and_then(Json::as_i64), Some(1));
+        // Per-class counters reconcile too, and sum to the total.
+        let per_class = metrics.get("per_class").and_then(Json::as_obj).unwrap();
+        let class_total: i64 = per_class
+            .values()
+            .map(|c| c.get("completed").and_then(Json::as_i64).unwrap())
+            .sum();
+        assert_eq!(class_total, completed);
+        for (name, c) in per_class {
+            let met = c.get("deadline_met").and_then(Json::as_i64).unwrap();
+            let missed = c.get("deadline_missed").and_then(Json::as_i64).unwrap();
+            let done = c.get("completed").and_then(Json::as_i64).unwrap();
+            assert_eq!(met + missed, done, "class {name}");
+        }
     }
 
     #[test]
@@ -247,7 +776,7 @@ mod tests {
         let mut m = Metrics::default();
         m.record_batch("int8", 4, 4, 0.01);
         for _ in 0..4 {
-            m.record_request(0.02, true);
+            m.record_request("high", 0.02, true);
         }
         let doc = m.to_json(2.0);
         assert_eq!(doc.get("completed").and_then(Json::as_i64), Some(4));

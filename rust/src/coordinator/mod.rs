@@ -33,11 +33,13 @@
 //! (see [`server`]); Python never runs here.
 
 pub mod controller;
+pub mod loadgen;
 pub mod metrics;
 pub mod server;
 
 use std::collections::BTreeMap;
 use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -45,7 +47,8 @@ use std::time::{Duration, Instant};
 use crate::util::error::{anyhow, Result};
 
 pub use controller::{Budget, BudgetSpec, BudgetTargets, PrecisionController};
-pub use metrics::Metrics;
+pub use loadgen::{LoadReport, LoadgenOpts, Profile, WorkloadClass, WorkloadSpec};
+pub use metrics::{LatencyHistogram, Metrics};
 pub use server::ServingServer;
 
 use crate::model::zoo;
@@ -251,6 +254,9 @@ impl Default for CoordinatorConfig {
 pub struct Coordinator {
     tx: mpsc::Sender<Request>,
     metrics: Arc<Mutex<Metrics>>,
+    /// Requests accepted by [`Self::submit_spec`] (queue depth is this
+    /// minus the resolved count in [`Metrics`]).
+    submitted: Arc<AtomicU64>,
     sample_elems: usize,
     num_classes: usize,
     configs: Vec<String>,
@@ -367,7 +373,15 @@ impl Coordinator {
             .recv()
             .map_err(|_| anyhow!("worker died during startup"))?
             .map_err(|e| anyhow!(e))?;
-        Ok(Coordinator { tx, metrics, sample_elems, num_classes, configs, started: Instant::now() })
+        Ok(Coordinator {
+            tx,
+            metrics,
+            submitted: Arc::new(AtomicU64::new(0)),
+            sample_elems,
+            num_classes,
+            configs,
+            started: Instant::now(),
+        })
     }
 
     /// Begin a fluent request: `coord.request(x).deadline(d).submit()`.
@@ -388,6 +402,7 @@ impl Coordinator {
         self.tx
             .send(Request { input, spec, submitted: Instant::now(), carved: 0, reply })
             .map_err(|_| anyhow!("coordinator is shut down"))?;
+        self.submitted.fetch_add(1, Ordering::Relaxed);
         Ok(Pending { rx })
     }
 
@@ -408,6 +423,15 @@ impl Coordinator {
     /// Snapshot of the serving metrics.
     pub fn metrics(&self) -> Metrics {
         self.metrics.lock().unwrap().clone()
+    }
+
+    /// Requests accepted but not yet resolved (completed or failed) —
+    /// they are queued, boarding, or executing. Reads the submission
+    /// counter and the metrics under one lock, so a snapshot is
+    /// self-consistent even under concurrent submissions.
+    pub fn queue_depth(&self) -> u64 {
+        let m = self.metrics.lock().unwrap();
+        self.submitted.load(Ordering::Relaxed).saturating_sub(m.completed + m.failed)
     }
 
     /// Seconds since the coordinator started (for throughput computation).
@@ -665,7 +689,11 @@ fn worker_loop(
                     let target_s = controller.target_for(&req.spec.budget).as_secs_f64();
                     let met_deadline = latency_s <= target_s;
                     let row = logits[i * classes..(i + 1) * classes].to_vec();
-                    metrics.lock().unwrap().record_request(latency_s, met_deadline);
+                    metrics.lock().unwrap().record_request(
+                        req.spec.budget.class_label(),
+                        latency_s,
+                        met_deadline,
+                    );
                     let _ = req.reply.send(Ok(Response {
                         logits: row,
                         config: config.clone(),

@@ -20,6 +20,12 @@
 //! * `GET /stats` — the serving [`Metrics`](super::Metrics) document
 //!   (completed/failed, deadline met/missed, p50/p99/p999 latency,
 //!   met-deadline rate, throughput, per-config mix).
+//! * `GET /metrics` — the full observability document: everything above
+//!   plus the log-bucketed latency **histograms** (request + execute),
+//!   per-class met-deadline rates and latency, queue depth, and the front
+//!   end's connection counters (accepted / open / rejected-busy /
+//!   dropped). This is what `bf-imna loadgen` scrapes before and after a
+//!   run to join server-side deltas into its SLO report.
 //!
 //! Connections are keep-alive: the server loops framed exchanges on one
 //! socket (idle timeout, per-connection request cap, `connection: close`
@@ -37,7 +43,7 @@
 
 use std::io::{self, BufReader};
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 use std::thread;
 use std::time::Duration;
@@ -120,8 +126,10 @@ pub struct InferRequest {
 }
 
 /// Append the descriptor fields (`budget` / `deadline_ms`, `priority`,
-/// `batch_hint`) a request body shares regardless of sample count.
-fn push_spec_fields(pairs: &mut Vec<(&str, Json)>, spec: &RequestSpec) {
+/// `batch_hint`) a request body shares regardless of sample count. Also
+/// the canonical serialization of a [`RequestSpec`] inside a loadgen
+/// `WorkloadClass` — one wire idiom for both.
+pub(crate) fn push_spec_fields(pairs: &mut Vec<(&str, Json)>, spec: &RequestSpec) {
     match spec.budget {
         BudgetSpec::Class(b) => pairs.push(("budget", Json::str(b.label()))),
         BudgetSpec::Deadline(d) => pairs.push(("deadline_ms", Json::num(d.as_secs_f64() * 1e3))),
@@ -135,9 +143,10 @@ fn push_spec_fields(pairs: &mut Vec<(&str, Json)>, spec: &RequestSpec) {
 }
 
 /// Parse the descriptor fields shared by [`InferRequest`] and
-/// [`BatchInferRequest`] bodies. Rejects requests carrying both a class
-/// and a deadline, and non-finite or out-of-range deadlines.
-fn spec_from_json(v: &Json) -> Result<RequestSpec, String> {
+/// [`BatchInferRequest`] bodies (and loadgen `WorkloadClass` entries).
+/// Rejects requests carrying both a class and a deadline, and non-finite
+/// or out-of-range deadlines.
+pub(crate) fn spec_from_json(v: &Json) -> Result<RequestSpec, String> {
     let budget = match (v.get("budget"), v.get("deadline_ms")) {
         (Some(_), Some(_)) => {
             return Err(
@@ -310,10 +319,49 @@ pub fn response_from_json(v: &Json) -> Result<Response, String> {
     })
 }
 
+/// Connection-level counters of the serving front end, reported under
+/// `connections` in the `GET /metrics` document. All monotone except the
+/// derived "open" gauge (the admission gate's live count).
+#[derive(Debug, Default)]
+pub struct FrontendStats {
+    /// Connections admitted through the main budget (each got a full
+    /// keep-alive handler).
+    pub accepted: AtomicU64,
+    /// Connections answered `503` + [`CODE_SERVER_BUSY`] by a rejection
+    /// handler (admission rejections under overload).
+    pub rejected_busy: AtomicU64,
+    /// Connections dropped without a reply (both the main budget and the
+    /// rejection pool were exhausted).
+    pub dropped: AtomicU64,
+}
+
+impl FrontendStats {
+    /// The `connections` sub-document of `GET /metrics`. `open` is the
+    /// number of connections currently holding admission slots.
+    pub fn to_json(&self, open: usize) -> Json {
+        Json::obj([
+            ("accepted", Json::num(self.accepted.load(Ordering::Relaxed) as f64)),
+            ("open", Json::num(open as f64)),
+            ("rejected_busy", Json::num(self.rejected_busy.load(Ordering::Relaxed) as f64)),
+            ("dropped", Json::num(self.dropped.load(Ordering::Relaxed) as f64)),
+        ])
+    }
+}
+
+/// Everything a handler thread needs to answer any endpoint: the
+/// coordinator handle plus the front end's own observability state (the
+/// connection counters and the admission gate whose live count is the
+/// "open connections" gauge).
+struct ServeState {
+    coordinator: Coordinator,
+    stats: Arc<FrontendStats>,
+    gate: Arc<AdmissionGate>,
+}
+
 /// A running serving front end: a TCP listener routing `/infer`,
-/// `/healthz`, and `/stats` onto a [`Coordinator`], one handler thread per
-/// connection (the coordinator handle is cheap to clone; its worker thread
-/// serializes execution).
+/// `/healthz`, `/stats`, and `/metrics` onto a [`Coordinator`], one
+/// handler thread per connection (the coordinator handle is cheap to
+/// clone; its worker thread serializes execution).
 ///
 /// ```no_run
 /// use bf_imna::coordinator::{Coordinator, CoordinatorConfig, ServingServer};
@@ -354,11 +402,14 @@ impl ServingServer {
             idle_timeout: opts.idle_timeout,
             max_requests: opts.max_requests_per_conn,
         };
+        let state = Arc::new(ServeState {
+            coordinator,
+            stats: Arc::new(FrontendStats::default()),
+            gate,
+        });
         let handle = {
             let stop = Arc::clone(&stop);
-            thread::spawn(move || {
-                accept_loop(listener, coordinator, stop, gate, reject_gate, policy)
-            })
+            thread::spawn(move || accept_loop(listener, state, stop, reject_gate, policy))
         };
         Ok(ServingServer { addr, stop, handle: Some(handle) })
     }
@@ -402,9 +453,8 @@ impl Drop for ServingServer {
 
 fn accept_loop(
     listener: TcpListener,
-    coordinator: Coordinator,
+    state: Arc<ServeState>,
     stop: Arc<AtomicBool>,
-    gate: Arc<AdmissionGate>,
     reject_gate: Arc<AdmissionGate>,
     policy: ConnPolicy,
 ) {
@@ -428,23 +478,28 @@ fn accept_loop(
         // rejection handlers are themselves pooled: past REJECT_POOL of
         // them, the connection is simply dropped — under a genuine flood,
         // a TCP-level refusal is the only honest (and bounded) signal
-        // left, and total thread count stays capped either way.
-        let Some(permit) = AdmissionGate::admit(&gate) else {
+        // left, and total thread count stays capped either way. Every
+        // outcome is counted, so `/metrics` shows the overload.
+        let Some(permit) = AdmissionGate::admit(&state.gate) else {
             if let Some(reject_permit) = AdmissionGate::admit(&reject_gate) {
+                state.stats.rejected_busy.fetch_add(1, Ordering::Relaxed);
                 thread::spawn(move || {
                     let _permit = reject_permit;
                     reject_busy(stream);
                 });
+            } else {
+                state.stats.dropped.fetch_add(1, Ordering::Relaxed);
             }
             continue;
         };
-        let coordinator = coordinator.clone();
+        state.stats.accepted.fetch_add(1, Ordering::Relaxed);
+        let state = Arc::clone(&state);
         thread::spawn(move || {
             // The permit rides the handler thread for the connection's
             // whole keep-alive life; dropping it (normal return or
             // panic) frees the slot.
             let _permit = permit;
-            handle_connection(stream, policy, &coordinator);
+            handle_connection(stream, policy, &state);
         });
     }
 }
@@ -478,23 +533,41 @@ fn reject_busy(stream: TcpStream) {
 /// The shared keep-alive loop with the serving protocol routed in — the
 /// same per-exchange discipline (and slowloris protection) as the sweep
 /// worker.
-fn handle_connection(stream: TcpStream, policy: ConnPolicy, coordinator: &Coordinator) {
+fn handle_connection(stream: TcpStream, policy: ConnPolicy, state: &ServeState) {
     serve_exchanges(stream, &policy, |parsed| match parsed {
-        Ok(req) => route(req, coordinator),
+        Ok(req) => route(req, state),
         Err(e) => (e.status, err_doc(e.message.clone())),
     });
 }
 
-fn route(req: &Request, coordinator: &Coordinator) -> (u16, Json) {
+fn route(req: &Request, state: &ServeState) -> (u16, Json) {
+    let coordinator = &state.coordinator;
     match (req.method.as_str(), req.path.as_str()) {
         ("GET", "/healthz") => (200, health_doc(coordinator)),
         ("GET", "/stats") => {
             (200, coordinator.metrics().to_json(coordinator.uptime_s()))
         }
+        ("GET", "/metrics") => (200, metrics_doc(state)),
         ("POST", "/infer") => handle_infer(&req.body, coordinator),
         ("GET", _) | ("POST", _) => (404, err_doc(format!("no such endpoint {:?}", req.path))),
         _ => (405, err_doc(format!("method {:?} not allowed", req.method))),
     }
+}
+
+/// Build the `GET /metrics` document: the coordinator's histogram-backed
+/// metrics (queue depth included) with the front end's connection
+/// counters folded in.
+fn metrics_doc(state: &ServeState) -> Json {
+    let coordinator = &state.coordinator;
+    let queue_depth = coordinator.queue_depth();
+    let mut doc = coordinator.metrics().to_metrics_json(coordinator.uptime_s(), queue_depth);
+    if let Json::Obj(map) = &mut doc {
+        map.insert(
+            "connections".to_string(),
+            state.stats.to_json(state.gate.running()),
+        );
+    }
+    doc
 }
 
 fn health_doc(coordinator: &Coordinator) -> Json {
@@ -668,6 +741,30 @@ pub fn fetch_stats_pooled(pool: &ConnPool, addr: &str, timeout: Duration) -> Res
         pool.request_json(addr, "GET", "/stats", b"", timeout).map_err(|e| e.message)?;
     if status != 200 {
         return Err(format!("{addr}: GET /stats returned HTTP {status}"));
+    }
+    Ok(doc)
+}
+
+/// Fetch a serving front end's `/metrics` document (histograms, per-class
+/// rates, queue depth, connection counters).
+pub fn fetch_metrics(addr: &str, timeout: Duration) -> Result<Json, String> {
+    let (status, doc) = http_request_json(addr, "GET", "/metrics", b"", timeout)?;
+    if status != 200 {
+        return Err(format!("{addr}: GET /metrics returned HTTP {status}"));
+    }
+    Ok(doc)
+}
+
+/// [`fetch_metrics`] over a pooled keep-alive connection.
+pub fn fetch_metrics_pooled(
+    pool: &ConnPool,
+    addr: &str,
+    timeout: Duration,
+) -> Result<Json, String> {
+    let (status, doc) =
+        pool.request_json(addr, "GET", "/metrics", b"", timeout).map_err(|e| e.message)?;
+    if status != 200 {
+        return Err(format!("{addr}: GET /metrics returned HTTP {status}"));
     }
     Ok(doc)
 }

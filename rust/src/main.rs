@@ -19,6 +19,7 @@
 //! bf-imna serve    --addr 127.0.0.1:8378              # HTTP serving front end
 //! bf-imna serve    --requests 32                      # local serving demo
 //! bf-imna infer    --addr 127.0.0.1:8378 --deadline-ms 5   # serving client
+//! bf-imna loadgen  --addr 127.0.0.1:8378 --rps 200 --duration-s 10  # open-loop load + SLO report
 //! ```
 //!
 //! The sharded form is the scale-out path: every shard is an independent
@@ -35,6 +36,7 @@ use std::collections::BTreeMap;
 use std::process::ExitCode;
 use std::time::Duration;
 
+use bf_imna::coordinator::loadgen;
 use bf_imna::coordinator::server::{self as serving, InferRequest};
 use bf_imna::coordinator::{
     Budget, BudgetSpec, Coordinator, CoordinatorConfig, Priority, RequestSpec, ServingServer,
@@ -64,6 +66,7 @@ fn main() -> ExitCode {
         "validate" => cmd_validate(),
         "serve" => cmd_serve(&opts),
         "infer" => cmd_infer(&opts),
+        "loadgen" => cmd_loadgen(&opts),
         "help" | "--help" | "-h" => {
             print!("{}", HELP);
             Ok(())
@@ -184,6 +187,10 @@ COMMANDS:
                         GET /healthz  model contract (elems, classes, ladder)
                         GET /stats    serving metrics document (p50/p99/
                                p999 latency, met-deadline rate, ...)
+                        GET /metrics  observability document: log-bucketed
+                               latency histograms, per-class met-deadline
+                               rates, queue depth, connection/admission
+                               counters (what `loadgen` joins against)
              connections are keep-alive: many framed requests per socket
   infer      serving client for `serve`'s HTTP front end
              --addr HOST:PORT  server address (default 127.0.0.1:8378)
@@ -204,6 +211,27 @@ COMMANDS:
              --timeout-s N     per-request HTTP timeout (default 60)
              --stats           fetch and print GET /stats instead of
                                sending requests
+  loadgen    open-loop load driver for `serve`'s HTTP front end
+             plays a deterministic seeded workload at its scheduled
+             arrival times (open loop: never paced by responses) and
+             joins the client-side record with the server's
+             GET /metrics deltas into an SLO report
+             --addr HOST:PORT  server address (default 127.0.0.1:8378)
+             --profile constant|diurnal|burst  built-in profile shape
+                               (default constant; diurnal sweeps one
+                               cosine cycle over the run, burst is
+                               0.5 s on / 0.5 s off)
+             --rps F           offered arrival rate (default 50)
+             --duration-s F    run length in seconds (default 5)
+             --seed N          workload seed — same spec + seed means a
+                               byte-identical request plan (default 1)
+             --spec FILE       explicit WorkloadSpec JSON (overrides
+                               --profile/--rps/--duration-s/--seed)
+             --workers N       sender threads bounding in-flight
+                               requests (default 8)
+             --timeout-s N     per-request HTTP timeout (default 30)
+             --out FILE        write the SLO report JSON (default:
+                               print it to stdout)
 ";
 
 type CliResult = Result<(), Box<dyn std::error::Error>>;
@@ -608,7 +636,7 @@ fn cmd_serve(opts: &BTreeMap<String, String>) -> CliResult {
     let server =
         ServingServer::spawn_with(addr, coord, sopts).map_err(|e| format!("{addr}: {e}"))?;
     eprintln!(
-        "serve: listening on http://{} (POST /infer, GET /healthz, GET /stats)",
+        "serve: listening on http://{} (POST /infer, GET /healthz, GET /stats, GET /metrics)",
         server.addr()
     );
     // Serve until killed; `bf-imna infer` is the other end.
@@ -823,5 +851,96 @@ fn infer_pooled(
         ps.reuses,
         per_config.iter().map(|(k, v)| format!("{k}:{v}")).collect::<Vec<_>>().join(" ")
     );
+    Ok(())
+}
+
+fn cmd_loadgen(opts: &BTreeMap<String, String>) -> CliResult {
+    let addr = opts.get("addr").map(String::as_str).unwrap_or("127.0.0.1:8378");
+    let timeout = Duration::from_secs(match opts.get("timeout-s") {
+        Some(s) => s.parse()?,
+        None => 30,
+    });
+    let seed: u64 = match opts.get("seed") {
+        Some(s) => s.parse()?,
+        None => 1,
+    };
+    let rps: f64 = match opts.get("rps") {
+        Some(s) => s.parse()?,
+        None => 50.0,
+    };
+    let duration_s: f64 = match opts.get("duration-s") {
+        Some(s) => s.parse()?,
+        None => 5.0,
+    };
+    // An explicit spec file wins over the builder flags.
+    let spec = match opts.get("spec") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+            loadgen::WorkloadSpec::from_json(&Json::parse(&text)?)?
+        }
+        None => {
+            let profile = opts.get("profile").map(String::as_str).unwrap_or("constant");
+            loadgen::WorkloadSpec::builtin(profile, rps, duration_s, seed)?
+        }
+    };
+    let mut lopts = loadgen::LoadgenOpts { timeout, ..Default::default() };
+    if let Some(w) = opts.get("workers") {
+        lopts.workers = w.parse::<usize>()?.max(1);
+    }
+    eprintln!(
+        "loadgen: workload '{}' | {:.0} rps x {} s | seed {} | {} senders -> {addr}",
+        spec.name, spec.rps, spec.duration_s, spec.seed, lopts.workers
+    );
+
+    // Join window: /metrics before and after bracket the run, so the SLO
+    // report's server-side numbers are deltas attributable to this load.
+    let before = serving::fetch_metrics(addr, timeout)?;
+    let report = loadgen::run_loadgen(addr, &spec, &lopts)?;
+    let after = serving::fetch_metrics(addr, timeout)?;
+    let slo = loadgen::slo_report(&report, &before, &after);
+
+    let mut t = Table::new(vec!["metric", "value"]);
+    t.row(vec!["offered".to_string(), format!("{:.1} req/s", report.offered_rps())]);
+    t.row(vec!["achieved".to_string(), format!("{:.1} req/s", report.achieved_rps())]);
+    t.row(vec![
+        "sent / ok / busy / errors".to_string(),
+        format!(
+            "{} / {} / {} / {}",
+            report.total.sent, report.total.ok, report.total.rejected_busy, report.total.errors
+        ),
+    ]);
+    t.row(vec!["met deadline".to_string(), format!("{:.1}%", 100.0 * report.total.met_frac())]);
+    t.row(vec![
+        "client p50".to_string(),
+        format!("{} s", fmt_eng(report.total.latency.percentile(0.5), 3)),
+    ]);
+    t.row(vec![
+        "client p99".to_string(),
+        format!("{} s", fmt_eng(report.total.latency.percentile(0.99), 3)),
+    ]);
+    t.row(vec![
+        "client p999".to_string(),
+        format!("{} s", fmt_eng(report.total.latency.percentile(0.999), 3)),
+    ]);
+    for (name, c) in &report.per_class {
+        t.row(vec![
+            format!("class {name}"),
+            format!(
+                "{}/{} ok | {:.1}% met | p99 {} s",
+                c.ok,
+                c.sent,
+                100.0 * c.met_frac(),
+                fmt_eng(c.latency.percentile(0.99), 3)
+            ),
+        ]);
+    }
+    eprint!("{}", t.render());
+
+    if let Some(path) = opts.get("out") {
+        std::fs::write(path, format!("{slo}\n")).map_err(|e| format!("{path}: {e}"))?;
+        eprintln!("loadgen: SLO report written to {path}");
+    } else {
+        println!("{slo}");
+    }
     Ok(())
 }

@@ -536,6 +536,10 @@ pub struct PoolStats {
     /// closed or restarted while the socket sat idle) and fell back to a
     /// fresh connection.
     pub stale_retries: usize,
+    /// Healthy sockets closed on return because the per-address idle list
+    /// was already full — a persistently non-zero rate means the pool is
+    /// sized below the caller's real concurrency.
+    pub discards: usize,
 }
 
 /// A pooled keep-alive connection: the buffered reader persists between
@@ -600,6 +604,7 @@ pub struct ConnPool {
     max_idle_per_addr: usize,
     fresh_connects: AtomicUsize,
     reuses: AtomicUsize,
+    discards: AtomicUsize,
     stale_retries: AtomicUsize,
 }
 
@@ -612,17 +617,19 @@ impl ConnPool {
             max_idle_per_addr: max_idle_per_addr.max(1),
             fresh_connects: AtomicUsize::new(0),
             reuses: AtomicUsize::new(0),
+            discards: AtomicUsize::new(0),
             stale_retries: AtomicUsize::new(0),
         }
     }
 
-    /// Lifetime counters: fresh connects, pooled reuses, and stale-socket
-    /// retries (see [`PoolStats`]).
+    /// Lifetime counters: fresh connects, pooled reuses, stale-socket
+    /// retries, and over-cap discards (see [`PoolStats`]).
     pub fn stats(&self) -> PoolStats {
         PoolStats {
             fresh_connects: self.fresh_connects.load(Ordering::Relaxed),
             reuses: self.reuses.load(Ordering::Relaxed),
             stale_retries: self.stale_retries.load(Ordering::Relaxed),
+            discards: self.discards.load(Ordering::Relaxed),
         }
     }
 
@@ -731,8 +738,11 @@ impl ConnPool {
         let list = idle.entry(addr.to_string()).or_default();
         if list.len() < self.max_idle_per_addr {
             list.push(conn);
+        } else {
+            // Over the cap the connection drops, which closes the socket —
+            // counted, so an undersized pool shows up in the stats.
+            self.discards.fetch_add(1, Ordering::Relaxed);
         }
-        // Over the cap the connection drops, which closes the socket.
     }
 }
 

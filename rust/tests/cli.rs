@@ -31,7 +31,7 @@ fn help_covers_every_command_and_sweep_service_flag() {
     let text = stdout(&out);
     for cmd in [
         "simulate", "sweep", "merge", "serve-worker", "dispatch", "artifacts", "render", "hawq",
-        "compare", "validate", "serve", "infer",
+        "compare", "validate", "serve", "infer", "loadgen",
     ] {
         assert!(text.contains(cmd), "help does not mention command '{cmd}'");
     }
@@ -43,13 +43,13 @@ fn help_covers_every_command_and_sweep_service_flag() {
         "--workers", "--spec", "--timeout-s", "--artifact", "--doc", "--tiny", "--names",
         "--max-shards", "--queue-depth", "--budget", "--deadline-ms", "--priority",
         "--batch-hint", "--time-scale", "--stats", "--max-requests", "--idle-timeout-s",
-        "--conn-requests", "--pool", "--count", "--batch",
+        "--conn-requests", "--pool", "--count", "--batch", "--rps", "--duration-s", "--profile",
     ] {
         assert!(text.contains(flag), "help does not mention flag '{flag}'");
     }
     // The worker's and serving front end's endpoints are operator-facing
     // API; keep them in help.
-    for endpoint in ["/shard", "/cache", "/healthz", "/stats", "/infer"] {
+    for endpoint in ["/shard", "/cache", "/healthz", "/stats", "/infer", "/metrics"] {
         assert!(text.contains(endpoint), "help does not mention endpoint '{endpoint}'");
     }
     // No args behaves like help.
@@ -341,6 +341,62 @@ fn serve_and_infer_round_trip_through_the_real_binary() {
 
     let _ = child.kill();
     let _ = child.wait();
+}
+
+#[test]
+fn serve_loadgen_slo_report_round_trip_through_the_real_binary() {
+    use std::io::BufRead;
+    let dir = scratch("loadgen");
+    let report_path = dir.join("slo-report.json").to_string_lossy().to_string();
+
+    // `bf-imna serve` on an ephemeral port (sim backend), then a seeded
+    // burst-profile `bf-imna loadgen` against it, writing the SLO report.
+    let mut child = Command::new(bin())
+        .args(["serve", "--addr", "127.0.0.1:0"])
+        .stderr(std::process::Stdio::piped())
+        .spawn()
+        .expect("spawn serve");
+    let stderr = child.stderr.take().unwrap();
+    let mut reader = std::io::BufReader::new(stderr);
+    let addr = loop {
+        let mut line = String::new();
+        let n = reader.read_line(&mut line).expect("read serve banner");
+        assert!(n > 0, "serve exited before announcing its address");
+        if let Some(rest) = line.split("http://").nth(1) {
+            break rest.split_whitespace().next().expect("address in banner").to_string();
+        }
+    };
+
+    let out = run(&[
+        "loadgen", "--addr", &addr, "--profile", "burst", "--rps", "80", "--duration-s", "1",
+        "--seed", "7", "--workers", "4", "--out", &report_path,
+    ]);
+    let _ = child.kill();
+    let _ = child.wait();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+
+    // The report is a parseable SLO document joining both sides.
+    let text = std::fs::read_to_string(&report_path).expect("slo report written");
+    let report = bf_imna::util::json::Json::parse(&text).expect("slo report parses");
+    assert_eq!(report.get("kind").and_then(|k| k.as_str()), Some("slo-report"), "{report}");
+    let met = report
+        .get("client")
+        .and_then(|c| c.get("met_frac"))
+        .and_then(|m| m.as_f64())
+        .expect("client met_frac");
+    assert!((0.0..=1.0).contains(&met), "{met}");
+    let arrivals = report
+        .get("offered")
+        .and_then(|o| o.get("arrivals"))
+        .and_then(|a| a.as_f64())
+        .expect("offered arrivals");
+    assert!(arrivals > 0.0, "{report}");
+    assert!(
+        report.get("server").and_then(|s| s.get("completed_delta")).is_some(),
+        "server join half present: {report}"
+    );
+
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 #[test]

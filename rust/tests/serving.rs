@@ -19,6 +19,7 @@
 use std::thread;
 use std::time::Duration;
 
+use bf_imna::coordinator::loadgen::{self, LoadgenOpts, WorkloadSpec};
 use bf_imna::coordinator::server::{self as serving, BatchInferRequest, InferRequest, ServeOpts};
 use bf_imna::coordinator::{
     Budget, BudgetSpec, Coordinator, CoordinatorConfig, Priority, RequestSpec, ServingServer,
@@ -558,5 +559,175 @@ fn serving_request_cap_closes_cleanly_under_a_pooled_client() {
     assert_eq!(ps.fresh_connects, 3, "6 exchanges at 2 per connection: {ps:?}");
     assert_eq!(ps.reuses, 3, "{ps:?}");
     assert_eq!(c.metrics().completed, 6);
+    server.shutdown();
+}
+
+/// Read a numeric leaf out of a metrics/stats document by dotted path.
+fn num(doc: &Json, path: &str) -> f64 {
+    let mut cur = doc.clone();
+    for part in path.split('.') {
+        cur = cur.get(part).cloned().unwrap_or(Json::Null);
+    }
+    cur.as_f64().unwrap_or_else(|| panic!("no numeric '{path}' in {doc}"))
+}
+
+#[test]
+fn loadgen_replay_is_byte_identical_client_side() {
+    // The same seeded WorkloadSpec against two fresh servers: the
+    // client-side plan (request sequence, classes, budgets, digest) must
+    // be byte-identical — what the servers did with it may differ, but
+    // the offered load never does.
+    let spec = WorkloadSpec::builtin("constant", 60.0, 0.5, 9).expect("builtin spec");
+    let opts = LoadgenOpts { workers: 4, timeout: Duration::from_secs(10) };
+    let run = || {
+        let c = start(false);
+        let server = ServingServer::spawn("127.0.0.1:0", c).expect("bind serving server");
+        let report =
+            loadgen::run_loadgen(&server.addr().to_string(), &spec, &opts).expect("loadgen run");
+        server.shutdown();
+        report
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(
+        a.plan.to_string(),
+        b.plan.to_string(),
+        "same spec + seed must replay a byte-identical plan"
+    );
+    assert!(a.plan.get("digest").and_then(Json::as_str).is_some(), "plan carries its digest");
+    let planned = num(&a.plan, "arrivals") as u64;
+    assert!(planned > 0, "an 0.5 s x 60 rps run plans arrivals");
+    assert_eq!(a.total.sent, planned, "every planned arrival is dispatched");
+    assert_eq!(b.total.sent, planned);
+    assert!(a.total.ok > 0, "a healthy server answers offered load: {:?}", a.total);
+    // The observed half may legitimately differ run to run; the class
+    // populations (a pure function of the plan) may not.
+    let classes = |r: &loadgen::LoadReport| -> Vec<(String, u64)> {
+        r.per_class.iter().map(|(k, v)| (k.clone(), v.sent)).collect()
+    };
+    assert_eq!(classes(&a), classes(&b), "class draws are part of the deterministic plan");
+}
+
+#[test]
+fn overloaded_loadgen_counts_rejections_without_stalling_or_leaking() {
+    // One admitted connection, six senders, well over capacity: admission
+    // control must bounce the overflow (visible on both ends), and once
+    // the run's pool drops its sockets the server must drain back to a
+    // lone connection — nothing stalls, nothing leaks.
+    let c = start(false);
+    let server = ServingServer::spawn_with(
+        "127.0.0.1:0",
+        c,
+        ServeOpts { max_concurrent_requests: 1, ..ServeOpts::default() },
+    )
+    .expect("bind serving server");
+    let addr = server.addr().to_string();
+    let spec = WorkloadSpec::builtin("constant", 300.0, 0.6, 5).expect("builtin spec");
+    let opts = LoadgenOpts { workers: 6, timeout: Duration::from_secs(10) };
+    let report = loadgen::run_loadgen(&addr, &spec, &opts).expect("overloaded run still reports");
+
+    assert!(
+        report.total.rejected_busy > 0,
+        "an over-capacity run must see 503 rejections: {:?}",
+        report.total
+    );
+    assert_eq!(
+        report.total.sent,
+        report.total.ok + report.total.rejected_busy + report.total.errors,
+        "every dispatched request has exactly one outcome: {:?}",
+        report.total
+    );
+
+    // The server's own count of bounced connections agrees that admission
+    // control fired, and the server is still live and drained.
+    let timeout = Duration::from_secs(10);
+    let mut drained = false;
+    for _ in 0..100 {
+        if let Ok(m) = serving::fetch_metrics(&addr, timeout) {
+            assert!(num(&m, "connections.rejected_busy") > 0.0, "{m}");
+            // Our own /metrics fetch holds the one slot while it is served.
+            if num(&m, "connections.open") <= 1.0 {
+                drained = true;
+                break;
+            }
+        }
+        thread::sleep(Duration::from_millis(20));
+    }
+    assert!(drained, "connections leaked after the loadgen pool closed");
+    let health = serving::fetch_health(&addr, timeout).expect("healthz after overload");
+    assert_eq!(health.get("ok").and_then(Json::as_bool), Some(true));
+    server.shutdown();
+}
+
+#[test]
+fn metrics_endpoint_reconciles_with_stats_over_the_wire() {
+    let c = start(true);
+    let server = ServingServer::spawn("127.0.0.1:0", c.clone()).expect("bind serving server");
+    let addr = server.addr().to_string();
+    let timeout = Duration::from_secs(30);
+    let elems = c.sample_elems();
+    // A mixed population so per-class metrics have several rows.
+    for (i, budget) in [
+        BudgetSpec::Class(Budget::Low),
+        BudgetSpec::Class(Budget::High),
+        BudgetSpec::Deadline(Duration::from_secs(5)),
+        BudgetSpec::Class(Budget::Low),
+        BudgetSpec::Deadline(Duration::from_secs(5)),
+    ]
+    .into_iter()
+    .enumerate()
+    {
+        serving::infer_remote(
+            &addr,
+            &InferRequest {
+                input: sample(elems, 90 + i as u64),
+                spec: RequestSpec { budget, ..RequestSpec::default() },
+            },
+            timeout,
+        )
+        .expect("infer");
+    }
+
+    let metrics = serving::fetch_metrics(&addr, timeout).expect("GET /metrics");
+    let stats = serving::fetch_stats(&addr, timeout).expect("GET /stats");
+
+    // Shared counters agree between the two documents.
+    for key in ["completed", "failed", "deadline_met", "deadline_missed"] {
+        assert_eq!(num(&metrics, key), num(&stats, key), "'{key}' disagrees:\n{metrics}\n{stats}");
+    }
+    // Both percentile sets route through the same histogram.
+    assert_eq!(num(&metrics, "latency.p50_s"), num(&stats, "latency_p50_s"));
+    assert_eq!(num(&metrics, "latency.p99_s"), num(&stats, "latency_p99_s"));
+    assert_eq!(num(&metrics, "latency.p999_s"), num(&stats, "latency_p999_s"));
+
+    // The metrics document reconciles with itself: met + missed ==
+    // completed, in total and per class.
+    assert_eq!(num(&metrics, "completed"), 5.0, "{metrics}");
+    assert_eq!(
+        num(&metrics, "deadline_met") + num(&metrics, "deadline_missed"),
+        num(&metrics, "completed")
+    );
+    let per_class = metrics.get("per_class").and_then(Json::as_obj).expect("per_class");
+    assert!(per_class.len() >= 2, "mixed budgets must yield several classes: {metrics}");
+    let mut class_completed = 0.0;
+    for (name, cm) in per_class {
+        class_completed += num(cm, "completed");
+        assert_eq!(
+            num(cm, "deadline_met") + num(cm, "deadline_missed"),
+            num(cm, "completed"),
+            "class {name} does not reconcile"
+        );
+        let met_frac = num(cm, "met_frac");
+        assert!((0.0..=1.0).contains(&met_frac), "class {name}: {met_frac}");
+    }
+    assert_eq!(class_completed, num(&metrics, "completed"), "classes partition the requests");
+    assert_eq!(num(&metrics, "queue_depth"), 0.0, "idle server, empty queue");
+
+    // Connection counters only ever move forward.
+    let later = serving::fetch_metrics(&addr, timeout).expect("second GET /metrics");
+    assert!(
+        num(&later, "connections.accepted") > num(&metrics, "connections.accepted"),
+        "accepted connections must be monotone:\n{metrics}\n{later}"
+    );
     server.shutdown();
 }
