@@ -1,0 +1,183 @@
+//! Bench: the elastic-fleet layer — what the result store saves and what
+//! the slice protocol costs over the wire.
+//!
+//! Two sections. The `store` section runs the same sweep twice through
+//! `store::run_full_stored` against a fresh on-disk store: the first run
+//! computes and persists every point, the second must replay all of them,
+//! and the replay/compute wall-clock ratio is the store's payoff. The
+//! `elastic` section drives `fleet::dispatch_elastic` over two live local
+//! workers (static source, adaptive slice sizing on) and reports the
+//! wall-clock and how the points split across the fleet. Both sections
+//! assert byte-identity against `shard::run_full` — a bench that drifts
+//! from the reference is measuring the wrong thing.
+//!
+//! Results are exported to `BENCH_fleet.json` at the repo root so CI can
+//! track the store and slice-path trajectory PR-over-PR, alongside
+//! `BENCH_dse.json` and `BENCH_serving.json`.
+
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+use bf_imna::sim::fleet::{dispatch_elastic, ElasticOpts, WorkerSource};
+use bf_imna::sim::shard::{self, PrecisionGrid, SweepSpec};
+use bf_imna::sim::store::{self, ResultStore};
+use bf_imna::sim::transport::WorkerServer;
+use bf_imna::sim::SweepEngine;
+use bf_imna::util::benchkit::banner;
+use bf_imna::util::json::Json;
+use bf_imna::util::table::{fmt_eng, Table};
+
+/// 2 technologies x 8 fixed widths = 16 DSE points: enough that the
+/// store's replay speedup and the fleet's point split are visible, small
+/// enough to keep the bench in CI-smoke territory.
+fn bench_spec() -> SweepSpec {
+    SweepSpec::single(
+        "serve_cnn",
+        vec!["lr".to_string()],
+        vec!["sram".to_string(), "reram".to_string()],
+        PrecisionGrid::Fixed { bits: vec![2, 3, 4, 5, 6, 7, 8, 9] },
+    )
+}
+
+fn main() {
+    let spec = bench_spec();
+    let reference = shard::run_full(&spec, &SweepEngine::serial())
+        .expect("reference sweep")
+        .to_string();
+    let n = spec.resolve().expect("resolve").num_points();
+
+    let (cold_s, warm_s, replayed) = bench_store(&spec, &reference, n);
+    let (elastic_s, per_worker) = bench_elastic(&spec, &reference, n);
+    write_bench_json(n, cold_s, warm_s, replayed, elastic_s, &per_worker);
+}
+
+/// The `store` section: cold run computes + persists every point, warm
+/// run replays every point from disk without touching the simulator.
+fn bench_store(spec: &SweepSpec, reference: &str, n: usize) -> (f64, f64, usize) {
+    banner("Result store (cold compute + persist vs warm replay)");
+    let dir = std::env::temp_dir().join(format!("bf-imna-bench-store-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+
+    let engine = SweepEngine::with_threads(2);
+    let store = ResultStore::open(&dir).expect("open store");
+    let t0 = Instant::now();
+    let cold = store::run_full_stored(spec, &engine, &store).expect("cold stored sweep");
+    let cold_s = t0.elapsed().as_secs_f64();
+    assert_eq!(cold.doc.to_string(), reference, "cold stored sweep drifted from run_full");
+    assert_eq!((cold.computed, cold.replayed), (n, 0), "cold run must compute everything");
+
+    // A fresh engine for the warm run, so nothing is served from the
+    // in-process plan cache — every replayed point comes off disk.
+    let engine = SweepEngine::with_threads(2);
+    let store = ResultStore::open(&dir).expect("reopen store");
+    let t0 = Instant::now();
+    let warm = store::run_full_stored(spec, &engine, &store).expect("warm stored sweep");
+    let warm_s = t0.elapsed().as_secs_f64();
+    assert_eq!(warm.doc.to_string(), reference, "replayed sweep drifted from run_full");
+    assert_eq!((warm.computed, warm.replayed), (0, n), "warm run must replay everything");
+    let _ = std::fs::remove_dir_all(&dir);
+
+    let mut t = Table::new(vec!["run", "computed", "replayed", "wall"]);
+    t.row(vec![
+        "cold".to_string(),
+        cold.computed.to_string(),
+        cold.replayed.to_string(),
+        format!("{} s", fmt_eng(cold_s, 3)),
+    ]);
+    t.row(vec![
+        "warm".to_string(),
+        warm.computed.to_string(),
+        warm.replayed.to_string(),
+        format!("{} s", fmt_eng(warm_s, 3)),
+    ]);
+    t.row(vec![
+        "speedup".to_string(),
+        String::new(),
+        String::new(),
+        format!("{:.1}x", cold_s / warm_s.max(1e-9)),
+    ]);
+    print!("{}", t.render());
+    (cold_s, warm_s, warm.replayed)
+}
+
+/// The `elastic` section: the full sweep through `dispatch_elastic` over
+/// two live local workers, with adaptive slice sizing in the loop.
+fn bench_elastic(spec: &SweepSpec, reference: &str, n: usize) -> (f64, Vec<(String, usize)>) {
+    banner("Elastic dispatch (2 local workers, adaptive slices)");
+    let workers: Vec<WorkerServer> = (0..2)
+        .map(|_| {
+            WorkerServer::spawn("127.0.0.1:0", SweepEngine::with_threads(2)).expect("bind worker")
+        })
+        .collect();
+    let source =
+        WorkerSource::Static(workers.iter().map(|w| w.addr().to_string()).collect());
+    let eopts = ElasticOpts {
+        timeout: Duration::from_secs(60),
+        poll: Duration::from_millis(20),
+        max_slice: 4,
+        ..ElasticOpts::default()
+    };
+    let t0 = Instant::now();
+    let report = dispatch_elastic(spec, &source, &eopts).expect("elastic dispatch");
+    let elastic_s = t0.elapsed().as_secs_f64();
+    assert_eq!(report.doc.to_string(), reference, "elastic dispatch drifted from run_full");
+    assert_eq!(report.computed_points, n, "no store in the loop: everything is computed");
+    for w in workers {
+        w.shutdown();
+    }
+
+    let mut t = Table::new(vec!["metric", "value"]);
+    t.row(vec!["points".to_string(), n.to_string()]);
+    t.row(vec!["wall".to_string(), format!("{} s", fmt_eng(elastic_s, 3))]);
+    t.row(vec![
+        "rate".to_string(),
+        format!("{:.0} points/s", n as f64 / elastic_s.max(1e-9)),
+    ]);
+    for (addr, served) in &report.per_worker {
+        t.row(vec![format!("served by {addr}"), format!("{served} point(s)")]);
+    }
+    t.row(vec![
+        "retries / busy".to_string(),
+        format!("{} / {}", report.retries, report.busy_retries),
+    ]);
+    print!("{}", t.render());
+    (elastic_s, report.per_worker)
+}
+
+/// Export the fleet timings as canonical JSON at the repo root, the
+/// `BENCH_dse.json` / `BENCH_serving.json` pattern.
+fn write_bench_json(
+    n: usize,
+    cold_s: f64,
+    warm_s: f64,
+    replayed: usize,
+    elastic_s: f64,
+    per_worker: &[(String, usize)],
+) {
+    let doc = Json::obj([
+        ("bench", Json::str("perf_fleet/store_and_elastic")),
+        ("points", Json::num(n as f64)),
+        (
+            "store",
+            Json::obj([
+                ("cold_wall_s", Json::num(cold_s)),
+                ("warm_wall_s", Json::num(warm_s)),
+                ("replayed_points", Json::num(replayed as f64)),
+                ("replay_speedup", Json::num(cold_s / warm_s.max(1e-9))),
+            ]),
+        ),
+        (
+            "elastic",
+            Json::obj([
+                ("workers", Json::num(per_worker.len() as f64)),
+                ("wall_s", Json::num(elastic_s)),
+                ("points_per_s", Json::num(n as f64 / elastic_s.max(1e-9))),
+            ]),
+        ),
+    ]);
+    let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("BENCH_fleet.json");
+    match std::fs::write(&path, format!("{doc}\n")) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write {}: {e}", path.display()),
+    }
+}

@@ -122,6 +122,39 @@ impl Default for BudgetTargets {
 /// EMA smoothing factor for observed latencies.
 const EMA_ALPHA: f64 = 0.3;
 
+/// An exponentially-weighted moving average over a scalar signal — the
+/// smoothing primitive behind [`PrecisionController::observe`]'s latency
+/// model, reused by the elastic dispatcher ([`crate::sim::fleet`]) to
+/// track per-worker round-trip latency. The first observation seeds the
+/// average; later ones blend in with weight `alpha`.
+#[derive(Debug, Clone, Copy)]
+pub struct Ewma {
+    alpha: f64,
+    value: Option<f64>,
+}
+
+impl Ewma {
+    /// A fresh (unseeded) average with smoothing factor `alpha`, clamped
+    /// into `(0, 1]`.
+    pub fn new(alpha: f64) -> Ewma {
+        Ewma { alpha: alpha.clamp(f64::MIN_POSITIVE, 1.0), value: None }
+    }
+
+    /// Fold one sample in: the first sample seeds the average, later
+    /// samples blend as `(1 - alpha) * value + alpha * sample`.
+    pub fn observe(&mut self, sample: f64) {
+        self.value = Some(match self.value {
+            None => sample,
+            Some(v) => (1.0 - self.alpha) * v + self.alpha * sample,
+        });
+    }
+
+    /// The current average, or `None` before the first observation.
+    pub fn get(&self) -> Option<f64> {
+        self.value
+    }
+}
+
 /// Safety margin: predicted latency must fit in `target * MARGIN`.
 const MARGIN: f64 = 0.9;
 
@@ -132,7 +165,7 @@ pub struct PrecisionController {
     ladder: Vec<String>,
     targets: BudgetTargets,
     /// EMA of observed per-batch latency, seconds, by (config, batch).
-    ema: BTreeMap<(String, u64), f64>,
+    ema: BTreeMap<(String, u64), Ewma>,
     /// Fallback relative cost (~avg_bits²-ish) used before observations.
     prior_scale: BTreeMap<String, f64>,
     /// Prior absolute latency for the cheapest config, seconds.
@@ -174,7 +207,7 @@ impl PrecisionController {
 
     /// Predicted per-batch latency, seconds.
     pub fn predict(&self, config: &str, batch: u64) -> f64 {
-        if let Some(&s) = self.ema.get(&(config.to_string(), batch)) {
+        if let Some(s) = self.ema.get(&(config.to_string(), batch)).and_then(Ewma::get) {
             return s;
         }
         let scale = self.prior_scale.get(config).copied().unwrap_or(1.0);
@@ -185,8 +218,7 @@ impl PrecisionController {
     /// Record an observed execution.
     pub fn observe(&mut self, config: &str, batch: u64, seconds: f64) {
         let key = (config.to_string(), batch);
-        let e = self.ema.entry(key).or_insert(seconds);
-        *e = (1.0 - EMA_ALPHA) * *e + EMA_ALPHA * seconds;
+        self.ema.entry(key).or_insert_with(|| Ewma::new(EMA_ALPHA)).observe(seconds);
     }
 
     /// The effective latency target of a budget spec: classes resolve to
@@ -296,6 +328,25 @@ mod tests {
             c.observe("int4", 1, 0.002);
         }
         assert!((c.predict("int4", 1) - 0.002).abs() < 2e-4);
+    }
+
+    #[test]
+    fn ewma_first_sample_seeds_then_blends() {
+        let mut e = Ewma::new(0.3);
+        assert_eq!(e.get(), None);
+        e.observe(1.0);
+        assert_eq!(e.get(), Some(1.0));
+        e.observe(2.0);
+        // (1 - 0.3) * 1.0 + 0.3 * 2.0
+        assert!((e.get().unwrap() - 1.3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ewma_clamps_alpha_into_unit_interval() {
+        let mut e = Ewma::new(7.0); // clamped to 1.0 -> tracks the last sample
+        e.observe(1.0);
+        e.observe(5.0);
+        assert_eq!(e.get(), Some(5.0));
     }
 
     #[test]

@@ -775,11 +775,32 @@ fn metric_num(doc: &Json, path: &str) -> f64 {
 /// and met fractions, and the server-side deltas (completions, deadline
 /// verdicts, admission rejections, connection churn) plus the server's
 /// cumulative latency percentiles.
+///
+/// The server's counters are cumulative since *its* start, not the
+/// run's: if the server restarted between the two scrapes, `after` can
+/// be smaller than `before` and the raw differences go negative. A
+/// negative delta is impossible for a monotonic counter, so each one
+/// clamps to zero and the report carries `server.server_restarted:
+/// true` — the window's server-side numbers are unusable, and the flag
+/// says so instead of smuggling negatives into downstream gates.
 pub fn slo_report(report: &LoadReport, before: &Json, after: &Json) -> Json {
-    let delta = |path: &str| metric_num(after, path) - metric_num(before, path);
+    let mut restarted = false;
+    let mut delta = |path: &str| {
+        let d = metric_num(after, path) - metric_num(before, path);
+        if d < 0.0 {
+            restarted = true;
+            return 0.0;
+        }
+        d
+    };
     let spec = report.plan.get("spec").cloned().unwrap_or(Json::Null);
     let server_completed = delta("completed");
     let server_met = delta("deadline_met");
+    let admission_rejections = delta("connections.rejected_busy");
+    let connections_accepted = delta("connections.accepted");
+    let connections_dropped = delta("connections.dropped");
+    let deadline_missed = delta("deadline_missed");
+    let failed = delta("failed");
     let server_met_frac =
         if server_completed > 0.0 { server_met / server_completed } else { 1.0 };
     Json::obj([
@@ -822,18 +843,19 @@ pub fn slo_report(report: &LoadReport, before: &Json, after: &Json) -> Json {
         (
             "server",
             Json::obj([
-                ("admission_rejections_delta", Json::num(delta("connections.rejected_busy"))),
+                ("admission_rejections_delta", Json::num(admission_rejections)),
                 ("completed_delta", Json::num(server_completed)),
-                ("connections_accepted_delta", Json::num(delta("connections.accepted"))),
-                ("connections_dropped_delta", Json::num(delta("connections.dropped"))),
+                ("connections_accepted_delta", Json::num(connections_accepted)),
+                ("connections_dropped_delta", Json::num(connections_dropped)),
                 ("deadline_met_delta", Json::num(server_met)),
-                ("deadline_missed_delta", Json::num(delta("deadline_missed"))),
-                ("failed_delta", Json::num(delta("failed"))),
+                ("deadline_missed_delta", Json::num(deadline_missed)),
+                ("failed_delta", Json::num(failed)),
                 ("latency_p50_s", Json::num(metric_num(after, "latency.p50_s"))),
                 ("latency_p99_s", Json::num(metric_num(after, "latency.p99_s"))),
                 ("latency_p999_s", Json::num(metric_num(after, "latency.p999_s"))),
                 ("met_frac_delta_window", Json::num(server_met_frac)),
                 ("queue_depth_after", Json::num(metric_num(after, "queue_depth"))),
+                ("server_restarted", Json::Bool(restarted)),
             ]),
         ),
         ("workload", spec),
@@ -1047,10 +1069,57 @@ mod tests {
         let client = slo.get("client").unwrap();
         assert_eq!(client.get("met_frac").and_then(Json::as_f64), Some(0.75));
         assert_eq!(client.get("rejected_busy").and_then(Json::as_f64), Some(2.0));
+        assert_eq!(server.get("server_restarted"), Some(&Json::Bool(false)));
         assert!(slo.get("offered").and_then(|o| o.get("rps")).is_some());
         assert!(slo.get("workload").and_then(|w| w.get("seed")).is_some());
         // The artifact is canonical: serializing twice is byte-identical.
         assert_eq!(slo.to_string(), slo_report(&report, &before, &after).to_string());
+    }
+
+    #[test]
+    fn slo_report_clamps_deltas_across_a_server_restart() {
+        let spec = small_spec(Profile::Constant);
+        let report = LoadReport {
+            plan: spec.plan_json(),
+            wall_s: 2.0,
+            total: ClassOutcome::default(),
+            per_class: BTreeMap::new(),
+            pool: PoolStats { fresh_connects: 1, reuses: 0, stale_retries: 0, discards: 0 },
+        };
+        let before = Json::parse(
+            r#"{"completed":100,"deadline_met":90,"deadline_missed":10,"failed":0,
+                "connections":{"accepted":5,"rejected_busy":1,"dropped":0},"queue_depth":0,
+                "latency":{"p50_s":0.01,"p99_s":0.05,"p999_s":0.09}}"#,
+        )
+        .unwrap();
+        // The server restarted mid-run: its cumulative counters reset, so
+        // the `after` scrape is *smaller* than `before`.
+        let after = Json::parse(
+            r#"{"completed":3,"deadline_met":2,"deadline_missed":1,"failed":0,
+                "connections":{"accepted":1,"rejected_busy":0,"dropped":0},"queue_depth":0,
+                "latency":{"p50_s":0.012,"p99_s":0.06,"p999_s":0.10}}"#,
+        )
+        .unwrap();
+        let slo = slo_report(&report, &before, &after);
+        let server = slo.get("server").unwrap();
+        assert_eq!(server.get("server_restarted"), Some(&Json::Bool(true)));
+        // Monotonic counters cannot go backwards: every delta clamps to
+        // zero instead of going negative.
+        for key in [
+            "completed_delta",
+            "deadline_met_delta",
+            "deadline_missed_delta",
+            "admission_rejections_delta",
+            "connections_accepted_delta",
+            "failed_delta",
+        ] {
+            let v = server.get(key).and_then(Json::as_f64).unwrap();
+            assert!(v >= 0.0, "{key} should clamp to >= 0, got {v}");
+        }
+        assert_eq!(server.get("completed_delta").and_then(Json::as_f64), Some(0.0));
+        // With zero completions in the window the met fraction degrades
+        // to its vacuous 1.0, not NaN.
+        assert_eq!(server.get("met_frac_delta_window").and_then(Json::as_f64), Some(1.0));
     }
 
     // Live loadgen runs against a spawned server are in

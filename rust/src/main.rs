@@ -10,7 +10,11 @@
 //! bf-imna sweep    --artifact fig6 --shards 2 --shard-id 0 --out s0.json
 //! bf-imna merge    s0.json s1.json s2.json s3.json --out full.json
 //! bf-imna serve-worker --addr 127.0.0.1:8377          # HTTP sweep worker
+//! bf-imna fleet    --addr 127.0.0.1:8376              # worker-fleet controller
+//! bf-imna serve-worker --fleet 127.0.0.1:8376         # worker + heartbeats
 //! bf-imna dispatch --workers a:8377,b:8377 --out full.json  # fan out + merge
+//! bf-imna dispatch --fleet 127.0.0.1:8376 --out full.json   # elastic fan out
+//! bf-imna sweep    --net alexnet --store results/ --out full.json  # replay cached points
 //! bf-imna artifacts                                   # list the paper-artifact catalog
 //! bf-imna render   --artifact fig7 --doc full.json    # document -> figure/table text
 //! bf-imna hawq                                        # Table VII (table7 artifact)
@@ -43,7 +47,9 @@ use bf_imna::coordinator::{
 };
 use bf_imna::mapper::CacheSnapshot;
 use bf_imna::precision::PrecisionConfig;
+use bf_imna::sim::fleet;
 use bf_imna::sim::shard::{self, SweepSpec};
+use bf_imna::sim::store::{self, ResultStore};
 use bf_imna::sim::transport;
 use bf_imna::sim::{artifacts, breakdown, dse, simulate, SimParams, SweepEngine};
 use bf_imna::util::json::Json;
@@ -58,6 +64,7 @@ fn main() -> ExitCode {
         "sweep" => cmd_sweep(&opts),
         "merge" => cmd_merge(&opts, &files),
         "serve-worker" => cmd_serve_worker(&opts),
+        "fleet" => cmd_fleet(&opts),
         "dispatch" => cmd_dispatch(&opts),
         "artifacts" => cmd_artifacts(&opts),
         "render" => cmd_render(&opts),
@@ -109,6 +116,10 @@ COMMANDS:
              --seed N          combination-generator seed (default 7)
              --cache-in FILE   absorb a plan-cache snapshot before running
              --cache-out FILE  write this run's plan-cache snapshot
+             --store DIR       persistent result store: replay every point
+                               already in DIR, compute + save only the
+                               novel ones (full sweeps only, not shards;
+                               overlapping specs share stored points)
   merge      reassemble shard documents into the full sweep document
              bf-imna merge s0.json .. sN.json [--out FILE]
              output is byte-identical to the unsharded `sweep --out`
@@ -125,10 +136,31 @@ COMMANDS:
                                seconds (default 60)
              --conn-requests N  requests served per connection before a
                                clean connection: close (default 1024)
-             endpoints: POST /shard  run one slice, reply with its document
+             --fleet HOST:PORT  register with a `fleet` controller and
+                               heartbeat the worker's address + live
+                               stats every --heartbeat-s seconds
+             --advertise ADDR  address to register with the controller
+                               (default: the bound listen address)
+             --heartbeat-s F   heartbeat period in seconds (default 1)
+             endpoints: POST /shard  run one fixed shard of a partition
+                        POST /slice  run an arbitrary contiguous point
+                               range (the elastic dispatcher's unit)
                         POST /cache  absorb a shipped plan-cache snapshot
                         GET /healthz, GET /stats  liveness + cache counters
              connections are keep-alive: many framed requests per socket
+  fleet      worker-fleet controller: the registry `dispatch --fleet`
+             polls for the live worker set
+             --addr HOST:PORT  listen address (default 127.0.0.1:8376;
+                               port 0 picks an ephemeral port)
+             --expiry-s F      drop workers from the listing this many
+                               seconds after their last heartbeat
+                               (default 5; entries reappear when their
+                               heartbeats resume)
+             endpoints: POST /register  worker registration/heartbeat
+                               (fingerprint-checked at the door)
+                        GET /workers  live worker listing with ages and
+                               per-worker stats documents
+                        GET /healthz  liveness
   dispatch   fan a sweep out over serve-worker processes and merge
              --workers a:p1,b:p2  comma-separated worker addresses (required)
              --spec FILE       sweep-spec JSON; --artifact NAME [--tiny]
@@ -146,6 +178,21 @@ COMMANDS:
              prewarm connects are retried with short backoff (workers
              still binding at fleet start stay in the pool); the merged
              output is byte-identical to the unsharded `sweep --out`
+             elastic mode (--fleet and/or --store): workers come from the
+             fleet controller instead of a fixed list — late joiners are
+             admitted mid-sweep, dead workers pause and resume with their
+             heartbeats, and per-worker slice sizes adapt to observed
+             latency; stored points replay without touching the network
+             --fleet HOST:PORT  poll this `fleet` controller for the live
+                               worker set (instead of --workers)
+             --store DIR       persistent result store shared with
+                               `sweep --store`: replay stored points,
+                               save the newly computed ones
+             --max-slice N     largest point range handed to the fastest
+                               worker (default 8; slower workers get
+                               proportionally smaller slices)
+             --grace-s N       abort after N seconds with work left but
+                               no live worker making progress (default 60)
   artifacts  list the paper-artifact catalog (one SweepSpec + renderer per
              figure/table of the paper)
              --names           print bare artifact names, one per line
@@ -314,7 +361,7 @@ fn cmd_sweep(opts: &BTreeMap<String, String>) -> CliResult {
     // plain `sweep --net X --hw Y` keeps the Fig. 7 table.
     let service_mode = [
         "out", "spec", "artifact", "tiny", "shards", "shard-id", "tech", "combos", "seed",
-        "cache-in", "cache-out",
+        "cache-in", "cache-out", "store",
     ]
     .iter()
     .any(|k| opts.contains_key(*k));
@@ -349,12 +396,33 @@ fn cmd_sweep(opts: &BTreeMap<String, String>) -> CliResult {
         let loaded = engine.cache().absorb(&snap);
         eprintln!("cache-in: absorbed {loaded} plans from {path}");
     }
-    // The prewarmed runner batch-prewarms this shard's slice so the
-    // parallel run never maps cold (see `sim::shard`).
-    let result = shard::run_shard_prewarmed(&spec, shards, shard_id, &engine)?;
-    let n_points = result.points.len();
     let sharded = opts.contains_key("shards") || opts.contains_key("shard-id");
-    let doc = if sharded { result.to_json() } else { shard::full_doc(&spec, &result.points) };
+    let (doc, n_points) = match opts.get("store") {
+        Some(dir) => {
+            if sharded {
+                return Err("sweep: --store applies to full sweeps only — shard documents \
+                            are partial; use `dispatch --store` to distribute a stored sweep"
+                    .into());
+            }
+            let result_store = ResultStore::open(dir.as_str())?;
+            let outcome = store::run_full_stored(&spec, &engine, &result_store)?;
+            eprintln!(
+                "sweep: {} computed, {} replayed (store {dir})",
+                outcome.computed, outcome.replayed
+            );
+            let n = outcome.computed + outcome.replayed;
+            (outcome.doc, n)
+        }
+        None => {
+            // The prewarmed runner batch-prewarms this shard's slice so
+            // the parallel run never maps cold (see `sim::shard`).
+            let result = shard::run_shard_prewarmed(&spec, shards, shard_id, &engine)?;
+            let n = result.points.len();
+            let doc =
+                if sharded { result.to_json() } else { shard::full_doc(&spec, &result.points) };
+            (doc, n)
+        }
+    };
     if let Some(path) = opts.get("cache-out") {
         let snap = engine.cache().snapshot();
         std::fs::write(path, format!("{}\n", snap.to_json())).map_err(|e| format!("{path}: {e}"))?;
@@ -440,15 +508,70 @@ fn cmd_serve_worker(opts: &BTreeMap<String, String>) -> CliResult {
     let server = transport::WorkerServer::spawn_with(addr, engine, wopts)
         .map_err(|e| format!("{addr}: {e}"))?;
     eprintln!(
-        "serve-worker: listening on http://{} (POST /shard, POST /cache, GET /healthz, GET /stats)",
+        "serve-worker: listening on http://{} (POST /shard, POST /slice, POST /cache, \
+         GET /healthz, GET /stats)",
         server.addr()
     );
+    // With --fleet, a background thread re-registers the worker (address,
+    // fingerprint, live stats) with the controller every period, which is
+    // how `dispatch --fleet` finds it — and re-finds it after a pause.
+    let _heartbeat = match opts.get("fleet") {
+        Some(fleet_addr) => {
+            let advertise =
+                opts.get("advertise").cloned().unwrap_or_else(|| server.addr().to_string());
+            let period = match opts.get("heartbeat-s") {
+                Some(s) => {
+                    let secs: f64 = s.parse()?;
+                    if !(secs.is_finite() && secs > 0.0) {
+                        return Err("serve-worker: --heartbeat-s must be > 0".into());
+                    }
+                    Duration::from_secs_f64(secs)
+                }
+                None => Duration::from_secs(1),
+            };
+            eprintln!(
+                "serve-worker: heartbeating to http://{fleet_addr} as {advertise} every {} s",
+                period.as_secs_f64()
+            );
+            Some(fleet::spawn_heartbeat(fleet_addr, &advertise, server.stats_handle(), period))
+        }
+        None => None,
+    };
     // Serve until killed; `dispatch` is the other end.
     server.join();
     Ok(())
 }
 
+fn cmd_fleet(opts: &BTreeMap<String, String>) -> CliResult {
+    let addr = opts.get("addr").map(String::as_str).unwrap_or("127.0.0.1:8376");
+    let mut fopts = fleet::FleetOpts::default();
+    if let Some(s) = opts.get("expiry-s") {
+        let secs: f64 = s.parse()?;
+        if !(secs.is_finite() && secs > 0.0) {
+            return Err("fleet: --expiry-s must be > 0".into());
+        }
+        fopts.expiry = Duration::from_secs_f64(secs);
+    }
+    let server =
+        fleet::FleetServer::spawn_with(addr, fopts).map_err(|e| format!("{addr}: {e}"))?;
+    eprintln!(
+        "fleet: listening on http://{} (POST /register, GET /workers, GET /healthz; \
+         workers expire {} s after their last heartbeat)",
+        server.addr(),
+        fopts.expiry.as_secs_f64()
+    );
+    // Serve until killed; workers heartbeat in, `dispatch --fleet` polls.
+    server.join();
+    Ok(())
+}
+
 fn cmd_dispatch(opts: &BTreeMap<String, String>) -> CliResult {
+    // --fleet and/or --store switch to the elastic dispatcher; a plain
+    // --workers list keeps the fixed-partition legacy path (whose output
+    // is byte-identical anyway).
+    if opts.contains_key("fleet") || opts.contains_key("store") {
+        return cmd_dispatch_elastic(opts);
+    }
     let workers: Vec<String> = opts
         .get("workers")
         .ok_or("dispatch: --workers host:port[,host:port...] is required")?
@@ -486,6 +609,88 @@ fn cmd_dispatch(opts: &BTreeMap<String, String>) -> CliResult {
             report.busy_retries
         );
     }
+    let n = report.doc.get("n_points").and_then(Json::as_i64).unwrap_or(0);
+    match opts.get("out") {
+        Some(path) => {
+            std::fs::write(path, format!("{}\n", report.doc)).map_err(|e| format!("{path}: {e}"))?;
+            eprintln!("dispatch: merged {n} points into {path}");
+        }
+        None => println!("{}", report.doc),
+    }
+    Ok(())
+}
+
+/// The elastic path of `dispatch`: workers come from a fleet controller
+/// (`--fleet`) or a static list, slices are sized per worker from
+/// observed latency, and a `--store` directory replays already-computed
+/// points before any network traffic.
+fn cmd_dispatch_elastic(opts: &BTreeMap<String, String>) -> CliResult {
+    let source = match (opts.get("fleet"), opts.get("workers")) {
+        (Some(_), Some(_)) => {
+            return Err("dispatch: give either --fleet or --workers, not both".into())
+        }
+        (Some(addr), None) => fleet::WorkerSource::Fleet(addr.clone()),
+        (None, Some(list)) => {
+            let workers: Vec<String> = list
+                .split(',')
+                .map(|s| s.trim().to_string())
+                .filter(|s| !s.is_empty())
+                .collect();
+            if workers.is_empty() {
+                return Err("dispatch: --workers list is empty".into());
+            }
+            fleet::WorkerSource::Static(workers)
+        }
+        (None, None) => {
+            // --store alone still works: a fully stored spec replays
+            // without any worker at all.
+            fleet::WorkerSource::Static(Vec::new())
+        }
+    };
+    let spec = spec_from_opts(opts)?;
+    let mut eopts = fleet::ElasticOpts::default();
+    if let Some(s) = opts.get("timeout-s") {
+        eopts.timeout = Duration::from_secs(s.parse()?);
+    }
+    if let Some(s) = opts.get("grace-s") {
+        eopts.grace = Duration::from_secs(s.parse()?);
+    }
+    if let Some(s) = opts.get("max-slice") {
+        eopts.max_slice = s.parse::<usize>()?.max(1);
+    }
+    if let Some(path) = opts.get("cache-in") {
+        eopts.prewarm = Some(load_snapshot(path)?);
+    }
+    if let Some(s) = opts.get("pool") {
+        eopts.pool_conns = s.parse::<usize>()?.max(1);
+    }
+    if let Some(dir) = opts.get("store") {
+        eopts.store = Some(ResultStore::open(dir.as_str())?);
+    }
+    // An empty static source is only useful when the store can replay
+    // everything; dispatch_elastic errs out cleanly otherwise.
+    if matches!(&source, fleet::WorkerSource::Static(ws) if ws.is_empty())
+        && eopts.store.is_none()
+    {
+        return Err("dispatch: --fleet HOST:PORT or --workers host:port[,...] is required".into());
+    }
+    let report = fleet::dispatch_elastic(&spec, &source, &eopts)?;
+    for (w, served) in &report.per_worker {
+        eprintln!("dispatch: {w} served {served} point(s)");
+    }
+    if report.retries > 0 {
+        eprintln!("dispatch: {} failed slice request(s) were reassigned", report.retries);
+    }
+    if report.busy_retries > 0 {
+        eprintln!(
+            "dispatch: {} worker-busy bounce(s) were re-queued (backpressure, not failures)",
+            report.busy_retries
+        );
+    }
+    eprintln!(
+        "dispatch: {} computed, {} replayed",
+        report.computed_points, report.replayed_points
+    );
     let n = report.doc.get("n_points").and_then(Json::as_i64).unwrap_or(0);
     match opts.get("out") {
         Some(path) => {

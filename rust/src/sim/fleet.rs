@@ -1,0 +1,943 @@
+//! The elastic worker fleet: registration, heartbeats, and an adaptive
+//! dispatcher.
+//!
+//! [`super::transport::dispatch`] takes a worker list fixed for the life
+//! of one sweep: a worker that fails its prewarm is retired before the
+//! shard loop starts, a worker that dies stays dead, and a worker that
+//! binds a second too late never joins. That is fine for one-shot runs
+//! and wrong for a long-lived fleet. This module adds the missing
+//! control plane:
+//!
+//! * [`FleetServer`] — a tiny controller (`bf-imna fleet`) workers
+//!   register with. `POST /register` upserts a worker's address, mapper
+//!   fingerprint, and live stats document; a worker whose fingerprint
+//!   differs from the controller's binary is rejected with
+//!   [`CODE_FINGERPRINT_MISMATCH`] at the door, before it can ever serve
+//!   a record a dispatcher would have to distrust. `GET /workers` lists
+//!   the workers whose most recent heartbeat is younger than the expiry.
+//! * [`spawn_heartbeat`] — the worker side: a background thread that
+//!   re-registers every period (`bf-imna serve-worker --fleet`), carrying
+//!   the worker's live `GET /stats` document (cache counters, shards in
+//!   flight) so the controller's listing doubles as a fleet dashboard.
+//! * [`dispatch_elastic`] — a dispatcher that sources its worker set from
+//!   the controller **continuously**: late joiners are admitted mid-sweep,
+//!   a worker whose heartbeats stop is paused (its in-flight range is
+//!   reassigned by the ordinary retry path) and **resumes when its
+//!   heartbeats do**, and a failed wire prewarm is retried with backoff
+//!   instead of permanently retiring the address. Work is handed out as
+//!   contiguous point ranges (`POST /slice`) sized per worker by an EWMA
+//!   of its observed `GET /stats` round-trip latency — the same smoothing
+//!   the serving stack's `PrecisionController` applies to batch latencies
+//!   ([`Ewma`]) — so slow or busy workers take smaller bites while fast
+//!   ones stream. With a [`ResultStore`], already-stored points replay
+//!   without touching the network and only the gaps are dispatched.
+//!
+//! The elastic path preserves the transport's core invariant: every reply
+//! is validated structurally ([`SliceResult::from_json`]) before its
+//! records are accepted, and the assembled document is **byte-identical**
+//! to the single-process [`shard::run_full`] no matter how the fleet
+//! churned. `rust/tests/transport.rs` kills and late-starts workers
+//! mid-sweep and asserts exactly this.
+
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+use std::io;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use super::shard::{self, full_doc, PointRecord, SliceRequest, SliceResult, SweepSpec};
+use super::store::ResultStore;
+use super::transport::{
+    err_doc, http_request, prewarm_worker, serve_exchanges, ConnPolicy, ConnPool, Request,
+    WorkerStatsHandle, CODE_FINGERPRINT_MISMATCH, CODE_WORKER_BUSY,
+};
+use crate::coordinator::controller::Ewma;
+use crate::mapper::cache::mapper_fingerprint;
+use crate::mapper::CacheSnapshot;
+use crate::util::json::Json;
+
+/// The controller's whole-exchange deadline: registrations and listings
+/// are small documents; nothing here computes.
+const FLEET_EXCHANGE_DEADLINE: Duration = Duration::from_secs(10);
+
+/// EWMA smoothing factor for per-worker round-trip latency (the same
+/// value the serving stack's precision controller uses for batch
+/// latencies).
+const RTT_ALPHA: f64 = 0.3;
+
+/// Back-off after `strikes` consecutive failures against one worker:
+/// 20 ms doubling per strike, capped at ~2.5 s — long enough to stop
+/// hammering a sick worker, short enough that a recovered one rejoins
+/// within seconds.
+fn strike_backoff(strikes: u32) -> Duration {
+    Duration::from_millis(20u64.saturating_mul(1 << strikes.min(7)))
+}
+
+/// Knobs for [`FleetServer`].
+#[derive(Debug, Clone, Copy)]
+pub struct FleetOpts {
+    /// How old a worker's most recent heartbeat may be before `GET
+    /// /workers` stops listing it. Entries are kept (a worker whose
+    /// heartbeats resume reappears); only the listing filters.
+    pub expiry: Duration,
+}
+
+impl Default for FleetOpts {
+    /// Expire workers 5 s after their last heartbeat — a few missed
+    /// 1 s-period heartbeats, not one dropped packet.
+    fn default() -> Self {
+        FleetOpts { expiry: Duration::from_secs(5) }
+    }
+}
+
+/// One registered worker, as the controller tracks it.
+#[derive(Debug, Clone)]
+struct WorkerEntry {
+    /// The worker's last-reported stats document (opaque to the
+    /// controller; echoed on `GET /workers`).
+    stats: Json,
+    /// When the most recent heartbeat arrived.
+    last_seen: Instant,
+    /// Heartbeats received from this address since the controller
+    /// started.
+    heartbeats: u64,
+}
+
+/// The fleet controller: a TCP listener serving `POST /register`,
+/// `GET /workers`, and `GET /healthz` on a background thread. See the
+/// module docs for the protocol.
+///
+/// ```no_run
+/// use bf_imna::sim::fleet::FleetServer;
+///
+/// let fleet = FleetServer::spawn("127.0.0.1:0").unwrap();
+/// println!("fleet controller on {}", fleet.addr());
+/// // ... workers heartbeat against it; `dispatch --fleet` polls it ...
+/// fleet.shutdown();
+/// ```
+#[derive(Debug)]
+pub struct FleetServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<thread::JoinHandle<()>>,
+}
+
+impl FleetServer {
+    /// Bind `addr` (port `0` for ephemeral) with default expiry
+    /// ([`FleetOpts::default`]).
+    pub fn spawn(addr: &str) -> io::Result<FleetServer> {
+        Self::spawn_with(addr, FleetOpts::default())
+    }
+
+    /// [`Self::spawn`] with an explicit heartbeat expiry.
+    pub fn spawn_with(addr: &str, opts: FleetOpts) -> io::Result<FleetServer> {
+        let listener = TcpListener::bind(addr)?;
+        let addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let handle = {
+            let stop = Arc::clone(&stop);
+            thread::spawn(move || fleet_accept_loop(listener, stop, opts))
+        };
+        Ok(FleetServer { addr, stop, handle: Some(handle) })
+    }
+
+    /// The bound socket address (with the real port for `:0` binds).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting, drop the listener, and join the accept loop.
+    pub fn shutdown(mut self) {
+        self.stop_and_join();
+    }
+
+    /// Block until the accept loop exits (a CLI controller's forever).
+    pub fn join(mut self) {
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+
+    fn stop_and_join(&mut self) {
+        if self.handle.is_none() {
+            return;
+        }
+        self.stop.store(true, Ordering::SeqCst);
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for FleetServer {
+    fn drop(&mut self) {
+        self.stop_and_join();
+    }
+}
+
+fn fleet_accept_loop(listener: TcpListener, stop: Arc<AtomicBool>, opts: FleetOpts) {
+    let registry: Arc<Mutex<BTreeMap<String, WorkerEntry>>> = Arc::new(Mutex::new(BTreeMap::new()));
+    let fingerprint = mapper_fingerprint();
+    let policy = ConnPolicy {
+        exchange_deadline: FLEET_EXCHANGE_DEADLINE,
+        idle_timeout: Duration::from_secs(60),
+        max_requests: 1024,
+    };
+    loop {
+        let stream = match listener.accept() {
+            Ok((stream, _)) => stream,
+            Err(_) => {
+                if stop.load(Ordering::SeqCst) {
+                    break;
+                }
+                thread::sleep(Duration::from_millis(50));
+                continue;
+            }
+        };
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        let registry = Arc::clone(&registry);
+        let fingerprint = fingerprint.clone();
+        thread::spawn(move || {
+            serve_exchanges(stream, &policy, |parsed| match parsed {
+                Ok(req) => fleet_route(req, &registry, &fingerprint, opts.expiry),
+                Err(e) => (e.status, err_doc(e.message.clone())),
+            });
+        });
+    }
+}
+
+fn fleet_route(
+    req: &Request,
+    registry: &Mutex<BTreeMap<String, WorkerEntry>>,
+    fingerprint: &str,
+    expiry: Duration,
+) -> (u16, Json) {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => (200, Json::obj([("ok", Json::Bool(true))])),
+        ("GET", "/workers") => (200, workers_doc(registry, fingerprint, expiry)),
+        ("POST", "/register") => handle_register(&req.body, registry, fingerprint, expiry),
+        ("GET", _) | ("POST", _) => (404, err_doc(format!("no such endpoint {:?}", req.path))),
+        _ => (405, err_doc(format!("method {:?} not allowed", req.method))),
+    }
+}
+
+/// The `GET /workers` listing: every registered worker whose most recent
+/// heartbeat is younger than the expiry, sorted by address, each carrying
+/// its age and last-reported stats document.
+fn workers_doc(
+    registry: &Mutex<BTreeMap<String, WorkerEntry>>,
+    fingerprint: &str,
+    expiry: Duration,
+) -> Json {
+    let now = Instant::now();
+    let reg = registry.lock().unwrap();
+    Json::obj([
+        ("expiry_s", Json::num(expiry.as_secs_f64())),
+        ("fingerprint", Json::str(fingerprint)),
+        (
+            "workers",
+            Json::arr(reg.iter().filter_map(|(addr, e)| {
+                let age = now.saturating_duration_since(e.last_seen);
+                if age >= expiry {
+                    return None;
+                }
+                Some(Json::obj([
+                    ("addr", Json::str(addr.clone())),
+                    ("age_s", Json::num(age.as_secs_f64())),
+                    ("heartbeats", Json::num(e.heartbeats as f64)),
+                    ("stats", e.stats.clone()),
+                ]))
+            })),
+        ),
+    ])
+}
+
+fn handle_register(
+    body: &[u8],
+    registry: &Mutex<BTreeMap<String, WorkerEntry>>,
+    fingerprint: &str,
+    expiry: Duration,
+) -> (u16, Json) {
+    let v = match Json::parse_bytes(body) {
+        Ok(v) => v,
+        Err(e) => return (400, err_doc(format!("bad registration: {e}"))),
+    };
+    let addr = match v.get("addr").and_then(Json::as_str).filter(|a| !a.is_empty()) {
+        Some(a) => a.to_string(),
+        None => return (400, err_doc("registration: missing 'addr'")),
+    };
+    match v.get("fingerprint").and_then(Json::as_str) {
+        Some(fp) if fp == fingerprint => {}
+        Some(fp) => {
+            // Reject at the door: a worker built from a divergent binary
+            // must never appear in a listing a dispatcher trusts.
+            return (
+                400,
+                Json::obj([
+                    ("code", Json::str(CODE_FINGERPRINT_MISMATCH)),
+                    (
+                        "error",
+                        Json::str(format!(
+                            "registration: mapper fingerprint {fp} does not match the \
+                             controller's {fingerprint} — mixed binaries in the fleet?"
+                        )),
+                    ),
+                ]),
+            );
+        }
+        None => return (400, err_doc("registration: missing 'fingerprint'")),
+    }
+    let stats = v.get("stats").cloned().unwrap_or(Json::Obj(BTreeMap::new()));
+    let now = Instant::now();
+    let mut reg = registry.lock().unwrap();
+    let entry = reg.entry(addr).or_insert(WorkerEntry { stats: Json::Obj(BTreeMap::new()), last_seen: now, heartbeats: 0 });
+    entry.stats = stats;
+    entry.last_seen = now;
+    entry.heartbeats += 1;
+    let live = reg
+        .values()
+        .filter(|e| now.saturating_duration_since(e.last_seen) < expiry)
+        .count();
+    (200, Json::obj([("registered", Json::Bool(true)), ("live_workers", Json::num(live as f64))]))
+}
+
+/// A worker's running heartbeat thread (see [`spawn_heartbeat`]). Stops
+/// and joins on [`Self::stop`] or drop.
+#[derive(Debug)]
+pub struct Heartbeat {
+    stop: Arc<AtomicBool>,
+    handle: Option<thread::JoinHandle<()>>,
+}
+
+impl Heartbeat {
+    /// Stop heartbeating and join the thread.
+    pub fn stop(mut self) {
+        self.stop_and_join();
+    }
+
+    fn stop_and_join(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Heartbeat {
+    fn drop(&mut self) {
+        self.stop_and_join();
+    }
+}
+
+/// Per-heartbeat request timeout: a heartbeat that cannot complete in a
+/// few seconds is as good as missed, and the next period retries anyway.
+const HEARTBEAT_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// Start a background thread that registers `advertise` with the fleet
+/// controller at `fleet_addr` every `period`, carrying the worker's live
+/// stats document from `stats`. Failures are ignored — a controller
+/// restart just costs a missed beat, and the worker reappears in the
+/// listing on the next successful one (that resumption is exactly how
+/// [`dispatch_elastic`] un-retires a worker).
+pub fn spawn_heartbeat(
+    fleet_addr: &str,
+    advertise: &str,
+    stats: WorkerStatsHandle,
+    period: Duration,
+) -> Heartbeat {
+    let fleet_addr = fleet_addr.to_string();
+    let advertise = advertise.to_string();
+    let period = period.max(Duration::from_millis(10));
+    let stop = Arc::new(AtomicBool::new(false));
+    let handle = {
+        let stop = Arc::clone(&stop);
+        thread::spawn(move || {
+            let fingerprint = mapper_fingerprint();
+            while !stop.load(Ordering::SeqCst) {
+                let body = Json::obj([
+                    ("addr", Json::str(advertise.clone())),
+                    ("fingerprint", Json::str(fingerprint.clone())),
+                    ("stats", stats.doc()),
+                ])
+                .to_string();
+                let _ = http_request(
+                    &fleet_addr,
+                    "POST",
+                    "/register",
+                    body.as_bytes(),
+                    HEARTBEAT_TIMEOUT,
+                );
+                // Sleep in small increments so stop (and drop) joins fast.
+                let deadline = Instant::now() + period;
+                while !stop.load(Ordering::SeqCst) && Instant::now() < deadline {
+                    thread::sleep(Duration::from_millis(20));
+                }
+            }
+        })
+    };
+    Heartbeat { stop, handle: Some(handle) }
+}
+
+/// Where [`dispatch_elastic`] gets its worker set.
+#[derive(Debug, Clone)]
+pub enum WorkerSource {
+    /// A fixed address list (the `--workers` shape, elastically driven:
+    /// workers still pause on failure and resume on recovery, there is
+    /// just no controller to admit new addresses mid-sweep).
+    Static(Vec<String>),
+    /// Poll a [`FleetServer`] at this address: the live worker set is
+    /// re-fetched every [`ElasticOpts::poll`], so late joiners are
+    /// admitted mid-sweep and expired workers pause until their
+    /// heartbeats resume.
+    Fleet(String),
+}
+
+/// Knobs for [`dispatch_elastic`].
+#[derive(Debug)]
+pub struct ElasticOpts {
+    /// Per-request timeout (connect, send, and receive each). Must exceed
+    /// the longest single-slice compute time.
+    pub timeout: Duration,
+    /// Worker-list refresh period, and the idle sleep of a runner with
+    /// nothing to do.
+    pub poll: Duration,
+    /// Smallest slice (points) handed to any worker (clamped to ≥ 1).
+    pub min_slice: usize,
+    /// Largest slice handed to the currently-fastest worker; slower
+    /// workers get proportionally smaller slices (clamped to ≥ 1).
+    pub max_slice: usize,
+    /// How long the dispatcher tolerates zero progress with work left
+    /// (no live worker, all workers failing) before erring out. This is
+    /// also how long it waits for a first worker to join an empty fleet.
+    pub grace: Duration,
+    /// Optional plan-cache snapshot shipped to each worker (`POST
+    /// /cache`) before its first slice. Unlike [`super::transport::dispatch`],
+    /// a failed prewarm pauses and retries the worker instead of retiring
+    /// it — only a fingerprint-mismatch rejection is fatal.
+    pub prewarm: Option<CacheSnapshot>,
+    /// Idle keep-alive connections the dispatcher's [`ConnPool`] keeps
+    /// per worker.
+    pub pool_conns: usize,
+    /// Optional persistent result store: stored points replay without
+    /// touching the network, computed points are saved back.
+    pub store: Option<ResultStore>,
+}
+
+impl Default for ElasticOpts {
+    fn default() -> Self {
+        ElasticOpts {
+            timeout: Duration::from_secs(120),
+            poll: Duration::from_millis(100),
+            min_slice: 1,
+            max_slice: 8,
+            grace: Duration::from_secs(60),
+            prewarm: None,
+            pool_conns: 2,
+            store: None,
+        }
+    }
+}
+
+/// What [`dispatch_elastic`] hands back alongside the assembled document.
+#[derive(Debug)]
+pub struct ElasticReport {
+    /// The full-sweep document — byte-identical to [`shard::run_full`] on
+    /// the same spec.
+    pub doc: Json,
+    /// Points computed by the fleet this run.
+    pub computed_points: usize,
+    /// Points replayed from the result store.
+    pub replayed_points: usize,
+    /// Slice requests that failed and were reassigned.
+    pub retries: usize,
+    /// Slice requests bounced by worker admission control and re-queued.
+    pub busy_retries: usize,
+    /// Points computed per worker, sorted by address.
+    pub per_worker: Vec<(String, usize)>,
+}
+
+/// How one slice fetch failed: `busy` is worker backpressure (re-queue,
+/// no strike), `fatal` is a fingerprint mismatch (mixed binaries — abort
+/// the sweep), anything else strikes the worker and reassigns the range.
+struct SliceFailure {
+    busy: bool,
+    fatal: bool,
+    message: String,
+}
+
+impl SliceFailure {
+    fn hard(message: String) -> SliceFailure {
+        SliceFailure { busy: false, fatal: false, message }
+    }
+}
+
+/// One validated slice fetch: POST the range order, require HTTP 200,
+/// parse the reply as a [`SliceResult`], and require it to describe
+/// exactly the requested range of exactly the requested sweep.
+fn fetch_slice(
+    pool: &ConnPool,
+    addr: &str,
+    spec: &SweepSpec,
+    start: usize,
+    len: usize,
+    timeout: Duration,
+) -> Result<SliceResult, SliceFailure> {
+    let order = SliceRequest { spec: spec.clone(), start, len };
+    let (status, doc) = pool
+        .request_json(addr, "POST", "/slice", order.to_json().to_string().as_bytes(), timeout)
+        .map_err(|e| SliceFailure::hard(e.message))?;
+    if status != 200 {
+        let detail = doc.get("error").and_then(Json::as_str).unwrap_or("unknown error");
+        let code = doc.get("code").and_then(Json::as_str);
+        return Err(SliceFailure {
+            busy: status == 503 && code == Some(CODE_WORKER_BUSY),
+            fatal: status == 400 && code == Some(CODE_FINGERPRINT_MISMATCH),
+            message: format!("{addr}: HTTP {status}: {detail}"),
+        });
+    }
+    let result = SliceResult::from_json(&doc)
+        .map_err(|e| SliceFailure::hard(format!("{addr}: invalid slice reply: {e}")))?;
+    if result.spec != *spec || result.start != start || result.points.len() != len {
+        return Err(SliceFailure::hard(format!(
+            "{addr}: reply covers points {}..{} of some sweep, not the requested {start}..{}",
+            result.start,
+            result.start + result.points.len(),
+            start + len
+        )));
+    }
+    Ok(result)
+}
+
+/// One elastic prewarm attempt. `Ok(true)`: warmed. `Ok(false)`: not yet
+/// — pause and retry later (the rejoin path). `Err`: fingerprint
+/// mismatch, fatal for the whole sweep.
+fn prewarm_elastic(
+    pool: &ConnPool,
+    addr: &str,
+    body: &[u8],
+    timeout: Duration,
+) -> Result<bool, String> {
+    match prewarm_worker(pool, addr, body, timeout) {
+        Ok((200, _)) => Ok(true),
+        Ok((400, reply)) => {
+            let mismatch = Json::parse_bytes(&reply)
+                .map(|v| v.get("code").and_then(Json::as_str) == Some(CODE_FINGERPRINT_MISMATCH))
+                .unwrap_or(false);
+            if mismatch {
+                Err(format!(
+                    "{addr}: rejected the cache snapshot (HTTP 400: {}) — mixed binaries in the fleet?",
+                    String::from_utf8_lossy(&reply)
+                ))
+            } else {
+                Ok(false)
+            }
+        }
+        Ok((_, _)) | Err(_) => Ok(false),
+    }
+}
+
+/// How polling the worker source failed. Fingerprint drift between the
+/// dispatcher and the controller is fatal; an unreachable controller is
+/// transient (the previous live set stays in effect).
+struct PollFailure {
+    fatal: bool,
+    message: String,
+}
+
+/// How long the dispatcher gives the controller to answer a `GET
+/// /workers` poll: listings are tiny, and a hung controller must not
+/// stall the supervisor for the (much longer) slice timeout.
+const FLEET_POLL_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// The current worker set. Static sources return their list unchanged;
+/// fleet sources `GET /workers` and cross-check the controller's
+/// fingerprint against this binary's (`expected`, computed once per
+/// sweep — fingerprinting maps probe layers and is too heavy for a poll
+/// loop).
+fn current_workers(
+    source: &WorkerSource,
+    pool: &ConnPool,
+    expected: &str,
+) -> Result<Vec<String>, PollFailure> {
+    match source {
+        WorkerSource::Static(ws) => Ok(ws.clone()),
+        WorkerSource::Fleet(addr) => {
+            let (status, doc) = pool
+                .request_json(addr, "GET", "/workers", b"", FLEET_POLL_TIMEOUT)
+                .map_err(|e| PollFailure { fatal: false, message: e.message })?;
+            if status != 200 {
+                return Err(PollFailure {
+                    fatal: false,
+                    message: format!("{addr}: fleet listing: HTTP {status}"),
+                });
+            }
+            match doc.get("fingerprint").and_then(Json::as_str) {
+                Some(fp) if fp == expected => {}
+                Some(fp) => {
+                    return Err(PollFailure {
+                        fatal: true,
+                        message: format!(
+                            "{addr}: fleet controller runs mapper fingerprint {fp}, this \
+                             dispatcher {expected} — mixed binaries?"
+                        ),
+                    })
+                }
+                None => {
+                    return Err(PollFailure {
+                        fatal: false,
+                        message: format!("{addr}: fleet listing carries no fingerprint"),
+                    })
+                }
+            }
+            Ok(doc
+                .get("workers")
+                .and_then(Json::as_arr)
+                .map(|ws| {
+                    ws.iter()
+                        .filter_map(|w| w.get("addr").and_then(Json::as_str))
+                        .map(str::to_string)
+                        .collect()
+                })
+                .unwrap_or_default())
+        }
+    }
+}
+
+/// Fan `spec` out over an elastic worker set and assemble the full
+/// document. See the module docs for the lifecycle; the short version:
+///
+/// 1. Stored points (when [`ElasticOpts::store`] is set) replay up front;
+///    only the gaps — coalesced into contiguous runs — are dispatched.
+/// 2. A supervisor polls the [`WorkerSource`] every [`ElasticOpts::poll`],
+///    spawning a runner thread for every address it has never seen and
+///    refreshing the live set. Runners whose address leaves the live set
+///    pause; they resume when it returns.
+/// 3. Each runner prewarms (with retry — never permanent retirement),
+///    then loops: probe `GET /stats` (feeding its round-trip EWMA), claim
+///    a slice sized by its latency relative to the fleet's fastest, `POST
+///    /slice`, validate, fill. Failures re-queue the range and back the
+///    worker off; `503` busy re-queues without a strike; a fingerprint
+///    mismatch anywhere aborts the sweep.
+/// 4. The sweep errs out when work remains, nothing is in flight, and no
+///    progress has been made for [`ElasticOpts::grace`].
+///
+/// The assembled document is byte-identical to [`shard::run_full`] for
+/// the same spec, whatever the churn.
+pub fn dispatch_elastic(
+    spec: &SweepSpec,
+    source: &WorkerSource,
+    opts: &ElasticOpts,
+) -> Result<ElasticReport, String> {
+    let resolved = spec.resolve()?;
+    let n = resolved.num_points();
+
+    // Replay pass: fill what the store already knows, before any network.
+    let mut slots: Vec<Option<PointRecord>> = match &opts.store {
+        Some(store) => (0..n).map(|i| store.load(spec, &resolved, i)).collect(),
+        None => (0..n).map(|_| None).collect(),
+    };
+    let replayed_points = slots.iter().filter(|s| s.is_some()).count();
+    let computed_points = n - replayed_points;
+
+    if computed_points > 0 {
+        // A static empty list can never compute anything; only a fully
+        // replayed sweep may run workerless.
+        if let WorkerSource::Static(ws) = source {
+            if ws.is_empty() {
+                return Err("dispatch: no workers given".to_string());
+            }
+        }
+        // Coalesce the missing indices into contiguous runs — the work
+        // queue the runners carve adaptive slices from.
+        let mut runs: VecDeque<(usize, usize)> = VecDeque::new();
+        for i in (0..n).filter(|&i| slots[i].is_none()) {
+            match runs.back_mut() {
+                Some((start, len)) if *start + *len == i => *len += 1,
+                _ => runs.push_back((i, 1)),
+            }
+        }
+
+        let pool = ConnPool::new(opts.pool_conns);
+        let expected_fingerprint = mapper_fingerprint();
+        let prewarm_body = opts.prewarm.as_ref().map(|snap| snap.to_json().to_string());
+        let min_slice = opts.min_slice.max(1);
+        let max_slice = opts.max_slice.max(min_slice);
+
+        let queue = Mutex::new(runs);
+        let slots_shared = Mutex::new(slots);
+        let remaining = AtomicUsize::new(computed_points);
+        let in_flight = AtomicUsize::new(0);
+        let retries = AtomicUsize::new(0);
+        let busy_retries = AtomicUsize::new(0);
+        let last_progress = Mutex::new(Instant::now());
+        let last_error: Mutex<Option<String>> = Mutex::new(None);
+        let fatal: Mutex<Option<String>> = Mutex::new(None);
+        let rtts: Mutex<BTreeMap<String, f64>> = Mutex::new(BTreeMap::new());
+        let served: Mutex<BTreeMap<String, usize>> = Mutex::new(BTreeMap::new());
+        let live: Mutex<BTreeSet<String>> = Mutex::new(BTreeSet::new());
+        let done = AtomicBool::new(false);
+
+        thread::scope(|s| {
+            let mut known: BTreeSet<String> = BTreeSet::new();
+            loop {
+                if remaining.load(Ordering::SeqCst) == 0 || fatal.lock().unwrap().is_some() {
+                    break;
+                }
+                match current_workers(source, &pool, &expected_fingerprint) {
+                    Ok(list) => {
+                        {
+                            let mut l = live.lock().unwrap();
+                            l.clear();
+                            l.extend(list.iter().cloned());
+                        }
+                        for w in list {
+                            if !known.insert(w.clone()) {
+                                continue;
+                            }
+                            let (pool, queue, slots_shared) = (&pool, &queue, &slots_shared);
+                            let (remaining, in_flight) = (&remaining, &in_flight);
+                            let (retries, busy_retries) = (&retries, &busy_retries);
+                            let (last_progress, last_error) = (&last_progress, &last_error);
+                            let (fatal, rtts, served, live) = (&fatal, &rtts, &served, &live);
+                            let done = &done;
+                            let prewarm_body = prewarm_body.as_deref();
+                            let resolved = &resolved;
+                            s.spawn(move || {
+                                elastic_runner(
+                                    w,
+                                    spec,
+                                    resolved,
+                                    opts,
+                                    (min_slice, max_slice),
+                                    pool,
+                                    prewarm_body,
+                                    queue,
+                                    slots_shared,
+                                    remaining,
+                                    in_flight,
+                                    retries,
+                                    busy_retries,
+                                    last_progress,
+                                    last_error,
+                                    fatal,
+                                    rtts,
+                                    served,
+                                    live,
+                                    done,
+                                );
+                            });
+                        }
+                    }
+                    Err(e) if e.fatal => {
+                        fatal.lock().unwrap().get_or_insert(e.message);
+                        break;
+                    }
+                    // Transient: keep the previous live set in effect.
+                    Err(e) => {
+                        *last_error.lock().unwrap() = Some(e.message);
+                    }
+                }
+                if in_flight.load(Ordering::SeqCst) == 0 {
+                    let idle = last_progress.lock().unwrap().elapsed();
+                    if idle > opts.grace {
+                        let left = remaining.load(Ordering::SeqCst);
+                        let detail = last_error
+                            .lock()
+                            .unwrap()
+                            .clone()
+                            .unwrap_or_else(|| "no worker made progress".to_string());
+                        fatal.lock().unwrap().get_or_insert(format!(
+                            "dispatch: {left} of {n} points unassigned after {:.1}s without \
+                             progress (last failure: {detail})",
+                            idle.as_secs_f64()
+                        ));
+                        break;
+                    }
+                }
+                thread::sleep(opts.poll);
+            }
+            done.store(true, Ordering::SeqCst);
+        });
+
+        if let Some(e) = fatal.into_inner().unwrap() {
+            return Err(e);
+        }
+        slots = slots_shared.into_inner().unwrap();
+        let records: Vec<PointRecord> = slots
+            .into_iter()
+            .map(|s| s.expect("remaining == 0 implies every slot is filled"))
+            .collect();
+        return Ok(ElasticReport {
+            doc: full_doc(spec, &records),
+            computed_points,
+            replayed_points,
+            retries: retries.load(Ordering::Relaxed),
+            busy_retries: busy_retries.load(Ordering::Relaxed),
+            per_worker: served.into_inner().unwrap().into_iter().collect(),
+        });
+    }
+
+    // Everything replayed: no fleet needed at all.
+    let records: Vec<PointRecord> =
+        slots.into_iter().map(|s| s.expect("replayed == n")).collect();
+    Ok(ElasticReport {
+        doc: full_doc(spec, &records),
+        computed_points: 0,
+        replayed_points,
+        retries: 0,
+        busy_retries: 0,
+        per_worker: Vec::new(),
+    })
+}
+
+/// One worker's runner loop (see [`dispatch_elastic`] step 3). The
+/// argument pile is the sweep's shared state, threaded as references so
+/// every runner sees one queue, one slot table, one live set.
+#[allow(clippy::too_many_arguments)]
+fn elastic_runner(
+    w: String,
+    spec: &SweepSpec,
+    resolved: &shard::ResolvedSweep,
+    opts: &ElasticOpts,
+    (min_slice, max_slice): (usize, usize),
+    pool: &ConnPool,
+    prewarm_body: Option<&str>,
+    queue: &Mutex<VecDeque<(usize, usize)>>,
+    slots: &Mutex<Vec<Option<PointRecord>>>,
+    remaining: &AtomicUsize,
+    in_flight: &AtomicUsize,
+    retries: &AtomicUsize,
+    busy_retries: &AtomicUsize,
+    last_progress: &Mutex<Instant>,
+    last_error: &Mutex<Option<String>>,
+    fatal: &Mutex<Option<String>>,
+    rtts: &Mutex<BTreeMap<String, f64>>,
+    served: &Mutex<BTreeMap<String, usize>>,
+    live: &Mutex<BTreeSet<String>>,
+    done: &AtomicBool,
+) {
+    let mut rtt = Ewma::new(RTT_ALPHA);
+    let mut strikes: u32 = 0;
+    let mut prewarmed = prewarm_body.is_none();
+    while !done.load(Ordering::SeqCst) {
+        // Paused while the live set excludes us (heartbeats expired).
+        // Resuming is just the set listing us again — the un-retire path.
+        if !live.lock().unwrap().contains(&w) {
+            thread::sleep(opts.poll);
+            continue;
+        }
+        if !prewarmed {
+            match prewarm_elastic(pool, &w, prewarm_body.unwrap_or_default().as_bytes(), opts.timeout) {
+                Ok(true) => {
+                    prewarmed = true;
+                    strikes = 0;
+                }
+                Ok(false) => {
+                    strikes = strikes.saturating_add(1);
+                    thread::sleep(strike_backoff(strikes));
+                    continue;
+                }
+                Err(e) => {
+                    fatal.lock().unwrap().get_or_insert(e);
+                    break;
+                }
+            }
+        }
+        // Probe the worker and feed its round-trip EWMA; the probe also
+        // doubles as a liveness check before claiming work.
+        let t0 = Instant::now();
+        match pool.request(&w, "GET", "/stats", b"", opts.timeout) {
+            Ok((200, _)) => {}
+            Ok((status, _)) => {
+                *last_error.lock().unwrap() = Some(format!("{w}: /stats: HTTP {status}"));
+                strikes = strikes.saturating_add(1);
+                thread::sleep(strike_backoff(strikes));
+                continue;
+            }
+            Err(e) => {
+                *last_error.lock().unwrap() = Some(e.message);
+                strikes = strikes.saturating_add(1);
+                thread::sleep(strike_backoff(strikes));
+                continue;
+            }
+        }
+        rtt.observe(t0.elapsed().as_secs_f64());
+        let mine = rtt.get().expect("observed above").max(1e-9);
+        let fastest = {
+            let mut m = rtts.lock().unwrap();
+            m.insert(w.clone(), mine);
+            m.values().fold(f64::INFINITY, |a, &b| a.min(b))
+        };
+        // Adaptive sizing: the fastest worker takes max_slice points, a
+        // worker k× slower takes a k× smaller bite (floored at min_slice).
+        let want = ((max_slice as f64) * (fastest / mine).clamp(0.0, 1.0)).round() as usize;
+        let want = want.clamp(min_slice, max_slice);
+
+        let claim = {
+            let mut q = queue.lock().unwrap();
+            match q.pop_front() {
+                None => None,
+                Some((start, len)) => {
+                    let take = want.min(len);
+                    if take < len {
+                        q.push_front((start + take, len - take));
+                    }
+                    Some((start, take))
+                }
+            }
+        };
+        let Some((start, len)) = claim else {
+            // Nothing unassigned right now; an in-flight failure may
+            // re-queue a range, so stay ready.
+            thread::sleep(opts.poll);
+            continue;
+        };
+        in_flight.fetch_add(1, Ordering::SeqCst);
+        let fetched = fetch_slice(pool, &w, spec, start, len, opts.timeout);
+        in_flight.fetch_sub(1, Ordering::SeqCst);
+        match fetched {
+            Ok(result) => {
+                {
+                    let mut sl = slots.lock().unwrap();
+                    for p in result.points {
+                        if let Some(store) = &opts.store {
+                            // Best-effort persistence: a full disk must
+                            // not fail the sweep the fleet just computed.
+                            let _ = store.save(spec, resolved, &p);
+                        }
+                        let i = p.index;
+                        sl[i] = Some(p);
+                    }
+                }
+                remaining.fetch_sub(len, Ordering::SeqCst);
+                *last_progress.lock().unwrap() = Instant::now();
+                *served.lock().unwrap().entry(w.clone()).or_insert(0) += len;
+                strikes = 0;
+            }
+            Err(f) if f.fatal => {
+                queue.lock().unwrap().push_front((start, len));
+                fatal.lock().unwrap().get_or_insert(f.message);
+                break;
+            }
+            Err(f) if f.busy => {
+                // Backpressure: re-queue without a strike, let another
+                // worker take it, breathe briefly.
+                queue.lock().unwrap().push_front((start, len));
+                busy_retries.fetch_add(1, Ordering::Relaxed);
+                thread::sleep(Duration::from_millis(20));
+            }
+            Err(f) => {
+                queue.lock().unwrap().push_front((start, len));
+                *last_error.lock().unwrap() = Some(f.message);
+                retries.fetch_add(1, Ordering::Relaxed);
+                strikes = strikes.saturating_add(1);
+                thread::sleep(strike_backoff(strikes));
+            }
+        }
+    }
+}

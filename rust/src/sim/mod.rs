@@ -23,7 +23,9 @@ pub mod artifacts;
 pub mod breakdown;
 pub mod dse;
 pub mod engine;
+pub mod fleet;
 pub mod shard;
+pub mod store;
 pub mod transport;
 
 pub use engine::{simulate_many, SweepEngine, SweepPoint};

@@ -1250,6 +1250,151 @@ impl ShardResult {
     }
 }
 
+/// A slice work order — the body of the transport's `POST /slice`
+/// request: an **arbitrary** contiguous point range of a sweep, where
+/// [`ShardRequest`] can only name one slice of a fixed balanced
+/// partition. The elastic dispatcher ([`crate::sim::fleet`]) sizes these
+/// ranges per worker from observed latency, and a store-backed sweep
+/// requests only the gaps the store cannot replay.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SliceRequest {
+    /// The sweep the range indexes into.
+    pub spec: SweepSpec,
+    /// First global point index of the range.
+    pub start: usize,
+    /// Number of points (>= 1).
+    pub len: usize,
+}
+
+impl SliceRequest {
+    /// Serialize to the canonical wire body, embedding this binary's
+    /// [`mapper_fingerprint`] like every shard document.
+    pub fn to_json(&self) -> Json {
+        Json::obj([
+            ("fingerprint", Json::str(mapper_fingerprint())),
+            ("spec", self.spec.to_json()),
+            ("start", Json::num(self.start as f64)),
+            ("len", Json::num(self.len as f64)),
+        ])
+    }
+
+    /// Parse a value produced by [`Self::to_json`], validating the
+    /// sender's mapper fingerprint and the range shape (`len >= 1`). The
+    /// range is checked against the spec's point count when the slice
+    /// actually runs ([`run_slice_prewarmed`] resolves the spec).
+    pub fn from_json(v: &Json) -> Result<SliceRequest, String> {
+        check_fingerprint(v, "slice request")?;
+        let spec = SweepSpec::from_json(v.get("spec").ok_or("slice request: missing 'spec'")?)?;
+        let start = v
+            .get("start")
+            .and_then(Json::as_i64)
+            .filter(|&s| s >= 0)
+            .ok_or("slice request: missing 'start'")? as usize;
+        let len = v
+            .get("len")
+            .and_then(Json::as_i64)
+            .filter(|&l| l >= 1)
+            .ok_or("slice request: missing positive 'len'")? as usize;
+        Ok(SliceRequest { spec, start, len })
+    }
+}
+
+/// The output of one slice: the requested range's records. The same
+/// validation discipline as [`ShardResult`] — fingerprint, index lineup,
+/// and per-record coordinate checks — applies on parse.
+#[derive(Debug, Clone)]
+pub struct SliceResult {
+    /// The sweep this slice belongs to.
+    pub spec: SweepSpec,
+    /// First global point index of the range.
+    pub start: usize,
+    /// Records for `start..start + points.len()`, in input order.
+    pub points: Vec<PointRecord>,
+}
+
+impl SliceResult {
+    /// Serialize to the slice reply document, embedding the computing
+    /// binary's [`mapper_fingerprint`].
+    pub fn to_json(&self) -> Json {
+        Json::obj([
+            ("fingerprint", Json::str(mapper_fingerprint())),
+            ("spec", self.spec.to_json()),
+            ("start", Json::num(self.start as f64)),
+            ("points", Json::arr(self.points.iter().map(|p| p.to_json(&self.spec.metrics)))),
+        ])
+    }
+
+    /// Parse and validate a document produced by [`Self::to_json`]: the
+    /// fingerprint must match this binary's, every record's global index
+    /// must line up with the declared start, and every record's echoed
+    /// coordinates must match the spec's enumeration at its index.
+    pub fn from_json(v: &Json) -> Result<SliceResult, String> {
+        check_fingerprint(v, "slice result")?;
+        let spec = SweepSpec::from_json(v.get("spec").ok_or("slice result: missing 'spec'")?)?;
+        let start = v
+            .get("start")
+            .and_then(Json::as_i64)
+            .filter(|&s| s >= 0)
+            .ok_or("slice result: missing 'start'")? as usize;
+        let points = v
+            .get("points")
+            .and_then(Json::as_arr)
+            .ok_or("slice result: missing 'points' array")?
+            .iter()
+            .map(|p| PointRecord::from_json(p, &spec.metrics))
+            .collect::<Result<Vec<PointRecord>, String>>()?;
+        for (k, p) in points.iter().enumerate() {
+            if p.index != start + k {
+                return Err(format!(
+                    "slice result: record {k} carries index {} but the slice starts at {start}",
+                    p.index
+                ));
+            }
+        }
+        let resolved =
+            spec.resolve().map_err(|e| format!("slice result: spec does not resolve: {e}"))?;
+        for p in &points {
+            p.check_coords(&resolved, "slice result")?;
+        }
+        Ok(SliceResult { spec, start, points })
+    }
+}
+
+/// Run the point range `start..start + len` on `engine` with the
+/// sweep-service prewarm discipline, returning its records — the
+/// arbitrary-range sibling of [`run_shard_prewarmed`], bit-identical to
+/// the same indices of the unsharded sweep.
+pub fn run_slice_prewarmed(
+    spec: &SweepSpec,
+    start: usize,
+    len: usize,
+    engine: &SweepEngine,
+) -> Result<SliceResult, String> {
+    if len == 0 {
+        return Err("slice: 'len' must be >= 1".to_string());
+    }
+    let resolved = spec.resolve()?;
+    let n = resolved.num_points();
+    if start + len > n {
+        return Err(format!(
+            "slice: range {start}..{} is outside the spec's {n} points",
+            start + len
+        ));
+    }
+    let points = resolved.points(start..start + len);
+    engine.prewarm(&points);
+    let reports = engine.run(&points);
+    Ok(SliceResult {
+        spec: spec.clone(),
+        start,
+        points: reports
+            .iter()
+            .enumerate()
+            .map(|(k, r)| PointRecord::from_report(start + k, &resolved.coords(start + k), r))
+            .collect(),
+    })
+}
+
 /// Run shard `shard_id` of `shards` on `engine`, returning its records.
 /// Deterministic: the slice is fixed by ([`shard_range`]) and every record
 /// is bit-identical to what the unsharded sweep computes for that index.

@@ -1,0 +1,285 @@
+//! Persistent, content-addressed sweep-result store.
+//!
+//! Sweep campaigns overlap heavily: a Fig. 6 spec and a Table VII spec
+//! share fixed-precision points, and re-running a campaign after adding
+//! one technology should only pay for the new column. A [`ResultStore`]
+//! makes every computed [`PointRecord`] durable under a key derived from
+//! **everything that determines its value** — the point's resolved
+//! physical identity (network, per-layer bits, hardware config, chip
+//! geometry, technology, batch), the spec's metric set, and this binary's
+//! [`mapper_fingerprint`] — so a later sweep whose enumeration visits the
+//! same physical point replays the stored record instead of simulating,
+//! no matter how the surrounding spec sliced its axes.
+//!
+//! Keying on the *point* rather than the whole spec is what makes overlap
+//! pay off, and keying on the mapper fingerprint is what makes the store
+//! safe: any change to the mapper's math changes the fingerprint, which
+//! changes every key, which silently invalidates the whole store — the
+//! same guard the shard wire protocol applies to documents in flight.
+//!
+//! Records are stored one file per point, named by an FNV-1a hash of the
+//! canonical key JSON, written atomically (temp file + rename) so
+//! concurrent writers — several dispatchers, or the elastic fleet's many
+//! runner threads — can share a directory without torn files. Every load
+//! re-verifies the full key text and the record's coordinates, so a hash
+//! collision or a foreign file degrades to a cache miss, never to a wrong
+//! record.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use super::engine::SweepEngine;
+use super::shard::{full_doc, PointRecord, ResolvedSweep, SweepSpec};
+use crate::mapper::cache::mapper_fingerprint;
+use crate::util::json::Json;
+
+/// 64-bit FNV-1a over a byte string (the store's file-name hash).
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// An on-disk store of computed sweep points, shared by `bf-imna sweep
+/// --store` and the elastic dispatcher (`dispatch --store`). See the
+/// module docs for the keying and durability contract.
+#[derive(Debug)]
+pub struct ResultStore {
+    dir: PathBuf,
+    /// This binary's mapper fingerprint, computed once — it goes into
+    /// every key.
+    fingerprint: String,
+    /// Distinguishes concurrent temp files within one process.
+    tmp_seq: AtomicU64,
+}
+
+impl ResultStore {
+    /// Open (creating if needed) a store rooted at `dir`.
+    pub fn open(dir: impl Into<PathBuf>) -> Result<ResultStore, String> {
+        let dir = dir.into();
+        fs::create_dir_all(&dir)
+            .map_err(|e| format!("store: cannot create {}: {e}", dir.display()))?;
+        Ok(ResultStore { dir, fingerprint: mapper_fingerprint(), tmp_seq: AtomicU64::new(0) })
+    }
+
+    /// The store's root directory.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// The canonical key text of point `i` of a resolved spec: a JSON
+    /// object over the point's full physical identity plus the spec's
+    /// metric set and the mapper fingerprint. Two specs that enumerate
+    /// the same physical point under the same metric set produce the
+    /// same key, whatever their axis slicing.
+    fn point_key(&self, spec: &SweepSpec, resolved: &ResolvedSweep, i: usize) -> String {
+        let coords = resolved.coords(i);
+        let point = resolved.point(i);
+        let geom = resolved
+            .chips
+            .iter()
+            .find(|g| g.name == coords.chip)
+            .expect("resolved spec names a chip geometry for every point");
+        Json::obj([
+            ("batch", Json::num(resolved.batch as f64)),
+            (
+                "bits",
+                Json::arr(point.cfg.per_layer.iter().map(|l| {
+                    Json::arr([Json::num(f64::from(l.w)), Json::num(f64::from(l.a))])
+                })),
+            ),
+            ("cfg", Json::str(coords.cfg)),
+            ("chip", geom.to_json()),
+            ("fingerprint", Json::str(self.fingerprint.clone())),
+            ("hw", Json::str(coords.hw)),
+            ("metrics", Json::arr(spec.metrics.names().into_iter().map(Json::str))),
+            ("net", Json::str(coords.net)),
+            ("tech", Json::str(coords.tech)),
+        ])
+        .to_string()
+    }
+
+    /// The file a key's record lives in.
+    fn path_for(&self, key: &str) -> PathBuf {
+        self.dir.join(format!("{:016x}.json", fnv1a(key.as_bytes())))
+    }
+
+    /// Load the stored record for point `i` of a resolved spec, or `None`
+    /// on any miss: no file, unreadable file, stored key text differing
+    /// from the expected key (hash collision / foreign file), or a record
+    /// whose coordinates no longer check out. The returned record carries
+    /// `index == i` — the stored copy is index-normalized, so the same
+    /// physical point replays into any spec position.
+    pub fn load(&self, spec: &SweepSpec, resolved: &ResolvedSweep, i: usize) -> Option<PointRecord> {
+        let key = self.point_key(spec, resolved, i);
+        let text = fs::read_to_string(self.path_for(&key)).ok()?;
+        let doc = Json::parse(&text).ok()?;
+        if doc.get("key").and_then(Json::as_str) != Some(key.as_str()) {
+            return None;
+        }
+        let mut record = PointRecord::from_json(doc.get("point")?, &spec.metrics).ok()?;
+        record.index = i;
+        record.check_coords(resolved, "store").ok()?;
+        Some(record)
+    }
+
+    /// Persist a computed record under its point key. The record's index
+    /// is normalized to 0 on disk (the key carries the physical identity;
+    /// the index is a spec-local position). Writes are atomic — a temp
+    /// file in the store directory renamed into place — so concurrent
+    /// savers of the same point leave one winner, never a torn file.
+    pub fn save(
+        &self,
+        spec: &SweepSpec,
+        resolved: &ResolvedSweep,
+        record: &PointRecord,
+    ) -> Result<(), String> {
+        let key = self.point_key(spec, resolved, record.index);
+        let mut normalized = record.clone();
+        normalized.index = 0;
+        let doc = Json::obj([
+            ("key", Json::str(key.clone())),
+            ("point", normalized.to_json(&spec.metrics)),
+        ]);
+        let tmp = self.dir.join(format!(
+            ".tmp-{}-{}",
+            std::process::id(),
+            self.tmp_seq.fetch_add(1, Ordering::Relaxed)
+        ));
+        let path = self.path_for(&key);
+        fs::write(&tmp, doc.to_string())
+            .map_err(|e| format!("store: cannot write {}: {e}", tmp.display()))?;
+        fs::rename(&tmp, &path)
+            .map_err(|e| format!("store: cannot commit {}: {e}", path.display()))
+    }
+}
+
+/// What a store-backed sweep did: the full document plus how much of it
+/// was real work.
+#[derive(Debug)]
+pub struct StoreOutcome {
+    /// The full-sweep document — byte-identical to [`super::shard::run_full`].
+    pub doc: Json,
+    /// Points actually simulated this run.
+    pub computed: usize,
+    /// Points replayed from the store.
+    pub replayed: usize,
+}
+
+/// Run a sweep against a [`ResultStore`]: replay every stored point,
+/// simulate only the gaps (prewarmed, like the sweep service), persist
+/// the newly computed records, and return the full document — which is
+/// byte-identical to [`super::shard::run_full`] for the same spec,
+/// because replayed records round-trip through the same canonical
+/// serialization the sweep writes.
+pub fn run_full_stored(
+    spec: &SweepSpec,
+    engine: &SweepEngine,
+    store: &ResultStore,
+) -> Result<StoreOutcome, String> {
+    let resolved = spec.resolve()?;
+    let n = resolved.num_points();
+    let mut slots: Vec<Option<PointRecord>> = Vec::with_capacity(n);
+    for i in 0..n {
+        slots.push(store.load(spec, &resolved, i));
+    }
+    let missing: Vec<usize> =
+        (0..n).filter(|&i| slots[i].is_none()).collect();
+    let computed = missing.len();
+    let replayed = n - computed;
+    if computed > 0 {
+        let points: Vec<_> = missing.iter().map(|&i| resolved.point(i)).collect();
+        engine.prewarm(&points);
+        let reports = engine.run(&points);
+        for (&i, r) in missing.iter().zip(&reports) {
+            let record = PointRecord::from_report(i, &resolved.coords(i), r);
+            store.save(spec, &resolved, &record)?;
+            slots[i] = Some(record);
+        }
+    }
+    let records: Vec<PointRecord> =
+        slots.into_iter().map(|s| s.expect("every slot filled")).collect();
+    Ok(StoreOutcome { doc: full_doc(spec, &records), computed, replayed })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::shard::{run_full, PrecisionGrid, SweepSpec};
+    use super::*;
+
+    fn spec(bits: Vec<u32>) -> SweepSpec {
+        SweepSpec::single(
+            "serve_cnn",
+            vec!["lr".to_string()],
+            vec!["sram".to_string(), "reram".to_string()],
+            PrecisionGrid::Fixed { bits },
+        )
+    }
+
+    fn temp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "bf-imna-store-{tag}-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn second_run_replays_every_point_byte_identically() {
+        let dir = temp_dir("replay");
+        let store = ResultStore::open(&dir).unwrap();
+        let engine = SweepEngine::serial();
+        let s = spec(vec![2, 3, 4, 5]);
+        let reference = run_full(&s, &engine).unwrap().to_string();
+
+        let first = run_full_stored(&s, &engine, &store).unwrap();
+        assert_eq!((first.computed, first.replayed), (8, 0));
+        assert_eq!(first.doc.to_string(), reference);
+
+        let second = run_full_stored(&s, &engine, &store).unwrap();
+        assert_eq!((second.computed, second.replayed), (0, 8));
+        assert_eq!(second.doc.to_string(), reference);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn overlapping_spec_computes_only_novel_points() {
+        let dir = temp_dir("overlap");
+        let store = ResultStore::open(&dir).unwrap();
+        let engine = SweepEngine::serial();
+        let first = run_full_stored(&spec(vec![2, 3, 4, 5]), &engine, &store).unwrap();
+        assert_eq!((first.computed, first.replayed), (8, 0));
+
+        // Bits 4 and 5 are shared (2 techs x 2 widths = 4 points); 6 is new.
+        let overlapping = spec(vec![4, 5, 6]);
+        let second = run_full_stored(&overlapping, &engine, &store).unwrap();
+        assert_eq!((second.computed, second.replayed), (2, 4));
+        assert_eq!(
+            second.doc.to_string(),
+            run_full(&overlapping, &engine).unwrap().to_string()
+        );
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_or_foreign_files_degrade_to_misses() {
+        let dir = temp_dir("corrupt");
+        let store = ResultStore::open(&dir).unwrap();
+        let engine = SweepEngine::serial();
+        let s = spec(vec![4]);
+        run_full_stored(&s, &engine, &store).unwrap();
+        for entry in fs::read_dir(&dir).unwrap() {
+            fs::write(entry.unwrap().path(), "not json").unwrap();
+        }
+        let rerun = run_full_stored(&s, &engine, &store).unwrap();
+        assert_eq!((rerun.computed, rerun.replayed), (2, 0));
+        assert_eq!(rerun.doc.to_string(), run_full(&s, &engine).unwrap().to_string());
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

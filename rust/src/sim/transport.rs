@@ -7,10 +7,13 @@
 //! document **byte-identically**. This module moves those documents over
 //! TCP instead of by hand:
 //!
-//! * [`WorkerServer`] — a worker process serving a four-endpoint protocol
+//! * [`WorkerServer`] — a worker process serving a five-endpoint protocol
 //!   over a dependency-free HTTP/1.1 layer (`std::net` only, the crate has
-//!   no deps by design): `POST /shard` runs one slice and replies with the
-//!   [`ShardResult`] document, `POST /cache` absorbs a shipped
+//!   no deps by design): `POST /shard` runs one fixed-partition slice and
+//!   replies with the [`ShardResult`] document, `POST /slice` runs an
+//!   arbitrary contiguous point range (the elastic dispatcher's
+//!   adaptive-sizing work unit — see [`super::fleet`]), `POST /cache`
+//!   absorbs a shipped
 //!   [`CacheSnapshot`] (prewarm over the wire), `GET /healthz` and
 //!   `GET /stats` expose liveness, cache hit/miss counters, and the shard
 //!   admission state. `POST /shard` sits behind **admission control**
@@ -39,8 +42,10 @@
 //! side (a protocol error also closes: framing is lost). Clients reuse
 //! sockets through a shared [`ConnPool`]: health-checked reuse (leftover
 //! unread bytes or a readable EOF disqualify a pooled socket), one
-//! fresh-connection retry when a reused socket turns out stale, and a
-//! bounded idle set per address. Bodies are canonical JSON from
+//! fresh-connection retry when a reused socket turns out stale **and**
+//! the failure proves the request never executed (non-idempotent
+//! requests are never transparently sent twice), and a bounded idle set
+//! per address. Bodies are canonical JSON from
 //! [`crate::util::json`]'s writer. Malformed requests get clean
 //! `4xx`/`5xx` replies — the parser never panics on hostile input, and
 //! header/body sizes are hard-capped ([`MAX_HEAD_BYTES`] /
@@ -65,7 +70,7 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::thread;
 use std::time::{Duration, Instant};
 
-use super::shard::{self, ShardRequest, ShardResult, SweepSpec};
+use super::shard::{self, ShardRequest, ShardResult, SliceRequest, SweepSpec};
 use super::SweepEngine;
 use crate::mapper::CacheSnapshot;
 use crate::util::json::{read_json_exact, Json};
@@ -532,14 +537,31 @@ pub struct PoolStats {
     pub fresh_connects: usize,
     /// Exchanges served over a reused pooled connection.
     pub reuses: usize,
-    /// Reused-connection exchanges that failed mid-flight (the server
-    /// closed or restarted while the socket sat idle) and fell back to a
-    /// fresh connection.
+    /// Reused-connection exchanges whose failure proved the request never
+    /// executed (failed write, pre-response reset, or a clean EOF on an
+    /// idempotent request) and so fell back to a fresh connection.
+    /// Post-write failures of non-idempotent requests are **not** counted
+    /// here — they propagate to the caller instead of being retried.
     pub stale_retries: usize,
     /// Healthy sockets closed on return because the per-address idle list
     /// was already full — a persistently non-zero rate means the pool is
     /// sized below the caller's real concurrency.
     pub discards: usize,
+}
+
+/// How one pooled exchange failed. `retry_safe` marks failures that prove
+/// the server cannot have *executed* the request: the write never fully
+/// left (an incomplete `Content-Length` frame is a protocol error on the
+/// server, never work), the socket was reset before any response byte
+/// arrived (the peer had torn the connection down before our bytes got
+/// there), or the peer cleanly EOF'd an **idempotent** request. Only
+/// those may transparently retry on a fresh connection — a clean EOF
+/// after a fully-written POST, a timeout, or any failure after the first
+/// response byte may all follow an execution, and retrying would run the
+/// request twice.
+struct ExchangeError {
+    retry_safe: bool,
+    message: String,
 }
 
 /// A pooled keep-alive connection: the buffered reader persists between
@@ -580,12 +602,16 @@ impl PooledConn {
 /// [`Self::request`] reuses an idle pooled socket when one is available
 /// and healthy, falling back to a fresh connect otherwise. Health is
 /// checked *before* reuse ([`PooledConn::is_healthy`]), and a reuse that
-/// still fails mid-exchange — the server restarted or idle-timed the
-/// socket out between our check and the write — is retried **once** on a
-/// fresh connection before the error propagates, so callers never see a
-/// spurious failure from a stale socket. At most `max_idle_per_addr`
-/// idle sockets are kept per address; extras are simply closed on
-/// return. The pool is `Sync`: dispatch's per-worker threads share one.
+/// still fails — the server restarted or idle-timed the socket out
+/// between our check and the write — is retried **once** on a fresh
+/// connection, but only when the failure proves the request never
+/// executed: the write failed, the socket was reset before any response
+/// byte, or an idempotent `GET` hit a clean EOF. A post-write failure on
+/// a non-idempotent request propagates instead — the server may already
+/// have run it, and a transparent retry would run it twice. At most
+/// `max_idle_per_addr` idle sockets are kept per address; extras are
+/// simply closed on return. The pool is `Sync`: dispatch's per-worker
+/// threads share one.
 ///
 /// ```no_run
 /// use std::time::Duration;
@@ -677,26 +703,29 @@ impl ConnPool {
         timeout: Duration,
         parse: impl Fn(&mut BufReader<DeadlineStream>, usize) -> Result<T, String>,
     ) -> Result<(u16, T), PoolError> {
-        // Try a pooled socket first. Any failure on a reused socket is
-        // indistinguishable from the server having closed it while idle
-        // (our health check raced its idle timer), so it falls through to
-        // exactly one fresh-connection retry instead of propagating.
+        // Try a pooled socket first. A reused socket may have been closed
+        // by the server while it sat idle (our health check raced its idle
+        // timer) — but a non-idempotent request must never run twice, so
+        // only failures that *prove* the server cannot have executed the
+        // request (see `ExchangeError::retry_safe`) fall through to the
+        // one fresh-connection retry; everything else propagates.
         if let Some(conn) = self.take_healthy(addr) {
             match self.try_exchange(conn, addr, method, path, body, timeout, &parse) {
                 Ok(ok) => {
                     self.reuses.fetch_add(1, Ordering::Relaxed);
                     return Ok(ok);
                 }
-                Err(_) => {
+                Err(e) if e.retry_safe => {
                     self.stale_retries.fetch_add(1, Ordering::Relaxed);
                 }
+                Err(e) => return Err(PoolError { refused: false, message: e.message }),
             }
         }
         let stream = connect(addr, timeout)?;
         self.fresh_connects.fetch_add(1, Ordering::Relaxed);
         let conn = PooledConn { reader: BufReader::new(DeadlineStream::new(stream, timeout)) };
         self.try_exchange(conn, addr, method, path, body, timeout, &parse)
-            .map_err(|message| PoolError { refused: false, message })
+            .map_err(|e| PoolError { refused: false, message: e.message })
     }
 
     fn try_exchange<T>(
@@ -708,13 +737,55 @@ impl ConnPool {
         body: &[u8],
         timeout: Duration,
         parse: &impl Fn(&mut BufReader<DeadlineStream>, usize) -> Result<T, String>,
-    ) -> Result<(u16, T), String> {
+    ) -> Result<(u16, T), ExchangeError> {
         conn.reader.get_mut().rearm(timeout);
-        write_request_conn(conn.reader.get_mut(), method, path, addr, body, false)
-            .map_err(|e| format!("{addr}: send failed: {e}"))?;
+        // A failed or partial write is provably unexecuted: the server
+        // frames requests by `Content-Length`, so a truncated body parses
+        // as a 4xx protocol error there, never as work.
+        write_request_conn(conn.reader.get_mut(), method, path, addr, body, false).map_err(|e| {
+            ExchangeError { retry_safe: true, message: format!("{addr}: send failed: {e}") }
+        })?;
+        // Probe for the first response byte before parsing, so an
+        // empty-response failure can be classified precisely:
+        //  * a reset means the socket was already dead when our request
+        //    arrived — provably unexecuted, safe to retry;
+        //  * a clean EOF means the server read the request and then
+        //    closed — it may have executed it first, so only idempotent
+        //    GETs retry;
+        //  * any byte means the response started: from here on, every
+        //    failure propagates (the request definitely ran).
+        let first = loop {
+            match conn.reader.fill_buf() {
+                Ok(buf) => break Ok(buf.len()),
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(e) => break Err(e),
+            }
+        };
+        match first {
+            Ok(0) => {
+                return Err(ExchangeError {
+                    retry_safe: method == "GET",
+                    message: format!("{addr}: connection closed before any response byte"),
+                })
+            }
+            Ok(_) => {}
+            Err(e) => {
+                let reset = matches!(
+                    e.kind(),
+                    io::ErrorKind::ConnectionReset
+                        | io::ErrorKind::ConnectionAborted
+                        | io::ErrorKind::BrokenPipe
+                );
+                return Err(ExchangeError {
+                    retry_safe: reset,
+                    message: format!("{addr}: response read failed: {e}"),
+                });
+            }
+        }
+        let fatal = |message: String| ExchangeError { retry_safe: false, message };
         let (status, len, close) =
-            read_response_head(&mut conn.reader).map_err(|e| format!("{addr}: {e}"))?;
-        let parsed = parse(&mut conn.reader, len).map_err(|e| format!("{addr}: {e}"))?;
+            read_response_head(&mut conn.reader).map_err(|e| fatal(format!("{addr}: {e}")))?;
+        let parsed = parse(&mut conn.reader, len).map_err(|e| fatal(format!("{addr}: {e}")))?;
         if !close {
             self.put_back(addr, conn);
         }
@@ -951,6 +1022,27 @@ pub struct WorkerServer {
     stop: Arc<AtomicBool>,
     handle: Option<thread::JoinHandle<()>>,
     engine: Arc<SweepEngine>,
+    stats: Arc<WorkerStats>,
+    gate: Arc<AdmissionGate>,
+}
+
+/// A cheap, thread-safe view of a live worker's stats — what a fleet
+/// heartbeat embeds in its `POST /register` body. Obtained from
+/// [`WorkerServer::stats_handle`]; stays valid (the counters just stop
+/// moving) after the server shuts down.
+#[derive(Debug, Clone)]
+pub struct WorkerStatsHandle {
+    engine: Arc<SweepEngine>,
+    stats: Arc<WorkerStats>,
+    gate: Arc<AdmissionGate>,
+}
+
+impl WorkerStatsHandle {
+    /// The worker's live stats document — the same shape `GET /stats`
+    /// serves (counters, cache hit/miss/entries, shards in flight).
+    pub fn doc(&self) -> Json {
+        stats_doc(&self.engine, &self.stats, &self.gate)
+    }
 }
 
 impl WorkerServer {
@@ -969,6 +1061,7 @@ impl WorkerServer {
         let addr = listener.local_addr()?;
         let engine = Arc::new(engine);
         let stop = Arc::new(AtomicBool::new(false));
+        let stats = Arc::new(WorkerStats::default());
         let gate = Arc::new(AdmissionGate::new(opts.max_concurrent_shards, opts.admission_queue));
         let policy = ConnPolicy {
             exchange_deadline: WORKER_EXCHANGE_DEADLINE,
@@ -978,14 +1071,26 @@ impl WorkerServer {
         let handle = {
             let engine = Arc::clone(&engine);
             let stop = Arc::clone(&stop);
-            thread::spawn(move || accept_loop(listener, engine, stop, gate, policy))
+            let stats = Arc::clone(&stats);
+            let gate = Arc::clone(&gate);
+            thread::spawn(move || accept_loop(listener, engine, stop, stats, gate, policy))
         };
-        Ok(WorkerServer { addr, stop, handle: Some(handle), engine })
+        Ok(WorkerServer { addr, stop, handle: Some(handle), engine, stats, gate })
     }
 
     /// The bound socket address (with the real port for `:0` binds).
     pub fn addr(&self) -> SocketAddr {
         self.addr
+    }
+
+    /// A detachable view of this worker's stats counters — what the fleet
+    /// heartbeat thread reads without holding a borrow of the server.
+    pub fn stats_handle(&self) -> WorkerStatsHandle {
+        WorkerStatsHandle {
+            engine: Arc::clone(&self.engine),
+            stats: Arc::clone(&self.stats),
+            gate: Arc::clone(&self.gate),
+        }
     }
 
     /// The worker's engine — shared with in-flight handlers, so its cache
@@ -1033,10 +1138,10 @@ fn accept_loop(
     listener: TcpListener,
     engine: Arc<SweepEngine>,
     stop: Arc<AtomicBool>,
+    stats: Arc<WorkerStats>,
     gate: Arc<AdmissionGate>,
     policy: ConnPolicy,
 ) {
-    let stats = Arc::new(WorkerStats::default());
     loop {
         let stream = match listener.accept() {
             Ok((stream, _)) => stream,
@@ -1098,6 +1203,7 @@ fn route(
         ("GET", "/healthz") => (200, Json::obj([("ok", Json::Bool(true))])),
         ("GET", "/stats") => (200, stats_doc(engine, stats, gate)),
         ("POST", "/shard") => handle_shard(&req.body, engine, stats, gate),
+        ("POST", "/slice") => handle_slice(&req.body, engine, stats, gate),
         ("POST", "/cache") => handle_cache(&req.body, engine, stats),
         ("GET", _) | ("POST", _) => (404, err_doc(format!("no such endpoint {:?}", req.path))),
         _ => (405, err_doc(format!("method {:?} not allowed", req.method))),
@@ -1168,6 +1274,67 @@ fn handle_shard(
         );
     };
     let result = shard::run_shard_prewarmed(&req.spec, req.shards, req.shard_id, engine);
+    drop(permit);
+    match result {
+        Ok(result) => {
+            stats.shards_served.fetch_add(1, Ordering::Relaxed);
+            stats.points_served.fetch_add(result.points.len(), Ordering::Relaxed);
+            (200, result.to_json())
+        }
+        Err(e) => (400, err_doc(e)),
+    }
+}
+
+/// `POST /slice` — the elastic dispatcher's work unit: an arbitrary
+/// contiguous point range instead of a fixed `shards`/`shard_id`
+/// partition, so slice sizes can adapt to each worker's observed latency.
+/// Shares the shard endpoint's admission gate: a slice and a shard are
+/// the same kind of compute, and one budget covers both.
+fn handle_slice(
+    body: &[u8],
+    engine: &SweepEngine,
+    stats: &WorkerStats,
+    gate: &Arc<AdmissionGate>,
+) -> (u16, Json) {
+    let parsed = Json::parse_bytes(body)
+        .map_err(|e| format!("bad slice request: {e}"))
+        .and_then(|v| SliceRequest::from_json(&v));
+    let req = match parsed {
+        Ok(req) => req,
+        Err(e) => {
+            stats.protocol_errors.fetch_add(1, Ordering::Relaxed);
+            // A fingerprint mismatch is tagged with its machine-readable
+            // code, like the cache endpoint: the elastic dispatcher must
+            // tell "mixed binaries" (fatal) from a mangled body (retry).
+            if e.contains("fingerprint") {
+                return (
+                    400,
+                    Json::obj([
+                        ("code", Json::str(CODE_FINGERPRINT_MISMATCH)),
+                        ("error", Json::str(e)),
+                    ]),
+                );
+            }
+            return (400, err_doc(e));
+        }
+    };
+    let Some(permit) = AdmissionGate::admit(gate) else {
+        stats.busy_rejections.fetch_add(1, Ordering::Relaxed);
+        return (
+            503,
+            Json::obj([
+                ("code", Json::str(CODE_WORKER_BUSY)),
+                (
+                    "error",
+                    Json::str(format!(
+                        "worker at capacity: {} shard(s) computing and the admission queue is full",
+                        gate.running()
+                    )),
+                ),
+            ]),
+        );
+    };
+    let result = shard::run_slice_prewarmed(&req.spec, req.start, req.len, engine);
     drop(permit);
     match result {
         Ok(result) => {
@@ -1489,8 +1656,10 @@ const PREWARM_REFUSED_BACKOFF: [Duration; 5] = [
 /// One prewarm `POST /cache`, with refused connects retried on the
 /// [`PREWARM_REFUSED_BACKOFF`] schedule. Only `refused` failures retry:
 /// a timeout already consumed its full budget, and any HTTP reply means
-/// the listener is up.
-fn prewarm_worker(
+/// the listener is up. Shared with the elastic dispatcher
+/// ([`super::fleet`]), whose rejoin path retries failed prewarms instead
+/// of retiring the worker.
+pub(crate) fn prewarm_worker(
     pool: &ConnPool,
     addr: &str,
     body: &[u8],

@@ -30,8 +30,8 @@ fn help_covers_every_command_and_sweep_service_flag() {
     assert!(out.status.success());
     let text = stdout(&out);
     for cmd in [
-        "simulate", "sweep", "merge", "serve-worker", "dispatch", "artifacts", "render", "hawq",
-        "compare", "validate", "serve", "infer", "loadgen",
+        "simulate", "sweep", "merge", "serve-worker", "fleet", "dispatch", "artifacts", "render",
+        "hawq", "compare", "validate", "serve", "infer", "loadgen",
     ] {
         assert!(text.contains(cmd), "help does not mention command '{cmd}'");
     }
@@ -44,12 +44,17 @@ fn help_covers_every_command_and_sweep_service_flag() {
         "--max-shards", "--queue-depth", "--budget", "--deadline-ms", "--priority",
         "--batch-hint", "--time-scale", "--stats", "--max-requests", "--idle-timeout-s",
         "--conn-requests", "--pool", "--count", "--batch", "--rps", "--duration-s", "--profile",
+        "--fleet", "--store", "--advertise", "--heartbeat-s", "--expiry-s", "--max-slice",
+        "--grace-s",
     ] {
         assert!(text.contains(flag), "help does not mention flag '{flag}'");
     }
     // The worker's and serving front end's endpoints are operator-facing
     // API; keep them in help.
-    for endpoint in ["/shard", "/cache", "/healthz", "/stats", "/infer", "/metrics"] {
+    for endpoint in
+        ["/shard", "/slice", "/cache", "/healthz", "/stats", "/infer", "/metrics", "/register",
+         "/workers"]
+    {
         assert!(text.contains(endpoint), "help does not mention endpoint '{endpoint}'");
     }
     // No args behaves like help.

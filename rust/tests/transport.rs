@@ -18,16 +18,28 @@
 //! exceed the per-connection request cap, servers that restart under a
 //! pooled client, and workers that die mid-pipeline — the merged bytes
 //! must never change.
+//!
+//! The fleet-churn suite does the same to the elastic dispatcher
+//! (`sim::fleet`): workers leaving mid-sweep, workers joining mid-sweep,
+//! fingerprint-mismatched workers bounced at registration, and
+//! store-backed re-runs that must compute only novel points — all
+//! byte-identical to `shard::run_full`. It also pins the pooled-retry
+//! contract: a non-idempotent request that fails *after* its bytes
+//! reached a reused socket is never silently re-executed.
 
 use std::io::{Read, Write};
 use std::net::{Shutdown, TcpListener, TcpStream};
 use std::thread;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
+use bf_imna::sim::fleet::{
+    dispatch_elastic, spawn_heartbeat, ElasticOpts, FleetOpts, FleetServer, WorkerSource,
+};
 use bf_imna::sim::shard::{self, PrecisionGrid, ShardRequest, ShardResult, SweepSpec};
+use bf_imna::sim::store::ResultStore;
 use bf_imna::sim::transport::{
     dispatch, http_request, http_request_json, read_response, write_request_conn, ConnPool,
-    DispatchOpts, WorkerOpts, WorkerServer, CODE_WORKER_BUSY,
+    DispatchOpts, WorkerOpts, WorkerServer, CODE_FINGERPRINT_MISMATCH, CODE_WORKER_BUSY,
 };
 use bf_imna::sim::SweepEngine;
 use bf_imna::util::json::Json;
@@ -776,4 +788,387 @@ fn prewarm_retries_refused_connects_while_a_worker_binds() {
     let served: usize = report.per_worker.iter().map(|(_, n)| n).sum();
     assert_eq!(served, 3, "the late worker serves the whole sweep: {:?}", report.per_worker);
     late.join().expect("late-bind thread").shutdown();
+}
+
+// ---- pooled-retry safety (the double-execute regression) ---------------
+
+#[test]
+fn reused_connection_post_failure_after_write_is_not_retried() {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+
+    // A server that serves one keep-alive POST on its first connection,
+    // reads the *second* request fully — the point where it may have
+    // executed it — and drops the socket without a byte of reply. Every
+    // request that reaches the server is counted, and later connections
+    // are served normally: if the pool (incorrectly) replayed the failed
+    // POST on a fresh connection, the count would reach 3.
+    let executed = Arc::new(AtomicUsize::new(0));
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind counting server");
+    let addr = listener.local_addr().unwrap().to_string();
+    {
+        let executed = Arc::clone(&executed);
+        thread::spawn(move || {
+            if let Ok((mut s, _)) = listener.accept() {
+                if read_request_head(&mut s) {
+                    executed.fetch_add(1, Ordering::SeqCst);
+                    let _ = s.write_all(KEEPALIVE_200);
+                }
+                if read_request_head(&mut s) {
+                    executed.fetch_add(1, Ordering::SeqCst);
+                    // Fully received, then dropped before any reply byte.
+                }
+            }
+            while let Ok((mut s, _)) = listener.accept() {
+                while read_request_head(&mut s) {
+                    executed.fetch_add(1, Ordering::SeqCst);
+                    if s.write_all(KEEPALIVE_200).is_err() {
+                        break;
+                    }
+                }
+            }
+        });
+    }
+
+    let pool = ConnPool::new(2);
+    let (status, _) =
+        pool.request(&addr, "POST", "/task", b"", Duration::from_secs(10)).expect("first POST");
+    assert_eq!(status, 200);
+    // The reused connection dies after the request bytes are out: the
+    // server cannot be proven innocent of executing it, so the pool must
+    // surface the failure instead of replaying a non-idempotent request.
+    let err = pool
+        .request(&addr, "POST", "/task", b"", Duration::from_secs(10))
+        .expect_err("a POST that failed after the write must error, not silently retry");
+    assert!(!err.refused, "{err:?}");
+    // Give a wrong implementation a moment to run the retry it shouldn't.
+    thread::sleep(Duration::from_millis(100));
+    assert_eq!(
+        executed.load(Ordering::SeqCst),
+        2,
+        "the failed POST was re-executed on a fresh connection"
+    );
+    let ps = pool.stats();
+    assert_eq!(ps.stale_retries, 0, "a post-write POST failure is not retry-safe: {ps:?}");
+    assert_eq!(ps.fresh_connects, 1, "{ps:?}");
+}
+
+#[test]
+fn reused_connection_get_clean_eof_is_retried_on_a_fresh_connection() {
+    // The mirror image: the same stale-socket shape (full request read,
+    // clean close, zero response bytes) on an idempotent GET *is* the
+    // race the pool exists to absorb — one transparent retry on a fresh
+    // connection.
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind restarting server");
+    let addr = listener.local_addr().unwrap().to_string();
+    thread::spawn(move || {
+        if let Ok((mut s, _)) = listener.accept() {
+            if read_request_head(&mut s) {
+                let _ = s.write_all(KEEPALIVE_200);
+            }
+            let _ = read_request_head(&mut s);
+            // Clean close mid-pipeline: the idle-timer race.
+        }
+        if let Ok((mut s, _)) = listener.accept() {
+            while read_request_head(&mut s) {
+                if s.write_all(KEEPALIVE_200).is_err() {
+                    return;
+                }
+            }
+        }
+    });
+
+    let pool = ConnPool::new(2);
+    let (status, _) =
+        pool.request(&addr, "GET", "/ping", b"", Duration::from_secs(10)).expect("first GET");
+    assert_eq!(status, 200);
+    let (status, _) = pool
+        .request(&addr, "GET", "/ping", b"", Duration::from_secs(10))
+        .expect("the stale GET retries transparently");
+    assert_eq!(status, 200);
+    let ps = pool.stats();
+    assert_eq!(ps.stale_retries, 1, "{ps:?}");
+    assert_eq!(ps.fresh_connects, 2, "{ps:?}");
+}
+
+// ---- elastic fleet: registration, heartbeats, churn, and the store -----
+
+/// Wait (bounded) until the controller's `GET /workers` listing satisfies
+/// `pred`, returning the workers array.
+fn wait_for_listing(
+    fleet_addr: &str,
+    pred: impl Fn(&[Json]) -> bool,
+    what: &str,
+) -> Vec<Json> {
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let (status, listing) =
+            http_request_json(fleet_addr, "GET", "/workers", b"", Duration::from_secs(10))
+                .expect("GET /workers");
+        assert_eq!(status, 200, "{listing}");
+        let workers = listing.get("workers").and_then(Json::as_arr).unwrap_or(&[]).to_vec();
+        if pred(&workers) {
+            return workers;
+        }
+        assert!(Instant::now() < deadline, "timed out waiting for {what}: {listing}");
+        thread::sleep(Duration::from_millis(20));
+    }
+}
+
+#[test]
+fn fleet_controller_registers_heartbeats_and_expires_silent_workers() {
+    let fleet = FleetServer::spawn_with(
+        "127.0.0.1:0",
+        FleetOpts { expiry: Duration::from_millis(400) },
+    )
+    .expect("bind fleet controller");
+    let fleet_addr = fleet.addr().to_string();
+
+    // A fingerprint-mismatched worker is rejected at the door with the
+    // machine-readable code — it must never enter a listing a dispatcher
+    // trusts.
+    let bogus = Json::obj([
+        ("addr", Json::str("127.0.0.1:9")),
+        ("fingerprint", Json::str("not-this-binary")),
+    ])
+    .to_string();
+    let (status, reply) = http_request_json(
+        &fleet_addr,
+        "POST",
+        "/register",
+        bogus.as_bytes(),
+        Duration::from_secs(10),
+    )
+    .expect("bogus register");
+    assert_eq!(status, 400, "{reply}");
+    assert_eq!(
+        reply.get("code").and_then(Json::as_str),
+        Some(CODE_FINGERPRINT_MISMATCH),
+        "{reply}"
+    );
+
+    // So is a registration without an address.
+    let (status, _) =
+        http_request_json(&fleet_addr, "POST", "/register", b"{}", Duration::from_secs(10))
+            .expect("empty register");
+    assert_eq!(status, 400);
+    assert!(
+        wait_for_listing(&fleet_addr, |ws| ws.is_empty(), "an empty listing").is_empty()
+    );
+
+    // A real worker heartbeating in appears, carrying its live stats.
+    let worker = spawn_workers(1).remove(0);
+    let advertise = worker.addr().to_string();
+    let hb = spawn_heartbeat(
+        &fleet_addr,
+        &advertise,
+        worker.stats_handle(),
+        Duration::from_millis(50),
+    );
+    let listed = wait_for_listing(&fleet_addr, |ws| !ws.is_empty(), "the worker to register");
+    assert_eq!(listed[0].get("addr").and_then(Json::as_str), Some(advertise.as_str()));
+    assert!(
+        listed[0].get("stats").and_then(|s| s.get("cache")).is_some(),
+        "listing carries no stats: {:?}",
+        listed[0]
+    );
+
+    // Silence the heartbeat: past the expiry the worker leaves the
+    // listing (which is what pauses it at an elastic dispatcher)...
+    hb.stop();
+    wait_for_listing(&fleet_addr, |ws| ws.is_empty(), "the silent worker to expire");
+
+    // ...and a resumed heartbeat brings the same address straight back —
+    // the un-retire path.
+    let hb = spawn_heartbeat(
+        &fleet_addr,
+        &advertise,
+        worker.stats_handle(),
+        Duration::from_millis(50),
+    );
+    wait_for_listing(&fleet_addr, |ws| !ws.is_empty(), "the worker to rejoin");
+    hb.stop();
+    worker.shutdown();
+    fleet.shutdown();
+}
+
+/// A slightly wider sweep for churn tests: 2 techs x 6 widths = 12 points,
+/// so a mid-sweep worker swap has points left to serve.
+fn churn_spec() -> SweepSpec {
+    SweepSpec::single(
+        "serve_cnn",
+        vec!["lr".to_string()],
+        vec!["sram".to_string(), "reram".to_string()],
+        PrecisionGrid::Fixed { bits: vec![2, 3, 4, 5, 6, 7] },
+    )
+}
+
+#[test]
+fn elastic_dispatch_survives_worker_death_and_admits_a_late_joiner() {
+    let spec = churn_spec();
+    let full = reference(&spec);
+    let fleet = FleetServer::spawn_with(
+        "127.0.0.1:0",
+        FleetOpts { expiry: Duration::from_millis(400) },
+    )
+    .expect("bind fleet controller");
+    let fleet_addr = fleet.addr().to_string();
+
+    let worker_a = spawn_workers(1).remove(0);
+    let hb_a = spawn_heartbeat(
+        &fleet_addr,
+        &worker_a.addr().to_string(),
+        worker_a.stats_handle(),
+        Duration::from_millis(50),
+    );
+
+    // One point per slice, so the sweep takes many round trips and the
+    // churn below lands mid-flight.
+    let dispatcher = {
+        let spec = spec.clone();
+        let fleet_addr = fleet_addr.clone();
+        thread::spawn(move || {
+            let eopts = ElasticOpts {
+                timeout: Duration::from_secs(30),
+                poll: Duration::from_millis(50),
+                min_slice: 1,
+                max_slice: 1,
+                grace: Duration::from_secs(60),
+                ..ElasticOpts::default()
+            };
+            dispatch_elastic(&spec, &WorkerSource::Fleet(fleet_addr), &eopts)
+        })
+    };
+
+    // Mid-sweep churn: a second worker joins, then the first one dies —
+    // its heartbeats stop and its listener drops.
+    thread::sleep(Duration::from_millis(150));
+    let worker_b = spawn_workers(1).remove(0);
+    let hb_b = spawn_heartbeat(
+        &fleet_addr,
+        &worker_b.addr().to_string(),
+        worker_b.stats_handle(),
+        Duration::from_millis(50),
+    );
+    hb_a.stop();
+    worker_a.shutdown();
+
+    let report = dispatcher.join().expect("dispatcher thread").expect("elastic dispatch");
+    assert_eq!(report.doc.to_string(), full, "fleet churn changed the assembled bytes");
+    assert_eq!(report.computed_points, 12);
+    assert_eq!(report.replayed_points, 0);
+    hb_b.stop();
+    worker_b.shutdown();
+    fleet.shutdown();
+}
+
+#[test]
+fn elastic_dispatch_waits_for_the_first_worker_to_join_an_empty_fleet() {
+    let spec = small_spec();
+    let full = reference(&spec);
+    let fleet = FleetServer::spawn("127.0.0.1:0").expect("bind fleet controller");
+    let fleet_addr = fleet.addr().to_string();
+
+    // Nothing is registered when the dispatch starts; the worker arrives
+    // ~150 ms in. The dispatcher must admit it mid-sweep instead of
+    // failing on the empty listing.
+    let late = {
+        let fleet_addr = fleet_addr.clone();
+        thread::spawn(move || {
+            thread::sleep(Duration::from_millis(150));
+            let w = spawn_workers(1).remove(0);
+            let hb = spawn_heartbeat(
+                &fleet_addr,
+                &w.addr().to_string(),
+                w.stats_handle(),
+                Duration::from_millis(50),
+            );
+            (w, hb)
+        })
+    };
+    let eopts = ElasticOpts {
+        timeout: Duration::from_secs(30),
+        poll: Duration::from_millis(50),
+        grace: Duration::from_secs(60),
+        ..ElasticOpts::default()
+    };
+    let report = dispatch_elastic(&spec, &WorkerSource::Fleet(fleet_addr), &eopts)
+        .expect("dispatch against an initially empty fleet");
+    assert_eq!(report.doc.to_string(), full, "late join changed the assembled bytes");
+    let (w, hb) = late.join().expect("late-join thread");
+    hb.stop();
+    w.shutdown();
+    fleet.shutdown();
+}
+
+#[test]
+fn elastic_prewarm_failure_pauses_and_retries_instead_of_retiring() {
+    // The elastic sibling of the legacy late-bind prewarm test — but here
+    // the contract is stronger: a failed wire prewarm pauses the worker
+    // with backoff and retries; only a fingerprint mismatch is fatal.
+    // With a single (initially absent) worker, permanent retirement would
+    // fail the whole dispatch.
+    let spec = small_spec();
+    let full = reference(&spec);
+    let donor = SweepEngine::serial();
+    shard::run_full(&spec, &donor).unwrap();
+    let snap = donor.cache().snapshot();
+
+    let placeholder = TcpListener::bind("127.0.0.1:0").expect("reserve a port");
+    let addr = placeholder.local_addr().unwrap().to_string();
+    drop(placeholder);
+    let late = {
+        let addr = addr.clone();
+        thread::spawn(move || {
+            thread::sleep(Duration::from_millis(150));
+            WorkerServer::spawn(&addr, SweepEngine::with_threads(2)).expect("late bind")
+        })
+    };
+    let eopts = ElasticOpts {
+        timeout: Duration::from_secs(30),
+        poll: Duration::from_millis(50),
+        grace: Duration::from_secs(60),
+        prewarm: Some(snap),
+        ..ElasticOpts::default()
+    };
+    let report = dispatch_elastic(&spec, &WorkerSource::Static(vec![addr]), &eopts)
+        .expect("elastic dispatch with a late-binding prewarmed worker");
+    assert_eq!(report.doc.to_string(), full, "late prewarm changed the assembled bytes");
+    assert_eq!(report.computed_points, 8);
+    late.join().expect("late-bind thread").shutdown();
+}
+
+#[test]
+fn store_backed_elastic_rerun_replays_every_point_without_workers() {
+    let spec = small_spec();
+    let full = reference(&spec);
+    let dir = std::env::temp_dir()
+        .join(format!("bf-imna-elastic-store-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+
+    // First run: a worker computes everything, and every record is saved.
+    let worker = spawn_workers(1).remove(0);
+    let eopts = ElasticOpts {
+        timeout: Duration::from_secs(30),
+        poll: Duration::from_millis(50),
+        store: Some(ResultStore::open(&dir).expect("open store")),
+        ..ElasticOpts::default()
+    };
+    let source = WorkerSource::Static(vec![worker.addr().to_string()]);
+    let first = dispatch_elastic(&spec, &source, &eopts).expect("first stored dispatch");
+    assert_eq!(first.doc.to_string(), full, "stored dispatch changed the assembled bytes");
+    assert_eq!((first.computed_points, first.replayed_points), (8, 0));
+    worker.shutdown();
+
+    // Second run with NO workers at all: the store replays every point,
+    // so the sweep never needs the network — and the bytes still match.
+    let eopts = ElasticOpts {
+        store: Some(ResultStore::open(&dir).expect("reopen store")),
+        ..ElasticOpts::default()
+    };
+    let second = dispatch_elastic(&spec, &WorkerSource::Static(Vec::new()), &eopts)
+        .expect("workerless replay");
+    assert_eq!(second.doc.to_string(), full, "replayed document differs");
+    assert_eq!((second.computed_points, second.replayed_points), (0, 8));
+    let _ = std::fs::remove_dir_all(&dir);
 }
