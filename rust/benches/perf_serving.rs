@@ -11,7 +11,11 @@
 //! are exported to `BENCH_serving.json` at the repo root so CI tracks the
 //! serving trajectory PR-over-PR (the serving counterpart of
 //! `perf_hotpath`'s `BENCH_dse.json`); CI's smoke step asserts the pooled
-//! rates beat the per-connect rates on the same run.
+//! rates beat the per-connect rates on the same run. The `hotpath`
+//! section A/Bs the lock-free serving path: mutex- vs sharded-atomic
+//! metrics recording, spawn-per-connection vs pooled handler churn, and
+//! a multi-core loadgen probe — CI gates sharded ≥ mutex and pooled ≥
+//! spawn.
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -19,7 +23,8 @@ use std::time::{Duration, Instant};
 
 use bf_imna::coordinator::server::{self as serving, BatchInferRequest, InferRequest};
 use bf_imna::coordinator::{
-    Budget, BudgetSpec, Coordinator, CoordinatorConfig, Priority, RequestSpec, ServingServer,
+    Budget, BudgetSpec, Coordinator, CoordinatorConfig, Metrics, Priority, RequestSpec,
+    ServingServer, ShardedMetrics,
 };
 use bf_imna::sim::transport::ConnPool;
 use bf_imna::util::benchkit::banner;
@@ -39,6 +44,16 @@ const MS_EXCHANGES: usize = 4;
 const MS_BATCH: usize = 16;
 /// Client-side exchange deadline for the transport section.
 const WIRE_TIMEOUT: Duration = Duration::from_secs(30);
+/// Contending writer threads for the hotpath metrics A/B — at least 4 so
+/// the mutex path actually contends, even on small CI runners.
+const HOTPATH_MIN_THREADS: usize = 4;
+/// `record_request` calls per writer thread in the metrics A/B.
+const HOTPATH_OPS: usize = 50_000;
+/// Fresh connections per churn mode (spawn-per-conn vs pooled handlers).
+const CHURN_CONNS: usize = 300;
+/// Timed rounds per churn mode; the best round is reported (standard
+/// noise-floor practice for a ratio gate).
+const CHURN_ROUNDS: usize = 2;
 
 fn main() {
     banner("Serving request path (sim backend, mixed budgets + deadlines)");
@@ -101,7 +116,169 @@ fn main() {
 
     let transport = bench_transport();
     let loadgen = bench_loadgen();
-    write_bench_json(wall_s, rps, p50, p99, met, &m, &per_config, transport, loadgen);
+    let hotpath = bench_hotpath();
+    write_bench_json(wall_s, rps, p50, p99, met, &m, &per_config, transport, loadgen, hotpath);
+}
+
+/// The `hotpath` section: the lock-free serving-path A/Bs. (a) Metrics:
+/// the same `record_request` load hammered through one `Mutex<Metrics>`
+/// vs per-thread [`ShardedMetrics`] recorders. (b) Connection churn:
+/// fresh connect + `GET /healthz` against a front end in legacy
+/// spawn-per-connection mode (`serve_threads: 0`) vs the pooled default.
+/// (c) A multi-core loadgen probe at the `available_parallelism` sender
+/// default. CI gates on sharded ≥ mutex and pooled ≥ spawn.
+fn bench_hotpath() -> Json {
+    banner("Hot path (mutex vs sharded metrics; spawn vs pooled connections)");
+    let threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .max(HOTPATH_MIN_THREADS);
+
+    // (a) Metrics A/B. Every writer records the identical sequence in
+    // both arms, so the two snapshots must agree exactly — the A/B is a
+    // semantics check as well as a stopwatch.
+    let mutex = std::sync::Arc::new(std::sync::Mutex::new(Metrics::default()));
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        for w in 0..threads {
+            let mutex = std::sync::Arc::clone(&mutex);
+            scope.spawn(move || {
+                let class = if w % 2 == 0 { "low" } else { "high" };
+                for i in 0..HOTPATH_OPS {
+                    let mut m = mutex.lock().unwrap();
+                    m.record_request(class, 1e-4 * ((i % 17) + 1) as f64, i % 7 != 0);
+                }
+            });
+        }
+    });
+    let mutex_ops_per_s = (threads * HOTPATH_OPS) as f64 / t0.elapsed().as_secs_f64();
+
+    let sharded = std::sync::Arc::new(ShardedMetrics::new(threads));
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        for w in 0..threads {
+            let recorder = sharded.recorder();
+            scope.spawn(move || {
+                let class = if w % 2 == 0 { "low" } else { "high" };
+                for i in 0..HOTPATH_OPS {
+                    recorder.record_request(class, 1e-4 * ((i % 17) + 1) as f64, i % 7 != 0);
+                }
+            });
+        }
+    });
+    let sharded_ops_per_s = (threads * HOTPATH_OPS) as f64 / t0.elapsed().as_secs_f64();
+    let snap = sharded.snapshot();
+    let plain = mutex.lock().unwrap();
+    assert_eq!(snap.completed, plain.completed, "both arms recorded the same load");
+    assert_eq!(snap.deadline_met, plain.deadline_met, "same verdicts in both arms");
+    drop(plain);
+
+    // (b) Connection churn A/B: a fresh connection per `/healthz` probe,
+    // against the same front end in both handler modes. Best-of-N rounds
+    // per mode keeps a single noisy round from deciding the ratio.
+    let churn = |serve_threads: usize| -> f64 {
+        let coord = Coordinator::start_sim(CoordinatorConfig::default(), 0.0)
+            .expect("sim-backed coordinator starts in the default build");
+        let server = ServingServer::spawn_with(
+            "127.0.0.1:0",
+            coord,
+            serving::ServeOpts { serve_threads, ..Default::default() },
+        )
+        .expect("bind ephemeral port");
+        let addr = server.addr().to_string();
+        // Warm up: listener + first handler ready before the stopwatch.
+        serving::fetch_health(&addr, WIRE_TIMEOUT).expect("warmup /healthz");
+        let mut best = 0.0f64;
+        for _ in 0..CHURN_ROUNDS {
+            let t0 = Instant::now();
+            for _ in 0..CHURN_CONNS {
+                serving::fetch_health(&addr, WIRE_TIMEOUT).expect("churn /healthz");
+            }
+            best = best.max(CHURN_CONNS as f64 / t0.elapsed().as_secs_f64());
+        }
+        server.shutdown();
+        best
+    };
+    let spawn_rps = churn(0);
+    let pooled_rps = churn(serving::ServeOpts::default().serve_threads);
+
+    // (c) Multi-core loadgen probe at the default (available_parallelism)
+    // sender count.
+    let coord = Coordinator::start_sim(CoordinatorConfig::default(), 0.0)
+        .expect("sim-backed coordinator starts in the default build");
+    let server = ServingServer::spawn("127.0.0.1:0", coord).expect("bind ephemeral port");
+    let addr = server.addr().to_string();
+    let spec = bf_imna::coordinator::loadgen::WorkloadSpec::builtin("constant", 200.0, 1.0, 7)
+        .expect("builtin workload");
+    let lopts = bf_imna::coordinator::loadgen::LoadgenOpts {
+        timeout: WIRE_TIMEOUT,
+        ..Default::default()
+    };
+    let report = bf_imna::coordinator::loadgen::run_loadgen(&addr, &spec, &lopts)
+        .expect("hotpath loadgen run");
+    server.shutdown();
+    let lg_p99 = report.total.latency.percentile(0.99);
+
+    let mut t = Table::new(vec!["probe", "value"]);
+    t.row(vec![
+        format!("metrics mutex ({threads} threads)"),
+        format!("{} ops/s", fmt_eng(mutex_ops_per_s, 3)),
+    ]);
+    t.row(vec![
+        format!("metrics sharded ({threads} threads)"),
+        format!("{} ops/s", fmt_eng(sharded_ops_per_s, 3)),
+    ]);
+    t.row(vec![
+        "metrics speedup".to_string(),
+        format!("{:.2}x", sharded_ops_per_s / mutex_ops_per_s),
+    ]);
+    t.row(vec!["churn spawn-per-conn".to_string(), format!("{spawn_rps:.0} conn/s")]);
+    t.row(vec!["churn pooled".to_string(), format!("{pooled_rps:.0} conn/s")]);
+    t.row(vec![
+        "churn speedup".to_string(),
+        format!("{:.2}x", pooled_rps / spawn_rps),
+    ]);
+    t.row(vec![
+        format!("loadgen ({} senders)", report.senders),
+        format!(
+            "{:.0} req/s achieved | p99 {} s | {:.0}% sender util",
+            report.achieved_rps(),
+            fmt_eng(lg_p99, 3),
+            100.0 * report.sender_utilization()
+        ),
+    ]);
+    print!("{}", t.render());
+
+    Json::obj([
+        (
+            "metrics",
+            Json::obj([
+                ("threads", Json::num(threads as f64)),
+                ("ops_per_thread", Json::num(HOTPATH_OPS as f64)),
+                ("mutex_ops_per_s", Json::num(mutex_ops_per_s)),
+                ("sharded_ops_per_s", Json::num(sharded_ops_per_s)),
+                ("speedup", Json::num(sharded_ops_per_s / mutex_ops_per_s)),
+            ]),
+        ),
+        (
+            "churn",
+            Json::obj([
+                ("conns", Json::num(CHURN_CONNS as f64)),
+                ("spawn_rps", Json::num(spawn_rps)),
+                ("pooled_rps", Json::num(pooled_rps)),
+                ("speedup", Json::num(pooled_rps / spawn_rps)),
+            ]),
+        ),
+        (
+            "loadgen",
+            Json::obj([
+                ("workers", Json::num(report.senders as f64)),
+                ("achieved_rps", Json::num(report.achieved_rps())),
+                ("latency_p99_s", Json::num(lg_p99)),
+                ("sender_utilization", Json::num(report.sender_utilization())),
+            ]),
+        ),
+    ])
 }
 
 /// The `perf_loadgen` section: a short seeded open-loop run through the
@@ -279,6 +456,7 @@ fn write_bench_json(
     per_config: &BTreeMap<String, u64>,
     transport: Json,
     loadgen: Json,
+    hotpath: Json,
 ) {
     let doc = Json::obj([
         ("bench", Json::str("perf_serving/request_path")),
@@ -297,6 +475,7 @@ fn write_bench_json(
         ),
         ("transport", transport),
         ("loadgen", loadgen),
+        ("hotpath", hotpath),
     ]);
     let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("BENCH_serving.json");
     match std::fs::write(&path, format!("{doc}\n")) {

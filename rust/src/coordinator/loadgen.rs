@@ -500,16 +500,22 @@ pub struct LoadgenOpts {
     /// Sender threads (each rides the shared pool; this bounds in-flight
     /// requests, clamped to ≥ 1). The arrival schedule never slows down —
     /// when all senders are busy, dispatched arrivals queue and their
-    /// queueing delay counts against measured latency.
+    /// queueing delay counts against measured latency. Defaults to the
+    /// machine's available parallelism, so a multi-core loadgen box
+    /// offers multi-core load out of the box. Note the plan (and its
+    /// digest) is a pure function of the spec — sender count never
+    /// changes what is offered, only how fast it drains.
     pub workers: usize,
     /// Per-exchange timeout.
     pub timeout: Duration,
 }
 
 impl Default for LoadgenOpts {
-    /// 8 senders, 30 s per exchange.
+    /// `available_parallelism` senders (8 when it cannot be determined),
+    /// 30 s per exchange.
     fn default() -> Self {
-        LoadgenOpts { workers: 8, timeout: Duration::from_secs(30) }
+        let workers = thread::available_parallelism().map(|n| n.get()).unwrap_or(8);
+        LoadgenOpts { workers, timeout: Duration::from_secs(30) }
     }
 }
 
@@ -580,6 +586,12 @@ pub struct LoadReport {
     pub per_class: BTreeMap<String, ClassOutcome>,
     /// The shared connection pool's counters.
     pub pool: PoolStats,
+    /// Sender threads the run used.
+    pub senders: usize,
+    /// Seconds sender threads spent busy on exchanges, summed across all
+    /// senders — [`Self::sender_utilization`] is this over
+    /// `senders × wall_s`.
+    pub send_busy_s: f64,
 }
 
 impl LoadReport {
@@ -609,6 +621,18 @@ impl LoadReport {
         }
     }
 
+    /// Fraction of sender-thread capacity the run consumed: busy seconds
+    /// over `senders × wall_s`. Near 1.0 means the client side was
+    /// saturated (add `--workers`); low values mean the offered load left
+    /// sender capacity idle and measured latency is the server's.
+    pub fn sender_utilization(&self) -> f64 {
+        if self.wall_s > 0.0 && self.senders > 0 {
+            (self.send_busy_s / (self.senders as f64 * self.wall_s)).min(1.0)
+        } else {
+            0.0
+        }
+    }
+
     /// The full report document (plan + observed).
     pub fn to_json(&self) -> Json {
         Json::obj([
@@ -631,6 +655,9 @@ impl LoadReport {
                             ("stale_retries", Json::num(self.pool.stale_retries as f64)),
                         ]),
                     ),
+                    ("send_busy_s", Json::num(self.send_busy_s)),
+                    ("sender_utilization", Json::num(self.sender_utilization())),
+                    ("senders", Json::num(self.senders as f64)),
                     ("total", self.total.to_json()),
                     ("wall_s", Json::num(self.wall_s)),
                 ]),
@@ -671,7 +698,7 @@ pub fn run_loadgen(
     let (work_tx, work_rx) = mpsc::channel::<(Arrival, Instant)>();
     let work_rx = Mutex::new(work_rx);
     let started = Instant::now();
-    let mut outcomes: Vec<(Vec<ClassOutcome>, LatencyHistogram)> = Vec::new();
+    let mut outcomes: Vec<(Vec<ClassOutcome>, LatencyHistogram, f64)> = Vec::new();
     thread::scope(|scope| {
         let mut handles = Vec::with_capacity(workers);
         for _ in 0..workers {
@@ -682,12 +709,18 @@ pub fn run_loadgen(
                 let mut per_class: Vec<ClassOutcome> =
                     vec![ClassOutcome::default(); spec.classes.len()];
                 let mut all = LatencyHistogram::new();
+                let mut busy = Duration::ZERO;
                 loop {
                     let item = {
                         let rx = work_rx.lock().unwrap();
                         rx.recv()
                     };
                     let Ok((arrival, scheduled)) = item else { break };
+                    // Busy time starts at pickup, not at the scheduled
+                    // instant: dispatch backlog is the *server's* debt
+                    // (it counts against latency), sender utilization
+                    // measures only what this thread actually spent.
+                    let picked_up = Instant::now();
                     let class = &spec.classes[arrival.class];
                     let mut input_rng = Rng::new(arrival.input_seed);
                     let input: Vec<f32> =
@@ -706,8 +739,9 @@ pub fn run_loadgen(
                         Err(e) if e.contains("HTTP 503") => out.rejected_busy += 1,
                         Err(_) => out.errors += 1,
                     }
+                    busy += picked_up.elapsed();
                 }
-                (per_class, all)
+                (per_class, all, busy.as_secs_f64())
             }));
         }
 
@@ -734,11 +768,13 @@ pub fn run_loadgen(
     let mut per_class_merged: Vec<ClassOutcome> =
         vec![ClassOutcome::default(); spec.classes.len()];
     let mut total = ClassOutcome::default();
-    for (per_class, all) in &outcomes {
+    let mut send_busy_s = 0.0;
+    for (per_class, all, busy_s) in &outcomes {
         for (merged, part) in per_class_merged.iter_mut().zip(per_class) {
             merged.absorb(part);
         }
         total.latency.merge(all);
+        send_busy_s += busy_s;
     }
     for c in &per_class_merged {
         total.sent += c.sent;
@@ -753,7 +789,7 @@ pub fn run_loadgen(
         .zip(per_class_merged)
         .map(|(c, o)| (c.name.clone(), o))
         .collect();
-    Ok(LoadReport { plan, wall_s, total, per_class, pool: pool.stats() })
+    Ok(LoadReport { plan, wall_s, total, per_class, pool: pool.stats(), senders: workers, send_busy_s })
 }
 
 /// Read a numeric field (possibly nested one level, `"a.b"`) out of a
@@ -1040,6 +1076,8 @@ mod tests {
             total,
             per_class: BTreeMap::new(),
             pool: PoolStats { fresh_connects: 2, reuses: 8, stale_retries: 0, discards: 0 },
+            senders: 4,
+            send_busy_s: 1.6,
         };
         let before = Json::parse(
             r#"{"completed":100,"deadline_met":90,"deadline_missed":10,"failed":0,
@@ -1085,6 +1123,8 @@ mod tests {
             total: ClassOutcome::default(),
             per_class: BTreeMap::new(),
             pool: PoolStats { fresh_connects: 1, reuses: 0, stale_retries: 0, discards: 0 },
+            senders: 1,
+            send_busy_s: 0.0,
         };
         let before = Json::parse(
             r#"{"completed":100,"deadline_met":90,"deadline_missed":10,"failed":0,

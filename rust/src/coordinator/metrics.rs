@@ -16,8 +16,21 @@
 //!   ring silently forgets everything older than the window, which skews
 //!   p999 on long runs — that is exactly why the percentile fields no
 //!   longer read from it.
+//!
+//! Recording is **lock-free**: the live side of this module is
+//! [`ShardedMetrics`] — N independent metric shards whose counters,
+//! histogram buckets ([`AtomicHistogram`]), sample rings, and keyed
+//! tables are all atomics recorded with `Ordering::Relaxed`. A
+//! [`MetricsRecorder`] handle writes to exactly one shard; a scrape
+//! ([`ShardedMetrics::snapshot`]) reads every shard and folds them into a
+//! plain [`Metrics`] via [`Metrics::merge`] — so requests never take a
+//! lock and scrapes never block requests. The plain [`Metrics`] struct
+//! survives unchanged as the snapshot/merge/JSON type; every document it
+//! renders is field-for-field identical to the mutex era.
 
 use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, OnceLock};
 
 use crate::util::json::Json;
 use crate::util::stats;
@@ -25,8 +38,7 @@ use crate::util::stats;
 /// Retained latency samples per distribution (a sliding window): the
 /// serving process is long-running, so sample storage must be bounded —
 /// window percentiles are over the most recent samples, counters stay
-/// exact, and a metrics snapshot stays cheap to clone under the worker's
-/// mutex.
+/// exact, and a metrics snapshot stays cheap to build at scrape time.
 pub const LATENCY_WINDOW: usize = 4096;
 
 /// Smallest latency the histogram resolves, seconds (1 µs). Samples below
@@ -234,6 +246,14 @@ impl ClassMetrics {
         }
     }
 
+    /// Absorb another class's outcomes (counter addition + histogram
+    /// merge) — the per-class leg of [`Metrics::merge`].
+    pub fn merge(&mut self, other: &ClassMetrics) {
+        self.completed += other.completed;
+        self.deadline_met += other.deadline_met;
+        self.latency.merge(&other.latency);
+    }
+
     fn to_json(&self) -> Json {
         Json::obj([
             ("completed", Json::num(self.completed as f64)),
@@ -248,7 +268,9 @@ impl ClassMetrics {
     }
 }
 
-/// Aggregated serving metrics (guarded by a mutex in the coordinator).
+/// Aggregated serving metrics — the snapshot, merge, and JSON-rendering
+/// type. The coordinator's live counters are a [`ShardedMetrics`]; a
+/// scrape folds its shards into one of these via [`Self::merge`].
 #[derive(Debug, Default, Clone)]
 pub struct Metrics {
     /// Completed requests.
@@ -329,6 +351,45 @@ impl Metrics {
         c.completed += 1;
         c.deadline_met += u64::from(met_deadline);
         c.latency.record(latency_s);
+    }
+
+    /// Absorb another metrics document: counters add, histograms merge
+    /// element-wise ([`LatencyHistogram::merge`]), keyed tables
+    /// (per-class / per-config / per-batch-size) merge per key, and the
+    /// bounded sample rings concatenate keeping the most recent
+    /// [`LATENCY_WINDOW`] samples. This is the scrape-time fold
+    /// [`ShardedMetrics::snapshot`] runs over its shards; merging shard
+    /// snapshots is exactly equal to having recorded the union into one
+    /// `Metrics` (the rings' sample *order* across sources is the only
+    /// unspecified part, and nothing reads the rings order-sensitively).
+    pub fn merge(&mut self, other: &Metrics) {
+        self.completed += other.completed;
+        self.failed += other.failed;
+        self.deadline_met += other.deadline_met;
+        self.deadline_missed += other.deadline_missed;
+        self.batches += other.batches;
+        self.padded_samples += other.padded_samples;
+        self.request_latencies.extend_from_slice(&other.request_latencies);
+        if self.request_latencies.len() > LATENCY_WINDOW {
+            let excess = self.request_latencies.len() - LATENCY_WINDOW;
+            self.request_latencies.drain(..excess);
+        }
+        self.execute_latencies.extend_from_slice(&other.execute_latencies);
+        if self.execute_latencies.len() > LATENCY_WINDOW {
+            let excess = self.execute_latencies.len() - LATENCY_WINDOW;
+            self.execute_latencies.drain(..excess);
+        }
+        self.request_hist.merge(&other.request_hist);
+        self.execute_hist.merge(&other.execute_hist);
+        for (class, m) in &other.per_class {
+            self.per_class.entry(class.clone()).or_default().merge(m);
+        }
+        for (config, &n) in &other.per_config {
+            *self.per_config.entry(config.clone()).or_default() += n;
+        }
+        for (&size, &n) in &other.per_batch_size {
+            *self.per_batch_size.entry(size).or_default() += n;
+        }
     }
 
     /// Latency percentile over the **whole process lifetime**, seconds,
@@ -445,6 +506,425 @@ impl Metrics {
             ("uptime_s", Json::num(uptime_s)),
             ("throughput_rps", Json::num(self.throughput(uptime_s))),
         ])
+    }
+}
+
+// ---------------------------------------------------------------------
+// The lock-free recording side: atomic histograms and sharded metrics.
+// ---------------------------------------------------------------------
+
+/// Shards a [`ShardedMetrics::default`] carries. One shard per recording
+/// thread avoids even cache-line contention; extra shards are harmless
+/// (scrapes fold them all), so the default leaves headroom for future
+/// multi-worker coordinators.
+pub const DEFAULT_METRIC_SHARDS: usize = 4;
+
+/// Distinct request-class labels one shard can attribute. The live set is
+/// `low`/`medium`/`high`/`deadline`; a shard that somehow sees more drops
+/// the *attribution* (the global counters still count the request).
+const CLASS_SLOTS: usize = 16;
+
+/// Distinct precision-config labels one shard can attribute.
+const CONFIG_SLOTS: usize = 32;
+
+/// Distinct compiled batch sizes one shard can attribute.
+const BATCH_SLOTS: usize = 32;
+
+/// Add to an `f64` carried as bits in an `AtomicU64` (relaxed CAS loop).
+fn f64_add(cell: &AtomicU64, v: f64) {
+    let _ = cell.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |bits| {
+        Some((f64::from_bits(bits) + v).to_bits())
+    });
+}
+
+/// Raise an `f64`-as-bits `AtomicU64` to `v` if `v` is larger.
+fn f64_max(cell: &AtomicU64, v: f64) {
+    let _ = cell.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |bits| {
+        (v > f64::from_bits(bits)).then(|| v.to_bits())
+    });
+}
+
+/// A [`LatencyHistogram`] recorded through `&self`: the fixed log-bucket
+/// geometry becomes a fixed-size `AtomicU64` array, the exact sum and max
+/// ride along as `f64` bits. All operations are `Ordering::Relaxed` —
+/// recording threads never synchronize with each other or with readers;
+/// a [`snapshot`](Self::snapshot) taken mid-record is still internally
+/// consistent because its total is derived from the bucket counts it
+/// actually read.
+#[derive(Debug)]
+pub struct AtomicHistogram {
+    /// Bucket counts, same layout as [`LatencyHistogram`]: index 0 is
+    /// underflow, `HIST_BUCKETS + 1` is overflow.
+    counts: [AtomicU64; HIST_BUCKETS + 2],
+    /// Exact sum of recorded samples, `f64` bits.
+    sum_bits: AtomicU64,
+    /// Largest recorded sample, `f64` bits (0.0 when empty).
+    max_bits: AtomicU64,
+}
+
+impl Default for AtomicHistogram {
+    fn default() -> Self {
+        AtomicHistogram {
+            counts: std::array::from_fn(|_| AtomicU64::new(0)),
+            sum_bits: AtomicU64::new(0f64.to_bits()),
+            max_bits: AtomicU64::new(0f64.to_bits()),
+        }
+    }
+}
+
+impl AtomicHistogram {
+    /// An empty histogram.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one sample (seconds) without taking a lock.
+    pub fn record(&self, sample_s: f64) {
+        let idx = LatencyHistogram::bucket_index(sample_s);
+        self.counts[idx].fetch_add(1, Ordering::Relaxed);
+        if sample_s.is_finite() {
+            f64_add(&self.sum_bits, sample_s);
+            f64_max(&self.max_bits, sample_s);
+        }
+    }
+
+    /// Snapshot into the plain [`LatencyHistogram`]. The snapshot's total
+    /// `count` is the sum of the bucket counts it read — never the other
+    /// way around — so percentile ranks computed from the snapshot can
+    /// never exceed the bucket mass, even while writers race the read.
+    pub fn snapshot(&self) -> LatencyHistogram {
+        let counts: Vec<u64> = self.counts.iter().map(|c| c.load(Ordering::Relaxed)).collect();
+        let count = counts.iter().sum();
+        LatencyHistogram {
+            counts,
+            count,
+            sum_s: f64::from_bits(self.sum_bits.load(Ordering::Relaxed)),
+            max_s: f64::from_bits(self.max_bits.load(Ordering::Relaxed)),
+        }
+    }
+}
+
+/// A bounded sample ring recorded through `&self`: [`LATENCY_WINDOW`]
+/// `f64`-bit slots and a monotone write cursor. A reader may catch a slot
+/// between the cursor bump and the sample store (it reads the slot's old
+/// value) — the ring is a diagnostic sample set, not a counter, so that
+/// is acceptable by design.
+#[derive(Debug)]
+struct AtomicWindow {
+    slots: Vec<AtomicU64>,
+    cursor: AtomicU64,
+}
+
+impl AtomicWindow {
+    fn new() -> Self {
+        AtomicWindow {
+            slots: (0..LATENCY_WINDOW).map(|_| AtomicU64::new(0)).collect(),
+            cursor: AtomicU64::new(0),
+        }
+    }
+
+    fn record(&self, v: f64) {
+        let at = self.cursor.fetch_add(1, Ordering::Relaxed) as usize % LATENCY_WINDOW;
+        self.slots[at].store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    fn snapshot(&self) -> Vec<f64> {
+        let n = (self.cursor.load(Ordering::Relaxed) as usize).min(LATENCY_WINDOW);
+        self.slots[..n].iter().map(|s| f64::from_bits(s.load(Ordering::Relaxed))).collect()
+    }
+}
+
+/// One per-class attribution slot: a write-once label claimed by the
+/// first recorder that sees the class, then atomic outcome counters.
+#[derive(Debug, Default)]
+struct ClassSlot {
+    label: OnceLock<String>,
+    completed: AtomicU64,
+    deadline_met: AtomicU64,
+    latency: AtomicHistogram,
+}
+
+/// One per-config attribution slot (real samples served).
+#[derive(Debug, Default)]
+struct ConfigSlot {
+    label: OnceLock<String>,
+    samples: AtomicU64,
+}
+
+/// One per-batch-size attribution slot. `size == 0` means unclaimed
+/// (compiled batch sizes are always ≥ 1).
+#[derive(Debug, Default)]
+struct BatchSlot {
+    size: AtomicU64,
+    count: AtomicU64,
+}
+
+/// Find (or claim) the slot for `label` by linear probe. The tables are
+/// small and their key sets are closed in practice, so a scan from the
+/// front beats hashing; a full table returns `None` and the caller drops
+/// the attribution (global counters are unaffected).
+fn label_slot<'a, T>(
+    slots: &'a [T],
+    label: &str,
+    cell: impl Fn(&T) -> &OnceLock<String>,
+) -> Option<&'a T> {
+    for slot in slots {
+        match cell(slot).get() {
+            Some(k) if k == label => return Some(slot),
+            Some(_) => continue,
+            None => {
+                // Race to claim the empty slot; on loss, the winner's key
+                // may still be ours (two recorders, same new label).
+                if cell(slot).set(label.to_string()).is_ok()
+                    || cell(slot).get().map(|k| k == label).unwrap_or(false)
+                {
+                    return Some(slot);
+                }
+            }
+        }
+    }
+    None
+}
+
+/// One metric shard: every field of [`Metrics`], recorded atomically.
+#[derive(Debug)]
+struct MetricShard {
+    completed: AtomicU64,
+    failed: AtomicU64,
+    deadline_met: AtomicU64,
+    deadline_missed: AtomicU64,
+    batches: AtomicU64,
+    padded_samples: AtomicU64,
+    request_window: AtomicWindow,
+    execute_window: AtomicWindow,
+    request_hist: AtomicHistogram,
+    execute_hist: AtomicHistogram,
+    per_class: Vec<ClassSlot>,
+    per_config: Vec<ConfigSlot>,
+    per_batch_size: Vec<BatchSlot>,
+}
+
+impl MetricShard {
+    fn new() -> Self {
+        MetricShard {
+            completed: AtomicU64::new(0),
+            failed: AtomicU64::new(0),
+            deadline_met: AtomicU64::new(0),
+            deadline_missed: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            padded_samples: AtomicU64::new(0),
+            request_window: AtomicWindow::new(),
+            execute_window: AtomicWindow::new(),
+            request_hist: AtomicHistogram::new(),
+            execute_hist: AtomicHistogram::new(),
+            per_class: (0..CLASS_SLOTS).map(|_| ClassSlot::default()).collect(),
+            per_config: (0..CONFIG_SLOTS).map(|_| ConfigSlot::default()).collect(),
+            per_batch_size: (0..BATCH_SLOTS).map(|_| BatchSlot::default()).collect(),
+        }
+    }
+
+    fn record_batch(&self, config: &str, compiled_batch: u64, real_samples: u64, execute_s: f64) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.padded_samples.fetch_add(compiled_batch - real_samples, Ordering::Relaxed);
+        self.execute_window.record(execute_s);
+        self.execute_hist.record(execute_s);
+        if let Some(slot) = label_slot(&self.per_config, config, |s| &s.label) {
+            slot.samples.fetch_add(real_samples, Ordering::Relaxed);
+        }
+        for slot in &self.per_batch_size {
+            let cur = slot.size.load(Ordering::Relaxed);
+            if cur == compiled_batch {
+                slot.count.fetch_add(1, Ordering::Relaxed);
+                break;
+            }
+            if cur == 0 {
+                match slot.size.compare_exchange(
+                    0,
+                    compiled_batch,
+                    Ordering::Relaxed,
+                    Ordering::Relaxed,
+                ) {
+                    Ok(_) => {
+                        slot.count.fetch_add(1, Ordering::Relaxed);
+                        break;
+                    }
+                    Err(won) if won == compiled_batch => {
+                        slot.count.fetch_add(1, Ordering::Relaxed);
+                        break;
+                    }
+                    Err(_) => continue,
+                }
+            }
+        }
+    }
+
+    fn record_request(&self, class: &str, latency_s: f64, met_deadline: bool) {
+        // `completed` before `deadline_met`: per-class documents derive
+        // `deadline_missed = completed - deadline_met`, so a racing
+        // snapshot must never see met counters ahead of completions
+        // (snapshots additionally clamp, belt and braces).
+        self.completed.fetch_add(1, Ordering::Relaxed);
+        if met_deadline {
+            self.deadline_met.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.deadline_missed.fetch_add(1, Ordering::Relaxed);
+        }
+        self.request_window.record(latency_s);
+        self.request_hist.record(latency_s);
+        if let Some(slot) = label_slot(&self.per_class, class, |s| &s.label) {
+            slot.completed.fetch_add(1, Ordering::Relaxed);
+            slot.deadline_met.fetch_add(u64::from(met_deadline), Ordering::Relaxed);
+            slot.latency.record(latency_s);
+        }
+    }
+
+    fn snapshot(&self) -> Metrics {
+        let mut m = Metrics {
+            completed: self.completed.load(Ordering::Relaxed),
+            failed: self.failed.load(Ordering::Relaxed),
+            deadline_met: self.deadline_met.load(Ordering::Relaxed),
+            deadline_missed: self.deadline_missed.load(Ordering::Relaxed),
+            batches: self.batches.load(Ordering::Relaxed),
+            padded_samples: self.padded_samples.load(Ordering::Relaxed),
+            request_latencies: self.request_window.snapshot(),
+            execute_latencies: self.execute_window.snapshot(),
+            request_hist: self.request_hist.snapshot(),
+            execute_hist: self.execute_hist.snapshot(),
+            per_class: BTreeMap::new(),
+            per_config: BTreeMap::new(),
+            per_batch_size: BTreeMap::new(),
+        };
+        for slot in &self.per_class {
+            if let Some(label) = slot.label.get() {
+                let completed = slot.completed.load(Ordering::Relaxed);
+                // Clamp: a racing reader must never produce a class whose
+                // met count exceeds its completions (the document
+                // subtracts them).
+                let met = slot.deadline_met.load(Ordering::Relaxed).min(completed);
+                m.per_class.insert(
+                    label.clone(),
+                    ClassMetrics {
+                        completed,
+                        deadline_met: met,
+                        latency: slot.latency.snapshot(),
+                    },
+                );
+            }
+        }
+        for slot in &self.per_config {
+            if let Some(label) = slot.label.get() {
+                m.per_config.insert(label.clone(), slot.samples.load(Ordering::Relaxed));
+            }
+        }
+        for slot in &self.per_batch_size {
+            let size = slot.size.load(Ordering::Relaxed);
+            if size != 0 {
+                m.per_batch_size.insert(size, slot.count.load(Ordering::Relaxed));
+            }
+        }
+        m
+    }
+}
+
+/// N independent metric shards plus a round-robin recorder dispenser —
+/// the live, lock-free replacement for `Mutex<Metrics>`. Recording
+/// threads each hold a [`MetricsRecorder`] (one shard each, relaxed
+/// atomics all the way down); scrapes fold every shard into a plain
+/// [`Metrics`] with [`Metrics::merge`].
+///
+/// Memory-ordering contract: all stores are `Relaxed`. A scraper that
+/// synchronizes with a recording thread through *any* release/acquire
+/// edge — an mpsc reply delivery, a thread join, or in practice a
+/// socket round trip — observes everything that thread recorded before
+/// the edge, which is why quiesced-server documents reconcile exactly.
+/// A scrape racing live recorders sees some prefix of each shard's
+/// writes: counters are monotone across scrapes and every snapshot is
+/// internally consistent, but cross-counter invariants (e.g.
+/// `met + missed == completed`) only reconcile at quiescence.
+#[derive(Debug)]
+pub struct ShardedMetrics {
+    shards: Vec<MetricShard>,
+    next_recorder: AtomicUsize,
+}
+
+impl Default for ShardedMetrics {
+    fn default() -> Self {
+        Self::new(DEFAULT_METRIC_SHARDS)
+    }
+}
+
+impl ShardedMetrics {
+    /// `shards` independent shards (clamped to ≥ 1).
+    pub fn new(shards: usize) -> ShardedMetrics {
+        ShardedMetrics {
+            shards: (0..shards.max(1)).map(|_| MetricShard::new()).collect(),
+            next_recorder: AtomicUsize::new(0),
+        }
+    }
+
+    /// A recording handle bound to one shard, assigned round-robin.
+    /// Handles are cheap; give each recording thread its own so threads
+    /// land on distinct shards (sharing one is correct, just contended).
+    pub fn recorder(self: &Arc<Self>) -> MetricsRecorder {
+        let shard =
+            self.next_recorder.fetch_add(1, Ordering::Relaxed) % self.shards.len();
+        MetricsRecorder { shards: Arc::clone(self), shard }
+    }
+
+    /// Fold every shard into one plain [`Metrics`] — the scrape path.
+    pub fn snapshot(&self) -> Metrics {
+        let mut folded = Metrics::default();
+        for shard in &self.shards {
+            folded.merge(&shard.snapshot());
+        }
+        folded
+    }
+
+    /// Requests resolved (completed + failed) across all shards — the
+    /// cheap read `queue_depth` needs, without snapshotting histograms.
+    pub fn resolved(&self) -> u64 {
+        self.shards
+            .iter()
+            .map(|s| {
+                s.completed.load(Ordering::Relaxed) + s.failed.load(Ordering::Relaxed)
+            })
+            .sum()
+    }
+}
+
+/// A lock-free recording handle onto one shard of a [`ShardedMetrics`].
+/// The mirror of the old `metrics.lock().unwrap().record_*` calls, minus
+/// the lock.
+#[derive(Debug, Clone)]
+pub struct MetricsRecorder {
+    shards: Arc<ShardedMetrics>,
+    shard: usize,
+}
+
+impl MetricsRecorder {
+    fn shard(&self) -> &MetricShard {
+        &self.shards.shards[self.shard]
+    }
+
+    /// Record one executed batch (see [`Metrics::record_batch`]).
+    pub fn record_batch(
+        &self,
+        config: &str,
+        compiled_batch: u64,
+        real_samples: u64,
+        execute_s: f64,
+    ) {
+        self.shard().record_batch(config, compiled_batch, real_samples, execute_s);
+    }
+
+    /// Record one completed request (see [`Metrics::record_request`]).
+    pub fn record_request(&self, class: &str, latency_s: f64, met_deadline: bool) {
+        self.shard().record_request(class, latency_s, met_deadline);
+    }
+
+    /// Record `n` failed requests.
+    pub fn record_failed(&self, n: u64) {
+        self.shard().failed.fetch_add(n, Ordering::Relaxed);
     }
 }
 
@@ -769,6 +1249,183 @@ mod tests {
             let done = c.get("completed").and_then(Json::as_i64).unwrap();
             assert_eq!(met + missed, done, "class {name}");
         }
+    }
+
+    #[test]
+    fn metrics_merge_equals_recording_the_union() {
+        // The Metrics-level analogue of the histogram merge pin: two
+        // documents merged must equal one document that recorded both
+        // streams (modulo the last-ulp float sums the histogram pin
+        // already tolerates).
+        let mut a = Metrics::default();
+        let mut b = Metrics::default();
+        let mut both = Metrics::default();
+        for i in 0..40 {
+            let l = 0.001 * (i + 1) as f64;
+            a.record_request(["low", "deadline"][i % 2], l, i % 3 != 0);
+            both.record_request(["low", "deadline"][i % 2], l, i % 3 != 0);
+            a.record_batch("int8", 4, 3, l);
+            both.record_batch("int8", 4, 3, l);
+        }
+        for i in 0..25 {
+            let l = 0.5 + 0.01 * i as f64;
+            b.record_request(["low", "high"][i % 2], l, false);
+            both.record_request(["low", "high"][i % 2], l, false);
+            b.record_batch("int4", 8, 8, l);
+            both.record_batch("int4", 8, 8, l);
+        }
+        a.merge(&b);
+        assert_eq!(a.completed, both.completed);
+        assert_eq!(a.deadline_met, both.deadline_met);
+        assert_eq!(a.deadline_missed, both.deadline_missed);
+        assert_eq!(a.batches, both.batches);
+        assert_eq!(a.padded_samples, both.padded_samples);
+        assert_eq!(a.per_config, both.per_config);
+        assert_eq!(a.per_batch_size, both.per_batch_size);
+        assert_eq!(a.request_hist.counts, both.request_hist.counts);
+        assert_eq!(a.execute_hist.counts, both.execute_hist.counts);
+        for (class, m) in &both.per_class {
+            let merged = &a.per_class[class];
+            assert_eq!(merged.completed, m.completed, "{class}");
+            assert_eq!(merged.deadline_met, m.deadline_met, "{class}");
+            assert_eq!(merged.latency.counts, m.latency.counts, "{class}");
+        }
+        for q in [0.1, 0.5, 0.9, 0.99, 0.999] {
+            assert_eq!(a.latency_p(q), both.latency_p(q), "q={q}");
+        }
+        // Ring bound survives merging.
+        let mut big = Metrics::default();
+        for i in 0..LATENCY_WINDOW {
+            big.record_request("high", i as f64, true);
+        }
+        big.merge(&both);
+        assert_eq!(big.request_latencies.len(), LATENCY_WINDOW);
+        // The most recent samples (the merged-in tail) survive the cut.
+        assert!(big.request_latencies.contains(&0.74));
+    }
+
+    #[test]
+    fn sharded_snapshot_matches_plain_recording() {
+        // Recording the same stream through sharded recorders (split
+        // across shards) and through a plain Metrics must render the
+        // same documents: same counters, same bucket counts, same
+        // percentiles, same keyed tables.
+        let sharded = Arc::new(ShardedMetrics::new(3));
+        let recorders: Vec<MetricsRecorder> = (0..3).map(|_| sharded.recorder()).collect();
+        let mut plain = Metrics::default();
+        for i in 0..600 {
+            let r = &recorders[i % 3];
+            let l = 1e-4 * (i + 1) as f64;
+            let class = ["low", "medium", "high", "deadline"][i % 4];
+            let met = i % 5 != 0;
+            r.record_request(class, l, met);
+            plain.record_request(class, l, met);
+            if i % 2 == 0 {
+                let config = ["int8", "int4"][i % 4 / 2];
+                r.record_batch(config, 8, 5, l);
+                plain.record_batch(config, 8, 5, l);
+            }
+        }
+        recorders[1].record_failed(7);
+        plain.failed += 7;
+        let snap = sharded.snapshot();
+        assert_eq!(snap.completed, plain.completed);
+        assert_eq!(snap.failed, plain.failed);
+        assert_eq!(snap.deadline_met, plain.deadline_met);
+        assert_eq!(snap.deadline_missed, plain.deadline_missed);
+        assert_eq!(snap.batches, plain.batches);
+        assert_eq!(snap.padded_samples, plain.padded_samples);
+        assert_eq!(snap.per_config, plain.per_config);
+        assert_eq!(snap.per_batch_size, plain.per_batch_size);
+        assert_eq!(snap.request_hist.counts, plain.request_hist.counts);
+        assert_eq!(snap.execute_hist.counts, plain.execute_hist.counts);
+        assert_eq!(snap.request_hist.max_s(), plain.request_hist.max_s());
+        assert!((snap.request_hist.sum_s() - plain.request_hist.sum_s()).abs() < 1e-9);
+        for q in [0.5, 0.99, 0.999] {
+            assert_eq!(snap.latency_p(q), plain.latency_p(q), "q={q}");
+        }
+        for (class, m) in &plain.per_class {
+            let s = &snap.per_class[class];
+            assert_eq!(s.completed, m.completed, "{class}");
+            assert_eq!(s.deadline_met, m.deadline_met, "{class}");
+            assert_eq!(s.latency.counts, m.latency.counts, "{class}");
+        }
+        assert_eq!(sharded.resolved(), plain.completed + plain.failed);
+        // Windows: same multiset of retained samples (all 600 fit).
+        let mut got = snap.request_latencies.clone();
+        let mut want = plain.request_latencies.clone();
+        got.sort_by(f64::total_cmp);
+        want.sort_by(f64::total_cmp);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn concurrent_scrapes_are_monotone_and_internally_consistent() {
+        // The scrape-consistency pin: writer threads hammer recorders
+        // while a reader scrapes — every snapshot must show monotone
+        // non-decreasing counters, ordered percentiles, and a histogram
+        // whose count equals its bucket mass (no torn percentile reads);
+        // after the writers join (a release/acquire edge), the fold must
+        // equal the union exactly.
+        const WRITERS: usize = 4;
+        const PER_WRITER: u64 = 3000;
+        let sharded = Arc::new(ShardedMetrics::new(WRITERS));
+        let mut handles = Vec::new();
+        for w in 0..WRITERS {
+            let rec = sharded.recorder();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..PER_WRITER {
+                    let l = 1e-4 + (i as f64 % 97.0) * 1e-4;
+                    rec.record_request(["low", "high"][w % 2], l, i % 7 != 0);
+                    if i % 8 == 0 {
+                        rec.record_batch("int8", 4, 3, l);
+                    }
+                }
+            }));
+        }
+        let mut last_completed = 0u64;
+        let mut last_batches = 0u64;
+        loop {
+            let snap = sharded.snapshot();
+            assert!(
+                snap.completed >= last_completed,
+                "completed went backwards: {} -> {}",
+                last_completed,
+                snap.completed
+            );
+            assert!(snap.batches >= last_batches, "batches went backwards");
+            last_completed = snap.completed;
+            last_batches = snap.batches;
+            let (p50, p99, p999) =
+                (snap.latency_p(0.5), snap.latency_p(0.99), snap.latency_p(0.999));
+            assert!(p50 <= p99 && p99 <= p999, "torn percentiles: {p50} {p99} {p999}");
+            // Internal consistency: the snapshot's count is its bucket
+            // mass by construction; met never exceeds completed per class.
+            assert_eq!(
+                snap.request_hist.count(),
+                snap.request_hist.counts.iter().sum::<u64>()
+            );
+            for (class, c) in &snap.per_class {
+                assert!(c.deadline_met <= c.completed, "{class}");
+            }
+            if snap.completed >= WRITERS as u64 * PER_WRITER {
+                break;
+            }
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let total = WRITERS as u64 * PER_WRITER;
+        let snap = sharded.snapshot();
+        assert_eq!(snap.completed, total);
+        assert_eq!(snap.deadline_met + snap.deadline_missed, total);
+        assert_eq!(snap.request_hist.count(), total);
+        let class_total: u64 = snap.per_class.values().map(|c| c.completed).sum();
+        assert_eq!(class_total, total, "shard-merge totals equal the union");
+        assert_eq!(snap.per_config["int8"], {
+            let batches_per_writer = PER_WRITER.div_ceil(8);
+            WRITERS as u64 * batches_per_writer * 3
+        });
     }
 
     #[test]

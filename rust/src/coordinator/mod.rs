@@ -41,14 +41,14 @@ use std::collections::BTreeMap;
 use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::util::error::{anyhow, Result};
 
 pub use controller::{Budget, BudgetSpec, BudgetTargets, PrecisionController};
 pub use loadgen::{LoadReport, LoadgenOpts, Profile, WorkloadClass, WorkloadSpec};
-pub use metrics::{LatencyHistogram, Metrics};
+pub use metrics::{LatencyHistogram, Metrics, MetricsRecorder, ShardedMetrics};
 pub use server::ServingServer;
 
 use crate::model::zoo;
@@ -253,7 +253,7 @@ impl Default for CoordinatorConfig {
 #[derive(Clone)]
 pub struct Coordinator {
     tx: mpsc::Sender<Request>,
-    metrics: Arc<Mutex<Metrics>>,
+    metrics: Arc<ShardedMetrics>,
     /// Requests accepted by [`Self::submit_spec`] (queue depth is this
     /// minus the resolved count in [`Metrics`]).
     submitted: Arc<AtomicU64>,
@@ -305,8 +305,8 @@ impl Coordinator {
         F: FnOnce() -> Result<Box<dyn InferenceBackend>> + Send + 'static,
     {
         let (tx, rx) = mpsc::channel::<Request>();
-        let metrics = Arc::new(Mutex::new(Metrics::default()));
-        let metrics_worker = Arc::clone(&metrics);
+        let metrics = Arc::new(ShardedMetrics::default());
+        let recorder = metrics.recorder();
 
         // The worker owns the backend; report startup via a channel.
         let (ready_tx, ready_rx) = mpsc::channel::<Result<(usize, usize, Vec<String>), String>>();
@@ -363,7 +363,7 @@ impl Coordinator {
                     controller,
                     cfg.pinned.clone(),
                     rx,
-                    metrics_worker,
+                    recorder,
                     cfg.batch_window,
                 );
             })
@@ -420,18 +420,19 @@ impl Coordinator {
         self.submit(input, budget)?.wait()
     }
 
-    /// Snapshot of the serving metrics.
+    /// Snapshot of the serving metrics: every shard of the lock-free
+    /// [`ShardedMetrics`] folded into one plain [`Metrics`] — scraping
+    /// never blocks the worker's recording.
     pub fn metrics(&self) -> Metrics {
-        self.metrics.lock().unwrap().clone()
+        self.metrics.snapshot()
     }
 
     /// Requests accepted but not yet resolved (completed or failed) —
-    /// they are queued, boarding, or executing. Reads the submission
-    /// counter and the metrics under one lock, so a snapshot is
-    /// self-consistent even under concurrent submissions.
+    /// they are queued, boarding, or executing. Both sides are relaxed
+    /// atomic reads; the subtraction saturates, so a read racing a
+    /// resolution can momentarily under-report depth but never wraps.
     pub fn queue_depth(&self) -> u64 {
-        let m = self.metrics.lock().unwrap();
-        self.submitted.load(Ordering::Relaxed).saturating_sub(m.completed + m.failed)
+        self.submitted.load(Ordering::Relaxed).saturating_sub(self.metrics.resolved())
     }
 
     /// Seconds since the coordinator started (for throughput computation).
@@ -595,7 +596,7 @@ fn worker_loop(
     mut controller: PrecisionController,
     pinned: BTreeMap<Budget, String>,
     rx: mpsc::Receiver<Request>,
-    metrics: Arc<Mutex<Metrics>>,
+    metrics: MetricsRecorder,
     batch_window: Duration,
 ) {
     let manifest = backend.manifest().clone();
@@ -680,16 +681,17 @@ fn worker_loop(
         // ---- Reply + metrics. ----
         match result {
             Ok(logits) => {
-                {
-                    let mut m = metrics.lock().unwrap();
-                    m.record_batch(&config, compiled, n as u64, observed);
-                }
+                metrics.record_batch(&config, compiled, n as u64, observed);
                 for (i, req) in batch.into_iter().enumerate() {
                     let latency_s = req.submitted.elapsed().as_secs_f64();
                     let target_s = controller.target_for(&req.spec.budget).as_secs_f64();
                     let met_deadline = latency_s <= target_s;
                     let row = logits[i * classes..(i + 1) * classes].to_vec();
-                    metrics.lock().unwrap().record_request(
+                    // Record before replying: the reply delivery is the
+                    // release/acquire edge that makes these relaxed
+                    // stores visible to whoever scrapes after hearing
+                    // back, so quiesced documents reconcile exactly.
+                    metrics.record_request(
                         req.spec.budget.class_label(),
                         latency_s,
                         met_deadline,
@@ -706,9 +708,7 @@ fn worker_loop(
             }
             Err(e) => {
                 let msg = format!("{e:#}");
-                let mut m = metrics.lock().unwrap();
-                m.failed += batch.len() as u64;
-                drop(m);
+                metrics.record_failed(batch.len() as u64);
                 for req in batch {
                     let _ = req.reply.send(Err(msg.clone()));
                 }

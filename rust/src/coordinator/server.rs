@@ -44,7 +44,7 @@
 use std::io::{self, BufReader};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
 use std::thread;
 use std::time::Duration;
 
@@ -52,7 +52,8 @@ use super::controller::{Budget, BudgetSpec};
 use super::{Coordinator, Priority, RequestSpec, Response};
 use crate::sim::transport::{
     err_doc, http_request_json, read_request, serve_exchanges, write_response, AdmissionGate,
-    ConnPolicy, ConnPool, DeadlineStream, Request,
+    ConnPolicy, ConnPool, ConnWorkerPool, DeadlineStream, ReplyBody, Request,
+    ACCEPT_BACKOFF_MAX, ACCEPT_BACKOFF_MIN,
 };
 use crate::util::json::Json;
 
@@ -76,8 +77,8 @@ pub const MAX_DEADLINE_MS: f64 = 86_400_000.0;
 pub const CODE_SERVER_BUSY: &str = "server-busy";
 
 /// Admission control and connection policy for the serving front end: a
-/// hard cap on concurrent connections (each holds one handler thread
-/// and, for `/infer`, one pending coordinator reply). Connections beyond
+/// hard cap on concurrent connections (each holds one pooled handler
+/// thread and, for `/infer`, one pending coordinator reply). Connections beyond
 /// the cap are answered `503` + [`CODE_SERVER_BUSY`] by a short-deadline
 /// rejection handler that does no coordinator work — the same
 /// backpressure discipline the sweep worker applies to `POST /shard`.
@@ -95,18 +96,28 @@ pub struct ServeOpts {
     /// Requests served on one connection before the server answers the
     /// last with `connection: close` and hangs up (clamped to ≥ 1).
     pub max_requests_per_conn: usize,
+    /// Size of the bounded connection-worker pool: handler threads are
+    /// spawned lazily up to this cap and then reused across keep-alive
+    /// connections (idle workers park, they are not destroyed). `0`
+    /// falls back to spawning one short-lived thread per connection —
+    /// the legacy behaviour, kept as the A/B baseline for the `hotpath`
+    /// bench. CLI: `bf-imna serve --serve-threads N`.
+    pub serve_threads: usize,
 }
 
 impl Default for ServeOpts {
     /// 256 concurrent connections — far above the worker thread's
     /// throughput needs, low enough that a connection flood cannot grow
     /// threads and queued requests without bound. Keep-alive connections
-    /// idle out after 60 s and are recycled after 1024 requests.
+    /// idle out after 60 s and are recycled after 1024 requests. The
+    /// worker pool matches the connection budget, so an admitted
+    /// connection never waits for a handler thread.
     fn default() -> Self {
         ServeOpts {
             max_concurrent_requests: 256,
             idle_timeout: Duration::from_secs(60),
             max_requests_per_conn: 1024,
+            serve_threads: 256,
         }
     }
 }
@@ -333,6 +344,11 @@ pub struct FrontendStats {
     /// Connections dropped without a reply (both the main budget and the
     /// rejection pool were exhausted).
     pub dropped: AtomicU64,
+    /// `accept()` errors observed by the accept loop (e.g. fd exhaustion
+    /// under a connection flood). The loop backs off exponentially while
+    /// these persist; the counter makes the stall visible on `/metrics`
+    /// instead of silent.
+    pub accept_errors: AtomicU64,
 }
 
 impl FrontendStats {
@@ -344,6 +360,7 @@ impl FrontendStats {
             ("open", Json::num(open as f64)),
             ("rejected_busy", Json::num(self.rejected_busy.load(Ordering::Relaxed) as f64)),
             ("dropped", Json::num(self.dropped.load(Ordering::Relaxed) as f64)),
+            ("accept_errors", Json::num(self.accept_errors.load(Ordering::Relaxed) as f64)),
         ])
     }
 }
@@ -356,12 +373,17 @@ struct ServeState {
     coordinator: Coordinator,
     stats: Arc<FrontendStats>,
     gate: Arc<AdmissionGate>,
+    /// The `/healthz` body, serialized once at spawn: the model contract
+    /// it carries is immutable for the server's life, so the hot
+    /// liveness probe never re-renders JSON.
+    healthz: Arc<str>,
 }
 
 /// A running serving front end: a TCP listener routing `/infer`,
-/// `/healthz`, `/stats`, and `/metrics` onto a [`Coordinator`], one
-/// handler thread per connection (the coordinator handle is cheap to
-/// clone; its worker thread serializes execution).
+/// `/healthz`, `/stats`, and `/metrics` onto a [`Coordinator`], with
+/// connections handled on a bounded pool of reusable worker threads
+/// ([`ServeOpts::serve_threads`]; the coordinator handle is cheap to
+/// clone, and its worker thread serializes execution).
 ///
 /// ```no_run
 /// use bf_imna::coordinator::{Coordinator, CoordinatorConfig, ServingServer};
@@ -402,14 +424,26 @@ impl ServingServer {
             idle_timeout: opts.idle_timeout,
             max_requests: opts.max_requests_per_conn,
         };
+        let healthz: Arc<str> = Arc::from(health_doc(&coordinator).to_string().as_str());
         let state = Arc::new(ServeState {
             coordinator,
             stats: Arc::new(FrontendStats::default()),
             gate,
+            healthz,
         });
+        let conn_pool = ConnWorkerPool::new("bf-imna-serve", opts.serve_threads);
+        // Rejections ride a small dedicated pool so an overload reply
+        // never waits behind busy keep-alive handlers (in legacy
+        // spawn-per-connection mode they spawn too).
+        let reject_pool = ConnWorkerPool::new(
+            "bf-imna-reject",
+            if opts.serve_threads == 0 { 0 } else { REJECT_POOL },
+        );
         let handle = {
             let stop = Arc::clone(&stop);
-            thread::spawn(move || accept_loop(listener, state, stop, reject_gate, policy))
+            thread::spawn(move || {
+                accept_loop(listener, state, stop, reject_gate, policy, conn_pool, reject_pool)
+            })
         };
         Ok(ServingServer { addr, stop, handle: Some(handle) })
     }
@@ -451,21 +485,35 @@ impl Drop for ServingServer {
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn accept_loop(
     listener: TcpListener,
     state: Arc<ServeState>,
     stop: Arc<AtomicBool>,
     reject_gate: Arc<AdmissionGate>,
     policy: ConnPolicy,
+    conn_pool: ConnWorkerPool,
+    reject_pool: ConnWorkerPool,
 ) {
+    let mut backoff = ACCEPT_BACKOFF_MIN;
     loop {
         let stream = match listener.accept() {
-            Ok((stream, _)) => stream,
+            Ok((stream, _)) => {
+                backoff = ACCEPT_BACKOFF_MIN;
+                stream
+            }
             Err(_) => {
+                // A stop request surfaces as an accept error (the
+                // shutdown path pokes the listener); everything else is
+                // transient (e.g. fd exhaustion under a flood) — count
+                // it and back off exponentially instead of spinning at a
+                // fixed cadence.
                 if stop.load(Ordering::SeqCst) {
                     break;
                 }
-                thread::sleep(Duration::from_millis(50));
+                state.stats.accept_errors.fetch_add(1, Ordering::Relaxed);
+                thread::sleep(backoff);
+                backoff = (backoff * 2).min(ACCEPT_BACKOFF_MAX);
                 continue;
             }
         };
@@ -475,18 +523,20 @@ fn accept_loop(
         // Connection budget: over the cap, hand the connection to a
         // short-deadline rejection handler instead of a full one — no
         // coordinator work, no long-lived exchange deadline. The
-        // rejection handlers are themselves pooled: past REJECT_POOL of
-        // them, the connection is simply dropped — under a genuine flood,
-        // a TCP-level refusal is the only honest (and bounded) signal
-        // left, and total thread count stays capped either way. Every
-        // outcome is counted, so `/metrics` shows the overload.
+        // rejection handlers ride their own small pool so an overload
+        // reply never queues behind busy keep-alive handlers; past
+        // REJECT_POOL of them, the connection is simply dropped — under
+        // a genuine flood, a TCP-level refusal is the only honest (and
+        // bounded) signal left, and total thread count stays capped
+        // either way. Every outcome is counted, so `/metrics` shows the
+        // overload.
         let Some(permit) = AdmissionGate::admit(&state.gate) else {
             if let Some(reject_permit) = AdmissionGate::admit(&reject_gate) {
                 state.stats.rejected_busy.fetch_add(1, Ordering::Relaxed);
-                thread::spawn(move || {
+                reject_pool.execute(Box::new(move || {
                     let _permit = reject_permit;
                     reject_busy(stream);
-                });
+                }));
             } else {
                 state.stats.dropped.fetch_add(1, Ordering::Relaxed);
             }
@@ -494,14 +544,17 @@ fn accept_loop(
         };
         state.stats.accepted.fetch_add(1, Ordering::Relaxed);
         let state = Arc::clone(&state);
-        thread::spawn(move || {
-            // The permit rides the handler thread for the connection's
+        conn_pool.execute(Box::new(move || {
+            // The permit rides the handler job for the connection's
             // whole keep-alive life; dropping it (normal return or
             // panic) frees the slot.
             let _permit = permit;
             handle_connection(stream, policy, &state);
-        });
+        }));
     }
+    // Unpark idle pool workers so they exit; in-flight connections finish.
+    conn_pool.shutdown();
+    reject_pool.shutdown();
 }
 
 /// Tight deadline for over-budget connections: long enough for a
@@ -523,11 +576,17 @@ fn reject_busy(stream: TcpStream) {
     };
     let _ = read_request(&mut BufReader::new(reader));
     let mut writer = DeadlineStream::new(stream, REJECT_DEADLINE);
-    let reply = Json::obj([
-        ("code", Json::str(CODE_SERVER_BUSY)),
-        ("error", Json::str("serving front end at connection capacity")),
-    ]);
-    let _ = write_response(&mut writer, 503, reply.to_string().as_bytes());
+    // The 503 body is static — serialize it once per process, not once
+    // per rejected connection (a flood sends many).
+    static BODY: OnceLock<String> = OnceLock::new();
+    let body = BODY.get_or_init(|| {
+        Json::obj([
+            ("code", Json::str(CODE_SERVER_BUSY)),
+            ("error", Json::str("serving front end at connection capacity")),
+        ])
+        .to_string()
+    });
+    let _ = write_response(&mut writer, 503, body.as_bytes());
 }
 
 /// The shared keep-alive loop with the serving protocol routed in — the
@@ -536,22 +595,23 @@ fn reject_busy(stream: TcpStream) {
 fn handle_connection(stream: TcpStream, policy: ConnPolicy, state: &ServeState) {
     serve_exchanges(stream, &policy, |parsed| match parsed {
         Ok(req) => route(req, state),
-        Err(e) => (e.status, err_doc(e.message.clone())),
+        Err(e) => (e.status, err_doc(e.message.clone()).into()),
     });
 }
 
-fn route(req: &Request, state: &ServeState) -> (u16, Json) {
+fn route(req: &Request, state: &ServeState) -> (u16, ReplyBody) {
     let coordinator = &state.coordinator;
-    match (req.method.as_str(), req.path.as_str()) {
-        ("GET", "/healthz") => (200, health_doc(coordinator)),
-        ("GET", "/stats") => {
-            (200, coordinator.metrics().to_json(coordinator.uptime_s()))
-        }
+    let (status, doc) = match (req.method.as_str(), req.path.as_str()) {
+        // The health body was serialized at spawn; the probe path does
+        // no JSON work at all.
+        ("GET", "/healthz") => return (200, ReplyBody::Preserialized(Arc::clone(&state.healthz))),
+        ("GET", "/stats") => (200, coordinator.metrics().to_json(coordinator.uptime_s())),
         ("GET", "/metrics") => (200, metrics_doc(state)),
         ("POST", "/infer") => handle_infer(&req.body, coordinator),
         ("GET", _) | ("POST", _) => (404, err_doc(format!("no such endpoint {:?}", req.path))),
         _ => (405, err_doc(format!("method {:?} not allowed", req.method))),
-    }
+    };
+    (status, doc.into())
 }
 
 /// Build the `GET /metrics` document: the coordinator's histogram-backed

@@ -136,6 +136,9 @@ COMMANDS:
                                seconds (default 60)
              --conn-requests N  requests served per connection before a
                                clean connection: close (default 1024)
+             --worker-threads N  pooled connection-handler threads reused
+                               across keep-alive connections (default 64;
+                               0 = spawn one thread per connection)
              --fleet HOST:PORT  register with a `fleet` controller and
                                heartbeat the worker's address + live
                                stats every --heartbeat-s seconds
@@ -228,6 +231,9 @@ COMMANDS:
                                seconds (default 60)
              --conn-requests N  requests served per connection before a
                                clean connection: close (default 1024)
+             --serve-threads N  pooled connection-handler threads reused
+                               across keep-alive connections (default 256;
+                               0 = spawn one thread per connection)
              endpoints: POST /infer   one request (single-sample 'input'
                                or multi-sample 'inputs' with per-sample
                                verdicts under 'results')
@@ -275,7 +281,8 @@ COMMANDS:
              --spec FILE       explicit WorkloadSpec JSON (overrides
                                --profile/--rps/--duration-s/--seed)
              --workers N       sender threads bounding in-flight
-                               requests (default 8)
+                               requests (default: the machine's
+                               available parallelism)
              --timeout-s N     per-request HTTP timeout (default 30)
              --out FILE        write the SLO report JSON (default:
                                print it to stdout)
@@ -504,6 +511,9 @@ fn cmd_serve_worker(opts: &BTreeMap<String, String>) -> CliResult {
     }
     if let Some(s) = opts.get("conn-requests") {
         wopts.max_requests_per_conn = s.parse::<usize>()?.max(1);
+    }
+    if let Some(s) = opts.get("worker-threads") {
+        wopts.worker_threads = s.parse()?;
     }
     let server = transport::WorkerServer::spawn_with(addr, engine, wopts)
         .map_err(|e| format!("{addr}: {e}"))?;
@@ -838,6 +848,9 @@ fn cmd_serve(opts: &BTreeMap<String, String>) -> CliResult {
     if let Some(s) = opts.get("conn-requests") {
         sopts.max_requests_per_conn = s.parse::<usize>()?.max(1);
     }
+    if let Some(s) = opts.get("serve-threads") {
+        sopts.serve_threads = s.parse()?;
+    }
     let server =
         ServingServer::spawn_with(addr, coord, sopts).map_err(|e| format!("{addr}: {e}"))?;
     eprintln!(
@@ -1126,6 +1139,32 @@ fn cmd_loadgen(opts: &BTreeMap<String, String>) -> CliResult {
     t.row(vec![
         "client p999".to_string(),
         format!("{} s", fmt_eng(report.total.latency.percentile(0.999), 3)),
+    ]);
+    // Saturation diagnostics: how hard the connection pool and the sender
+    // (worker) pool were driven — a saturated sender pool means measured
+    // latency includes client-side queueing, so add --workers.
+    let conn_total = report.pool.fresh_connects + report.pool.reuses;
+    let conn_reuse = if conn_total > 0 {
+        report.pool.reuses as f64 / conn_total as f64
+    } else {
+        0.0
+    };
+    t.row(vec![
+        "conn pool".to_string(),
+        format!(
+            "{} connects / {} reuses ({:.0}% reuse)",
+            report.pool.fresh_connects,
+            report.pool.reuses,
+            100.0 * conn_reuse
+        ),
+    ]);
+    t.row(vec![
+        "sender pool".to_string(),
+        format!(
+            "{} senders | {:.0}% utilized",
+            report.senders,
+            100.0 * report.sender_utilization()
+        ),
     ]);
     for (name, c) in &report.per_class {
         t.row(vec![

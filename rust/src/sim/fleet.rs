@@ -51,6 +51,7 @@ use super::shard::{self, full_doc, PointRecord, SliceRequest, SliceResult, Sweep
 use super::store::ResultStore;
 use super::transport::{
     err_doc, http_request, prewarm_worker, serve_exchanges, ConnPolicy, ConnPool, Request,
+    ACCEPT_BACKOFF_MAX, ACCEPT_BACKOFF_MIN,
     WorkerStatsHandle, CODE_FINGERPRINT_MISMATCH, CODE_WORKER_BUSY,
 };
 use crate::coordinator::controller::Ewma;
@@ -186,14 +187,19 @@ fn fleet_accept_loop(listener: TcpListener, stop: Arc<AtomicBool>, opts: FleetOp
         idle_timeout: Duration::from_secs(60),
         max_requests: 1024,
     };
+    let mut backoff = ACCEPT_BACKOFF_MIN;
     loop {
         let stream = match listener.accept() {
-            Ok((stream, _)) => stream,
+            Ok((stream, _)) => {
+                backoff = ACCEPT_BACKOFF_MIN;
+                stream
+            }
             Err(_) => {
                 if stop.load(Ordering::SeqCst) {
                     break;
                 }
-                thread::sleep(Duration::from_millis(50));
+                thread::sleep(backoff);
+                backoff = (backoff * 2).min(ACCEPT_BACKOFF_MAX);
                 continue;
             }
         };
@@ -204,8 +210,11 @@ fn fleet_accept_loop(listener: TcpListener, stop: Arc<AtomicBool>, opts: FleetOp
         let fingerprint = fingerprint.clone();
         thread::spawn(move || {
             serve_exchanges(stream, &policy, |parsed| match parsed {
-                Ok(req) => fleet_route(req, &registry, &fingerprint, opts.expiry),
-                Err(e) => (e.status, err_doc(e.message.clone())),
+                Ok(req) => {
+                    let (status, doc) = fleet_route(req, &registry, &fingerprint, opts.expiry);
+                    (status, doc.into())
+                }
+                Err(e) => (e.status, err_doc(e.message.clone()).into()),
             });
         });
     }

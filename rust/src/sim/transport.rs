@@ -61,12 +61,12 @@
 //! retried. `rust/tests/transport.rs` injects worker failures and asserts
 //! exactly this.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::fmt;
 use std::io::{self, BufRead, BufReader, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::thread;
 use std::time::{Duration, Instant};
 
@@ -376,6 +376,32 @@ pub fn write_response_conn(
 /// [`write_response_conn`] for a one-shot exchange.
 pub fn write_response(w: &mut impl Write, status: u16, body: &[u8]) -> io::Result<()> {
     write_response_conn(w, status, body, true)
+}
+
+/// [`write_response_conn`] with the head formatted into a caller-owned
+/// scratch buffer — the per-exchange fast path inside [`serve_exchanges`]
+/// (one connection reuses one head buffer instead of allocating per
+/// response). Emits byte-identical head text.
+fn write_response_reusing(
+    w: &mut impl Write,
+    status: u16,
+    body: &[u8],
+    close: bool,
+    head: &mut String,
+) -> io::Result<()> {
+    use std::fmt::Write as _;
+    head.clear();
+    let _ = write!(
+        head,
+        "HTTP/1.1 {status} {}\r\ncontent-type: application/json\r\ncontent-length: {}\r\n\
+         connection: {}\r\n\r\n",
+        reason_phrase(status),
+        body.len(),
+        if close { "close" } else { "keep-alive" }
+    );
+    w.write_all(head.as_bytes())?;
+    w.write_all(body)?;
+    w.flush()
 }
 
 fn reason_phrase(status: u16) -> &'static str {
@@ -826,6 +852,7 @@ struct WorkerStats {
     protocol_errors: AtomicUsize,
     busy_rejections: AtomicUsize,
     connections: AtomicUsize,
+    accept_errors: AtomicUsize,
 }
 
 /// Worker-side admission control for `POST /shard`: at most
@@ -850,18 +877,27 @@ pub struct WorkerOpts {
     /// last with `connection: close` and hangs up (clamped to ≥ 1) — a
     /// cap so one pipelining hog cannot pin a handler thread forever.
     pub max_requests_per_conn: usize,
+    /// Connection-worker threads in the accept loop's pool: accepted
+    /// sockets are handed to a bounded pool of reusable handler threads
+    /// (idle workers park, they are not destroyed) instead of spawning a
+    /// thread per connection. `0` selects the legacy
+    /// spawn-per-connection mode (one thread per accepted socket) — kept
+    /// as the A/B baseline `perf_serving`'s hotpath bench measures
+    /// against. CLI flag: `serve-worker --worker-threads N`.
+    pub worker_threads: usize,
 }
 
 impl Default for WorkerOpts {
     /// Two concurrent shard computations (each is internally parallel),
     /// four waiters; keep-alive connections idle out after 60 s and are
-    /// recycled after 1024 requests.
+    /// recycled after 1024 requests; up to 64 pooled connection workers.
     fn default() -> Self {
         WorkerOpts {
             max_concurrent_shards: 2,
             admission_queue: 4,
             idle_timeout: Duration::from_secs(60),
             max_requests_per_conn: 1024,
+            worker_threads: 64,
         }
     }
 }
@@ -881,6 +917,39 @@ pub(crate) struct ConnPolicy {
     pub(crate) max_requests: usize,
 }
 
+/// A routed reply body: either a JSON document serialized per exchange
+/// (into the connection's reusable buffer), or a body preserialized once
+/// and shared across exchanges — the fast path for static replies on the
+/// hot path (`/healthz`, busy rejections).
+pub(crate) enum ReplyBody {
+    /// Serialize this document into the connection's scratch buffer.
+    Doc(Json),
+    /// An already-serialized JSON body, written as-is.
+    Preserialized(Arc<str>),
+}
+
+impl From<Json> for ReplyBody {
+    fn from(doc: Json) -> ReplyBody {
+        ReplyBody::Doc(doc)
+    }
+}
+
+impl ReplyBody {
+    /// The serialized body bytes; `buf` is per-connection scratch reused
+    /// across exchanges for the `Doc` case.
+    fn bytes<'a>(&'a self, buf: &'a mut String) -> &'a [u8] {
+        match self {
+            ReplyBody::Doc(doc) => {
+                use std::fmt::Write as _;
+                buf.clear();
+                let _ = write!(buf, "{doc}");
+                buf.as_bytes()
+            }
+            ReplyBody::Preserialized(s) => s.as_bytes(),
+        }
+    }
+}
+
 /// The shared server-side keep-alive loop: read framed requests off one
 /// socket until the peer closes, asks to close, errors, idles out, or
 /// hits the per-connection request cap; `route` maps each parsed request
@@ -890,10 +959,14 @@ pub(crate) struct ConnPolicy {
 ///
 /// One `BufReader` lives for the whole connection: pipelined requests the
 /// peer sent ahead sit in its buffer, and recreating it per exchange
-/// would silently drop them.
+/// would silently drop them. The response body and head buffers likewise
+/// live for the whole connection — a keep-alive exchange allocates
+/// nothing on the write side once the buffers have grown to the working
+/// set ([`ReplyBody`] carries preserialized bodies for fully static
+/// replies).
 pub(crate) fn serve_exchanges<F>(stream: TcpStream, policy: &ConnPolicy, mut route: F)
 where
-    F: FnMut(Result<&Request, &HttpError>) -> (u16, Json),
+    F: FnMut(Result<&Request, &HttpError>) -> (u16, ReplyBody),
 {
     let reader = match stream.try_clone() {
         Ok(s) => s,
@@ -901,6 +974,8 @@ where
     };
     let mut reader = BufReader::new(DeadlineStream::new(reader, policy.idle_timeout));
     let mut writer = DeadlineStream::new(stream, policy.exchange_deadline);
+    let mut body_buf = String::new();
+    let mut head_buf = String::new();
     let max = policy.max_requests.max(1);
     for served in 1..=max {
         // Idle phase: wait (under the idle budget) for the first byte of
@@ -932,7 +1007,8 @@ where
         };
         let (status, reply) = route(parsed.as_ref());
         writer.rearm(policy.exchange_deadline);
-        if write_response_conn(&mut writer, status, reply.to_string().as_bytes(), close).is_err()
+        let body = reply.bytes(&mut body_buf);
+        if write_response_reusing(&mut writer, status, body, close, &mut head_buf).is_err()
             || close
         {
             return;
@@ -1002,8 +1078,140 @@ impl AdmissionGate {
     }
 }
 
+/// First back-off after an `accept()` error: short enough that one
+/// spurious error costs nothing.
+pub(crate) const ACCEPT_BACKOFF_MIN: Duration = Duration::from_millis(1);
+/// Back-off ceiling under a persistent accept failure (e.g. fd
+/// exhaustion during a connection flood): the loop doubles from
+/// [`ACCEPT_BACKOFF_MIN`] up to this cap and resets on the next
+/// successful accept.
+pub(crate) const ACCEPT_BACKOFF_MAX: Duration = Duration::from_secs(1);
+
+/// A boxed connection-handler job queued onto a [`ConnWorkerPool`].
+type PoolJob = Box<dyn FnOnce() + Send>;
+
+/// State behind the pool's one lock: the pending-job queue plus the
+/// spawned/idle thread accounting that decides between waking a parked
+/// worker and spawning a new one.
+#[derive(Default)]
+struct PoolState {
+    jobs: VecDeque<PoolJob>,
+    threads: usize,
+    idle: usize,
+    shutdown: bool,
+}
+
+struct PoolShared {
+    state: Mutex<PoolState>,
+    wake: Condvar,
+    cap: usize,
+}
+
+/// A bounded pool of reusable connection-handler threads. Threads are
+/// spawned lazily up to `cap` and then reused across keep-alive
+/// connections; idle workers park on a condvar (they are never
+/// destroyed), so a busy accept loop pays one queue push + wake per
+/// connection instead of one `thread::spawn`. With `cap == 0` the pool
+/// degrades to spawn-per-connection — the legacy behaviour, kept as the
+/// A/B baseline for the `hotpath` bench.
+///
+/// The pool only bounds *handler threads*; admission control (how many
+/// requests may compute at once) stays with [`AdmissionGate`] permits
+/// carried inside the queued jobs.
+#[derive(Clone)]
+pub(crate) struct ConnWorkerPool {
+    inner: Arc<PoolShared>,
+    name: &'static str,
+}
+
+impl ConnWorkerPool {
+    /// A pool of at most `cap` reusable threads named `{name}-conn`
+    /// (`cap == 0` means spawn-per-connection).
+    pub(crate) fn new(name: &'static str, cap: usize) -> ConnWorkerPool {
+        ConnWorkerPool {
+            inner: Arc::new(PoolShared {
+                state: Mutex::new(PoolState::default()),
+                wake: Condvar::new(),
+                cap,
+            }),
+            name,
+        }
+    }
+
+    /// Run `job` on a pool thread: wake an idle worker if one is parked,
+    /// spawn a new one while under the cap, otherwise leave the job
+    /// queued for the next worker to free up. After [`Self::shutdown`]
+    /// the job is dropped (its permit, if any, releases with it).
+    pub(crate) fn execute(&self, job: PoolJob) {
+        if self.inner.cap == 0 {
+            // Legacy mode: one short-lived thread per connection.
+            let _ = thread::Builder::new()
+                .name(format!("{}-conn", self.name))
+                .spawn(move || job());
+            return;
+        }
+        let mut st = self.inner.state.lock().unwrap();
+        if st.shutdown {
+            return;
+        }
+        st.jobs.push_back(job);
+        if st.idle > 0 {
+            drop(st);
+            self.inner.wake.notify_one();
+        } else if st.threads < self.inner.cap {
+            st.threads += 1;
+            drop(st);
+            let inner = Arc::clone(&self.inner);
+            let spawned = thread::Builder::new()
+                .name(format!("{}-conn", self.name))
+                .spawn(move || pool_worker(inner));
+            if spawned.is_err() {
+                self.inner.state.lock().unwrap().threads -= 1;
+            }
+        }
+        // else: every worker is busy and the cap is reached — the job
+        // waits in the queue; the next worker to finish picks it up.
+    }
+
+    /// Stop the pool: drop queued jobs and unpark every idle worker so it
+    /// exits. Jobs already running finish on their own (the threads are
+    /// detached), which matches the accept loops' "already-accepted
+    /// connections complete" shutdown contract.
+    pub(crate) fn shutdown(&self) {
+        let mut st = self.inner.state.lock().unwrap();
+        st.shutdown = true;
+        st.jobs.clear();
+        drop(st);
+        self.inner.wake.notify_all();
+    }
+}
+
+fn pool_worker(inner: Arc<PoolShared>) {
+    loop {
+        let job = {
+            let mut st = inner.state.lock().unwrap();
+            loop {
+                if let Some(job) = st.jobs.pop_front() {
+                    break job;
+                }
+                if st.shutdown {
+                    st.threads -= 1;
+                    return;
+                }
+                st.idle += 1;
+                st = inner.wake.wait(st).unwrap();
+                st.idle -= 1;
+            }
+        };
+        // A panicking connection handler must not shrink the pool's
+        // effective capacity, so contain it here and keep serving.
+        let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job));
+    }
+}
+
 /// A running sweep worker: a TCP listener serving the shard protocol on a
-/// background thread, with one handler thread per connection (the engine
+/// background thread, with connections handled on a bounded pool of
+/// reusable worker threads ([`WorkerOpts::worker_threads`]; the engine
 /// itself parallelizes each shard internally, and [`crate::mapper::PlanCache`]
 /// is thread-safe, so concurrent shard requests are fine).
 ///
@@ -1068,12 +1276,13 @@ impl WorkerServer {
             idle_timeout: opts.idle_timeout,
             max_requests: opts.max_requests_per_conn,
         };
+        let pool = ConnWorkerPool::new("bf-imna-worker", opts.worker_threads);
         let handle = {
             let engine = Arc::clone(&engine);
             let stop = Arc::clone(&stop);
             let stats = Arc::clone(&stats);
             let gate = Arc::clone(&gate);
-            thread::spawn(move || accept_loop(listener, engine, stop, stats, gate, policy))
+            thread::spawn(move || accept_loop(listener, engine, stop, stats, gate, policy, pool))
         };
         Ok(WorkerServer { addr, stop, handle: Some(handle), engine, stats, gate })
     }
@@ -1141,17 +1350,27 @@ fn accept_loop(
     stats: Arc<WorkerStats>,
     gate: Arc<AdmissionGate>,
     policy: ConnPolicy,
+    pool: ConnWorkerPool,
 ) {
+    let mut backoff = ACCEPT_BACKOFF_MIN;
     loop {
         let stream = match listener.accept() {
-            Ok((stream, _)) => stream,
+            Ok((stream, _)) => {
+                backoff = ACCEPT_BACKOFF_MIN;
+                stream
+            }
             Err(_) => {
+                // A stop request surfaces as an accept error (the
+                // shutdown path pokes the listener); everything else is
+                // a transient failure (e.g. fd exhaustion under a
+                // connection flood) — count it, back off exponentially
+                // instead of busy-spinning at a fixed cadence, and retry.
                 if stop.load(Ordering::SeqCst) {
                     break;
                 }
-                // Persistent accept errors (e.g. fd exhaustion under a
-                // connection flood) would otherwise busy-spin this thread.
-                thread::sleep(Duration::from_millis(50));
+                stats.accept_errors.fetch_add(1, Ordering::Relaxed);
+                thread::sleep(backoff);
+                backoff = (backoff * 2).min(ACCEPT_BACKOFF_MAX);
                 continue;
             }
         };
@@ -1162,8 +1381,10 @@ fn accept_loop(
         let stats = Arc::clone(&stats);
         let gate = Arc::clone(&gate);
         stats.connections.fetch_add(1, Ordering::Relaxed);
-        thread::spawn(move || handle_connection(stream, policy, &engine, &stats, &gate));
+        pool.execute(Box::new(move || handle_connection(stream, policy, &engine, &stats, &gate)));
     }
+    // Unpark idle pool workers so they exit; in-flight connections finish.
+    pool.shutdown();
     // The listener drops here: the port closes and peers see refusals.
 }
 
@@ -1184,7 +1405,7 @@ fn handle_connection(
         Ok(req) => route(req, engine, stats, gate),
         Err(e) => {
             stats.protocol_errors.fetch_add(1, Ordering::Relaxed);
-            (e.status, err_doc(e.message.clone()))
+            (e.status, err_doc(e.message.clone()).into())
         }
     });
 }
@@ -1193,21 +1414,31 @@ pub(crate) fn err_doc(message: impl Into<String>) -> Json {
     Json::obj([("error", Json::str(message.into()))])
 }
 
+/// The worker's `/healthz` reply, serialized once per process: the hot
+/// liveness probe never re-renders JSON.
+fn healthz_reply() -> ReplyBody {
+    static BODY: OnceLock<Arc<str>> = OnceLock::new();
+    let body =
+        BODY.get_or_init(|| Arc::from(Json::obj([("ok", Json::Bool(true))]).to_string().as_str()));
+    ReplyBody::Preserialized(Arc::clone(body))
+}
+
 fn route(
     req: &Request,
     engine: &SweepEngine,
     stats: &WorkerStats,
     gate: &Arc<AdmissionGate>,
-) -> (u16, Json) {
-    match (req.method.as_str(), req.path.as_str()) {
-        ("GET", "/healthz") => (200, Json::obj([("ok", Json::Bool(true))])),
+) -> (u16, ReplyBody) {
+    let (status, doc) = match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => return (200, healthz_reply()),
         ("GET", "/stats") => (200, stats_doc(engine, stats, gate)),
         ("POST", "/shard") => handle_shard(&req.body, engine, stats, gate),
         ("POST", "/slice") => handle_slice(&req.body, engine, stats, gate),
         ("POST", "/cache") => handle_cache(&req.body, engine, stats),
         ("GET", _) | ("POST", _) => (404, err_doc(format!("no such endpoint {:?}", req.path))),
         _ => (405, err_doc(format!("method {:?} not allowed", req.method))),
-    }
+    };
+    (status, doc.into())
 }
 
 fn stats_doc(engine: &SweepEngine, stats: &WorkerStats, gate: &AdmissionGate) -> Json {
@@ -1219,6 +1450,7 @@ fn stats_doc(engine: &SweepEngine, stats: &WorkerStats, gate: &AdmissionGate) ->
         ("protocol_errors", Json::num(stats.protocol_errors.load(Ordering::Relaxed) as f64)),
         ("busy_rejections", Json::num(stats.busy_rejections.load(Ordering::Relaxed) as f64)),
         ("connections", Json::num(stats.connections.load(Ordering::Relaxed) as f64)),
+        ("accept_errors", Json::num(stats.accept_errors.load(Ordering::Relaxed) as f64)),
         ("shards_in_flight", Json::num(gate.running() as f64)),
         (
             "cache",

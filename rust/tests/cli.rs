@@ -45,7 +45,7 @@ fn help_covers_every_command_and_sweep_service_flag() {
         "--batch-hint", "--time-scale", "--stats", "--max-requests", "--idle-timeout-s",
         "--conn-requests", "--pool", "--count", "--batch", "--rps", "--duration-s", "--profile",
         "--fleet", "--store", "--advertise", "--heartbeat-s", "--expiry-s", "--max-slice",
-        "--grace-s",
+        "--grace-s", "--serve-threads", "--worker-threads",
     ] {
         assert!(text.contains(flag), "help does not mention flag '{flag}'");
     }

@@ -731,3 +731,114 @@ fn metrics_endpoint_reconciles_with_stats_over_the_wire() {
     );
     server.shutdown();
 }
+
+#[test]
+fn racing_scrapes_stay_monotone_and_internally_consistent() {
+    // Loadgen traffic races `/metrics` and `/stats` scrapes. The sharded
+    // atomic metrics promise (all stores Relaxed, merged at scrape time):
+    // every mid-flight document is internally consistent — ordered
+    // percentiles, clamped per-class counters — and shared counters only
+    // ever move forward across scrapes. Cross-counter identities like
+    // `met + missed == completed` are only owed at quiescence, so those
+    // are checked after the traffic thread joins.
+    let c = start(false);
+    let server = ServingServer::spawn("127.0.0.1:0", c).expect("bind serving server");
+    let addr = server.addr().to_string();
+    let timeout = Duration::from_secs(10);
+
+    let spec = WorkloadSpec::builtin("constant", 150.0, 0.8, 11).expect("builtin spec");
+    let opts = LoadgenOpts { workers: 3, timeout };
+    let gen_addr = addr.clone();
+    let traffic = thread::spawn(move || {
+        loadgen::run_loadgen(&gen_addr, &spec, &opts).expect("loadgen run under scrapes")
+    });
+
+    let mut last_completed = -1.0;
+    let mut last_accepted = -1.0;
+    let mut scrapes = 0u32;
+    while scrapes < 3 || !traffic.is_finished() {
+        let m = serving::fetch_metrics(&addr, timeout).expect("GET /metrics mid-load");
+        let s = serving::fetch_stats(&addr, timeout).expect("GET /stats mid-load");
+        scrapes += 1;
+
+        // Counters never run backwards, within or across documents (the
+        // /stats scrape happens strictly after the /metrics scrape).
+        let completed = num(&m, "completed");
+        assert!(completed >= last_completed, "completed went backwards:\n{m}");
+        assert!(num(&s, "completed") >= completed, "later scrape saw fewer:\n{m}\n{s}");
+        last_completed = num(&s, "completed");
+        let accepted = num(&m, "connections.accepted");
+        assert!(accepted >= last_accepted, "accepted went backwards:\n{m}");
+        last_accepted = accepted;
+        assert_eq!(num(&m, "connections.accept_errors"), 0.0, "{m}");
+
+        // Every document is internally ordered, even mid-merge.
+        let (p50, p99, p999) =
+            (num(&m, "latency.p50_s"), num(&m, "latency.p99_s"), num(&m, "latency.p999_s"));
+        assert!(p50 <= p99 && p99 <= p999, "tail order: {p50} {p99} {p999}\n{m}");
+        let (p50, p99, p999) =
+            (num(&s, "latency_p50_s"), num(&s, "latency_p99_s"), num(&s, "latency_p999_s"));
+        assert!(p50 <= p99 && p99 <= p999, "tail order: {p50} {p99} {p999}\n{s}");
+
+        // Per-class rows are clamped: met never outruns completions.
+        if let Some(per_class) = m.get("per_class").and_then(Json::as_obj) {
+            for (name, cm) in per_class {
+                assert!(
+                    num(cm, "deadline_met") <= num(cm, "completed"),
+                    "class {name} met > completed:\n{m}"
+                );
+                let met_frac = num(cm, "met_frac");
+                assert!((0.0..=1.0).contains(&met_frac), "class {name}: {met_frac}");
+            }
+        }
+        thread::sleep(Duration::from_millis(10));
+    }
+
+    // Quiesced: every reply the loadgen received synchronized with the
+    // recorder that produced it, so the final documents reconcile exactly.
+    let report = traffic.join().expect("traffic thread");
+    assert!(report.total.ok > 0, "a healthy server answers offered load: {:?}", report.total);
+    assert!(scrapes >= 3, "the run must actually race some scrapes");
+    let m = serving::fetch_metrics(&addr, timeout).expect("final /metrics");
+    let completed = num(&m, "completed");
+    assert!(completed >= report.total.ok as f64, "server completed fewer than client oks:\n{m}");
+    assert!(completed <= report.total.sent as f64, "more completions than dispatches:\n{m}");
+    assert_eq!(
+        num(&m, "deadline_met") + num(&m, "deadline_missed"),
+        completed,
+        "quiesced verdicts must partition completions:\n{m}"
+    );
+    let per_class = m.get("per_class").and_then(Json::as_obj).expect("per_class");
+    let class_completed: f64 = per_class.values().map(|cm| num(cm, "completed")).sum();
+    assert_eq!(class_completed, completed, "classes partition the requests:\n{m}");
+    server.shutdown();
+}
+
+#[test]
+fn legacy_spawn_per_connection_mode_still_serves() {
+    // `serve_threads == 0` keeps the historical thread-per-connection
+    // accept loop as the A/B baseline for the pooled hot path; it must
+    // stay fully functional.
+    let c = start(false);
+    let server = ServingServer::spawn_with(
+        "127.0.0.1:0",
+        c.clone(),
+        ServeOpts { serve_threads: 0, ..ServeOpts::default() },
+    )
+    .expect("bind serving server");
+    let addr = server.addr().to_string();
+    let timeout = Duration::from_secs(10);
+
+    let health = serving::fetch_health(&addr, timeout).expect("GET /healthz");
+    assert_eq!(health.get("ok").and_then(Json::as_bool), Some(true));
+    let r = serving::infer_remote(
+        &addr,
+        &InferRequest { input: sample(c.sample_elems(), 7), spec: RequestSpec::default() },
+        timeout,
+    )
+    .expect("legacy-mode infer");
+    assert_eq!(r.logits.len(), c.num_classes());
+    let stats = serving::fetch_stats(&addr, timeout).expect("GET /stats");
+    assert_eq!(stats.get("completed").and_then(Json::as_i64), Some(1), "{stats}");
+    server.shutdown();
+}

@@ -1172,3 +1172,88 @@ fn store_backed_elastic_rerun_replays_every_point_without_workers() {
     assert_eq!((second.computed_points, second.replayed_points), (0, 8));
     let _ = std::fs::remove_dir_all(&dir);
 }
+
+// ---- connection worker pool --------------------------------------------
+
+#[test]
+fn bounded_worker_pool_serves_concurrent_keepalive_connections() {
+    // A 3-thread connection pool with 3 simultaneously open keep-alive
+    // connections: every pooled handler is occupied, yet all three
+    // connections are served (including keep-alive reuse) — and once they
+    // close, the freed threads pick up fresh connections instead of the
+    // accept loop spawning new ones.
+    let worker = WorkerServer::spawn_with(
+        "127.0.0.1:0",
+        SweepEngine::with_threads(2),
+        WorkerOpts { worker_threads: 3, ..WorkerOpts::default() },
+    )
+    .expect("bind worker");
+    let addr = worker.addr().to_string();
+
+    let mut conns: Vec<TcpStream> = (0..3)
+        .map(|i| {
+            let mut s = TcpStream::connect(&addr).expect("connect");
+            s.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+            s.set_write_timeout(Some(Duration::from_secs(30))).unwrap();
+            write_request_conn(&mut s, "GET", "/healthz", &addr, b"", false)
+                .unwrap_or_else(|e| panic!("send on conn {i}: {e:?}"));
+            s
+        })
+        .collect();
+    // All three are open at once, each occupying one pooled handler.
+    for (i, s) in conns.iter_mut().enumerate() {
+        let (status, _) = read_response(s).unwrap_or_else(|e| panic!("reply on conn {i}: {e:?}"));
+        assert_eq!(status, 200, "conn {i}");
+    }
+    // Keep-alive reuse still works through the pool.
+    for (i, s) in conns.iter_mut().enumerate() {
+        write_request_conn(s, "GET", "/stats", &addr, b"", false)
+            .unwrap_or_else(|e| panic!("second send on conn {i}: {e:?}"));
+        let (status, _) = read_response(s).unwrap_or_else(|e| panic!("reuse on conn {i}: {e:?}"));
+        assert_eq!(status, 200, "conn {i} reuse");
+    }
+    drop(conns);
+
+    // More fresh connections than the pool has threads (sequentially):
+    // every one must be served by a recycled handler.
+    for i in 0..6 {
+        let (status, health) =
+            http_request_json(&addr, "GET", "/healthz", b"", Duration::from_secs(10))
+                .unwrap_or_else(|e| panic!("post-drain healthz {i}: {e:?}"));
+        assert_eq!(status, 200);
+        assert_eq!(health.get("ok").and_then(Json::as_bool), Some(true));
+    }
+    let (_, stats) =
+        http_request_json(&addr, "GET", "/stats", b"", Duration::from_secs(10)).unwrap();
+    assert_eq!(stats.get("accept_errors").and_then(Json::as_i64), Some(0), "{stats}");
+    worker.shutdown();
+}
+
+#[test]
+fn legacy_spawn_per_connection_worker_mode_still_serves() {
+    // `worker_threads == 0` keeps the historical thread-per-connection
+    // accept loop as the A/B churn baseline; it must stay fully
+    // functional, health checks and shard compute alike.
+    let worker = WorkerServer::spawn_with(
+        "127.0.0.1:0",
+        SweepEngine::with_threads(2),
+        WorkerOpts { worker_threads: 0, ..WorkerOpts::default() },
+    )
+    .expect("bind worker");
+    let addr = worker.addr().to_string();
+
+    let reply = raw_roundtrip(&addr, &raw_get("/healthz"));
+    assert!(reply.starts_with("HTTP/1.1 200"), "{reply}");
+    let order = ShardRequest { spec: small_spec(), shards: 1, shard_id: 0 };
+    let (status, doc) = http_request_json(
+        &addr,
+        "POST",
+        "/shard",
+        order.to_json().to_string().as_bytes(),
+        Duration::from_secs(30),
+    )
+    .expect("legacy-mode shard");
+    assert_eq!(status, 200);
+    ShardResult::from_json(&doc).expect("legacy-mode shard document is valid");
+    worker.shutdown();
+}
