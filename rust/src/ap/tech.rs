@@ -25,6 +25,12 @@
 //! tuning. This single derived constant plays the role the authors' SPICE
 //! deck played; see ARCHITECTURE.md and EXPERIMENTS.md for where the
 //! Fig. 6 ratio magnitudes land under it.
+//!
+//! The per-op numbers themselves are declared as data in
+//! [`crate::costs::default_table`] (one row per technology, one
+//! energy+cycles pair per AP op); [`Tech::new`] materializes that table's
+//! row. This module keeps the physical constants (Table VI inputs) and the
+//! [`Tech`] cost handle the mapper/sim stack consumes.
 
 /// Joules per femtojoule.
 pub const FJ: f64 = 1e-15;
@@ -84,6 +90,10 @@ impl CellTech {
     }
 }
 
+/// SRAM write energy per cell (Table VI: `E_wS` = 0.24 fJ).
+pub const E_WRITE_SRAM: f64 = 0.24 * FJ;
+/// ReRAM write energy per cell (Table VI: `E_wR` = 21.7 pJ).
+pub const E_WRITE_RERAM: f64 = 21.7 * PJ;
 /// PCM write energy per cell (RESET pulse class figure, Wong et al.).
 pub const E_WRITE_PCM: f64 = 13.5 * PJ;
 /// FeFET write energy per cell (field-driven polarization switch).
@@ -133,60 +143,17 @@ pub const SRAM_CELL_AREA_M2: f64 = 137.45e-6 / (4160.0 * 4800.0 * 16.0);
 pub const RERAM_AREA_SAVINGS: f64 = 4.4;
 
 impl Tech {
-    /// Nominal-voltage model for a technology.
+    /// Nominal-voltage model for a technology — the default
+    /// [`CostTable`](crate::costs::CostTable) row materialized as a cost
+    /// handle. The numbers themselves live in
+    /// [`crate::costs::default_table`], declared via
+    /// [`def_ap_cost!`](crate::def_ap_cost) with the exact constant
+    /// expressions this function used to inline (bit-identical,
+    /// golden-tested in `tests/goldens.rs`).
     pub fn new(cell: CellTech) -> Self {
-        let e_compare_word = COMPARE_PERIPHERAL_FACTOR * C_IN * V_DD_NOMINAL * V_DD_NOMINAL;
-        match cell {
-            CellTech::Sram => Tech {
-                cell,
-                v_dd: V_DD_NOMINAL,
-                e_write_cell: 0.24 * FJ,
-                e_compare_word,
-                e_read_word: e_compare_word,
-                compare_cycles: 1.0,
-                write_cycles: 2.0,
-                read_cycles: 1.0,
-                p_cell_error: 0.0,
-                cell_area_m2: SRAM_CELL_AREA_M2,
-            },
-            CellTech::Reram => Tech {
-                cell,
-                v_dd: V_DD_NOMINAL,
-                e_write_cell: 21.7 * PJ,
-                e_compare_word,
-                e_read_word: e_compare_word,
-                compare_cycles: 1.0,
-                write_cycles: 4.0,
-                read_cycles: 1.0,
-                p_cell_error: 0.0,
-                cell_area_m2: SRAM_CELL_AREA_M2 / RERAM_AREA_SAVINGS,
-            },
-            CellTech::Pcm => Tech {
-                cell,
-                v_dd: V_DD_NOMINAL,
-                e_write_cell: E_WRITE_PCM,
-                e_compare_word,
-                e_read_word: e_compare_word,
-                // SET crystallization is the slow edge: ~8 AP cycles.
-                compare_cycles: 1.0,
-                write_cycles: 8.0,
-                read_cycles: 1.0,
-                p_cell_error: 0.0,
-                cell_area_m2: SRAM_CELL_AREA_M2 / PCM_AREA_SAVINGS,
-            },
-            CellTech::Fefet => Tech {
-                cell,
-                v_dd: V_DD_NOMINAL,
-                e_write_cell: E_WRITE_FEFET,
-                e_compare_word,
-                e_read_word: e_compare_word,
-                compare_cycles: 1.0,
-                write_cycles: 2.0,
-                read_cycles: 1.0,
-                p_cell_error: 0.0,
-                cell_area_m2: SRAM_CELL_AREA_M2 / FEFET_AREA_SAVINGS,
-            },
-        }
+        crate::costs::default_table()
+            .tech_for(cell)
+            .expect("default cost table declares every CellTech row")
     }
 
     /// PCM at nominal voltage (§V-A extension).
@@ -230,6 +197,16 @@ impl Tech {
             p_cell_error: P_ERR_SCALED,
             ..*self
         }
+    }
+
+    /// §V-A's *write-only* scaled operating point: the published 0.5 V
+    /// write energy with the sensing path left at nominal — the paper's
+    /// "how much does scaling writes alone buy" question. Previously
+    /// re-implemented by hand (mutating `e_write_cell` inline) in both
+    /// `sim::dse` and a `sim` test; one definition now.
+    pub fn write_scaled_only(&self) -> Self {
+        let scaled = self.voltage_scaled();
+        Tech { e_write_cell: scaled.e_write_cell, ..*self }
     }
 
     /// Latency in cycles of an event bundle.
@@ -330,6 +307,21 @@ mod tests {
         assert!((p.e_write_cell - E_WRITE_PCM / 4.0).abs() < 1e-18);
         let f = Tech::fefet().voltage_scaled();
         assert!((f.e_write_cell - E_WRITE_FEFET / 4.0).abs() < 1e-20);
+    }
+
+    #[test]
+    fn write_scaled_only_touches_only_write_energy() {
+        let s = Tech::sram();
+        let w = s.write_scaled_only();
+        assert_eq!(w.e_write_cell, E_WRITE_SRAM_SCALED);
+        assert_eq!(w.e_compare_word.to_bits(), s.e_compare_word.to_bits());
+        assert_eq!(w.e_read_word.to_bits(), s.e_read_word.to_bits());
+        assert_eq!(w.v_dd, s.v_dd);
+        assert_eq!(w.p_cell_error, 0.0);
+        let r = Tech::reram();
+        let rw = r.write_scaled_only();
+        assert_eq!(rw.e_write_cell.to_bits(), (r.e_write_cell * 0.25).to_bits());
+        assert_eq!(rw.e_compare_word.to_bits(), r.e_compare_word.to_bits());
     }
 
     #[test]

@@ -268,6 +268,46 @@ impl ClassMetrics {
     }
 }
 
+/// Per-config execute-latency aggregate: executed batches and summed
+/// backend execute time. Time is carried as integer nanoseconds so the
+/// lock-free shards ([`ShardedMetrics`]) can accumulate it with a plain
+/// atomic add and still fold to *exactly* what a `Mutex<Metrics>` would
+/// have recorded. This is the stat `bf-imna serve --fleet-priors` mines
+/// out of a fleet's `GET /workers` listing to seed a fresh coordinator's
+/// [`PrecisionController`](super::PrecisionController) priors.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct ExecStat {
+    /// Batches executed at this config.
+    pub batches: u64,
+    /// Total backend execute time across those batches, nanoseconds.
+    pub total_ns: u64,
+}
+
+impl ExecStat {
+    /// Mean per-batch execute latency, seconds (0.0 before any batch).
+    pub fn mean_s(&self) -> f64 {
+        if self.batches > 0 {
+            self.total_ns as f64 / 1e9 / self.batches as f64
+        } else {
+            0.0
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj([
+            ("batches", Json::num(self.batches as f64)),
+            ("total_s", Json::num(self.total_ns as f64 / 1e9)),
+            ("mean_s", Json::num(self.mean_s())),
+        ])
+    }
+}
+
+/// Quantize an execute latency to the nanosecond grid [`ExecStat`] sums
+/// on (clamped at zero — a backend cannot take negative time).
+fn execute_ns(execute_s: f64) -> u64 {
+    (execute_s.max(0.0) * 1e9).round() as u64
+}
+
 /// Aggregated serving metrics — the snapshot, merge, and JSON-rendering
 /// type. The coordinator's live counters are a [`ShardedMetrics`]; a
 /// scrape folds its shards into one of these via [`Self::merge`].
@@ -303,6 +343,9 @@ pub struct Metrics {
     pub per_class: BTreeMap<String, ClassMetrics>,
     /// Requests served per precision config.
     pub per_config: BTreeMap<String, u64>,
+    /// Execute-latency aggregate per precision config (what fleet-prior
+    /// seeding consumes; see [`ExecStat`]).
+    pub per_config_execute: BTreeMap<String, ExecStat>,
     /// Batches executed per compiled batch size.
     pub per_batch_size: BTreeMap<u64, u64>,
 }
@@ -331,6 +374,9 @@ impl Metrics {
         push_windowed(&mut self.execute_latencies, self.batches, execute_s);
         self.execute_hist.record(execute_s);
         *self.per_config.entry(config.to_string()).or_default() += real_samples;
+        let exec = self.per_config_execute.entry(config.to_string()).or_default();
+        exec.batches += 1;
+        exec.total_ns += execute_ns(execute_s);
         *self.per_batch_size.entry(compiled_batch).or_default() += 1;
     }
 
@@ -386,6 +432,11 @@ impl Metrics {
         }
         for (config, &n) in &other.per_config {
             *self.per_config.entry(config.clone()).or_default() += n;
+        }
+        for (config, e) in &other.per_config_execute {
+            let mine = self.per_config_execute.entry(config.clone()).or_default();
+            mine.batches += e.batches;
+            mine.total_ns += e.total_ns;
         }
         for (&size, &n) in &other.per_batch_size {
             *self.per_batch_size.entry(size).or_default() += n;
@@ -470,6 +521,12 @@ impl Metrics {
                     self.per_config.iter().map(|(k, &v)| (k.clone(), Json::num(v as f64))),
                 ),
             ),
+            (
+                "per_config_execute",
+                Json::obj(
+                    self.per_config_execute.iter().map(|(k, e)| (k.clone(), e.to_json())),
+                ),
+            ),
         ])
     }
 
@@ -501,6 +558,12 @@ impl Metrics {
                 "per_config",
                 Json::obj(
                     self.per_config.iter().map(|(k, &v)| (k.clone(), Json::num(v as f64))),
+                ),
+            ),
+            (
+                "per_config_execute",
+                Json::obj(
+                    self.per_config_execute.iter().map(|(k, e)| (k.clone(), e.to_json())),
                 ),
             ),
             ("uptime_s", Json::num(uptime_s)),
@@ -644,11 +707,15 @@ struct ClassSlot {
     latency: AtomicHistogram,
 }
 
-/// One per-config attribution slot (real samples served).
+/// One per-config attribution slot (real samples served, plus the
+/// execute-latency aggregate in the same integer-nanosecond units as
+/// [`ExecStat`], so shard folds reproduce plain recording exactly).
 #[derive(Debug, Default)]
 struct ConfigSlot {
     label: OnceLock<String>,
     samples: AtomicU64,
+    batches: AtomicU64,
+    execute_ns: AtomicU64,
 }
 
 /// One per-batch-size attribution slot. `size == 0` means unclaimed
@@ -730,6 +797,8 @@ impl MetricShard {
         self.execute_hist.record(execute_s);
         if let Some(slot) = label_slot(&self.per_config, config, |s| &s.label) {
             slot.samples.fetch_add(real_samples, Ordering::Relaxed);
+            slot.batches.fetch_add(1, Ordering::Relaxed);
+            slot.execute_ns.fetch_add(execute_ns(execute_s), Ordering::Relaxed);
         }
         for slot in &self.per_batch_size {
             let cur = slot.size.load(Ordering::Relaxed);
@@ -792,6 +861,7 @@ impl MetricShard {
             execute_hist: self.execute_hist.snapshot(),
             per_class: BTreeMap::new(),
             per_config: BTreeMap::new(),
+            per_config_execute: BTreeMap::new(),
             per_batch_size: BTreeMap::new(),
         };
         for slot in &self.per_class {
@@ -814,6 +884,13 @@ impl MetricShard {
         for slot in &self.per_config {
             if let Some(label) = slot.label.get() {
                 m.per_config.insert(label.clone(), slot.samples.load(Ordering::Relaxed));
+                let batches = slot.batches.load(Ordering::Relaxed);
+                if batches > 0 {
+                    m.per_config_execute.insert(
+                        label.clone(),
+                        ExecStat { batches, total_ns: slot.execute_ns.load(Ordering::Relaxed) },
+                    );
+                }
             }
         }
         for slot in &self.per_batch_size {
@@ -1252,6 +1329,28 @@ mod tests {
     }
 
     #[test]
+    fn exec_stat_accumulates_on_the_nanosecond_grid() {
+        let mut m = Metrics::default();
+        m.record_batch("int8", 4, 3, 0.010);
+        m.record_batch("int8", 4, 4, 0.030);
+        m.record_batch("int4", 8, 8, -1.0); // clamped to zero, still counted
+        let e = m.per_config_execute["int8"];
+        assert_eq!(e, ExecStat { batches: 2, total_ns: 40_000_000 });
+        assert!((e.mean_s() - 0.020).abs() < 1e-12);
+        assert_eq!(m.per_config_execute["int4"], ExecStat { batches: 1, total_ns: 0 });
+        assert_eq!(ExecStat::default().mean_s(), 0.0);
+        // The stat round-trips through the JSON docs in the exact shape
+        // fleet_prior_means mines: {batches, total_s, mean_s}.
+        for doc in [m.to_json(1.0), m.to_metrics_json(1.0, 0)] {
+            let table = doc.get("per_config_execute").expect("stat exported");
+            let int8 = table.get("int8").unwrap();
+            assert_eq!(int8.get("batches").and_then(Json::as_f64), Some(2.0));
+            assert_eq!(int8.get("total_s").and_then(Json::as_f64), Some(0.04));
+            assert_eq!(int8.get("mean_s").and_then(Json::as_f64), Some(0.02));
+        }
+    }
+
+    #[test]
     fn metrics_merge_equals_recording_the_union() {
         // The Metrics-level analogue of the histogram merge pin: two
         // documents merged must equal one document that recorded both
@@ -1281,6 +1380,7 @@ mod tests {
         assert_eq!(a.batches, both.batches);
         assert_eq!(a.padded_samples, both.padded_samples);
         assert_eq!(a.per_config, both.per_config);
+        assert_eq!(a.per_config_execute, both.per_config_execute);
         assert_eq!(a.per_batch_size, both.per_batch_size);
         assert_eq!(a.request_hist.counts, both.request_hist.counts);
         assert_eq!(a.execute_hist.counts, both.execute_hist.counts);
@@ -1336,6 +1436,7 @@ mod tests {
         assert_eq!(snap.batches, plain.batches);
         assert_eq!(snap.padded_samples, plain.padded_samples);
         assert_eq!(snap.per_config, plain.per_config);
+        assert_eq!(snap.per_config_execute, plain.per_config_execute);
         assert_eq!(snap.per_batch_size, plain.per_batch_size);
         assert_eq!(snap.request_hist.counts, plain.request_hist.counts);
         assert_eq!(snap.execute_hist.counts, plain.execute_hist.counts);

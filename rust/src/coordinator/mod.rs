@@ -48,7 +48,7 @@ use crate::util::error::{anyhow, Result};
 
 pub use controller::{Budget, BudgetSpec, BudgetTargets, PrecisionController};
 pub use loadgen::{LoadReport, LoadgenOpts, Profile, WorkloadClass, WorkloadSpec};
-pub use metrics::{LatencyHistogram, Metrics, MetricsRecorder, ShardedMetrics};
+pub use metrics::{ExecStat, LatencyHistogram, Metrics, MetricsRecorder, ShardedMetrics};
 pub use server::ServingServer;
 
 use crate::model::zoo;
@@ -235,6 +235,13 @@ pub struct CoordinatorConfig {
     /// real AP fewer bits are faster; on CPU they unroll more matmuls.)
     /// Deadline-carrying requests always go through the controller.
     pub pinned: BTreeMap<Budget, String>,
+    /// Measured mean per-batch execute latency per config, seconds,
+    /// harvested from a fleet controller's `GET /workers` listing (see
+    /// [`fleet_prior_means`]). When every ladder config is covered these
+    /// seed [`PrecisionController::with_scales`] — live fleet experience
+    /// instead of simulator priors; otherwise they are ignored. Empty by
+    /// default (`bf-imna serve --fleet-priors` fills it).
+    pub fleet_prior_means: BTreeMap<String, f64>,
 }
 
 impl Default for CoordinatorConfig {
@@ -245,8 +252,49 @@ impl Default for CoordinatorConfig {
             targets: BudgetTargets::default(),
             calibrate: true,
             pinned: BTreeMap::new(),
+            fleet_prior_means: BTreeMap::new(),
         }
     }
+}
+
+/// Mine a fleet `GET /workers` listing for latency priors: every live
+/// worker's stats document may carry a `per_config_execute` table (the
+/// serving metrics' [`ExecStat`] export); batch counts and execute times
+/// pool across workers, and each config maps to its fleet-wide mean
+/// per-batch execute latency in seconds. Configs without a single
+/// executed batch are omitted; an empty map means the listing carried
+/// nothing usable (fall back to simulator priors).
+pub fn fleet_prior_means(workers_doc: &crate::util::json::Json) -> BTreeMap<String, f64> {
+    use crate::util::json::Json;
+    let mut pooled: BTreeMap<String, (f64, f64)> = BTreeMap::new();
+    let workers = match workers_doc.get("workers").and_then(Json::as_arr) {
+        Some(ws) => ws,
+        None => return BTreeMap::new(),
+    };
+    for w in workers {
+        let table = match w
+            .get("stats")
+            .and_then(|s| s.get("per_config_execute"))
+            .and_then(Json::as_obj)
+        {
+            Some(t) => t,
+            None => continue,
+        };
+        for (config, e) in table {
+            let batches = e.get("batches").and_then(Json::as_f64).unwrap_or(0.0);
+            let total_s = e.get("total_s").and_then(Json::as_f64).unwrap_or(0.0);
+            if batches > 0.0 && total_s.is_finite() && total_s >= 0.0 {
+                let slot = pooled.entry(config.clone()).or_insert((0.0, 0.0));
+                slot.0 += batches;
+                slot.1 += total_s;
+            }
+        }
+    }
+    pooled
+        .into_iter()
+        .filter(|(_, (batches, _))| *batches > 0.0)
+        .map(|(config, (batches, total_s))| (config, total_s / batches))
+        .collect()
 }
 
 /// The serving coordinator handle (cheap to clone).
@@ -342,10 +390,35 @@ impl Coordinator {
                 // missing configs at scale 1.0 (predicted as fast as the
                 // fastest), so mixed manifests fall back to the avg-bits²
                 // heuristic entirely.
-                let (sim_scales, sim_base_s) = sim_prior_scales(m);
+                // Prior precedence: measured fleet experience (when every
+                // ladder config is covered) > the simulator's relative
+                // latencies > the avg-bits² heuristic. Partial coverage
+                // always falls through — a config predicted at scale 1.0
+                // (as fast as the fastest) would soak up traffic it
+                // cannot serve in time.
+                let fleet_covers = !cfg.fleet_prior_means.is_empty()
+                    && ladder.iter().all(|c| cfg.fleet_prior_means.contains_key(c));
+                let (sim_scales, sim_base_s) = if fleet_covers {
+                    (BTreeMap::new(), 0.0)
+                } else {
+                    sim_prior_scales(m)
+                };
                 let covers_ladder = !sim_scales.is_empty()
                     && ladder.iter().all(|c| sim_scales.contains_key(c));
-                let mut controller = if covers_ladder {
+                let mut controller = if fleet_covers {
+                    let base = cfg
+                        .fleet_prior_means
+                        .values()
+                        .cloned()
+                        .fold(f64::INFINITY, f64::min)
+                        .max(1e-9);
+                    let scales = cfg
+                        .fleet_prior_means
+                        .iter()
+                        .map(|(k, &mean_s)| (k.clone(), mean_s / base))
+                        .collect();
+                    PrecisionController::with_scales(ladder, scales, cfg.targets.clone(), base)
+                } else if covers_ladder {
                     PrecisionController::with_scales(
                         ladder,
                         sim_scales,
@@ -728,6 +801,47 @@ mod tests {
         assert!(c.batch_window < Duration::from_millis(100));
         assert!(c.calibrate);
         assert!(c.targets.target(Budget::Low) < c.targets.target(Budget::High));
+    }
+
+    #[test]
+    fn fleet_prior_means_pools_batches_across_workers() {
+        use crate::util::json::Json;
+        // Two workers both served int8; only one served int4. Means pool
+        // by total batches, not by averaging the workers' means.
+        let doc = Json::parse(
+            r#"{"workers":[
+                {"addr":"a:1","stats":{"per_config_execute":{
+                    "int8":{"batches":3,"total_s":0.3,"mean_s":0.1},
+                    "int4":{"batches":2,"total_s":0.1,"mean_s":0.05}}}},
+                {"addr":"b:2","stats":{"per_config_execute":{
+                    "int8":{"batches":1,"total_s":0.5,"mean_s":0.5}}}},
+                {"addr":"c:3","stats":{"requests":7}}
+            ]}"#,
+        )
+        .unwrap();
+        let means = fleet_prior_means(&doc);
+        assert_eq!(means.len(), 2);
+        assert!((means["int8"] - 0.2).abs() < 1e-12); // (0.3+0.5)/(3+1)
+        assert!((means["int4"] - 0.05).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fleet_prior_means_ignores_unusable_listings() {
+        use crate::util::json::Json;
+        // No workers array at all.
+        assert!(fleet_prior_means(&Json::parse(r#"{"expiry_s":30}"#).unwrap()).is_empty());
+        // Workers without stats, and entries with zero batches or a
+        // negative total, contribute nothing.
+        let doc = Json::parse(
+            r#"{"workers":[
+                {"addr":"a:1"},
+                {"addr":"b:2","stats":{"per_config_execute":{
+                    "int8":{"batches":0,"total_s":0.0,"mean_s":0.0},
+                    "int4":{"batches":2,"total_s":-1.0,"mean_s":-0.5}}}}
+            ]}"#,
+        )
+        .unwrap();
+        assert!(fleet_prior_means(&doc).is_empty());
     }
 
     #[test]

@@ -1,0 +1,854 @@
+//! Declarative, versioned AP cost tables.
+//!
+//! Every headline result of the paper (Fig. 5–8, Tables I/VII/VIII) flows
+//! from a handful of per-event energy and cycle constants. The seed tree
+//! hard-coded those numbers inside [`Tech::new`](crate::ap::tech::Tech),
+//! which made them invisible to the experiment IR: impossible to sweep,
+//! to swap for another technology corner, or to fit against measured
+//! latencies. This module turns the cost model into **data**:
+//!
+//! * [`def_ap_cost!`] declares a named table — one [`TechRow`] per cell
+//!   technology, one [`OpCost`] (energy + cycles) per AP op
+//!   (write / compare / read / copy) — as a plain macro invocation whose
+//!   row values are arbitrary constant expressions. The built-in
+//!   [`default_table`] uses the *same* expressions the seed's `Tech::new`
+//!   evaluated, so the default table reproduces every artifact document
+//!   byte-identically (golden-tested in `tests/goldens.rs`).
+//! * [`CostTable`] round-trips through the canonical JSON writer
+//!   ([`CostTable::to_json`] / [`CostTable::from_json`]); because the
+//!   writer's float formatting is shortest-round-trip, a table loaded
+//!   from a file materializes bit-identical costs.
+//! * [`CostTable::cost_version`] is an FNV-1a hash over the table's
+//!   canonical row content. [`crate::mapper::cache::mapper_fingerprint`]
+//!   folds the default table's version in, so a binary whose cost model
+//!   drifted refuses stale [`CacheSnapshot`](crate::mapper::CacheSnapshot)s
+//!   and is bounced by mixed-binary fleets — the same loud-failure
+//!   contract the shard wire protocol already enforces.
+//! * A sweep can carry a whole `costs` axis
+//!   ([`crate::sim::shard::SweepSpec::costs`]): what-if tables enumerate,
+//!   shard, dispatch, store, and render through the byte-identical
+//!   pipeline like any other coordinate.
+//! * [`calibrate`] fits table coefficients from the serving backend's
+//!   measured latencies and emits a fitted, versioned table plus a
+//!   measured-vs-modeled residual report (the `calibration` catalog
+//!   artifact).
+//!
+//! The planning-layer match-probability constants
+//! ([`crate::ap::runtime_model::MATCH_PROB_4BIT`] and friends) stay out
+//! of the table deliberately: they shape *plans*, not cost conversion,
+//! and any change to them already changes the behavioral probe half of
+//! the mapper fingerprint.
+
+pub mod calibrate;
+
+use std::sync::OnceLock;
+
+use crate::ap::tech::{CellTech, Tech};
+use crate::util::json::Json;
+
+/// Cost of one AP op: energy per unit event (joules) and cycles per
+/// phase at the AP clock.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OpCost {
+    /// Energy per unit event, joules. For writes the unit is one cell;
+    /// for compare / read it is one word-sense.
+    pub energy_j: f64,
+    /// Cycles per phase of this op.
+    pub cycles: f64,
+}
+
+/// One technology's row of a [`CostTable`]: the supply point, the
+/// per-cell physical parameters, and one [`OpCost`] per AP op.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TechRow {
+    /// Which CAM cell technology this row models.
+    pub cell: CellTech,
+    /// Supply voltage, volts.
+    pub v_dd: f64,
+    /// Per-cell error probability (0 at nominal voltage).
+    pub p_cell_error: f64,
+    /// Effective area per CAM cell including amortized peripherals, m².
+    pub cell_area_m2: f64,
+    /// Write: energy per cell written, cycles per write phase.
+    pub write: OpCost,
+    /// Compare (search): energy per word-sense, cycles per compare phase.
+    pub compare: OpCost,
+    /// Read: energy per word-sense, cycles per read phase.
+    pub read: OpCost,
+    /// Column copy. The emulator lowers copies to explicit read + write
+    /// events, so the runtime consumes this shape through the `read` and
+    /// `write` rows; the row is declared (and fingerprinted) so the
+    /// derived cost is visible, versioned data rather than folklore.
+    pub copy: OpCost,
+}
+
+/// A named, versioned set of per-technology AP op costs — the
+/// declarative replacement for the constants that used to live inside
+/// `Tech::new`. Construct via [`def_ap_cost!`], [`CostTable::from_json`],
+/// or [`load`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct CostTable {
+    /// Table name — a sweep coordinate (echoed by every
+    /// [`crate::sim::shard::PointRecord`] at a non-default table) and the
+    /// `--costs` CLI handle. Lowercase `[a-z0-9._-]`, at most 64 chars.
+    pub name: String,
+    /// One row per cell technology, in declared order.
+    pub rows: Vec<TechRow>,
+}
+
+/// Declare a named [`CostTable`] as data — one block per technology, one
+/// `{ energy_j, cycles }` bracket per AP op — and expand to a `fn` that
+/// returns the lazily-built, validated `&'static CostTable`.
+///
+/// Row values are arbitrary constant expressions, which is what lets the
+/// [`default_table`] reuse the exact expressions the seed's `Tech::new`
+/// computed and stay bit-identical to it.
+///
+/// ```
+/// use bf_imna::def_ap_cost;
+///
+/// def_ap_cost! {
+///     /// A one-row toy table.
+///     pub fn toy_table, "toy", {
+///         sram: {
+///             v_dd: 1.0,
+///             p_cell_error: 0.0,
+///             cell_area_m2: 1e-13,
+///             write:   { energy_j: 1e-15, cycles: 2.0 },
+///             compare: { energy_j: 2e-14, cycles: 1.0 },
+///             read:    { energy_j: 2e-14, cycles: 1.0 },
+///             copy:    { energy_j: 2.1e-14, cycles: 3.0 },
+///         },
+///     }
+/// }
+///
+/// assert_eq!(toy_table().name, "toy");
+/// assert_eq!(toy_table().cost_version().len(), 16);
+/// ```
+#[macro_export]
+macro_rules! def_ap_cost {
+    (@cell sram) => { $crate::ap::tech::CellTech::Sram };
+    (@cell reram) => { $crate::ap::tech::CellTech::Reram };
+    (@cell pcm) => { $crate::ap::tech::CellTech::Pcm };
+    (@cell fefet) => { $crate::ap::tech::CellTech::Fefet };
+    (
+        $(#[$doc:meta])*
+        $vis:vis fn $fname:ident, $tname:literal, {
+            $($cell:ident: {
+                v_dd: $vdd:expr,
+                p_cell_error: $perr:expr,
+                cell_area_m2: $area:expr,
+                write:   { energy_j: $we:expr, cycles: $wc:expr },
+                compare: { energy_j: $ce:expr, cycles: $cc:expr },
+                read:    { energy_j: $re:expr, cycles: $rc:expr },
+                copy:    { energy_j: $ye:expr, cycles: $yc:expr } $(,)?
+            }),+ $(,)?
+        }
+    ) => {
+        $(#[$doc])*
+        $vis fn $fname() -> &'static $crate::costs::CostTable {
+            static TABLE: ::std::sync::OnceLock<$crate::costs::CostTable> =
+                ::std::sync::OnceLock::new();
+            TABLE.get_or_init(|| {
+                let table = $crate::costs::CostTable {
+                    name: $tname.to_string(),
+                    rows: vec![$($crate::costs::TechRow {
+                        cell: $crate::def_ap_cost!(@cell $cell),
+                        v_dd: $vdd,
+                        p_cell_error: $perr,
+                        cell_area_m2: $area,
+                        write: $crate::costs::OpCost { energy_j: $we, cycles: $wc },
+                        compare: $crate::costs::OpCost { energy_j: $ce, cycles: $cc },
+                        read: $crate::costs::OpCost { energy_j: $re, cycles: $rc },
+                        copy: $crate::costs::OpCost { energy_j: $ye, cycles: $yc },
+                    }),+],
+                };
+                table
+                    .validate()
+                    .unwrap_or_else(|e| panic!("def_ap_cost! table '{}': {e}", $tname));
+                table
+            })
+        }
+    };
+}
+
+use crate::ap::tech::{
+    C_IN, COMPARE_PERIPHERAL_FACTOR, E_WRITE_FEFET, E_WRITE_PCM, E_WRITE_RERAM, E_WRITE_SRAM,
+    E_WRITE_SRAM_SCALED, FEFET_AREA_SAVINGS, FJ, PCM_AREA_SAVINGS, PJ, P_ERR_SCALED,
+    RERAM_AREA_SAVINGS, SRAM_CELL_AREA_M2, V_DD_NOMINAL, V_DD_SCALED,
+};
+
+/// Compare (search) energy per word-sense at nominal voltage — the
+/// charging energy of the sense capacitance, `½ · C_IN · V_DD²` = 25 fJ
+/// (see the `ap::tech` module docs for the cross-validation). One shared
+/// constant: the seed re-evaluated this expression inside every arm of
+/// `Tech::new`, which is exactly the drift hazard the table removes.
+pub const E_COMPARE_WORD_NOMINAL: f64 =
+    COMPARE_PERIPHERAL_FACTOR * C_IN * V_DD_NOMINAL * V_DD_NOMINAL;
+
+def_ap_cost! {
+    /// The paper's cost model (Table VI + the §V-A extension
+    /// technologies) as declarative rows — bit-identical to the seed
+    /// tree's inlined `Tech::new` constants, golden-tested in
+    /// `tests/goldens.rs`.
+    ///
+    /// Extraction audit (the satellite bugfix of this refactor), for the
+    /// record:
+    /// * `e_read_word == e_compare_word` in every arm of the seed's
+    ///   `Tech::new` — intentional (both are the same sensing path), now
+    ///   two explicit rows instead of a silent aliasing.
+    /// * The compare energy expression was re-evaluated per match arm;
+    ///   now the single [`E_COMPARE_WORD_NOMINAL`] constant.
+    /// * SRAM / ReRAM write energies were inline literals while PCM /
+    ///   FeFET had named constants; all four are now named
+    ///   (`E_WRITE_SRAM` / `E_WRITE_RERAM` / `E_WRITE_PCM` /
+    ///   `E_WRITE_FEFET`) and consumed exactly once, here.
+    /// * The §V-A *write-only* scaled operating point was re-implemented
+    ///   by hand in `sim::dse::voltage_scaling_saving` **and** a `sim`
+    ///   test (both mutated `e_write_cell` inline); they now share
+    ///   [`Tech::write_scaled_only`](crate::ap::tech::Tech::write_scaled_only).
+    /// * The copy rows are derived (read + write), carried as data so the
+    ///   derivation is versioned; the emulator lowers copies to explicit
+    ///   read/write events, so they are consumed through those rows.
+    pub fn default_table, "default", {
+        sram: {
+            v_dd: V_DD_NOMINAL,
+            p_cell_error: 0.0,
+            cell_area_m2: SRAM_CELL_AREA_M2,
+            write:   { energy_j: E_WRITE_SRAM, cycles: 2.0 },
+            compare: { energy_j: E_COMPARE_WORD_NOMINAL, cycles: 1.0 },
+            read:    { energy_j: E_COMPARE_WORD_NOMINAL, cycles: 1.0 },
+            copy:    { energy_j: E_COMPARE_WORD_NOMINAL + E_WRITE_SRAM, cycles: 3.0 },
+        },
+        reram: {
+            v_dd: V_DD_NOMINAL,
+            p_cell_error: 0.0,
+            cell_area_m2: SRAM_CELL_AREA_M2 / RERAM_AREA_SAVINGS,
+            write:   { energy_j: E_WRITE_RERAM, cycles: 4.0 },
+            compare: { energy_j: E_COMPARE_WORD_NOMINAL, cycles: 1.0 },
+            read:    { energy_j: E_COMPARE_WORD_NOMINAL, cycles: 1.0 },
+            copy:    { energy_j: E_COMPARE_WORD_NOMINAL + E_WRITE_RERAM, cycles: 5.0 },
+        },
+        pcm: {
+            v_dd: V_DD_NOMINAL,
+            p_cell_error: 0.0,
+            cell_area_m2: SRAM_CELL_AREA_M2 / PCM_AREA_SAVINGS,
+            // SET crystallization is the slow edge: ~8 AP cycles.
+            write:   { energy_j: E_WRITE_PCM, cycles: 8.0 },
+            compare: { energy_j: E_COMPARE_WORD_NOMINAL, cycles: 1.0 },
+            read:    { energy_j: E_COMPARE_WORD_NOMINAL, cycles: 1.0 },
+            copy:    { energy_j: E_COMPARE_WORD_NOMINAL + E_WRITE_PCM, cycles: 9.0 },
+        },
+        fefet: {
+            v_dd: V_DD_NOMINAL,
+            p_cell_error: 0.0,
+            cell_area_m2: SRAM_CELL_AREA_M2 / FEFET_AREA_SAVINGS,
+            write:   { energy_j: E_WRITE_FEFET, cycles: 2.0 },
+            compare: { energy_j: E_COMPARE_WORD_NOMINAL, cycles: 1.0 },
+            read:    { energy_j: E_COMPARE_WORD_NOMINAL, cycles: 1.0 },
+            copy:    { energy_j: E_COMPARE_WORD_NOMINAL + E_WRITE_FEFET, cycles: 3.0 },
+        },
+    }
+}
+
+def_ap_cost! {
+    /// §V-A "Voltage Scaling" (0.5 V) as a sweepable table: SRAM write
+    /// energy uses the published scaled value (0.24 fJ → 0.06 fJ), the
+    /// sensing path and NVM writes scale with V² (× 0.25 — a power of
+    /// two, so bit-identical to `Tech::voltage_scaled`'s `· vr · vr`),
+    /// and every row carries the published 0.021 average cell-error
+    /// probability.
+    pub fn scaled_0v5_table, "scaled-0v5", {
+        sram: {
+            v_dd: V_DD_SCALED,
+            p_cell_error: P_ERR_SCALED,
+            cell_area_m2: SRAM_CELL_AREA_M2,
+            write:   { energy_j: E_WRITE_SRAM_SCALED, cycles: 2.0 },
+            compare: { energy_j: E_COMPARE_WORD_NOMINAL * 0.25, cycles: 1.0 },
+            read:    { energy_j: E_COMPARE_WORD_NOMINAL * 0.25, cycles: 1.0 },
+            copy:    { energy_j: E_COMPARE_WORD_NOMINAL * 0.25 + E_WRITE_SRAM_SCALED, cycles: 3.0 },
+        },
+        reram: {
+            v_dd: V_DD_SCALED,
+            p_cell_error: P_ERR_SCALED,
+            cell_area_m2: SRAM_CELL_AREA_M2 / RERAM_AREA_SAVINGS,
+            write:   { energy_j: E_WRITE_RERAM * 0.25, cycles: 4.0 },
+            compare: { energy_j: E_COMPARE_WORD_NOMINAL * 0.25, cycles: 1.0 },
+            read:    { energy_j: E_COMPARE_WORD_NOMINAL * 0.25, cycles: 1.0 },
+            copy:    { energy_j: (E_COMPARE_WORD_NOMINAL + E_WRITE_RERAM) * 0.25, cycles: 5.0 },
+        },
+        pcm: {
+            v_dd: V_DD_SCALED,
+            p_cell_error: P_ERR_SCALED,
+            cell_area_m2: SRAM_CELL_AREA_M2 / PCM_AREA_SAVINGS,
+            write:   { energy_j: E_WRITE_PCM * 0.25, cycles: 8.0 },
+            compare: { energy_j: E_COMPARE_WORD_NOMINAL * 0.25, cycles: 1.0 },
+            read:    { energy_j: E_COMPARE_WORD_NOMINAL * 0.25, cycles: 1.0 },
+            copy:    { energy_j: (E_COMPARE_WORD_NOMINAL + E_WRITE_PCM) * 0.25, cycles: 9.0 },
+        },
+        fefet: {
+            v_dd: V_DD_SCALED,
+            p_cell_error: P_ERR_SCALED,
+            cell_area_m2: SRAM_CELL_AREA_M2 / FEFET_AREA_SAVINGS,
+            write:   { energy_j: E_WRITE_FEFET * 0.25, cycles: 2.0 },
+            compare: { energy_j: E_COMPARE_WORD_NOMINAL * 0.25, cycles: 1.0 },
+            read:    { energy_j: E_COMPARE_WORD_NOMINAL * 0.25, cycles: 1.0 },
+            copy:    { energy_j: (E_COMPARE_WORD_NOMINAL + E_WRITE_FEFET) * 0.25, cycles: 3.0 },
+        },
+    }
+}
+
+def_ap_cost! {
+    /// An optimistic eNVM corner drawn from the Krestinskaya et al.
+    /// QNN-IMC survey's device catalog (PAPERS.md): best-reported-class
+    /// write energies and endurance-optimized pulse counts for the
+    /// non-volatile technologies — what the paper's conclusions look like
+    /// if eNVM devices hit their projected operating points. SRAM is the
+    /// Table VI row unchanged (it is the reference point).
+    pub fn envm_optimistic_table, "envm-optimistic", {
+        sram: {
+            v_dd: V_DD_NOMINAL,
+            p_cell_error: 0.0,
+            cell_area_m2: SRAM_CELL_AREA_M2,
+            write:   { energy_j: E_WRITE_SRAM, cycles: 2.0 },
+            compare: { energy_j: E_COMPARE_WORD_NOMINAL, cycles: 1.0 },
+            read:    { energy_j: E_COMPARE_WORD_NOMINAL, cycles: 1.0 },
+            copy:    { energy_j: E_COMPARE_WORD_NOMINAL + E_WRITE_SRAM, cycles: 3.0 },
+        },
+        reram: {
+            v_dd: V_DD_NOMINAL,
+            p_cell_error: 0.0,
+            // Survey-best 1T1R stacks approach 6x SRAM density.
+            cell_area_m2: SRAM_CELL_AREA_M2 / 6.0,
+            // Sub-pJ switching (0.1 pJ class) at a 2-cycle pulse.
+            write:   { energy_j: 0.1 * PJ, cycles: 2.0 },
+            compare: { energy_j: E_COMPARE_WORD_NOMINAL, cycles: 1.0 },
+            read:    { energy_j: E_COMPARE_WORD_NOMINAL, cycles: 1.0 },
+            copy:    { energy_j: E_COMPARE_WORD_NOMINAL + 0.1 * PJ, cycles: 3.0 },
+        },
+        pcm: {
+            v_dd: V_DD_NOMINAL,
+            p_cell_error: 0.0,
+            cell_area_m2: SRAM_CELL_AREA_M2 / 5.0,
+            // Projected-PCM RESET class: ~1 pJ, 4-cycle SET.
+            write:   { energy_j: 1.0 * PJ, cycles: 4.0 },
+            compare: { energy_j: E_COMPARE_WORD_NOMINAL, cycles: 1.0 },
+            read:    { energy_j: E_COMPARE_WORD_NOMINAL, cycles: 1.0 },
+            copy:    { energy_j: E_COMPARE_WORD_NOMINAL + 1.0 * PJ, cycles: 5.0 },
+        },
+        fefet: {
+            v_dd: V_DD_NOMINAL,
+            p_cell_error: 0.0,
+            cell_area_m2: SRAM_CELL_AREA_M2 / 4.0,
+            // Field-driven switching at sub-fJ: the survey's headline.
+            write:   { energy_j: 0.5 * FJ, cycles: 1.0 },
+            compare: { energy_j: E_COMPARE_WORD_NOMINAL, cycles: 1.0 },
+            read:    { energy_j: E_COMPARE_WORD_NOMINAL, cycles: 1.0 },
+            copy:    { energy_j: E_COMPARE_WORD_NOMINAL + 0.5 * FJ, cycles: 2.0 },
+        },
+    }
+}
+
+def_ap_cost! {
+    /// A measured-silicon class point after Jia et al.'s 65 nm
+    /// bit-scalable IMC microprocessor (PAPERS.md): an older node, so
+    /// larger cells, heavier sensing, and costlier SRAM writes than the
+    /// 16 nm predictive model — the pessimistic counterweight to
+    /// [`envm_optimistic_table`]. NVM rows keep Table VI energies (Jia et
+    /// al. measured SRAM only) at the 65 nm cell geometry.
+    pub fn jia_65nm_table, "jia-65nm", {
+        sram: {
+            v_dd: 1.2,
+            p_cell_error: 0.0,
+            // 65 nm: roughly 16x the 16 nm cell footprint.
+            cell_area_m2: SRAM_CELL_AREA_M2 * 16.0,
+            write:   { energy_j: 4.0 * FJ, cycles: 2.0 },
+            compare: { energy_j: 180.0 * FJ, cycles: 1.0 },
+            read:    { energy_j: 180.0 * FJ, cycles: 1.0 },
+            copy:    { energy_j: 184.0 * FJ, cycles: 3.0 },
+        },
+        reram: {
+            v_dd: 1.2,
+            p_cell_error: 0.0,
+            cell_area_m2: SRAM_CELL_AREA_M2 * 16.0 / RERAM_AREA_SAVINGS,
+            write:   { energy_j: E_WRITE_RERAM, cycles: 4.0 },
+            compare: { energy_j: 180.0 * FJ, cycles: 1.0 },
+            read:    { energy_j: 180.0 * FJ, cycles: 1.0 },
+            copy:    { energy_j: 180.0 * FJ + E_WRITE_RERAM, cycles: 5.0 },
+        },
+        pcm: {
+            v_dd: 1.2,
+            p_cell_error: 0.0,
+            cell_area_m2: SRAM_CELL_AREA_M2 * 16.0 / PCM_AREA_SAVINGS,
+            write:   { energy_j: E_WRITE_PCM, cycles: 8.0 },
+            compare: { energy_j: 180.0 * FJ, cycles: 1.0 },
+            read:    { energy_j: 180.0 * FJ, cycles: 1.0 },
+            copy:    { energy_j: 180.0 * FJ + E_WRITE_PCM, cycles: 9.0 },
+        },
+        fefet: {
+            v_dd: 1.2,
+            p_cell_error: 0.0,
+            cell_area_m2: SRAM_CELL_AREA_M2 * 16.0 / FEFET_AREA_SAVINGS,
+            write:   { energy_j: E_WRITE_FEFET, cycles: 2.0 },
+            compare: { energy_j: 180.0 * FJ, cycles: 1.0 },
+            read:    { energy_j: 180.0 * FJ, cycles: 1.0 },
+            copy:    { energy_j: 180.0 * FJ + E_WRITE_FEFET, cycles: 3.0 },
+        },
+    }
+}
+
+/// The built-in preset tables, default first.
+pub fn presets() -> [&'static CostTable; 4] {
+    [default_table(), scaled_0v5_table(), envm_optimistic_table(), jia_65nm_table()]
+}
+
+/// Look up a preset by name.
+pub fn preset(name: &str) -> Option<&'static CostTable> {
+    presets().into_iter().find(|t| t.name == name)
+}
+
+/// Resolve a `--costs` argument: a preset name, or a path to a JSON file
+/// written by [`CostTable::to_json`] (e.g. `bf-imna costs --out`). A file
+/// table may not reuse a preset's name unless it is content-identical —
+/// two tables with the same name but different numbers would make sweep
+/// coordinates ambiguous.
+pub fn load(arg: &str) -> Result<CostTable, String> {
+    if let Some(t) = preset(arg) {
+        return Ok(t.clone());
+    }
+    let text = std::fs::read_to_string(arg)
+        .map_err(|e| format!("costs: '{arg}' is neither a preset ({}) nor a readable file: {e}",
+            preset_names().join("|")))?;
+    let v = Json::parse(&text).map_err(|e| format!("costs: {arg}: {e}"))?;
+    let table = CostTable::from_json(&v).map_err(|e| format!("costs: {arg}: {e}"))?;
+    if let Some(p) = preset(&table.name) {
+        if table != *p {
+            return Err(format!(
+                "costs: {arg}: table name '{}' collides with the built-in preset but its \
+                 content differs — rename the table",
+                table.name
+            ));
+        }
+    }
+    Ok(table)
+}
+
+/// The preset names, default first (the `--costs` vocabulary).
+pub fn preset_names() -> Vec<&'static str> {
+    presets().into_iter().map(|t| t.name.as_str()).collect()
+}
+
+/// 64-bit FNV-1a over a byte string (same basis/prime as the mapper
+/// fingerprint and the result store).
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+fn op_to_json(op: &OpCost) -> Json {
+    Json::obj([("cycles", Json::num(op.cycles)), ("energy_j", Json::num(op.energy_j))])
+}
+
+fn op_from_json(v: Option<&Json>, what: &str) -> Result<OpCost, String> {
+    let v = v.ok_or_else(|| format!("cost table: missing '{what}' op"))?;
+    let f = |key: &str| -> Result<f64, String> {
+        v.get(key)
+            .and_then(Json::as_f64)
+            .ok_or_else(|| format!("cost table: op '{what}' missing number '{key}'"))
+    };
+    Ok(OpCost { energy_j: f("energy_j")?, cycles: f("cycles")? })
+}
+
+fn row_to_json(r: &TechRow) -> Json {
+    Json::obj([
+        ("cell", Json::str(cell_name(r.cell))),
+        ("cell_area_m2", Json::num(r.cell_area_m2)),
+        ("compare", op_to_json(&r.compare)),
+        ("copy", op_to_json(&r.copy)),
+        ("p_cell_error", Json::num(r.p_cell_error)),
+        ("read", op_to_json(&r.read)),
+        ("v_dd", Json::num(r.v_dd)),
+        ("write", op_to_json(&r.write)),
+    ])
+}
+
+fn row_from_json(v: &Json) -> Result<TechRow, String> {
+    let cell_str = v
+        .get("cell")
+        .and_then(Json::as_str)
+        .ok_or("cost table: row missing 'cell' string")?;
+    let cell = cell_by_name(cell_str)?;
+    let f = |key: &str| -> Result<f64, String> {
+        v.get(key)
+            .and_then(Json::as_f64)
+            .ok_or_else(|| format!("cost table: row '{cell_str}' missing number '{key}'"))
+    };
+    Ok(TechRow {
+        cell,
+        v_dd: f("v_dd")?,
+        p_cell_error: f("p_cell_error")?,
+        cell_area_m2: f("cell_area_m2")?,
+        write: op_from_json(v.get("write"), "write")?,
+        compare: op_from_json(v.get("compare"), "compare")?,
+        read: op_from_json(v.get("read"), "read")?,
+        copy: op_from_json(v.get("copy"), "copy")?,
+    })
+}
+
+/// Spec / JSON name of a cell technology.
+pub fn cell_name(cell: CellTech) -> &'static str {
+    match cell {
+        CellTech::Sram => "sram",
+        CellTech::Reram => "reram",
+        CellTech::Pcm => "pcm",
+        CellTech::Fefet => "fefet",
+    }
+}
+
+/// Inverse of [`cell_name`].
+pub fn cell_by_name(name: &str) -> Result<CellTech, String> {
+    match name {
+        "sram" => Ok(CellTech::Sram),
+        "reram" => Ok(CellTech::Reram),
+        "pcm" => Ok(CellTech::Pcm),
+        "fefet" => Ok(CellTech::Fefet),
+        other => Err(format!("cost table: unknown cell '{other}' (sram|reram|pcm|fefet)")),
+    }
+}
+
+impl CostTable {
+    /// Validate the table: a well-formed name, at least one row, unique
+    /// cells, and physically sane finite values. Every consumer
+    /// ([`load`], spec resolution, the `def_ap_cost!` initializer) goes
+    /// through this gate.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.name.is_empty() || self.name.len() > 64 {
+            return Err("cost table: name must be 1..=64 chars".to_string());
+        }
+        if !self
+            .name
+            .chars()
+            .all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '-' || c == '_' || c == '.')
+        {
+            return Err(format!(
+                "cost table: name '{}' may only use [a-z0-9._-]",
+                self.name
+            ));
+        }
+        if self.rows.is_empty() {
+            return Err("cost table: needs at least one technology row".to_string());
+        }
+        let mut seen = std::collections::BTreeSet::new();
+        for r in &self.rows {
+            if !seen.insert(cell_name(r.cell)) {
+                return Err(format!(
+                    "cost table '{}': duplicate row for cell '{}'",
+                    self.name,
+                    cell_name(r.cell)
+                ));
+            }
+            let checks: [(&str, f64, bool); 11] = [
+                ("v_dd", r.v_dd, r.v_dd > 0.0),
+                ("p_cell_error", r.p_cell_error, (0.0..1.0).contains(&r.p_cell_error)),
+                ("cell_area_m2", r.cell_area_m2, r.cell_area_m2 > 0.0),
+                ("write.energy_j", r.write.energy_j, r.write.energy_j >= 0.0),
+                ("write.cycles", r.write.cycles, r.write.cycles > 0.0),
+                ("compare.energy_j", r.compare.energy_j, r.compare.energy_j >= 0.0),
+                ("compare.cycles", r.compare.cycles, r.compare.cycles > 0.0),
+                ("read.energy_j", r.read.energy_j, r.read.energy_j >= 0.0),
+                ("read.cycles", r.read.cycles, r.read.cycles > 0.0),
+                ("copy.energy_j", r.copy.energy_j, r.copy.energy_j >= 0.0),
+                ("copy.cycles", r.copy.cycles, r.copy.cycles > 0.0),
+            ];
+            for (what, value, ok) in checks {
+                if !value.is_finite() || !ok {
+                    return Err(format!(
+                        "cost table '{}': {} {what} = {value} is out of range",
+                        self.name,
+                        cell_name(r.cell)
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// The row for a cell technology, if the table declares one.
+    pub fn row(&self, cell: CellTech) -> Result<&TechRow, String> {
+        self.rows.iter().find(|r| r.cell == cell).ok_or_else(|| {
+            format!(
+                "cost table '{}' has no row for cell '{}'",
+                self.name,
+                cell_name(cell)
+            )
+        })
+    }
+
+    /// Materialize a [`Tech`] cost handle from this table's row for
+    /// `cell` — the bridge between declarative rows and the simulator's
+    /// per-point cost conversion.
+    pub fn tech_for(&self, cell: CellTech) -> Result<Tech, String> {
+        let r = self.row(cell)?;
+        Ok(Tech {
+            cell,
+            v_dd: r.v_dd,
+            e_write_cell: r.write.energy_j,
+            e_compare_word: r.compare.energy_j,
+            e_read_word: r.read.energy_j,
+            compare_cycles: r.compare.cycles,
+            write_cycles: r.write.cycles,
+            read_cycles: r.read.cycles,
+            p_cell_error: r.p_cell_error,
+            cell_area_m2: r.cell_area_m2,
+        })
+    }
+
+    /// Whether this is (content-identical to) the built-in default table.
+    pub fn is_default(&self) -> bool {
+        self == default_table()
+    }
+
+    /// The table's content hash: 16 hex chars of FNV-1a over the
+    /// canonical JSON of the rows, sorted by cell name. The *name* is
+    /// deliberately excluded — the version identifies the cost numbers,
+    /// so renaming a table does not pretend its physics changed. Any bit
+    /// of any row changes the version, which changes
+    /// [`mapper_fingerprint`](crate::mapper::cache::mapper_fingerprint)
+    /// for binaries defaulting to that table — stale snapshots and mixed
+    /// fleets fail loudly.
+    pub fn cost_version(&self) -> String {
+        let mut texts: Vec<String> =
+            self.rows.iter().map(|r| row_to_json(r).to_string()).collect();
+        texts.sort();
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for t in &texts {
+            h = h ^ fnv1a(t.as_bytes());
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        format!("{h:016x}")
+    }
+
+    /// Serialize to the canonical JSON document (`bf-imna costs --out`,
+    /// spec embedding). Carries the computed `cost_version`
+    /// informationally; [`Self::from_json`] recomputes rather than
+    /// trusts it, so hand-edited what-if files stay honest.
+    pub fn to_json(&self) -> Json {
+        Json::obj([
+            ("cost_version", Json::str(self.cost_version())),
+            ("name", Json::str(self.name.clone())),
+            ("rows", Json::arr(self.rows.iter().map(row_to_json))),
+        ])
+    }
+
+    /// Parse a value produced by [`Self::to_json`] (or hand-written in
+    /// that shape) and validate it. The embedded `cost_version`, if any,
+    /// is ignored — the version is always recomputed from content.
+    pub fn from_json(v: &Json) -> Result<CostTable, String> {
+        let name = v
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or("cost table: missing 'name'")?
+            .to_string();
+        let rows = v
+            .get("rows")
+            .and_then(Json::as_arr)
+            .ok_or("cost table: missing 'rows' array")?
+            .iter()
+            .map(row_from_json)
+            .collect::<Result<Vec<TechRow>, String>>()?;
+        let table = CostTable { name, rows };
+        table.validate()?;
+        Ok(table)
+    }
+}
+
+/// The default table's cost version, computed once — folded into every
+/// [`mapper_fingerprint`](crate::mapper::cache::mapper_fingerprint) call.
+pub fn default_cost_version() -> &'static str {
+    static V: OnceLock<String> = OnceLock::new();
+    V.get_or_init(|| default_table().cost_version())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn default_table_covers_every_cell_and_validates() {
+        let t = default_table();
+        assert_eq!(t.name, "default");
+        assert!(t.validate().is_ok());
+        for cell in CellTech::EXTENDED {
+            assert!(t.row(cell).is_ok(), "missing {}", cell_name(cell));
+        }
+        assert!(t.is_default());
+    }
+
+    #[test]
+    fn presets_have_unique_names_and_validate() {
+        let names: Vec<&str> = preset_names();
+        let mut sorted = names.clone();
+        sorted.sort();
+        sorted.dedup();
+        assert_eq!(sorted.len(), names.len(), "duplicate preset names");
+        for t in presets() {
+            assert!(t.validate().is_ok(), "{} invalid", t.name);
+            for cell in CellTech::EXTENDED {
+                assert!(t.row(cell).is_ok(), "{} missing {}", t.name, cell_name(cell));
+            }
+        }
+    }
+
+    #[test]
+    fn json_round_trip_is_lossless_and_version_stable() {
+        for t in presets() {
+            let doc = t.to_json();
+            let text = doc.to_string();
+            let back = CostTable::from_json(&Json::parse(&text).unwrap()).unwrap();
+            assert_eq!(back, *t, "{} round trip", t.name);
+            assert_eq!(back.cost_version(), t.cost_version(), "{} version", t.name);
+            // Serialize → parse → serialize is byte-stable.
+            assert_eq!(back.to_json().to_string(), text, "{} bytes", t.name);
+        }
+    }
+
+    #[test]
+    fn random_tables_round_trip() {
+        // Property test: arbitrary finite positive values survive the
+        // JSON round trip bit-for-bit and keep a stable version.
+        let mut rng = Rng::new(0xC057);
+        for case in 0..50 {
+            let op = |rng: &mut Rng| OpCost {
+                energy_j: rng.f64() * 1e-12,
+                cycles: 1.0 + (rng.below(16) as f64),
+            };
+            let rows = CellTech::EXTENDED
+                .into_iter()
+                .map(|cell| TechRow {
+                    cell,
+                    v_dd: 0.5 + rng.f64(),
+                    p_cell_error: rng.f64() * 0.5,
+                    cell_area_m2: 1e-14 + rng.f64() * 1e-12,
+                    write: op(&mut rng),
+                    compare: op(&mut rng),
+                    read: op(&mut rng),
+                    copy: op(&mut rng),
+                })
+                .collect();
+            let t = CostTable { name: format!("prop-{case}"), rows };
+            t.validate().unwrap();
+            let back = CostTable::from_json(&Json::parse(&t.to_json().to_string()).unwrap())
+                .unwrap();
+            assert_eq!(back, t, "case {case}");
+            assert_eq!(back.cost_version(), t.cost_version(), "case {case}");
+        }
+    }
+
+    #[test]
+    fn cost_version_ignores_name_but_not_values() {
+        let t = default_table();
+        let mut renamed = t.clone();
+        renamed.name = "renamed".to_string();
+        assert_eq!(renamed.cost_version(), t.cost_version());
+
+        let mut mutated = t.clone();
+        mutated.rows[0].write.energy_j *= 1.0000001;
+        assert_ne!(mutated.cost_version(), t.cost_version());
+
+        let mut cycles = t.clone();
+        cycles.rows[1].write.cycles += 1.0;
+        assert_ne!(cycles.cost_version(), t.cost_version());
+    }
+
+    #[test]
+    fn cost_version_is_row_order_independent() {
+        let t = default_table();
+        let mut reversed = t.clone();
+        reversed.rows.reverse();
+        assert_eq!(reversed.cost_version(), t.cost_version());
+    }
+
+    #[test]
+    fn scaled_preset_matches_voltage_scaled_bit_for_bit() {
+        let t = scaled_0v5_table();
+        for cell in CellTech::EXTENDED {
+            let from_table = t.tech_for(cell).unwrap();
+            let legacy = Tech::new(cell).voltage_scaled();
+            assert_eq!(
+                from_table.e_compare_word.to_bits(),
+                legacy.e_compare_word.to_bits(),
+                "{}: compare",
+                cell_name(cell)
+            );
+            assert_eq!(
+                from_table.e_write_cell.to_bits(),
+                legacy.e_write_cell.to_bits(),
+                "{}: write",
+                cell_name(cell)
+            );
+            assert_eq!(from_table.v_dd, legacy.v_dd);
+            assert_eq!(from_table.p_cell_error, legacy.p_cell_error);
+        }
+    }
+
+    #[test]
+    fn validate_rejects_bad_tables() {
+        let ok = default_table().clone();
+        let mut bad = ok.clone();
+        bad.name = "Has Spaces".to_string();
+        assert!(bad.validate().is_err());
+
+        let mut bad = ok.clone();
+        bad.rows.push(bad.rows[0]);
+        assert!(bad.validate().is_err(), "duplicate cell row");
+
+        let mut bad = ok.clone();
+        bad.rows[0].write.cycles = 0.0;
+        assert!(bad.validate().is_err(), "zero cycles");
+
+        let mut bad = ok.clone();
+        bad.rows[0].compare.energy_j = f64::NAN;
+        assert!(bad.validate().is_err(), "NaN energy");
+
+        let mut bad = ok;
+        bad.rows = Vec::new();
+        assert!(bad.validate().is_err(), "empty rows");
+    }
+
+    #[test]
+    fn load_resolves_presets_and_rejects_name_collisions() {
+        assert_eq!(load("default").unwrap(), *default_table());
+        assert_eq!(load("scaled-0v5").unwrap(), *scaled_0v5_table());
+        assert!(load("no-such-preset-or-file").is_err());
+
+        // A file table may not impersonate a preset with different content.
+        let dir = std::env::temp_dir().join(format!(
+            "bf-imna-costs-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut fake = default_table().clone();
+        fake.rows[0].write.energy_j *= 2.0;
+        let path = dir.join("fake-default.json");
+        std::fs::write(&path, fake.to_json().to_string()).unwrap();
+        let err = load(path.to_str().unwrap()).unwrap_err();
+        assert!(err.contains("collides"), "{err}");
+
+        // A renamed what-if table loads fine and materializes bit-identically.
+        fake.name = "what-if".to_string();
+        std::fs::write(&path, fake.to_json().to_string()).unwrap();
+        let loaded = load(path.to_str().unwrap()).unwrap();
+        assert_eq!(loaded, fake);
+        assert_eq!(
+            loaded.tech_for(CellTech::Sram).unwrap().e_write_cell.to_bits(),
+            fake.rows[0].write.energy_j.to_bits()
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -25,6 +25,7 @@ pub mod ap;
 pub mod arch;
 pub mod baselines;
 pub mod coordinator;
+pub mod costs;
 pub mod mapper;
 pub mod model;
 pub mod precision;

@@ -17,9 +17,14 @@
 //! bf-imna sweep    --net alexnet --store results/ --out full.json  # replay cached points
 //! bf-imna artifacts                                   # list the paper-artifact catalog
 //! bf-imna render   --artifact fig7 --doc full.json    # document -> figure/table text
+//! bf-imna render   --artifact fig7 --doc full.json --csv fig7.csv  # + plottable CSV
 //! bf-imna hawq                                        # Table VII (table7 artifact)
 //! bf-imna compare                                     # Table VIII (table8 artifact)
 //! bf-imna validate                                    # Table I (table1 artifact)
+//! bf-imna costs    --list                             # cost-table presets + versions
+//! bf-imna costs    --show jia-65nm --out jia.json     # canonical table JSON
+//! bf-imna sweep    --net alexnet --costs jia-65nm     # what-if sweep under a preset
+//! bf-imna calibrate --out fitted.json                 # fit cycles to measured latency
 //! bf-imna serve    --addr 127.0.0.1:8378              # HTTP serving front end
 //! bf-imna serve    --requests 32                      # local serving demo
 //! bf-imna infer    --addr 127.0.0.1:8378 --deadline-ms 5   # serving client
@@ -41,6 +46,7 @@ use std::process::ExitCode;
 use std::time::Duration;
 
 use bf_imna::coordinator::loadgen;
+use bf_imna::costs;
 use bf_imna::coordinator::server::{self as serving, InferRequest};
 use bf_imna::coordinator::{
     Budget, BudgetSpec, Coordinator, CoordinatorConfig, Priority, RequestSpec, ServingServer,
@@ -71,6 +77,8 @@ fn main() -> ExitCode {
         "hawq" => cmd_hawq(),
         "compare" => cmd_compare(),
         "validate" => cmd_validate(),
+        "costs" => cmd_costs(&opts),
+        "calibrate" => cmd_calibrate(&opts),
         "serve" => cmd_serve(&opts),
         "infer" => cmd_infer(&opts),
         "loadgen" => cmd_loadgen(&opts),
@@ -112,6 +120,10 @@ COMMANDS:
              --shards N        split the sweep into N contiguous shards
              --shard-id K      run shard K in 0..N (default 0)
              --tech sram|reram|pcm|fefet (default sram)
+             --costs NAME|FILE run the sweep under a non-default cost
+                               table: a preset (see `costs --list`) or a
+                               table JSON file; the table name becomes a
+                               point coordinate echoed in every record
              --combos N        mixed combos per avg-precision target (default 5)
              --seed N          combination-generator seed (default 7)
              --cache-in FILE   absorb a plan-cache snapshot before running
@@ -170,7 +182,8 @@ COMMANDS:
                                uses a catalog artifact's spec; when both
                                are absent the spec is built from
                                --net/--hw/--tech/--combos/--seed exactly
-                               like `sweep`
+                               like `sweep`; --costs NAME|FILE swaps the
+                               cost table exactly like `sweep`
              --shards N        shard count (default: one per worker)
              --timeout-s N     per-request timeout in seconds (default 120)
              --cache-in FILE   ship a plan-cache snapshot to every worker
@@ -208,11 +221,26 @@ COMMANDS:
                                when absent the spec runs in-process first
              --tiny            with no --doc: run the shrunk smoke grid
              --out FILE        write the rendered text (default: stdout)
+             --csv FILE        also write the artifact's plottable CSV
+                               (one row per sweep point, exact canonical
+                               floats — what CI uploads next to the text)
              output is byte-identical across in-process, sharded, and
              dispatched documents of the same spec
   hawq       Table VII — HAWQ-V3 bit-fluid ResNet18 (the table7 artifact)
   compare    Table VIII — BF-IMNA peak rows vs SOTA (the table8 artifact)
   validate   Table I microbenchmark — emulator vs models (the table1 artifact)
+  costs      the versioned AP cost-table presets (the `--costs` vocabulary)
+             --list            table of presets: name, cost_version, cells
+                               (the default mode)
+             --show NAME|FILE  print a table's canonical JSON (a preset
+                               name or a table JSON file to validate)
+             --out FILE        with --show: write instead of stdout
+  calibrate  least-squares fit of the SRAM cycle coefficients against the
+             sim backend's measured serve-CNN latencies; prints the
+             measured-vs-modeled residual report (also a catalog artifact:
+             `render --artifact calibration`)
+             --out FILE        write the fitted, versioned cost-table JSON
+                               (loadable via `--costs FILE`)
   serve      bit-fluid serving coordinator: HTTP front end or local demo
              server mode (default): listen and serve inference requests
              --addr HOST:PORT  listen address (default 127.0.0.1:8378;
@@ -225,6 +253,21 @@ COMMANDS:
              (requires a --features pjrt build)
              --time-scale F    pace sim-backend executions at F x the
                                modeled latency (default 0 = no pacing)
+             --fleet-priors HOST:PORT  seed the precision controller's
+                               latency priors from a `fleet` controller's
+                               GET /workers listing: live workers' per-
+                               config execute-latency stats become the
+                               prior scales (full-ladder coverage
+                               required; falls back to the simulator
+                               priors otherwise)
+             --fleet HOST:PORT  register this serving front end with a
+                               `fleet` controller and heartbeat its
+                               address + live metrics document (including
+                               the per-config execute stats that
+                               --fleet-priors harvests)
+             --advertise H:P   address to register with --fleet (default:
+                               the bound listen address)
+             --heartbeat-s F   heartbeat period in seconds (default 1)
              --max-requests N  concurrent-connection budget (default 256;
                                over-budget connections get 503 server-busy)
              --idle-timeout-s N  close keep-alive connections idle for N
@@ -368,7 +411,7 @@ fn cmd_sweep(opts: &BTreeMap<String, String>) -> CliResult {
     // plain `sweep --net X --hw Y` keeps the Fig. 7 table.
     let service_mode = [
         "out", "spec", "artifact", "tiny", "shards", "shard-id", "tech", "combos", "seed",
-        "cache-in", "cache-out", "store",
+        "cache-in", "cache-out", "store", "costs",
     ]
     .iter()
     .any(|k| opts.contains_key(*k));
@@ -453,34 +496,39 @@ fn cmd_sweep(opts: &BTreeMap<String, String>) -> CliResult {
 /// a catalog artifact (`--artifact NAME [--tiny]`), an explicit spec file
 /// (`--spec FILE`), or the Fig. 7 shape built from the common flags
 /// (`--net/--hw/--tech/--combos/--seed`). One code path, so the commands'
-/// documents stay byte-comparable by construction.
+/// documents stay byte-comparable by construction. `--costs NAME|FILE`
+/// swaps the cost table on whichever spec was picked.
 fn spec_from_opts(
     opts: &BTreeMap<String, String>,
 ) -> Result<SweepSpec, Box<dyn std::error::Error>> {
-    if let Some(name) = opts.get("artifact") {
+    let mut spec = if let Some(name) = opts.get("artifact") {
         let artifact = artifacts::by_name(name)?;
-        return Ok(if opts.contains_key("tiny") {
+        if opts.contains_key("tiny") {
             artifact.tiny_spec()
         } else {
             artifact.spec()
-        });
-    }
-    if let Some(path) = opts.get("spec") {
+        }
+    } else if let Some(path) = opts.get("spec") {
         let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
-        return Ok(SweepSpec::from_json(&Json::parse(&text).map_err(|e| format!("{path}: {e}"))?)?);
+        SweepSpec::from_json(&Json::parse(&text).map_err(|e| format!("{path}: {e}"))?)?
+    } else {
+        let net = opts.get("net").map(String::as_str).unwrap_or("alexnet");
+        let hw = opts.get("hw").map(String::as_str).unwrap_or("lr");
+        let combos: usize = match opts.get("combos") {
+            Some(s) => s.parse()?,
+            None => dse::COMBOS_PER_TARGET,
+        };
+        let seed: u64 = match opts.get("seed") {
+            Some(s) => s.parse()?,
+            None => 7,
+        };
+        let mut spec = SweepSpec::fig7(net, hw, combos, seed);
+        spec.tech = vec![opts.get("tech").cloned().unwrap_or_else(|| "sram".to_string())];
+        spec
+    };
+    if let Some(arg) = opts.get("costs") {
+        spec.costs = vec![costs::load(arg)?];
     }
-    let net = opts.get("net").map(String::as_str).unwrap_or("alexnet");
-    let hw = opts.get("hw").map(String::as_str).unwrap_or("lr");
-    let combos: usize = match opts.get("combos") {
-        Some(s) => s.parse()?,
-        None => dse::COMBOS_PER_TARGET,
-    };
-    let seed: u64 = match opts.get("seed") {
-        Some(s) => s.parse()?,
-        None => 7,
-    };
-    let mut spec = SweepSpec::fig7(net, hw, combos, seed);
-    spec.tech = vec![opts.get("tech").cloned().unwrap_or_else(|| "sram".to_string())];
     Ok(spec)
 }
 
@@ -777,13 +825,35 @@ fn cmd_render(opts: &BTreeMap<String, String>) -> CliResult {
         .get("artifact")
         .ok_or("render: --artifact NAME is required (list them with `bf-imna artifacts`)")?;
     let artifact = artifacts::by_name(name)?;
-    let text = match opts.get("doc") {
+    // The CSV emitter needs the sweep *document*, not just the rendered
+    // text, so with --csv both outputs derive from one document (one
+    // in-process run at most).
+    let (text, csv) = match opts.get("doc") {
         Some(path) => {
             let raw = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
-            artifact.render_doc(&Json::parse(&raw).map_err(|e| format!("{path}: {e}"))?)?
+            let doc = Json::parse(&raw).map_err(|e| format!("{path}: {e}"))?;
+            let csv =
+                if opts.contains_key("csv") { Some(artifact.csv_doc(&doc)?) } else { None };
+            (artifact.render_doc(&doc)?, csv)
         }
-        None => artifact.run_and_render(&SweepEngine::new(), opts.contains_key("tiny"))?,
+        None if opts.contains_key("csv") => {
+            let spec = if opts.contains_key("tiny") {
+                artifact.tiny_spec()
+            } else {
+                artifact.spec()
+            };
+            let doc = shard::run_full(&spec, &SweepEngine::new())?;
+            (artifact.render_doc(&doc)?, Some(artifact.csv_doc(&doc)?))
+        }
+        None => (artifact.run_and_render(&SweepEngine::new(), opts.contains_key("tiny"))?, None),
     };
+    if let Some(csv) = csv {
+        let path = opts.get("csv").map(String::as_str).filter(|p| *p != "true").ok_or(
+            "render: --csv needs a file path (e.g. `render --artifact fig7 --csv fig7.csv`)",
+        )?;
+        std::fs::write(path, &csv).map_err(|e| format!("{path}: {e}"))?;
+        eprintln!("render: wrote {name} CSV to {path}");
+    }
     match opts.get("out") {
         Some(path) => {
             std::fs::write(path, &text).map_err(|e| format!("{path}: {e}"))?;
@@ -809,11 +879,82 @@ fn cmd_validate() -> CliResult {
     Ok(())
 }
 
+fn cmd_costs(opts: &BTreeMap<String, String>) -> CliResult {
+    if let Some(arg) = opts.get("show") {
+        // A preset name or a table JSON file — either way the output is
+        // the canonical serialization (what `--costs FILE` reads back).
+        let table = costs::load(arg)?;
+        let text = format!("{}\n", table.to_json());
+        match opts.get("out") {
+            Some(path) => {
+                std::fs::write(path, &text).map_err(|e| format!("{path}: {e}"))?;
+                eprintln!(
+                    "costs: wrote table '{}' (cost_version {}) to {path}",
+                    table.name,
+                    table.cost_version()
+                );
+            }
+            None => print!("{text}"),
+        }
+        return Ok(());
+    }
+    // Default mode (--list): the preset catalog with versions.
+    println!("Cost-table presets — swap with `--costs NAME|FILE`; export with `costs --show`.");
+    let mut t = Table::new(vec!["preset", "cost_version", "cells", "note"]);
+    for table in costs::presets() {
+        let cells: Vec<&str> = table.rows.iter().map(|r| r.cell.label()).collect();
+        let note = if table.is_default() { "the seed constants (implied everywhere)" } else { "" };
+        t.row(vec![
+            table.name.clone(),
+            table.cost_version(),
+            cells.join(","),
+            note.to_string(),
+        ]);
+    }
+    print!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_calibrate(opts: &BTreeMap<String, String>) -> CliResult {
+    let cal = costs::calibrate::calibrate_serve_cnn()?;
+    if let Some(path) = opts.get("out") {
+        std::fs::write(path, format!("{}\n", cal.table.to_json()))
+            .map_err(|e| format!("{path}: {e}"))?;
+        eprintln!(
+            "calibrate: wrote fitted table '{}' (cost_version {}) to {path}",
+            cal.table.name,
+            cal.table.cost_version()
+        );
+    }
+    print!("{}", cal.report());
+    Ok(())
+}
+
 /// Start a coordinator from the shared `serve` backend flags: the sim
 /// backend by default, the artifact-loading runtime when `--artifacts` is
 /// given (which needs a `--features pjrt` build to actually execute).
 fn start_coordinator(opts: &BTreeMap<String, String>) -> Result<Coordinator, Box<dyn std::error::Error>> {
-    let cfg = CoordinatorConfig::default();
+    let mut cfg = CoordinatorConfig::default();
+    // --fleet-priors: seed the precision controller from the fleet's live
+    // per-config execute-latency stats (GET /workers). An empty harvest is
+    // not an error — the coordinator falls back to its simulator priors.
+    if let Some(addr) = opts.get("fleet-priors") {
+        let doc = fleet::fetch_workers(addr, Duration::from_secs(10))?;
+        cfg.fleet_prior_means = bf_imna::coordinator::fleet_prior_means(&doc);
+        if cfg.fleet_prior_means.is_empty() {
+            eprintln!(
+                "serve: fleet {addr} carried no per-config execute stats; \
+                 falling back to simulator priors"
+            );
+        } else {
+            let configs: Vec<String> = cfg
+                .fleet_prior_means
+                .iter()
+                .map(|(k, v)| format!("{k} {}s", fmt_eng(*v, 3)))
+                .collect();
+            eprintln!("serve: latency priors from fleet {addr}: {}", configs.join(", "));
+        }
+    }
     match opts.get("artifacts") {
         Some(dir) => Ok(Coordinator::start(std::path::Path::new(dir), cfg)?),
         None => {
@@ -851,12 +992,46 @@ fn cmd_serve(opts: &BTreeMap<String, String>) -> CliResult {
     if let Some(s) = opts.get("serve-threads") {
         sopts.serve_threads = s.parse()?;
     }
+    // A cheap clone of the coordinator handle for the fleet heartbeat's
+    // stats closure (the server consumes the original).
+    let stats_coord = coord.clone();
     let server =
         ServingServer::spawn_with(addr, coord, sopts).map_err(|e| format!("{addr}: {e}"))?;
     eprintln!(
         "serve: listening on http://{} (POST /infer, GET /healthz, GET /stats, GET /metrics)",
         server.addr()
     );
+    // With --fleet, register this serving front end with the controller
+    // like a worker: beats carry the live metrics document (including
+    // per_config_execute), which is exactly what a later
+    // `serve --fleet-priors` against the same controller harvests.
+    let _heartbeat = match opts.get("fleet") {
+        Some(fleet_addr) => {
+            let advertise =
+                opts.get("advertise").cloned().unwrap_or_else(|| server.addr().to_string());
+            let period = match opts.get("heartbeat-s") {
+                Some(s) => {
+                    let secs: f64 = s.parse()?;
+                    if !(secs.is_finite() && secs > 0.0) {
+                        return Err("serve: --heartbeat-s must be > 0".into());
+                    }
+                    Duration::from_secs_f64(secs)
+                }
+                None => Duration::from_secs(1),
+            };
+            eprintln!(
+                "serve: heartbeating to http://{fleet_addr} as {advertise} every {} s",
+                period.as_secs_f64()
+            );
+            Some(fleet::spawn_heartbeat_with(
+                fleet_addr,
+                &advertise,
+                move || stats_coord.metrics().to_json(stats_coord.uptime_s()),
+                period,
+            ))
+        }
+        None => None,
+    };
     // Serve until killed; `bf-imna infer` is the other end.
     server.join();
     Ok(())

@@ -320,13 +320,35 @@ fn entries_digest(entries: &[(PlanKey, LayerPlan)]) -> (Vec<(String, Json)>, Str
 
 /// Behavioral fingerprint of the mapper: map a fixed synthetic probe
 /// workload (one layer of each kind at two precisions on the Table V LR
-/// chip) and hash every structural output bit plus the chip key. Any
-/// change to `map_layer`'s math, the pass/LUT cost constants it consumes,
-/// or the default chip geometry changes this value — no manual version
-/// bump required. Used to guard [`CacheSnapshot`] exchange between
-/// processes: a snapshot only loads into a binary whose mapper would have
-/// produced the same plans.
+/// chip) and hash every structural output bit plus the chip key, then
+/// fold in the default cost table's
+/// [`cost_version`](crate::costs::CostTable::cost_version). Any change to
+/// `map_layer`'s math, the pass/LUT cost constants it consumes, the
+/// default chip geometry, *or any default cost-table row* changes this
+/// value — no manual version bump required. Used to guard
+/// [`CacheSnapshot`] exchange between processes and every shard / fleet
+/// handshake: a snapshot only loads into (and a peer only talks to) a
+/// binary whose mapper and cost model would have produced the same
+/// numbers.
+///
+/// Plans themselves are structural — independent of the energy values a
+/// [`CostTable`](crate::costs::CostTable) declares — so a `--costs`
+/// what-if sweep still runs under this (default-table) fingerprint: the
+/// alternative table travels inside the spec, while the fingerprint pins
+/// the *binary's* semantics.
 pub fn mapper_fingerprint() -> String {
+    use std::sync::OnceLock;
+    // Pure function of the binary: memoized (the probe mapping is not
+    // free and serving hot paths stamp the fingerprint per handshake).
+    static FP: OnceLock<String> = OnceLock::new();
+    FP.get_or_init(|| mapper_fingerprint_with(crate::costs::default_table())).clone()
+}
+
+/// [`mapper_fingerprint`] parameterized over the cost table whose
+/// `cost_version` is folded in — exposed so tests (and tools that reason
+/// about cross-binary compatibility) can compute the fingerprint a binary
+/// with a *different* default cost model would advertise.
+pub fn mapper_fingerprint_with(table: &crate::costs::CostTable) -> String {
     let chip = ChipConfig::lr();
     let probes = [
         Layer {
@@ -399,6 +421,7 @@ pub fn mapper_fingerprint() -> String {
     for w in &words {
         h = fnv1a(h, &w.to_le_bytes());
     }
+    h = fnv1a(h, table.cost_version().as_bytes());
     format!("{h:016x}")
 }
 
@@ -840,6 +863,33 @@ mod tests {
         let fp = mapper_fingerprint();
         assert_eq!(fp.len(), 16, "{fp}");
         assert_eq!(fp, mapper_fingerprint(), "fingerprint must be deterministic");
+        // And equals the parameterized form at the default table.
+        assert_eq!(fp, mapper_fingerprint_with(crate::costs::default_table()));
+    }
+
+    #[test]
+    fn mutated_cost_table_changes_fingerprint_and_rejects_snapshots() {
+        // A binary whose default cost model drifted by one bit of one row
+        // advertises a different fingerprint...
+        let mut mutated = crate::costs::default_table().clone();
+        mutated.rows[0].compare.energy_j *= 1.0 + 1e-9;
+        let drifted = mapper_fingerprint_with(&mutated);
+        assert_ne!(drifted, mapper_fingerprint());
+
+        // ...so its snapshots are rejected by this binary (the stale
+        // CacheSnapshot path of the cost-version contract).
+        let mut doc = match CacheSnapshot::default().to_json() {
+            Json::Obj(m) => m,
+            _ => unreachable!("snapshots serialize to objects"),
+        };
+        doc.insert("fingerprint".to_string(), Json::str(drifted));
+        let err = CacheSnapshot::from_json(&Json::Obj(doc)).unwrap_err();
+        assert!(err.contains("different mapper"), "{err}");
+
+        // Cycle shapes are fingerprinted too, not just energies.
+        let mut cycles = crate::costs::default_table().clone();
+        cycles.rows[0].write.cycles += 1.0;
+        assert_ne!(mapper_fingerprint_with(&cycles), mapper_fingerprint());
     }
 
     #[test]

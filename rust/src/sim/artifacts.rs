@@ -58,6 +58,9 @@ pub struct Artifact {
     spec_fn: fn() -> SweepSpec,
     tiny_fn: fn() -> SweepSpec,
     render_fn: fn(&SweepSpec, &ResolvedSweep, &[PointRecord]) -> Result<String, String>,
+    /// Artifact-specific CSV emitter; `None` falls back to the generic
+    /// per-point [`records_csv`] (coordinates + selected metrics).
+    csv_fn: Option<fn(&SweepSpec, &ResolvedSweep, &[PointRecord]) -> Result<String, String>>,
 }
 
 impl Artifact {
@@ -110,6 +113,39 @@ impl Artifact {
         self.render_records(&spec, &resolved, &records)
     }
 
+    /// The artifact's machine-readable CSV from already-decoded records,
+    /// under the same full-coverage / index-order validation as
+    /// [`Artifact::render_records`]. Artifacts without a dedicated CSV
+    /// shape fall back to the generic per-point [`records_csv`].
+    pub fn csv_records(
+        &self,
+        spec: &SweepSpec,
+        resolved: &ResolvedSweep,
+        records: &[PointRecord],
+    ) -> Result<String, String> {
+        if records.len() != resolved.num_points() {
+            return Err(format!(
+                "{}: {} records for {} enumerated points — CSV needs the full sweep, not a shard",
+                self.name,
+                records.len(),
+                resolved.num_points()
+            ));
+        }
+        match self.csv_fn {
+            Some(f) => f(spec, resolved, records),
+            None => records_csv(spec, resolved, records),
+        }
+    }
+
+    /// The artifact's CSV from a merged sweep document (`--csv FILE` on
+    /// `bf-imna render`) — validated exactly like [`Artifact::render_doc`],
+    /// so the CSV is byte-identical whether the document came from an
+    /// in-process run, a shard merge, or a dispatched fleet.
+    pub fn csv_doc(&self, doc: &Json) -> Result<String, String> {
+        let (spec, resolved, records) = shard::decode_full_doc(doc)?;
+        self.csv_records(&spec, &resolved, &records)
+    }
+
     /// Run the artifact's spec in-process on `engine` and render it —
     /// byte-identical to rendering the same spec's sharded or dispatched
     /// document.
@@ -123,13 +159,14 @@ impl Artifact {
 
 /// The full catalog, in paper order.
 pub fn catalog() -> &'static [Artifact] {
-    static CATALOG: [Artifact; 9] = [
+    static CATALOG: [Artifact; 10] = [
         Artifact {
             name: "fig5",
             title: "Fig. 5 — AP runtimes vs precision M for the three AP organizations (analytic)",
             spec_fn: carrier_spec,
             tiny_fn: carrier_spec,
             render_fn: render_fig5,
+            csv_fn: None,
         },
         Artifact {
             name: "fig6",
@@ -137,6 +174,7 @@ pub fn catalog() -> &'static [Artifact] {
             spec_fn: fig6_full_spec,
             tiny_fn: fig6_tiny_spec,
             render_fn: render_fig6,
+            csv_fn: None,
         },
         Artifact {
             name: "fig7",
@@ -144,6 +182,7 @@ pub fn catalog() -> &'static [Artifact] {
             spec_fn: fig7_full_spec,
             tiny_fn: fig7_tiny_spec,
             render_fn: render_fig7,
+            csv_fn: None,
         },
         Artifact {
             name: "fig8",
@@ -151,6 +190,7 @@ pub fn catalog() -> &'static [Artifact] {
             spec_fn: fig8_full_spec,
             tiny_fn: fig8_tiny_spec,
             render_fn: render_fig8,
+            csv_fn: None,
         },
         Artifact {
             name: "table1",
@@ -158,6 +198,7 @@ pub fn catalog() -> &'static [Artifact] {
             spec_fn: carrier_spec,
             tiny_fn: carrier_spec,
             render_fn: render_table1,
+            csv_fn: None,
         },
         Artifact {
             name: "table7",
@@ -165,6 +206,7 @@ pub fn catalog() -> &'static [Artifact] {
             spec_fn: table7_spec,
             tiny_fn: table7_spec,
             render_fn: render_table7,
+            csv_fn: None,
         },
         Artifact {
             name: "table8",
@@ -172,6 +214,7 @@ pub fn catalog() -> &'static [Artifact] {
             spec_fn: carrier_spec,
             tiny_fn: carrier_spec,
             render_fn: render_table8,
+            csv_fn: None,
         },
         Artifact {
             name: "ablation-ir-mesh",
@@ -179,6 +222,7 @@ pub fn catalog() -> &'static [Artifact] {
             spec_fn: ablation_full_spec,
             tiny_fn: ablation_tiny_spec,
             render_fn: render_ablation_ir_mesh,
+            csv_fn: None,
         },
         Artifact {
             name: "serving-latency",
@@ -186,6 +230,15 @@ pub fn catalog() -> &'static [Artifact] {
             spec_fn: serving_spec,
             tiny_fn: serving_spec,
             render_fn: render_serving_latency,
+            csv_fn: None,
+        },
+        Artifact {
+            name: "calibration",
+            title: "Calibration — cost-table cycle fit vs measured serve-CNN latencies (analytic)",
+            spec_fn: carrier_spec,
+            tiny_fn: carrier_spec,
+            render_fn: render_calibration,
+            csv_fn: Some(csv_calibration),
         },
     ];
     &CATALOG
@@ -241,6 +294,7 @@ fn fig7_full_spec() -> SweepSpec {
         },
         batch: 1,
         metrics: MetricSet::Full,
+        costs: vec![crate::costs::default_table().clone()],
     }
 }
 
@@ -262,6 +316,7 @@ fn fig8_full_spec() -> SweepSpec {
         grid: PrecisionGrid::Fixed { bits: vec![8] },
         batch: 1,
         metrics: MetricSet::Full,
+        costs: vec![crate::costs::default_table().clone()],
     }
 }
 
@@ -305,6 +360,7 @@ fn ablation_full_spec() -> SweepSpec {
         grid: PrecisionGrid::Fixed { bits: vec![2, 8] },
         batch: 1,
         metrics: MetricSet::Full,
+        costs: vec![crate::costs::default_table().clone()],
     }
 }
 
@@ -916,6 +972,122 @@ pub fn render_serving_latency(
     Ok(out)
 }
 
+/// Render the calibration artifact: run the measured-latency fit against
+/// the built-in serve-CNN backend and emit its residual report. Analytic —
+/// the carrier document only rides the uniform spec→run→render pipeline;
+/// every number is a deterministic function of this binary's cost model,
+/// so the report doubles as a drift canary next to `cost_version`.
+pub fn render_calibration(
+    _spec: &SweepSpec,
+    _resolved: &ResolvedSweep,
+    _records: &[PointRecord],
+) -> Result<String, String> {
+    Ok(crate::costs::calibrate::calibrate_serve_cnn()?.report())
+}
+
+/// CSV twin of [`render_calibration`]: one row per (config, batch)
+/// observation with measured, modeled, and residual latencies.
+pub fn csv_calibration(
+    _spec: &SweepSpec,
+    _resolved: &ResolvedSweep,
+    _records: &[PointRecord],
+) -> Result<String, String> {
+    let cal = crate::costs::calibrate::calibrate_serve_cnn()?;
+    let num = |v: f64| Json::num(v).to_string();
+    let mut t = Table::new(vec![
+        "config",
+        "batch",
+        "compares",
+        "writes",
+        "reads",
+        "measured_s",
+        "modeled_s",
+        "residual_s",
+    ]);
+    for p in &cal.points {
+        let modeled = cal.modeled_s(p);
+        t.row(vec![
+            p.config.clone(),
+            p.batch.to_string(),
+            num(p.compares),
+            num(p.writes),
+            num(p.reads),
+            num(p.measured_s),
+            num(modeled),
+            num(modeled - p.measured_s),
+        ]);
+    }
+    Ok(t.to_csv())
+}
+
+/// The generic CSV emitter: one row per sweep point — its full coordinate
+/// tuple (including the cost table) followed by the spec's selected
+/// metrics, array metrics expanded into one labeled column each. Floats
+/// are written with the canonical JSON numeral writer, so parsing a cell
+/// back recovers the exact bits the sweep computed.
+pub fn records_csv(
+    spec: &SweepSpec,
+    _resolved: &ResolvedSweep,
+    records: &[PointRecord],
+) -> Result<String, String> {
+    let num = |v: f64| Json::num(v).to_string();
+    let mut header = vec!["index", "net", "cfg", "hw", "tech", "chip", "costs"]
+        .into_iter()
+        .map(String::from)
+        .collect::<Vec<_>>();
+    for name in spec.metrics.names() {
+        match name {
+            "energy_kinds" => {
+                for label in breakdown::ENERGY_KIND_LABELS {
+                    header.push(format!("energy_kinds:{label}"));
+                }
+            }
+            "gemm_phases" => {
+                for label in breakdown::GEMM_PHASE_LABELS {
+                    header.push(format!("gemm_phases:{label}"));
+                }
+            }
+            scalar => header.push(scalar.to_string()),
+        }
+    }
+    let mut t = Table::new(header);
+    for r in records {
+        let mut row = vec![
+            r.index.to_string(),
+            r.net.clone(),
+            r.cfg.clone(),
+            r.hw.clone(),
+            r.tech.clone(),
+            r.chip.clone(),
+            r.costs.clone(),
+        ];
+        for name in spec.metrics.names() {
+            match name {
+                "energy_kinds" => row.extend(r.energy_kinds.iter().map(|&v| num(v))),
+                "gemm_phases" => row.extend(r.gemm_phases.iter().map(|&v| num(v))),
+                scalar => row.push(num(metric_value(r, scalar)?)),
+            }
+        }
+        t.row(row);
+    }
+    Ok(t.to_csv())
+}
+
+/// A record's scalar metric by canonical name.
+fn metric_value(r: &PointRecord, name: &str) -> Result<f64, String> {
+    Ok(match name {
+        "avg_bits" => r.avg_bits,
+        "energy_j" => r.energy_j,
+        "latency_s" => r.latency_s,
+        "area_mm2" => r.area_mm2,
+        "gops" => r.gops,
+        "gops_per_w" => r.gops_per_w,
+        "gops_per_w_mm2" => r.gops_per_w_mm2,
+        "edp_js" => r.edp_js,
+        other => return Err(format!("csv: unknown scalar metric '{other}'")),
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1039,5 +1211,60 @@ mod tests {
         assert!(fixed_hi.latency_s >= scaled_hi.latency_s);
         assert_eq!(scaled_hi.chip, "scaled (ours)");
         assert_eq!(fixed_hi.chip, "fixed link (ablated)");
+    }
+
+    #[test]
+    fn calibration_artifact_renders_the_residual_report() {
+        let engine = SweepEngine::serial();
+        let a = by_name("calibration").unwrap();
+        let doc = shard::run_full(&a.tiny_spec(), &engine).unwrap();
+        let text = a.render_doc(&doc).unwrap();
+        for needle in ["fitted cycles per op", "fitted-serve-cnn", "RMS relative residual"] {
+            assert!(text.contains(needle), "missing '{needle}' in:\n{text}");
+        }
+        assert_eq!(a.render_doc(&doc).unwrap(), text, "calibration render unstable");
+        // The CSV twin carries one row per (config, batch) observation.
+        let csv = a.csv_doc(&doc).unwrap();
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines[0], "config,batch,compares,writes,reads,measured_s,modeled_s,residual_s");
+        assert_eq!(lines.len(), 1 + 9, "3 configs x 3 batches");
+    }
+
+    #[test]
+    fn generic_csv_emits_one_row_per_point_with_exact_floats() {
+        let engine = SweepEngine::serial();
+        let a = by_name("fig6").unwrap();
+        let spec = a.tiny_spec();
+        let doc = shard::run_full(&spec, &engine).unwrap();
+        let csv = a.csv_doc(&doc).unwrap();
+        let lines: Vec<&str> = csv.lines().collect();
+        let resolved = spec.resolve().unwrap();
+        assert_eq!(lines.len(), 1 + resolved.num_points());
+        assert!(lines[0].starts_with("index,net,cfg,hw,tech,chip,costs,"));
+        assert!(lines[0].contains("energy_kinds:GEMM"), "{}", lines[0]);
+        // The default cost table is echoed by name in every row, and the
+        // energy cell round-trips to the exact record bits.
+        let (_, _, records) = shard::decode_full_doc(&doc).unwrap();
+        let first: Vec<&str> = lines[1].split(',').collect();
+        assert_eq!(first[6], "default");
+        let energy_col = lines[0].split(',').position(|h| h == "energy_j").unwrap();
+        let parsed: f64 = first[energy_col].parse().unwrap();
+        assert_eq!(parsed.to_bits(), records[0].energy_j.to_bits());
+        // Byte-identical whether the document was sharded or not.
+        let docs: Vec<Json> = (0..2)
+            .map(|k| shard::run_shard(&spec, 2, k, &engine).unwrap().to_json())
+            .collect();
+        assert_eq!(a.csv_doc(&shard::merge(&docs).unwrap()).unwrap(), csv);
+    }
+
+    #[test]
+    fn csv_rejects_partial_record_sets() {
+        let engine = SweepEngine::serial();
+        let a = by_name("fig6").unwrap();
+        let spec = a.tiny_spec();
+        let resolved = spec.resolve().unwrap();
+        let result = shard::run_shard(&spec, 2, 0, &engine).unwrap();
+        let err = a.csv_records(&spec, &resolved, &result.points).unwrap_err();
+        assert!(err.contains("full sweep"), "{err}");
     }
 }

@@ -231,8 +231,7 @@ pub fn fig7_spec(net: &Network, hw: HwConfig, seed: u64) -> SweepSpec {
 /// as in the paper: compare energy is the dominant, unscalable term).
 pub fn voltage_scaling_saving(net: &Network, bits: u32) -> f64 {
     let cfg = PrecisionConfig::fixed(bits, net.weight_layers());
-    let mut scaled_tech = Tech::sram();
-    scaled_tech.e_write_cell = crate::ap::tech::E_WRITE_SRAM_SCALED;
+    let scaled_tech = Tech::sram().write_scaled_only();
     let nominal_p = SimParams::new(HwConfig::Lr, Tech::sram());
     let scaled_p = SimParams::new(HwConfig::Lr, scaled_tech);
     // Both points share one plan per layer — only the write energy differs.

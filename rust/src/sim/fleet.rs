@@ -359,6 +359,22 @@ pub fn spawn_heartbeat(
     stats: WorkerStatsHandle,
     period: Duration,
 ) -> Heartbeat {
+    spawn_heartbeat_with(fleet_addr, advertise, move || stats.doc(), period)
+}
+
+/// [`spawn_heartbeat`] over any live stats-document source. This is how a
+/// *serving* front end joins a fleet (`bf-imna serve --fleet`): its beats
+/// carry the coordinator's metrics document — including the
+/// `per_config_execute` table — so a later `serve --fleet-priors` against
+/// the same controller can seed its precision controller from the
+/// fleet's measured latencies (see
+/// [`crate::coordinator::fleet_prior_means`]).
+pub fn spawn_heartbeat_with(
+    fleet_addr: &str,
+    advertise: &str,
+    stats: impl Fn() -> Json + Send + 'static,
+    period: Duration,
+) -> Heartbeat {
     let fleet_addr = fleet_addr.to_string();
     let advertise = advertise.to_string();
     let period = period.max(Duration::from_millis(10));
@@ -371,7 +387,7 @@ pub fn spawn_heartbeat(
                 let body = Json::obj([
                     ("addr", Json::str(advertise.clone())),
                     ("fingerprint", Json::str(fingerprint.clone())),
-                    ("stats", stats.doc()),
+                    ("stats", stats()),
                 ])
                 .to_string();
                 let _ = http_request(
@@ -390,6 +406,18 @@ pub fn spawn_heartbeat(
         })
     };
     Heartbeat { stop, handle: Some(handle) }
+}
+
+/// Fetch a fleet controller's `GET /workers` listing once — the consumer
+/// side of the heartbeat stats: `bf-imna serve --fleet-priors` seeds its
+/// precision controller's latency priors from the live workers' stats
+/// documents (see [`crate::coordinator::fleet_prior_means`]).
+pub fn fetch_workers(addr: &str, timeout: Duration) -> Result<Json, String> {
+    let (status, body) = http_request(addr, "GET", "/workers", b"", timeout)?;
+    if status != 200 {
+        return Err(format!("{addr}: fleet listing: HTTP {status}"));
+    }
+    Json::parse_bytes(&body).map_err(|e| format!("{addr}: fleet listing: {e}"))
 }
 
 /// Where [`dispatch_elastic`] gets its worker set.

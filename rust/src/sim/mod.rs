@@ -474,11 +474,8 @@ mod tests {
         // The compare term also scales with V^2 in our physical model, so
         // the saving is larger than the paper's write-only scaling — but
         // write-energy savings alone are indeed negligible:
-        let write_only = {
-            let mut t = Tech::sram();
-            t.e_write_cell = crate::ap::tech::E_WRITE_SRAM_SCALED;
-            sim_fixed(&net, 8, &SimParams::new(HwConfig::Lr, t))
-        };
+        let write_only =
+            sim_fixed(&net, 8, &SimParams::new(HwConfig::Lr, Tech::sram().write_scaled_only()));
         let write_saving = 1.0 - write_only.energy_j() / nominal.energy_j();
         assert!(write_saving < 0.01, "write-only saving {write_saving:.4}");
     }

@@ -39,6 +39,7 @@ use std::ops::Range;
 use super::{breakdown, InferenceReport, SimParams, SweepEngine, SweepPoint};
 use crate::ap::tech::{CellTech, Tech};
 use crate::arch::{ChipConfig, HwConfig};
+use crate::costs::{self, CostTable};
 use crate::mapper::cache::mapper_fingerprint;
 use crate::model::{zoo, Network};
 use crate::precision::{sweep, PrecisionConfig};
@@ -421,12 +422,13 @@ pub enum PrecisionGrid {
 ///     grid: PrecisionGrid::Fixed { bits: vec![4, 8] },
 ///     batch: 1,
 ///     metrics: MetricSet::Full,
+///     costs: vec![bf_imna::costs::default_table().clone()],
 /// };
 /// // JSON round trip is the identity.
 /// let text = spec.to_json().to_string();
 /// let back = SweepSpec::from_json(&Json::parse(&text).unwrap()).unwrap();
 /// assert_eq!(back, spec);
-/// // 1 net x 1 hw x 1 chip x 2 tech x 2 configs = 4 points.
+/// // 1 net x 1 hw x 1 chip x 2 tech x 1 costs x 2 configs = 4 points.
 /// assert_eq!(spec.resolve().unwrap().num_points(), 4);
 /// ```
 #[derive(Debug, Clone, PartialEq)]
@@ -445,6 +447,13 @@ pub struct SweepSpec {
     pub batch: u64,
     /// Which metric subset the records carry (default: the full set).
     pub metrics: MetricSet,
+    /// Cost tables to cross (default: the single built-in default table,
+    /// which — like the default chip geometry — serializes invisibly so
+    /// legacy documents keep their exact bytes). A what-if table rides
+    /// *inside* the spec: every shard / dispatch worker materializes its
+    /// [`Tech`] handles from the embedded rows, so cost sweeps flow
+    /// through the byte-identical pipeline like any other axis.
+    pub costs: Vec<CostTable>,
 }
 
 impl SweepSpec {
@@ -459,6 +468,7 @@ impl SweepSpec {
             grid,
             batch: 1,
             metrics: MetricSet::Full,
+            costs: vec![costs::default_table().clone()],
         }
     }
 
@@ -512,6 +522,11 @@ impl SweepSpec {
         // documents keep their exact PR 2–4 bytes.
         if let MetricSet::Subset(names) = &self.metrics {
             pairs.push(("metrics", Json::arr(names.iter().map(|n| Json::str(n.clone())))));
+        }
+        // Same invisibility rule for the costs axis: the lone default
+        // table writes no key, so pre-costs documents stay byte-identical.
+        if !(self.costs.len() == 1 && self.costs[0].is_default()) {
+            pairs.push(("costs", Json::arr(self.costs.iter().map(CostTable::to_json))));
         }
         Json::obj(pairs)
     }
@@ -636,7 +651,26 @@ impl SweepSpec {
                 set
             }
         };
-        Ok(SweepSpec { nets, hw: strings("hw")?, tech: strings("tech")?, chips, grid, batch, metrics })
+        // Costs axis: optional; absent means the single default table.
+        let costs = match v.get("costs") {
+            None => vec![costs::default_table().clone()],
+            Some(c) => c
+                .as_arr()
+                .ok_or("spec: 'costs' must be an array")?
+                .iter()
+                .map(CostTable::from_json)
+                .collect::<Result<Vec<CostTable>, String>>()?,
+        };
+        Ok(SweepSpec {
+            nets,
+            hw: strings("hw")?,
+            tech: strings("tech")?,
+            chips,
+            grid,
+            batch,
+            metrics,
+            costs,
+        })
     }
 
     /// Resolve names into simulation inputs, validating the spec. The
@@ -658,12 +692,35 @@ impl SweepSpec {
                 return Err(format!("spec: duplicate chip geometry name '{}'", geom.name));
             }
         }
+        if self.costs.is_empty() {
+            return Err("spec: 'costs' must be non-empty".to_string());
+        }
+        let mut cost_names = BTreeSet::new();
+        for table in &self.costs {
+            table.validate().map_err(|e| format!("spec: {e}"))?;
+            if !cost_names.insert(table.name.as_str()) {
+                return Err(format!("spec: duplicate cost table name '{}'", table.name));
+            }
+        }
         let nets =
             self.nets.iter().map(|n| net_by_name(n)).collect::<Result<Vec<Network>, String>>()?;
         let hws =
             self.hw.iter().map(|h| hw_by_name(h)).collect::<Result<Vec<HwConfig>, String>>()?;
         let techs =
             self.tech.iter().map(|t| tech_by_name(t)).collect::<Result<Vec<Tech>, String>>()?;
+        // Materialize each (cost table, technology) cell's cost handle up
+        // front — a table missing a swept cell fails at resolve, not
+        // mid-sweep. For the default table these are bit-identical to the
+        // `techs` handles above (`Tech::new` *is* the default table).
+        let mut techs_by_cost = Vec::with_capacity(self.costs.len());
+        for table in &self.costs {
+            techs_by_cost.push(
+                techs
+                    .iter()
+                    .map(|t| table.tech_for(t.cell).map_err(|e| format!("spec: {e}")))
+                    .collect::<Result<Vec<Tech>, String>>()?,
+            );
+        }
         // Precision configs are per network: widths quantify *that*
         // network's weight layers.
         let mut cfgs: Vec<Vec<PrecisionConfig>> = Vec::with_capacity(nets.len());
@@ -740,7 +797,7 @@ impl SweepSpec {
         let mut offsets = Vec::with_capacity(nets.len() + 1);
         offsets.push(0usize);
         for c in &cfgs {
-            let block = hws.len() * self.chips.len() * techs.len() * c.len();
+            let block = hws.len() * self.chips.len() * techs.len() * self.costs.len() * c.len();
             offsets.push(offsets.last().unwrap() + block);
         }
         Ok(ResolvedSweep {
@@ -748,8 +805,10 @@ impl SweepSpec {
             hws,
             techs,
             chips: self.chips.clone(),
+            costs: self.costs.clone(),
             cfgs,
             chip_cfgs,
+            techs_by_cost,
             offsets,
             batch: self.batch,
         })
@@ -771,26 +830,35 @@ pub struct PointCoords {
     pub tech: String,
     /// Chip-geometry name.
     pub chip: String,
+    /// Cost-table name (the `costs` axis coordinate).
+    pub costs: String,
 }
 
 /// A [`SweepSpec`] with names resolved into simulation inputs. Point
 /// enumeration is network-outermost, then hardware, then chip geometry,
-/// then technology, then precision config (innermost) — identical in
-/// every process.
+/// then technology, then cost table, then precision config (innermost) —
+/// identical in every process.
 #[derive(Debug, Clone)]
 pub struct ResolvedSweep {
     /// The networks under sweep, in spec order.
     pub nets: Vec<Network>,
     /// Hardware configurations, in spec order.
     pub hws: Vec<HwConfig>,
-    /// Cell technologies, in spec order.
+    /// Cell technologies, in spec order, materialized at the *default*
+    /// cost table (renderers use these for cells and labels; the cost
+    /// handle a point actually simulates with is the
+    /// `(cost table, technology)` cell — see [`Self::tech_at`]).
     pub techs: Vec<Tech>,
     /// Chip geometries, in spec order.
     pub chips: Vec<ChipGeom>,
+    /// Cost tables, in spec order.
+    pub costs: Vec<CostTable>,
     /// Precision configurations, one list per network, in spec order.
     pub cfgs: Vec<Vec<PrecisionConfig>>,
     /// Concrete chips, one per (net, hw, geometry), net-major.
     chip_cfgs: Vec<ChipConfig>,
+    /// Cost handles, `[cost table][technology]`, materialized at resolve.
+    techs_by_cost: Vec<Vec<Tech>>,
     /// Start index of each network's point block (+ the total at the end).
     offsets: Vec<usize>,
     /// Inference batch size.
@@ -803,47 +871,61 @@ impl ResolvedSweep {
         *self.offsets.last().expect("offsets non-empty")
     }
 
-    /// Decompose a global point index into (net, hw, chip, tech, cfg)
-    /// coordinate indices. Panics if `i >= num_points()`.
-    fn locate(&self, i: usize) -> (usize, usize, usize, usize, usize) {
+    /// Decompose a global point index into (net, hw, chip, tech, costs,
+    /// cfg) coordinate indices. Panics if `i >= num_points()`.
+    fn locate(&self, i: usize) -> (usize, usize, usize, usize, usize, usize) {
         assert!(i < self.num_points(), "point index {i} out of range");
         let n = self.offsets.partition_point(|&o| o <= i) - 1;
         let j = i - self.offsets[n];
         let k_cfg = self.cfgs[n].len();
-        let per_hw = self.chips.len() * self.techs.len() * k_cfg;
+        let n_costs = self.costs.len();
+        let per_hw = self.chips.len() * self.techs.len() * n_costs * k_cfg;
         let h = j / per_hw;
         let rem = j % per_hw;
-        let c = rem / (self.techs.len() * k_cfg);
-        let rem = rem % (self.techs.len() * k_cfg);
-        (n, h, c, rem / k_cfg, rem % k_cfg)
+        let c = rem / (self.techs.len() * n_costs * k_cfg);
+        let rem = rem % (self.techs.len() * n_costs * k_cfg);
+        let t = rem / (n_costs * k_cfg);
+        let rem = rem % (n_costs * k_cfg);
+        (n, h, c, t, rem / k_cfg, rem % k_cfg)
+    }
+
+    /// The cost handle of the `(cost table, technology)` cell — what the
+    /// point at those coordinates actually simulates with.
+    pub fn tech_at(&self, cost: usize, tech: usize) -> Tech {
+        self.techs_by_cost[cost][tech]
     }
 
     /// The `i`-th sweep point (panics if `i >= num_points()`).
     pub fn point(&self, i: usize) -> SweepPoint<'_> {
-        let (n, h, c, t, k) = self.locate(i);
+        let (n, h, c, t, co, k) = self.locate(i);
         SweepPoint {
             net: &self.nets[n],
             cfg: &self.cfgs[n][k],
-            params: SimParams { hw: self.hws[h], tech: self.techs[t], batch: self.batch },
+            params: SimParams {
+                hw: self.hws[h],
+                tech: self.techs_by_cost[co][t],
+                batch: self.batch,
+            },
             chip: Some(&self.chip_cfgs[(n * self.hws.len() + h) * self.chips.len() + c]),
         }
     }
 
     /// The resolved coordinate names of the `i`-th point.
     pub fn coords(&self, i: usize) -> PointCoords {
-        let (n, h, c, t, k) = self.locate(i);
+        let (n, h, c, t, co, k) = self.locate(i);
         PointCoords {
             net: self.nets[n].name.clone(),
             cfg: self.cfgs[n][k].name.clone(),
             hw: hw_name(self.hws[h]).to_string(),
             tech: tech_name(self.techs[t].cell).to_string(),
             chip: self.chips[c].name.clone(),
+            costs: self.costs[co].name.clone(),
         }
     }
 
     /// The concrete chip of the `i`-th point.
     pub fn chip(&self, i: usize) -> &ChipConfig {
-        let (n, h, c, _, _) = self.locate(i);
+        let (n, h, c, _, _, _) = self.locate(i);
         &self.chip_cfgs[(n * self.hws.len() + h) * self.chips.len() + c]
     }
 
@@ -887,6 +969,9 @@ pub struct PointRecord {
     pub tech: String,
     /// Chip-geometry name (see [`ChipGeom`]).
     pub chip: String,
+    /// Cost-table name (see [`SweepSpec::costs`]). Serialized only when
+    /// non-`default`, so legacy records keep their exact bytes.
+    pub costs: String,
     /// Average configured bitwidth.
     pub avg_bits: f64,
     /// Energy per inference, joules.
@@ -922,6 +1007,7 @@ impl PointRecord {
             hw: coords.hw.clone(),
             tech: coords.tech.clone(),
             chip: coords.chip.clone(),
+            costs: coords.costs.clone(),
             avg_bits: r.avg_bits,
             energy_j: r.energy_j(),
             latency_s: r.latency_s(),
@@ -948,6 +1034,11 @@ impl PointRecord {
             ("tech", Json::str(self.tech.clone())),
             ("chip", Json::str(self.chip.clone())),
         ];
+        // The default cost table writes no key (legacy byte shape); any
+        // other table name is an ordinary echoed coordinate.
+        if self.costs != "default" {
+            pairs.push(("costs", Json::str(self.costs.clone())));
+        }
         for (key, value) in self.scalar_metrics() {
             if metrics.contains(key) {
                 pairs.push((key, Json::num(value)));
@@ -1030,6 +1121,23 @@ impl PointRecord {
             hw: s("hw")?,
             tech: s("tech")?,
             chip: s("chip")?,
+            // Canonical records never spell the default out; an explicit
+            // "default" is a non-canonical byte shape and is rejected so
+            // merged documents stay byte-identical to run_full's.
+            costs: match v.get("costs") {
+                None => "default".to_string(),
+                Some(x) => match x.as_str() {
+                    Some("default") => {
+                        return Err(
+                            "point: carries an explicit 'costs':'default' — canonical records \
+                             omit the default cost table"
+                                .to_string(),
+                        )
+                    }
+                    Some(name) => name.to_string(),
+                    None => return Err("point: 'costs' must be a string".to_string()),
+                },
+            },
             avg_bits: f("avg_bits")?,
             energy_j: f("energy_j")?,
             latency_s: f("latency_s")?,
@@ -1055,24 +1163,26 @@ impl PointRecord {
             ));
         }
         let c = resolved.coords(self.index);
-        let echoed = [&self.net, &self.cfg, &self.hw, &self.tech, &self.chip];
-        let expected = [&c.net, &c.cfg, &c.hw, &c.tech, &c.chip];
+        let echoed = [&self.net, &self.cfg, &self.hw, &self.tech, &self.chip, &self.costs];
+        let expected = [&c.net, &c.cfg, &c.hw, &c.tech, &c.chip, &c.costs];
         if echoed != expected {
             return Err(format!(
-                "{ctx}: point {} echoes coordinates net={}/cfg={}/hw={}/tech={}/chip={} but the \
-                 spec enumerates net={}/cfg={}/hw={}/tech={}/chip={} — records drifted from the \
-                 spec",
+                "{ctx}: point {} echoes coordinates net={}/cfg={}/hw={}/tech={}/chip={}/costs={} \
+                 but the spec enumerates net={}/cfg={}/hw={}/tech={}/chip={}/costs={} — records \
+                 drifted from the spec",
                 self.index,
                 self.net,
                 self.cfg,
                 self.hw,
                 self.tech,
                 self.chip,
+                self.costs,
                 c.net,
                 c.cfg,
                 c.hw,
                 c.tech,
-                c.chip
+                c.chip,
+                c.costs
             ));
         }
         Ok(())
@@ -1639,6 +1749,7 @@ mod tests {
             grid: PrecisionGrid::Fixed { bits: vec![4, 8] },
             batch: 1,
             metrics: MetricSet::Full,
+            costs: vec![costs::default_table().clone()],
         }
     }
 
@@ -2076,5 +2187,137 @@ mod tests {
         }
         assert!(net_by_name("serve_cnn").is_ok());
         assert!(net_by_name("nope").is_err());
+    }
+
+    /// small_spec with a two-table costs axis: default + the §V-A
+    /// scaled-voltage preset.
+    fn costs_spec() -> SweepSpec {
+        let mut spec = small_spec();
+        spec.costs =
+            vec![costs::default_table().clone(), costs::scaled_0v5_table().clone()];
+        spec
+    }
+
+    #[test]
+    fn default_costs_axis_is_byte_invisible() {
+        // A spec (and its whole document) on the default table must not
+        // mention costs at all — pre-costs consumers keep their bytes.
+        let text = small_spec().to_json().to_string();
+        assert!(!text.contains("costs"), "{text}");
+        let doc = run_full(&small_spec(), &SweepEngine::serial()).unwrap().to_string();
+        assert!(!doc.contains("\"costs\""), "default sweeps must keep legacy bytes");
+    }
+
+    #[test]
+    fn costs_axis_enumerates_between_tech_and_cfg() {
+        let resolved = costs_spec().resolve().unwrap();
+        // 1 net x 1 hw x 1 chip x 2 tech x 2 costs x 3 cfgs = 12 points.
+        assert_eq!(resolved.num_points(), 12);
+        let c0 = resolved.coords(0);
+        assert_eq!(
+            (c0.tech.as_str(), c0.costs.as_str(), c0.cfg.as_str()),
+            ("sram", "default", "INT2")
+        );
+        let c3 = resolved.coords(3);
+        assert_eq!(
+            (c3.tech.as_str(), c3.costs.as_str(), c3.cfg.as_str()),
+            ("sram", "scaled-0v5", "INT2")
+        );
+        let c6 = resolved.coords(6);
+        assert_eq!((c6.tech.as_str(), c6.costs.as_str()), ("reram", "default"));
+        // The table actually reaches the simulated point: the scaled
+        // table's SRAM writes are cheaper, and its error model is §V-A's.
+        assert!(
+            resolved.point(3).params.tech.e_write_cell
+                < resolved.point(0).params.tech.e_write_cell
+        );
+        assert_eq!(resolved.tech_at(1, 0).p_cell_error, crate::ap::tech::P_ERR_SCALED);
+        assert_eq!(resolved.tech_at(0, 0), Tech::sram());
+    }
+
+    #[test]
+    fn costs_sweep_round_trips_and_merges_byte_identical() {
+        let spec = costs_spec();
+        let full = run_full(&spec, &SweepEngine::serial()).unwrap();
+        let text = full.to_string();
+        let (back, resolved, records) = decode_full_doc(&full).unwrap();
+        assert_eq!(back, spec);
+        assert_eq!(records.len(), resolved.num_points());
+        // Non-default records echo the table name; default ones omit it.
+        assert_eq!(records.iter().filter(|r| r.costs == "scaled-0v5").count(), 6);
+        assert_eq!(records.iter().filter(|r| r.costs == "default").count(), 6);
+        // The scaled point differs physically from its default twin.
+        assert!(records[3].energy_j < records[0].energy_j);
+        assert_eq!(records[3].cfg, records[0].cfg);
+        // Sharded execution + merge reproduces the in-process bytes.
+        for shards in [2usize, 3, 5] {
+            let docs: Vec<Json> = (0..shards)
+                .map(|k| run_shard(&spec, shards, k, &SweepEngine::serial()).unwrap().to_json())
+                .collect();
+            assert_eq!(merge(&docs).unwrap().to_string(), text, "shards={shards}");
+        }
+    }
+
+    #[test]
+    fn costs_record_echo_is_guarded() {
+        let spec = costs_spec();
+        let mut docs: Vec<Json> = (0..2)
+            .map(|k| run_shard(&spec, 2, k, &SweepEngine::serial()).unwrap().to_json())
+            .collect();
+        // Strip the costs echo from a scaled-table record (index 3 lives
+        // in shard 0 of 2): it now claims the default table — drift.
+        if let Json::Obj(m) = &mut docs[0] {
+            if let Some(Json::Arr(points)) = m.get_mut("points") {
+                if let Json::Obj(p) = &mut points[3] {
+                    assert!(p.remove("costs").is_some(), "point 3 should echo a table");
+                }
+            }
+        }
+        let err = merge(&docs).unwrap_err();
+        assert!(err.contains("drifted"), "{err}");
+    }
+
+    #[test]
+    fn explicit_default_costs_key_is_rejected() {
+        let spec = small_spec();
+        let mut doc = run_full(&spec, &SweepEngine::serial()).unwrap();
+        if let Json::Obj(m) = &mut doc {
+            if let Some(Json::Arr(points)) = m.get_mut("points") {
+                if let Json::Obj(p) = &mut points[0] {
+                    p.insert("costs".to_string(), Json::str("default"));
+                }
+            }
+        }
+        let err = decode_full_doc(&doc).unwrap_err();
+        assert!(err.contains("explicit"), "{err}");
+    }
+
+    #[test]
+    fn resolve_rejects_bad_costs_axes() {
+        let mut bad = small_spec();
+        bad.costs.clear();
+        assert!(bad.resolve().unwrap_err().contains("costs"));
+
+        let mut bad = small_spec();
+        bad.costs =
+            vec![costs::default_table().clone(), costs::default_table().clone()];
+        assert!(bad.resolve().unwrap_err().contains("duplicate cost table"));
+
+        // A table that lacks a swept cell fails at resolve, not mid-sweep.
+        let mut bad = small_spec(); // sweeps sram + reram
+        bad.costs = vec![CostTable {
+            name: "sram-only".to_string(),
+            rows: vec![*costs::default_table().row(CellTech::Sram).unwrap()],
+        }];
+        let err = bad.resolve().unwrap_err();
+        assert!(err.contains("no row for cell 'reram'"), "{err}");
+
+        // An invalid table (bad values) is caught by the same gate.
+        let mut bad = small_spec();
+        let mut table = costs::default_table().clone();
+        table.name = "broken".to_string();
+        table.rows[0].write.cycles = 0.0;
+        bad.costs = vec![table];
+        assert!(bad.resolve().is_err());
     }
 }

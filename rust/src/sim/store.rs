@@ -94,6 +94,26 @@ impl ResultStore {
             ),
             ("cfg", Json::str(coords.cfg)),
             ("chip", geom.to_json()),
+            // The cost table is physical identity: same name + content
+            // hash → same numbers; a renamed-but-identical table still
+            // re-keys (names are sweep coordinates, not aliases).
+            (
+                "costs",
+                Json::obj([
+                    ("name", Json::str(coords.costs.clone())),
+                    (
+                        "version",
+                        Json::str(
+                            resolved
+                                .costs
+                                .iter()
+                                .find(|t| t.name == coords.costs)
+                                .expect("resolved spec names a cost table for every point")
+                                .cost_version(),
+                        ),
+                    ),
+                ]),
+            ),
             ("fingerprint", Json::str(self.fingerprint.clone())),
             ("hw", Json::str(coords.hw)),
             ("metrics", Json::arr(spec.metrics.names().into_iter().map(Json::str))),
@@ -264,6 +284,40 @@ mod tests {
             second.doc.to_string(),
             run_full(&overlapping, &engine).unwrap().to_string()
         );
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn cost_tables_are_physical_identity_in_the_key() {
+        // A sweep under a different cost table must not replay records
+        // computed under the default one: the key carries the table's
+        // name + content hash.
+        let dir = temp_dir("costs");
+        let store = ResultStore::open(&dir).unwrap();
+        let engine = SweepEngine::serial();
+        let s = spec(vec![4]);
+        let first = run_full_stored(&s, &engine, &store).unwrap();
+        assert_eq!((first.computed, first.replayed), (2, 0));
+
+        let mut scaled = spec(vec![4]);
+        scaled.costs = vec![crate::costs::scaled_0v5_table().clone()];
+        let second = run_full_stored(&scaled, &engine, &store).unwrap();
+        assert_eq!(
+            (second.computed, second.replayed),
+            (2, 0),
+            "a different cost table silently replayed default-table records"
+        );
+        // Same table re-keyed under a different *name* also recomputes:
+        // names are sweep coordinates, not aliases.
+        let mut renamed = spec(vec![4]);
+        let mut table = crate::costs::default_table().clone();
+        table.name = "default-again".to_string();
+        renamed.costs = vec![table];
+        let third = run_full_stored(&renamed, &engine, &store).unwrap();
+        assert_eq!((third.computed, third.replayed), (2, 0));
+        // And each variant replays itself on the second pass.
+        let again = run_full_stored(&scaled, &engine, &store).unwrap();
+        assert_eq!((again.computed, again.replayed), (0, 2));
         let _ = fs::remove_dir_all(&dir);
     }
 

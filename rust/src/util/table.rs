@@ -70,6 +70,37 @@ impl Table {
         }
         out
     }
+
+    /// Render as RFC-4180-style CSV: header line then one line per row,
+    /// `\n` separated, cells quoted only when they need it. The plottable
+    /// twin of [`Table::render`] — `bf-imna render --csv` emits these so
+    /// CI can upload machine-readable artifacts next to the ASCII ones.
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        for (i, row) in std::iter::once(&self.header).chain(&self.rows).enumerate() {
+            if i > 0 {
+                out.push('\n');
+            }
+            for (j, cell) in row.iter().enumerate() {
+                if j > 0 {
+                    out.push(',');
+                }
+                out.push_str(&csv_escape(cell));
+            }
+        }
+        out.push('\n');
+        out
+    }
+}
+
+/// Quote a CSV cell when it contains a comma, quote, or newline; double
+/// embedded quotes per RFC 4180.
+pub fn csv_escape(cell: &str) -> String {
+    if cell.contains([',', '"', '\n', '\r']) {
+        format!("\"{}\"", cell.replace('"', "\"\""))
+    } else {
+        cell.to_string()
+    }
 }
 
 /// Format a float in engineering style with the given significant figures,
@@ -140,5 +171,15 @@ mod tests {
     #[test]
     fn fmt_ratio_suffix() {
         assert_eq!(fmt_ratio(2.0), "2.00x");
+    }
+
+    #[test]
+    fn csv_quotes_only_when_needed() {
+        let mut t = Table::new(vec!["name", "note"]);
+        t.row(vec!["plain", "a,b"]);
+        t.row(vec!["quo\"te", "fine"]);
+        assert_eq!(t.to_csv(), "name,note\nplain,\"a,b\"\n\"quo\"\"te\",fine\n");
+        assert_eq!(csv_escape("simple"), "simple");
+        assert_eq!(csv_escape("line\nbreak"), "\"line\nbreak\"");
     }
 }

@@ -31,7 +31,7 @@ fn help_covers_every_command_and_sweep_service_flag() {
     let text = stdout(&out);
     for cmd in [
         "simulate", "sweep", "merge", "serve-worker", "fleet", "dispatch", "artifacts", "render",
-        "hawq", "compare", "validate", "serve", "infer", "loadgen",
+        "hawq", "compare", "validate", "serve", "infer", "loadgen", "costs", "calibrate",
     ] {
         assert!(text.contains(cmd), "help does not mention command '{cmd}'");
     }
@@ -45,7 +45,8 @@ fn help_covers_every_command_and_sweep_service_flag() {
         "--batch-hint", "--time-scale", "--stats", "--max-requests", "--idle-timeout-s",
         "--conn-requests", "--pool", "--count", "--batch", "--rps", "--duration-s", "--profile",
         "--fleet", "--store", "--advertise", "--heartbeat-s", "--expiry-s", "--max-slice",
-        "--grace-s", "--serve-threads", "--worker-threads",
+        "--grace-s", "--serve-threads", "--worker-threads", "--costs", "--csv", "--list",
+        "--show", "--fleet-priors",
     ] {
         assert!(text.contains(flag), "help does not mention flag '{flag}'");
     }
@@ -402,6 +403,218 @@ fn serve_loadgen_slo_report_round_trip_through_the_real_binary() {
     );
 
     let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn costs_presets_list_show_and_file_round_trip() {
+    let dir = scratch("costs");
+    let path = |name: &str| dir.join(name).to_string_lossy().to_string();
+
+    // The preset catalog names every preset with its version.
+    let out = run(&["costs", "--list"]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let listing = stdout(&out);
+    for needle in ["default", "scaled-0v5", "envm-optimistic", "jia-65nm", "cost_version"] {
+        assert!(listing.contains(needle), "costs listing misses '{needle}':\n{listing}");
+    }
+    // Bare `costs` is the listing too.
+    assert_eq!(stdout(&run(&["costs"])), listing);
+
+    // --show prints the canonical serialization; --out writes the same.
+    let out = run(&["costs", "--show", "jia-65nm"]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let shown = stdout(&out);
+    assert!(shown.starts_with('{'), "{shown}");
+    assert!(shown.contains(r#""name":"jia-65nm""#), "{shown}");
+    let table_file = path("jia.json");
+    let out = run(&["costs", "--show", "jia-65nm", "--out", &table_file]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert_eq!(std::fs::read_to_string(&table_file).unwrap(), shown);
+
+    // A sweep under the exported file equals a sweep under the preset
+    // name, and both echo the table name on spec and points.
+    let by_name = path("by_name.json");
+    let out = run(&[
+        "sweep", "--net", "serve_cnn", "--combos", "1", "--costs", "jia-65nm", "--out", &by_name,
+    ]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let by_file = path("by_file.json");
+    let out = run(&[
+        "sweep", "--net", "serve_cnn", "--combos", "1", "--costs", &table_file, "--out", &by_file,
+    ]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let name_bytes = std::fs::read(&by_name).unwrap();
+    assert_eq!(std::fs::read(&by_file).unwrap(), name_bytes);
+    let text = String::from_utf8(name_bytes).unwrap();
+    // The spec embeds the full table (self-contained documents); the
+    // points echo its name as their coordinate.
+    assert!(text.contains(r#""costs":[{"cost_version""#), "spec misses the axis:\n{text}");
+    assert!(text.contains(r#""name":"jia-65nm""#), "spec misses the table:\n{text}");
+    assert!(text.contains(r#""costs":"jia-65nm""#), "points miss the coordinate:\n{text}");
+
+    // Unknown presets fail loudly everywhere they can be named.
+    assert!(!run(&["costs", "--show", "nope"]).status.success());
+    assert!(!run(&["sweep", "--net", "serve_cnn", "--costs", "nope"]).status.success());
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn sweep_costs_axis_shards_and_merges_byte_for_byte() {
+    let dir = scratch("costs_shard");
+    let path = |name: &str| dir.join(name).to_string_lossy().to_string();
+
+    // Single-process reference under a non-default cost table.
+    let full = path("full.json");
+    let out = run(&[
+        "sweep", "--net", "serve_cnn", "--combos", "1", "--costs", "scaled-0v5", "--out", &full,
+    ]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+
+    // Two shard processes + merge must reproduce it byte for byte.
+    let mut shard_files = Vec::new();
+    for k in 0..2 {
+        let f = path(&format!("s{k}.json"));
+        let out = run(&[
+            "sweep", "--net", "serve_cnn", "--combos", "1", "--costs", "scaled-0v5", "--shards",
+            "2", "--shard-id", &k.to_string(), "--out", &f,
+        ]);
+        assert!(out.status.success(), "shard {k}: {}", String::from_utf8_lossy(&out.stderr));
+        shard_files.push(f);
+    }
+    let merged = path("merged.json");
+    let out = run(&["merge", &shard_files[0], &shard_files[1], "--out", &merged]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let full_bytes = std::fs::read(&full).unwrap();
+    assert_eq!(std::fs::read(&merged).unwrap(), full_bytes);
+    assert!(String::from_utf8(full_bytes).unwrap().contains(r#""costs":"scaled-0v5""#));
+
+    // The default table stays invisible: a plain sweep document never
+    // mentions costs at all (the seed byte-identity contract).
+    let plain = path("plain.json");
+    let out = run(&["sweep", "--net", "serve_cnn", "--combos", "1", "--out", &plain]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = std::fs::read_to_string(&plain).unwrap();
+    assert!(!text.contains("costs"), "default sweep document mentions costs:\n{text}");
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn render_csv_writes_the_flat_table_alongside_the_text() {
+    let dir = scratch("render_csv");
+    let path = |name: &str| dir.join(name).to_string_lossy().to_string();
+
+    let txt = path("fig6.txt");
+    let csv = path("fig6.csv");
+    let out = run(&["render", "--artifact", "fig6", "--tiny", "--out", &txt, "--csv", &csv]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert!(!std::fs::read(&txt).unwrap().is_empty());
+    let table = std::fs::read_to_string(&csv).unwrap();
+    let mut lines = table.lines();
+    assert!(
+        lines.next().unwrap().starts_with("index,net,cfg,hw,tech,chip,costs,"),
+        "csv header:\n{table}"
+    );
+    assert!(lines.next().is_some(), "csv has no data rows:\n{table}");
+
+    // --csv without a path must fail, not silently write a file
+    // literally named "true".
+    assert!(!run(&["render", "--artifact", "fig6", "--tiny", "--csv"]).status.success());
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn calibrate_fits_a_versioned_table_that_feeds_back_into_sweeps() {
+    let dir = scratch("calibrate");
+    let path = |name: &str| dir.join(name).to_string_lossy().to_string();
+
+    let fitted = path("fitted.json");
+    let out = run(&["calibrate", "--out", &fitted]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let report = stdout(&out);
+    assert!(report.contains("fitted cycles per op"), "{report}");
+    assert!(report.contains("RMS relative residual"), "{report}");
+
+    // The emitted table is a loadable cost table: a sweep runs under it
+    // and echoes its name as the costs coordinate.
+    let text = std::fs::read_to_string(&fitted).unwrap();
+    assert!(text.contains(r#""name":"fitted-serve-cnn""#), "{text}");
+    let doc = path("doc.json");
+    let out = run(&[
+        "sweep", "--net", "serve_cnn", "--combos", "1", "--costs", &fitted, "--out", &doc,
+    ]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert!(std::fs::read_to_string(&doc).unwrap().contains(r#""costs":"fitted-serve-cnn""#));
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn serve_fleet_priors_harvest_measured_stats_through_the_real_binaries() {
+    use std::io::BufRead;
+
+    // A serving front end can announce its address before any banner
+    // line we care about; collect every stderr line read on the way to
+    // the http:// banner so earlier diagnostics stay assertable.
+    fn spawn_serve(args: &[&str]) -> (std::process::Child, String, Vec<String>) {
+        let mut child = Command::new(bin())
+            .args(args)
+            .stderr(std::process::Stdio::piped())
+            .spawn()
+            .expect("spawn bf-imna");
+        let stderr = child.stderr.take().unwrap();
+        let mut reader = std::io::BufReader::new(stderr);
+        let mut seen = Vec::new();
+        let addr = loop {
+            let mut line = String::new();
+            let n = reader.read_line(&mut line).expect("read banner");
+            assert!(n > 0, "process exited before announcing an address: {seen:?}");
+            if let Some(rest) = line.split("listening on http://").nth(1) {
+                break rest.split_whitespace().next().expect("address in banner").to_string();
+            }
+            seen.push(line);
+        };
+        (child, addr, seen)
+    }
+
+    let (mut fleet, fleet_addr, _) = spawn_serve(&["fleet", "--addr", "127.0.0.1:0"]);
+
+    // An empty fleet is not an error — the coordinator announces the
+    // simulator-prior fallback and serves anyway. This first server also
+    // registers itself, so its measured stats enter the listing.
+    let (mut serve1, addr1, seen1) = spawn_serve(&[
+        "serve", "--addr", "127.0.0.1:0", "--fleet-priors", &fleet_addr, "--fleet", &fleet_addr,
+        "--heartbeat-s", "0.1",
+    ]);
+    assert!(
+        seen1.iter().any(|l| l.contains("falling back to simulator priors")),
+        "empty-fleet fallback not announced: {seen1:?}"
+    );
+
+    // Serve some traffic so the per-config execute stats are non-zero,
+    // then give the heartbeat a couple of beats to carry them.
+    let out = run(&["infer", "--addr", &addr1, "--requests", "4", "--budget", "low"]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    std::thread::sleep(std::time::Duration::from_millis(800));
+
+    // A fresh server now harvests measured priors from the fleet.
+    let (mut serve2, addr2, seen2) = spawn_serve(&[
+        "serve", "--addr", "127.0.0.1:0", "--fleet-priors", &fleet_addr,
+    ]);
+    assert!(
+        seen2.iter().any(|l| l.contains("latency priors from fleet")),
+        "measured priors not harvested: {seen2:?}"
+    );
+    // And it serves.
+    let out = run(&["infer", "--addr", &addr2, "--requests", "2", "--budget", "high"]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+
+    for child in [&mut serve1, &mut serve2, &mut fleet] {
+        let _ = child.kill();
+        let _ = child.wait();
+    }
 }
 
 #[test]

@@ -1,0 +1,183 @@
+//! Byte-identity oracle for the `costs` refactor.
+//!
+//! The seed tree inlined every technology constant inside
+//! `Tech::new` / `Tech::voltage_scaled`; this PR moved those numbers into
+//! the declarative [`bf_imna::costs`] tables. The proof obligation is that
+//! under the **default** table nothing observable changed — not "close",
+//! but bit-for-bit. Rather than checked-in golden files (which a toolchain
+//! change could silently regenerate), this suite carries the *seed code
+//! itself* as a local oracle: `legacy_tech` / `legacy_voltage_scaled`
+//! below are verbatim copies of the pre-refactor constructors, and every
+//! field of every technology handle the library now derives from a cost
+//! table is compared against them with `f64::to_bits`.
+//!
+//! The second half pins the serialization contract: default-table sweep
+//! specs and documents must not mention costs at all, so every byte a
+//! seed-era consumer ever saw — spec JSON, full-sweep documents, the
+//! artifact catalog's tiny docs — is still produced verbatim.
+
+use bf_imna::ap::tech::{
+    CellTech, Tech, C_IN, COMPARE_PERIPHERAL_FACTOR, E_WRITE_FEFET, E_WRITE_PCM,
+    E_WRITE_SRAM_SCALED, FEFET_AREA_SAVINGS, FJ, PCM_AREA_SAVINGS, PJ, P_ERR_SCALED,
+    RERAM_AREA_SAVINGS, SRAM_CELL_AREA_M2, V_DD_NOMINAL, V_DD_SCALED,
+};
+use bf_imna::costs;
+use bf_imna::sim::artifacts::catalog;
+use bf_imna::sim::shard::{run_full, PrecisionGrid, SweepSpec};
+use bf_imna::sim::SweepEngine;
+use bf_imna::util::json::Json;
+
+/// Verbatim copy of the seed tree's `Tech::new` (inlined constants), kept
+/// as the oracle the cost tables must reproduce exactly.
+fn legacy_tech(cell: CellTech) -> Tech {
+    let e_compare_word = COMPARE_PERIPHERAL_FACTOR * C_IN * V_DD_NOMINAL * V_DD_NOMINAL;
+    match cell {
+        CellTech::Sram => Tech {
+            cell,
+            v_dd: V_DD_NOMINAL,
+            e_write_cell: 0.24 * FJ,
+            e_compare_word,
+            e_read_word: e_compare_word,
+            compare_cycles: 1.0,
+            write_cycles: 2.0,
+            read_cycles: 1.0,
+            p_cell_error: 0.0,
+            cell_area_m2: SRAM_CELL_AREA_M2,
+        },
+        CellTech::Reram => Tech {
+            cell,
+            v_dd: V_DD_NOMINAL,
+            e_write_cell: 21.7 * PJ,
+            e_compare_word,
+            e_read_word: e_compare_word,
+            compare_cycles: 1.0,
+            write_cycles: 4.0,
+            read_cycles: 1.0,
+            p_cell_error: 0.0,
+            cell_area_m2: SRAM_CELL_AREA_M2 / RERAM_AREA_SAVINGS,
+        },
+        CellTech::Pcm => Tech {
+            cell,
+            v_dd: V_DD_NOMINAL,
+            e_write_cell: E_WRITE_PCM,
+            e_compare_word,
+            e_read_word: e_compare_word,
+            compare_cycles: 1.0,
+            write_cycles: 8.0,
+            read_cycles: 1.0,
+            p_cell_error: 0.0,
+            cell_area_m2: SRAM_CELL_AREA_M2 / PCM_AREA_SAVINGS,
+        },
+        CellTech::Fefet => Tech {
+            cell,
+            v_dd: V_DD_NOMINAL,
+            e_write_cell: E_WRITE_FEFET,
+            e_compare_word,
+            e_read_word: e_compare_word,
+            compare_cycles: 1.0,
+            write_cycles: 2.0,
+            read_cycles: 1.0,
+            p_cell_error: 0.0,
+            cell_area_m2: SRAM_CELL_AREA_M2 / FEFET_AREA_SAVINGS,
+        },
+    }
+}
+
+/// Verbatim copy of the seed tree's `Tech::voltage_scaled`.
+fn legacy_voltage_scaled(t: &Tech) -> Tech {
+    let vr = V_DD_SCALED / V_DD_NOMINAL;
+    let e_compare_word = t.e_compare_word * vr * vr;
+    Tech {
+        v_dd: V_DD_SCALED,
+        e_write_cell: match t.cell {
+            CellTech::Sram => E_WRITE_SRAM_SCALED,
+            CellTech::Reram | CellTech::Pcm | CellTech::Fefet => t.e_write_cell * vr * vr,
+        },
+        e_compare_word,
+        e_read_word: e_compare_word,
+        p_cell_error: P_ERR_SCALED,
+        ..*t
+    }
+}
+
+/// Every f64 field compared by bit pattern, not tolerance.
+fn assert_bits_eq(got: &Tech, want: &Tech, what: &str) {
+    assert_eq!(got.cell, want.cell, "{what}: cell");
+    for (g, w, field) in [
+        (got.v_dd, want.v_dd, "v_dd"),
+        (got.e_write_cell, want.e_write_cell, "e_write_cell"),
+        (got.e_compare_word, want.e_compare_word, "e_compare_word"),
+        (got.e_read_word, want.e_read_word, "e_read_word"),
+        (got.compare_cycles, want.compare_cycles, "compare_cycles"),
+        (got.write_cycles, want.write_cycles, "write_cycles"),
+        (got.read_cycles, want.read_cycles, "read_cycles"),
+        (got.p_cell_error, want.p_cell_error, "p_cell_error"),
+        (got.cell_area_m2, want.cell_area_m2, "cell_area_m2"),
+    ] {
+        assert_eq!(g.to_bits(), w.to_bits(), "{what}: {field} drifted ({g:e} vs {w:e})");
+    }
+}
+
+#[test]
+fn default_table_reproduces_seed_constructors_bit_for_bit() {
+    for cell in CellTech::EXTENDED {
+        let oracle = legacy_tech(cell);
+        assert_bits_eq(&Tech::new(cell), &oracle, "Tech::new");
+        assert_bits_eq(
+            &costs::default_table().tech_for(cell).unwrap(),
+            &oracle,
+            "default_table().tech_for",
+        );
+        // The library's own voltage_scaled is untouched code, but the
+        // scaled-0v5 *preset* re-derives the same physics from table rows.
+        let scaled_oracle = legacy_voltage_scaled(&oracle);
+        assert_bits_eq(&Tech::new(cell).voltage_scaled(), &scaled_oracle, "voltage_scaled");
+        assert_bits_eq(
+            &costs::scaled_0v5_table().tech_for(cell).unwrap(),
+            &scaled_oracle,
+            "scaled_0v5_table().tech_for",
+        );
+    }
+}
+
+#[test]
+fn default_spec_and_documents_keep_seed_bytes() {
+    // A default-table spec serializes with no trace of the costs axis, so
+    // its JSON is the exact seed-era text...
+    let spec = SweepSpec::single(
+        "serve_cnn",
+        vec!["lr".to_string()],
+        vec!["sram".to_string(), "reram".to_string()],
+        PrecisionGrid::Fixed { bits: vec![2, 5, 8] },
+    );
+    let text = spec.to_json().to_string();
+    assert!(!text.contains("costs"), "default spec leaked a costs key: {text}");
+    // ...and a seed-era document (one with no costs key anywhere) parses
+    // back to the identical spec and re-serializes to the identical bytes.
+    let back = SweepSpec::from_json(&Json::parse(&text).unwrap()).unwrap();
+    assert_eq!(back, spec);
+    assert_eq!(back.to_json().to_string(), text);
+
+    let doc = run_full(&spec, &SweepEngine::serial()).unwrap().to_string();
+    assert!(!doc.contains("\"costs\""), "default sweep document leaked a costs key");
+}
+
+#[test]
+fn catalog_tiny_documents_render_and_stay_cost_silent() {
+    // Every catalog artifact runs on the default table, so its tiny
+    // full-sweep document must carry no costs key — the bytes a seed-era
+    // reader would have produced — and must still render.
+    let engine = SweepEngine::new();
+    for artifact in catalog() {
+        let doc = run_full(&artifact.tiny_spec(), &engine)
+            .unwrap_or_else(|e| panic!("{}: tiny sweep failed: {e}", artifact.name));
+        assert!(
+            !doc.to_string().contains("\"costs\""),
+            "{}: tiny document leaked a costs key",
+            artifact.name
+        );
+        artifact
+            .render_doc(&doc)
+            .unwrap_or_else(|e| panic!("{}: render failed: {e}", artifact.name));
+    }
+}

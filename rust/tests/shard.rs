@@ -123,6 +123,12 @@ fn spec_json_round_trip_random() {
                 .collect();
             if picked.is_empty() { MetricSet::Full } else { MetricSet::subset(&picked)? }
         };
+        // Half the specs carry a non-default costs axis — cost tables
+        // must round-trip inside the spec like every other axis.
+        let mut costs = vec![bf_imna::costs::default_table().clone()];
+        if rng.bool() {
+            costs.push(bf_imna::costs::scaled_0v5_table().clone());
+        }
         let spec = SweepSpec {
             nets: {
                 let n = 1 + rng.below(2) as usize;
@@ -134,6 +140,7 @@ fn spec_json_round_trip_random() {
             grid,
             batch: 1 + rng.below(8),
             metrics,
+            costs,
         };
         let text = spec.to_json().to_string();
         let back = SweepSpec::from_json(&Json::parse(&text).map_err(|e| e.to_string())?)?;
